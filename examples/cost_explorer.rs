@@ -1,0 +1,53 @@
+//! Cost explorer: how LUT-multiplier costs scale with operand width.
+//!
+//! Regenerates Tables I and II, extends the optimized-D&C scaling beyond
+//! the paper (every even width 4..=16, built structurally), and prints the
+//! area/transistor crossover against the traditional approach — the
+//! scalability argument that motivates the whole paper.
+//!
+//! Run: `cargo run --release --example cost_explorer`
+
+use luna_cim::cells::{tsmc65_library, CellKind};
+use luna_cim::multiplier::{generic, traditional};
+use luna_cim::report;
+
+fn main() {
+    println!("{}", report::table1());
+    println!("{}", report::table2());
+
+    let lib = tsmc65_library();
+    println!("-- optimized D&C scaling, every even width (by construction) --");
+    println!(
+        "{:>5} {:>8} {:>8} {:>6} {:>6} {:>12} {:>12} {:>10}",
+        "width", "SRAM", "MUX", "HA", "FA", "transistors", "trad-xtors", "ratio"
+    );
+    for n in (4..=16u32).step_by(2) {
+        let netlist = generic::netlist(n);
+        let cost = netlist.cost_report();
+        let t = cost.transistors(&lib);
+        let trad = traditional::cost(n).transistors(&lib);
+        println!(
+            "{:>4}b {:>8} {:>8} {:>6} {:>6} {:>12} {:>12} {:>9.1}x",
+            n,
+            cost.count(CellKind::SramCell),
+            cost.count(CellKind::Mux2),
+            cost.count(CellKind::HalfAdder),
+            cost.count(CellKind::FullAdder),
+            t,
+            trad,
+            trad as f64 / t as f64,
+        );
+    }
+
+    println!("\n-- area benefit at 4 bits (paper abstract: ~3.7x less area) --");
+    let trad4 = traditional::cost(4).routed_area_um2(&lib);
+    for (name, cost) in [
+        ("D&C", luna_cim::multiplier::dnc::cost()),
+        ("Optimized D&C", luna_cim::multiplier::dnc_opt::cost()),
+        ("ApproxD&C", luna_cim::multiplier::approx::cost()),
+        ("ApproxD&C 2", luna_cim::multiplier::approx2::cost()),
+    ] {
+        let a = cost.routed_area_um2(&lib);
+        println!("  {:<16} {:>8.1} um2   ({:.2}x smaller than traditional)", name, a, trad4 / a);
+    }
+}

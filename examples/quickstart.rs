@@ -1,0 +1,52 @@
+//! Quickstart: the LUNA-CiM library in five minutes.
+//!
+//! Builds every multiplier configuration, multiplies through the
+//! behavioural models AND the gate-level netlists, prints the paper's
+//! headline cost table, and runs the §IV.B stimulus on a programmed
+//! LUNA unit with energy accounting.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use luna_cim::cells::tsmc65_library;
+use luna_cim::luna::LunaUnit;
+use luna_cim::multiplier::{MultiplierKind, MultiplierModel};
+
+fn main() {
+    let lib = tsmc65_library();
+
+    // 1. Behavioural models: a 4b x 4b multiply under every configuration.
+    let (w, y) = (6u8, 11u8);
+    println!("-- {w} x {y} under every configuration --");
+    for kind in MultiplierKind::ALL {
+        let m = MultiplierModel::new(kind);
+        println!("  {:<18} -> {:3}  (error {:+})", kind.name(), m.mul(w, y), kind.error(w, y));
+    }
+
+    // 2. Component costs (the paper's Figs 1-3, 9, 10 inventories).
+    println!("\n-- component inventory / area --");
+    for kind in MultiplierKind::PAPER_CONFIGS {
+        let cost = kind.netlist().unwrap().cost_report();
+        println!(
+            "  {:<18} {}  | {} transistors | {:.0} um2 routed",
+            kind.name(),
+            cost,
+            cost.transistors(&lib),
+            cost.routed_area_um2(&lib)
+        );
+    }
+
+    // 3. A programmed LUNA unit running the paper's transient stimulus
+    //    (W = 0110; Y = 1010, 1011, 0011, 1100) with measured energy.
+    println!("\n-- gate-level LUNA unit, paper SSIV.B stimulus --");
+    let mut unit = LunaUnit::new(MultiplierKind::DncOpt);
+    unit.program(&lib, 0b0110);
+    for y in [0b1010u8, 0b1011, 0b0011, 0b1100] {
+        let out = unit.multiply(&lib, y);
+        println!("  W=0110 x Y={y:04b} -> OUT={out:08b} ({out})");
+    }
+    println!(
+        "  avg multiply energy: {:.2} fJ (paper: 47.96 fJ)",
+        unit.avg_multiply_energy_fj()
+    );
+    println!("  unit area: {:.1} um2 (paper: 287 um2)", unit.area_um2(&lib));
+}

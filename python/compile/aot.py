@@ -1,0 +1,139 @@
+"""AOT build: train, quantize, export artifacts, lower HLO text.
+
+Run via ``make artifacts`` (equivalently ``cd python && python -m
+compile.aot --out-dir ../artifacts``). Python never runs again after this:
+the Rust coordinator loads the HLO text through PJRT and the metadata
+through the kv files.
+
+Interchange is **HLO text**, not serialized protos: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids that xla_extension 0.5.1 (the
+version the published ``xla`` crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data, model
+from .kernels.luna_matmul import VARIANTS, luna_multiply
+
+BATCH = 8
+TRAIN_PER_DIGIT = 60
+TEST_PER_DIGIT = 20
+TRAIN_SEED = 1234
+TEST_SEED = 5678
+
+
+def to_hlo_text(lowered) -> str:
+    """Lower a jitted function to HLO text (see module docstring).
+
+    ``as_hlo_text(True)`` = print_large_constants: the default printer
+    elides big literals as ``constant({...})`` and the text parser then
+    silently zero-fills them — the baked weight matrices MUST be printed
+    in full for the Rust side to reproduce the numerics.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    text = comp.as_hlo_text(True)
+    assert "constant({...})" not in text, "elided constant survived printing"
+    return text
+
+
+def lower_mlp_variant(qmodel, variant: str) -> str:
+    """HLO text of the batched quantized forward pass for one variant."""
+
+    def fwd(x):
+        return (model.quant_forward(qmodel, x, variant=variant),)
+
+    spec = jax.ShapeDtypeStruct((BATCH, model.DIMS[0]), jnp.float32)
+    return to_hlo_text(jax.jit(fwd).lower(spec))
+
+
+def lower_mult_variant(variant: str) -> str:
+    """HLO text of the standalone elementwise 4b multiplier (16x16 grid).
+
+    Takes float (PJRT-side convenience), rounds to codes, multiplies via
+    the Pallas kernel, returns float products — used by Rust integration
+    tests to cross-check the gate-level netlists bit-for-bit.
+    """
+
+    def mult(w, y):
+        wq = jnp.clip(jnp.round(w), 0, 15).astype(jnp.int32)
+        yq = jnp.clip(jnp.round(y), 0, 15).astype(jnp.int32)
+        return (luna_multiply(wq, yq, variant=variant).astype(jnp.float32),)
+
+    spec = jax.ShapeDtypeStruct((16, 16), jnp.float32)
+    return to_hlo_text(jax.jit(mult).lower(spec, spec))
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument("--steps", type=int, default=400)
+    parser.add_argument("--quick", action="store_true", help="tiny run for CI smoke")
+    args = parser.parse_args()
+    out = args.out_dir
+    os.makedirs(out, exist_ok=True)
+
+    steps = 30 if args.quick else args.steps
+    train_n = 10 if args.quick else TRAIN_PER_DIGIT
+    test_n = 4 if args.quick else TEST_PER_DIGIT
+
+    print(f"[aot] generating data (train {train_n}/digit, test {test_n}/digit)")
+    train_x, train_y = data.generate(train_n, TRAIN_SEED)
+    test_x, test_y = data.generate(test_n, TEST_SEED)
+
+    print(f"[aot] training float model for {steps} steps")
+    params, train_acc = model.train_float(train_x, train_y, seed=0, steps=steps)
+    qmodel = model.quantize_model(params)
+    test_acc = model.quant_accuracy(qmodel, test_x, test_y, "ideal")
+    print(f"[aot] float train acc {train_acc:.3f}; quantized(ideal) test acc {test_acc:.3f}")
+
+    # --- artifacts ---
+    with open(os.path.join(out, "weights.txt"), "w") as f:
+        f.write(model.weights_text(qmodel))
+    with open(os.path.join(out, "testset.bin"), "wb") as f:
+        f.write(data.export_testset(test_x, test_y))
+
+    for variant in VARIANTS:
+        hlo = lower_mlp_variant(qmodel, variant)
+        slug = variant.replace("_", "-")
+        # rust slugs: ideal, dnc, approx, approx2 + dnc-opt alias below
+        path = os.path.join(out, f"mlp_{slug}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(hlo)
+        print(f"[aot] wrote {path} ({len(hlo)} chars)")
+        mult_hlo = lower_mult_variant(variant)
+        mpath = os.path.join(out, f"mult_{slug}.hlo.txt")
+        with open(mpath, "w") as f:
+            f.write(mult_hlo)
+    # The rust MultiplierKind::DncOpt variant is numerically identical to
+    # dnc (the optimization is structural, not arithmetic): alias it.
+    for prefix in ("mlp", "mult"):
+        src = os.path.join(out, f"{prefix}_dnc.hlo.txt")
+        dst = os.path.join(out, f"{prefix}_dnc-opt.hlo.txt")
+        with open(src) as f:
+            content = f.read()
+        with open(dst, "w") as f:
+            f.write(content)
+
+    variants = [v for v in VARIANTS] + ["dnc-opt"]
+    with open(os.path.join(out, "manifest.txt"), "w") as f:
+        f.write(f"dims {','.join(str(d) for d in qmodel.dims)}\n")
+        f.write(f"batch {BATCH}\n")
+        f.write(f"variants {','.join(variants)}\n")
+        f.write(f"train_accuracy {test_acc}\n")
+        f.write(f"test_samples {len(test_y)}\n")
+    print(f"[aot] wrote manifest; done -> {out}")
+
+
+if __name__ == "__main__":
+    main()

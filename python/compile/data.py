@@ -1,0 +1,68 @@
+"""Synthetic 8x8 digits dataset — glyphs shared with
+``rust/src/nn/dataset.rs`` (keep GLYPHS in sync!).
+
+The Python generator is used for *training* (build time only). The test
+set the Rust runtime evaluates on is exported to ``artifacts/testset.bin``
+by ``aot.py``, so the evaluation bits are identical on both sides even
+though the two languages use different RNGs.
+"""
+
+import numpy as np
+
+# One string per digit, 64 chars, '#' = ink. MUST match rust's GLYPHS.
+GLYPHS = [
+    ".####...#..#...#..#...#..#...#..#...#..#...#..#...####..........",
+    "..##....###.....##......##......##......##......####............",
+    ".####...#..#......#.....##.....#......##......####.............",
+    ".####......#....###.......#.......#...#..#....###..............",
+    ".#..#...#..#...#..#...####......#.......#.......#...............",
+    ".####...#......###........#.......#...#..#....###..............",
+    "..###...#......####....#..#...#..#...#..#....###...............",
+    ".####......#.....#......#......#.......#.......#...............",
+    ".####...#..#....##.....#..#...#..#...#..#....####..............",
+    ".####...#..#...#..#....####.......#......#....##................",
+]
+
+
+def glyph_pixels(g: str) -> np.ndarray:
+    px = np.array([1.0 if c == "#" else 0.0 for c in g], dtype=np.float32)
+    return np.resize(px, 64)
+
+
+def generate(per_digit: int, seed: int):
+    """Generate (pixels [N, 64] float32 in [0,1], labels [N] int) samples.
+
+    Same perturbation model as the Rust generator: +-1 pixel shift, 5%
+    ink dropout, uniform +-0.12 noise. (The RNG streams differ — only the
+    *distribution* must match; the shared test set is exported binary.)
+    """
+    rng = np.random.default_rng(seed)
+    glyphs = [glyph_pixels(g).reshape(8, 8) for g in GLYPHS]
+    xs, ys = [], []
+    for _ in range(per_digit):
+        for label, glyph in enumerate(glyphs):
+            dx, dy = rng.integers(-1, 2), rng.integers(-1, 2)
+            img = np.zeros((8, 8), dtype=np.float32)
+            for y in range(8):
+                for x in range(8):
+                    sx, sy = x - dx, y - dy
+                    if 0 <= sx < 8 and 0 <= sy < 8:
+                        img[y, x] = glyph[sy, sx]
+            drop = (img > 0.5) & (rng.random((8, 8)) < 0.05)
+            img[drop] = 0.0
+            img = np.clip(img + rng.uniform(-0.12, 0.12, (8, 8)), 0.0, 1.0)
+            xs.append(img.reshape(64).astype(np.float32))
+            ys.append(label)
+    return np.stack(xs), np.array(ys, dtype=np.int64)
+
+
+def export_testset(pixels: np.ndarray, labels: np.ndarray) -> bytes:
+    """Binary format shared with rust `DigitsDataset::from_binary`:
+    u32 N, then per sample 64 f32 LE + u32 label."""
+    n = len(labels)
+    out = bytearray()
+    out += np.uint32(n).tobytes()
+    for i in range(n):
+        out += pixels[i].astype("<f4").tobytes()
+        out += np.uint32(labels[i]).tobytes()
+    return bytes(out)

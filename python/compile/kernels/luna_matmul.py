@@ -1,0 +1,113 @@
+"""L1 — Pallas kernels for LUNA-CiM LUT-based quantized matmul.
+
+The paper's compute hot-spot is the 4b x 4b multiply performed by LUT
+lookup inside the SRAM array. On TPU-ish hardware the analogous structure
+is a VMEM-resident *multiples table* + vectorized select (DESIGN.md
+SSHardware-Adaptation): for a weight code ``w`` the four LUT rows are
+``{0, w, w<<1, (w<<1)+w}`` — derived exactly like the paper's optimized
+shared-row LUT (Fig 3: the x2 row is a wired shift, the x3 row a shift-
+add) — and the input's 2-bit chunks select among them. No general-purpose
+multiplier is used anywhere in the quantized path.
+
+Variants (matching ``rust/src/multiplier``):
+
+* ``ideal``   — exact product (both 2-bit chunks looked up and combined);
+* ``dnc``     — the D&C decomposition, bit-identical to ``ideal``;
+* ``approx``  — ApproxD&C:  Z_LSB := 0        (Fig 9);
+* ``approx2`` — ApproxD&C2: Z_LSB := W        (Fig 10).
+
+All kernels run with ``interpret=True`` — the CPU PJRT plugin cannot
+execute Mosaic custom-calls; numerics are validated against ``ref.py``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+VARIANTS = ("ideal", "dnc", "approx", "approx2")
+
+
+def lut4_select(w, sel):
+    """Select among the derived LUT rows {0, w, 2w, 3w} by a 2-bit code.
+
+    This is the software image of the paper's 4:1 mux over shared rows:
+    ``2w`` is a wired shift of the stored ``w`` row and ``3w`` a single
+    shift-add; only selects, shifts and adds appear (no multiply).
+    """
+    w2 = w << 1
+    w3 = w2 + w
+    return jnp.where(sel == 0, 0, jnp.where(sel == 1, w, jnp.where(sel == 2, w2, w3)))
+
+
+def variant_product(w, y, variant):
+    """Per-scalar 4b x 4b product under a LUNA variant (integer arrays)."""
+    y_hi = (y >> 2) & 3
+    y_lo = y & 3
+    z_msb = lut4_select(w, y_hi)
+    if variant in ("ideal", "dnc"):
+        return (z_msb << 2) + lut4_select(w, y_lo)
+    if variant == "approx":
+        return z_msb << 2
+    if variant == "approx2":
+        return (z_msb << 2) + w
+    raise ValueError(f"unknown variant {variant!r}")
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, *, variant):
+    """Pallas kernel: one (B_tile, O_tile) output block, K resident.
+
+    ``x_ref``: [B, K] int32 activation codes (0..15)
+    ``w_ref``: [O, K] int32 weight codes (0..15, zero-point 8)
+    ``o_ref``: [B, O] int32 accumulators  sum_k f(w[o,k], x[b,k]) - 8*sum_k x[b,k]
+    """
+    x = x_ref[...]
+    w = w_ref[...]
+    # [B, 1, K] x [1, O, K] -> [B, O, K] products via LUT select.
+    prod = variant_product(w[None, :, :], x[:, None, :], variant)
+    acc = jnp.sum(prod, axis=-1, dtype=jnp.int32)
+    # Weight zero-point correction (exact integer arithmetic outside the
+    # LUT, mirroring rust's QuantLinear::accumulate).
+    x_sum = jnp.sum(x, axis=-1, dtype=jnp.int32)
+    o_ref[...] = acc - 8 * x_sum[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("variant",))
+def luna_matmul(xq, wq, variant="ideal"):
+    """Quantized matmul through the LUNA LUT kernel.
+
+    Args:
+      xq: [B, K] int32 activation codes in 0..15 (zero-point 0).
+      wq: [O, K] int32 weight codes in 0..15 (zero-point 8).
+      variant: one of ``VARIANTS``.
+
+    Returns:
+      [B, O] int32 accumulators (already zero-point corrected).
+    """
+    b, k = xq.shape
+    o, k2 = wq.shape
+    assert k == k2, f"K mismatch: {k} vs {k2}"
+    kernel = functools.partial(_matmul_kernel, variant=variant)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((b, o), jnp.int32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(xq.astype(jnp.int32), wq.astype(jnp.int32))
+
+
+def _mult_kernel(w_ref, y_ref, o_ref, *, variant):
+    """Standalone elementwise 4b multiplier (bit-accuracy cross-check)."""
+    o_ref[...] = variant_product(w_ref[...], y_ref[...], variant)
+
+
+@functools.partial(jax.jit, static_argnames=("variant",))
+def luna_multiply(wq, yq, variant="ideal"):
+    """Elementwise LUNA product of two integer-code arrays (same shape)."""
+    assert wq.shape == yq.shape
+    kernel = functools.partial(_mult_kernel, variant=variant)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(wq.shape, jnp.int32),
+        interpret=True,
+    )(wq.astype(jnp.int32), yq.astype(jnp.int32))

@@ -1,0 +1,60 @@
+"""Pure-jnp (and pure-python) oracle for the LUNA kernels.
+
+This is the CORE correctness signal: every Pallas kernel is asserted
+allclose/equal against these reference implementations (pytest +
+hypothesis sweeps in ``python/tests/test_kernels.py``).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def ref_product(w, y, variant="ideal"):
+    """Reference per-scalar product using plain integer arithmetic."""
+    w = jnp.asarray(w, jnp.int32)
+    y = jnp.asarray(y, jnp.int32)
+    y_hi = (y >> 2) & 3
+    y_lo = y & 3
+    z_msb = w * y_hi
+    if variant in ("ideal", "dnc"):
+        return w * y  # the D&C identity: (z_msb << 2) + w*y_lo == w*y
+    if variant == "approx":
+        return z_msb << 2
+    if variant == "approx2":
+        return (z_msb << 2) + w
+    raise ValueError(f"unknown variant {variant!r}")
+
+
+def ref_matmul(xq, wq, variant="ideal"):
+    """Reference quantized matmul with weight zero-point 8.
+
+    [B, K] x [O, K] -> [B, O]:  sum_k f(w, x) - 8 * sum_k x
+    """
+    xq = jnp.asarray(xq, jnp.int32)
+    wq = jnp.asarray(wq, jnp.int32)
+    prod = ref_product(wq[None, :, :], xq[:, None, :], variant)
+    acc = jnp.sum(prod, axis=-1, dtype=jnp.int32)
+    x_sum = jnp.sum(xq, axis=-1, dtype=jnp.int32)
+    return acc - 8 * x_sum[:, None]
+
+
+def ref_product_py(w: int, y: int, variant: str = "ideal") -> int:
+    """Scalar python-int version (ground truth for both jnp and rust)."""
+    assert 0 <= w < 16 and 0 <= y < 16
+    y_hi, y_lo = (y >> 2) & 3, y & 3
+    z_msb = w * y_hi
+    if variant in ("ideal", "dnc"):
+        return w * y
+    if variant == "approx":
+        return z_msb << 2
+    if variant == "approx2":
+        return (z_msb << 2) + w
+    raise ValueError(variant)
+
+
+def exhaustive_product_table(variant: str = "ideal") -> np.ndarray:
+    """16x16 table of variant products — mirrors rust's error-map inputs."""
+    return np.array(
+        [[ref_product_py(w, y, variant) for y in range(16)] for w in range(16)],
+        dtype=np.int32,
+    )

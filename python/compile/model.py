@@ -1,0 +1,171 @@
+"""L2 — the quantized MLP in JAX, calling the L1 Pallas kernels.
+
+The model is the paper's motivating workload: a small 4-bit classifier
+(64 -> 32 -> 10 over 8x8 digit images) whose every MAC goes through the
+LUNA LUT multiplier. Training happens here in float32 (build time only);
+the quantized forward pass is what gets AOT-lowered to HLO text and
+served by the Rust coordinator.
+
+Bit-compatibility contract with ``rust/src/nn``: identical quantizers
+(zero-points 0/8), identical accumulator arithmetic
+(``sum lut(w,x) - 8 * sum x``), identical dequant + bias + ReLU order.
+"""
+
+from dataclasses import dataclass
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.luna_matmul import VARIANTS, luna_matmul
+from .quant import Quantizer
+
+DIMS = (64, 32, 10)
+# Activation calibration: inputs are pixels in [0,1]; hidden activations
+# are clipped to [0, ACT_MAX_HIDDEN] by the quantizer range (mirrored in
+# rust by the layer's x_quant scale).
+ACT_MAX_HIDDEN = 4.0
+
+
+# ---------------------------------------------------------------------------
+# float training (build-time only)
+# ---------------------------------------------------------------------------
+
+
+def init_params(seed: int):
+    """Float parameters [(w [O,I], b [O])] for the DIMS architecture."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for i, o in zip(DIMS[:-1], DIMS[1:]):
+        key, wk = jax.random.split(key)
+        w = jax.random.normal(wk, (o, i), jnp.float32) * jnp.sqrt(2.0 / i)
+        params.append((w, jnp.zeros((o,), jnp.float32)))
+    return params
+
+
+def float_forward(params, x):
+    h = x
+    for li, (w, b) in enumerate(params):
+        h = h @ w.T + b
+        if li + 1 < len(params):
+            h = jax.nn.relu(h)
+    return h
+
+
+def _loss(params, x, y):
+    logits = float_forward(params, x)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+@jax.jit
+def _sgd_step(params, x, y, lr):
+    loss, grads = jax.value_and_grad(_loss)(params, x, y)
+    new = [(w - lr * gw, b - lr * gb) for (w, b), (gw, gb) in zip(params, grads)]
+    return new, loss
+
+
+def train_float(x, y, seed=0, steps=300, batch=64, lr=0.5):
+    """Short SGD run; returns (params, final train accuracy)."""
+    params = init_params(seed)
+    n = len(y)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(x)
+    y = jnp.asarray(y)
+    for step in range(steps):
+        idx = rng.integers(0, n, size=batch)
+        params, _ = _sgd_step(params, x[idx], y[idx], lr * (0.97 ** (step // 50)))
+    preds = jnp.argmax(float_forward(params, x), axis=1)
+    acc = float(jnp.mean((preds == y).astype(jnp.float32)))
+    return params, acc
+
+
+# ---------------------------------------------------------------------------
+# quantization + quantized forward (the artifact)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class QuantLayer:
+    wq: np.ndarray  # [O, I] int32 codes 0..15
+    bias: np.ndarray  # [O] float32
+    w_quant: Quantizer
+    x_quant: Quantizer
+    relu: bool
+
+
+@dataclass(frozen=True)
+class QuantModel:
+    layers: Tuple[QuantLayer, ...]
+
+    @property
+    def dims(self) -> List[int]:
+        return [self.layers[0].wq.shape[1]] + [l.wq.shape[0] for l in self.layers]
+
+
+def quantize_model(params) -> QuantModel:
+    """Quantize float params the same way rust's QuantLinear::from_float does."""
+    layers = []
+    n = len(params)
+    for li, (w, b) in enumerate(params):
+        w = np.asarray(w)
+        w_quant = Quantizer.for_weights(float(np.max(np.abs(w))))
+        x_max = 1.0 if li == 0 else ACT_MAX_HIDDEN
+        x_quant = Quantizer.for_activations(x_max)
+        layers.append(
+            QuantLayer(
+                wq=w_quant.quantize_np(w),
+                bias=np.asarray(b, np.float32),
+                w_quant=w_quant,
+                x_quant=x_quant,
+                relu=li + 1 < n,
+            )
+        )
+    return QuantModel(tuple(layers))
+
+
+def quant_forward(model: QuantModel, x, variant: str = "ideal"):
+    """Quantized forward pass; every MAC through the Pallas LUT kernel.
+
+    ``x``: [B, 64] float32 in [0, 1]. Returns [B, 10] float32 logits.
+    """
+    assert variant in VARIANTS, variant
+    h = x
+    for layer in model.layers:
+        xq = layer.x_quant.quantize_jnp(h)
+        wq = jnp.asarray(layer.wq, jnp.int32)
+        acc = luna_matmul(xq, wq, variant=variant)
+        h = acc.astype(jnp.float32) * (layer.w_quant.scale * layer.x_quant.scale)
+        h = h + jnp.asarray(layer.bias)
+        if layer.relu:
+            h = jax.nn.relu(h)
+    return h
+
+
+def quant_accuracy(model: QuantModel, x, y, variant: str = "ideal") -> float:
+    logits = quant_forward(model, jnp.asarray(x), variant)
+    preds = jnp.argmax(logits, axis=1)
+    return float(jnp.mean((preds == np.asarray(y)).astype(jnp.float32)))
+
+
+# ---------------------------------------------------------------------------
+# artifact export (weights.txt shared with rust)
+# ---------------------------------------------------------------------------
+
+
+def weights_text(model: QuantModel) -> str:
+    """Render the `luna-mlp-v1` kv format rust's QuantMlp::from_text reads."""
+    lines = ["format luna-mlp-v1", f"layers {len(model.layers)}"]
+    for i, l in enumerate(model.layers):
+        o, k = l.wq.shape
+        lines.append(f"layer{i}.in {k}")
+        lines.append(f"layer{i}.out {o}")
+        lines.append(f"layer{i}.relu {1 if l.relu else 0}")
+        lines.append(f"layer{i}.w_scale {l.w_quant.scale!r}")
+        lines.append(f"layer{i}.w_zp {l.w_quant.zero_point}")
+        lines.append(f"layer{i}.x_scale {l.x_quant.scale!r}")
+        lines.append(f"layer{i}.x_zp {l.x_quant.zero_point}")
+        lines.append("layer%d.bias %s" % (i, " ".join(repr(float(b)) for b in l.bias)))
+        lines.append("layer%d.wq %s" % (i, " ".join(str(int(c)) for c in l.wq.reshape(-1))))
+    return "\n".join(lines) + "\n"

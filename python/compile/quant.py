@@ -1,0 +1,35 @@
+"""Affine 4-bit quantization — mirrors ``rust/src/nn/quant.rs`` exactly.
+
+Activations: zero-point 0, scale = max_abs / 15.
+Weights:     zero-point 8, scale = max_abs / 7 (signed values onto 0..15).
+"""
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class Quantizer:
+    scale: float
+    zero_point: int
+
+    @staticmethod
+    def for_activations(max_abs: float) -> "Quantizer":
+        return Quantizer(scale=max(max_abs, 1e-6) / 15.0, zero_point=0)
+
+    @staticmethod
+    def for_weights(max_abs: float) -> "Quantizer":
+        return Quantizer(scale=max(max_abs, 1e-6) / 7.0, zero_point=8)
+
+    def quantize_np(self, x: np.ndarray) -> np.ndarray:
+        q = np.round(x / self.scale) + self.zero_point
+        return np.clip(q, 0, 15).astype(np.int32)
+
+    def quantize_jnp(self, x):
+        q = jnp.round(x / self.scale) + self.zero_point
+        return jnp.clip(q, 0, 15).astype(jnp.int32)
+
+    def dequantize(self, q):
+        return (q - self.zero_point) * self.scale

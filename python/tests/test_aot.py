@@ -1,0 +1,55 @@
+"""AOT lowering smoke tests: HLO text is produced and well-formed."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot, model
+
+
+def test_to_hlo_text_roundtrips_simple_fn():
+    def fn(x):
+        return (x * 2.0 + 1.0,)
+
+    lowered = jax.jit(fn).lower(jax.ShapeDtypeStruct((2, 2), jnp.float32))
+    text = aot.to_hlo_text(lowered)
+    assert "ENTRY" in text
+    assert "f32[2,2]" in text
+
+
+def test_lower_mult_variant_produces_hlo():
+    text = aot.lower_mult_variant("approx")
+    assert "ENTRY" in text
+    assert "f32[16,16]" in text
+
+
+def test_lower_mlp_variant_produces_hlo():
+    params = model.init_params(0)
+    qm = model.quantize_model(params)
+    text = aot.lower_mlp_variant(qm, "ideal")
+    assert "ENTRY" in text
+    # batch x input and batch x output shapes appear
+    assert f"f32[{aot.BATCH},{model.DIMS[0]}]" in text
+    assert f"f32[{aot.BATCH},{model.DIMS[-1]}]" in text
+
+
+def test_lowered_mlp_is_pure_hlo_no_custom_calls():
+    """interpret=True must lower pallas to plain HLO ops the CPU PJRT
+    client can execute — a Mosaic custom-call would break the Rust side."""
+    params = model.init_params(1)
+    qm = model.quantize_model(params)
+    for variant in ("ideal", "approx"):
+        text = aot.lower_mlp_variant(qm, variant)
+        assert "custom-call" not in text, f"{variant} lowered to a custom call"
+
+
+def test_quant_forward_matches_float_loosely():
+    """Quantization error stays small enough that logits correlate."""
+    x, y = __import__("compile.data", fromlist=["generate"]).generate(5, 42)
+    params, _ = model.train_float(x, y, steps=60)
+    qm = model.quantize_model(params)
+    f = np.asarray(model.float_forward(params, jnp.asarray(x[:8])))
+    q = np.asarray(model.quant_forward(qm, jnp.asarray(x[:8]), "ideal"))
+    # predictions mostly agree
+    agree = np.mean(np.argmax(f, 1) == np.argmax(q, 1))
+    assert agree >= 0.5, f"quantized/float prediction agreement {agree}"

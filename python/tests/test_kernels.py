@@ -1,0 +1,139 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp/python oracle.
+
+Hypothesis sweeps shapes and operand values; exhaustive checks cover the
+full 16x16 4-bit input space for every variant.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels.luna_matmul import (
+    VARIANTS,
+    luna_matmul,
+    luna_multiply,
+    lut4_select,
+    variant_product,
+)
+from compile.kernels.ref import (
+    exhaustive_product_table,
+    ref_matmul,
+    ref_product,
+    ref_product_py,
+)
+
+
+def grids():
+    w, y = np.meshgrid(np.arange(16), np.arange(16), indexing="ij")
+    return jnp.asarray(w, jnp.int32), jnp.asarray(y, jnp.int32)
+
+
+class TestLut4Select:
+    def test_matches_shift_add_multiples(self):
+        w = jnp.arange(16, dtype=jnp.int32)
+        for sel in range(4):
+            got = lut4_select(w, jnp.full_like(w, sel))
+            np.testing.assert_array_equal(np.asarray(got), np.arange(16) * sel)
+
+
+class TestVariantProduct:
+    @pytest.mark.parametrize("variant", VARIANTS)
+    def test_exhaustive_against_python_oracle(self, variant):
+        w, y = grids()
+        got = np.asarray(variant_product(w, y, variant))
+        want = exhaustive_product_table(variant)
+        np.testing.assert_array_equal(got, want, err_msg=variant)
+
+    def test_dnc_identity_is_exact(self):
+        w, y = grids()
+        np.testing.assert_array_equal(
+            np.asarray(variant_product(w, y, "dnc")), np.asarray(w) * np.asarray(y)
+        )
+
+    def test_approx_error_range_matches_fig8(self):
+        # error = z_lsb in [0, 45]
+        w, y = grids()
+        err = np.asarray(w) * np.asarray(y) - np.asarray(variant_product(w, y, "approx"))
+        assert err.min() == 0 and err.max() == 45
+
+    def test_approx2_error_range_matches_fig12(self):
+        w, y = grids()
+        err = np.asarray(w) * np.asarray(y) - np.asarray(variant_product(w, y, "approx2"))
+        assert err.min() == -15 and err.max() == 30
+
+
+class TestLunaMultiplyKernel:
+    @pytest.mark.parametrize("variant", VARIANTS)
+    def test_exhaustive_grid(self, variant):
+        w, y = grids()
+        got = np.asarray(luna_multiply(w, y, variant=variant))
+        np.testing.assert_array_equal(got, exhaustive_product_table(variant))
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        st.integers(1, 5),
+        st.integers(1, 17),
+        st.sampled_from(VARIANTS),
+        st.integers(0, 2**31 - 1),
+    )
+    def test_random_shapes(self, rows, cols, variant, seed):
+        rng = np.random.default_rng(seed)
+        w = rng.integers(0, 16, size=(rows, cols))
+        y = rng.integers(0, 16, size=(rows, cols))
+        got = np.asarray(luna_multiply(jnp.asarray(w), jnp.asarray(y), variant=variant))
+        want = np.asarray(ref_product(w, y, variant))
+        np.testing.assert_array_equal(got, want)
+
+
+class TestLunaMatmulKernel:
+    @settings(max_examples=30, deadline=None)
+    @given(
+        st.integers(1, 9),  # B
+        st.integers(1, 33),  # K
+        st.integers(1, 17),  # O
+        st.sampled_from(VARIANTS),
+        st.integers(0, 2**31 - 1),
+    )
+    def test_matches_reference_matmul(self, b, k, o, variant, seed):
+        rng = np.random.default_rng(seed)
+        xq = rng.integers(0, 16, size=(b, k))
+        wq = rng.integers(0, 16, size=(o, k))
+        got = np.asarray(luna_matmul(jnp.asarray(xq), jnp.asarray(wq), variant=variant))
+        want = np.asarray(ref_matmul(xq, wq, variant))
+        np.testing.assert_array_equal(got, want, err_msg=f"{variant} b={b} k={k} o={o}")
+
+    def test_ideal_equals_integer_matmul_with_zp(self):
+        rng = np.random.default_rng(7)
+        xq = rng.integers(0, 16, size=(4, 12))
+        wq = rng.integers(0, 16, size=(6, 12))
+        got = np.asarray(luna_matmul(jnp.asarray(xq), jnp.asarray(wq), variant="ideal"))
+        want = np.einsum("ok,bk->bo", wq, xq) - 8 * xq.sum(axis=1)[:, None]
+        np.testing.assert_array_equal(got, want)
+
+    def test_zero_inputs_give_zero(self):
+        z = jnp.zeros((3, 8), jnp.int32)
+        w = jnp.ones((4, 8), jnp.int32) * 5
+        out = np.asarray(luna_matmul(z, w, variant="ideal"))
+        np.testing.assert_array_equal(out, np.zeros((3, 4)))
+
+    @pytest.mark.parametrize("variant", ["approx", "approx2"])
+    def test_variant_error_bounded_per_element(self, variant):
+        # |acc_variant - acc_ideal| <= K * bound (45 for approx, 30 for approx2)
+        rng = np.random.default_rng(11)
+        k = 16
+        xq = rng.integers(0, 16, size=(5, k))
+        wq = rng.integers(0, 16, size=(7, k))
+        a = np.asarray(luna_matmul(jnp.asarray(xq), jnp.asarray(wq), variant="ideal"))
+        b = np.asarray(luna_matmul(jnp.asarray(xq), jnp.asarray(wq), variant=variant))
+        bound = 45 if variant == "approx" else 30
+        assert np.max(np.abs(a - b)) <= k * bound
+
+
+class TestScalarOracleConsistency:
+    def test_python_and_jnp_oracles_agree(self):
+        for variant in VARIANTS:
+            for w in range(16):
+                for y in range(16):
+                    assert int(ref_product(w, y, variant)) == ref_product_py(w, y, variant)

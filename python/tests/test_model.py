@@ -1,0 +1,137 @@
+"""L2 correctness: quantized model forward pass and artifact formats."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import data, model
+from compile.kernels.luna_matmul import VARIANTS
+from compile.quant import Quantizer
+
+
+def tiny_model(seed=0):
+    params = model.init_params(seed)
+    return model.quantize_model(params)
+
+
+class TestQuantizer:
+    def test_weight_quantizer_is_symmetric(self):
+        q = Quantizer.for_weights(0.7)
+        assert q.zero_point == 8
+        assert q.quantize_np(np.array([0.0]))[0] == 8
+        assert q.quantize_np(np.array([0.7]))[0] == 15
+        assert q.quantize_np(np.array([-0.7]))[0] <= 1
+
+    def test_activation_quantizer_range(self):
+        q = Quantizer.for_activations(1.0)
+        codes = q.quantize_np(np.linspace(-1, 2, 50))
+        assert codes.min() == 0 and codes.max() == 15
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.floats(0.01, 10.0), st.lists(st.floats(-5, 5), min_size=1, max_size=20))
+    def test_roundtrip_error_bounded(self, max_abs, xs):
+        q = Quantizer.for_activations(max_abs)
+        xs = np.clip(np.array(xs, dtype=np.float32), 0, max_abs)
+        back = q.dequantize(q.quantize_np(xs))
+        assert np.all(np.abs(back - xs) <= q.scale / 2 + 1e-5)
+
+
+class TestQuantForward:
+    def test_output_shape_and_finiteness(self):
+        qm = tiny_model()
+        x = jnp.zeros((4, 64), jnp.float32)
+        for variant in VARIANTS:
+            out = model.quant_forward(qm, x, variant)
+            assert out.shape == (4, 10)
+            assert np.all(np.isfinite(np.asarray(out)))
+
+    def test_dnc_equals_ideal_bitwise(self):
+        qm = tiny_model()
+        x, _ = data.generate(2, 99)
+        a = np.asarray(model.quant_forward(qm, jnp.asarray(x), "ideal"))
+        b = np.asarray(model.quant_forward(qm, jnp.asarray(x), "dnc"))
+        np.testing.assert_array_equal(a, b)
+
+    def test_approx_variants_differ_from_ideal(self):
+        qm = tiny_model()
+        x, _ = data.generate(2, 98)
+        a = np.asarray(model.quant_forward(qm, jnp.asarray(x), "ideal"))
+        for variant in ("approx", "approx2"):
+            b = np.asarray(model.quant_forward(qm, jnp.asarray(x), variant))
+            assert not np.array_equal(a, b), variant
+
+    def test_batch_rows_are_independent(self):
+        qm = tiny_model()
+        x, _ = data.generate(1, 5)
+        single = np.asarray(model.quant_forward(qm, jnp.asarray(x[:1]), "ideal"))
+        batched = np.asarray(model.quant_forward(qm, jnp.asarray(x[:8]), "ideal"))
+        np.testing.assert_allclose(batched[0], single[0], rtol=1e-6)
+
+    def test_training_improves_over_chance(self):
+        x, y = data.generate(30, 1234)
+        params, acc = model.train_float(x, y, seed=0, steps=150)
+        assert acc > 0.5, f"float training failed to learn (acc {acc})"
+        qm = model.quantize_model(params)
+        qacc = model.quant_accuracy(qm, x, y, "ideal")
+        assert qacc > 0.4, f"quantized accuracy collapsed (acc {qacc})"
+
+
+class TestWeightsText:
+    def test_format_contains_everything_rust_needs(self):
+        qm = tiny_model()
+        text = model.weights_text(qm)
+        assert text.startswith("format luna-mlp-v1")
+        assert "layers 2" in text
+        for i in range(2):
+            for key in ("in", "out", "relu", "w_scale", "w_zp", "x_scale", "x_zp", "bias", "wq"):
+                assert f"layer{i}.{key} " in text, key
+
+    def test_codes_are_4bit(self):
+        qm = tiny_model()
+        for line in model.weights_text(qm).splitlines():
+            if ".wq " in line:
+                codes = [int(t) for t in line.split()[1:]]
+                assert all(0 <= c <= 15 for c in codes)
+
+    def test_code_count_matches_dims(self):
+        qm = tiny_model()
+        text = model.weights_text(qm)
+        lines = {l.split()[0]: l for l in text.splitlines()}
+        n0 = len(lines["layer0.wq"].split()) - 1
+        assert n0 == 64 * 32
+
+
+class TestData:
+    def test_generation_deterministic(self):
+        a, la = data.generate(3, 7)
+        b, lb = data.generate(3, 7)
+        np.testing.assert_array_equal(a, b)
+        np.testing.assert_array_equal(la, lb)
+        assert a.shape == (30, 64)
+
+    def test_pixels_in_unit_range(self):
+        x, _ = data.generate(5, 3)
+        assert x.min() >= 0.0 and x.max() <= 1.0
+
+    def test_export_binary_layout(self):
+        x, y = data.generate(1, 2)
+        blob = data.export_testset(x, y)
+        assert len(blob) == 4 + len(y) * (64 * 4 + 4)
+        n = np.frombuffer(blob[:4], dtype="<u4")[0]
+        assert n == len(y)
+        # first sample pixels round-trip
+        px = np.frombuffer(blob[4 : 4 + 256], dtype="<f4")
+        np.testing.assert_array_equal(px, x[0])
+
+    def test_glyphs_match_rust_source(self):
+        """Guards the cross-language GLYPHS contract (nn/dataset.rs)."""
+        import pathlib
+        import re
+
+        rust_src = (
+            pathlib.Path(__file__).resolve().parents[2] / "rust" / "src" / "nn" / "dataset.rs"
+        ).read_text()
+        rust_glyphs = re.findall(r'"([.#]{20,})"', rust_src)
+        assert rust_glyphs == data.GLYPHS

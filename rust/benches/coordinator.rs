@@ -1,0 +1,89 @@
+//! End-to-end coordinator benchmarks: batcher, tiler and (when artifacts
+//! exist) the full serve path — the paper's system integrated as a
+//! serving stack. This is the headline-throughput bench the perf pass
+//! tracks in EXPERIMENTS.md §Perf.
+
+use luna_cim::cells::tsmc65_library;
+use luna_cim::config::Config;
+use luna_cim::coordinator::batcher::Batcher;
+use luna_cim::coordinator::request::InferenceRequest;
+use luna_cim::coordinator::tiler::{Tiler, UnitCosts};
+use luna_cim::coordinator::CoordinatorServer;
+use luna_cim::multiplier::MultiplierKind;
+use luna_cim::nn::QuantMlp;
+use luna_cim::runtime::ArtifactStore;
+use luna_cim::util::bench::{black_box, Bencher};
+use std::time::Duration;
+
+fn main() {
+    let b = Bencher::default();
+
+    // 1. batcher hot path
+    let mut batcher = Batcher::new(8, Duration::from_micros(500), 4096);
+    let mut id = 0u64;
+    b.run("batcher push (+ drain every 8th)", 1.0, || {
+        id += 1;
+        if let Ok(Some(batch)) = batcher.push(InferenceRequest::new(id, vec![0.0; 4])) {
+            black_box(batch.padded_to);
+        }
+    });
+
+    // 2. tiler scheduling (weight-stationary steady state)
+    let lib = tsmc65_library();
+    let costs = UnitCosts::measure(MultiplierKind::DncOpt, &lib);
+    let mlp = QuantMlp::random_digits(1);
+    let mut tiler = Tiler::new(16, 4, costs);
+    let _ = tiler.schedule(&mlp, 8); // warm: program the fabric
+    b.run("tiler schedule 64-32-10 batch=8 (stationary)", mlp.macs() as f64 * 8.0, || {
+        black_box(tiler.schedule(&mlp, 8).total_energy_fj);
+    });
+
+    // 3. full serve path, if artifacts are present
+    let store = ArtifactStore::default_location();
+    if !store.exists() {
+        println!("(skipping end-to-end serve bench: run `make artifacts`)");
+        return;
+    }
+    let testset = store.load_testset().expect("testset");
+    for workers in [1usize, 2, 4] {
+        let mut cfg = Config::default();
+        cfg.workers.count = workers;
+        let (server, handle) = CoordinatorServer::start(cfg).expect("server");
+        // concurrent client load, measured end to end
+        let clients = 8usize;
+        let per_client = 64usize;
+        let t0 = std::time::Instant::now();
+        let mut threads = Vec::new();
+        for c in 0..clients {
+            let handle = handle.clone();
+            let samples: Vec<Vec<f32>> = testset
+                .samples
+                .iter()
+                .cycle()
+                .skip(c * 7)
+                .take(per_client)
+                .map(|s| s.pixels.clone())
+                .collect();
+            threads.push(std::thread::spawn(move || {
+                for px in samples {
+                    let _ = handle.submit(px);
+                }
+            }));
+        }
+        for t in threads {
+            let _ = t.join();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let total = clients * per_client;
+        let snap = server.metrics().snapshot();
+        println!(
+            "bench serve workers={workers:<2} {:>43} {:>10.0} req/s  p50 {:>5} us  p99 {:>6} us  occupancy {:.2}",
+            "end-to-end (8 clients x 64 req)",
+            total as f64 / wall,
+            snap.p50_latency_us,
+            snap.p99_latency_us,
+            snap.batch_occupancy()
+        );
+        server.shutdown();
+    }
+}

@@ -1,0 +1,42 @@
+//! Bench target regenerating the statistical figures (5, 6, 7, 8, 11,
+//! 12, 13) with timings. Prints every series so the bench log doubles as
+//! the reproduction record.
+
+use luna_cim::analysis::{error_map, hamming, mae, probability};
+use luna_cim::multiplier::MultiplierKind;
+use luna_cim::report;
+use luna_cim::util::bench::{black_box, Bencher};
+
+fn main() {
+    println!("==== Fig 5 — LSB-side product distribution ====");
+    print!("{}", report::fig5());
+    println!("\n==== Fig 6 — Hamming-distance candidate sweep ====");
+    print!("{}", report::fig6());
+    println!("\n==== Fig 7 / 8 — ApproxD&C error map & histogram ====");
+    print!("{}", report::fig_heatmap(7));
+    print!("{}", report::fig_histogram(8));
+    println!("\n==== Fig 11 / 12 — ApproxD&C2 error map & histogram ====");
+    print!("{}", report::fig_heatmap(11));
+    print!("{}", report::fig_histogram(12));
+    println!("\n==== Fig 13 — MAE study (100 iterations) ====");
+    print!("{}", report::fig13(100, 2024));
+
+    println!("\n==== analysis timings ====");
+    let b = Bencher::default();
+    b.run("fig5: exact pmf", 64.0, || {
+        black_box(probability::lsb_product_pmf());
+    });
+    b.run("fig6: hamming sweep (64 candidates)", 64.0, || {
+        black_box(hamming::mean_hamming_per_candidate());
+    });
+    b.run("fig7/11: one 16x16 error map", 256.0, || {
+        black_box(error_map::error_map(MultiplierKind::Approx));
+    });
+    b.run("fig13: element MAE, 10k pairs", 10_000.0, || {
+        black_box(mae::element_mae(MultiplierKind::Approx2, 10_000, 7));
+    });
+    let bq = Bencher::quick();
+    bq.run("fig13: full study (100 iters, 7 configs)", 700.0, || {
+        black_box(mae::fig13_study(100, 7));
+    });
+}

@@ -1,0 +1,62 @@
+//! Bench target regenerating the circuit-level figures (1–4, 9, 10, 14,
+//! 15, 16, 17, 18) with event-simulator throughput measurements.
+
+use luna_cim::cells::tsmc65_library;
+use luna_cim::logic::{to_bits, EventSim};
+use luna_cim::luna::LunaUnit;
+use luna_cim::multiplier::MultiplierKind;
+use luna_cim::report;
+use luna_cim::util::bench::{black_box, Bencher};
+use luna_cim::util::Rng;
+
+fn main() {
+    for id in [1u32, 2, 3, 9, 10] {
+        println!("==== structure (paper Fig {id}) ====");
+        print!("{}", report::fig_structure(id));
+    }
+    println!("\n==== Fig 14 — transient ====");
+    print!("{}", report::figure(14));
+    println!("\n==== Fig 15 — energy breakdown ====");
+    print!("{}", report::figure(15));
+    println!("\n==== Fig 16 — area comparison ====");
+    print!("{}", report::figure(16));
+    println!("\n==== Fig 17 — bank structure ====");
+    print!("{}", report::figure(17));
+    println!("\n==== Fig 18 — area pie ====");
+    print!("{}", report::figure(18));
+
+    println!("\n==== circuit-simulation timings ====");
+    let b = Bencher::default();
+    let lib = tsmc65_library();
+
+    // Event-driven transient throughput (stimuli/sec) per configuration.
+    for kind in [MultiplierKind::DncOpt, MultiplierKind::Traditional] {
+        let netlist = kind.netlist().unwrap();
+        let mut sim = EventSim::new(&netlist);
+        sim.program(&kind.program_image(6).unwrap());
+        let mut rng = Rng::seed_from_u64(1);
+        b.run(&format!("event-sim stimulus ({})", kind.name()), 1.0, || {
+            black_box(sim.apply(&to_bits(rng.gen_u4() as u64, 4)));
+        });
+    }
+
+    // Gate-level multiply throughput through a programmed LUNA unit.
+    let mut unit = LunaUnit::new(MultiplierKind::DncOpt);
+    unit.program(&lib, 6);
+    let mut rng = Rng::seed_from_u64(2);
+    b.run("LunaUnit::multiply (gate-level + energy)", 1.0, || {
+        black_box(unit.multiply(&lib, rng.gen_u4()));
+    });
+
+    // Figure regeneration end-to-end.
+    let bq = Bencher::quick();
+    bq.run("fig14 full regeneration", 1.0, || {
+        black_box(report::figure(14));
+    });
+    bq.run("fig15 full regeneration (64x4 multiplies)", 256.0, || {
+        black_box(report::figure(15));
+    });
+    bq.run("fig18 area report", 1.0, || {
+        black_box(report::figure(18));
+    });
+}

@@ -1,0 +1,46 @@
+//! Hot-path throughput of the multiplier models — the L3 performance
+//! baseline the perf pass optimizes (EXPERIMENTS.md §Perf).
+//!
+//! Three tiers:
+//! * behavioural `value(w, y)` — what the NN substrate and the analysis
+//!   suite execute per MAC;
+//! * `MultiplierModel::dot` over realistic layer fan-ins;
+//! * full quantized-MLP forward (the per-request functional-model cost).
+
+use luna_cim::multiplier::{MultiplierKind, MultiplierModel};
+use luna_cim::nn::QuantMlp;
+use luna_cim::util::bench::{black_box, Bencher};
+use luna_cim::util::Rng;
+
+fn main() {
+    let b = Bencher::default();
+
+    // 1. scalar products
+    for kind in MultiplierKind::ALL {
+        let mut rng = Rng::seed_from_u64(7);
+        b.run(&format!("scalar {:?}", kind), 1.0, || {
+            black_box(kind.value(rng.gen_u4(), rng.gen_u4()));
+        });
+    }
+
+    // 2. dot products at layer fan-in 64
+    let mut rng = Rng::seed_from_u64(8);
+    let w: Vec<u8> = (0..64).map(|_| rng.gen_u4()).collect();
+    let x: Vec<u8> = (0..64).map(|_| rng.gen_u4()).collect();
+    for kind in [MultiplierKind::Ideal, MultiplierKind::DncOpt, MultiplierKind::Approx2] {
+        let model = MultiplierModel::new(kind);
+        b.run(&format!("dot64 {:?}", kind), 64.0, || {
+            black_box(model.dot(&w, &x));
+        });
+    }
+
+    // 3. whole-model forward (64->32->10), per-request functional cost
+    let mlp = QuantMlp::random_digits(3);
+    let pixels: Vec<f32> = (0..64).map(|_| rng.gen_f64() as f32).collect();
+    for kind in [MultiplierKind::Ideal, MultiplierKind::DncOpt, MultiplierKind::Approx] {
+        let model = MultiplierModel::new(kind);
+        b.run(&format!("mlp-forward {:?}", kind), mlp.macs() as f64, || {
+            black_box(mlp.forward(&pixels, &model));
+        });
+    }
+}

@@ -1,0 +1,36 @@
+//! Bench target regenerating Tables I and II (component-count scaling)
+//! and timing their construction. Every row the paper reports is printed
+//! so `cargo bench 2>&1 | tee bench_output.txt` records the reproduction.
+
+use luna_cim::multiplier::{generic, traditional};
+use luna_cim::report;
+use luna_cim::util::bench::{black_box, Bencher};
+
+fn main() {
+    println!("==== Table I — traditional LUT cost (paper Table I) ====");
+    print!("{}", report::table1());
+    println!("\n==== Table II — traditional vs optimized D&C (paper Table II) ====");
+    print!("{}", report::table2());
+
+    // Timing: netlist construction is the "compiler" of this system;
+    // regenerating the 16b optimized netlist is the heaviest row.
+    println!("\n==== construction timing ====");
+    let b = Bencher::default();
+    b.run("table1: trad cost rows 3..=8", 6.0, || {
+        for k in 3..=8u32 {
+            black_box(traditional::cost(k));
+        }
+    });
+    b.run("table2: build 4b optimized netlist", 1.0, || {
+        black_box(generic::netlist(4));
+    });
+    b.run("table2: build 8b optimized netlist", 1.0, || {
+        black_box(generic::netlist(8));
+    });
+    b.run("table2: build 16b optimized netlist", 1.0, || {
+        black_box(generic::netlist(16));
+    });
+    b.run("table2: full regeneration", 1.0, || {
+        black_box(report::table2());
+    });
+}

@@ -1,0 +1,124 @@
+//! Figs 7, 8, 11, 12 — error heatmaps and histograms of the approximate
+//! configurations vs the exact D&C product, over all (Weight, Data) pairs.
+
+use crate::multiplier::MultiplierKind;
+
+/// A 16×16 signed error map: `err[w][y] = exact − approx` (the paper's
+/// heatmap color intensity; positive = approximation undershoots).
+#[derive(Debug, Clone)]
+pub struct ErrorMap {
+    pub kind: MultiplierKind,
+    pub err: Vec<Vec<i32>>, // [w][y]
+}
+
+/// Compute the error map of `kind` vs exact multiplication (Figs 7 / 11).
+pub fn error_map(kind: MultiplierKind) -> ErrorMap {
+    let err = (0..16u8)
+        .map(|w| (0..16u8).map(|y| kind.error(w, y)).collect())
+        .collect();
+    ErrorMap { kind, err }
+}
+
+impl ErrorMap {
+    /// (min, max) error — the paper's ranges: ApproxD&C [0, 45],
+    /// ApproxD&C 2 [−15, 30].
+    pub fn range(&self) -> (i32, i32) {
+        let mut lo = i32::MAX;
+        let mut hi = i32::MIN;
+        for row in &self.err {
+            for &e in row {
+                lo = lo.min(e);
+                hi = hi.max(e);
+            }
+        }
+        (lo, hi)
+    }
+
+    /// Histogram of error occurrences (Figs 8 / 12): sorted
+    /// `(error, count)` pairs over all 256 (w, y) pairs.
+    pub fn histogram(&self) -> Vec<(i32, u32)> {
+        let mut map = std::collections::BTreeMap::new();
+        for row in &self.err {
+            for &e in row {
+                *map.entry(e).or_insert(0u32) += 1;
+            }
+        }
+        map.into_iter().collect()
+    }
+
+    /// Mean signed error (bias). ApproxD&C is strictly non-negative biased;
+    /// ApproxD&C 2 is closer to zero-centred ("balanced error
+    /// distribution" — §III.C).
+    pub fn mean_error(&self) -> f64 {
+        let sum: i64 = self.err.iter().flatten().map(|&e| e as i64).sum();
+        sum as f64 / 256.0
+    }
+
+    /// Mean absolute error over the exhaustive input space.
+    pub fn mean_abs_error(&self) -> f64 {
+        let sum: i64 = self.err.iter().flatten().map(|&e| e.unsigned_abs() as i64).sum();
+        sum as f64 / 256.0
+    }
+
+    /// CSV of the 16×16 map (`w,y,error` rows) for external plotting.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("w,y,error\n");
+        for (w, row) in self.err.iter().enumerate() {
+            for (y, &e) in row.iter().enumerate() {
+                out.push_str(&format!("{w},{y},{e}\n"));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn approx_error_range_matches_fig8() {
+        let m = error_map(MultiplierKind::Approx);
+        assert_eq!(m.range(), (0, 45));
+    }
+
+    #[test]
+    fn approx2_error_range_matches_fig12() {
+        let m = error_map(MultiplierKind::Approx2);
+        assert_eq!(m.range(), (-15, 30));
+    }
+
+    #[test]
+    fn exact_configs_have_zero_error() {
+        for kind in [MultiplierKind::Dnc, MultiplierKind::DncOpt, MultiplierKind::Traditional] {
+            let m = error_map(kind);
+            assert_eq!(m.range(), (0, 0), "{kind}");
+        }
+    }
+
+    #[test]
+    fn histograms_cover_256_pairs() {
+        for kind in [MultiplierKind::Approx, MultiplierKind::Approx2] {
+            let total: u32 = error_map(kind).histogram().iter().map(|(_, c)| c).sum();
+            assert_eq!(total, 256);
+        }
+    }
+
+    #[test]
+    fn approx2_is_better_centred_than_approx() {
+        // §III.C: "the balanced error distribution in ApproxD&C 2".
+        let bias1 = error_map(MultiplierKind::Approx).mean_error();
+        let bias2 = error_map(MultiplierKind::Approx2).mean_error();
+        assert!(bias2.abs() < bias1.abs());
+    }
+
+    #[test]
+    fn approx_error_equals_z_lsb() {
+        let m = error_map(MultiplierKind::Approx);
+        for w in 0..16usize {
+            for y in 0..16usize {
+                assert_eq!(m.err[w][y], crate::multiplier::z_lsb(w as u8, y as u8) as i32);
+            }
+        }
+    }
+}

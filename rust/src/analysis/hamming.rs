@@ -1,0 +1,68 @@
+//! Fig 6 — Hamming-distance selection of the fixed `Z_LSB`.
+//!
+//! For every 6-bit candidate `c`, the paper computes the average Hamming
+//! distance between `c` and the actual (4b×2b) products, weighted by
+//! their probability of occurrence, and normalized per bit (divided by
+//! the 6-bit width — that normalization is what makes the paper's
+//! reported minimum 0.275 at `c = 0`).
+
+use super::probability::lsb_product_pmf;
+
+/// Mean per-bit Hamming distance for every candidate 0..=63 (the Fig 6
+/// curve).
+pub fn mean_hamming_per_candidate() -> [f64; 64] {
+    let pmf = lsb_product_pmf();
+    let mut out = [0.0f64; 64];
+    for (c, slot) in out.iter_mut().enumerate() {
+        let mut acc = 0.0;
+        for (p, &prob) in pmf.iter().enumerate() {
+            if prob > 0.0 {
+                acc += prob * ((p ^ c).count_ones() as f64);
+            }
+        }
+        *slot = acc / 6.0;
+    }
+    out
+}
+
+/// The candidate minimizing mean Hamming distance and its value —
+/// the paper's (0, 0.275).
+pub fn best_candidate() -> (u8, f64) {
+    let dists = mean_hamming_per_candidate();
+    let (c, d) = dists
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .expect("64 candidates");
+    (c as u8, *d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_is_the_best_candidate() {
+        let (c, _) = best_candidate();
+        assert_eq!(c, 0);
+    }
+
+    #[test]
+    fn minimum_matches_paper_0_275() {
+        let (_, d) = best_candidate();
+        assert!((d - 0.275).abs() < 5e-3, "min mean Hamming distance {d} vs paper 0.275");
+    }
+
+    #[test]
+    fn distances_bounded_by_word_width() {
+        for d in mean_hamming_per_candidate() {
+            assert!(d >= 0.0 && d <= 1.0, "per-bit distance in [0,1], got {d}");
+        }
+    }
+
+    #[test]
+    fn all_ones_candidate_is_bad() {
+        let dists = mean_hamming_per_candidate();
+        assert!(dists[63] > dists[0] * 2.0);
+    }
+}

@@ -1,0 +1,141 @@
+//! Fig 13 — Mean Absolute Error of each multiplier configuration.
+//!
+//! The paper integrates the specialised multipliers into neural networks,
+//! drives them with random input data for 100 iterations, and reports the
+//! MAE vs "IDEAL" multiplication. We reproduce both granularities:
+//!
+//! * [`element_mae`] — MAE of the raw 4b×4b products over random pairs
+//!   (the multiplier in isolation);
+//! * [`network_mae`] — MAE of a quantized MLP's output logits when every
+//!   MAC uses the configuration (the paper's network-level study).
+
+use crate::multiplier::{MultiplierKind, MultiplierModel};
+use crate::nn::{DigitsDataset, QuantMlp};
+use crate::util::Rng;
+
+/// One Fig 13 bar.
+#[derive(Debug, Clone)]
+pub struct MaeResult {
+    pub kind: MultiplierKind,
+    pub element_mae: f64,
+    pub network_mae: f64,
+}
+
+/// MAE of raw products vs ideal over `iters` random 4-bit pairs.
+pub fn element_mae(kind: MultiplierKind, iters: usize, seed: u64) -> f64 {
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut acc = 0u64;
+    for _ in 0..iters {
+        let w: u8 = rng.gen_u4();
+        let y: u8 = rng.gen_u4();
+        acc += kind.error(w, y).unsigned_abs() as u64;
+    }
+    acc as f64 / iters as f64
+}
+
+/// Exact element-level MAE over the full 16×16 input space (the limit the
+/// random study converges to).
+pub fn element_mae_exhaustive(kind: MultiplierKind) -> f64 {
+    super::error_map::error_map(kind).mean_abs_error()
+}
+
+/// Network-level MAE: mean |logit difference| between `kind` and IDEAL
+/// on `iters` random inputs through a quantized MLP.
+pub fn network_mae(mlp: &QuantMlp, kind: MultiplierKind, iters: usize, seed: u64) -> f64 {
+    let mut rng = Rng::seed_from_u64(seed);
+    let ideal = MultiplierModel::new(MultiplierKind::Ideal);
+    let model = MultiplierModel::new(kind);
+    let dim = mlp.input_dim();
+    let mut acc = 0.0f64;
+    let mut count = 0usize;
+    for _ in 0..iters {
+        let x: Vec<f32> = (0..dim).map(|_| rng.gen_f64() as f32).collect();
+        let a = mlp.forward(&x, &ideal);
+        let b = mlp.forward(&x, &model);
+        for (va, vb) in a.iter().zip(b.iter()) {
+            acc += (va - vb).abs() as f64;
+            count += 1;
+        }
+    }
+    acc / count as f64
+}
+
+/// The full Fig 13 study: every configuration's element- and network-level
+/// MAE, 100 iterations (the paper's count), deterministic seed.
+pub fn fig13_study(iters: usize, seed: u64) -> Vec<MaeResult> {
+    let mlp = QuantMlp::random_for_study(seed ^ 0xF13);
+    let _ = DigitsDataset::generate(8, seed); // warm the dataset cache path
+    MultiplierKind::ALL
+        .iter()
+        .map(|&kind| MaeResult {
+            kind,
+            element_mae: element_mae(kind, iters * 100, seed),
+            network_mae: network_mae(&mlp, kind, iters, seed),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_kinds_have_zero_mae() {
+        for kind in [MultiplierKind::Dnc, MultiplierKind::DncOpt, MultiplierKind::ArrayMult] {
+            assert_eq!(element_mae(kind, 500, 7), 0.0, "{kind}");
+            assert_eq!(element_mae_exhaustive(kind), 0.0, "{kind}");
+        }
+    }
+
+    #[test]
+    fn approx_mae_near_analytic_mean() {
+        // E|err| for ApproxD&C = E[Z_LSB] = E[w]·E[y_lo] = 7.5 · 1.5.
+        let mae = element_mae_exhaustive(MultiplierKind::Approx);
+        assert!((mae - 11.25).abs() < 1e-9, "{mae}");
+        let sampled = element_mae(MultiplierKind::Approx, 20_000, 3);
+        assert!((sampled - 11.25).abs() < 0.5, "{sampled}");
+    }
+
+    #[test]
+    fn approx2_has_lower_mae_than_approx() {
+        // The W-dependent approximation is the better estimator: its MAE
+        // E|w(y_lo−1)| = 7.5 · 1.0 = 7.5 < 11.25.
+        let a = element_mae_exhaustive(MultiplierKind::Approx);
+        let b = element_mae_exhaustive(MultiplierKind::Approx2);
+        assert!((b - 7.5).abs() < 1e-9);
+        assert!(b < a);
+    }
+
+    #[test]
+    fn network_mae_behaviour() {
+        // Deterministic facts: exact configs have zero network MAE, the
+        // approximate ones do not. The element-level ordering (approx2
+        // 7.5 < approx 11.25) does NOT carry to network level: approx's
+        // one-sided (always-undershooting) error is partially absorbed by
+        // the ReLU clamp, while approx2's sign-balanced error propagates.
+        // EXPERIMENTS.md §Fig13 records the measured values.
+        let (mut approx_sum, mut approx2_sum) = (0.0, 0.0);
+        for seed in 0..6u64 {
+            let mlp = QuantMlp::random_for_study(40 + seed);
+            assert_eq!(network_mae(&mlp, MultiplierKind::DncOpt, 10, seed), 0.0);
+            approx_sum += network_mae(&mlp, MultiplierKind::Approx, 10, seed);
+            approx2_sum += network_mae(&mlp, MultiplierKind::Approx2, 10, seed);
+        }
+        assert!(approx_sum > 0.0 && approx2_sum > 0.0);
+        // element-level ordering is deterministic
+        assert!(
+            element_mae_exhaustive(MultiplierKind::Approx2)
+                < element_mae_exhaustive(MultiplierKind::Approx)
+        );
+    }
+
+    #[test]
+    fn fig13_study_is_deterministic() {
+        let a = fig13_study(5, 99);
+        let b = fig13_study(5, 99);
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.element_mae, y.element_mae);
+            assert_eq!(x.network_mae, y.network_mae);
+        }
+    }
+}

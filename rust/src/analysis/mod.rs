@@ -1,0 +1,18 @@
+//! Statistical analyses behind the paper's approximation choices.
+//!
+//! Reproduces, exactly or statistically:
+//!
+//! * **Fig 5** — probability distribution of the (4b×2b) LSB-side product
+//!   ([`probability`]): P(0) = 19/64 ≈ 0.2969 ("0.296" in the paper);
+//! * **Fig 6** — mean per-bit Hamming distance of each candidate fixed
+//!   `Z_LSB` ([`hamming`]): minimum 0.275 at candidate 0;
+//! * **Figs 7, 8, 11, 12** — error heatmaps and histograms of ApproxD&C
+//!   and ApproxD&C 2 vs the exact D&C product ([`error_map`]);
+//! * **Fig 13** — Mean Absolute Error of each multiplier configuration
+//!   inside a neural network ([`mae`]).
+
+pub mod ablation;
+pub mod error_map;
+pub mod hamming;
+pub mod mae;
+pub mod probability;

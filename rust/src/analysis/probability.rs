@@ -1,0 +1,72 @@
+//! Fig 5 — probability distribution of the (4b×2b) LSB-side product.
+//!
+//! Operand 1 uniform over [0, 15], operand 2 uniform over [0, 3]; the
+//! product ranges over [0, 45] ⊂ [0, 63]. The paper highlights
+//! P(product = 0) ≈ 0.296 (exactly 19/64) and enumerates the values in
+//! 0..=63 that can never occur.
+
+/// Exact probability mass function over products 0..=63 of `w · y_lo`
+/// with `w ~ U[0,15]`, `y_lo ~ U[0,3]` (the stem chart of Fig 5).
+pub fn lsb_product_pmf() -> [f64; 64] {
+    let mut counts = [0u32; 64];
+    for w in 0..16u32 {
+        for y in 0..4u32 {
+            counts[(w * y) as usize] += 1;
+        }
+    }
+    let mut pmf = [0.0f64; 64];
+    for (p, &c) in pmf.iter_mut().zip(counts.iter()) {
+        *p = c as f64 / 64.0;
+    }
+    pmf
+}
+
+/// The paper's headline: P(Z_LSB = 0) = 19/64 ≈ 0.2969 ("0.296").
+pub fn probability_of_zero() -> f64 {
+    lsb_product_pmf()[0]
+}
+
+/// Values in 0..=63 that can never be a (4b×2b) product — the paper lists
+/// 17, 19, 23, 25, 29, 31, 32, 34, 35, 37, 38, 40, 41, 43, 44 and 46–63.
+pub fn impossible_values() -> Vec<u8> {
+    lsb_product_pmf()
+        .iter()
+        .enumerate()
+        .filter(|(_, &p)| p == 0.0)
+        .map(|(v, _)| v as u8)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pmf_sums_to_one() {
+        let s: f64 = lsb_product_pmf().iter().sum();
+        assert!((s - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_probability_matches_paper() {
+        // 19/64: w=0 (4 ways) + y=0 (16 ways) − both (1 way) = 19 of 64.
+        assert!((probability_of_zero() - 19.0 / 64.0).abs() < 1e-12);
+        // The paper rounds to 0.296.
+        assert!((probability_of_zero() - 0.296).abs() < 1e-3);
+    }
+
+    #[test]
+    fn impossible_set_matches_paper_list() {
+        let mut expected: Vec<u8> =
+            vec![17, 19, 23, 25, 29, 31, 32, 34, 35, 37, 38, 40, 41, 43, 44];
+        expected.extend(46..=63);
+        assert_eq!(impossible_values(), expected);
+    }
+
+    #[test]
+    fn zero_is_the_mode() {
+        let pmf = lsb_product_pmf();
+        let max = pmf.iter().cloned().fold(f64::MIN, f64::max);
+        assert_eq!(pmf[0], max);
+    }
+}

@@ -1,0 +1,119 @@
+//! Enumeration of every cell kind used by the LUNA-CiM netlists and the
+//! SRAM-array periphery model.
+
+
+/// A physical cell in the design. Primitive logic gates (`Inv` … `Mux2`)
+/// are what netlists are built from; `HalfAdder`/`FullAdder` are *composite*
+/// cells (the paper counts them as units, matching standard-cell libraries
+/// that provide HA/FA macros); the remaining kinds are SRAM-array periphery
+/// components used by the energy/area model of Figs 15/18.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum CellKind {
+    /// 6T SRAM bit cell (storage for LUT entries and array data).
+    SramCell,
+    /// 2:1 one-bit multiplexer (transmission-gate style + select inverter).
+    Mux2,
+    /// Half adder macro (XOR + AND).
+    HalfAdder,
+    /// Full adder macro (mirror adder).
+    FullAdder,
+    /// Static CMOS inverter.
+    Inv,
+    /// Buffer (two inverters).
+    Buf,
+    /// 2-input NAND.
+    Nand2,
+    /// 2-input NOR.
+    Nor2,
+    /// 2-input AND (NAND + INV).
+    And2,
+    /// 2-input OR (NOR + INV).
+    Or2,
+    /// 2-input XOR.
+    Xor2,
+    /// 2-input XNOR.
+    Xnor2,
+    // ---- SRAM array periphery (Figs 15, 17, 18) ----
+    /// Bit-line conditioning unit (precharge + equalise), one per column.
+    BitlineConditioner,
+    /// Differential sense amplifier, one per column.
+    SenseAmp,
+    /// Column controller (write driver + column mux), one per column.
+    ColumnController,
+    /// Row decoder (shared, per array).
+    RowDecoder,
+    /// Column decoder (shared, per array).
+    ColumnDecoder,
+}
+
+impl CellKind {
+    /// Every kind, in a stable order (used for report tables).
+    pub const ALL: [CellKind; 17] = [
+        CellKind::SramCell,
+        CellKind::Mux2,
+        CellKind::HalfAdder,
+        CellKind::FullAdder,
+        CellKind::Inv,
+        CellKind::Buf,
+        CellKind::Nand2,
+        CellKind::Nor2,
+        CellKind::And2,
+        CellKind::Or2,
+        CellKind::Xor2,
+        CellKind::Xnor2,
+        CellKind::BitlineConditioner,
+        CellKind::SenseAmp,
+        CellKind::ColumnController,
+        CellKind::RowDecoder,
+        CellKind::ColumnDecoder,
+    ];
+
+    /// Stable index into [`CellKind::ALL`] (used by count vectors).
+    pub fn index(self) -> usize {
+        Self::ALL.iter().position(|k| *k == self).expect("kind in ALL")
+    }
+
+    /// Short display name, matching the labels the paper uses in its
+    /// component tables.
+    pub fn name(self) -> &'static str {
+        match self {
+            CellKind::SramCell => "SRAM",
+            CellKind::Mux2 => "MUX2",
+            CellKind::HalfAdder => "HA",
+            CellKind::FullAdder => "FA",
+            CellKind::Inv => "INV",
+            CellKind::Buf => "BUF",
+            CellKind::Nand2 => "NAND2",
+            CellKind::Nor2 => "NOR2",
+            CellKind::And2 => "AND2",
+            CellKind::Or2 => "OR2",
+            CellKind::Xor2 => "XOR2",
+            CellKind::Xnor2 => "XNOR2",
+            CellKind::BitlineConditioner => "BL-COND",
+            CellKind::SenseAmp => "SENSE-AMP",
+            CellKind::ColumnController => "COL-CTRL",
+            CellKind::RowDecoder => "ROW-DEC",
+            CellKind::ColumnDecoder => "COL-DEC",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_indices_roundtrip() {
+        for (i, k) in CellKind::ALL.iter().enumerate() {
+            assert_eq!(k.index(), i);
+        }
+    }
+
+    #[test]
+    fn names_unique() {
+        let mut names: Vec<_> = CellKind::ALL.iter().map(|k| k.name()).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), CellKind::ALL.len());
+    }
+}

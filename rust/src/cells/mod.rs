@@ -1,0 +1,20 @@
+//! Standard-cell and memory-cell models (65 nm-like).
+//!
+//! The paper evaluates LUNA-CiM on TSMC 65 nm silicon. We do not have that
+//! PDK; instead this module provides a **parametric cell library** whose
+//! per-cell transistor counts are textbook static-CMOS values and whose
+//! area/energy/delay constants are calibrated so the paper's *aggregate*
+//! claims hold (287 µm² per LUNA unit, 3650 µm² for the 8×8 array + 4 units,
+//! 173.8 pJ/bit/access array write energy, 47.96 fJ per multiply ≈ 0.0276 %).
+//! All reproduced results are ratios over this common library, which is the
+//! substitution DESIGN.md §2 documents.
+
+mod kinds;
+mod params;
+mod report;
+pub mod tsmc65;
+
+pub use kinds::CellKind;
+pub use params::{CellLibrary, CellParams};
+pub use report::CostReport;
+pub use tsmc65::tsmc65_library;

@@ -1,0 +1,116 @@
+//! Per-cell physical parameters and the parametric cell library.
+
+use super::CellKind;
+
+/// Physical parameters of one cell kind.
+///
+/// * `transistors` — static-CMOS transistor count (what Fig 16 of the paper
+///   counts via the "TSMC 65 nm digital library as a reference").
+/// * `area_um2` — placed cell area in µm² (before routing overhead).
+/// * `energy_per_toggle_fj` — dynamic energy per *output toggle* in fJ
+///   (CV² with a per-cell effective capacitance at VDD = 1.2 V).
+/// * `energy_per_access_fj` — for periphery cells that are exercised once
+///   per array access rather than per logic toggle (sense amps, bitline
+///   conditioning, decoders). Zero for plain logic.
+/// * `leakage_nw` — static leakage power in nW at 27 °C.
+/// * `delay_ps` — characteristic propagation delay in ps (used by the
+///   event-driven simulator for Fig 14 transients).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CellParams {
+    pub transistors: u32,
+    pub area_um2: f64,
+    pub energy_per_toggle_fj: f64,
+    pub energy_per_access_fj: f64,
+    pub leakage_nw: f64,
+    pub delay_ps: f64,
+}
+
+impl CellParams {
+    /// Convenience constructor for pure-logic cells (no per-access energy).
+    pub const fn logic(
+        transistors: u32,
+        area_um2: f64,
+        energy_per_toggle_fj: f64,
+        leakage_nw: f64,
+        delay_ps: f64,
+    ) -> Self {
+        CellParams {
+            transistors,
+            area_um2,
+            energy_per_toggle_fj,
+            energy_per_access_fj: 0.0,
+            leakage_nw,
+            delay_ps,
+        }
+    }
+}
+
+/// A complete cell library: parameters for every [`CellKind`] plus global
+/// calibration knobs.
+#[derive(Debug, Clone)]
+pub struct CellLibrary {
+    /// Human-readable name (e.g. `"tsmc65-like"`).
+    pub name: String,
+    /// Supply voltage in volts (65 nm nominal: 1.2 V).
+    pub vdd: f64,
+    /// Multiplicative factor applied on top of summed cell areas to account
+    /// for routing / whitespace. Calibrated so the optimized-D&C LUNA unit
+    /// lands on the paper's 287 µm².
+    pub routing_overhead: f64,
+    /// Parameters per cell kind, indexed by [`CellKind::index`].
+    params: Vec<CellParams>,
+}
+
+impl CellLibrary {
+    /// Build a library from a parameter function.
+    pub fn from_fn(
+        name: impl Into<String>,
+        vdd: f64,
+        routing_overhead: f64,
+        f: impl Fn(CellKind) -> CellParams,
+    ) -> Self {
+        CellLibrary {
+            name: name.into(),
+            vdd,
+            routing_overhead,
+            params: CellKind::ALL.iter().map(|&k| f(k)).collect(),
+        }
+    }
+
+    /// Parameters for a cell kind.
+    pub fn params(&self, kind: CellKind) -> CellParams {
+        self.params[kind.index()]
+    }
+
+    /// Placed area of `count` instances of `kind`, µm² (no routing factor).
+    pub fn cell_area(&self, kind: CellKind, count: u64) -> f64 {
+        self.params(kind).area_um2 * count as f64
+    }
+
+    /// Apply the routing-overhead factor to a raw placed area.
+    pub fn routed_area(&self, placed_um2: f64) -> f64 {
+        placed_um2 * self.routing_overhead
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tsmc65_library;
+    use super::*;
+
+    #[test]
+    fn params_cover_all_kinds() {
+        let lib = tsmc65_library();
+        for &k in &CellKind::ALL {
+            let p = lib.params(k);
+            assert!(p.transistors > 0, "{k:?} has transistors");
+            assert!(p.area_um2 > 0.0, "{k:?} has area");
+        }
+    }
+
+    #[test]
+    fn routed_area_scales() {
+        let lib = tsmc65_library();
+        assert!(lib.routed_area(100.0) > 100.0);
+    }
+}

@@ -1,0 +1,149 @@
+//! Component-count / cost reporting shared by every multiplier config and
+//! the SRAM array model. This is what regenerates the paper's Tables I/II
+//! and the Fig 16/18 area breakdowns.
+
+use super::{CellKind, CellLibrary};
+use std::fmt;
+use std::ops::{Add, AddAssign};
+
+/// Counts of every cell kind in a design, with derived cost queries.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct CostReport {
+    counts: Vec<u64>,
+}
+
+impl CostReport {
+    /// Empty report.
+    pub fn new() -> Self {
+        CostReport { counts: vec![0; CellKind::ALL.len()] }
+    }
+
+    /// Add `n` instances of `kind`.
+    pub fn tally(&mut self, kind: CellKind, n: u64) {
+        self.counts[kind.index()] += n;
+    }
+
+    /// Build from `(kind, count)` pairs.
+    pub fn from_pairs(pairs: &[(CellKind, u64)]) -> Self {
+        let mut r = Self::new();
+        for &(k, n) in pairs {
+            r.tally(k, n);
+        }
+        r
+    }
+
+    /// Count of one kind.
+    pub fn count(&self, kind: CellKind) -> u64 {
+        self.counts[kind.index()]
+    }
+
+    /// Total number of cell instances.
+    pub fn total_cells(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Total transistor count under `lib` (the Fig 16 metric).
+    pub fn transistors(&self, lib: &CellLibrary) -> u64 {
+        CellKind::ALL
+            .iter()
+            .map(|&k| self.count(k) * lib.params(k).transistors as u64)
+            .sum()
+    }
+
+    /// Placed area (µm², no routing factor).
+    pub fn placed_area_um2(&self, lib: &CellLibrary) -> f64 {
+        CellKind::ALL.iter().map(|&k| lib.cell_area(k, self.count(k))).sum()
+    }
+
+    /// Routed area (µm², with the library's routing-overhead factor).
+    pub fn routed_area_um2(&self, lib: &CellLibrary) -> f64 {
+        lib.routed_area(self.placed_area_um2(lib))
+    }
+
+    /// Static leakage power (nW).
+    pub fn leakage_nw(&self, lib: &CellLibrary) -> f64 {
+        CellKind::ALL
+            .iter()
+            .map(|&k| self.count(k) as f64 * lib.params(k).leakage_nw)
+            .sum()
+    }
+
+    /// Per-kind breakdown of placed area — the stacked segments of Fig 16.
+    pub fn area_breakdown(&self, lib: &CellLibrary) -> Vec<(CellKind, f64)> {
+        CellKind::ALL
+            .iter()
+            .filter(|&&k| self.count(k) > 0)
+            .map(|&k| (k, lib.cell_area(k, self.count(k))))
+            .collect()
+    }
+
+    /// Non-zero `(kind, count)` pairs in stable order.
+    pub fn nonzero(&self) -> Vec<(CellKind, u64)> {
+        CellKind::ALL
+            .iter()
+            .filter(|&&k| self.count(k) > 0)
+            .map(|&k| (k, self.count(k)))
+            .collect()
+    }
+}
+
+impl Add for CostReport {
+    type Output = CostReport;
+    fn add(mut self, rhs: CostReport) -> CostReport {
+        self += rhs;
+        self
+    }
+}
+
+impl AddAssign for CostReport {
+    fn add_assign(&mut self, rhs: CostReport) {
+        for (a, b) in self.counts.iter_mut().zip(rhs.counts.iter()) {
+            *a += b;
+        }
+    }
+}
+
+impl fmt::Display for CostReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let parts: Vec<String> =
+            self.nonzero().iter().map(|(k, n)| format!("{}×{}", n, k.name())).collect();
+        write!(f, "{}", parts.join(" + "))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tsmc65_library;
+    use super::*;
+
+    #[test]
+    fn add_and_query() {
+        let mut r = CostReport::new();
+        r.tally(CellKind::SramCell, 10);
+        r.tally(CellKind::Mux2, 36);
+        assert_eq!(r.count(CellKind::SramCell), 10);
+        assert_eq!(r.total_cells(), 46);
+    }
+
+    #[test]
+    fn transistor_count_matches_by_hand() {
+        let lib = tsmc65_library();
+        let r = CostReport::from_pairs(&[(CellKind::SramCell, 2), (CellKind::FullAdder, 1)]);
+        assert_eq!(r.transistors(&lib), 2 * 6 + 28);
+    }
+
+    #[test]
+    fn sum_of_reports() {
+        let a = CostReport::from_pairs(&[(CellKind::Mux2, 3)]);
+        let b = CostReport::from_pairs(&[(CellKind::Mux2, 4), (CellKind::Inv, 1)]);
+        let s = a + b;
+        assert_eq!(s.count(CellKind::Mux2), 7);
+        assert_eq!(s.count(CellKind::Inv), 1);
+    }
+
+    #[test]
+    fn display_nonzero_only() {
+        let r = CostReport::from_pairs(&[(CellKind::Mux2, 3)]);
+        assert_eq!(format!("{r}"), "3×MUX2");
+    }
+}

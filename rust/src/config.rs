@@ -1,0 +1,215 @@
+//! Configuration system for the LUNA-CiM serving stack.
+//!
+//! All knobs live in one struct so runs are reproducible: `repro serve
+//! --config luna.conf` and every example load the same `key value` format
+//! (see [`crate::util::kv`]); CLI flags override file values. Unknown keys
+//! are rejected to catch typos.
+
+use crate::multiplier::MultiplierKind;
+use crate::util::kv::KvMap;
+use crate::Result;
+use anyhow::{bail, Context};
+use std::path::Path;
+
+/// Top-level configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Config {
+    /// Artifact directory (output of `make artifacts`).
+    pub artifacts_dir: String,
+    /// Multiplier configuration for the LUNA banks / model variant.
+    pub multiplier: MultiplierKind,
+    pub batcher: BatcherConfig,
+    pub workers: WorkerConfig,
+    pub banks: BankConfig,
+}
+
+/// Dynamic batching policy.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BatcherConfig {
+    /// Maximum requests per batch (must equal the lowered batch size —
+    /// smaller batches are padded).
+    pub max_batch: usize,
+    /// How long the batcher waits to fill a batch before flushing (µs).
+    pub max_wait_us: u64,
+    /// Bound on the pending-request queue (backpressure beyond this).
+    pub queue_depth: usize,
+}
+
+/// PJRT worker pool.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkerConfig {
+    /// Number of worker threads, each with its own PJRT client/executable.
+    pub count: usize,
+}
+
+/// LUNA bank provisioning (the simulated CiM fabric the scheduler maps
+/// MACs onto).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BankConfig {
+    /// Number of 8×8 arrays (each hosting `units_per_bank` LUNA units).
+    pub count: usize,
+    /// LUNA units per bank (the paper's maximum: 4).
+    pub units_per_bank: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            artifacts_dir: "artifacts".to_string(),
+            multiplier: MultiplierKind::DncOpt,
+            batcher: BatcherConfig::default(),
+            workers: WorkerConfig::default(),
+            banks: BankConfig::default(),
+        }
+    }
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch: 8, max_wait_us: 500, queue_depth: 1024 }
+    }
+}
+
+impl Default for WorkerConfig {
+    fn default() -> Self {
+        WorkerConfig { count: 2 }
+    }
+}
+
+impl Default for BankConfig {
+    fn default() -> Self {
+        BankConfig { count: 16, units_per_bank: 4 }
+    }
+}
+
+/// The set of recognised config keys.
+const KNOWN_KEYS: &[&str] = &[
+    "artifacts_dir",
+    "multiplier",
+    "batcher.max_batch",
+    "batcher.max_wait_us",
+    "batcher.queue_depth",
+    "workers.count",
+    "banks.count",
+    "banks.units_per_bank",
+];
+
+impl Config {
+    /// Parse from config text (`key value` lines; all keys optional).
+    pub fn from_text(text: &str) -> Result<Self> {
+        let m = KvMap::parse(text)?;
+        // typo protection
+        for (key, _) in m.render().lines().filter_map(|l| l.split_once(' ')).map(|(k, v)| (k, v)) {
+            if !KNOWN_KEYS.contains(&key) {
+                bail!("unknown config key `{key}` (known: {KNOWN_KEYS:?})");
+            }
+        }
+        let mut cfg = Config::default();
+        if let Some(v) = m.get_opt("artifacts_dir") {
+            cfg.artifacts_dir = v.to_string();
+        }
+        if let Some(v) = m.get_opt("multiplier") {
+            cfg.multiplier = MultiplierKind::parse_slug(v)
+                .with_context(|| format!("unknown multiplier `{v}`"))?;
+        }
+        if m.get_opt("batcher.max_batch").is_some() {
+            cfg.batcher.max_batch = m.get_usize("batcher.max_batch")?;
+        }
+        if m.get_opt("batcher.max_wait_us").is_some() {
+            cfg.batcher.max_wait_us = m.get_u64("batcher.max_wait_us")?;
+        }
+        if m.get_opt("batcher.queue_depth").is_some() {
+            cfg.batcher.queue_depth = m.get_usize("batcher.queue_depth")?;
+        }
+        if m.get_opt("workers.count").is_some() {
+            cfg.workers.count = m.get_usize("workers.count")?;
+        }
+        if m.get_opt("banks.count").is_some() {
+            cfg.banks.count = m.get_usize("banks.count")?;
+        }
+        if m.get_opt("banks.units_per_bank").is_some() {
+            cfg.banks.units_per_bank = m.get_usize("banks.units_per_bank")?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Load from a config file.
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading config {}", path.as_ref().display()))?;
+        Self::from_text(&text)
+    }
+
+    /// Serialize to config text.
+    pub fn to_text(&self) -> String {
+        let mut m = KvMap::new();
+        m.set("artifacts_dir", &self.artifacts_dir);
+        m.set("multiplier", self.multiplier.slug());
+        m.set("batcher.max_batch", self.batcher.max_batch);
+        m.set("batcher.max_wait_us", self.batcher.max_wait_us);
+        m.set("batcher.queue_depth", self.batcher.queue_depth);
+        m.set("workers.count", self.workers.count);
+        m.set("banks.count", self.banks.count);
+        m.set("banks.units_per_bank", self.banks.units_per_bank);
+        m.render()
+    }
+
+    /// Sanity-check invariants.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.batcher.max_batch >= 1, "max_batch must be >= 1");
+        anyhow::ensure!(
+            self.batcher.queue_depth >= self.batcher.max_batch,
+            "queue_depth < max_batch"
+        );
+        anyhow::ensure!(self.workers.count >= 1, "need at least one worker");
+        anyhow::ensure!(self.banks.count >= 1, "need at least one bank");
+        anyhow::ensure!(
+            (1..=4).contains(&self.banks.units_per_bank),
+            "an 8x8 array hosts 1..=4 LUNA units"
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        Config::default().validate().unwrap();
+    }
+
+    #[test]
+    fn text_roundtrip() {
+        let cfg = Config::default();
+        let back = Config::from_text(&cfg.to_text()).unwrap();
+        assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn partial_text_uses_defaults() {
+        let cfg = Config::from_text("multiplier approx\n").unwrap();
+        assert_eq!(cfg.multiplier, MultiplierKind::Approx);
+        assert_eq!(cfg.batcher.max_batch, BatcherConfig::default().max_batch);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        assert!(Config::from_text("multplier approx\n").is_err());
+    }
+
+    #[test]
+    fn invalid_units_rejected() {
+        assert!(Config::from_text("banks.units_per_bank 9\n").is_err());
+        let mut cfg = Config::default();
+        cfg.banks.units_per_bank = 9;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn bad_multiplier_slug_rejected() {
+        assert!(Config::from_text("multiplier warp9\n").is_err());
+    }
+}

@@ -1,0 +1,175 @@
+//! Serving metrics: latency histogram, throughput and energy counters.
+//!
+//! Lock-free on the hot path (atomics only); the histogram uses
+//! fixed log-spaced buckets so recording is a couple of atomic adds.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Log-spaced latency histogram (µs), 1 µs .. ~16 s.
+#[derive(Debug, Default)]
+pub struct LatencyHistogram {
+    /// bucket i counts latencies in [2^i, 2^{i+1}) µs.
+    buckets: [AtomicU64; 24],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl LatencyHistogram {
+    pub fn record_us(&self, us: u64) {
+        let idx = (64 - us.max(1).leading_zeros() as usize - 1).min(23);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum_us.load(Ordering::Relaxed) as f64 / n as f64
+        }
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.max_us.load(Ordering::Relaxed)
+    }
+
+    /// Approximate quantile from the bucket histogram (upper bound of the
+    /// containing bucket).
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let target = (q.clamp(0.0, 1.0) * n as f64).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return 1u64 << (i + 1);
+            }
+        }
+        self.max_us()
+    }
+}
+
+/// Aggregate serving metrics.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub latency: LatencyHistogram,
+    requests: AtomicU64,
+    batches: AtomicU64,
+    padded_slots: AtomicU64,
+    rejected: AtomicU64,
+    /// Simulated CiM energy total, in femtojoules (stored as fJ integer).
+    sim_energy_fj: AtomicU64,
+    started: Option<Instant>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics { started: Some(Instant::now()), ..Default::default() }
+    }
+
+    pub fn record_batch(&self, batch_size: usize, padded_to: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.requests.fetch_add(batch_size as u64, Ordering::Relaxed);
+        self.padded_slots.fetch_add((padded_to - batch_size) as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_rejection(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_sim_energy_fj(&self, fj: f64) {
+        self.sim_energy_fj.fetch_add(fj.round() as u64, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let requests = self.requests.load(Ordering::Relaxed);
+        let elapsed = self.started.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);
+        MetricsSnapshot {
+            requests,
+            batches: self.batches.load(Ordering::Relaxed),
+            padded_slots: self.padded_slots.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            mean_latency_us: self.latency.mean_us(),
+            p50_latency_us: self.latency.quantile_us(0.50),
+            p99_latency_us: self.latency.quantile_us(0.99),
+            max_latency_us: self.latency.max_us(),
+            throughput_rps: if elapsed > 0.0 { requests as f64 / elapsed } else { 0.0 },
+            sim_energy_fj: self.sim_energy_fj.load(Ordering::Relaxed) as f64,
+        }
+    }
+}
+
+/// Point-in-time view of the metrics.
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub batches: u64,
+    pub padded_slots: u64,
+    pub rejected: u64,
+    pub mean_latency_us: f64,
+    pub p50_latency_us: u64,
+    pub p99_latency_us: u64,
+    pub max_latency_us: u64,
+    pub throughput_rps: f64,
+    pub sim_energy_fj: f64,
+}
+
+impl MetricsSnapshot {
+    /// Mean batch occupancy (1.0 = always full batches).
+    pub fn batch_occupancy(&self) -> f64 {
+        let slots = self.requests + self.padded_slots;
+        if slots == 0 {
+            0.0
+        } else {
+            self.requests as f64 / slots as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_are_ordered() {
+        let h = LatencyHistogram::default();
+        for us in [10u64, 20, 40, 80, 160, 320, 1000, 5000] {
+            h.record_us(us);
+        }
+        assert_eq!(h.count(), 8);
+        assert!(h.quantile_us(0.5) <= h.quantile_us(0.99));
+        assert!(h.mean_us() > 0.0);
+        assert_eq!(h.max_us(), 5000);
+    }
+
+    #[test]
+    fn batch_occupancy_accounts_padding() {
+        let m = Metrics::new();
+        m.record_batch(6, 8);
+        m.record_batch(8, 8);
+        let snap = m.snapshot();
+        assert_eq!(snap.requests, 14);
+        assert_eq!(snap.padded_slots, 2);
+        assert!((snap.batch_occupancy() - 14.0 / 16.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn energy_accumulates() {
+        let m = Metrics::new();
+        m.record_sim_energy_fj(100.4);
+        m.record_sim_energy_fj(50.3);
+        assert!((m.snapshot().sim_energy_fj - 150.0).abs() <= 1.0);
+    }
+}

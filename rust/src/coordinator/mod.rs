@@ -1,0 +1,34 @@
+//! L3 coordinator: the serving runtime that turns LUNA-CiM into a system.
+//!
+//! The paper contributes a multiplier + array integration; to *use* it you
+//! need what this module provides — the part a deployment would run:
+//!
+//! * [`batcher`] — dynamic batching with a max-batch/max-wait policy
+//!   (batches are padded to the AOT-lowered batch size);
+//! * [`worker`] — a pool of OS threads, each owning its own PJRT client
+//!   and compiled executable (PJRT handles are not `Send`);
+//! * [`router`] — round-robin dispatch with in-flight accounting;
+//! * [`tiler`] — maps every 4b×4b MAC of the model onto LUNA banks
+//!   (weight-stationary scheduling) and prices the run in programming
+//!   events, cycles and femtojoules using the gate-level cost model;
+//! * [`state`] — bank programming state (which weight each unit holds);
+//! * [`metrics`] — latency/throughput/energy counters;
+//! * [`server`] — the tokio front-end tying it all together.
+
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod router;
+pub mod server;
+pub mod state;
+pub mod tiler;
+pub mod worker;
+
+pub use batcher::{Batch, Batcher};
+pub use metrics::{LatencyHistogram, Metrics, MetricsSnapshot};
+pub use request::{InferenceRequest, InferenceResponse, RequestId};
+pub use router::Router;
+pub use server::{CoordinatorServer, ServerHandle};
+pub use state::BankState;
+pub use tiler::{LayerSchedule, ModelSchedule, Tiler};
+pub use worker::{BatchJob, WorkerPool};

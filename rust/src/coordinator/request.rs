@@ -1,0 +1,48 @@
+//! Request/response types on the serving path.
+
+use std::time::Instant;
+
+/// Monotonically increasing request identifier.
+pub type RequestId = u64;
+
+/// One inference request: an 8×8 image flattened to 64 pixels in [0, 1].
+#[derive(Debug, Clone)]
+pub struct InferenceRequest {
+    pub id: RequestId,
+    pub pixels: Vec<f32>,
+    pub enqueued_at: Instant,
+}
+
+impl InferenceRequest {
+    pub fn new(id: RequestId, pixels: Vec<f32>) -> Self {
+        InferenceRequest { id, pixels, enqueued_at: Instant::now() }
+    }
+}
+
+/// The served answer.
+#[derive(Debug, Clone)]
+pub struct InferenceResponse {
+    pub id: RequestId,
+    /// Output logits (10 classes).
+    pub logits: Vec<f32>,
+    /// Argmax class.
+    pub label: usize,
+    /// Wall-clock time from enqueue to completion.
+    pub latency_us: u64,
+    /// Simulated CiM energy attributed to this request (fJ).
+    pub sim_energy_fj: f64,
+    /// Simulated CiM latency for the MAC schedule (ps).
+    pub sim_latency_ps: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_records_enqueue_time() {
+        let r = InferenceRequest::new(7, vec![0.0; 64]);
+        assert_eq!(r.id, 7);
+        assert!(r.enqueued_at.elapsed().as_secs() < 1);
+    }
+}

@@ -1,0 +1,127 @@
+//! Round-robin router over the PJRT worker pool with in-flight accounting.
+
+use super::worker::{BatchJob, WorkerPool};
+use crate::Result;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Routes batch jobs to workers. Round-robin with per-worker in-flight
+/// counters; `dispatch` prefers the next worker in rotation but skips to
+/// the least-loaded one when the rotation target is more than one job
+/// deeper than the minimum (cheap least-loaded approximation without
+/// locks).
+pub struct Router {
+    pool: WorkerPool,
+    next: AtomicUsize,
+    in_flight: Vec<Arc<AtomicU64>>,
+    dispatched: AtomicU64,
+}
+
+impl Router {
+    pub fn new(pool: WorkerPool) -> Self {
+        let in_flight = (0..pool.size()).map(|_| Arc::new(AtomicU64::new(0))).collect();
+        Router { pool, next: AtomicUsize::new(0), in_flight, dispatched: AtomicU64::new(0) }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.pool.size()
+    }
+
+    /// Pick a worker: rotation target unless it is clearly busier than the
+    /// least-loaded worker.
+    fn pick(&self) -> usize {
+        let n = self.pool.size();
+        let rot = self.next.fetch_add(1, Ordering::Relaxed) % n;
+        let (mut best, mut best_load) = (rot, self.in_flight[rot].load(Ordering::Relaxed));
+        for (i, c) in self.in_flight.iter().enumerate() {
+            let load = c.load(Ordering::Relaxed);
+            if load + 1 < best_load {
+                best = i;
+                best_load = load;
+            }
+        }
+        let _ = best_load;
+        best
+    }
+
+    /// Dispatch a job; the returned guard decrements the in-flight counter
+    /// when dropped (call after the reply resolves).
+    pub fn dispatch(&self, job: BatchJob) -> Result<InFlightGuard> {
+        let idx = self.pick();
+        self.in_flight[idx].fetch_add(1, Ordering::Relaxed);
+        self.dispatched.fetch_add(1, Ordering::Relaxed);
+        match self.pool.submit(idx, job) {
+            Ok(()) => Ok(InFlightGuard { counter: self.in_flight[idx].clone(), worker: idx }),
+            Err(e) => {
+                self.in_flight[idx].fetch_sub(1, Ordering::Relaxed);
+                Err(e)
+            }
+        }
+    }
+
+    pub fn dispatched(&self) -> u64 {
+        self.dispatched.load(Ordering::Relaxed)
+    }
+
+    pub fn in_flight(&self, worker: usize) -> u64 {
+        self.in_flight[worker].load(Ordering::Relaxed)
+    }
+
+    pub fn shutdown(self) {
+        self.pool.shutdown();
+    }
+}
+
+/// RAII in-flight token.
+pub struct InFlightGuard {
+    counter: Arc<AtomicU64>,
+    /// Which worker the job went to (metrics/tests).
+    pub worker: usize,
+}
+
+impl Drop for InFlightGuard {
+    fn drop(&mut self) {
+        self.counter.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    const ID_HLO: &str = r#"HloModule ident, entry_computation_layout={(f32[1,1]{1,0})->(f32[1,1]{1,0})}
+
+ENTRY main {
+  p0 = f32[1,1]{1,0} parameter(0)
+  ROOT t = (f32[1,1]{1,0}) tuple(p0)
+}
+"#;
+
+    fn hlo() -> PathBuf {
+        let dir = crate::util::test_dir("router");
+        let p = dir.join("id.hlo.txt");
+        std::fs::write(&p, ID_HLO).unwrap();
+        p
+    }
+
+    #[test]
+    fn round_robin_spreads_work() {
+        let router = Router::new(WorkerPool::spawn(2, hlo()).unwrap());
+        let mut hit = [false; 2];
+        for i in 0..6 {
+            let (tx, rx) = crate::util::oneshot::channel();
+            let guard = router
+                .dispatch(BatchJob { inputs: vec![i as f32], batch: 1, dim: 1, reply: tx })
+                .unwrap();
+            hit[guard.worker] = true;
+            let out = rx.recv().unwrap().unwrap();
+            assert_eq!(out[0], vec![i as f32]);
+            drop(guard);
+        }
+        assert!(hit[0] && hit[1], "both workers used");
+        assert_eq!(router.dispatched(), 6);
+        assert_eq!(router.in_flight(0) + router.in_flight(1), 0);
+        router.shutdown();
+    }
+}

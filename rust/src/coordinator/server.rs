@@ -1,0 +1,281 @@
+//! The serving front-end: accepts single requests, batches them, executes
+//! on the PJRT worker pool, prices the CiM work with the tiler, and fans
+//! per-request responses back out.
+//!
+//! Concurrency model (std threads; no async runtime in this offline
+//! image): client threads block on a oneshot for their response; a
+//! background flusher thread enforces the batching deadline; a small
+//! **persistent completion pool** receives worker replies and fans them
+//! out (a thread-per-batch design measured ~25% slower at 4 workers —
+//! EXPERIMENTS.md §Perf).
+
+use super::batcher::{Batch, Batcher};
+use super::metrics::Metrics;
+use super::request::{InferenceRequest, InferenceResponse, RequestId};
+use super::router::Router;
+use super::tiler::Tiler;
+use super::worker::{BatchJob, WorkerPool};
+use crate::config::Config;
+use crate::nn::QuantMlp;
+use crate::runtime::ArtifactStore;
+use crate::util::oneshot;
+use crate::Result;
+use anyhow::{anyhow, ensure, Context};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+type Waiter = oneshot::Sender<InferenceResponse>;
+
+struct Shared {
+    batcher: Mutex<Batcher>,
+    waiters: Mutex<HashMap<RequestId, Waiter>>,
+    tiler: Mutex<Tiler>,
+    router: Router,
+    metrics: Arc<Metrics>,
+    mlp: QuantMlp,
+    in_dim: usize,
+    out_dim: usize,
+    next_id: AtomicU64,
+    stopping: AtomicBool,
+    /// Queue feeding the persistent completion pool.
+    completions: Mutex<std::sync::mpsc::Sender<CompletionJob>>,
+}
+
+/// An in-flight batch awaiting its worker reply.
+struct CompletionJob {
+    batch: Batch,
+    rx: oneshot::Receiver<crate::Result<Vec<Vec<f32>>>>,
+    guard: super::router::InFlightGuard,
+    per_req_energy: f64,
+    sim_latency_ps: u64,
+}
+
+/// The serving coordinator. Construct with [`CoordinatorServer::start`],
+/// submit through the cloned [`ServerHandle`]s.
+pub struct CoordinatorServer {
+    shared: Arc<Shared>,
+    flusher: Option<std::thread::JoinHandle<()>>,
+    completion_pool: Vec<std::thread::JoinHandle<()>>,
+}
+
+/// Cheap cloneable submission handle. `submit` blocks the calling thread
+/// until the response arrives (drive it from multiple client threads).
+#[derive(Clone)]
+pub struct ServerHandle {
+    shared: Arc<Shared>,
+}
+
+impl CoordinatorServer {
+    /// Start the coordinator: load artifacts, spawn the worker pool and the
+    /// deadline flusher. Requires `make artifacts` to have run.
+    pub fn start(cfg: Config) -> Result<(Self, ServerHandle)> {
+        cfg.validate()?;
+        let store = ArtifactStore::new(&cfg.artifacts_dir);
+        let meta = store.manifest()?;
+        ensure!(
+            meta.batch == cfg.batcher.max_batch,
+            "config max_batch {} != lowered batch {} — artifacts and config must agree",
+            cfg.batcher.max_batch,
+            meta.batch
+        );
+        let mlp = store.load_mlp().context("loading weights")?;
+        let lib = crate::cells::tsmc65_library();
+        let tiler = Tiler::from_config(&cfg, &lib);
+        let hlo = store.mlp_hlo(cfg.multiplier);
+        let pool = WorkerPool::spawn(cfg.workers.count, hlo)?;
+        let in_dim = *meta.dims.first().unwrap();
+        let out_dim = *meta.dims.last().unwrap();
+        let (ctx, crx) = std::sync::mpsc::channel::<CompletionJob>();
+        let crx = Arc::new(Mutex::new(crx));
+        let shared = Arc::new(Shared {
+            batcher: Mutex::new(Batcher::from_config(&cfg.batcher)),
+            waiters: Mutex::new(HashMap::new()),
+            tiler: Mutex::new(tiler),
+            router: Router::new(pool),
+            metrics: Arc::new(Metrics::new()),
+            mlp,
+            in_dim,
+            out_dim,
+            next_id: AtomicU64::new(0),
+            stopping: AtomicBool::new(false),
+            completions: Mutex::new(ctx),
+        });
+        // Persistent completion pool: one thread per worker keeps the
+        // pipeline full without per-batch thread spawns.
+        let mut completion_pool = Vec::new();
+        for i in 0..cfg.workers.count {
+            let crx = crx.clone();
+            let shared2 = Arc::downgrade(&shared);
+            completion_pool.push(
+                std::thread::Builder::new()
+                    .name(format!("luna-completion-{i}"))
+                    .spawn(move || loop {
+                        let job = { crx.lock().unwrap().recv() };
+                        match job {
+                            Ok(job) => {
+                                let Some(shared) = shared2.upgrade() else { return };
+                                complete_batch(&shared, job);
+                            }
+                            Err(_) => return,
+                        }
+                    })
+                    .expect("spawn completion thread"),
+            );
+        }
+        let flusher = {
+            let weak = Arc::downgrade(&shared);
+            let period = Duration::from_micros((cfg.batcher.max_wait_us.max(50)) / 2);
+            std::thread::Builder::new()
+                .name("luna-flusher".into())
+                .spawn(move || loop {
+                    std::thread::sleep(period);
+                    let Some(shared) = weak.upgrade() else { return };
+                    if shared.stopping.load(Ordering::Relaxed) {
+                        return;
+                    }
+                    let due =
+                        { shared.batcher.lock().unwrap().flush_due(std::time::Instant::now()) };
+                    if let Some(batch) = due {
+                        dispatch_batch(&shared, batch);
+                    }
+                })
+                .expect("spawn flusher")
+        };
+        let handle = ServerHandle { shared: shared.clone() };
+        Ok((CoordinatorServer { shared, flusher: Some(flusher), completion_pool }, handle))
+    }
+
+    pub fn metrics(&self) -> Arc<Metrics> {
+        self.shared.metrics.clone()
+    }
+
+    /// Flush pending requests, drain the completion pool, stop the flusher.
+    pub fn shutdown(mut self) {
+        self.shared.stopping.store(true, Ordering::Relaxed);
+        let batches = { self.shared.batcher.lock().unwrap().flush_all() };
+        for b in batches {
+            dispatch_batch(&self.shared, b);
+        }
+        if let Some(f) = self.flusher.take() {
+            let _ = f.join();
+        }
+        // Closing the channel ends the completion threads once drained.
+        {
+            let (dead_tx, _) = std::sync::mpsc::channel();
+            *self.shared.completions.lock().unwrap() = dead_tx;
+        }
+        let pool = std::mem::take(&mut self.completion_pool);
+        drop(self.shared);
+        for h in pool {
+            let _ = h.join();
+        }
+    }
+}
+
+impl ServerHandle {
+    /// Submit one image and block until the batched execution completes.
+    pub fn submit(&self, pixels: Vec<f32>) -> Result<InferenceResponse> {
+        ensure!(pixels.len() == self.shared.in_dim, "expected {} pixels", self.shared.in_dim);
+        let id = self.shared.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = oneshot::channel();
+        {
+            self.shared.waiters.lock().unwrap().insert(id, tx);
+        }
+        let maybe_batch = {
+            let mut batcher = self.shared.batcher.lock().unwrap();
+            match batcher.push(InferenceRequest::new(id, pixels)) {
+                Ok(b) => b,
+                Err(_rejected) => {
+                    self.shared.waiters.lock().unwrap().remove(&id);
+                    self.shared.metrics.record_rejection();
+                    return Err(anyhow!("queue full — backpressure"));
+                }
+            }
+        };
+        if let Some(batch) = maybe_batch {
+            dispatch_batch(&self.shared, batch);
+        }
+        rx.recv().ok_or_else(|| anyhow!("request {id} dropped"))
+    }
+
+    pub fn metrics(&self) -> Arc<Metrics> {
+        self.shared.metrics.clone()
+    }
+}
+
+/// Price the batch on the CiM fabric, run it on a PJRT worker, fan
+/// responses back out to the per-request waiters.
+fn dispatch_batch(shared: &Arc<Shared>, batch: Batch) {
+    let n = batch.requests.len();
+    if n == 0 {
+        return;
+    }
+    shared.metrics.record_batch(n, batch.padded_to);
+    // CiM cost model: schedule this batch on the LUNA fabric.
+    let schedule = {
+        let mut tiler = shared.tiler.lock().unwrap();
+        tiler.schedule(&shared.mlp, n)
+    };
+    let per_req_energy = schedule.total_energy_fj / n as f64;
+    let sim_latency_ps = schedule.latency_ps;
+    shared.metrics.record_sim_energy_fj(schedule.total_energy_fj);
+
+    let inputs = batch.flatten_inputs(shared.in_dim);
+    let (tx, rx) = oneshot::channel();
+    let job = BatchJob { inputs, batch: batch.padded_to, dim: shared.in_dim, reply: tx };
+    let guard = match shared.router.dispatch(job) {
+        Ok(g) => g,
+        Err(e) => {
+            fail_batch(shared, &batch, &format!("{e:#}"));
+            return;
+        }
+    };
+    let job = CompletionJob { batch, rx, guard, per_req_energy, sim_latency_ps };
+    let send_result = { shared.completions.lock().unwrap().send(job) };
+    if let Err(std::sync::mpsc::SendError(job)) = send_result {
+        // Pool already shut down (server tear-down path): complete inline.
+        complete_batch(shared, job);
+    }
+}
+
+/// Receive one worker reply and fan it out to the per-request waiters.
+fn complete_batch(shared: &Arc<Shared>, job: CompletionJob) {
+    let CompletionJob { batch, rx, guard, per_req_energy, sim_latency_ps } = job;
+    let _guard = guard;
+    match rx.recv() {
+        Some(Ok(outputs)) => {
+            let logits_all = &outputs[0];
+            let out_dim = shared.out_dim;
+            let mut waiters = shared.waiters.lock().unwrap();
+            for (i, req) in batch.requests.iter().enumerate() {
+                let logits = logits_all[i * out_dim..(i + 1) * out_dim].to_vec();
+                let label = crate::nn::argmax(&logits);
+                let latency_us = req.enqueued_at.elapsed().as_micros() as u64;
+                shared.metrics.latency.record_us(latency_us);
+                if let Some(w) = waiters.remove(&req.id) {
+                    let _ = w.send(InferenceResponse {
+                        id: req.id,
+                        logits,
+                        label,
+                        latency_us,
+                        sim_energy_fj: per_req_energy,
+                        sim_latency_ps,
+                    });
+                }
+            }
+        }
+        Some(Err(e)) => fail_batch(shared, &batch, &format!("{e:#}")),
+        None => fail_batch(shared, &batch, "worker dropped reply"),
+    }
+}
+
+fn fail_batch(shared: &Arc<Shared>, batch: &Batch, why: &str) {
+    // Drop the waiters; submit() surfaces this as "request dropped".
+    let mut waiters = shared.waiters.lock().unwrap();
+    for req in &batch.requests {
+        waiters.remove(&req.id);
+    }
+    eprintln!("batch of {} failed: {why}", batch.requests.len());
+}

@@ -1,0 +1,107 @@
+//! Bank programming state: which weight code each LUNA unit holds.
+
+
+/// Address of one LUNA unit in the fabric.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct UnitAddr {
+    pub bank: usize,
+    pub unit: usize,
+}
+
+/// Tracks the weight code programmed into every unit of the fabric, and
+/// counts (re)programming events — the coordinator's weight-stationary
+/// bookkeeping.
+#[derive(Debug, Clone)]
+pub struct BankState {
+    banks: usize,
+    units_per_bank: usize,
+    /// `None` = never programmed.
+    codes: Vec<Option<u8>>,
+    programs: u64,
+    hits: u64,
+}
+
+impl BankState {
+    pub fn new(banks: usize, units_per_bank: usize) -> Self {
+        assert!(banks >= 1 && units_per_bank >= 1);
+        BankState {
+            banks,
+            units_per_bank,
+            codes: vec![None; banks * units_per_bank],
+            programs: 0,
+            hits: 0,
+        }
+    }
+
+    pub fn total_units(&self) -> usize {
+        self.banks * self.units_per_bank
+    }
+
+    /// Linear unit index -> address.
+    pub fn addr(&self, linear: usize) -> UnitAddr {
+        assert!(linear < self.total_units());
+        UnitAddr { bank: linear / self.units_per_bank, unit: linear % self.units_per_bank }
+    }
+
+    /// Program unit `linear` with `code`. Returns `true` if an actual
+    /// (re)program happened, `false` on a weight-stationary hit.
+    pub fn program(&mut self, linear: usize, code: u8) -> bool {
+        assert!(code < 16);
+        let slot = &mut self.codes[linear];
+        if *slot == Some(code) {
+            self.hits += 1;
+            false
+        } else {
+            *slot = Some(code);
+            self.programs += 1;
+            true
+        }
+    }
+
+    pub fn programmed_code(&self, linear: usize) -> Option<u8> {
+        self.codes[linear]
+    }
+
+    /// Total programming events so far.
+    pub fn programs(&self) -> u64 {
+        self.programs
+    }
+
+    /// Weight-stationary hits (programs avoided).
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn programming_counts_distinct_codes() {
+        let mut s = BankState::new(2, 4);
+        assert!(s.program(0, 5));
+        assert!(!s.program(0, 5)); // stationary hit
+        assert!(s.program(0, 6));
+        assert_eq!(s.programs(), 2);
+        assert_eq!(s.hits(), 1);
+    }
+
+    #[test]
+    fn addresses_are_bijective() {
+        let s = BankState::new(3, 4);
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..s.total_units() {
+            assert!(seen.insert(s.addr(i)));
+        }
+        assert_eq!(seen.len(), 12);
+        assert_eq!(s.addr(5), UnitAddr { bank: 1, unit: 1 });
+    }
+
+    #[test]
+    #[should_panic]
+    fn code_out_of_range_panics() {
+        let mut s = BankState::new(1, 1);
+        s.program(0, 16);
+    }
+}

@@ -1,0 +1,248 @@
+//! Weight-stationary tiling of quantized matmuls onto the LUNA fabric.
+//!
+//! Every layer's `out×in` weight matrix is a grid of 4-bit codes; each
+//! code is one LUT programming. The tiler assigns codes to units in
+//! round-robin **waves** (`⌈elements / units⌉` of them): during a wave
+//! every unit is programmed once (skipped on a weight-stationary hit) and
+//! then performs one multiply per batch sample. Costs are priced with the
+//! gate-level [`UnitCosts`] calibration — measured switching energy and
+//! critical-path settle time, not hand-waved constants.
+
+use super::state::BankState;
+use crate::cells::CellLibrary;
+use crate::luna::LunaUnit;
+use crate::multiplier::MultiplierKind;
+use crate::nn::QuantMlp;
+
+/// Measured per-operation costs of one LUNA unit configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct UnitCosts {
+    pub kind: MultiplierKind,
+    /// Average dynamic energy per multiply (fJ), measured by running the
+    /// gate-level model over a pseudo-random operand stream.
+    pub mac_energy_fj: f64,
+    /// Energy of one LUT (re)programming (fJ): bits × write energy.
+    pub program_energy_fj: f64,
+    /// Critical-path settle time of one multiply (ps), from the
+    /// event-driven simulator (worst observed over the operand stream).
+    pub cycle_ps: u64,
+    /// LUT bits written per programming.
+    pub lut_bits: u64,
+}
+
+impl UnitCosts {
+    /// Calibrate by direct measurement of the gate-level model.
+    pub fn measure(kind: MultiplierKind, lib: &CellLibrary) -> Self {
+        let mut unit = LunaUnit::new(kind);
+        let lut_bits = kind.program_image(0).expect("hardware kind").len() as u64;
+        // Deterministic operand stream with good toggle coverage.
+        let ws = [6u8, 9, 3, 15, 1, 12, 7, 10];
+        let ys = [10u8, 5, 11, 0, 3, 12, 15, 6, 1, 9, 4, 13];
+        for &w in &ws {
+            unit.program(lib, w);
+            for &y in &ys {
+                let _ = unit.multiply(lib, y);
+            }
+        }
+        let mac_energy_fj = unit.avg_multiply_energy_fj();
+
+        // Critical path from the event-driven sim over the same stream.
+        let netlist = kind.netlist().expect("hardware kind");
+        let mut sim = crate::logic::EventSim::new(&netlist);
+        sim.program(&kind.program_image(ws[0]).unwrap());
+        let mut worst = 0u64;
+        for &y in &ys {
+            let dt = sim.apply(&crate::logic::to_bits(y as u64, 4));
+            worst = worst.max(dt);
+        }
+        let write_fj = crate::cells::tsmc65::PAPER_WRITE_ENERGY_PJ_PER_BIT * 1000.0;
+        UnitCosts {
+            kind,
+            mac_energy_fj,
+            program_energy_fj: lut_bits as f64 * write_fj,
+            cycle_ps: worst.max(1),
+            lut_bits,
+        }
+    }
+}
+
+/// Schedule and cost of one layer for one batch.
+#[derive(Debug, Clone)]
+pub struct LayerSchedule {
+    pub layer: usize,
+    pub elements: usize,
+    pub waves: usize,
+    pub macs: u64,
+    pub programs: u64,
+    pub stationary_hits: u64,
+    pub cycles: u64,
+    pub energy_fj: f64,
+}
+
+/// Whole-model schedule (per batch).
+#[derive(Debug, Clone)]
+pub struct ModelSchedule {
+    pub layers: Vec<LayerSchedule>,
+    pub total_macs: u64,
+    pub total_programs: u64,
+    pub total_cycles: u64,
+    pub total_energy_fj: f64,
+    pub latency_ps: u64,
+}
+
+/// The tiler: owns fabric state and unit cost calibration.
+#[derive(Debug, Clone)]
+pub struct Tiler {
+    state: BankState,
+    costs: UnitCosts,
+}
+
+impl Tiler {
+    pub fn new(banks: usize, units_per_bank: usize, costs: UnitCosts) -> Self {
+        Tiler { state: BankState::new(banks, units_per_bank), costs }
+    }
+
+    pub fn from_config(cfg: &crate::config::Config, lib: &CellLibrary) -> Self {
+        // IDEAL has no hardware: price it as the optimized D&C unit (the
+        // exact configuration the paper builds).
+        let kind = if cfg.multiplier == MultiplierKind::Ideal {
+            MultiplierKind::DncOpt
+        } else {
+            cfg.multiplier
+        };
+        Tiler::new(cfg.banks.count, cfg.banks.units_per_bank, UnitCosts::measure(kind, lib))
+    }
+
+    pub fn costs(&self) -> UnitCosts {
+        self.costs
+    }
+
+    pub fn state(&self) -> &BankState {
+        &self.state
+    }
+
+    /// Schedule one batched forward pass of `mlp` (batch size `batch`).
+    /// Mutates fabric state (weight-stationary across calls: a second
+    /// identical batch reprograms nothing).
+    pub fn schedule(&mut self, mlp: &QuantMlp, batch: usize) -> ModelSchedule {
+        assert!(batch >= 1);
+        let units = self.state.total_units();
+        let mut layers = Vec::with_capacity(mlp.layers.len());
+        // Deterministic placement cursor: layers occupy consecutive unit
+        // ranges (mod capacity), so a fabric large enough for the whole
+        // model is fully weight-stationary across batches.
+        let mut cursor = 0usize;
+        for (li, layer) in mlp.layers.iter().enumerate() {
+            let elements = layer.wq.len();
+            let waves = elements.div_ceil(units);
+            let mut programs = 0u64;
+            let mut hits = 0u64;
+            for (e, &code) in layer.wq.iter().enumerate() {
+                let unit = (cursor + e) % units;
+                if self.state.program(unit, code) {
+                    programs += 1;
+                } else {
+                    hits += 1;
+                }
+            }
+            cursor = (cursor + elements) % units;
+            let macs = elements as u64 * batch as u64;
+            // Each wave: program (pipelined with compute) then one multiply
+            // per sample on every active unit.
+            let cycles = waves as u64 * batch as u64;
+            let energy_fj = programs as f64 * self.costs.program_energy_fj
+                + macs as f64 * self.costs.mac_energy_fj;
+            layers.push(LayerSchedule {
+                layer: li,
+                elements,
+                waves,
+                macs,
+                programs,
+                stationary_hits: hits,
+                cycles,
+                energy_fj,
+            });
+        }
+        let total_macs = layers.iter().map(|l| l.macs).sum();
+        let total_programs = layers.iter().map(|l| l.programs).sum();
+        let total_cycles: u64 = layers.iter().map(|l| l.cycles).sum();
+        let total_energy_fj = layers.iter().map(|l| l.energy_fj).sum();
+        ModelSchedule {
+            layers,
+            total_macs,
+            total_programs,
+            total_cycles,
+            latency_ps: total_cycles * self.costs.cycle_ps,
+            total_energy_fj,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cells::tsmc65_library;
+
+    fn tiler(units: usize) -> Tiler {
+        let lib = tsmc65_library();
+        Tiler::new(units, 1, UnitCosts::measure(MultiplierKind::DncOpt, &lib))
+    }
+
+    #[test]
+    fn unit_costs_are_sane() {
+        let lib = tsmc65_library();
+        let c = UnitCosts::measure(MultiplierKind::DncOpt, &lib);
+        assert!(c.mac_energy_fj > 1.0 && c.mac_energy_fj < 500.0, "{}", c.mac_energy_fj);
+        assert_eq!(c.lut_bits, 10);
+        assert!(c.cycle_ps > 50 && c.cycle_ps < 2000, "{}", c.cycle_ps);
+        // programming is orders of magnitude costlier than a multiply —
+        // the reason weight-stationary scheduling matters.
+        assert!(c.program_energy_fj > 100.0 * c.mac_energy_fj);
+    }
+
+    #[test]
+    fn schedule_covers_all_macs() {
+        let mlp = QuantMlp::random_for_study(5);
+        let mut t = tiler(16);
+        let s = t.schedule(&mlp, 4);
+        assert_eq!(s.total_macs, mlp.macs() * 4);
+        for l in &s.layers {
+            assert_eq!(l.programs + l.stationary_hits, l.elements as u64);
+            assert!(l.cycles >= (l.macs.div_ceil(16)));
+        }
+    }
+
+    #[test]
+    fn second_identical_batch_is_fully_stationary() {
+        let mlp = QuantMlp::random_for_study(6);
+        // fabric big enough to hold every element simultaneously
+        let total_elems: usize = mlp.layers.iter().map(|l| l.wq.len()).sum();
+        let mut t = tiler(total_elems);
+        let s1 = t.schedule(&mlp, 2);
+        let s2 = t.schedule(&mlp, 2);
+        assert!(s1.total_programs > 0);
+        assert_eq!(s2.total_programs, 0, "all hits on the second pass");
+        assert!(s2.total_energy_fj < s1.total_energy_fj);
+    }
+
+    #[test]
+    fn small_fabric_needs_more_waves() {
+        let mlp = QuantMlp::random_for_study(7);
+        let mut small = tiler(4);
+        let mut big = tiler(64);
+        let ss = small.schedule(&mlp, 1);
+        let sb = big.schedule(&mlp, 1);
+        assert!(ss.total_cycles > sb.total_cycles);
+        assert_eq!(ss.total_macs, sb.total_macs);
+    }
+
+    #[test]
+    fn approx_unit_is_cheaper_per_mac_than_dnc_opt() {
+        let lib = tsmc65_library();
+        let opt = UnitCosts::measure(MultiplierKind::DncOpt, &lib);
+        let approx = UnitCosts::measure(MultiplierKind::Approx, &lib);
+        // Fig 9 halves the mux count and drops the adders entirely.
+        assert!(approx.mac_energy_fj < opt.mac_energy_fj);
+        assert!(approx.cycle_ps <= opt.cycle_ps);
+    }
+}

@@ -1,0 +1,152 @@
+//! PJRT worker pool.
+//!
+//! PJRT handles are not `Send`, so each worker is an OS thread that builds
+//! its **own** client and compiles the artifact locally, then serves batch
+//! jobs from an mpsc queue. Replies travel over in-tree oneshot channels
+//! ([`crate::util::oneshot`]); the submitting client thread blocks on the
+//! receiver — the concurrency model of this std-thread coordinator.
+
+use crate::runtime::PjrtRuntime;
+use crate::util::oneshot;
+use crate::Result;
+use anyhow::{anyhow, ensure};
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+/// One unit of work: an already-padded batch.
+pub struct BatchJob {
+    /// Row-major `batch × dim` inputs.
+    pub inputs: Vec<f32>,
+    pub batch: usize,
+    pub dim: usize,
+    /// Reply channel: every output tuple element, flattened.
+    pub reply: oneshot::Sender<Result<Vec<Vec<f32>>>>,
+}
+
+/// A pool of PJRT worker threads.
+pub struct WorkerPool {
+    senders: Vec<mpsc::Sender<BatchJob>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `count` workers, each compiling the HLO artifact at `hlo_path`.
+    /// Blocks until every worker reports successful compilation (or fails
+    /// fast with the first error).
+    pub fn spawn(count: usize, hlo_path: PathBuf) -> Result<Self> {
+        ensure!(count >= 1, "need at least one worker");
+        let mut senders = Vec::with_capacity(count);
+        let mut handles = Vec::with_capacity(count);
+        let (ready_tx, ready_rx) = mpsc::channel::<std::result::Result<(), String>>();
+        for worker_id in 0..count {
+            let (tx, rx) = mpsc::channel::<BatchJob>();
+            let path = hlo_path.clone();
+            let ready = ready_tx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("pjrt-worker-{worker_id}"))
+                .spawn(move || worker_main(path, rx, ready))
+                .expect("spawn worker thread");
+            senders.push(tx);
+            handles.push(handle);
+        }
+        drop(ready_tx);
+        for _ in 0..count {
+            match ready_rx.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(msg)) => return Err(anyhow!("worker failed to initialize: {msg}")),
+                Err(_) => return Err(anyhow!("worker exited before reporting readiness")),
+            }
+        }
+        Ok(WorkerPool { senders, handles })
+    }
+
+    pub fn size(&self) -> usize {
+        self.senders.len()
+    }
+
+    /// Submit a job to worker `idx`.
+    pub fn submit(&self, idx: usize, job: BatchJob) -> Result<()> {
+        self.senders[idx % self.senders.len()]
+            .send(job)
+            .map_err(|_| anyhow!("worker {idx} has shut down"))
+    }
+
+    /// Drop the queues and join every worker.
+    pub fn shutdown(self) {
+        drop(self.senders);
+        for h in self.handles {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_main(
+    path: PathBuf,
+    rx: mpsc::Receiver<BatchJob>,
+    ready: mpsc::Sender<std::result::Result<(), String>>,
+) {
+    let model = match PjrtRuntime::cpu().and_then(|rt| rt.load_hlo_text(&path)) {
+        Ok(m) => {
+            let _ = ready.send(Ok(()));
+            m
+        }
+        Err(e) => {
+            let _ = ready.send(Err(format!("{e:#}")));
+            return;
+        }
+    };
+    while let Ok(job) = rx.recv() {
+        let res = model.run_f32(&[(&job.inputs, &[job.batch as i64, job.dim as i64])]);
+        let _ = job.reply.send(res);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOUBLE_HLO: &str = r#"HloModule double, entry_computation_layout={(f32[2,3]{1,0})->(f32[2,3]{1,0})}
+
+ENTRY main {
+  p0 = f32[2,3]{1,0} parameter(0)
+  add = f32[2,3]{1,0} add(p0, p0)
+  ROOT t = (f32[2,3]{1,0}) tuple(add)
+}
+"#;
+
+    fn hlo_file(tag: &str) -> PathBuf {
+        let dir = crate::util::test_dir(tag);
+        let path = dir.join("double.hlo.txt");
+        std::fs::write(&path, DOUBLE_HLO).unwrap();
+        path
+    }
+
+    #[test]
+    fn pool_executes_jobs_on_all_workers() {
+        let pool = WorkerPool::spawn(2, hlo_file("pool")).unwrap();
+        for i in 0..4 {
+            let (tx, rx) = oneshot::channel();
+            let inputs: Vec<f32> = (0..6).map(|j| (i * 6 + j) as f32).collect();
+            pool.submit(i, BatchJob { inputs: inputs.clone(), batch: 2, dim: 3, reply: tx })
+                .unwrap();
+            let out = rx.recv().unwrap().unwrap();
+            let expect: Vec<f32> = inputs.iter().map(|v| v * 2.0).collect();
+            assert_eq!(out[0], expect);
+        }
+        pool.shutdown();
+    }
+
+    #[test]
+    fn bad_artifact_fails_fast() {
+        let dir = crate::util::test_dir("badhlo");
+        let path = dir.join("broken.hlo.txt");
+        std::fs::write(&path, "not hlo at all").unwrap();
+        assert!(WorkerPool::spawn(1, path).is_err());
+    }
+
+    #[test]
+    fn missing_artifact_fails_fast() {
+        assert!(WorkerPool::spawn(1, PathBuf::from("/no/such/file.hlo.txt")).is_err());
+    }
+}

@@ -1,0 +1,48 @@
+//! # LUNA-CIM — Lookup-Table based Programmable Neural Processing in Memory
+//!
+//! Full-system reproduction of the LUNA-CIM paper (Dehghanzadeh, Chatterjee,
+//! Bhunia, 2023). The paper proposes LUT-based 4-bit multiplication inside
+//! SRAM arrays using a divide-and-conquer (D&C) decomposition, plus two
+//! approximate variants. This crate provides:
+//!
+//! * the **hardware substrate** the paper evaluates on (gate-level netlists,
+//!   an event-driven logic simulator, a calibrated 65 nm-like standard-cell
+//!   library, and an SRAM-array cost model) — see [`logic`], [`cells`],
+//!   [`sram`];
+//! * the **paper's contribution**: all five LUT-multiplier configurations
+//!   (traditional, D&C, optimized D&C, ApproxD&C, ApproxD&C 2) as both
+//!   behavioural models and structural netlists, generalized to arbitrary
+//!   even bit-widths — see [`multiplier`];
+//! * the **LUNA-CiM unit/bank abstraction** (SRAM array + multiplier +
+//!   weight-programming protocol) — see [`luna`];
+//! * the **analysis suite** regenerating every figure of the paper's
+//!   evaluation (probability, Hamming distance, error maps, NN MAE) — see
+//!   [`analysis`];
+//! * a **quantized neural-network substrate** (bit-accurate functional model
+//!   cross-checked against the AOT-compiled JAX/Pallas artifacts) — see
+//!   [`nn`];
+//! * the **serving coordinator**: request queue, dynamic batcher, worker
+//!   pool over PJRT executables, and the bank scheduler that maps matmuls
+//!   onto LUNA units with energy/latency accounting — see [`coordinator`];
+//! * the **PJRT runtime** that loads the HLO-text artifacts produced by
+//!   `python/compile/aot.py` — see [`runtime`];
+//! * [`report`] — text/CSV regenerators for every table and figure.
+//!
+//! Python (JAX + Pallas) runs only at build time (`make artifacts`); the
+//! request path is pure Rust + PJRT.
+
+pub mod analysis;
+pub mod cells;
+pub mod config;
+pub mod coordinator;
+pub mod logic;
+pub mod luna;
+pub mod multiplier;
+pub mod nn;
+pub mod report;
+pub mod runtime;
+pub mod sram;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

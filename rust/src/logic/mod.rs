@@ -1,0 +1,46 @@
+//! Gate-level logic substrate.
+//!
+//! The paper evaluates its multiplier configurations with SPICE on TSMC
+//! 65 nm; this module is the substitute substrate (DESIGN.md §2): netlists
+//! built from primitive gates with composite-cell tagging (HA/FA/MUX2 are
+//! counted the way the paper counts them), a steady-state evaluator with
+//! switching-activity accounting (dynamic energy), and an event-driven
+//! simulator with per-cell delays that produces the Fig 14-style transient
+//! waveforms.
+
+mod event_sim;
+mod netlist;
+mod stepper;
+mod waveform;
+
+pub use event_sim::{EventSim, SimStats};
+pub use netlist::{Bus, DelayModel, Gate, GateKind, NetId, Netlist};
+pub use stepper::{StepResult, Stepper};
+pub use waveform::{BusTrace, Waveform};
+
+/// Convert a `u64` value into `width` little-endian bits.
+pub fn to_bits(value: u64, width: usize) -> Vec<bool> {
+    (0..width).map(|i| (value >> i) & 1 == 1).collect()
+}
+
+/// Convert little-endian bits back into a `u64`.
+pub fn from_bits(bits: &[bool]) -> u64 {
+    bits.iter().enumerate().fold(0u64, |acc, (i, &b)| acc | ((b as u64) << i))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bit_roundtrip() {
+        for v in [0u64, 1, 5, 0b1010, 255, 0xdead] {
+            assert_eq!(from_bits(&to_bits(v, 16)), v & 0xffff);
+        }
+    }
+
+    #[test]
+    fn to_bits_is_little_endian() {
+        assert_eq!(to_bits(0b01, 2), vec![true, false]);
+    }
+}

@@ -1,0 +1,501 @@
+//! Netlist representation and builder.
+//!
+//! A [`Netlist`] is a DAG of single-output gates; the gate at index `i`
+//! drives net `NetId(i)`. Construction order is topological by definition
+//! (a gate can only reference already-created nets), which keeps both the
+//! steady-state evaluator and the cost accounting simple and fast.
+//!
+//! Composite cells (half adders, full adders, 2:1 muxes) are built from
+//! primitives but **tagged** with a `(CellKind, instance)` pair so that
+//! [`Netlist::cost_report`] counts them exactly the way the paper's tables
+//! count components ("3 × 1b HA", "36 × 2:1 1b Mux", …).
+
+use crate::cells::{CellKind, CostReport};
+
+/// Identifier of a net (== index of its driving gate).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NetId(pub u32);
+
+impl NetId {
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// A bundle of nets forming a little-endian bus.
+pub type Bus = Vec<NetId>;
+
+/// Primitive gate kinds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GateKind {
+    /// External input bit (value applied per stimulus).
+    Input,
+    /// Programmable SRAM bit (value applied when the LUT is programmed).
+    SramBit,
+    /// Constant driver.
+    Const(bool),
+    Buf,
+    Not,
+    And2,
+    Or2,
+    Nand2,
+    Nor2,
+    Xor2,
+    Xnor2,
+    /// 2:1 mux: `ins = [a, b, sel]`, output `sel ? b : a`.
+    Mux2,
+}
+
+impl GateKind {
+    /// Number of input nets.
+    pub fn arity(self) -> usize {
+        match self {
+            GateKind::Input | GateKind::SramBit | GateKind::Const(_) => 0,
+            GateKind::Buf | GateKind::Not => 1,
+            GateKind::Mux2 => 3,
+            _ => 2,
+        }
+    }
+
+    /// The library cell this primitive corresponds to, for per-toggle
+    /// energy accounting (composite tags are used for *area/count*
+    /// accounting instead). `None` for inputs/constants.
+    pub fn primitive_cell(self) -> Option<CellKind> {
+        match self {
+            GateKind::Input | GateKind::Const(_) => None,
+            GateKind::SramBit => Some(CellKind::SramCell),
+            GateKind::Buf => Some(CellKind::Buf),
+            GateKind::Not => Some(CellKind::Inv),
+            GateKind::And2 => Some(CellKind::And2),
+            GateKind::Or2 => Some(CellKind::Or2),
+            GateKind::Nand2 => Some(CellKind::Nand2),
+            GateKind::Nor2 => Some(CellKind::Nor2),
+            GateKind::Xor2 => Some(CellKind::Xor2),
+            GateKind::Xnor2 => Some(CellKind::Xnor2),
+            GateKind::Mux2 => Some(CellKind::Mux2),
+        }
+    }
+}
+
+/// One gate. `cell` is the composite-cell tag used for component counting.
+#[derive(Debug, Clone)]
+pub struct Gate {
+    pub kind: GateKind,
+    pub ins: [NetId; 3],
+    pub nin: u8,
+    /// Composite-cell tag: (kind, instance id) — e.g. all five gates of a
+    /// full adder share one `(FullAdder, 7)` tag.
+    pub cell: Option<(CellKind, u32)>,
+    /// Propagation delay in picoseconds (event-driven sim).
+    pub delay_ps: u64,
+}
+
+/// Per-primitive propagation delays (ps). The default matches the
+/// calibrated 65 nm-like library in [`crate::cells::tsmc65_library`].
+#[derive(Debug, Clone)]
+pub struct DelayModel {
+    pub buf_ps: u64,
+    pub not_ps: u64,
+    pub and2_ps: u64,
+    pub or2_ps: u64,
+    pub nand2_ps: u64,
+    pub nor2_ps: u64,
+    pub xor2_ps: u64,
+    pub xnor2_ps: u64,
+    pub mux2_ps: u64,
+    /// SRAM read-out delay (bit valid after wordline fires).
+    pub sram_ps: u64,
+}
+
+impl Default for DelayModel {
+    fn default() -> Self {
+        DelayModel {
+            buf_ps: 28,
+            not_ps: 15,
+            and2_ps: 32,
+            or2_ps: 34,
+            nand2_ps: 20,
+            nor2_ps: 22,
+            xor2_ps: 36,
+            xnor2_ps: 36,
+            mux2_ps: 40,
+            sram_ps: 120,
+        }
+    }
+}
+
+impl DelayModel {
+    fn for_kind(&self, kind: GateKind) -> u64 {
+        match kind {
+            GateKind::Input | GateKind::Const(_) => 0,
+            GateKind::SramBit => self.sram_ps,
+            GateKind::Buf => self.buf_ps,
+            GateKind::Not => self.not_ps,
+            GateKind::And2 => self.and2_ps,
+            GateKind::Or2 => self.or2_ps,
+            GateKind::Nand2 => self.nand2_ps,
+            GateKind::Nor2 => self.nor2_ps,
+            GateKind::Xor2 => self.xor2_ps,
+            GateKind::Xnor2 => self.xnor2_ps,
+            GateKind::Mux2 => self.mux2_ps,
+        }
+    }
+}
+
+/// A combinational netlist with named input/output buses and programmable
+/// SRAM bits. Also the builder: gates are appended via the `and2`, `mux2`,
+/// `half_adder`, … methods.
+#[derive(Debug, Clone)]
+pub struct Netlist {
+    pub gates: Vec<Gate>,
+    /// Ordered external input nets (stimulus order).
+    pub inputs: Vec<NetId>,
+    /// Ordered programmable SRAM bits (programming order).
+    pub sram_bits: Vec<NetId>,
+    /// Named input buses (little-endian).
+    pub in_buses: Vec<(String, Bus)>,
+    /// Named output buses (little-endian).
+    pub out_buses: Vec<(String, Bus)>,
+    delays: DelayModel,
+    next_inst: [u32; CellKind::ALL.len()],
+    current_cell: Option<(CellKind, u32)>,
+    const0: Option<NetId>,
+    const1: Option<NetId>,
+}
+
+impl Default for Netlist {
+    fn default() -> Self {
+        Self::new(DelayModel::default())
+    }
+}
+
+impl Netlist {
+    pub fn new(delays: DelayModel) -> Self {
+        Netlist {
+            gates: Vec::new(),
+            inputs: Vec::new(),
+            sram_bits: Vec::new(),
+            in_buses: Vec::new(),
+            out_buses: Vec::new(),
+            delays,
+            next_inst: [0; CellKind::ALL.len()],
+            current_cell: None,
+            const0: None,
+            const1: None,
+        }
+    }
+
+    pub fn num_nets(&self) -> usize {
+        self.gates.len()
+    }
+
+    fn push(&mut self, kind: GateKind, ins: &[NetId]) -> NetId {
+        debug_assert_eq!(ins.len(), kind.arity());
+        for &i in ins {
+            debug_assert!(i.index() < self.gates.len(), "input net must already exist");
+        }
+        let mut arr = [NetId(0); 3];
+        arr[..ins.len()].copy_from_slice(ins);
+        let id = NetId(self.gates.len() as u32);
+        self.gates.push(Gate {
+            kind,
+            ins: arr,
+            nin: ins.len() as u8,
+            cell: self.current_cell,
+            delay_ps: self.delays.for_kind(kind),
+        });
+        id
+    }
+
+    /// Begin a composite cell: all gates created until [`Netlist::end_cell`]
+    /// share one `(kind, instance)` tag. Returns the instance id.
+    pub fn begin_cell(&mut self, kind: CellKind) -> u32 {
+        assert!(self.current_cell.is_none(), "composite cells do not nest");
+        let inst = self.next_inst[kind.index()];
+        self.next_inst[kind.index()] += 1;
+        self.current_cell = Some((kind, inst));
+        inst
+    }
+
+    pub fn end_cell(&mut self) {
+        self.current_cell = None;
+    }
+
+    // ---- sources ----
+
+    /// One external input bit.
+    pub fn input_bit(&mut self) -> NetId {
+        let id = self.push(GateKind::Input, &[]);
+        self.inputs.push(id);
+        id
+    }
+
+    /// A named `width`-bit external input bus (little-endian).
+    pub fn input_bus(&mut self, name: &str, width: usize) -> Bus {
+        let bus: Bus = (0..width).map(|_| self.input_bit()).collect();
+        self.in_buses.push((name.to_string(), bus.clone()));
+        bus
+    }
+
+    /// One programmable SRAM bit (counted as a `SramCell`).
+    pub fn sram_bit(&mut self) -> NetId {
+        // Tag each SRAM bit as its own composite instance so cost reports
+        // count storage bits exactly like the paper does.
+        let standalone = self.current_cell.is_none();
+        if standalone {
+            self.begin_cell(CellKind::SramCell);
+        }
+        let id = self.push(GateKind::SramBit, &[]);
+        if standalone {
+            self.end_cell();
+        }
+        self.sram_bits.push(id);
+        id
+    }
+
+    /// A `width`-bit programmable SRAM word.
+    pub fn sram_bus(&mut self, width: usize) -> Bus {
+        (0..width).map(|_| self.sram_bit()).collect()
+    }
+
+    /// Constant 0 / 1 (deduplicated; zero cost).
+    pub fn constant(&mut self, value: bool) -> NetId {
+        let slot = if value { &mut self.const1 } else { &mut self.const0 };
+        if let Some(id) = *slot {
+            return id;
+        }
+        // Constants must not inherit a composite tag.
+        let saved = self.current_cell.take();
+        let id = self.push(GateKind::Const(value), &[]);
+        self.current_cell = saved;
+        if value {
+            self.const1 = Some(id);
+        } else {
+            self.const0 = Some(id);
+        }
+        id
+    }
+
+    // ---- primitive gates ----
+
+    pub fn buf(&mut self, a: NetId) -> NetId {
+        self.push(GateKind::Buf, &[a])
+    }
+    pub fn not(&mut self, a: NetId) -> NetId {
+        self.push(GateKind::Not, &[a])
+    }
+    pub fn and2(&mut self, a: NetId, b: NetId) -> NetId {
+        self.push(GateKind::And2, &[a, b])
+    }
+    pub fn or2(&mut self, a: NetId, b: NetId) -> NetId {
+        self.push(GateKind::Or2, &[a, b])
+    }
+    pub fn nand2(&mut self, a: NetId, b: NetId) -> NetId {
+        self.push(GateKind::Nand2, &[a, b])
+    }
+    pub fn nor2(&mut self, a: NetId, b: NetId) -> NetId {
+        self.push(GateKind::Nor2, &[a, b])
+    }
+    pub fn xor2(&mut self, a: NetId, b: NetId) -> NetId {
+        self.push(GateKind::Xor2, &[a, b])
+    }
+    pub fn xnor2(&mut self, a: NetId, b: NetId) -> NetId {
+        self.push(GateKind::Xnor2, &[a, b])
+    }
+
+    // ---- composite cells (tagged, counted like the paper counts them) ----
+
+    /// 2:1 one-bit mux: `sel ? b : a`. One `Mux2` cell.
+    pub fn mux2(&mut self, a: NetId, b: NetId, sel: NetId) -> NetId {
+        let standalone = self.current_cell.is_none();
+        if standalone {
+            self.begin_cell(CellKind::Mux2);
+        }
+        let id = self.push(GateKind::Mux2, &[a, b, sel]);
+        if standalone {
+            self.end_cell();
+        }
+        id
+    }
+
+    /// 4:1 one-bit mux from three 2:1 muxes (`sel = [s0, s1]`, little-endian:
+    /// selects `ins[s1*2 + s0]`). Three `Mux2` cells — exactly how the paper
+    /// decomposes its 4:1 word muxes.
+    pub fn mux4(&mut self, ins: [NetId; 4], s0: NetId, s1: NetId) -> NetId {
+        let lo = self.mux2(ins[0], ins[1], s0);
+        let hi = self.mux2(ins[2], ins[3], s0);
+        self.mux2(lo, hi, s1)
+    }
+
+    /// 4:1 word mux over little-endian buses of equal width.
+    pub fn mux4_bus(&mut self, ins: [&Bus; 4], s0: NetId, s1: NetId) -> Bus {
+        let w = ins[0].len();
+        assert!(ins.iter().all(|b| b.len() == w), "mux4_bus operand widths differ");
+        (0..w).map(|i| self.mux4([ins[0][i], ins[1][i], ins[2][i], ins[3][i]], s0, s1)).collect()
+    }
+
+    /// N:1 one-bit mux tree from 2:1 muxes; `sel` little-endian,
+    /// `ins.len() == 2^sel.len()`. Uses `2^k - 1` `Mux2` cells.
+    pub fn mux_tree(&mut self, ins: &[NetId], sel: &[NetId]) -> NetId {
+        assert_eq!(ins.len(), 1 << sel.len(), "mux tree needs 2^k inputs");
+        if sel.is_empty() {
+            return ins[0];
+        }
+        let half = ins.len() / 2;
+        let lo = self.mux_tree(&ins[..half], &sel[..sel.len() - 1]);
+        let hi = self.mux_tree(&ins[half..], &sel[..sel.len() - 1]);
+        self.mux2(lo, hi, sel[sel.len() - 1])
+    }
+
+    /// Half adder: returns `(sum, carry)`. One `HalfAdder` cell (XOR + AND).
+    pub fn half_adder(&mut self, a: NetId, b: NetId) -> (NetId, NetId) {
+        self.begin_cell(CellKind::HalfAdder);
+        let s = self.xor2(a, b);
+        let c = self.and2(a, b);
+        self.end_cell();
+        (s, c)
+    }
+
+    /// Full adder: returns `(sum, carry)`. One `FullAdder` cell.
+    pub fn full_adder(&mut self, a: NetId, b: NetId, cin: NetId) -> (NetId, NetId) {
+        self.begin_cell(CellKind::FullAdder);
+        let axb = self.xor2(a, b);
+        let s = self.xor2(axb, cin);
+        let t1 = self.and2(axb, cin);
+        let t2 = self.and2(a, b);
+        let c = self.or2(t1, t2);
+        self.end_cell();
+        (s, c)
+    }
+
+    // ---- outputs & reporting ----
+
+    /// Register a named little-endian output bus.
+    pub fn output_bus(&mut self, name: &str, bus: Bus) {
+        self.out_buses.push((name.to_string(), bus));
+    }
+
+    /// Find a named output bus.
+    pub fn find_out_bus(&self, name: &str) -> Option<&Bus> {
+        self.out_buses.iter().find(|(n, _)| n == name).map(|(_, b)| b)
+    }
+
+    /// Find a named input bus.
+    pub fn find_in_bus(&self, name: &str) -> Option<&Bus> {
+        self.in_buses.iter().find(|(n, _)| n == name).map(|(_, b)| b)
+    }
+
+    /// Component counts the way the paper counts them: composite-tagged
+    /// instances count once per instance; untagged primitives count as
+    /// their primitive cell.
+    pub fn cost_report(&self) -> CostReport {
+        let mut report = CostReport::new();
+        let mut seen: std::collections::HashSet<(CellKind, u32)> = std::collections::HashSet::new();
+        for gate in &self.gates {
+            match gate.cell {
+                Some(tag) => {
+                    if seen.insert(tag) {
+                        report.tally(tag.0, 1);
+                    }
+                }
+                None => {
+                    if let Some(k) = gate.kind.primitive_cell() {
+                        report.tally(k, 1);
+                    }
+                }
+            }
+        }
+        report
+    }
+
+    /// Flattened ordered output nets (concatenation of all output buses).
+    pub fn output_nets(&self) -> Vec<NetId> {
+        self.out_buses.iter().flat_map(|(_, b)| b.iter().copied()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logic::{from_bits, to_bits, Stepper};
+
+    #[test]
+    fn topological_by_construction() {
+        let mut n = Netlist::default();
+        let a = n.input_bit();
+        let b = n.input_bit();
+        let x = n.and2(a, b);
+        let y = n.not(x);
+        assert!(y.0 > x.0 && x.0 > b.0);
+    }
+
+    #[test]
+    fn cost_report_counts_composites_once() {
+        let mut n = Netlist::default();
+        let a = n.input_bit();
+        let b = n.input_bit();
+        let _ = n.half_adder(a, b); // 2 primitive gates, 1 HA cell
+        let c = n.input_bit();
+        let _ = n.full_adder(a, b, c); // 5 primitive gates, 1 FA cell
+        let _ = n.mux2(a, b, c);
+        let r = n.cost_report();
+        assert_eq!(r.count(crate::cells::CellKind::HalfAdder), 1);
+        assert_eq!(r.count(crate::cells::CellKind::FullAdder), 1);
+        assert_eq!(r.count(crate::cells::CellKind::Mux2), 1);
+    }
+
+    #[test]
+    fn mux_tree_cell_count_matches_paper_formula() {
+        // Paper Table I: a 2^k:1 mux costs 2^k - 1 two-input muxes.
+        for k in 1..=4usize {
+            let mut n = Netlist::default();
+            let ins: Vec<NetId> = (0..(1 << k)).map(|_| n.input_bit()).collect();
+            let sel: Vec<NetId> = (0..k).map(|_| n.input_bit()).collect();
+            let _ = n.mux_tree(&ins, &sel);
+            assert_eq!(n.cost_report().count(crate::cells::CellKind::Mux2), (1 << k) - 1);
+        }
+    }
+
+    #[test]
+    fn mux_tree_selects_correct_input() {
+        let k = 3usize;
+        let mut n = Netlist::default();
+        let ins: Vec<NetId> = (0..(1 << k)).map(|_| n.input_bit()).collect();
+        let sel: Vec<NetId> = (0..k).map(|_| n.input_bit()).collect();
+        let out = n.mux_tree(&ins, &sel);
+        n.output_bus("out", vec![out]);
+        let mut st = Stepper::new(&n);
+        for s in 0..(1 << k) {
+            // one-hot data pattern: input `s` is 1, rest 0
+            let mut stim = vec![false; (1 << k) + k];
+            stim[s] = true;
+            for (i, bit) in to_bits(s as u64, k).iter().enumerate() {
+                stim[(1 << k) + i] = *bit;
+            }
+            let res = st.step(&n, &stim);
+            assert_eq!(from_bits(&res.outputs), 1, "sel={s}");
+        }
+    }
+
+    #[test]
+    fn adders_are_correct() {
+        let mut n = Netlist::default();
+        let a = n.input_bit();
+        let b = n.input_bit();
+        let cin = n.input_bit();
+        let (hs, hc) = n.half_adder(a, b);
+        let (fs, fc) = n.full_adder(a, b, cin);
+        n.output_bus("ha", vec![hs, hc]);
+        n.output_bus("fa", vec![fs, fc]);
+        let mut st = Stepper::new(&n);
+        for v in 0..8u64 {
+            let bits = to_bits(v, 3);
+            let out = st.step(&n, &bits).outputs;
+            let a = bits[0] as u64;
+            let b = bits[1] as u64;
+            let c = bits[2] as u64;
+            assert_eq!(from_bits(&out[0..2]), a + b, "HA {v}");
+            assert_eq!(from_bits(&out[2..4]), a + b + c, "FA {v}");
+        }
+    }
+}

@@ -1,0 +1,289 @@
+//! Steady-state evaluator with switching-activity accounting.
+//!
+//! [`Stepper`] holds the last settled value of every net; each call to
+//! [`Stepper::step`] applies a new stimulus, re-evaluates the netlist in
+//! topological order (construction order), and reports which cells toggled.
+//! Toggle counts × the cell library's per-toggle energies is the dynamic
+//! energy model used throughout (the standard activity-based estimate;
+//! the event-driven simulator adds glitch transitions on top).
+//!
+//! The stepper does not borrow the netlist — it is passed to each call —
+//! so owning types (e.g. [`crate::luna::LunaUnit`]) can hold both.
+
+use super::netlist::{GateKind, Netlist};
+use crate::cells::{CellKind, CellLibrary};
+
+/// Result of one evaluation step.
+#[derive(Debug, Clone)]
+pub struct StepResult {
+    /// Values of all registered output buses, flattened in order.
+    pub outputs: Vec<bool>,
+    /// Output toggles per primitive cell kind (index = [`CellKind::index`]).
+    pub toggles: [u64; CellKind::ALL.len()],
+}
+
+impl StepResult {
+    /// Total toggles across all cells.
+    pub fn total_toggles(&self) -> u64 {
+        self.toggles.iter().sum()
+    }
+
+    /// Dynamic energy of this step in femtojoules under `lib`
+    /// (activity × per-toggle energy of each *primitive* cell).
+    pub fn dynamic_energy_fj(&self, lib: &CellLibrary) -> f64 {
+        CellKind::ALL
+            .iter()
+            .map(|&k| self.toggles[k.index()] as f64 * lib.params(k).energy_per_toggle_fj)
+            .sum()
+    }
+}
+
+/// Stateful steady-state evaluator over a netlist.
+#[derive(Debug, Clone)]
+pub struct Stepper {
+    values: Vec<bool>,
+    /// SRAM programming (little-endian over `net.sram_bits`).
+    sram: Vec<bool>,
+    n_inputs: usize,
+    /// Output net indices, precomputed (hot path: no per-step allocation
+    /// beyond the result vector itself).
+    out_nets: Vec<u32>,
+    first: bool,
+}
+
+impl Stepper {
+    pub fn new(net: &Netlist) -> Self {
+        Stepper {
+            values: vec![false; net.num_nets()],
+            sram: vec![false; net.sram_bits.len()],
+            n_inputs: net.inputs.len(),
+            out_nets: net.output_nets().iter().map(|n| n.0).collect(),
+            first: true,
+        }
+    }
+
+    /// Program the SRAM bits (LUT contents). Does not count toggles —
+    /// programming energy is accounted by the SRAM-array write model.
+    pub fn program(&mut self, bits: &[bool]) {
+        assert_eq!(bits.len(), self.sram.len(), "programming width mismatch");
+        self.sram.copy_from_slice(bits);
+        self.first = true; // settle silently after reprogramming
+    }
+
+    /// Current settled value of a net.
+    pub fn value(&self, net: super::NetId) -> bool {
+        self.values[net.index()]
+    }
+
+    /// Apply `inputs` (ordered as `net.inputs`), propagate to steady state,
+    /// and count toggles vs the previous state. The first step after
+    /// construction or reprogramming settles silently (no toggles counted),
+    /// mirroring a powered-up, programmed array. `net` must be the same
+    /// netlist the stepper was created for.
+    pub fn step(&mut self, net: &Netlist, inputs: &[bool]) -> StepResult {
+        assert_eq!(net.num_nets(), self.values.len(), "stepper/netlist mismatch");
+        assert_eq!(inputs.len(), self.n_inputs, "stimulus width mismatch");
+        let mut toggles = [0u64; CellKind::ALL.len()];
+        let mut sram_iter = 0usize;
+        let mut input_iter = 0usize;
+        let count = !self.first;
+        for idx in 0..net.gates.len() {
+            let gate = &net.gates[idx];
+            let new = match gate.kind {
+                GateKind::Input => {
+                    let v = inputs[input_iter];
+                    input_iter += 1;
+                    v
+                }
+                GateKind::SramBit => {
+                    let v = self.sram[sram_iter];
+                    sram_iter += 1;
+                    v
+                }
+                GateKind::Const(v) => v,
+                GateKind::Buf => self.values[gate.ins[0].index()],
+                GateKind::Not => !self.values[gate.ins[0].index()],
+                GateKind::And2 => {
+                    self.values[gate.ins[0].index()] & self.values[gate.ins[1].index()]
+                }
+                GateKind::Or2 => {
+                    self.values[gate.ins[0].index()] | self.values[gate.ins[1].index()]
+                }
+                GateKind::Nand2 => {
+                    !(self.values[gate.ins[0].index()] & self.values[gate.ins[1].index()])
+                }
+                GateKind::Nor2 => {
+                    !(self.values[gate.ins[0].index()] | self.values[gate.ins[1].index()])
+                }
+                GateKind::Xor2 => {
+                    self.values[gate.ins[0].index()] ^ self.values[gate.ins[1].index()]
+                }
+                GateKind::Xnor2 => {
+                    !(self.values[gate.ins[0].index()] ^ self.values[gate.ins[1].index()])
+                }
+                GateKind::Mux2 => {
+                    if self.values[gate.ins[2].index()] {
+                        self.values[gate.ins[1].index()]
+                    } else {
+                        self.values[gate.ins[0].index()]
+                    }
+                }
+            };
+            if count && new != self.values[idx] {
+                if let Some(k) = gate.kind.primitive_cell() {
+                    toggles[k.index()] += 1;
+                }
+            }
+            self.values[idx] = new;
+        }
+        self.first = false;
+        let outputs = self.out_nets.iter().map(|&n| self.values[n as usize]).collect();
+        StepResult { outputs, toggles }
+    }
+
+    /// Convenience: evaluate with an integer input word and return the
+    /// outputs as an integer (concatenated output buses, little-endian).
+    pub fn eval_u64(&mut self, net: &Netlist, input_value: u64) -> u64 {
+        let bits = super::to_bits(input_value, self.n_inputs);
+        let res = self.step(net, &bits);
+        super::from_bits(&res.outputs)
+    }
+
+    /// Allocation-free hot path: integer stimulus in, integer outputs and
+    /// toggle counts out (the fabric-execution path of
+    /// [`crate::luna::LunaUnit::multiply`]).
+    pub fn step_fast(
+        &mut self,
+        net: &Netlist,
+        input_value: u64,
+    ) -> (u64, [u64; CellKind::ALL.len()]) {
+        debug_assert_eq!(net.num_nets(), self.values.len(), "stepper/netlist mismatch");
+        let mut toggles = [0u64; CellKind::ALL.len()];
+        let mut sram_iter = 0usize;
+        let mut input_iter = 0usize;
+        let count = !self.first;
+        for idx in 0..net.gates.len() {
+            let gate = &net.gates[idx];
+            let new = match gate.kind {
+                GateKind::Input => {
+                    let v = (input_value >> input_iter) & 1 == 1;
+                    input_iter += 1;
+                    v
+                }
+                GateKind::SramBit => {
+                    let v = self.sram[sram_iter];
+                    sram_iter += 1;
+                    v
+                }
+                GateKind::Const(v) => v,
+                GateKind::Buf => self.values[gate.ins[0].index()],
+                GateKind::Not => !self.values[gate.ins[0].index()],
+                GateKind::And2 => {
+                    self.values[gate.ins[0].index()] & self.values[gate.ins[1].index()]
+                }
+                GateKind::Or2 => {
+                    self.values[gate.ins[0].index()] | self.values[gate.ins[1].index()]
+                }
+                GateKind::Nand2 => {
+                    !(self.values[gate.ins[0].index()] & self.values[gate.ins[1].index()])
+                }
+                GateKind::Nor2 => {
+                    !(self.values[gate.ins[0].index()] | self.values[gate.ins[1].index()])
+                }
+                GateKind::Xor2 => {
+                    self.values[gate.ins[0].index()] ^ self.values[gate.ins[1].index()]
+                }
+                GateKind::Xnor2 => {
+                    !(self.values[gate.ins[0].index()] ^ self.values[gate.ins[1].index()])
+                }
+                GateKind::Mux2 => {
+                    if self.values[gate.ins[2].index()] {
+                        self.values[gate.ins[1].index()]
+                    } else {
+                        self.values[gate.ins[0].index()]
+                    }
+                }
+            };
+            if count && new != self.values[idx] {
+                if let Some(k) = gate.kind.primitive_cell() {
+                    toggles[k.index()] += 1;
+                }
+            }
+            self.values[idx] = new;
+        }
+        self.first = false;
+        let mut out = 0u64;
+        for (i, &n) in self.out_nets.iter().enumerate() {
+            out |= (self.values[n as usize] as u64) << i;
+        }
+        (out, toggles)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logic::{from_bits, to_bits, Netlist};
+
+    fn xor_chain() -> Netlist {
+        let mut n = Netlist::default();
+        let a = n.input_bit();
+        let b = n.input_bit();
+        let x = n.xor2(a, b);
+        let y = n.not(x);
+        n.output_bus("out", vec![x, y]);
+        n
+    }
+
+    #[test]
+    fn first_step_counts_no_toggles() {
+        let n = xor_chain();
+        let mut st = Stepper::new(&n);
+        let r = st.step(&n, &[true, false]);
+        assert_eq!(r.total_toggles(), 0);
+        assert_eq!(from_bits(&r.outputs), 0b01);
+    }
+
+    #[test]
+    fn toggles_counted_after_first_step() {
+        let n = xor_chain();
+        let mut st = Stepper::new(&n);
+        st.step(&n, &[false, false]);
+        let r = st.step(&n, &[true, false]); // xor flips, not flips
+        assert_eq!(r.total_toggles(), 2);
+        let r2 = st.step(&n, &[true, false]); // no change
+        assert_eq!(r2.total_toggles(), 0);
+    }
+
+    #[test]
+    fn sram_programming_controls_outputs() {
+        let mut n = Netlist::default();
+        let s = n.sram_bus(4);
+        let sel = n.input_bus("sel", 2);
+        let out = n.mux_tree(&s, &sel);
+        n.output_bus("o", vec![out]);
+        let mut st = Stepper::new(&n);
+        st.program(&to_bits(0b1010, 4));
+        for i in 0..4u64 {
+            let v = st.step(&n, &to_bits(i, 2));
+            assert_eq!(v.outputs[0], (0b1010 >> i) & 1 == 1, "entry {i}");
+        }
+    }
+
+    #[test]
+    fn energy_is_positive_when_toggling() {
+        let lib = crate::cells::tsmc65_library();
+        let n = xor_chain();
+        let mut st = Stepper::new(&n);
+        st.step(&n, &[false, false]);
+        let r = st.step(&n, &[true, false]);
+        assert!(r.dynamic_energy_fj(&lib) > 0.0);
+    }
+
+    #[test]
+    fn eval_u64_convenience() {
+        let n = xor_chain();
+        let mut st = Stepper::new(&n);
+        assert_eq!(st.eval_u64(&n, 0b01) & 1, 1);
+    }
+}

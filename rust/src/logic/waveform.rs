@@ -1,0 +1,159 @@
+//! Waveform capture and rendering (the Fig 14 transient view).
+
+use std::fmt::Write as _;
+
+/// A sampled digital waveform of one bus: `(time_ps, value)` pairs with
+/// consecutive duplicate values collapsed.
+#[derive(Debug, Clone)]
+pub struct Waveform {
+    pub name: String,
+    pub width: usize,
+    samples: Vec<(u64, u64)>,
+}
+
+impl Waveform {
+    pub fn new(name: String, width: usize) -> Self {
+        Waveform { name, width, samples: Vec::new() }
+    }
+
+    /// Append a sample; duplicate consecutive values are collapsed, and a
+    /// re-sample at an existing timestamp overwrites it.
+    pub fn sample(&mut self, time_ps: u64, value: u64) {
+        if let Some(&(t_last, v_last)) = self.samples.last() {
+            if v_last == value {
+                return;
+            }
+            if t_last == time_ps {
+                self.samples.pop();
+                if self.samples.last().map(|&(_, v)| v) == Some(value) {
+                    return;
+                }
+            }
+        }
+        self.samples.push((time_ps, value));
+    }
+
+    pub fn samples(&self) -> &[(u64, u64)] {
+        &self.samples
+    }
+
+    pub fn last_value(&self) -> Option<u64> {
+        self.samples.last().map(|&(_, v)| v)
+    }
+
+    /// Value as of `time_ps` (last sample at or before it).
+    pub fn value_at(&self, time_ps: u64) -> Option<u64> {
+        self.samples.iter().take_while(|&&(t, _)| t <= time_ps).last().map(|&(_, v)| v)
+    }
+
+    /// CSV export: `time_ps,value` rows.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("time_ps,value\n");
+        for &(t, v) in &self.samples {
+            let _ = writeln!(out, "{t},{v}");
+        }
+        out
+    }
+}
+
+/// A set of waveforms rendered together — the textual analogue of the
+/// paper's Fig 14 transient plot.
+#[derive(Debug, Clone, Default)]
+pub struct BusTrace {
+    pub waves: Vec<Waveform>,
+}
+
+impl BusTrace {
+    pub fn new(waves: Vec<Waveform>) -> Self {
+        BusTrace { waves }
+    }
+
+    /// ASCII rendering: one row per bus, a column per change-point, values
+    /// in decimal and binary.
+    pub fn render(&self) -> String {
+        let mut times: Vec<u64> =
+            self.waves.iter().flat_map(|w| w.samples().iter().map(|&(t, _)| t)).collect();
+        times.sort_unstable();
+        times.dedup();
+        let mut out = String::new();
+        let _ = writeln!(out, "{:>10} | {}", "time(ps)", self.waves.iter().map(|w| format!("{:>16}", w.name)).collect::<Vec<_>>().join(" "));
+        let _ = writeln!(out, "{}", "-".repeat(13 + 17 * self.waves.len()));
+        for t in times {
+            let cols: Vec<String> = self
+                .waves
+                .iter()
+                .map(|w| match w.value_at(t) {
+                    Some(v) => format!("{:>6} ({:0w$b})", v, v, w = w.width.max(1)),
+                    None => "-".to_string(),
+                })
+                .map(|s| format!("{s:>16}"))
+                .collect();
+            let _ = writeln!(out, "{t:>10} | {}", cols.join(" "));
+        }
+        out
+    }
+
+    /// CSV with one column per bus sampled at every change point.
+    pub fn to_csv(&self) -> String {
+        let mut times: Vec<u64> =
+            self.waves.iter().flat_map(|w| w.samples().iter().map(|&(t, _)| t)).collect();
+        times.sort_unstable();
+        times.dedup();
+        let mut out = String::from("time_ps");
+        for w in &self.waves {
+            let _ = write!(out, ",{}", w.name);
+        }
+        out.push('\n');
+        for t in times {
+            let _ = write!(out, "{t}");
+            for w in &self.waves {
+                match w.value_at(t) {
+                    Some(v) => {
+                        let _ = write!(out, ",{v}");
+                    }
+                    None => out.push(','),
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn duplicate_samples_collapse() {
+        let mut w = Waveform::new("x".into(), 4);
+        w.sample(0, 5);
+        w.sample(10, 5);
+        w.sample(20, 7);
+        assert_eq!(w.samples().len(), 2);
+        assert_eq!(w.value_at(15), Some(5));
+        assert_eq!(w.value_at(25), Some(7));
+    }
+
+    #[test]
+    fn resample_at_same_time_overwrites() {
+        let mut w = Waveform::new("x".into(), 4);
+        w.sample(0, 1);
+        w.sample(5, 2);
+        w.sample(5, 3);
+        assert_eq!(w.samples(), &[(0, 1), (5, 3)]);
+    }
+
+    #[test]
+    fn csv_and_render_contain_values() {
+        let mut w = Waveform::new("OUT".into(), 8);
+        w.sample(0, 60);
+        w.sample(1000, 66);
+        let trace = BusTrace::new(vec![w]);
+        let text = trace.render();
+        assert!(text.contains("60"));
+        assert!(text.contains("66"));
+        let csv = trace.to_csv();
+        assert!(csv.starts_with("time_ps,OUT"));
+    }
+}

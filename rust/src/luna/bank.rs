@@ -1,0 +1,155 @@
+//! A LUNA-CiM bank: an 8×8 SRAM array hosting four LUNA units (Fig 17),
+//! with the Fig 18 area split and §IV.B energy accounting.
+
+use super::LunaUnit;
+use crate::cells::{CellLibrary, CostReport};
+use crate::multiplier::MultiplierKind;
+use crate::sram::{EnergyLedger, SramArray};
+
+/// The Fig 18 area report.
+#[derive(Debug, Clone)]
+pub struct BankAreaReport {
+    pub array_um2: f64,
+    pub unit_um2: f64,
+    pub units_total_um2: f64,
+    pub total_um2: f64,
+    /// LUNA units' share of the total (paper: 32 %).
+    pub overhead_fraction: f64,
+}
+
+/// An 8×8 SRAM array with four LUNA-CiM units inserted between row pairs
+/// (unit `u` takes inputs from row `2u` and writes results to row `2u+1`).
+#[derive(Debug, Clone)]
+pub struct LunaBank {
+    pub array: SramArray,
+    pub units: Vec<LunaUnit>,
+}
+
+impl LunaBank {
+    /// The paper's configuration: 8×8 array + four units of `kind`.
+    pub fn paper_config(kind: MultiplierKind) -> Self {
+        LunaBank {
+            array: SramArray::paper_8x8(),
+            units: (0..4).map(|_| LunaUnit::new(kind)).collect(),
+        }
+    }
+
+    /// Build with an arbitrary number of units.
+    pub fn new(kind: MultiplierKind, n_units: usize) -> Self {
+        assert!(n_units >= 1 && n_units <= 4, "an 8x8 array hosts 1..=4 units");
+        LunaBank {
+            array: SramArray::paper_8x8(),
+            units: (0..n_units).map(|_| LunaUnit::new(kind)).collect(),
+        }
+    }
+
+    /// Program unit `u` with weight `w` (LUT write via the array's write
+    /// path, charged per bit).
+    pub fn program_unit(&mut self, lib: &CellLibrary, u: usize, w: u8) {
+        self.units[u].program(lib, w);
+    }
+
+    /// Fig 17 dataflow for one multiply on unit `u`: `Y` is written into
+    /// the unit's upper row, the unit computes, and the 8-bit product is
+    /// written back to the lower row. Returns the product.
+    pub fn mac_through_rows(&mut self, lib: &CellLibrary, u: usize, y: u8) -> u8 {
+        assert!(u < self.units.len());
+        let upper = 2 * u;
+        let lower = 2 * u + 1;
+        self.array.write_row(lib, upper, y as u64);
+        let read_back = self.array.read_row(lib, upper) as u8;
+        let out = self.units[u].multiply(lib, read_back);
+        self.array.write_row(lib, lower, out as u64);
+        out
+    }
+
+    /// Fast-path multiply that bypasses the row traffic (the steady-state
+    /// weight-stationary mode the coordinator uses; operands stream on
+    /// bitlines without full row rewrites).
+    pub fn mac(&mut self, lib: &CellLibrary, u: usize, y: u8) -> u8 {
+        self.units[u].multiply(lib, y)
+    }
+
+    /// Total component inventory: array + units.
+    pub fn cost(&self) -> CostReport {
+        self.units.iter().fold(self.array.cost(), |acc, u| acc + u.cost())
+    }
+
+    /// The Fig 18 pie chart numbers.
+    pub fn area_report(&self, lib: &CellLibrary) -> BankAreaReport {
+        let array_um2 = self.array.cost().routed_area_um2(lib);
+        let unit_um2 = self.units.first().map(|u| u.area_um2(lib)).unwrap_or(0.0);
+        let units_total_um2: f64 = self.units.iter().map(|u| u.area_um2(lib)).sum();
+        let total_um2 = array_um2 + units_total_um2;
+        BankAreaReport {
+            array_um2,
+            unit_um2,
+            units_total_um2,
+            total_um2,
+            overhead_fraction: units_total_um2 / total_um2,
+        }
+    }
+
+    /// Merged energy ledger (array accesses + all unit activity).
+    pub fn ledger(&self) -> EnergyLedger {
+        let mut l = self.array.ledger().clone();
+        for u in &self.units {
+            l.merge(u.ledger());
+        }
+        l
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cells::tsmc65::{PAPER_TOTAL_AREA_UM2, PAPER_UNIT_AREA_UM2};
+    use crate::cells::tsmc65_library;
+
+    #[test]
+    fn fig18_area_numbers() {
+        let lib = tsmc65_library();
+        let bank = LunaBank::paper_config(MultiplierKind::DncOpt);
+        let rep = bank.area_report(&lib);
+        assert!((rep.unit_um2 - PAPER_UNIT_AREA_UM2).abs() < 0.5, "unit {}", rep.unit_um2);
+        assert!(
+            (rep.total_um2 - PAPER_TOTAL_AREA_UM2).abs() / PAPER_TOTAL_AREA_UM2 < 0.01,
+            "total {}",
+            rep.total_um2
+        );
+        // Paper: 32 % overhead.
+        assert!((rep.overhead_fraction - 0.32).abs() < 0.01, "{}", rep.overhead_fraction);
+    }
+
+    #[test]
+    fn fig17_dataflow_produces_products() {
+        let lib = tsmc65_library();
+        let mut bank = LunaBank::paper_config(MultiplierKind::DncOpt);
+        // The paper's §IV.B stimulus: W = 0110, Y ∈ {1010, 1011, 0011, 1100}.
+        bank.program_unit(&lib, 0, 0b0110);
+        for (y, expect) in [(0b1010u8, 60u8), (0b1011, 66), (0b0011, 18), (0b1100, 72)] {
+            assert_eq!(bank.mac_through_rows(&lib, 0, y), expect);
+        }
+        // Results persisted in the lower row.
+        assert_eq!(bank.array.peek(1, 3), (72 >> 3) & 1 == 1);
+    }
+
+    #[test]
+    fn energy_ledger_merges_units_and_array() {
+        let lib = tsmc65_library();
+        let mut bank = LunaBank::new(MultiplierKind::DncOpt, 2);
+        bank.program_unit(&lib, 0, 5);
+        bank.program_unit(&lib, 1, 9);
+        let _ = bank.mac(&lib, 0, 7);
+        let _ = bank.mac(&lib, 1, 2);
+        let ledger = bank.ledger();
+        assert!(ledger.total_fj() > 0.0);
+        assert!(ledger.accesses() >= 20, "programming writes recorded");
+    }
+
+    #[test]
+    #[should_panic]
+    fn too_many_units_rejected() {
+        let _ = LunaBank::new(MultiplierKind::DncOpt, 5);
+    }
+}

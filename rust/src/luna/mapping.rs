@@ -1,0 +1,147 @@
+//! Layer-to-bank mapping with the Fig 17 row dataflow.
+//!
+//! The tiler (`coordinator::tiler`) prices schedules analytically; this
+//! module *executes* them on gate-level banks: every MAC of a quantized
+//! linear layer runs through a programmed [`LunaUnit`] inside an 8×8
+//! array, with operands and products moving through SRAM rows exactly as
+//! Fig 17 draws it. Slow (gate-level), but it closes the loop: the
+//! analytic cost model and the functional result are both validated
+//! against `nn::QuantLinear` arithmetic.
+
+use super::LunaBank;
+use crate::cells::CellLibrary;
+use crate::multiplier::MultiplierKind;
+use crate::nn::QuantLinear;
+use crate::sram::EnergyLedger;
+
+/// Result of executing one layer on the fabric.
+#[derive(Debug)]
+pub struct MappedLayerRun {
+    /// Integer accumulators per output neuron (zero-point corrected) —
+    /// must equal `QuantLinear::accumulate`.
+    pub acc: Vec<i32>,
+    /// MACs executed on units.
+    pub macs: u64,
+    /// LUT (re)programming events.
+    pub programs: u64,
+    /// Merged energy ledger of all banks (programming + row traffic +
+    /// multiplier switching).
+    pub ledger: EnergyLedger,
+}
+
+/// A pool of gate-level banks executing layers weight-stationarily.
+pub struct BankFabric {
+    banks: Vec<LunaBank>,
+    kind: MultiplierKind,
+}
+
+impl BankFabric {
+    pub fn new(kind: MultiplierKind, banks: usize, units_per_bank: usize) -> Self {
+        assert!(banks >= 1);
+        BankFabric { banks: (0..banks).map(|_| LunaBank::new(kind, units_per_bank)).collect(), kind }
+    }
+
+    pub fn total_units(&self) -> usize {
+        self.banks.iter().map(|b| b.units.len()).sum()
+    }
+
+    pub fn kind(&self) -> MultiplierKind {
+        self.kind
+    }
+
+    fn unit_mut(&mut self, linear: usize) -> (&mut LunaBank, usize) {
+        let per = self.banks[0].units.len();
+        let bank = (linear / per) % self.banks.len();
+        let unit = linear % per;
+        (&mut self.banks[bank], unit)
+    }
+
+    /// Execute one layer on the fabric with the Fig 17 row dataflow:
+    /// weight codes are assigned to units round-robin (matching the
+    /// tiler's placement), each unit is programmed (weight-stationary)
+    /// and multiplies its activation operand via its array rows.
+    ///
+    /// Only exact configurations reproduce `QuantLinear::accumulate`
+    /// bit-for-bit; approximate ones reproduce their variant arithmetic.
+    pub fn run_layer(&mut self, lib: &CellLibrary, layer: &QuantLinear, xq: &[u8]) -> MappedLayerRun {
+        assert_eq!(xq.len(), layer.in_dim);
+        let units = self.total_units();
+        let x_sum: i32 = xq.iter().map(|&x| x as i32).sum();
+        let zp = layer.w_quant.zero_point as i32;
+        let mut acc = vec![0i32; layer.out_dim];
+        let mut macs = 0u64;
+        let mut programs = 0u64;
+        for o in 0..layer.out_dim {
+            let row = &layer.wq[o * layer.in_dim..(o + 1) * layer.in_dim];
+            let mut lut_sum = 0i32;
+            for (i, (&w, &x)) in row.iter().zip(xq).enumerate() {
+                let linear = (o * layer.in_dim + i) % units;
+                let (bank, unit) = self.unit_mut(linear);
+                if bank.units[unit].programmed_weight() != Some(w) {
+                    bank.program_unit(lib, unit, w);
+                    programs += 1;
+                }
+                // Fig 17 dataflow: operand through the unit's upper row,
+                // product written back to its lower row.
+                lut_sum += bank.mac_through_rows(lib, unit, x) as i32;
+                macs += 1;
+            }
+            acc[o] = lut_sum - zp * x_sum;
+        }
+        let mut ledger = EnergyLedger::default();
+        for b in &self.banks {
+            ledger.merge(&b.ledger());
+        }
+        MappedLayerRun { acc, macs, programs, ledger }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cells::tsmc65_library;
+    use crate::multiplier::MultiplierModel;
+    use crate::nn::QuantMlp;
+
+    #[test]
+    fn fabric_reproduces_quantlinear_accumulate_exactly() {
+        let lib = tsmc65_library();
+        let mlp = QuantMlp::random_for_study(11);
+        let layer = &mlp.layers[1]; // 12 -> 8
+        let xq: Vec<u8> = (0..layer.in_dim).map(|i| (i as u8 * 5) % 16).collect();
+        let mut fabric = BankFabric::new(MultiplierKind::DncOpt, 4, 4);
+        let run = fabric.run_layer(&lib, layer, &xq);
+        let want = layer.accumulate(&xq, &MultiplierModel::new(MultiplierKind::DncOpt));
+        assert_eq!(run.acc, want, "gate-level fabric != integer model");
+        assert_eq!(run.macs, (layer.in_dim * layer.out_dim) as u64);
+        assert!(run.ledger.total_fj() > 0.0);
+    }
+
+    #[test]
+    fn fabric_reproduces_approx_variant_arithmetic() {
+        let lib = tsmc65_library();
+        let mlp = QuantMlp::random_for_study(12);
+        let layer = &mlp.layers[1];
+        let xq: Vec<u8> = (0..layer.in_dim).map(|i| (3 + i as u8 * 7) % 16).collect();
+        let mut fabric = BankFabric::new(MultiplierKind::Approx, 2, 4);
+        let run = fabric.run_layer(&lib, layer, &xq);
+        let want = layer.accumulate(&xq, &MultiplierModel::new(MultiplierKind::Approx));
+        assert_eq!(run.acc, want);
+    }
+
+    #[test]
+    fn weight_stationary_reuse_reduces_programs_on_second_run() {
+        let lib = tsmc65_library();
+        let mlp = QuantMlp::random_for_study(13);
+        let layer = &mlp.layers[1];
+        let xq: Vec<u8> = vec![7; layer.in_dim];
+        // fabric big enough to hold the whole layer
+        let units_needed = layer.in_dim * layer.out_dim;
+        let banks = units_needed.div_ceil(4);
+        let mut fabric = BankFabric::new(MultiplierKind::DncOpt, banks, 4);
+        let first = fabric.run_layer(&lib, layer, &xq);
+        let second = fabric.run_layer(&lib, layer, &xq);
+        assert!(first.programs > 0);
+        assert_eq!(second.programs, 0, "second pass should be fully stationary");
+    }
+}

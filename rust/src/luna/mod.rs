@@ -1,0 +1,16 @@
+//! LUNA-CiM units and banks — the paper's Fig 17 integration.
+//!
+//! A **unit** is one mux-based LUT multiplier embedded between two SRAM
+//! rows: it is programmed with a weight (LUT write = SRAM row writes,
+//! charged at the array's per-bit write energy), takes `Y` from the upper
+//! row and delivers the product to the lower row. A **bank** is an 8×8
+//! SRAM array hosting four units (the paper's maximum-overhead
+//! configuration), with the Fig 18 area accounting.
+
+mod bank;
+mod mapping;
+mod unit;
+
+pub use bank::{BankAreaReport, LunaBank};
+pub use mapping::{BankFabric, MappedLayerRun};
+pub use unit::LunaUnit;

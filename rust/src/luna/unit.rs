@@ -1,0 +1,201 @@
+//! One LUNA-CiM unit: a programmable LUT multiplier with energy accounting.
+
+use crate::cells::{CellKind, CellLibrary, CostReport};
+use crate::logic::{Netlist, Stepper};
+use crate::multiplier::MultiplierKind;
+use crate::sram::EnergyLedger;
+
+/// A programmed LUT-multiplier instance. Owns its netlist and simulation
+/// state; every multiply runs through the gate-level stepper so dynamic
+/// energy comes from measured switching activity, and every reprogram is
+/// charged at the calibrated SRAM write energy.
+#[derive(Debug, Clone)]
+pub struct LunaUnit {
+    kind: MultiplierKind,
+    netlist: Netlist,
+    stepper: Stepper,
+    programmed: Option<u8>,
+    /// Number of multiplies performed since construction.
+    pub ops: u64,
+    /// Number of (re)programming events.
+    pub programs: u64,
+    ledger: EnergyLedger,
+}
+
+impl LunaUnit {
+    /// Create a unit for a netlist-backed configuration.
+    ///
+    /// # Panics
+    /// Panics for [`MultiplierKind::Ideal`], which has no hardware.
+    pub fn new(kind: MultiplierKind) -> Self {
+        let netlist = kind
+            .netlist()
+            .unwrap_or_else(|| panic!("{kind} has no hardware netlist"));
+        let stepper = Stepper::new(&netlist);
+        LunaUnit { kind, netlist, stepper, programmed: None, ops: 0, programs: 0, ledger: EnergyLedger::default() }
+    }
+
+    pub fn kind(&self) -> MultiplierKind {
+        self.kind
+    }
+
+    pub fn programmed_weight(&self) -> Option<u8> {
+        self.programmed
+    }
+
+    /// Program weight `w` into the unit's LUT. Charges one SRAM write per
+    /// stored bit (the paper's per-bit write-energy accounting). A no-op
+    /// if the same weight is already programmed (weight-stationary reuse).
+    pub fn program(&mut self, lib: &CellLibrary, w: u8) {
+        if self.programmed == Some(w) {
+            return;
+        }
+        let image = self.kind.program_image(w).expect("netlist-backed kind");
+        for _ in 0..image.len() {
+            self.ledger.charge(lib, crate::sram::AccessKind::WriteBit);
+        }
+        self.stepper.program(&image);
+        self.programmed = Some(w);
+        self.programs += 1;
+    }
+
+    /// Multiply the programmed weight by `y` in the gate-level model.
+    /// Charges toggle energy to the multiplier's component class.
+    ///
+    /// # Panics
+    /// Panics if the unit has not been programmed.
+    pub fn multiply(&mut self, lib: &CellLibrary, y: u8) -> u8 {
+        assert!(self.programmed.is_some(), "unit must be programmed before multiplying");
+        assert!(y < 16, "4-bit operand");
+        let (out, toggles) = self.stepper.step_fast(&self.netlist, y as u64);
+        let fj: f64 = CellKind::ALL
+            .iter()
+            .map(|&k| toggles[k.index()] as f64 * lib.params(k).energy_per_toggle_fj)
+            .sum();
+        self.ledger.charge_external(CellKind::Mux2, fj);
+        self.ops += 1;
+        out as u8
+    }
+
+    /// Component inventory (counts from the actual netlist).
+    pub fn cost(&self) -> CostReport {
+        self.netlist.cost_report()
+    }
+
+    /// Routed area of the unit in µm² — 287 µm² for the optimized D&C
+    /// configuration under the calibrated library (Fig 18).
+    pub fn area_um2(&self, lib: &CellLibrary) -> f64 {
+        self.cost().routed_area_um2(lib)
+    }
+
+    /// Accumulated energy ledger (programming writes + multiply toggles).
+    pub fn ledger(&self) -> &EnergyLedger {
+        &self.ledger
+    }
+
+    /// Average dynamic energy per multiply so far, in femtojoules
+    /// (the paper's 47.96 fJ figure for the mux-based multiplier).
+    pub fn avg_multiply_energy_fj(&self) -> f64 {
+        if self.ops == 0 {
+            return 0.0;
+        }
+        self.ledger.breakdown().get(CellKind::Mux2) / self.ops as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cells::tsmc65_library;
+
+    #[test]
+    fn unit_multiplies_correctly_for_exact_kinds() {
+        let lib = tsmc65_library();
+        for kind in [MultiplierKind::DncOpt, MultiplierKind::Dnc, MultiplierKind::Traditional] {
+            let mut u = LunaUnit::new(kind);
+            for w in [0u8, 3, 6, 15] {
+                u.program(&lib, w);
+                for y in 0..16u8 {
+                    assert_eq!(u.multiply(&lib, y), w * y, "{kind} w={w} y={y}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reprogramming_same_weight_is_free() {
+        let lib = tsmc65_library();
+        let mut u = LunaUnit::new(MultiplierKind::DncOpt);
+        u.program(&lib, 6);
+        let before = u.ledger().total_fj();
+        u.program(&lib, 6);
+        assert_eq!(u.ledger().total_fj(), before);
+        assert_eq!(u.programs, 1);
+        u.program(&lib, 7);
+        assert!(u.ledger().total_fj() > before);
+        assert_eq!(u.programs, 2);
+    }
+
+    #[test]
+    fn programming_energy_scales_with_lut_bits() {
+        let lib = tsmc65_library();
+        let mut opt = LunaUnit::new(MultiplierKind::DncOpt); // 10 bits
+        let mut trad = LunaUnit::new(MultiplierKind::Traditional); // 128 bits
+        opt.program(&lib, 5);
+        trad.program(&lib, 5);
+        let ratio = trad.ledger().total_fj() / opt.ledger().total_fj();
+        assert!((ratio - 12.8).abs() < 1e-9, "128/10 bits, got {ratio}");
+    }
+
+    #[test]
+    fn unit_area_matches_fig18_for_dnc_opt() {
+        let lib = tsmc65_library();
+        let u = LunaUnit::new(MultiplierKind::DncOpt);
+        let area = u.area_um2(&lib);
+        assert!((area - crate::cells::tsmc65::PAPER_UNIT_AREA_UM2).abs() < 0.5, "area {area}");
+    }
+
+    #[test]
+    fn multiply_energy_is_recorded() {
+        let lib = tsmc65_library();
+        let mut u = LunaUnit::new(MultiplierKind::DncOpt);
+        u.program(&lib, 6);
+        // Alternate operands so the mux trees actually switch.
+        for y in [10u8, 11, 3, 12, 5, 9, 0, 15] {
+            let _ = u.multiply(&lib, y);
+        }
+        assert!(u.avg_multiply_energy_fj() > 0.0);
+        assert_eq!(u.ops, 8);
+    }
+
+    #[test]
+    fn multiply_energy_calibrated_to_paper_47_96_fj() {
+        // §IV.B: 47.96 fJ per multiply under the paper's stimulus
+        // (W = 0110, Y cycling 1010/1011/0011/1100).
+        let lib = tsmc65_library();
+        let mut u = LunaUnit::new(MultiplierKind::DncOpt);
+        u.program(&lib, 0b0110);
+        for _ in 0..64 {
+            for y in [0b1010u8, 0b1011, 0b0011, 0b1100] {
+                let _ = u.multiply(&lib, y);
+            }
+        }
+        let e = u.avg_multiply_energy_fj();
+        let paper = crate::cells::tsmc65::PAPER_MULT_ENERGY_FJ;
+        assert!((e - paper).abs() / paper < 0.05, "measured {e} fJ vs paper {paper}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn multiply_before_programming_panics() {
+        let lib = tsmc65_library();
+        let mut u = LunaUnit::new(MultiplierKind::DncOpt);
+        let _ = u.multiply(&lib, 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn ideal_has_no_hardware() {
+        let _ = LunaUnit::new(MultiplierKind::Ideal);
+    }
+}

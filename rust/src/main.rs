@@ -1,0 +1,407 @@
+//! `repro` — LUNA-CIM reproduction CLI (hand-rolled argument parsing; no
+//! CLI crates exist in this offline image).
+//!
+//! Subcommands map one-to-one onto the paper's evaluation plus the serving
+//! stack built around it:
+//!
+//! * `tables [--id N]`          — regenerate Tables I / II;
+//! * `figures [--id N] [--csv]` — regenerate any figure (1–18);
+//! * `mul W Y`                  — one 4b×4b multiply, every configuration;
+//! * `simulate [...]`           — gate-level transient (Fig 14 style);
+//! * `serve [...]`              — run the batching coordinator under load;
+//! * `eval [...]`               — offline accuracy/energy of every variant.
+
+use luna_cim::cells::tsmc65_library;
+use luna_cim::config::Config;
+use luna_cim::coordinator::CoordinatorServer;
+use luna_cim::multiplier::{MultiplierKind, MultiplierModel};
+use luna_cim::nn::argmax;
+use luna_cim::report;
+use luna_cim::runtime::ArtifactStore;
+use luna_cim::Result;
+
+const USAGE: &str = "\
+repro — LUNA-CIM: LUT-based programmable neural processing in memory
+
+USAGE:
+  repro tables   [--id N]
+  repro figures  [--id N] [--csv]
+  repro mul <W> <Y>
+  repro simulate [--multiplier SLUG] [--weight W] [--inputs a,b,c]
+  repro serve    [--config FILE] [--requests N] [--clients N] [--multiplier SLUG]
+  repro eval     [--artifacts DIR]
+  repro ablation [--artifacts DIR]
+  repro export   [--out DIR]
+
+Multiplier slugs: ideal traditional dnc dnc-opt approx approx2 array-mult
+";
+
+/// Minimal flag parser: `--key value` pairs plus positional args.
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Self> {
+        let mut positional = Vec::new();
+        let mut flags = std::collections::HashMap::new();
+        let mut it = argv.iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(key) = arg.strip_prefix("--") {
+                let value = match it.peek() {
+                    Some(v) if !v.starts_with("--") => it.next().unwrap().clone(),
+                    _ => "true".to_string(), // boolean flag
+                };
+                flags.insert(key.to_string(), value);
+            } else {
+                positional.push(arg.clone());
+            }
+        }
+        Ok(Args { positional, flags })
+    }
+
+    fn flag(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn flag_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.flag(key) {
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("flag --{key}: cannot parse `{v}`")),
+            None => Ok(default),
+        }
+    }
+
+    fn multiplier(&self, key: &str) -> Result<Option<MultiplierKind>> {
+        match self.flag(key) {
+            None => Ok(None),
+            Some(v) => MultiplierKind::parse_slug(v)
+                .map(Some)
+                .ok_or_else(|| anyhow::anyhow!("unknown multiplier `{v}`")),
+        }
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let Some(cmd) = argv.first() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..])?;
+    match cmd.as_str() {
+        "tables" => cmd_tables(&args),
+        "figures" => cmd_figures(&args),
+        "mul" => cmd_mul(&args),
+        "simulate" => cmd_simulate(&args),
+        "serve" => cmd_serve(&args),
+        "eval" => cmd_eval(&args),
+        "ablation" => cmd_ablation(&args),
+        "export" => cmd_export(&args),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => anyhow::bail!("unknown command `{other}`\n{USAGE}"),
+    }
+}
+
+fn cmd_tables(args: &Args) -> Result<()> {
+    match args.flag("id") {
+        Some("1") => print!("{}", report::table1()),
+        Some("2") => print!("{}", report::table2()),
+        Some(n) => anyhow::bail!("no table {n}"),
+        None => print!("{}\n{}", report::table1(), report::table2()),
+    }
+    Ok(())
+}
+
+fn cmd_figures(args: &Args) -> Result<()> {
+    let csv = args.flag("csv").is_some();
+    match (args.flag("id"), csv) {
+        (Some("5"), true) => print!("{}", report::fig5_csv()),
+        (Some("6"), true) => print!("{}", report::fig6_csv()),
+        (Some("14"), true) => print!("{}", report::fig14_csv()),
+        (Some(n), _) => {
+            let id: u32 = n.parse().map_err(|_| anyhow::anyhow!("bad figure id `{n}`"))?;
+            print!("{}", report::figure(id));
+        }
+        (None, _) => {
+            for n in [1u32, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15, 16, 17, 18] {
+                println!("{}", report::figure(n));
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_mul(args: &Args) -> Result<()> {
+    anyhow::ensure!(args.positional.len() == 2, "usage: repro mul <W> <Y>");
+    let w: u8 = args.positional[0].parse()?;
+    let y: u8 = args.positional[1].parse()?;
+    anyhow::ensure!(w < 16 && y < 16, "operands are 4-bit");
+    for kind in MultiplierKind::ALL {
+        let model = MultiplierModel::new(kind);
+        println!(
+            "{:<18} {w} x {y} = {:3}  (error {:+})",
+            kind.name(),
+            model.mul(w, y),
+            kind.error(w, y)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let multiplier = args.multiplier("multiplier")?.unwrap_or(MultiplierKind::DncOpt);
+    let weight: u8 = args.flag_parse("weight", 6)?;
+    anyhow::ensure!(weight < 16, "weight is 4-bit");
+    let inputs = args.flag("inputs").unwrap_or("10,11,3,12");
+    let netlist = multiplier
+        .netlist()
+        .ok_or_else(|| anyhow::anyhow!("{multiplier} has no hardware netlist"))?;
+    let ys: Vec<u8> = inputs
+        .split(',')
+        .map(|s| s.trim().parse::<u8>())
+        .collect::<std::result::Result<_, _>>()?;
+    anyhow::ensure!(ys.iter().all(|&y| y < 16), "inputs are 4-bit");
+    let mut sim = luna_cim::logic::EventSim::new(&netlist);
+    sim.watch_bus("Y");
+    sim.watch_bus("OUT");
+    sim.program(&multiplier.program_image(weight).unwrap());
+    let vectors: Vec<Vec<bool>> =
+        ys.iter().map(|&y| luna_cim::logic::to_bits(y as u64, 4)).collect();
+    let waves = sim.run_schedule(&vectors, 2_000);
+    print!("{}", luna_cim::logic::BusTrace::new(waves).render());
+    println!(
+        "transitions: {}, events: {}, settle: {} ps",
+        sim.stats().transitions,
+        sim.stats().events,
+        sim.stats().settle_time_ps
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let mut cfg = match args.flag("config") {
+        Some(path) => Config::from_file(path)?,
+        None => Config::default(),
+    };
+    if let Some(m) = args.multiplier("multiplier")? {
+        cfg.multiplier = m;
+    }
+    let requests: usize = args.flag_parse("requests", 256)?;
+    let clients: usize = args.flag_parse("clients", 16)?;
+    serve_load(cfg, requests, clients)
+}
+
+/// Drive the coordinator with a synthetic client load and print metrics.
+fn serve_load(cfg: Config, requests: usize, clients: usize) -> Result<()> {
+    let store = ArtifactStore::new(&cfg.artifacts_dir);
+    let testset = store.load_testset()?;
+    let (server, handle) = CoordinatorServer::start(cfg.clone())?;
+    println!(
+        "serving with {} workers, batch {}, multiplier {}",
+        cfg.workers.count, cfg.batcher.max_batch, cfg.multiplier
+    );
+    let per_client = requests / clients.max(1);
+    let mut threads = Vec::new();
+    for c in 0..clients {
+        let handle = handle.clone();
+        let samples: Vec<Vec<f32>> = testset
+            .samples
+            .iter()
+            .cycle()
+            .skip(c * per_client)
+            .take(per_client)
+            .map(|s| s.pixels.clone())
+            .collect();
+        threads.push(std::thread::spawn(move || {
+            let mut ok = 0usize;
+            for px in samples {
+                if handle.submit(px).is_ok() {
+                    ok += 1;
+                }
+            }
+            ok
+        }));
+    }
+    let completed: usize = threads.into_iter().map(|t| t.join().unwrap_or(0)).sum();
+    let snap = server.metrics().snapshot();
+    println!("completed {completed}/{requests} requests");
+    println!(
+        "throughput {:.0} req/s | latency mean {:.0} us p50 {} us p99 {} us | batches {} (occupancy {:.2})",
+        snap.throughput_rps,
+        snap.mean_latency_us,
+        snap.p50_latency_us,
+        snap.p99_latency_us,
+        snap.batches,
+        snap.batch_occupancy()
+    );
+    println!(
+        "simulated CiM energy {:.2} nJ total ({:.1} fJ / request)",
+        snap.sim_energy_fj / 1e6,
+        snap.sim_energy_fj / completed.max(1) as f64
+    );
+    server.shutdown();
+    Ok(())
+}
+
+/// Design-choice ablations (fixed Z_LSB sweep, scheduling policy,
+/// LUT fan-out sharing).
+fn cmd_ablation(args: &Args) -> Result<()> {
+    use luna_cim::analysis::ablation;
+    let lib = tsmc65_library();
+
+    println!("-- fixed Z_LSB sweep (extends Fig 6: criterion comparison) --");
+    let store = ArtifactStore::new(args.flag("artifacts").unwrap_or("artifacts"));
+    let model_data = match (store.load_mlp(), store.load_testset()) {
+        (Ok(m), Ok(d)) => Some((m, d)),
+        _ => None,
+    };
+    let rows = ablation::fixed_zlsb_sweep(model_data.as_ref().map(|(m, d)| (m, d)));
+    println!("{:>5} {:>10} {:>10} {:>9}", "cand", "hamming", "MAE", "accuracy");
+    for r in rows.iter().filter(|r| r.candidate % 4 == 0 || r.candidate < 8) {
+        match r.accuracy {
+            Some(a) => println!(
+                "{:>5} {:>10.4} {:>10.3} {:>9.3}",
+                r.candidate, r.mean_hamming, r.element_mae, a
+            ),
+            None => println!(
+                "{:>5} {:>10.4} {:>10.3} {:>9}",
+                r.candidate, r.mean_hamming, r.element_mae, "-"
+            ),
+        }
+    }
+    let ham_best = rows.iter().min_by(|a, b| a.mean_hamming.total_cmp(&b.mean_hamming)).unwrap();
+    let mae_best = rows.iter().min_by(|a, b| a.element_mae.total_cmp(&b.element_mae)).unwrap();
+    println!(
+        "hamming picks {}, element-MAE picks {} (MAE {:.3} vs {:.3})",
+        ham_best.candidate, mae_best.candidate, mae_best.element_mae, ham_best.element_mae
+    );
+
+    println!("\n-- scheduling policy: weight-stationary vs naive reprogramming --");
+    let mlp = match &model_data {
+        Some((m, _)) => m.clone(),
+        None => luna_cim::nn::QuantMlp::random_digits(7),
+    };
+    for units in [64usize, 256, 2368] {
+        let r = ablation::stationarity_study(&lib, &mlp, units, 8, 8);
+        println!(
+            "  units {:>5}: stationary {:>12.0} fJ, naive {:>13.0} fJ  -> {:.1}x saved",
+            units, r.stationary_energy_fj, r.naive_energy_fj, r.ratio
+        );
+    }
+
+    println!("\n-- LUT fan-out sharing (Table II's hidden knob) --");
+    println!("{:>6} {:>16} {:>8} {:>8}", "width", "units/copy", "SRAMs", "MUXes");
+    for r in ablation::fanout_sharing_study(&[4, 8, 16]) {
+        println!("{:>5}b {:>16} {:>8} {:>8}", r.width, r.units_per_copy, r.srams, r.muxes);
+    }
+    Ok(())
+}
+
+/// Write every table and figure (text + CSVs) to a directory.
+fn cmd_export(args: &Args) -> Result<()> {
+    let out = std::path::PathBuf::from(args.flag("out").unwrap_or("results"));
+    std::fs::create_dir_all(&out)?;
+    std::fs::write(out.join("table1.txt"), report::table1())?;
+    std::fs::write(out.join("table2.txt"), report::table2())?;
+    for id in [1u32, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15, 16, 17, 18] {
+        std::fs::write(out.join(format!("fig{id:02}.txt")), report::figure(id))?;
+    }
+    std::fs::write(out.join("fig05.csv"), report::fig5_csv())?;
+    std::fs::write(out.join("fig06.csv"), report::fig6_csv())?;
+    std::fs::write(out.join("fig14.csv"), report::fig14_csv())?;
+    for kind in [MultiplierKind::Approx, MultiplierKind::Approx2] {
+        let m = luna_cim::analysis::error_map::error_map(kind);
+        std::fs::write(out.join(format!("errmap_{}.csv", kind.slug())), m.to_csv())?;
+    }
+    println!("wrote tables, figures and CSVs to {}", out.display());
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let artifacts = args.flag("artifacts").unwrap_or("artifacts");
+    let store = ArtifactStore::new(artifacts);
+    let meta = store.manifest()?;
+    let mlp = store.load_mlp()?;
+    let testset = store.load_testset()?;
+    let lib = tsmc65_library();
+    println!(
+        "model {:?}, batch {}, {} test samples, float train acc {:.3}",
+        meta.dims,
+        meta.batch,
+        testset.len(),
+        meta.train_accuracy
+    );
+    println!(
+        "{:<18} {:>9} {:>12} {:>14} {:>12}",
+        "configuration", "accuracy", "MAE(logits)", "energy/img fJ", "cycles/img"
+    );
+    for kind in [
+        MultiplierKind::Ideal,
+        MultiplierKind::DncOpt,
+        MultiplierKind::Approx,
+        MultiplierKind::Approx2,
+    ] {
+        let model = MultiplierModel::new(kind);
+        let ideal = MultiplierModel::new(MultiplierKind::Ideal);
+        let acc = testset.accuracy(|px| mlp.classify(px, &model));
+        let mut mae = 0.0f64;
+        let mut n = 0usize;
+        for s in testset.samples.iter().take(64) {
+            let a = mlp.forward(&s.pixels, &ideal);
+            let b = mlp.forward(&s.pixels, &model);
+            mae += a.iter().zip(&b).map(|(x, y)| (x - y).abs() as f64).sum::<f64>();
+            n += a.len();
+        }
+        mae /= n as f64;
+        let mut tiler = luna_cim::coordinator::Tiler::from_config(
+            &Config { multiplier: kind, ..Config::default() },
+            &lib,
+        );
+        let sched = tiler.schedule(&mlp, 1);
+        println!(
+            "{:<18} {:>9.3} {:>12.4} {:>14.1} {:>12}",
+            kind.name(),
+            acc,
+            mae,
+            sched.total_energy_fj,
+            sched.total_cycles
+        );
+    }
+
+    // PJRT cross-check: run the ideal artifact and compare classifications
+    // with the functional model on one batch.
+    let rt = luna_cim::runtime::PjrtRuntime::cpu()?;
+    let model = rt.load_hlo_text(store.mlp_hlo(MultiplierKind::Ideal))?;
+    let b = meta.batch;
+    let in_dim = meta.dims[0];
+    let out_dim = *meta.dims.last().unwrap();
+    let mut flat = vec![0.0f32; b * in_dim];
+    for (i, s) in testset.samples.iter().take(b).enumerate() {
+        flat[i * in_dim..(i + 1) * in_dim].copy_from_slice(&s.pixels);
+    }
+    let out = model.run_f32(&[(&flat, &[b as i64, in_dim as i64])])?;
+    let ideal = MultiplierModel::new(MultiplierKind::Ideal);
+    let mut agree = 0usize;
+    for i in 0..b.min(testset.len()) {
+        let pjrt_label = argmax(&out[0][i * out_dim..(i + 1) * out_dim]);
+        let rust_label = mlp.classify(&testset.samples[i].pixels, &ideal);
+        if pjrt_label == rust_label {
+            agree += 1;
+        }
+    }
+    println!("PJRT vs functional-model agreement on first batch: {agree}/{b}");
+    Ok(())
+}

@@ -1,0 +1,147 @@
+//! ApproxD&C — paper Figs 4 & 9.
+//!
+//! The LSB-side product is replaced by a fixed value `Z_LSB ≈ const`.
+//! Fig 5/6 of the paper establish that `0` is the optimal constant (it has
+//! the highest occurrence probability, 19/64 ≈ 0.2969, and the lowest mean
+//! per-bit Hamming distance, 0.275). Two structures:
+//!
+//! * [`netlist_fig4`] — generic fixed value wired from two storage rails
+//!   (a `0` bit and a `1` bit): **12 SRAM, 18 mux, 3 HA, 3 FA**;
+//! * [`netlist`] — the final Fig 9 form with `Z_LSB = 0`, where the adder
+//!   disappears entirely: **10 SRAM, 18 mux**, output is `Z_MSB << 2`.
+
+use super::parts;
+use crate::cells::{CellKind, CostReport};
+use crate::logic::Netlist;
+
+/// Behavioural model of the final (Fig 9) structure: `Z_LSB = 0`.
+pub fn value(w: u8, y: u8) -> u8 {
+    super::z_msb(w, y) << 2
+}
+
+/// Behavioural model of the Fig 4 structure with an arbitrary fixed
+/// `Z_LSB` (6-bit). Saturating at 8 bits never occurs for the optimal 0.
+pub fn value_fixed(w: u8, y: u8, fixed_zlsb: u8) -> u8 {
+    assert!(fixed_zlsb < 64);
+    (((super::z_msb(w, y) as u16) << 2) + fixed_zlsb as u16).min(255) as u8
+}
+
+/// Paper component counts for the final Fig 9 structure.
+pub fn cost() -> CostReport {
+    CostReport::from_pairs(&[(CellKind::SramCell, 10), (CellKind::Mux2, 18)])
+}
+
+/// Paper component counts for the Fig 4 structure.
+pub fn cost_fig4() -> CostReport {
+    CostReport::from_pairs(&[
+        (CellKind::SramCell, 12),
+        (CellKind::Mux2, 18),
+        (CellKind::HalfAdder, 3),
+        (CellKind::FullAdder, 3),
+    ])
+}
+
+/// Final ApproxD&C netlist (Fig 9): MSB-side unit only; `OUT = Z_MSB << 2`.
+pub fn netlist() -> Netlist {
+    let mut n = Netlist::default();
+    let y = n.input_bus("Y", 4);
+    let lut = parts::lut4_shared(&mut n, 4);
+    let z_msb = parts::chunk_unit(&mut n, &lut.entries, y[2], y[3]);
+    let zero = n.constant(false);
+    let mut out = vec![zero, zero];
+    out.extend(z_msb);
+    n.output_bus("OUT", out);
+    n
+}
+
+/// Fig 4 netlist: MSB-side unit plus a fixed `Z_LSB` pattern wired from two
+/// storage rails (one `0` cell, one `1` cell — the paper's "only 2 bits of
+/// storage" for the LSB side), combined by the usual shifted adder.
+pub fn netlist_fig4(fixed_zlsb: u8) -> Netlist {
+    assert!(fixed_zlsb < 64);
+    let mut n = Netlist::default();
+    let y = n.input_bus("Y", 4);
+    let lut = parts::lut4_shared(&mut n, 4);
+    let z_msb = parts::chunk_unit(&mut n, &lut.entries, y[2], y[3]);
+    // LSB side: two rail cells, pattern selected by wiring.
+    let rail0 = n.sram_bit(); // programmed 0
+    let rail1 = n.sram_bit(); // programmed 1
+    let z_lsb: Vec<_> =
+        (0..6).map(|i| if (fixed_zlsb >> i) & 1 == 1 { rail1 } else { rail0 }).collect();
+    let out = parts::add_shifted(&mut n, &z_lsb, &z_msb, 2);
+    n.output_bus("OUT", out);
+    n
+}
+
+/// Programming image for [`netlist`] (10 bits, shared-LUT layout).
+pub fn program_image(w: u8) -> Vec<bool> {
+    parts::lut4_shared_image(super::check4(w) as u64, 4)
+}
+
+/// Programming image for [`netlist_fig4`] (12 bits: shared LUT + rails).
+pub fn program_image_fig4(w: u8) -> Vec<bool> {
+    let mut bits = parts::lut4_shared_image(super::check4(w) as u64, 4);
+    bits.push(false); // rail0
+    bits.push(true); // rail1
+    bits
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logic::{from_bits, to_bits, Stepper};
+
+    #[test]
+    fn costs_match_paper() {
+        assert_eq!(netlist().cost_report(), cost());
+        assert_eq!(netlist_fig4(0b101).cost_report(), cost_fig4());
+    }
+
+    #[test]
+    fn final_netlist_matches_behavioural() {
+        let n = netlist();
+        let mut st = Stepper::new(&n);
+        for w in 0..16u8 {
+            st.program(&program_image(w));
+            for y in 0..16u8 {
+                let res = st.step(&n, &to_bits(y as u64, 4));
+                assert_eq!(from_bits(&res.outputs) as u8, value(w, y), "w={w} y={y}");
+            }
+        }
+    }
+
+    #[test]
+    fn fig4_netlist_matches_behavioural_for_sampled_constants() {
+        for fixed in [0u8, 1, 5, 12, 33, 45] {
+            let n = netlist_fig4(fixed);
+            let mut st = Stepper::new(&n);
+            for w in 0..16u8 {
+                st.program(&program_image_fig4(w));
+                for y in 0..16u8 {
+                    let res = st.step(&n, &to_bits(y as u64, 4));
+                    assert_eq!(
+                        from_bits(&res.outputs) as u8,
+                        value_fixed(w, y, fixed),
+                        "fixed={fixed} w={w} y={y}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn error_vs_exact_is_z_lsb() {
+        // Fig 7/8: the ApproxD&C error is exactly the discarded Z_LSB,
+        // ranging over 0..=45.
+        let mut max = 0i32;
+        for w in 0..16u8 {
+            for y in 0..16u8 {
+                let err = super::super::ideal_value(w, y) as i32 - value(w, y) as i32;
+                assert_eq!(err, super::super::z_lsb(w, y) as i32);
+                assert!(err >= 0);
+                max = max.max(err);
+            }
+        }
+        assert_eq!(max, 45);
+    }
+}

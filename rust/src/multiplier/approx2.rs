@@ -1,0 +1,148 @@
+//! ApproxD&C 2 — paper Fig 10.
+//!
+//! The LSB-side product is approximated *as a function of W*: `Z_LSB ≈ W`
+//! (the four LSBs of Z_LSB wired to `W`, the two MSBs to 0). This balances
+//! the error distribution around zero (Figs 11/12: error `W·(y_lo − 1)` ∈
+//! [−15, 30]) at the cost of a small adder.
+//!
+//! Paper totals: **12 SRAM, 18 mux, 4 HA, 1 FA**. The paper argues that
+//! because `max Z_MSB = 101101` the most-significant half-adder never
+//! carries out, so `OUT₇` is taken directly from `Z_MSB₅`. That argument
+//! has a corner case (see [`MSB_SHORTCUT_MISMATCHES`]): for 8 of the 256
+//! input pairs a carry *does* reach bit 7 and the shortcut output differs
+//! from the full sum `(Z_MSB << 2) + W`. We implement the circuit exactly
+//! as the paper describes and expose both arithmetic models.
+
+use super::parts;
+use crate::cells::{CellKind, CostReport};
+use crate::logic::Netlist;
+
+/// Arithmetic model used by the paper's MATLAB analysis (Figs 11–13):
+/// the full sum `(Z_MSB << 2) + W`.
+pub fn value(w: u8, y: u8) -> u8 {
+    (((super::z_msb(w, y) as u16) << 2) + super::check4(w) as u16) as u8
+}
+
+/// Bit-exact model of the paper's Fig 10 *circuit*, where `OUT₇ = Z_MSB₅`
+/// (the carry into bit 7 is dropped). Differs from [`value`] on exactly
+/// [`MSB_SHORTCUT_MISMATCHES`] of the 256 input pairs.
+pub fn hw_value(w: u8, y: u8) -> u8 {
+    let full = ((super::z_msb(w, y) as u16) << 2) + super::check4(w) as u16;
+    let msb = (super::z_msb(w, y) >> 5) & 1;
+    ((full as u8) & 0x7f) | (msb << 7)
+}
+
+/// Number of (w, y) pairs where the paper's MSB shortcut loses a carry:
+/// `(w=10, y_hi=3)` and `(w=15, y_hi=2)`, each across 4 values of `y_lo`.
+pub const MSB_SHORTCUT_MISMATCHES: usize = 8;
+
+/// Paper component counts (Fig 10 caption).
+pub fn cost() -> CostReport {
+    CostReport::from_pairs(&[
+        (CellKind::SramCell, 12),
+        (CellKind::Mux2, 18),
+        (CellKind::HalfAdder, 4),
+        (CellKind::FullAdder, 1),
+    ])
+}
+
+/// Structural netlist per Fig 10. Inputs: `Y` (4 bits). SRAM: 12 bits
+/// (shared LUT + two zero-rail cells feeding `Z_LSB[5:4]`, the paper's
+/// count). Output: `OUT` (8 bits).
+pub fn netlist() -> Netlist {
+    let mut n = Netlist::default();
+    let y = n.input_bus("Y", 4);
+    let lut = parts::lut4_shared(&mut n, 4);
+    let z_msb = parts::chunk_unit(&mut n, &lut.entries, y[2], y[3]);
+    // Z_LSB := W. The stored W row is reused for bits 0..3; two dedicated
+    // zero cells pad bits 4..5 (fanout copies — the paper counts 12 SRAMs).
+    let w_row: Vec<crate::logic::NetId> = n.sram_bits[1..5].to_vec(); // stored W bits inside the LUT
+    let _pad0 = n.sram_bit();
+    let _pad1 = n.sram_bit();
+
+    // Adder per the paper: OUT0,1 = W0,W1; HA at bit2; FA at bit3;
+    // HA chain at bits 4..6; OUT7 = Z_MSB5 directly (shortcut).
+    let mut out = vec![w_row[0], w_row[1]];
+    let (s2, c2) = n.half_adder(z_msb[0], w_row[2]);
+    out.push(s2);
+    let (s3, c3) = n.full_adder(z_msb[1], w_row[3], c2);
+    out.push(s3);
+    let (s4, c4) = n.half_adder(z_msb[2], c3);
+    out.push(s4);
+    let (s5, c5) = n.half_adder(z_msb[3], c4);
+    out.push(s5);
+    let (s6, _c6) = n.half_adder(z_msb[4], c5);
+    out.push(s6);
+    out.push(z_msb[5]); // the paper's shortcut: no carry into bit 7
+    n.output_bus("OUT", out);
+    n
+}
+
+/// Programming image: shared LUT (10 bits) + two zero pads = 12 bits.
+pub fn program_image(w: u8) -> Vec<bool> {
+    let mut bits = parts::lut4_shared_image(super::check4(w) as u64, 4);
+    bits.push(false);
+    bits.push(false);
+    bits
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logic::{from_bits, to_bits, Stepper};
+
+    #[test]
+    fn cost_matches_paper_fig10() {
+        assert_eq!(netlist().cost_report(), cost());
+    }
+
+    #[test]
+    fn netlist_matches_hw_model_exhaustively() {
+        let n = netlist();
+        let mut st = Stepper::new(&n);
+        for w in 0..16u8 {
+            st.program(&program_image(w));
+            for y in 0..16u8 {
+                let res = st.step(&n, &to_bits(y as u64, 4));
+                assert_eq!(from_bits(&res.outputs) as u8, hw_value(w, y), "w={w} y={y}");
+            }
+        }
+    }
+
+    #[test]
+    fn msb_shortcut_mismatch_set_is_exactly_8_pairs() {
+        let mut mismatches = Vec::new();
+        for w in 0..16u8 {
+            for y in 0..16u8 {
+                if value(w, y) != hw_value(w, y) {
+                    mismatches.push((w, y));
+                }
+            }
+        }
+        assert_eq!(mismatches.len(), MSB_SHORTCUT_MISMATCHES);
+        // All mismatches are the two (w, y_hi) corners the doc comment names.
+        for (w, y) in mismatches {
+            let y_hi = y >> 2;
+            assert!(
+                (w == 10 && y_hi == 3) || (w == 15 && y_hi == 2),
+                "unexpected mismatch at w={w} y={y}"
+            );
+        }
+    }
+
+    #[test]
+    fn error_range_matches_fig12() {
+        // Fig 12: error spans −15 .. 30 (= W·(y_lo − 1)).
+        let mut lo = i32::MAX;
+        let mut hi = i32::MIN;
+        for w in 0..16u8 {
+            for y in 0..16u8 {
+                let err = super::super::ideal_value(w, y) as i32 - value(w, y) as i32;
+                assert_eq!(err, w as i32 * ((y & 3) as i32 - 1));
+                lo = lo.min(err);
+                hi = hi.max(err);
+            }
+        }
+        assert_eq!((lo, hi), (-15, 30));
+    }
+}

@@ -1,0 +1,128 @@
+//! Conventional digital array multiplier — the non-LUT baseline.
+//!
+//! The paper's Digital-CiM discussion (§II) contrasts LUT lookup against
+//! conventional in-memory arithmetic. This module provides that comparator:
+//! a classic unsigned array multiplier (AND partial products + HA/FA
+//! reduction rows) with the weight held in SRAM (weight-stationary, like
+//! the LUT configs), so area/energy comparisons are apples-to-apples.
+//!
+//! For k = 4 the canonical costs are 16 AND2, 8 FA, 4 HA (+ 4 SRAM bits
+//! for the stationary weight).
+
+use crate::cells::CostReport;
+use crate::logic::{Bus, NetId, Netlist};
+
+/// Behavioural model — exact product.
+pub fn value(w: u8, y: u8) -> u8 {
+    super::ideal_value(w, y)
+}
+
+/// Structural netlist of the k×k array multiplier. Inputs: `Y` (k bits).
+/// SRAM: `W` (k bits, weight-stationary). Output: `OUT` (2k bits).
+pub fn netlist(k: u32) -> Netlist {
+    assert!((2..=8).contains(&k));
+    let k = k as usize;
+    let mut n = Netlist::default();
+    let y = n.input_bus("Y", k);
+    let w: Bus = n.sram_bus(k);
+
+    // Partial products pp[i][j] = w[j] & y[i]; row i carries weight 2^i.
+    let pp: Vec<Bus> =
+        (0..k).map(|i| (0..k).map(|j| n.and2(w[j], y[i])).collect()).collect();
+
+    // Ripple reduction row by row. Entering iteration i, `acc[j]` holds
+    // result bit (i-1)+j; its lowest bit is final and moves to `out`.
+    let mut out: Bus = Vec::with_capacity(2 * k);
+    let mut acc: Bus = pp[0].clone();
+    for row in pp.iter().skip(1) {
+        out.push(acc[0]);
+        let prev: Vec<NetId> = acc[1..].to_vec();
+        let mut next: Bus = Vec::with_capacity(k + 1);
+        let mut carry: Option<NetId> = None;
+        for j in 0..prev.len().max(k) {
+            let a = prev.get(j).copied();
+            let b = row.get(j).copied();
+            let (s, c) = match (a, b, carry) {
+                (Some(a), Some(b), None) => {
+                    let (s, c) = n.half_adder(a, b);
+                    (s, Some(c))
+                }
+                (Some(a), Some(b), Some(cin)) => {
+                    let (s, c) = n.full_adder(a, b, cin);
+                    (s, Some(c))
+                }
+                (Some(x), None, Some(cin)) | (None, Some(x), Some(cin)) => {
+                    let (s, c) = n.half_adder(x, cin);
+                    (s, Some(c))
+                }
+                (Some(x), None, None) | (None, Some(x), None) => (x, None),
+                (None, None, _) => unreachable!("loop bounded by operand widths"),
+            };
+            next.push(s);
+            carry = c;
+        }
+        if let Some(c) = carry {
+            next.push(c);
+        }
+        acc = next;
+    }
+    out.extend(acc);
+    n.output_bus("OUT", out);
+    n
+}
+
+/// Programming image: the k weight bits.
+pub fn program_image(k: u32, w: u64) -> Vec<bool> {
+    assert!(w < (1u64 << k));
+    crate::logic::to_bits(w, k as usize)
+}
+
+/// Component cost of the k-bit array multiplier netlist.
+pub fn cost(k: u32) -> CostReport {
+    netlist(k).cost_report()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cells::CellKind;
+    use crate::logic::{from_bits, to_bits, Stepper};
+
+    #[test]
+    fn matches_ideal_exhaustively_4b() {
+        let n = netlist(4);
+        let mut st = Stepper::new(&n);
+        for w in 0..16u8 {
+            st.program(&program_image(4, w as u64));
+            for y in 0..16u8 {
+                let res = st.step(&n, &to_bits(y as u64, 4));
+                assert_eq!(from_bits(&res.outputs) as u8, value(w, y), "w={w} y={y}");
+            }
+        }
+    }
+
+    #[test]
+    fn matches_product_3b_and_5b() {
+        for k in [3u32, 5] {
+            let n = netlist(k);
+            let mut st = Stepper::new(&n);
+            for w in 0..(1u64 << k) {
+                st.program(&program_image(k, w));
+                for y in 0..(1u64 << k) {
+                    let res = st.step(&n, &to_bits(y, k as usize));
+                    assert_eq!(from_bits(&res.outputs), w * y, "k={k} w={w} y={y}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn canonical_4b_costs() {
+        let r = cost(4);
+        assert_eq!(r.count(CellKind::And2), 16);
+        assert_eq!(r.count(CellKind::SramCell), 4);
+        // first reduction row: 2 HA + 2 FA; two more rows: 1 HA + 3 FA each
+        assert_eq!(r.count(CellKind::HalfAdder), 4);
+        assert_eq!(r.count(CellKind::FullAdder), 8);
+    }
+}

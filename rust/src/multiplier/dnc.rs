@@ -1,0 +1,82 @@
+//! Divide-and-conquer LUT multiplier — paper Fig 2.
+//!
+//! The 4b×4b product is split into two 4b×2b LUT lookups sharing one
+//! 4-entry × 6-bit LUT (both sub-multiplications use the same weight `W`,
+//! so the stored products are identical): `Z = (Z_MSB << 2) + Z_LSB`.
+//!
+//! Paper totals: **24 SRAM, 36 × 2:1 mux, 3 HA, 3 FA**.
+
+use super::parts;
+use crate::cells::{CellKind, CostReport};
+use crate::logic::Netlist;
+
+/// Behavioural model — exact (the D&C identity holds).
+pub fn value(w: u8, y: u8) -> u8 {
+    (super::z_msb(w, y) << 2) + super::z_lsb(w, y)
+}
+
+/// Paper component counts (Fig 2 caption).
+pub fn cost() -> CostReport {
+    CostReport::from_pairs(&[
+        (CellKind::SramCell, 24),
+        (CellKind::Mux2, 36),
+        (CellKind::HalfAdder, 3),
+        (CellKind::FullAdder, 3),
+    ])
+}
+
+/// Structural netlist. Inputs: `Y` (4 bits). SRAM: 24 bits (4 entries × 6
+/// bits, entry-major — see [`program_image`]). Output: `OUT` (8 bits).
+pub fn netlist() -> Netlist {
+    let mut n = Netlist::default();
+    let y = n.input_bus("Y", 4);
+    let entries = parts::lut4_plain(&mut n, 6);
+    let z_lsb = parts::chunk_unit(&mut n, &entries, y[0], y[1]);
+    let z_msb = parts::chunk_unit(&mut n, &entries, y[2], y[3]);
+    let out = parts::add_shifted(&mut n, &z_lsb, &z_msb, 2);
+    n.output_bus("OUT", out);
+    n
+}
+
+/// Programming image for weight `w`: the four 6-bit products `w·0 … w·3`.
+pub fn program_image(w: u8) -> Vec<bool> {
+    parts::lut4_plain_image(super::check4(w) as u64, 6)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logic::{from_bits, to_bits, Stepper};
+
+    #[test]
+    fn behavioural_equals_ideal_exhaustively() {
+        for w in 0..16u8 {
+            for y in 0..16u8 {
+                assert_eq!(value(w, y), super::super::ideal_value(w, y));
+            }
+        }
+    }
+
+    #[test]
+    fn netlist_cost_matches_paper_fig2() {
+        let r = netlist().cost_report();
+        assert_eq!(r.count(CellKind::SramCell), 24);
+        assert_eq!(r.count(CellKind::Mux2), 36);
+        assert_eq!(r.count(CellKind::HalfAdder), 3);
+        assert_eq!(r.count(CellKind::FullAdder), 3);
+        assert_eq!(r, cost());
+    }
+
+    #[test]
+    fn netlist_matches_behavioural_exhaustively() {
+        let n = netlist();
+        let mut st = Stepper::new(&n);
+        for w in 0..16u8 {
+            st.program(&program_image(w));
+            for y in 0..16u8 {
+                let res = st.step(&n, &to_bits(y as u64, 4));
+                assert_eq!(from_bits(&res.outputs) as u8, value(w, y), "w={w} y={y}");
+            }
+        }
+    }
+}

@@ -1,0 +1,196 @@
+//! Optimized D&C LUT multiplier generalized to any even width — Table II.
+//!
+//! For an n-bit × n-bit multiply (n even) the input `Y` is split into
+//! `n/2` two-bit chunks; each chunk has a 4:1 word-mux unit of width
+//! `n + 2` (3·(n+2) one-bit muxes). The shared-row LUT stores `2n + 2`
+//! bits per copy; following the paper's fan-out note ("the number of
+//! actual SRAMs will depend on Fanout considerations"), **one LUT copy
+//! drives two chunk units** — the replication that reproduces Table II's
+//! SRAM column exactly (4b: 10, 8b: 36, 16b: 136).
+//!
+//! Chunk products are combined by a **binary tree** of shifted ripple
+//! adders ([`super::parts::add_shifted`]); this tree shape — not a linear
+//! chain — is what reproduces Table II's HA/FA columns (8b: 11/21,
+//! 16b: 31/105).
+
+use super::parts;
+use crate::cells::{CellKind, CostReport};
+use crate::logic::{Bus, Netlist};
+
+/// Closed-form component counts for the optimized D&C multiplier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DncCounts {
+    pub srams: u64,
+    pub muxes: u64,
+    pub has: u64,
+    pub fas: u64,
+}
+
+/// Closed-form counts (validated against the constructed netlist in tests).
+pub fn counts(n: u32) -> DncCounts {
+    assert!(n >= 4 && n % 2 == 0, "width must be even and >= 4");
+    let chunks = (n / 2) as u64;
+    let copies = chunks.div_ceil(2);
+    let srams = copies * (2 * n as u64 + 2);
+    let muxes = chunks * 3 * (n as u64 + 2);
+    // binary adder tree: at level ℓ (0-based) operands are m_ℓ bits wide
+    // with relative shift s_ℓ = 2^(ℓ+1); each adder costs (s+1) HA +
+    // (m − s − 1) FA; widths grow by s per level.
+    let (mut has, mut fas) = (0u64, 0u64);
+    let mut width = n as u64 + 2;
+    let mut adders = chunks / 2;
+    let mut shift = 2u64;
+    while adders >= 1 {
+        has += adders * (shift + 1);
+        fas += adders * (width - shift - 1);
+        width += shift;
+        shift *= 2;
+        adders /= 2;
+    }
+    DncCounts { srams, muxes, has, fas }
+}
+
+/// Expected cost report from the closed forms.
+pub fn cost(n: u32) -> CostReport {
+    let c = counts(n);
+    CostReport::from_pairs(&[
+        (CellKind::SramCell, c.srams),
+        (CellKind::Mux2, c.muxes),
+        (CellKind::HalfAdder, c.has),
+        (CellKind::FullAdder, c.fas),
+    ])
+}
+
+/// Behavioural model — exact product of two n-bit operands.
+pub fn value(n: u32, w: u64, y: u64) -> u64 {
+    assert!(w < (1 << n) && y < (1 << n));
+    w * y
+}
+
+/// Structural netlist of the n-bit optimized D&C multiplier.
+///
+/// Inputs: `Y` (n bits). SRAM: `⌈n/4⌉` copies of the shared-row LUT
+/// (copy-major programming order, see [`program_image`]). Output: `OUT`
+/// (2n bits).
+pub fn netlist(n: u32) -> Netlist {
+    assert!(n >= 4 && n % 2 == 0, "width must be even and >= 4");
+    let chunks = (n / 2) as usize;
+    let mut net = Netlist::default();
+    let y = net.input_bus("Y", n as usize);
+
+    // LUT copies: one per two chunk units (paper's fan-out rule).
+    let copies: Vec<parts::SharedLut> =
+        (0..chunks.div_ceil(2)).map(|_| parts::lut4_shared(&mut net, n as usize)).collect();
+
+    // Chunk units: unit c selects with y[2c], y[2c+1] from copy c/2.
+    let mut products: Vec<Bus> = Vec::with_capacity(chunks);
+    for c in 0..chunks {
+        let lut = &copies[c / 2];
+        let entries = lut.entries.clone();
+        products.push(parts::chunk_unit(&mut net, &entries, y[2 * c], y[2 * c + 1]));
+    }
+
+    // Binary adder tree; at each level adjacent partials differ by a
+    // relative shift that doubles per level.
+    let mut level: Vec<Bus> = products;
+    let mut shift = 2usize;
+    while level.len() > 1 {
+        assert!(level.len() % 2 == 0, "chunk count is a power of two for supported widths");
+        let mut next: Vec<Bus> = Vec::with_capacity(level.len() / 2);
+        for pair in level.chunks(2) {
+            next.push(parts::add_shifted(&mut net, &pair[0], &pair[1], shift));
+        }
+        level = next;
+        shift *= 2;
+    }
+    net.output_bus("OUT", level.pop().expect("at least one partial"));
+    net
+}
+
+/// Programming image for weight `w`: the shared-LUT image repeated once
+/// per copy.
+pub fn program_image(n: u32, w: u64) -> Vec<bool> {
+    assert!(w < (1 << n));
+    let chunks = (n / 2) as usize;
+    let one = parts::lut4_shared_image(w, n as usize);
+    (0..chunks.div_ceil(2)).flat_map(|_| one.clone()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logic::{from_bits, to_bits, Stepper};
+
+    #[test]
+    fn table2_closed_forms() {
+        // Paper Table II, optimized D&C columns.
+        assert_eq!(counts(4), DncCounts { srams: 10, muxes: 36, has: 3, fas: 3 });
+        assert_eq!(counts(8), DncCounts { srams: 36, muxes: 120, has: 11, fas: 21 });
+        assert_eq!(counts(16), DncCounts { srams: 136, muxes: 432, has: 31, fas: 105 });
+    }
+
+    #[test]
+    fn netlist_counts_match_closed_forms() {
+        for n in [4u32, 8, 16] {
+            let r = netlist(n).cost_report();
+            let c = counts(n);
+            assert_eq!(r.count(CellKind::SramCell), c.srams, "sram n={n}");
+            assert_eq!(r.count(CellKind::Mux2), c.muxes, "mux n={n}");
+            assert_eq!(r.count(CellKind::HalfAdder), c.has, "ha n={n}");
+            assert_eq!(r.count(CellKind::FullAdder), c.fas, "fa n={n}");
+        }
+    }
+
+    #[test]
+    fn netlist_4b_is_exact_exhaustively() {
+        let n = netlist(4);
+        let mut st = Stepper::new(&n);
+        for w in 0..16u64 {
+            st.program(&program_image(4, w));
+            for y in 0..16u64 {
+                let res = st.step(&n, &to_bits(y, 4));
+                assert_eq!(from_bits(&res.outputs), w * y, "w={w} y={y}");
+            }
+        }
+    }
+
+    #[test]
+    fn netlist_8b_is_exact_sampled() {
+        let n = netlist(8);
+        let mut st = Stepper::new(&n);
+        for w in [0u64, 1, 2, 17, 85, 170, 200, 255] {
+            st.program(&program_image(8, w));
+            for y in [0u64, 1, 3, 16, 99, 128, 254, 255] {
+                let res = st.step(&n, &to_bits(y, 8));
+                assert_eq!(from_bits(&res.outputs), w * y, "w={w} y={y}");
+            }
+        }
+    }
+
+    #[test]
+    fn netlist_16b_is_exact_sampled() {
+        let n = netlist(16);
+        let mut st = Stepper::new(&n);
+        for w in [0u64, 1, 255, 4097, 40000, 65535] {
+            st.program(&program_image(16, w));
+            for y in [0u64, 1, 2, 513, 32768, 65535] {
+                let res = st.step(&n, &to_bits(y, 16));
+                assert_eq!(from_bits(&res.outputs), w * y, "w={w} y={y}");
+            }
+        }
+    }
+
+    #[test]
+    fn area_benefit_vs_traditional_grows_with_width() {
+        // Paper abstract: "up to approximately 3.7× less area" for the
+        // D&C approach; at the transistor level the ratio keeps growing
+        // with width (Table II: 16b traditional is astronomically larger).
+        let lib = crate::cells::tsmc65_library();
+        let t4 = super::super::traditional::cost(4).transistors(&lib);
+        let d4 = cost(4).transistors(&lib);
+        assert!(t4 as f64 / d4 as f64 > 2.0);
+        let t8 = super::super::traditional::cost(8).transistors(&lib);
+        let d8 = cost(8).transistors(&lib);
+        assert!(t8 as f64 / d8 as f64 > 10.0);
+    }
+}

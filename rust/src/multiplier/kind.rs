@@ -1,0 +1,228 @@
+//! Unified handle over every 4-bit multiplier configuration.
+
+use super::{approx, approx2, array_mult, dnc, dnc_opt, traditional};
+use crate::cells::CostReport;
+use crate::logic::Netlist;
+use std::fmt;
+
+/// Every multiplier configuration the paper evaluates (plus the digital
+/// array baseline and the exact "IDEAL" reference of Fig 13).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MultiplierKind {
+    /// Exact arithmetic (paper's "IDEAL"); no LUT hardware.
+    Ideal,
+    /// Fig 1 — traditional full-LUT.
+    Traditional,
+    /// Fig 2 — divide & conquer.
+    Dnc,
+    /// Fig 3 — optimized D&C (shared LUT rows).
+    DncOpt,
+    /// Fig 9 — ApproxD&C with Z_LSB = 0.
+    Approx,
+    /// Fig 10 — ApproxD&C 2 with Z_LSB = W.
+    Approx2,
+    /// Conventional digital array multiplier (baseline).
+    ArrayMult,
+}
+
+impl MultiplierKind {
+    pub const ALL: [MultiplierKind; 7] = [
+        MultiplierKind::Ideal,
+        MultiplierKind::Traditional,
+        MultiplierKind::Dnc,
+        MultiplierKind::DncOpt,
+        MultiplierKind::Approx,
+        MultiplierKind::Approx2,
+        MultiplierKind::ArrayMult,
+    ];
+
+    /// The LUT-based configurations of the paper's Fig 16 comparison.
+    pub const PAPER_CONFIGS: [MultiplierKind; 5] = [
+        MultiplierKind::Traditional,
+        MultiplierKind::Dnc,
+        MultiplierKind::DncOpt,
+        MultiplierKind::Approx,
+        MultiplierKind::Approx2,
+    ];
+
+    /// Stable kebab-case identifier (artifact filenames, CLI, config).
+    pub fn slug(self) -> &'static str {
+        match self {
+            MultiplierKind::Ideal => "ideal",
+            MultiplierKind::Traditional => "traditional",
+            MultiplierKind::Dnc => "dnc",
+            MultiplierKind::DncOpt => "dnc-opt",
+            MultiplierKind::Approx => "approx",
+            MultiplierKind::Approx2 => "approx2",
+            MultiplierKind::ArrayMult => "array-mult",
+        }
+    }
+
+    /// Parse a slug (case-insensitive).
+    pub fn parse_slug(s: &str) -> Option<MultiplierKind> {
+        let s = s.trim().to_ascii_lowercase();
+        Self::ALL.iter().copied().find(|k| k.slug() == s)
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            MultiplierKind::Ideal => "IDEAL",
+            MultiplierKind::Traditional => "Traditional LUT",
+            MultiplierKind::Dnc => "D&C",
+            MultiplierKind::DncOpt => "Optimized D&C",
+            MultiplierKind::Approx => "ApproxD&C",
+            MultiplierKind::Approx2 => "ApproxD&C 2",
+            MultiplierKind::ArrayMult => "Array multiplier",
+        }
+    }
+
+    /// Behavioural 4b×4b product under this configuration — the arithmetic
+    /// the paper's MATLAB analysis uses (Fig 13).
+    pub fn value(self, w: u8, y: u8) -> u8 {
+        match self {
+            MultiplierKind::Ideal => super::ideal_value(w, y),
+            MultiplierKind::Traditional => traditional::value(w, y),
+            MultiplierKind::Dnc => dnc::value(w, y),
+            MultiplierKind::DncOpt => dnc_opt::value(w, y),
+            MultiplierKind::Approx => approx::value(w, y),
+            MultiplierKind::Approx2 => approx2::value(w, y),
+            MultiplierKind::ArrayMult => array_mult::value(w, y),
+        }
+    }
+
+    /// Signed error vs the exact product.
+    pub fn error(self, w: u8, y: u8) -> i32 {
+        super::ideal_value(w, y) as i32 - self.value(w, y) as i32
+    }
+
+    /// Whether this configuration computes exact products.
+    pub fn is_exact(self) -> bool {
+        !matches!(self, MultiplierKind::Approx | MultiplierKind::Approx2)
+    }
+
+    /// Structural netlist (None for the hardware-less IDEAL reference).
+    pub fn netlist(self) -> Option<Netlist> {
+        match self {
+            MultiplierKind::Ideal => None,
+            MultiplierKind::Traditional => Some(traditional::netlist(4)),
+            MultiplierKind::Dnc => Some(dnc::netlist()),
+            MultiplierKind::DncOpt => Some(dnc_opt::netlist()),
+            MultiplierKind::Approx => Some(approx::netlist()),
+            MultiplierKind::Approx2 => Some(approx2::netlist()),
+            MultiplierKind::ArrayMult => Some(array_mult::netlist(4)),
+        }
+    }
+
+    /// SRAM programming image for weight `w` (None for IDEAL).
+    pub fn program_image(self, w: u8) -> Option<Vec<bool>> {
+        match self {
+            MultiplierKind::Ideal => None,
+            MultiplierKind::Traditional => Some(traditional::program_image(4, w as u64)),
+            MultiplierKind::Dnc => Some(dnc::program_image(w)),
+            MultiplierKind::DncOpt => Some(dnc_opt::program_image(w)),
+            MultiplierKind::Approx => Some(approx::program_image(w)),
+            MultiplierKind::Approx2 => Some(approx2::program_image(w)),
+            MultiplierKind::ArrayMult => Some(array_mult::program_image(4, w as u64)),
+        }
+    }
+
+    /// Component cost (empty for IDEAL).
+    pub fn cost(self) -> CostReport {
+        match self {
+            MultiplierKind::Ideal => CostReport::new(),
+            MultiplierKind::Traditional => traditional::cost(4),
+            MultiplierKind::Dnc => dnc::cost(),
+            MultiplierKind::DncOpt => dnc_opt::cost(),
+            MultiplierKind::Approx => approx::cost(),
+            MultiplierKind::Approx2 => approx2::cost(),
+            MultiplierKind::ArrayMult => array_mult::cost(4),
+        }
+    }
+}
+
+impl fmt::Display for MultiplierKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A programmed behavioural multiplier — literally a 256-entry lookup
+/// table (all 16×16 variant products precomputed at construction), which
+/// is both the fast path for the NN substrate / coordinator cost model
+/// and the software image of what the paper builds in SRAM.
+#[derive(Debug, Clone, Copy)]
+pub struct MultiplierModel {
+    pub kind: MultiplierKind,
+    table: [u8; 256],
+}
+
+impl MultiplierModel {
+    pub fn new(kind: MultiplierKind) -> Self {
+        let mut table = [0u8; 256];
+        for w in 0..16u8 {
+            for y in 0..16u8 {
+                table[((w as usize) << 4) | y as usize] = kind.value(w, y);
+            }
+        }
+        MultiplierModel { kind, table }
+    }
+
+    /// Product of 4-bit `w` and `y` under this configuration (one load).
+    #[inline]
+    pub fn mul(&self, w: u8, y: u8) -> u8 {
+        debug_assert!(w < 16 && y < 16);
+        self.table[((w as usize) << 4) | (y as usize & 0xf)]
+    }
+
+    /// Dot product of 4-bit vectors under this configuration (the MAC the
+    /// paper's Fig 1 frames: per-element LUT products, exact accumulation).
+    #[inline]
+    pub fn dot(&self, w: &[u8], y: &[u8]) -> u32 {
+        assert_eq!(w.len(), y.len());
+        w.iter().zip(y).map(|(&a, &b)| self.mul(a, b) as u32).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn netlists_match_behavioural_for_all_kinds() {
+        use crate::logic::{from_bits, to_bits, Stepper};
+        for kind in MultiplierKind::ALL {
+            let Some(netlist) = kind.netlist() else { continue };
+            let mut st = Stepper::new(&netlist);
+            for w in 0..16u8 {
+                st.program(&kind.program_image(w).unwrap());
+                for y in 0..16u8 {
+                    let got = {
+                        let res = st.step(&netlist, &to_bits(y as u64, 4));
+                        from_bits(&res.outputs) as u8
+                    };
+                    let want = match kind {
+                        // the circuit drops the carry into bit 7 (Fig 10)
+                        MultiplierKind::Approx2 => crate::multiplier::approx2::hw_value(w, y),
+                        _ => kind.value(w, y),
+                    };
+                    assert_eq!(got, want, "{kind} w={w} y={y}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn exactness_flags() {
+        for kind in MultiplierKind::ALL {
+            let exact = (0..16u8)
+                .all(|w| (0..16u8).all(|y| kind.value(w, y) == w * y));
+            assert_eq!(exact, kind.is_exact(), "{kind}");
+        }
+    }
+
+    #[test]
+    fn dot_product_accumulates() {
+        let m = MultiplierModel::new(MultiplierKind::Ideal);
+        assert_eq!(m.dot(&[1, 2, 3], &[4, 5, 6]), 4 + 10 + 18);
+    }
+}

@@ -1,0 +1,77 @@
+//! LUT-based multiplier configurations — the paper's core contribution.
+//!
+//! Each configuration provides three faces:
+//!
+//! 1. a **behavioural model** (`value(w, y)`) — the arithmetic the paper's
+//!    MATLAB analysis uses (Figs 5–8, 11–13);
+//! 2. a **structural netlist** built from [`crate::logic`] primitives —
+//!    the circuit the paper lays out (Figs 1–4, 9, 10), functionally
+//!    verified against the behavioural model exhaustively in tests;
+//! 3. a **cost report** — SRAM/mux/adder counts (Tables I, II) and the
+//!    transistor/area/energy views (Figs 15, 16, 18).
+//!
+//! Configurations:
+//!
+//! | module          | paper figure | idea |
+//! |-----------------|--------------|------|
+//! | [`traditional`] | Fig 1        | full 2ᵏ-entry LUT |
+//! | [`dnc`]         | Fig 2        | two 4b×2b LUTs + ripple add |
+//! | [`dnc_opt`]     | Fig 3        | shared/derived LUT rows |
+//! | [`approx`]      | Figs 4 & 9   | Z_LSB ≈ fixed (0 optimal) |
+//! | [`approx2`]     | Fig 10       | Z_LSB ≈ W |
+//! | [`generic`]     | Table II     | optimized D&C at any even width |
+//! | [`array_mult`]  | (baseline)   | conventional digital array multiplier |
+
+pub mod approx;
+pub mod approx2;
+pub mod array_mult;
+pub mod dnc;
+pub mod dnc_opt;
+pub mod generic;
+pub mod traditional;
+
+mod kind;
+pub(crate) mod parts;
+
+pub use kind::{MultiplierKind, MultiplierModel};
+
+/// 4-bit operand mask helper.
+pub(crate) fn check4(x: u8) -> u8 {
+    assert!(x < 16, "operand {x} out of 4-bit range");
+    x
+}
+
+/// Exact product of two 4-bit operands ("IDEAL" in the paper's Fig 13).
+pub fn ideal_value(w: u8, y: u8) -> u8 {
+    check4(w) * check4(y)
+}
+
+/// Z_MSB of the D&C split: `w * (y >> 2)` — the 4b×2b MSB-side product.
+pub fn z_msb(w: u8, y: u8) -> u8 {
+    check4(w) * (check4(y) >> 2)
+}
+
+/// Z_LSB of the D&C split: `w * (y & 3)` — the 4b×2b LSB-side product.
+pub fn z_lsb(w: u8, y: u8) -> u8 {
+    check4(w) * (check4(y) & 3)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dnc_identity_holds_exhaustively() {
+        for w in 0..16u8 {
+            for y in 0..16u8 {
+                assert_eq!(((z_msb(w, y) as u16) << 2) + z_lsb(w, y) as u16, (w as u16) * (y as u16));
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_range_operand_panics() {
+        let _ = ideal_value(16, 0);
+    }
+}

@@ -1,0 +1,166 @@
+//! Shared structural building blocks for the LUT multiplier netlists.
+
+use crate::logic::{Bus, Netlist};
+
+/// Four LUT entry buses of width `w` for a 4-entry (2-bit-select) LUT,
+/// each entry fully stored in SRAM — the *unoptimized* D&C storage of
+/// Fig 2 (`4 · w` SRAM bits).
+pub fn lut4_plain(n: &mut Netlist, width: usize) -> [Bus; 4] {
+    [n.sram_bus(width), n.sram_bus(width), n.sram_bus(width), n.sram_bus(width)]
+}
+
+/// Programming image for [`lut4_plain`]: the four products `w·0 … w·3`,
+/// little-endian, entry-major.
+pub fn lut4_plain_image(w: u64, width: usize) -> Vec<bool> {
+    (0..4u64).flat_map(|y| crate::logic::to_bits(w * y, width)).collect()
+}
+
+/// The optimized shared-row LUT of Fig 3 for an `nw`-bit weight.
+///
+/// Stores `2·nw + 2` SRAM bits: one zero rail `z0`, the `nw` bits of `W`
+/// (the `W×01` row), and the `nw+1` MSBs of `W×11` (its LSB is `W₀`,
+/// reused). The `W×10` row is the stored `W` left-shifted *by wiring*.
+/// Returns the four `(nw+2)`-bit entry buses.
+pub struct SharedLut {
+    pub entries: [Bus; 4],
+    /// Number of SRAM bits this LUT stores (2·nw + 2).
+    pub sram_bits: usize,
+}
+
+pub fn lut4_shared(n: &mut Netlist, nw: usize) -> SharedLut {
+    let width = nw + 2;
+    let z0 = n.sram_bit(); // programmed to 0
+    let w = n.sram_bus(nw); // W×01 row
+    let t11 = n.sram_bus(nw + 1); // W×11 row, bits 1..=nw+1
+
+    // e00 = 0…0 (all bits from the zero rail)
+    let e00: Bus = vec![z0; width];
+    // e01 = W zero-extended
+    let mut e01: Bus = w.clone();
+    e01.extend([z0, z0]);
+    // e10 = W << 1 (wired shift of the stored W row)
+    let mut e10: Bus = vec![z0];
+    e10.extend(w.iter().copied());
+    e10.push(z0);
+    // e11 = {t11, W₀}: LSB reuses the stored W₀
+    let mut e11: Bus = vec![w[0]];
+    e11.extend(t11.iter().copied());
+
+    SharedLut { entries: [e00, e01, e10, e11], sram_bits: 2 * nw + 2 }
+}
+
+/// Programming image for [`lut4_shared`]: `[z0=0, W bits, (3W)>>1 bits]`.
+pub fn lut4_shared_image(w: u64, nw: usize) -> Vec<bool> {
+    let mut bits = vec![false]; // z0
+    bits.extend(crate::logic::to_bits(w, nw));
+    bits.extend(crate::logic::to_bits((3 * w) >> 1, nw + 1));
+    bits
+}
+
+/// One D&C chunk unit: a 4:1 word mux over the LUT entries, selected by a
+/// 2-bit chunk of `Y`. Costs `3 · width` `Mux2` cells.
+pub fn chunk_unit(n: &mut Netlist, entries: &[Bus; 4], s0: crate::logic::NetId, s1: crate::logic::NetId) -> Bus {
+    n.mux4_bus([&entries[0], &entries[1], &entries[2], &entries[3]], s0, s1)
+}
+
+/// Ripple combine `a + (b << shift)` the way the paper sizes its adders:
+///
+/// * bits `0 .. shift` pass through from `a`;
+/// * the first overlapping column is a half adder, the remaining
+///   `overlap − 1` columns are full adders (carry chain);
+/// * the top `shift` columns (bits of `b` above `a`) are half adders
+///   absorbing the carry;
+/// * the final carry-out is dropped — in every use the true result fits
+///   the output width (the paper's "max Z_MSB = 101101" argument).
+///
+/// Requires `a.len() == b.len()`; returns `a.len() + shift` bits.
+/// Cost: `(shift + 1)` HA + `(a.len() − shift − 1)` FA.
+pub fn add_shifted(n: &mut Netlist, a: &Bus, b: &Bus, shift: usize) -> Bus {
+    assert_eq!(a.len(), b.len(), "add_shifted operands must be equal width");
+    let m = a.len();
+    assert!(shift >= 1 && shift < m);
+    let mut out = Vec::with_capacity(m + shift);
+    out.extend(a[..shift].iter().copied());
+    // first overlap column: HA
+    let (s, mut carry) = n.half_adder(a[shift], b[0]);
+    out.push(s);
+    // remaining overlap columns: FA
+    for i in (shift + 1)..m {
+        let (s, c) = n.full_adder(a[i], b[i - shift], carry);
+        out.push(s);
+        carry = c;
+    }
+    // top columns: HA absorbing the carry
+    for i in (m - shift)..m {
+        let (s, c) = n.half_adder(b[i], carry);
+        out.push(s);
+        carry = c;
+    }
+    // final carry dropped by construction (result fits m + shift bits)
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logic::{from_bits, to_bits, Netlist, Stepper};
+
+    #[test]
+    fn shared_lut_produces_all_four_products() {
+        for w in 0..16u64 {
+            let mut n = Netlist::default();
+            let sel = n.input_bus("sel", 2);
+            let lut = lut4_shared(&mut n, 4);
+            let out = chunk_unit(&mut n, &lut.entries, sel[0], sel[1]);
+            n.output_bus("OUT", out);
+            let mut st = Stepper::new(&n);
+            st.program(&lut4_shared_image(w, 4));
+            for y in 0..4u64 {
+                let res = st.step(&n, &to_bits(y, 2));
+                assert_eq!(from_bits(&res.outputs), w * y, "w={w} y={y}");
+            }
+        }
+    }
+
+    #[test]
+    fn shared_lut_stores_10_bits_for_4b() {
+        let mut n = Netlist::default();
+        let lut = lut4_shared(&mut n, 4);
+        assert_eq!(lut.sram_bits, 10);
+        assert_eq!(n.sram_bits.len(), 10);
+    }
+
+    #[test]
+    fn add_shifted_is_correct_and_costs_match() {
+        // 6b + (6b << 2) — the Fig 2/3 adder: 3 HA + 3 FA.
+        let mut n = Netlist::default();
+        let a = n.input_bus("a", 6);
+        let b = n.input_bus("b", 6);
+        let out = add_shifted(&mut n, &a, &b, 2);
+        assert_eq!(out.len(), 8);
+        n.output_bus("OUT", out);
+        let r = n.cost_report();
+        assert_eq!(r.count(crate::cells::CellKind::HalfAdder), 3);
+        assert_eq!(r.count(crate::cells::CellKind::FullAdder), 3);
+        let mut st = Stepper::new(&n);
+        // Exhaustive over the reachable D&C domain: a = W·y_lo, b = W·y_hi.
+        for w in 0..16u64 {
+            for ylo in 0..4u64 {
+                for yhi in 0..4u64 {
+                    let mut stim = to_bits(w * ylo, 6);
+                    stim.extend(to_bits(w * yhi, 6));
+                    let res = st.step(&n, &stim);
+                    assert_eq!(from_bits(&res.outputs), w * ylo + ((w * yhi) << 2));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn plain_lut_image_matches_products() {
+        let img = lut4_plain_image(5, 6);
+        assert_eq!(img.len(), 24);
+        // entry 2 (w*2 = 10): bits 12..18
+        assert_eq!(from_bits(&img[12..18]), 10);
+    }
+}

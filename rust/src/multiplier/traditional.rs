@@ -1,0 +1,113 @@
+//! Traditional (unoptimized) LUT-based multiplier — paper Fig 1 / Table I.
+//!
+//! For a k-bit × k-bit multiply with a fixed weight `W`, all `2^k` products
+//! are precomputed into SRAM (each `2k` bits wide) and a `2^k:1` word mux
+//! selects by the input `Y`. Storage: `2^k · 2k` bits; select logic:
+//! `(2^k − 1) · 2k` one-bit 2:1 muxes — exactly the Table I columns.
+
+use crate::cells::{CellKind, CostReport};
+use crate::logic::{to_bits, Netlist};
+
+/// Number of SRAM bits required (Table I column 2).
+pub fn sram_bits(k: u32) -> u64 {
+    (1u64 << k) * (2 * k as u64)
+}
+
+/// Number of 1-bit 2:1 muxes required (Table I column 3).
+pub fn mux_count(k: u32) -> u64 {
+    ((1u64 << k) - 1) * (2 * k as u64)
+}
+
+/// Component cost of the traditional k-bit LUT multiplier.
+pub fn cost(k: u32) -> CostReport {
+    CostReport::from_pairs(&[(CellKind::SramCell, sram_bits(k)), (CellKind::Mux2, mux_count(k))])
+}
+
+/// Behavioural model: LUT lookup == exact product.
+pub fn value(w: u8, y: u8) -> u8 {
+    super::ideal_value(w, y)
+}
+
+/// Structural netlist of the k-bit traditional LUT multiplier.
+///
+/// Inputs: bus `Y` (k bits). SRAM: `2^k` words of `2k` bits (programming
+/// order: word 0 first, little-endian bits). Output: bus `OUT` (2k bits).
+pub fn netlist(k: u32) -> Netlist {
+    assert!((1..=8).contains(&k), "supported widths: 1..=8");
+    let mut n = Netlist::default();
+    let y = n.input_bus("Y", k as usize);
+    let out_w = 2 * k as usize;
+    // SRAM words, one per possible Y value.
+    let words: Vec<Vec<crate::logic::NetId>> =
+        (0..(1usize << k)).map(|_| n.sram_bus(out_w)).collect();
+    // Per output bit, a 2^k:1 mux tree over the stored words.
+    let mut out = Vec::with_capacity(out_w);
+    for bit in 0..out_w {
+        let ins: Vec<_> = words.iter().map(|wd| wd[bit]).collect();
+        out.push(n.mux_tree(&ins, &y));
+    }
+    n.output_bus("OUT", out);
+    n
+}
+
+/// Programming image for weight `w`: the `2^k` products, little-endian
+/// bits, word-major — matches the netlist's SRAM programming order.
+pub fn program_image(k: u32, w: u64) -> Vec<bool> {
+    assert!(w < (1u64 << k));
+    let out_w = 2 * k as usize;
+    (0..(1u64 << k)).flat_map(|y| to_bits(w * y, out_w)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logic::{from_bits, to_bits, Stepper};
+
+    #[test]
+    fn table1_counts() {
+        // Paper Table I rows, 3b..8b.
+        let expect = [(3, 48, 42), (4, 128, 120), (5, 320, 310), (6, 768, 756), (7, 1792, 1778), (8, 4096, 4080)];
+        for (k, srams, muxes) in expect {
+            assert_eq!(sram_bits(k), srams, "sram k={k}");
+            assert_eq!(mux_count(k), muxes, "mux k={k}");
+        }
+    }
+
+    #[test]
+    fn netlist_cost_matches_formulas() {
+        for k in [2u32, 3, 4] {
+            let n = netlist(k);
+            let r = n.cost_report();
+            assert_eq!(r.count(CellKind::SramCell), sram_bits(k));
+            assert_eq!(r.count(CellKind::Mux2), mux_count(k));
+            assert_eq!(r.count(CellKind::HalfAdder), 0);
+            assert_eq!(r.count(CellKind::FullAdder), 0);
+        }
+    }
+
+    #[test]
+    fn netlist_matches_behavioural_exhaustively_4b() {
+        let n = netlist(4);
+        let mut st = Stepper::new(&n);
+        for w in 0..16u8 {
+            st.program(&program_image(4, w as u64));
+            for y in 0..16u8 {
+                let res = st.step(&n, &to_bits(y as u64, 4));
+                assert_eq!(from_bits(&res.outputs) as u8, value(w, y), "w={w} y={y}");
+            }
+        }
+    }
+
+    #[test]
+    fn netlist_matches_behavioural_3b() {
+        let n = netlist(3);
+        let mut st = Stepper::new(&n);
+        for w in 0..8u64 {
+            st.program(&program_image(3, w));
+            for y in 0..8u64 {
+                let res = st.step(&n, &to_bits(y, 3));
+                assert_eq!(from_bits(&res.outputs), w * y, "w={w} y={y}");
+            }
+        }
+    }
+}

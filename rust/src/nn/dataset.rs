@@ -1,0 +1,193 @@
+//! Synthetic 8×8 digits dataset.
+//!
+//! The paper motivates 4–8 bit precision with "image and pattern
+//! recognition applications" (§II, refs [24]–[26]). We use a deterministic
+//! synthetic digits workload: 10 hand-drawn 8×8 glyphs perturbed by pixel
+//! noise and ±1-pixel shifts. The same generator runs in
+//! `python/compile/data.py` (same glyphs, same parametrization) so the
+//! JAX-trained weights and the Rust runtime agree on the distribution;
+//! the *test set* itself is exported by `aot.py` as `artifacts/testset.bin`
+//! so evaluation bits match exactly.
+
+use crate::util::Rng;
+
+/// One labelled sample: 64 pixels in [0, 1], label 0..=9.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub pixels: Vec<f32>,
+    pub label: usize,
+}
+
+/// The 10 glyphs, one string per digit, `#` = ink. Shared with the Python
+/// generator (keep in sync with `python/compile/data.py`).
+pub const GLYPHS: [&str; 10] = [
+    // 0
+    ".####...#..#...#..#...#..#...#..#...#..#...#..#...####..........",
+    // 1
+    "..##....###.....##......##......##......##......####............",
+    // 2
+    ".####...#..#......#.....##.....#......##......####.............",
+    // 3
+    ".####......#....###.......#.......#...#..#....###..............",
+    // 4
+    ".#..#...#..#...#..#...####......#.......#.......#...............",
+    // 5
+    ".####...#......###........#.......#...#..#....###..............",
+    // 6
+    "..###...#......####....#..#...#..#...#..#....###...............",
+    // 7
+    ".####......#.....#......#......#.......#.......#...............",
+    // 8
+    ".####...#..#....##.....#..#...#..#...#..#....####..............",
+    // 9
+    ".####...#..#...#..#....####.......#......#....##................",
+];
+
+/// Deterministic synthetic digits dataset.
+#[derive(Debug, Clone)]
+pub struct DigitsDataset {
+    pub samples: Vec<Sample>,
+}
+
+impl DigitsDataset {
+    /// Generate `per_digit` samples of each digit with the given seed.
+    pub fn generate(per_digit: usize, seed: u64) -> Self {
+        let mut rng = Rng::seed_from_u64(seed);
+        let glyphs: Vec<Vec<f32>> = GLYPHS.iter().map(|g| glyph_pixels(g)).collect();
+        let mut samples = Vec::with_capacity(per_digit * 10);
+        for rep in 0..per_digit {
+            for (label, glyph) in glyphs.iter().enumerate() {
+                // ±1 pixel shift, pixel dropout and additive noise
+                let dx = rng.gen_range_i64(-1, 2) as i32;
+                let dy = rng.gen_range_i64(-1, 2) as i32;
+                let mut pixels = vec![0.0f32; 64];
+                for y in 0..8i32 {
+                    for x in 0..8i32 {
+                        let (sx, sy) = (x - dx, y - dy);
+                        if (0..8).contains(&sx) && (0..8).contains(&sy) {
+                            pixels[(y * 8 + x) as usize] = glyph[(sy * 8 + sx) as usize];
+                        }
+                    }
+                }
+                for p in pixels.iter_mut() {
+                    if *p > 0.5 && rng.gen_bool(0.05) {
+                        *p = 0.0; // dropout
+                    }
+                    *p = (*p + rng.gen_range_f32(-0.12, 0.12)).clamp(0.0, 1.0);
+                }
+                let _ = rep;
+                samples.push(Sample { pixels, label });
+            }
+        }
+        DigitsDataset { samples }
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Classification accuracy of `classify` over the dataset.
+    pub fn accuracy(&self, mut classify: impl FnMut(&[f32]) -> usize) -> f64 {
+        let correct = self.samples.iter().filter(|s| classify(&s.pixels) == s.label).count();
+        correct as f64 / self.samples.len() as f64
+    }
+
+    /// Parse the raw binary test set exported by `aot.py`
+    /// (`artifacts/testset.bin`): `u32 n`, then per sample 64 `f32` pixels
+    /// (LE) + `u32` label.
+    pub fn from_binary(bytes: &[u8]) -> crate::Result<Self> {
+        anyhow::ensure!(bytes.len() >= 4, "truncated testset");
+        let n = u32::from_le_bytes(bytes[0..4].try_into().unwrap()) as usize;
+        let rec = 64 * 4 + 4;
+        anyhow::ensure!(bytes.len() == 4 + n * rec, "testset length mismatch");
+        let mut samples = Vec::with_capacity(n);
+        for i in 0..n {
+            let base = 4 + i * rec;
+            let pixels: Vec<f32> = (0..64)
+                .map(|j| {
+                    let o = base + j * 4;
+                    f32::from_le_bytes(bytes[o..o + 4].try_into().unwrap())
+                })
+                .collect();
+            let label =
+                u32::from_le_bytes(bytes[base + 256..base + 260].try_into().unwrap()) as usize;
+            anyhow::ensure!(label < 10, "label out of range");
+            samples.push(Sample { pixels, label });
+        }
+        Ok(DigitsDataset { samples })
+    }
+
+    /// Serialize in the same binary format (round-trip with
+    /// [`DigitsDataset::from_binary`], also used by tests).
+    pub fn to_binary(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(4 + self.samples.len() * 260);
+        out.extend((self.samples.len() as u32).to_le_bytes());
+        for s in &self.samples {
+            for &p in &s.pixels {
+                out.extend(p.to_le_bytes());
+            }
+            out.extend((s.label as u32).to_le_bytes());
+        }
+        out
+    }
+}
+
+fn glyph_pixels(g: &str) -> Vec<f32> {
+    let mut px: Vec<f32> = g.chars().map(|c| if c == '#' { 1.0 } else { 0.0 }).collect();
+    px.resize(64, 0.0);
+    px
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generation_is_deterministic() {
+        let a = DigitsDataset::generate(3, 11);
+        let b = DigitsDataset::generate(3, 11);
+        assert_eq!(a.len(), 30);
+        for (x, y) in a.samples.iter().zip(b.samples.iter()) {
+            assert_eq!(x.label, y.label);
+            assert_eq!(x.pixels, y.pixels);
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = DigitsDataset::generate(1, 1);
+        let b = DigitsDataset::generate(1, 2);
+        assert!(a.samples.iter().zip(b.samples.iter()).any(|(x, y)| x.pixels != y.pixels));
+    }
+
+    #[test]
+    fn pixels_in_unit_range() {
+        let d = DigitsDataset::generate(5, 3);
+        assert!(d.samples.iter().flat_map(|s| &s.pixels).all(|&p| (0.0..=1.0).contains(&p)));
+    }
+
+    #[test]
+    fn binary_roundtrip() {
+        let d = DigitsDataset::generate(2, 9);
+        let back = DigitsDataset::from_binary(&d.to_binary()).unwrap();
+        assert_eq!(back.len(), d.len());
+        for (a, b) in d.samples.iter().zip(back.samples.iter()) {
+            assert_eq!(a.label, b.label);
+            assert_eq!(a.pixels, b.pixels);
+        }
+    }
+
+    #[test]
+    fn glyphs_are_distinct() {
+        let g: Vec<Vec<f32>> = GLYPHS.iter().map(|s| glyph_pixels(s)).collect();
+        for i in 0..10 {
+            for j in (i + 1)..10 {
+                assert_ne!(g[i], g[j], "glyphs {i} and {j} identical");
+            }
+        }
+    }
+}

@@ -1,0 +1,177 @@
+//! Quantized linear layer whose scalar products go through a LUT
+//! multiplier configuration.
+
+use super::Quantizer;
+use crate::multiplier::MultiplierModel;
+
+/// A linear layer `y = W·x + b` in 4-bit integer arithmetic.
+///
+/// Weights are stored as unsigned 4-bit codes with zero-point 8; inputs
+/// as unsigned 4-bit codes with zero-point 0. The MAC per output is
+///
+/// ```text
+/// acc_i = Σ_j LUT(wq_ij, xq_j) − 8 · Σ_j xq_j
+/// y_i   = acc_i · w_scale · x_scale + b_i
+/// ```
+///
+/// where `LUT` is the configured multiplier — the only place approximation
+/// enters. The zero-point correction `8·Σxq` is exact integer arithmetic
+/// (an adder tree in hardware, outside the LUNA unit).
+#[derive(Debug, Clone)]
+pub struct QuantLinear {
+    /// `out_dim × in_dim`, row-major 4-bit codes.
+    pub wq: Vec<u8>,
+    pub in_dim: usize,
+    pub out_dim: usize,
+    pub w_quant: Quantizer,
+    pub x_quant: Quantizer,
+    pub bias: Vec<f32>,
+    /// Apply ReLU after the affine output.
+    pub relu: bool,
+}
+
+impl QuantLinear {
+    /// Quantize float weights `[out][in]` into a layer.
+    pub fn from_float(
+        w: &[Vec<f32>],
+        bias: Vec<f32>,
+        x_max_abs: f32,
+        relu: bool,
+    ) -> Self {
+        let out_dim = w.len();
+        let in_dim = w[0].len();
+        assert!(w.iter().all(|r| r.len() == in_dim));
+        assert_eq!(bias.len(), out_dim);
+        let w_max = w.iter().flatten().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let w_quant = Quantizer::for_weights(w_max);
+        let x_quant = Quantizer::for_activations(x_max_abs);
+        let wq = w.iter().flat_map(|row| row.iter().map(|&v| w_quant.quantize(v))).collect();
+        QuantLinear { wq, in_dim, out_dim, w_quant, x_quant, bias, relu }
+    }
+
+    /// Build directly from quantized codes (artifact loading path).
+    pub fn from_codes(
+        wq: Vec<u8>,
+        in_dim: usize,
+        out_dim: usize,
+        w_quant: Quantizer,
+        x_quant: Quantizer,
+        bias: Vec<f32>,
+        relu: bool,
+    ) -> Self {
+        assert_eq!(wq.len(), in_dim * out_dim);
+        assert!(wq.iter().all(|&q| q < 16), "codes must be 4-bit");
+        assert_eq!(bias.len(), out_dim);
+        QuantLinear { wq, in_dim, out_dim, w_quant, x_quant, bias, relu }
+    }
+
+    /// Integer accumulators before dequantization — the values the LUNA
+    /// bank produces. Exposed for bit-accuracy cross-checks.
+    pub fn accumulate(&self, xq: &[u8], model: &MultiplierModel) -> Vec<i32> {
+        assert_eq!(xq.len(), self.in_dim);
+        let x_sum: i32 = xq.iter().map(|&x| x as i32).sum();
+        let zp = self.w_quant.zero_point as i32;
+        (0..self.out_dim)
+            .map(|i| {
+                let row = &self.wq[i * self.in_dim..(i + 1) * self.in_dim];
+                let lut: i32 = row
+                    .iter()
+                    .zip(xq)
+                    .map(|(&w, &x)| model.mul(w, x) as i32)
+                    .sum();
+                lut - zp * x_sum
+            })
+            .collect()
+    }
+
+    /// Full forward: quantize input, integer MAC, dequantize, bias, ReLU.
+    pub fn forward(&self, x: &[f32], model: &MultiplierModel) -> Vec<f32> {
+        let xq = self.x_quant.quantize_slice(x);
+        let acc = self.accumulate(&xq, model);
+        acc.iter()
+            .zip(&self.bias)
+            .map(|(&a, &b)| {
+                let v = a as f32 * self.w_quant.scale * self.x_quant.scale + b;
+                if self.relu {
+                    v.max(0.0)
+                } else {
+                    v
+                }
+            })
+            .collect()
+    }
+
+    /// Number of 4b×4b multiplies one forward pass performs (what the
+    /// coordinator charges to LUNA units).
+    pub fn macs(&self) -> u64 {
+        (self.in_dim * self.out_dim) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::multiplier::{MultiplierKind, MultiplierModel};
+
+    fn toy_layer() -> QuantLinear {
+        QuantLinear::from_float(
+            &[vec![0.5, -0.25, 0.1], vec![-0.4, 0.3, 0.2]],
+            vec![0.05, -0.1],
+            1.0,
+            false,
+        )
+    }
+
+    #[test]
+    fn ideal_forward_approximates_float_matmul() {
+        let l = toy_layer();
+        let model = MultiplierModel::new(MultiplierKind::Ideal);
+        let x = vec![0.8, 0.2, 0.5];
+        let y = l.forward(&x, &model);
+        let expect = [
+            0.5 * 0.8 - 0.25 * 0.2 + 0.1 * 0.5 + 0.05,
+            -0.4 * 0.8 + 0.3 * 0.2 + 0.2 * 0.5 - 0.1,
+        ];
+        for (got, want) in y.iter().zip(expect.iter()) {
+            assert!((got - want).abs() < 0.15, "got {got} want {want}");
+        }
+    }
+
+    #[test]
+    fn exact_lut_configs_agree_with_ideal() {
+        let l = toy_layer();
+        let x = vec![0.3, 0.9, 0.1];
+        let ideal = l.forward(&x, &MultiplierModel::new(MultiplierKind::Ideal));
+        for kind in [MultiplierKind::Dnc, MultiplierKind::DncOpt, MultiplierKind::Traditional] {
+            let y = l.forward(&x, &MultiplierModel::new(kind));
+            assert_eq!(y, ideal, "{kind}");
+        }
+    }
+
+    #[test]
+    fn relu_clamps_negative() {
+        let mut l = toy_layer();
+        l.relu = true;
+        let y = l.forward(&[1.0, 1.0, 0.0], &MultiplierModel::new(MultiplierKind::Ideal));
+        assert!(y.iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    fn accumulate_is_integer_exact_for_ideal() {
+        let l = toy_layer();
+        let xq = vec![12u8, 3, 7];
+        let acc = l.accumulate(&xq, &MultiplierModel::new(MultiplierKind::Ideal));
+        // manual: row0 codes
+        let row0: Vec<i32> = l.wq[0..3].iter().map(|&w| w as i32).collect();
+        let manual: i32 =
+            row0.iter().zip(&xq).map(|(&w, &x)| w * x as i32).sum::<i32>() - 8 * (12 + 3 + 7);
+        assert_eq!(acc[0], manual);
+    }
+
+    #[test]
+    #[should_panic]
+    fn wrong_input_width_panics() {
+        let l = toy_layer();
+        let _ = l.forward(&[1.0], &MultiplierModel::new(MultiplierKind::Ideal));
+    }
+}

@@ -1,0 +1,190 @@
+//! Quantized multi-layer perceptron over LUT multipliers.
+
+use super::{QuantLinear, Quantizer};
+use crate::multiplier::MultiplierModel;
+use crate::util::{kv, Rng};
+use crate::Result;
+use anyhow::{ensure, Context};
+use std::fmt::Write as _;
+
+/// An MLP whose every MAC routes through a configurable LUT multiplier.
+#[derive(Debug, Clone)]
+pub struct QuantMlp {
+    pub layers: Vec<QuantLinear>,
+}
+
+impl QuantMlp {
+    pub fn new(layers: Vec<QuantLinear>) -> Self {
+        assert!(!layers.is_empty());
+        for pair in layers.windows(2) {
+            assert_eq!(pair[0].out_dim, pair[1].in_dim, "layer dims must chain");
+        }
+        QuantMlp { layers }
+    }
+
+    pub fn input_dim(&self) -> usize {
+        self.layers[0].in_dim
+    }
+
+    pub fn output_dim(&self) -> usize {
+        self.layers.last().unwrap().out_dim
+    }
+
+    /// Total 4b×4b MACs per forward pass.
+    pub fn macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+
+    /// Forward pass under the given multiplier configuration.
+    pub fn forward(&self, x: &[f32], model: &MultiplierModel) -> Vec<f32> {
+        let mut h = x.to_vec();
+        for layer in &self.layers {
+            h = layer.forward(&h, model);
+        }
+        h
+    }
+
+    /// Classify: forward + argmax.
+    pub fn classify(&self, x: &[f32], model: &MultiplierModel) -> usize {
+        super::argmax(&self.forward(x, model))
+    }
+
+    /// Random small MLP for the Fig 13 MAE study (16 → 12 → 8), with
+    /// activation ranges chosen so intermediate values stay in range.
+    pub fn random_for_study(seed: u64) -> Self {
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut layer = |i: usize, o: usize, x_max: f32, relu: bool| {
+            let w: Vec<Vec<f32>> = (0..o)
+                .map(|_| (0..i).map(|_| rng.gen_range_f32(-0.5, 0.5)).collect())
+                .collect();
+            let b: Vec<f32> = (0..o).map(|_| rng.gen_range_f32(-0.1, 0.1)).collect();
+            QuantLinear::from_float(&w, b, x_max, relu)
+        };
+        QuantMlp::new(vec![layer(16, 12, 1.0, true), layer(12, 8, 3.0, false)])
+    }
+
+    /// The paper-shaped digits classifier architecture (64 → 32 → 10),
+    /// randomly initialized (training happens in JAX at build time; this
+    /// is used by tests and the untrained baseline).
+    pub fn random_digits(seed: u64) -> Self {
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut layer = |i: usize, o: usize, x_max: f32, relu: bool| {
+            let w: Vec<Vec<f32>> = (0..o)
+                .map(|_| (0..i).map(|_| rng.gen_range_f32(-0.3, 0.3)).collect())
+                .collect();
+            let b: Vec<f32> = (0..o).map(|_| rng.gen_range_f32(-0.05, 0.05)).collect();
+            QuantLinear::from_float(&w, b, x_max, relu)
+        };
+        QuantMlp::new(vec![layer(64, 32, 1.0, true), layer(32, 10, 4.0, false)])
+    }
+
+    /// Serialize to the `weights.txt` artifact format shared with
+    /// `python/compile/aot.py` (kv lines; see [`crate::util::kv`]).
+    pub fn to_text(&self) -> String {
+        let mut m = kv::KvMap::new();
+        m.set("format", "luna-mlp-v1");
+        m.set("layers", self.layers.len());
+        for (i, l) in self.layers.iter().enumerate() {
+            m.set(&format!("layer{i}.in"), l.in_dim);
+            m.set(&format!("layer{i}.out"), l.out_dim);
+            m.set(&format!("layer{i}.relu"), if l.relu { 1 } else { 0 });
+            m.set(&format!("layer{i}.w_scale"), l.w_quant.scale);
+            m.set(&format!("layer{i}.w_zp"), l.w_quant.zero_point);
+            m.set(&format!("layer{i}.x_scale"), l.x_quant.scale);
+            m.set(&format!("layer{i}.x_zp"), l.x_quant.zero_point);
+            let mut bias = String::new();
+            for b in &l.bias {
+                let _ = write!(bias, "{b} ");
+            }
+            m.set(&format!("layer{i}.bias"), bias.trim());
+            let mut codes = String::new();
+            for c in &l.wq {
+                let _ = write!(codes, "{c} ");
+            }
+            m.set(&format!("layer{i}.wq"), codes.trim());
+        }
+        m.render()
+    }
+
+    /// Load from the artifact text written by [`QuantMlp::to_text`] or by
+    /// `python/compile/aot.py` (`artifacts/weights.txt`).
+    pub fn from_text(s: &str) -> Result<Self> {
+        let m = kv::KvMap::parse(s)?;
+        ensure!(m.get("format")? == "luna-mlp-v1", "unknown weights format");
+        let n = m.get_usize("layers")?;
+        ensure!(n >= 1, "no layers");
+        let mut layers = Vec::with_capacity(n);
+        for i in 0..n {
+            let in_dim = m.get_usize(&format!("layer{i}.in"))?;
+            let out_dim = m.get_usize(&format!("layer{i}.out"))?;
+            let relu = m.get_usize(&format!("layer{i}.relu"))? != 0;
+            let w_quant = Quantizer::new(
+                m.get_f32(&format!("layer{i}.w_scale"))?,
+                m.get_usize(&format!("layer{i}.w_zp"))? as u8,
+            );
+            let x_quant = Quantizer::new(
+                m.get_f32(&format!("layer{i}.x_scale"))?,
+                m.get_usize(&format!("layer{i}.x_zp"))? as u8,
+            );
+            let bias = kv::parse_floats(m.get(&format!("layer{i}.bias"))?)
+                .with_context(|| format!("layer {i} bias"))?;
+            let wq = kv::parse_codes(m.get(&format!("layer{i}.wq"))?, true)
+                .with_context(|| format!("layer {i} weight codes"))?;
+            ensure!(wq.len() == in_dim * out_dim, "layer {i} weight shape mismatch");
+            ensure!(bias.len() == out_dim, "layer {i} bias shape mismatch");
+            layers.push(QuantLinear::from_codes(wq, in_dim, out_dim, w_quant, x_quant, bias, relu));
+        }
+        Ok(QuantMlp::new(layers))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::multiplier::{MultiplierKind, MultiplierModel};
+
+    #[test]
+    fn forward_runs_and_has_right_dims() {
+        let mlp = QuantMlp::random_for_study(1);
+        let y = mlp.forward(&vec![0.5; 16], &MultiplierModel::new(MultiplierKind::Ideal));
+        assert_eq!(y.len(), 8);
+        assert_eq!(mlp.input_dim(), 16);
+        assert_eq!(mlp.macs(), 16 * 12 + 12 * 8);
+    }
+
+    #[test]
+    fn text_roundtrip_preserves_outputs() {
+        let mlp = QuantMlp::random_for_study(2);
+        let clone = QuantMlp::from_text(&mlp.to_text()).unwrap();
+        let x: Vec<f32> = (0..16).map(|i| i as f32 / 16.0).collect();
+        let m = MultiplierModel::new(MultiplierKind::DncOpt);
+        assert_eq!(mlp.forward(&x, &m), clone.forward(&x, &m));
+    }
+
+    #[test]
+    fn malformed_text_rejected() {
+        assert!(QuantMlp::from_text("format nope\nlayers 1\n").is_err());
+        let mlp = QuantMlp::random_for_study(3);
+        let bad = mlp.to_text().replace("luna-mlp-v1", "luna-mlp-v9");
+        assert!(QuantMlp::from_text(&bad).is_err());
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_layer_dims_panic() {
+        let a = QuantLinear::from_float(&[vec![0.1; 4]], vec![0.0], 1.0, true);
+        let b = QuantLinear::from_float(&[vec![0.1; 3]], vec![0.0], 1.0, false);
+        let _ = QuantMlp::new(vec![a, b]);
+    }
+
+    #[test]
+    fn approx_configs_change_but_dont_destroy_outputs() {
+        let mlp = QuantMlp::random_for_study(3);
+        let x = vec![0.4; 16];
+        let ideal = mlp.forward(&x, &MultiplierModel::new(MultiplierKind::Ideal));
+        let approx = mlp.forward(&x, &MultiplierModel::new(MultiplierKind::Approx2));
+        assert_ne!(ideal, approx);
+        assert_eq!(ideal.len(), approx.len());
+        assert!(approx.iter().all(|v| v.is_finite()));
+    }
+}

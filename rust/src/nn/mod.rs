@@ -1,0 +1,45 @@
+//! Quantized neural-network substrate (bit-accurate functional model).
+//!
+//! The paper motivates LUNA-CiM with neural acceleration: 4-bit weights ×
+//! 4-bit activations through the LUT multipliers (§I, §IV.A). This module
+//! is the Rust-side functional model of exactly that arithmetic:
+//!
+//! * [`Quantizer`] — affine 4-bit quantization;
+//! * [`QuantLinear`] / [`QuantMlp`] — integer MACs where **every scalar
+//!   product goes through a [`MultiplierModel`]** (exact or approximate),
+//!   matching the Pallas kernel's semantics bit-for-bit (cross-checked in
+//!   integration tests against the AOT artifacts);
+//! * [`DigitsDataset`] — the synthetic 8×8 digits workload used by the
+//!   examples and the end-to-end serving driver.
+//!
+//! [`MultiplierModel`]: crate::multiplier::MultiplierModel
+
+mod dataset;
+mod linear;
+mod mlp;
+mod quant;
+
+pub use dataset::{DigitsDataset, Sample};
+pub use linear::QuantLinear;
+pub use mlp::QuantMlp;
+pub use quant::Quantizer;
+
+/// Index of the maximum element (ties -> first).
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0usize;
+    for (i, &v) in xs.iter().enumerate().skip(1) {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn argmax_basic() {
+        assert_eq!(super::argmax(&[0.1, 3.0, 2.0]), 1);
+        assert_eq!(super::argmax(&[5.0, 5.0]), 0);
+    }
+}

@@ -1,0 +1,87 @@
+//! Affine 4-bit quantization (unsigned codes 0..=15).
+
+
+/// Uniform affine quantizer to 4-bit unsigned codes.
+///
+/// `q = clamp(round(x / scale) + zero_point, 0, 15)`,
+/// `x ≈ (q − zero_point) · scale`.
+///
+/// Activations use `zero_point = 0` (ReLU outputs are non-negative);
+/// weights use `zero_point = 8` so signed weights map onto the unsigned
+/// 4-bit codes the LUT multipliers consume (§ the D&C LUT stores products
+/// of *unsigned* 4-bit operands; the zero-point correction is exact
+/// integer arithmetic outside the LUT).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Quantizer {
+    pub scale: f32,
+    pub zero_point: u8,
+}
+
+impl Quantizer {
+    pub fn new(scale: f32, zero_point: u8) -> Self {
+        assert!(scale > 0.0, "scale must be positive");
+        assert!(zero_point < 16);
+        Quantizer { scale, zero_point }
+    }
+
+    /// Activation quantizer calibrated so `max_abs` maps to code 15.
+    pub fn for_activations(max_abs: f32) -> Self {
+        Quantizer::new((max_abs.max(1e-6)) / 15.0, 0)
+    }
+
+    /// Weight quantizer calibrated so ±`max_abs` fits codes 0..=15 around
+    /// the zero-point 8.
+    pub fn for_weights(max_abs: f32) -> Self {
+        Quantizer::new((max_abs.max(1e-6)) / 7.0, 8)
+    }
+
+    pub fn quantize(&self, x: f32) -> u8 {
+        let q = (x / self.scale).round() + self.zero_point as f32;
+        q.clamp(0.0, 15.0) as u8
+    }
+
+    pub fn dequantize(&self, q: u8) -> f32 {
+        (q as i32 - self.zero_point as i32) as f32 * self.scale
+    }
+
+    pub fn quantize_slice(&self, xs: &[f32]) -> Vec<u8> {
+        xs.iter().map(|&x| self.quantize(x)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_error_bounded_by_half_scale() {
+        let q = Quantizer::for_activations(1.0);
+        for i in 0..=100 {
+            let x = i as f32 / 100.0;
+            let err = (q.dequantize(q.quantize(x)) - x).abs();
+            assert!(err <= q.scale / 2.0 + 1e-6, "x={x} err={err}");
+        }
+    }
+
+    #[test]
+    fn weights_map_sign_symmetrically() {
+        let q = Quantizer::for_weights(0.7);
+        assert_eq!(q.quantize(0.0), 8);
+        assert!(q.quantize(-0.7) <= 1);
+        assert_eq!(q.quantize(0.7), 15);
+        assert!((q.dequantize(q.quantize(-0.7)) - -0.7).abs() < q.scale);
+    }
+
+    #[test]
+    fn clamps_out_of_range() {
+        let q = Quantizer::for_activations(1.0);
+        assert_eq!(q.quantize(50.0), 15);
+        assert_eq!(q.quantize(-3.0), 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_scale_rejected() {
+        let _ = Quantizer::new(0.0, 0);
+    }
+}

@@ -1,0 +1,363 @@
+//! Figure regenerators (Figs 1–18).
+
+use super::text_table;
+use crate::analysis::{error_map, hamming, mae, probability};
+use crate::cells::{tsmc65_library, CellKind};
+use crate::logic::{to_bits, BusTrace, EventSim};
+use crate::luna::{LunaBank, LunaUnit};
+use crate::multiplier::MultiplierKind;
+use crate::sram::SramArray;
+use std::fmt::Write as _;
+
+/// Figs 1–4, 9, 10 — structure inventories of each configuration.
+pub fn fig_structure(id: u32) -> String {
+    let (kind, caption): (MultiplierKind, &str) = match id {
+        1 => (MultiplierKind::Traditional, "Fig 1 — conventional 4b LUT multiplier"),
+        2 => (MultiplierKind::Dnc, "Fig 2 — D&C LUT multiplier"),
+        3 => (MultiplierKind::DncOpt, "Fig 3 — optimized D&C LUT multiplier"),
+        4 => (MultiplierKind::Approx, "Fig 4/9 — ApproxD&C (final form, Z_LSB = 0)"),
+        9 => (MultiplierKind::Approx, "Fig 9 — ApproxD&C final structure"),
+        10 => (MultiplierKind::Approx2, "Fig 10 — ApproxD&C 2 (Z_LSB = W)"),
+        _ => panic!("fig_structure handles figs 1-4, 9, 10"),
+    };
+    let lib = tsmc65_library();
+    let netlist = kind.netlist().expect("hardware config");
+    let cost = netlist.cost_report();
+    let mut out = format!("{caption}\n  components: {cost}\n");
+    let _ = writeln!(out, "  transistors: {}", cost.transistors(&lib));
+    let _ = writeln!(
+        out,
+        "  placed area: {:.1} um^2, routed: {:.1} um^2",
+        cost.placed_area_um2(&lib),
+        cost.routed_area_um2(&lib)
+    );
+    out
+}
+
+/// Fig 5 — probability stem chart of the (4b×2b) LSB-side product.
+pub fn fig5() -> String {
+    let pmf = probability::lsb_product_pmf();
+    let mut out = String::from(
+        "Fig 5 — P(product) of the 4b x 2b LSB-side multiplication\n  value  prob    stem\n",
+    );
+    for (v, &p) in pmf.iter().enumerate() {
+        if p > 0.0 {
+            let stars = "*".repeat((p * 200.0).round() as usize);
+            let _ = writeln!(out, "  {v:>5}  {p:.4}  {stars}");
+        }
+    }
+    let _ = writeln!(
+        out,
+        "  P(0) = {:.4}  (paper: 0.296); impossible values: {:?}",
+        probability::probability_of_zero(),
+        probability::impossible_values()
+    );
+    out
+}
+
+/// Fig 5 as CSV (`value,probability`).
+pub fn fig5_csv() -> String {
+    let mut out = String::from("value,probability\n");
+    for (v, p) in probability::lsb_product_pmf().iter().enumerate() {
+        let _ = writeln!(out, "{v},{p}");
+    }
+    out
+}
+
+/// Fig 6 — mean per-bit Hamming distance per fixed-Z_LSB candidate.
+pub fn fig6() -> String {
+    let d = hamming::mean_hamming_per_candidate();
+    let (best, best_d) = hamming::best_candidate();
+    let mut out =
+        String::from("Fig 6 — mean Hamming distance per approximated Z_LSB candidate\n");
+    for (c, &v) in d.iter().enumerate() {
+        if c % 8 == 0 {
+            let _ = write!(out, "  {c:>2}:");
+        }
+        let _ = write!(out, " {v:.3}");
+        if c % 8 == 7 {
+            out.push('\n');
+        }
+    }
+    let _ = writeln!(out, "  minimum {best_d:.3} at candidate {best} (paper: 0.275 at 0)");
+    out
+}
+
+/// Fig 6 as CSV.
+pub fn fig6_csv() -> String {
+    let mut out = String::from("candidate,mean_hamming\n");
+    for (c, v) in hamming::mean_hamming_per_candidate().iter().enumerate() {
+        let _ = writeln!(out, "{c},{v}");
+    }
+    out
+}
+
+/// Figs 7 / 11 — error heatmap of an approximate config vs exact D&C.
+pub fn fig_heatmap(id: u32) -> String {
+    let (kind, caption) = match id {
+        7 => (MultiplierKind::Approx, "Fig 7 — |D&C − ApproxD&C| heatmap"),
+        11 => (MultiplierKind::Approx2, "Fig 11 — D&C − ApproxD&C2 heatmap"),
+        _ => panic!("fig_heatmap handles figs 7 and 11"),
+    };
+    let m = error_map::error_map(kind);
+    let mut out = format!("{caption} (rows = Weight 0..15, cols = Data 0..15)\n");
+    for w in 0..16 {
+        let _ = write!(out, "  W={w:>2} |");
+        for y in 0..16 {
+            let _ = write!(out, "{:>4}", m.err[w][y]);
+        }
+        out.push('\n');
+    }
+    let (lo, hi) = m.range();
+    let _ = writeln!(
+        out,
+        "  range [{lo}, {hi}], mean signed error {:.3}, MAE {:.3}",
+        m.mean_error(),
+        m.mean_abs_error()
+    );
+    out
+}
+
+/// Figs 8 / 12 — error histograms.
+pub fn fig_histogram(id: u32) -> String {
+    let (kind, caption) = match id {
+        8 => (MultiplierKind::Approx, "Fig 8 — ApproxD&C error histogram"),
+        12 => (MultiplierKind::Approx2, "Fig 12 — ApproxD&C2 error histogram"),
+        _ => panic!("fig_histogram handles figs 8 and 12"),
+    };
+    let m = error_map::error_map(kind);
+    let mut out = format!("{caption}\n  error  count  bar\n");
+    for (e, c) in m.histogram() {
+        let _ = writeln!(out, "  {e:>5}  {c:>5}  {}", "#".repeat(c as usize));
+    }
+    out
+}
+
+/// Fig 13 — MAE per multiplier configuration (100 iterations, like the
+/// paper's MATLAB study).
+pub fn fig13(iters: usize, seed: u64) -> String {
+    let results = mae::fig13_study(iters, seed);
+    let rows: Vec<Vec<String>> = results
+        .iter()
+        .map(|r| {
+            vec![
+                r.kind.name().to_string(),
+                format!("{:.4}", r.element_mae),
+                format!("{:.4}", r.network_mae),
+            ]
+        })
+        .collect();
+    let mut out = format!("Fig 13 — Mean Absolute Error vs IDEAL ({iters} iterations)\n");
+    out.push_str(&text_table(&["configuration", "element MAE", "network MAE"], &rows));
+    out
+}
+
+/// Fig 14 — transient simulation of the mux-based multiplier:
+/// W = 0110 fixed, Y ∈ {1010, 1011, 0011, 1100} applied sequentially.
+pub fn fig14() -> String {
+    let kind = MultiplierKind::DncOpt;
+    let netlist = kind.netlist().unwrap();
+    let mut sim = EventSim::new(&netlist);
+    sim.watch_bus("Y");
+    sim.watch_bus("OUT");
+    sim.program(&kind.program_image(0b0110).unwrap());
+    let ys = [0b1010u64, 0b1011, 0b0011, 0b1100];
+    let vectors: Vec<Vec<bool>> = ys.iter().map(|&y| to_bits(y, 4)).collect();
+    let waves = sim.run_schedule(&vectors, 2_000); // 2 ns per applied vector
+    let trace = BusTrace::new(waves);
+    let mut out = String::from(
+        "Fig 14 — transient: W<3:0> = 0110, Y applied as 1010, 1011, 0011, 1100\n",
+    );
+    out.push_str(&trace.render());
+    let _ = writeln!(
+        out,
+        "expected OUT: 60, 66, 18, 72; settle stats: {} transitions, {} events",
+        sim.stats().transitions,
+        sim.stats().events
+    );
+    out
+}
+
+/// Fig 14 as CSV.
+pub fn fig14_csv() -> String {
+    let kind = MultiplierKind::DncOpt;
+    let netlist = kind.netlist().unwrap();
+    let mut sim = EventSim::new(&netlist);
+    sim.watch_bus("Y");
+    sim.watch_bus("OUT");
+    sim.program(&kind.program_image(0b0110).unwrap());
+    let vectors: Vec<Vec<bool>> =
+        [0b1010u64, 0b1011, 0b0011, 0b1100].iter().map(|&y| to_bits(y, 4)).collect();
+    BusTrace::new(sim.run_schedule(&vectors, 2_000)).to_csv()
+}
+
+/// Fig 15 — energy of the main components in the 8×8 array, plus the
+/// multiplier's measured share (§IV.B: 173.8 pJ/bit vs 47.96 fJ ≈ 0.0276 %).
+pub fn fig15() -> String {
+    let lib = tsmc65_library();
+    // Write sweep: program the paper's stimulus through the write path.
+    let mut array = SramArray::paper_8x8();
+    array.write_row(&lib, 0, 0b0110); // W
+    for (i, y) in [0b1010u64, 0b1011, 0b0011, 0b1100].iter().enumerate() {
+        array.write_row(&lib, 1 + i, *y);
+    }
+    let per_bit_pj = array.ledger().total_fj() / array.ledger().accesses() as f64 / 1000.0;
+
+    // Multiplier energy measured from gate-level switching activity.
+    let mut unit = LunaUnit::new(MultiplierKind::DncOpt);
+    unit.program(&lib, 0b0110);
+    for _ in 0..64 {
+        for y in [0b1010u8, 0b1011, 0b0011, 0b1100] {
+            let _ = unit.multiply(&lib, y);
+        }
+    }
+    let mult_fj = unit.avg_multiply_energy_fj();
+    let share = mult_fj / (per_bit_pj * 1000.0);
+
+    let rows: Vec<Vec<String>> = array
+        .ledger()
+        .breakdown()
+        .rows()
+        .iter()
+        .map(|(k, fj, frac)| {
+            vec![
+                k.name().to_string(),
+                format!("{:.1}", fj / array.ledger().accesses() as f64 / 1000.0),
+                format!("{:.1}%", frac * 100.0),
+            ]
+        })
+        .collect();
+    let mut out = String::from("Fig 15 — energy of main components, 8x8 SRAM array (per bit-access)\n");
+    out.push_str(&text_table(&["component", "pJ/bit/access", "share"], &rows));
+    let _ = writeln!(out, "array write energy: {per_bit_pj:.1} pJ/bit/access (paper: 173.8)");
+    let _ = writeln!(
+        out,
+        "mux-based multiplier: {mult_fj:.2} fJ/op = {:.4}% of a bit access (paper: 47.96 fJ, 0.0276%)",
+        share * 100.0
+    );
+    out
+}
+
+/// Fig 16 — area comparison across configurations, stacked by component.
+pub fn fig16() -> String {
+    let lib = tsmc65_library();
+    let mut rows = Vec::new();
+    for kind in MultiplierKind::PAPER_CONFIGS {
+        let cost = kind.netlist().unwrap().cost_report();
+        let breakdown = cost.area_breakdown(&lib);
+        let seg = |k: CellKind| {
+            breakdown.iter().find(|(kk, _)| *kk == k).map(|(_, a)| *a).unwrap_or(0.0)
+        };
+        rows.push(vec![
+            kind.name().to_string(),
+            format!("{}", cost.transistors(&lib)),
+            format!("{:.1}", seg(CellKind::SramCell)),
+            format!("{:.1}", seg(CellKind::Mux2)),
+            format!("{:.1}", seg(CellKind::HalfAdder) + seg(CellKind::FullAdder)),
+            format!("{:.1}", cost.routed_area_um2(&lib)),
+        ]);
+    }
+    let mut out = String::from("Fig 16 — area by configuration (4b W x 4b Y), stacked segments\n");
+    out.push_str(&text_table(
+        &["configuration", "transistors", "SRAM um2", "MUX um2", "adders um2", "routed um2"],
+        &rows,
+    ));
+    let trad = MultiplierKind::Traditional.netlist().unwrap().cost_report().routed_area_um2(&lib);
+    let dnc = MultiplierKind::Dnc.netlist().unwrap().cost_report().routed_area_um2(&lib);
+    let _ = writeln!(
+        out,
+        "traditional / D&C area ratio: {:.2}x (paper: ~3.7x less area for D&C)",
+        trad / dnc
+    );
+    out
+}
+
+/// Fig 17 — the 8×8 array with four LUNA units: structure inventory.
+pub fn fig17() -> String {
+    let bank = LunaBank::paper_config(MultiplierKind::DncOpt);
+    let mut out = String::from(
+        "Fig 17 — 8x8 SRAM array with four LUNA-CiM units\n\
+         each unit reads Y from its upper row, multiplies by the programmed W,\n\
+         and writes the 8b product to its lower row.\n",
+    );
+    let _ = writeln!(out, "  array: {}", bank.array.cost());
+    let _ = writeln!(out, "  per unit: {}", bank.units[0].cost());
+    let _ = writeln!(out, "  total: {}", bank.cost());
+    out
+}
+
+/// Fig 18 — area pie chart of the array + 4 units.
+pub fn fig18() -> String {
+    let lib = tsmc65_library();
+    let bank = LunaBank::paper_config(MultiplierKind::DncOpt);
+    let rep = bank.area_report(&lib);
+    let mut out = String::from("Fig 18 — area distribution, 8x8 array + 4 LUNA units\n");
+    let _ = writeln!(out, "  SRAM array : {:>8.1} um2 ({:.1}%)", rep.array_um2, 100.0 * (1.0 - rep.overhead_fraction));
+    let _ = writeln!(
+        out,
+        "  LUNA units : {:>8.1} um2 ({:.1}%)  [4 x {:.1} um2; paper: 4 x 287 um2 = 32%]",
+        rep.units_total_um2,
+        100.0 * rep.overhead_fraction,
+        rep.unit_um2
+    );
+    let _ = writeln!(out, "  total      : {:>8.1} um2 (paper: 3650 um2)", rep.total_um2);
+    out
+}
+
+/// Dispatch by figure id (the CLI's `figures --id N`).
+pub fn figure(id: u32) -> String {
+    match id {
+        1 | 2 | 3 | 9 | 10 => fig_structure(id),
+        4 => fig_structure(4),
+        5 => fig5(),
+        6 => fig6(),
+        7 | 11 => fig_heatmap(id),
+        8 | 12 => fig_histogram(id),
+        13 => fig13(100, 2024),
+        14 => fig14(),
+        15 => fig15(),
+        16 => fig16(),
+        17 => fig17(),
+        18 => fig18(),
+        _ => format!("no figure {id} in the paper"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_figure_renders() {
+        for id in [1u32, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 14, 15, 16, 17, 18] {
+            let text = figure(id);
+            assert!(!text.is_empty(), "fig {id}");
+        }
+    }
+
+    #[test]
+    fn fig14_contains_expected_products() {
+        let text = fig14();
+        for v in ["60", "66", "18", "72"] {
+            assert!(text.contains(v), "missing {v} in:\n{text}");
+        }
+    }
+
+    #[test]
+    fn fig15_hits_paper_constants() {
+        let text = fig15();
+        assert!(text.contains("173.8"));
+    }
+
+    #[test]
+    fn fig18_reports_32_percent() {
+        let text = fig18();
+        assert!(text.contains("32"), "{text}");
+    }
+
+    #[test]
+    fn fig5_lists_impossible_values() {
+        assert!(fig5().contains("P(0)"));
+        assert!(fig5_csv().lines().count() == 65);
+    }
+}

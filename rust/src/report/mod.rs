@@ -1,0 +1,53 @@
+//! Regenerators for every table and figure in the paper's evaluation.
+//!
+//! Each function returns the table/series as printable text (and CSV where
+//! a figure is a data series); the CLI (`repro tables|figures`) and the
+//! criterion benches print these, and EXPERIMENTS.md records paper-vs-
+//! measured values.
+
+mod figures;
+mod tables;
+
+pub use figures::*;
+pub use tables::*;
+
+/// Render an aligned text table: header + rows.
+pub(crate) fn text_table(header: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let fmt_row = |cells: &[String]| {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    let mut out = String::new();
+    out.push_str(&fmt_row(&header.iter().map(|s| s.to_string()).collect::<Vec<_>>()));
+    out.push('\n');
+    out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row));
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn text_table_aligns() {
+        let t = super::text_table(
+            &["a", "bbb"],
+            &[vec!["1".into(), "2".into()], vec!["333".into(), "4".into()]],
+        );
+        assert!(t.contains("333"));
+        assert!(t.lines().count() == 4);
+    }
+}

@@ -1,0 +1,94 @@
+//! Tables I and II.
+
+use super::text_table;
+use crate::cells::CellKind;
+use crate::multiplier::{generic, traditional};
+
+/// Table I — SRAM cells and 2:1 muxes for 3b–8b traditional LUT multiply.
+pub fn table1() -> String {
+    let rows: Vec<Vec<String>> = (3..=8u32)
+        .map(|k| {
+            vec![
+                format!("{k}b"),
+                traditional::sram_bits(k).to_string(),
+                traditional::mux_count(k).to_string(),
+            ]
+        })
+        .collect();
+    let mut out = String::from(
+        "Table I — traditional LUT-based multiplication cost (paper Table I)\n",
+    );
+    out.push_str(&text_table(
+        &["Multiplier Bit Resolution", "Number of SRAMs", "Number of 2:1 1b MUXes"],
+        &rows,
+    ));
+    out
+}
+
+/// Table I raw rows: `(k, srams, muxes)`.
+pub fn table1_rows() -> Vec<(u32, u64, u64)> {
+    (3..=8u32).map(|k| (k, traditional::sram_bits(k), traditional::mux_count(k))).collect()
+}
+
+/// Table II — traditional vs optimized D&C for 4b, 8b, 16b. The optimized
+/// column is counted **from the constructed netlists**, not formulas.
+pub fn table2() -> String {
+    let rows: Vec<Vec<String>> = [4u32, 8, 16]
+        .iter()
+        .map(|&n| {
+            let netlist = generic::netlist(n);
+            let r = netlist.cost_report();
+            vec![
+                format!("{n}b"),
+                traditional::sram_bits(n).to_string(),
+                traditional::mux_count(n).to_string(),
+                r.count(CellKind::SramCell).to_string(),
+                r.count(CellKind::Mux2).to_string(),
+                r.count(CellKind::HalfAdder).to_string(),
+                r.count(CellKind::FullAdder).to_string(),
+            ]
+        })
+        .collect();
+    let mut out = String::from(
+        "Table II — traditional vs optimized D&C LUT multiplication (paper Table II)\n",
+    );
+    out.push_str(&text_table(
+        &["Resolution", "Trad SRAMs", "Trad MUXes", "D&C SRAMs", "D&C MUXes", "HAs", "FAs"],
+        &rows,
+    ));
+    out
+}
+
+/// Table II raw rows: `(n, trad_sram, trad_mux, opt)`.
+pub fn table2_rows() -> Vec<(u32, u64, u64, generic::DncCounts)> {
+    [4u32, 8, 16]
+        .iter()
+        .map(|&n| (n, traditional::sram_bits(n), traditional::mux_count(n), generic::counts(n)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn table1_matches_paper_rows() {
+        let rows = super::table1_rows();
+        assert_eq!(rows[0], (3, 48, 42));
+        assert_eq!(rows[5], (8, 4096, 4080));
+        let text = super::table1();
+        assert!(text.contains("4096"));
+    }
+
+    #[test]
+    fn table2_matches_paper_rows() {
+        let rows = super::table2_rows();
+        let (n, ts, tm, opt) = &rows[2];
+        assert_eq!(*n, 16);
+        assert_eq!(*ts, 2_097_152);
+        assert_eq!(*tm, 2_097_120);
+        assert_eq!(opt.srams, 136);
+        assert_eq!(opt.muxes, 432);
+        assert_eq!(opt.has, 31);
+        assert_eq!(opt.fas, 105);
+        assert!(super::table2().contains("2097152"));
+    }
+}

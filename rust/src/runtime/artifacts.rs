@@ -1,0 +1,178 @@
+//! Artifact directory layout shared with `python/compile/aot.py`.
+//!
+//! ```text
+//! artifacts/
+//!   manifest.txt        # kv metadata (dims, batch, variants, ...)
+//!   weights.txt         # quantized MLP (util::kv format, luna-mlp-v1)
+//!   testset.bin         # exported test set (binary, see nn::DigitsDataset)
+//!   mlp_<variant>.hlo.txt   # batched MLP per multiplier variant
+//!   mult_<variant>.hlo.txt  # standalone elementwise 4b multiplier kernel
+//! ```
+
+use crate::multiplier::MultiplierKind;
+use crate::util::kv::KvMap;
+use crate::Result;
+use anyhow::ensure;
+use std::path::{Path, PathBuf};
+
+/// Metadata about the exported model, from `artifacts/manifest.txt`.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    /// Layer dimensions, e.g. `[64, 32, 10]`.
+    pub dims: Vec<usize>,
+    /// Batch size every HLO variant was lowered with.
+    pub batch: usize,
+    /// Variants exported (kebab-case kind slugs).
+    pub variants: Vec<String>,
+    /// Test accuracy reported by `aot.py` (float32, pre-quantization).
+    pub train_accuracy: f64,
+    /// Number of test samples in `testset.bin`.
+    pub test_samples: usize,
+}
+
+impl ModelMeta {
+    /// Render in the manifest kv format.
+    pub fn to_text(&self) -> String {
+        let mut m = KvMap::new();
+        m.set("dims", self.dims.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(","));
+        m.set("batch", self.batch);
+        m.set("variants", self.variants.join(","));
+        m.set("train_accuracy", self.train_accuracy);
+        m.set("test_samples", self.test_samples);
+        m.render()
+    }
+
+    pub fn from_text(text: &str) -> Result<Self> {
+        let m = KvMap::parse(text)?;
+        let meta = ModelMeta {
+            dims: m.get_usize_list("dims")?,
+            batch: m.get_usize("batch")?,
+            variants: m.get_str_list("variants")?,
+            train_accuracy: m.get_f64("train_accuracy")?,
+            test_samples: m.get_usize("test_samples")?,
+        };
+        ensure!(meta.dims.len() >= 2, "manifest dims too short");
+        ensure!(meta.batch > 0, "manifest batch must be positive");
+        Ok(meta)
+    }
+}
+
+/// Resolver for the `artifacts/` directory produced by `make artifacts`.
+#[derive(Debug, Clone)]
+pub struct ArtifactStore {
+    root: PathBuf,
+}
+
+impl ArtifactStore {
+    pub fn new(root: impl Into<PathBuf>) -> Self {
+        ArtifactStore { root: root.into() }
+    }
+
+    /// Default location relative to the repo root / current directory.
+    pub fn default_location() -> Self {
+        ArtifactStore::new("artifacts")
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    pub fn exists(&self) -> bool {
+        self.manifest_path().exists()
+    }
+
+    pub fn manifest_path(&self) -> PathBuf {
+        self.root.join("manifest.txt")
+    }
+
+    /// HLO text for the batched MLP under a multiplier variant.
+    pub fn mlp_hlo(&self, kind: MultiplierKind) -> PathBuf {
+        self.root.join(format!("mlp_{}.hlo.txt", kind.slug()))
+    }
+
+    /// HLO text for the standalone element-wise 4b multiplier kernel
+    /// (used for bit-accuracy cross-checks).
+    pub fn mult_hlo(&self, kind: MultiplierKind) -> PathBuf {
+        self.root.join(format!("mult_{}.hlo.txt", kind.slug()))
+    }
+
+    pub fn weights_path(&self) -> PathBuf {
+        self.root.join("weights.txt")
+    }
+
+    pub fn testset_path(&self) -> PathBuf {
+        self.root.join("testset.bin")
+    }
+
+    /// Load and validate the manifest.
+    pub fn manifest(&self) -> Result<ModelMeta> {
+        ensure!(
+            self.exists(),
+            "artifacts missing at {} — run `make artifacts`",
+            self.root.display()
+        );
+        let text = std::fs::read_to_string(self.manifest_path())?;
+        ModelMeta::from_text(&text)
+    }
+
+    /// Load the quantized weights exported by `aot.py`.
+    pub fn load_mlp(&self) -> Result<crate::nn::QuantMlp> {
+        let text = std::fs::read_to_string(self.weights_path())?;
+        crate::nn::QuantMlp::from_text(&text)
+    }
+
+    /// Load the exported test set.
+    pub fn load_testset(&self) -> Result<crate::nn::DigitsDataset> {
+        let bytes = std::fs::read(self.testset_path())?;
+        crate::nn::DigitsDataset::from_binary(&bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paths_are_stable() {
+        let s = ArtifactStore::new("/tmp/a");
+        assert_eq!(s.mlp_hlo(MultiplierKind::DncOpt), PathBuf::from("/tmp/a/mlp_dnc-opt.hlo.txt"));
+        assert_eq!(
+            s.mult_hlo(MultiplierKind::Approx2),
+            PathBuf::from("/tmp/a/mult_approx2.hlo.txt")
+        );
+    }
+
+    #[test]
+    fn missing_manifest_is_clear_error() {
+        let s = ArtifactStore::new("/nonexistent-artifacts");
+        let err = s.manifest().unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+
+    #[test]
+    fn manifest_roundtrip() {
+        let dir = crate::util::test_dir("artifacts");
+        let s = ArtifactStore::new(&dir);
+        let meta = ModelMeta {
+            dims: vec![64, 32, 10],
+            batch: 8,
+            variants: vec!["ideal".into(), "dnc-opt".into()],
+            train_accuracy: 0.97,
+            test_samples: 200,
+        };
+        std::fs::write(s.manifest_path(), meta.to_text()).unwrap();
+        let back = s.manifest().unwrap();
+        assert_eq!(back.dims, vec![64, 32, 10]);
+        assert_eq!(back.batch, 8);
+        assert_eq!(back.variants, vec!["ideal", "dnc-opt"]);
+    }
+
+    #[test]
+    fn bad_manifest_rejected() {
+        assert!(ModelMeta::from_text(
+            "dims 64\nbatch 8\nvariants x\ntrain_accuracy 1\ntest_samples 1\n"
+        )
+        .is_err());
+        assert!(ModelMeta::from_text("batch 8\n").is_err());
+    }
+}

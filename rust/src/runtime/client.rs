@@ -1,0 +1,131 @@
+//! Thin, checked wrapper over the `xla` crate's PJRT CPU client.
+
+use crate::Result;
+use anyhow::{ensure, Context};
+use std::path::Path;
+
+/// A PJRT CPU client plus compilation helpers. Not `Send` — construct one
+/// per worker thread.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtRuntime { client })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it for this client.
+    pub fn load_hlo_text(&self, path: impl AsRef<Path>) -> Result<CompiledModel> {
+        let path = path.as_ref();
+        ensure!(path.exists(), "HLO artifact {} not found — run `make artifacts`", path.display());
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(CompiledModel { exe, name: path.display().to_string() })
+    }
+}
+
+/// A compiled executable with typed f32 execution helpers.
+pub struct CompiledModel {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+impl CompiledModel {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Execute with f32 inputs of the given shapes; returns every tuple
+    /// element of the (tupled) output as a flat `Vec<f32>`.
+    ///
+    /// All our artifacts are lowered with `return_tuple=True`, so the
+    /// single output literal is always a tuple (possibly of one element).
+    pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, dims)| {
+                let numel: i64 = dims.iter().product();
+                ensure!(
+                    numel as usize == data.len(),
+                    "input length {} != shape {:?}",
+                    data.len(),
+                    dims
+                );
+                let lit = xla::Literal::vec1(data);
+                lit.reshape(dims).context("reshaping input literal")
+            })
+            .collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {}", self.name))?;
+        ensure!(!result.is_empty() && !result[0].is_empty(), "no output buffers");
+        let out = result[0][0].to_literal_sync().context("fetching output literal")?;
+        let elems = out.to_tuple().context("output is not a tuple")?;
+        elems
+            .iter()
+            .map(|lit| lit.to_vec::<f32>().context("output element not f32"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A tiny hand-written HLO module: f(x) = (x + x,) over f32[2].
+    const DOUBLE_HLO: &str = r#"HloModule double, entry_computation_layout={(f32[2]{0})->(f32[2]{0})}
+
+ENTRY main {
+  p0 = f32[2]{0} parameter(0)
+  add = f32[2]{0} add(p0, p0)
+  ROOT t = (f32[2]{0}) tuple(add)
+}
+"#;
+
+    #[test]
+    fn load_and_run_handwritten_hlo() {
+        let dir = crate::util::test_dir("runtime-client");
+        let path = dir.join("double.hlo.txt");
+        std::fs::write(&path, DOUBLE_HLO).unwrap();
+
+        let rt = PjrtRuntime::cpu().unwrap();
+        assert!(!rt.platform_name().is_empty());
+        let model = rt.load_hlo_text(&path).unwrap();
+        let out = model.run_f32(&[(&[1.5f32, -2.0], &[2])]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0], vec![3.0f32, -4.0]);
+    }
+
+    #[test]
+    fn missing_artifact_is_a_clear_error() {
+        let rt = PjrtRuntime::cpu().unwrap();
+        let err = match rt.load_hlo_text("/nonexistent/model.hlo.txt") {
+            Err(e) => e,
+            Ok(_) => panic!("expected missing-artifact error"),
+        };
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+
+    #[test]
+    fn shape_mismatch_is_rejected() {
+        let dir = crate::util::test_dir("runtime-client2");
+        let path = dir.join("double.hlo.txt");
+        std::fs::write(&path, DOUBLE_HLO).unwrap();
+        let rt = PjrtRuntime::cpu().unwrap();
+        let model = rt.load_hlo_text(&path).unwrap();
+        assert!(model.run_f32(&[(&[1.0f32], &[2])]).is_err());
+    }
+}

@@ -1,0 +1,15 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//!
+//! `python/compile/aot.py` lowers the L2 model to **HLO text** (the
+//! interchange format that survives the jax≥0.5 / xla_extension 0.5.1
+//! proto-id mismatch — see DESIGN.md). This module wraps the `xla` crate:
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` → `compile` →
+//! `execute`. PJRT handles are not `Send`; the coordinator therefore gives
+//! each worker *thread* its own [`PjrtRuntime`] (see
+//! [`crate::coordinator::worker`]).
+
+mod artifacts;
+mod client;
+
+pub use artifacts::{ArtifactStore, ModelMeta};
+pub use client::{CompiledModel, PjrtRuntime};

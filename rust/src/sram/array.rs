@@ -1,0 +1,154 @@
+//! Behavioural SRAM array with periphery inventory and energy accounting.
+
+use super::energy::{AccessKind, EnergyLedger};
+use crate::cells::{CellKind, CellLibrary, CostReport};
+
+/// Array geometry. The paper's vehicle is 8×8.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ArrayGeometry {
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl ArrayGeometry {
+    pub const PAPER_8X8: ArrayGeometry = ArrayGeometry { rows: 8, cols: 8 };
+
+    pub fn bits(&self) -> usize {
+        self.rows * self.cols
+    }
+}
+
+/// Behavioural SRAM array: bit storage + row/column access operations,
+/// each charged to an [`EnergyLedger`] per the calibrated access energies.
+#[derive(Debug, Clone)]
+pub struct SramArray {
+    geom: ArrayGeometry,
+    bits: Vec<bool>,
+    ledger: EnergyLedger,
+}
+
+impl SramArray {
+    pub fn new(geom: ArrayGeometry) -> Self {
+        SramArray { geom, bits: vec![false; geom.bits()], ledger: EnergyLedger::default() }
+    }
+
+    /// The paper's 8×8 evaluation array.
+    pub fn paper_8x8() -> Self {
+        Self::new(ArrayGeometry::PAPER_8X8)
+    }
+
+    pub fn geometry(&self) -> ArrayGeometry {
+        self.geom
+    }
+
+    fn idx(&self, row: usize, col: usize) -> usize {
+        assert!(row < self.geom.rows && col < self.geom.cols, "address out of range");
+        row * self.geom.cols + col
+    }
+
+    /// Write one bit; charges one write access (decoders + conditioning +
+    /// column controller + cell).
+    pub fn write_bit(&mut self, lib: &CellLibrary, row: usize, col: usize, value: bool) {
+        let i = self.idx(row, col);
+        self.bits[i] = value;
+        self.ledger.charge(lib, AccessKind::WriteBit);
+    }
+
+    /// Read one bit; charges one read access (decoders + conditioning +
+    /// sense amp).
+    pub fn read_bit(&mut self, lib: &CellLibrary, row: usize, col: usize) -> bool {
+        let v = self.bits[self.idx(row, col)];
+        self.ledger.charge(lib, AccessKind::ReadBit);
+        v
+    }
+
+    /// Write a full row (little-endian over columns), one access per bit —
+    /// the per-bit accounting the paper's J/bit/access metric uses.
+    pub fn write_row(&mut self, lib: &CellLibrary, row: usize, value: u64) {
+        for col in 0..self.geom.cols {
+            self.write_bit(lib, row, col, (value >> col) & 1 == 1);
+        }
+    }
+
+    /// Read a full row (little-endian over columns).
+    pub fn read_row(&mut self, lib: &CellLibrary, row: usize) -> u64 {
+        (0..self.geom.cols).fold(0u64, |acc, col| {
+            acc | ((self.read_bit(lib, row, col) as u64) << col)
+        })
+    }
+
+    /// Peek without charging energy (testing/debug).
+    pub fn peek(&self, row: usize, col: usize) -> bool {
+        self.bits[self.idx(row, col)]
+    }
+
+    /// Accumulated energy ledger.
+    pub fn ledger(&self) -> &EnergyLedger {
+        &self.ledger
+    }
+
+    /// Reset the energy ledger (e.g. between benchmark phases).
+    pub fn reset_ledger(&mut self) {
+        self.ledger = EnergyLedger::default();
+    }
+
+    /// Component inventory of the array incl. periphery (Fig 17/18 area
+    /// accounting): cells + 1 conditioner, sense amp and column controller
+    /// per column + one row and one column decoder.
+    pub fn cost(&self) -> CostReport {
+        CostReport::from_pairs(&[
+            (CellKind::SramCell, self.geom.bits() as u64),
+            (CellKind::BitlineConditioner, self.geom.cols as u64),
+            (CellKind::SenseAmp, self.geom.cols as u64),
+            (CellKind::ColumnController, self.geom.cols as u64),
+            (CellKind::RowDecoder, 1),
+            (CellKind::ColumnDecoder, 1),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cells::tsmc65_library;
+
+    #[test]
+    fn rows_store_and_read_back() {
+        let lib = tsmc65_library();
+        let mut a = SramArray::paper_8x8();
+        a.write_row(&lib, 3, 0b0110_1001);
+        assert_eq!(a.read_row(&lib, 3), 0b0110_1001);
+        assert_eq!(a.read_row(&lib, 2), 0);
+    }
+
+    #[test]
+    fn write_energy_matches_paper_constant() {
+        // The calibrated write energy must be 173.8 pJ per bit per access.
+        let lib = tsmc65_library();
+        let mut a = SramArray::paper_8x8();
+        a.write_bit(&lib, 0, 0, true);
+        let pj = a.ledger().total_fj() / 1000.0;
+        assert!((pj - crate::cells::tsmc65::PAPER_WRITE_ENERGY_PJ_PER_BIT).abs() < 1e-9,
+            "write energy {pj} pJ");
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_range_address_panics() {
+        let lib = tsmc65_library();
+        let mut a = SramArray::paper_8x8();
+        a.write_bit(&lib, 8, 0, true);
+    }
+
+    #[test]
+    fn cost_inventory_matches_paper_description() {
+        let a = SramArray::paper_8x8();
+        let c = a.cost();
+        assert_eq!(c.count(CellKind::SramCell), 64);
+        assert_eq!(c.count(CellKind::BitlineConditioner), 8);
+        assert_eq!(c.count(CellKind::SenseAmp), 8);
+        assert_eq!(c.count(CellKind::ColumnController), 8);
+        assert_eq!(c.count(CellKind::RowDecoder), 1);
+        assert_eq!(c.count(CellKind::ColumnDecoder), 1);
+    }
+}

@@ -1,0 +1,155 @@
+//! Per-access energy accounting for the SRAM array (Fig 15 / §IV.B).
+
+use crate::cells::{CellKind, CellLibrary};
+
+/// Kinds of array access the ledger distinguishes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AccessKind {
+    /// One-bit write: decoders + bitline conditioning + column controller
+    /// + cell write.
+    WriteBit,
+    /// One-bit read: decoders + bitline conditioning + sense amp.
+    ReadBit,
+}
+
+impl AccessKind {
+    /// Components exercised by this access, in Fig 15's inventory.
+    pub fn components(self) -> &'static [CellKind] {
+        match self {
+            AccessKind::WriteBit => &[
+                CellKind::RowDecoder,
+                CellKind::ColumnDecoder,
+                CellKind::BitlineConditioner,
+                CellKind::ColumnController,
+                CellKind::SramCell,
+                CellKind::SenseAmp,
+            ],
+            AccessKind::ReadBit => &[
+                CellKind::RowDecoder,
+                CellKind::ColumnDecoder,
+                CellKind::BitlineConditioner,
+                CellKind::SenseAmp,
+            ],
+        }
+    }
+}
+
+/// Energy per component class, femtojoules — the Fig 15 bar chart.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct EnergyBreakdown {
+    entries: Vec<(CellKind, f64)>,
+}
+
+impl EnergyBreakdown {
+    pub fn add(&mut self, kind: CellKind, fj: f64) {
+        if let Some(e) = self.entries.iter_mut().find(|(k, _)| *k == kind) {
+            e.1 += fj;
+        } else {
+            self.entries.push((kind, fj));
+        }
+    }
+
+    pub fn get(&self, kind: CellKind) -> f64 {
+        self.entries.iter().find(|(k, _)| *k == kind).map(|(_, v)| *v).unwrap_or(0.0)
+    }
+
+    pub fn total_fj(&self) -> f64 {
+        self.entries.iter().map(|(_, v)| v).sum()
+    }
+
+    /// `(kind, fJ, share)` rows sorted by energy, largest first.
+    pub fn rows(&self) -> Vec<(CellKind, f64, f64)> {
+        let total = self.total_fj();
+        let mut rows: Vec<_> =
+            self.entries.iter().map(|&(k, v)| (k, v, if total > 0.0 { v / total } else { 0.0 })).collect();
+        rows.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        rows
+    }
+}
+
+/// Accumulating energy ledger with per-component attribution.
+#[derive(Debug, Clone, Default)]
+pub struct EnergyLedger {
+    breakdown: EnergyBreakdown,
+    accesses: u64,
+}
+
+impl EnergyLedger {
+    /// Charge one access of `kind` under the library's calibrated
+    /// per-access energies.
+    pub fn charge(&mut self, lib: &CellLibrary, kind: AccessKind) {
+        for &c in kind.components() {
+            self.breakdown.add(c, lib.params(c).energy_per_access_fj);
+        }
+        self.accesses += 1;
+    }
+
+    /// Charge an externally computed amount (e.g. multiplier toggle energy)
+    /// to a component class.
+    pub fn charge_external(&mut self, kind: CellKind, fj: f64) {
+        self.breakdown.add(kind, fj);
+    }
+
+    pub fn total_fj(&self) -> f64 {
+        self.breakdown.total_fj()
+    }
+
+    pub fn accesses(&self) -> u64 {
+        self.accesses
+    }
+
+    pub fn breakdown(&self) -> &EnergyBreakdown {
+        &self.breakdown
+    }
+
+    /// Merge another ledger into this one.
+    pub fn merge(&mut self, other: &EnergyLedger) {
+        for &(k, v) in &other.breakdown.entries {
+            self.breakdown.add(k, v);
+        }
+        self.accesses += other.accesses;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cells::tsmc65_library;
+
+    #[test]
+    fn write_charge_covers_all_components() {
+        let lib = tsmc65_library();
+        let mut l = EnergyLedger::default();
+        l.charge(&lib, AccessKind::WriteBit);
+        for &c in AccessKind::WriteBit.components() {
+            assert!(l.breakdown().get(c) > 0.0, "{c:?}");
+        }
+        assert_eq!(l.accesses(), 1);
+    }
+
+    #[test]
+    fn rows_sorted_descending() {
+        let lib = tsmc65_library();
+        let mut l = EnergyLedger::default();
+        l.charge(&lib, AccessKind::WriteBit);
+        let rows = l.breakdown().rows();
+        for pair in rows.windows(2) {
+            assert!(pair[0].1 >= pair[1].1);
+        }
+        // Bitline conditioning dominates (the paper's Fig 15 shape).
+        assert_eq!(rows[0].0, CellKind::BitlineConditioner);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let lib = tsmc65_library();
+        let mut a = EnergyLedger::default();
+        a.charge(&lib, AccessKind::WriteBit);
+        let mut b = EnergyLedger::default();
+        b.charge(&lib, AccessKind::ReadBit);
+        b.charge_external(CellKind::Mux2, 47.96);
+        a.merge(&b);
+        assert_eq!(a.accesses(), 2);
+        assert!(a.breakdown().get(CellKind::Mux2) > 0.0);
+    }
+}

@@ -1,0 +1,116 @@
+//! Tiny measurement harness for the `cargo bench` targets.
+//!
+//! Criterion is unavailable offline; this provides the essentials:
+//! warmup, fixed-duration measurement, mean / p50 / p95 per-iteration
+//! timing, and a throughput helper. Output format is one stable line per
+//! benchmark so EXPERIMENTS.md can quote it.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    /// Optional items-per-iteration for throughput reporting.
+    pub items_per_iter: f64,
+}
+
+impl BenchResult {
+    pub fn throughput_per_sec(&self) -> f64 {
+        if self.mean_ns == 0.0 {
+            0.0
+        } else {
+            self.items_per_iter * 1e9 / self.mean_ns
+        }
+    }
+
+    pub fn report_line(&self) -> String {
+        let mut line = format!(
+            "bench {:<44} {:>12.1} ns/iter  p50 {:>12.1}  p95 {:>12.1}  ({} iters)",
+            self.name, self.mean_ns, self.p50_ns, self.p95_ns, self.iters
+        );
+        if self.items_per_iter > 0.0 {
+            line.push_str(&format!("  {:>12.0} items/s", self.throughput_per_sec()));
+        }
+        line
+    }
+}
+
+/// Benchmark runner with fixed warmup and measurement budgets.
+pub struct Bencher {
+    warmup: Duration,
+    measure: Duration,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { warmup: Duration::from_millis(200), measure: Duration::from_millis(800) }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher { warmup: Duration::from_millis(30), measure: Duration::from_millis(150) }
+    }
+
+    pub fn new(warmup: Duration, measure: Duration) -> Self {
+        Bencher { warmup, measure }
+    }
+
+    /// Run `f` repeatedly; `items` is the per-iteration work amount for
+    /// throughput reporting (pass 1.0 when not meaningful).
+    pub fn run<F: FnMut()>(&self, name: &str, items: f64, mut f: F) -> BenchResult {
+        // Warmup.
+        let t0 = Instant::now();
+        while t0.elapsed() < self.warmup {
+            f();
+        }
+        // Measure individual iterations.
+        let mut samples_ns: Vec<f64> = Vec::with_capacity(4096);
+        let t1 = Instant::now();
+        while t1.elapsed() < self.measure {
+            let s = Instant::now();
+            f();
+            samples_ns.push(s.elapsed().as_nanos() as f64);
+        }
+        samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let iters = samples_ns.len() as u64;
+        let mean = samples_ns.iter().sum::<f64>() / iters.max(1) as f64;
+        let pct = |p: f64| samples_ns[((p * (iters.max(1) - 1) as f64) as usize).min(samples_ns.len() - 1)];
+        let result = BenchResult {
+            name: name.to_string(),
+            iters,
+            mean_ns: mean,
+            p50_ns: pct(0.50),
+            p95_ns: pct(0.95),
+            items_per_iter: items,
+        };
+        println!("{}", result.report_line());
+        result
+    }
+}
+
+/// Prevent the optimizer from discarding a value (std::hint wrapper).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let b = Bencher::new(Duration::from_millis(5), Duration::from_millis(20));
+        let r = b.run("noop-ish", 1.0, || {
+            black_box((0..100).sum::<u64>());
+        });
+        assert!(r.iters > 10);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p50_ns <= r.p95_ns);
+    }
+}

@@ -1,0 +1,75 @@
+//! Micro property-testing helper (proptest substitute).
+//!
+//! `check(cases, |rng| ...)` runs a property over a deterministic random
+//! stream; on failure it panics with the case index and seed so the case
+//! reproduces exactly. No shrinking — cases are kept small instead.
+
+use super::rng::Rng;
+
+/// Run `prop` for `cases` pseudo-random cases. The closure gets a fresh
+/// seeded RNG per case; return `Err(msg)` (or panic) to fail.
+pub fn check<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ (case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Rng::seed_from_u64(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property `{name}` failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Assert-style helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($arg:tt)+) => {
+        if !$cond {
+            return Err(format!($($arg)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check("count", 25, |_| {
+            n += 1;
+            Ok(())
+        });
+        assert_eq!(n, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property `fails`")]
+    fn failing_property_reports_seed() {
+        check("fails", 10, |rng| {
+            let v = rng.gen_below(100);
+            if v < 100 {
+                Err(format!("always fails, v={v}"))
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut first = Vec::new();
+        check("record", 5, |rng| {
+            first.push(rng.next_u64());
+            Ok(())
+        });
+        let mut second = Vec::new();
+        check("record", 5, |rng| {
+            second.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,157 @@
+//! Line-oriented `key value` text format.
+//!
+//! The artifact metadata (`manifest.txt`), the exported weights
+//! (`weights.txt`) and the run configuration files all use this format —
+//! one `key value...` pair per line, `#` comments, order-insensitive.
+//! `python/compile/aot.py` writes it with plain `print`, Rust parses it
+//! here; no JSON library exists on either side of this offline image that
+//! both halves share, and this format is trivially diffable.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Parsed key→value map (values are raw strings; typed accessors below).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct KvMap {
+    entries: BTreeMap<String, String>,
+}
+
+impl KvMap {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Parse from text. Later duplicate keys override earlier ones.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut entries = BTreeMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (key, value) = line
+                .split_once(char::is_whitespace)
+                .with_context(|| format!("line {}: expected `key value`", lineno + 1))?;
+            entries.insert(key.to_string(), value.trim().to_string());
+        }
+        Ok(KvMap { entries })
+    }
+
+    pub fn set(&mut self, key: &str, value: impl ToString) {
+        self.entries.insert(key.to_string(), value.to_string());
+    }
+
+    pub fn get(&self, key: &str) -> Result<&str> {
+        self.entries
+            .get(key)
+            .map(|s| s.as_str())
+            .with_context(|| format!("missing key `{key}`"))
+    }
+
+    pub fn get_opt(&self, key: &str) -> Option<&str> {
+        self.entries.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<usize> {
+        self.get(key)?.parse().with_context(|| format!("key `{key}` is not an integer"))
+    }
+
+    pub fn get_u64(&self, key: &str) -> Result<u64> {
+        self.get(key)?.parse().with_context(|| format!("key `{key}` is not an integer"))
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<f64> {
+        self.get(key)?.parse().with_context(|| format!("key `{key}` is not a float"))
+    }
+
+    pub fn get_f32(&self, key: &str) -> Result<f32> {
+        self.get(key)?.parse().with_context(|| format!("key `{key}` is not a float"))
+    }
+
+    /// Comma-separated list of integers.
+    pub fn get_usize_list(&self, key: &str) -> Result<Vec<usize>> {
+        self.get(key)?
+            .split(',')
+            .map(|s| s.trim().parse().with_context(|| format!("key `{key}`: bad integer")))
+            .collect()
+    }
+
+    /// Comma-separated list of floats.
+    pub fn get_f32_list(&self, key: &str) -> Result<Vec<f32>> {
+        self.get(key)?
+            .split(',')
+            .map(|s| s.trim().parse().with_context(|| format!("key `{key}`: bad float")))
+            .collect()
+    }
+
+    /// Comma-separated list of strings.
+    pub fn get_str_list(&self, key: &str) -> Result<Vec<String>> {
+        Ok(self.get(key)?.split(',').map(|s| s.trim().to_string()).collect())
+    }
+
+    /// Serialize (sorted by key).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in &self.entries {
+            let _ = writeln!(out, "{k} {v}");
+        }
+        out
+    }
+}
+
+/// Parse a whitespace-separated list of floats (bias rows etc.).
+pub fn parse_floats(s: &str) -> Result<Vec<f32>> {
+    s.split_whitespace()
+        .map(|tok| tok.parse().with_context(|| format!("bad float `{tok}`")))
+        .collect()
+}
+
+/// Parse a whitespace-separated list of small integers (the weights file's
+/// code rows). Returns an error on any value > 15 when `four_bit` is set.
+pub fn parse_codes(s: &str, four_bit: bool) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    for tok in s.split_whitespace() {
+        let v: u8 = tok.parse().with_context(|| format!("bad code `{tok}`"))?;
+        if four_bit && v > 15 {
+            bail!("code {v} out of 4-bit range");
+        }
+        out.push(v);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_access() {
+        let kv = KvMap::parse("# comment\nbatch 8\ndims 64,32,10\nacc 0.97\n").unwrap();
+        assert_eq!(kv.get_usize("batch").unwrap(), 8);
+        assert_eq!(kv.get_usize_list("dims").unwrap(), vec![64, 32, 10]);
+        assert!((kv.get_f64("acc").unwrap() - 0.97).abs() < 1e-12);
+        assert!(kv.get("nope").is_err());
+    }
+
+    #[test]
+    fn render_roundtrip() {
+        let mut kv = KvMap::new();
+        kv.set("a", 1);
+        kv.set("b", "x,y");
+        let back = KvMap::parse(&kv.render()).unwrap();
+        assert_eq!(kv, back);
+    }
+
+    #[test]
+    fn bad_lines_error() {
+        assert!(KvMap::parse("keyonly\n").is_err());
+    }
+
+    #[test]
+    fn codes_validate_range() {
+        assert_eq!(parse_codes("1 2 15", true).unwrap(), vec![1, 2, 15]);
+        assert!(parse_codes("16", true).is_err());
+        assert!(parse_codes("16", false).is_ok());
+    }
+}

@@ -1,0 +1,38 @@
+//! In-tree substitutes for crates unavailable in this offline image
+//! (DESIGN.md §2 documents the substitutions):
+//!
+//! * [`rng`] — a deterministic SplitMix64 PRNG (replaces `rand` /
+//!   `rand_chacha` for the paper's random studies; determinism is a
+//!   feature here — every figure regenerates bit-identically);
+//! * [`oneshot`] — a minimal blocking oneshot channel (replaces the tokio
+//!   oneshot on the worker reply path);
+//! * [`kv`] — a line-oriented `key value` text format shared with
+//!   `python/compile/aot.py` (replaces serde_json for the manifest,
+//!   weights and config files);
+//! * [`bench`] — a tiny measurement harness used by the `cargo bench`
+//!   targets (replaces criterion: warmup + timed iterations + mean/p50).
+//! * [`check`] — a micro property-testing helper (replaces proptest):
+//!   runs a closure over a deterministic random stream and reports the
+//!   failing seed.
+
+pub mod bench;
+pub mod check;
+pub mod kv;
+pub mod oneshot;
+pub mod rng;
+
+pub use rng::Rng;
+
+/// Create a unique scratch directory under the system temp dir
+/// (tempfile-crate substitute for tests; not auto-deleted).
+pub fn test_dir(tag: &str) -> std::path::PathBuf {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static COUNTER: AtomicU64 = AtomicU64::new(0);
+    let n = COUNTER.fetch_add(1, Ordering::Relaxed);
+    let dir = std::env::temp_dir().join(format!(
+        "luna-cim-{tag}-{}-{n}",
+        std::process::id()
+    ));
+    std::fs::create_dir_all(&dir).expect("create test dir");
+    dir
+}

@@ -1,0 +1,73 @@
+//! Minimal oneshot channel over `std::sync::mpsc`.
+//!
+//! The worker pool replies through these; `recv` blocks the calling
+//! (client) thread, which is the concurrency model of the std-thread
+//! coordinator (no async runtime in this offline image).
+
+use std::sync::mpsc;
+use std::time::Duration;
+
+pub struct Sender<T>(mpsc::SyncSender<T>);
+pub struct Receiver<T>(mpsc::Receiver<T>);
+
+/// Create a oneshot pair.
+pub fn channel<T>() -> (Sender<T>, Receiver<T>) {
+    let (tx, rx) = mpsc::sync_channel(1);
+    (Sender(tx), Receiver(rx))
+}
+
+impl<T> Sender<T> {
+    /// Send the value; returns it back if the receiver is gone.
+    pub fn send(self, value: T) -> Result<(), T> {
+        self.0.try_send(value).map_err(|e| match e {
+            mpsc::TrySendError::Full(v) | mpsc::TrySendError::Disconnected(v) => v,
+        })
+    }
+}
+
+impl<T> Receiver<T> {
+    /// Block until the value arrives (None if the sender dropped).
+    pub fn recv(self) -> Option<T> {
+        self.0.recv().ok()
+    }
+
+    /// Block with a timeout.
+    pub fn recv_timeout(self, dur: Duration) -> Option<T> {
+        self.0.recv_timeout(dur).ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let (tx, rx) = channel();
+        tx.send(41).unwrap();
+        assert_eq!(rx.recv(), Some(41));
+    }
+
+    #[test]
+    fn dropped_sender_yields_none() {
+        let (tx, rx) = channel::<u32>();
+        drop(tx);
+        assert_eq!(rx.recv(), None);
+    }
+
+    #[test]
+    fn dropped_receiver_returns_value() {
+        let (tx, rx) = channel();
+        drop(rx);
+        assert_eq!(tx.send(7), Err(7));
+    }
+
+    #[test]
+    fn cross_thread() {
+        let (tx, rx) = channel();
+        std::thread::spawn(move || {
+            let _ = tx.send("hi");
+        });
+        assert_eq!(rx.recv(), Some("hi"));
+    }
+}

@@ -1,0 +1,139 @@
+//! Integration tests over the AOT artifacts (require `make artifacts`).
+//!
+//! These are the cross-language bit-accuracy checks: the JAX/Pallas
+//! kernels (executed through PJRT from the HLO text) must agree with the
+//! Rust behavioural models and gate-level netlists.
+//!
+//! Skipped gracefully when artifacts are missing so plain `cargo test`
+//! works before `make artifacts`.
+
+use luna_cim::multiplier::MultiplierKind;
+use luna_cim::nn::argmax;
+use luna_cim::runtime::{ArtifactStore, PjrtRuntime};
+
+fn store() -> Option<ArtifactStore> {
+    // tests run from the crate root
+    let s = ArtifactStore::new("artifacts");
+    if s.exists() {
+        Some(s)
+    } else {
+        eprintln!("skipping: artifacts/ missing (run `make artifacts`)");
+        None
+    }
+}
+
+/// The full 16x16 operand grids used by the mult_<variant> artifacts.
+fn grids() -> (Vec<f32>, Vec<f32>) {
+    let mut w = Vec::with_capacity(256);
+    let mut y = Vec::with_capacity(256);
+    for wi in 0..16 {
+        for yi in 0..16 {
+            w.push(wi as f32);
+            y.push(yi as f32);
+        }
+    }
+    (w, y)
+}
+
+#[test]
+fn mult_artifacts_match_behavioural_models_exhaustively() {
+    let Some(store) = store() else { return };
+    let rt = PjrtRuntime::cpu().unwrap();
+    let (w, y) = grids();
+    for kind in [
+        MultiplierKind::Ideal,
+        MultiplierKind::Dnc,
+        MultiplierKind::DncOpt,
+        MultiplierKind::Approx,
+        MultiplierKind::Approx2,
+    ] {
+        let model = rt.load_hlo_text(store.mult_hlo(kind)).unwrap();
+        let out = model.run_f32(&[(&w, &[16, 16]), (&y, &[16, 16])]).unwrap();
+        assert_eq!(out[0].len(), 256);
+        for wi in 0..16u8 {
+            for yi in 0..16u8 {
+                let got = out[0][(wi as usize) * 16 + yi as usize];
+                let want = kind.value(wi, yi) as f32;
+                assert_eq!(got, want, "{kind} w={wi} y={yi}");
+            }
+        }
+    }
+}
+
+#[test]
+fn mult_artifacts_match_gate_level_netlists() {
+    let Some(store) = store() else { return };
+    let rt = PjrtRuntime::cpu().unwrap();
+    let lib = luna_cim::cells::tsmc65_library();
+    let (w, y) = grids();
+    // DncOpt: PJRT kernel vs the gate-level LUNA unit, all 256 pairs.
+    let model = rt.load_hlo_text(store.mult_hlo(MultiplierKind::DncOpt)).unwrap();
+    let out = model.run_f32(&[(&w, &[16, 16]), (&y, &[16, 16])]).unwrap();
+    let mut unit = luna_cim::luna::LunaUnit::new(MultiplierKind::DncOpt);
+    for wi in 0..16u8 {
+        unit.program(&lib, wi);
+        for yi in 0..16u8 {
+            let hw = unit.multiply(&lib, yi);
+            let pjrt = out[0][(wi as usize) * 16 + yi as usize];
+            assert_eq!(hw as f32, pjrt, "gate-level vs PJRT at w={wi} y={yi}");
+        }
+    }
+}
+
+#[test]
+fn mlp_artifact_agrees_with_functional_model() {
+    let Some(store) = store() else { return };
+    let meta = store.manifest().unwrap();
+    let mlp = store.load_mlp().unwrap();
+    let testset = store.load_testset().unwrap();
+    let rt = PjrtRuntime::cpu().unwrap();
+
+    for kind in [MultiplierKind::Ideal, MultiplierKind::DncOpt, MultiplierKind::Approx] {
+        let model = rt.load_hlo_text(store.mlp_hlo(kind)).unwrap();
+        let b = meta.batch;
+        let in_dim = meta.dims[0];
+        let out_dim = *meta.dims.last().unwrap();
+        let mut flat = vec![0.0f32; b * in_dim];
+        for (i, s) in testset.samples.iter().take(b).enumerate() {
+            flat[i * in_dim..(i + 1) * in_dim].copy_from_slice(&s.pixels);
+        }
+        let out = model.run_f32(&[(&flat, &[b as i64, in_dim as i64])]).unwrap();
+        let rust_model = luna_cim::multiplier::MultiplierModel::new(kind);
+        let mut label_agree = 0usize;
+        let mut max_diff = 0.0f32;
+        for i in 0..b {
+            let pjrt_logits = &out[0][i * out_dim..(i + 1) * out_dim];
+            let rust_logits = mlp.forward(&testset.samples[i].pixels, &rust_model);
+            for (a, r) in pjrt_logits.iter().zip(&rust_logits) {
+                max_diff = max_diff.max((a - r).abs());
+            }
+            if argmax(pjrt_logits) == argmax(&rust_logits) {
+                label_agree += 1;
+            }
+        }
+        // float32 rounding-mode differences (round-half-even in jnp.round
+        // vs half-away in rust) can flip codes on exact ties; logits stay
+        // close and labels agree.
+        assert!(
+            max_diff < 0.75,
+            "{kind}: PJRT vs functional logits diverged (max diff {max_diff})"
+        );
+        assert!(label_agree >= b - 1, "{kind}: only {label_agree}/{b} labels agree");
+    }
+}
+
+#[test]
+fn quantized_accuracy_matches_manifest() {
+    let Some(store) = store() else { return };
+    let meta = store.manifest().unwrap();
+    let mlp = store.load_mlp().unwrap();
+    let testset = store.load_testset().unwrap();
+    let ideal = luna_cim::multiplier::MultiplierModel::new(MultiplierKind::Ideal);
+    let acc = testset.accuracy(|px| mlp.classify(px, &ideal));
+    assert!(
+        (acc - meta.train_accuracy).abs() < 0.03,
+        "functional-model accuracy {acc} vs manifest {}",
+        meta.train_accuracy
+    );
+    assert!(acc > 0.8, "quantized model should classify digits well, got {acc}");
+}

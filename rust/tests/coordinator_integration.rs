@@ -1,0 +1,129 @@
+//! Integration tests of the serving coordinator over the real artifacts
+//! (skipped gracefully when `make artifacts` has not run).
+
+use luna_cim::config::Config;
+use luna_cim::coordinator::CoordinatorServer;
+use luna_cim::multiplier::{MultiplierKind, MultiplierModel};
+use luna_cim::runtime::ArtifactStore;
+
+fn config_or_skip() -> Option<Config> {
+    let cfg = Config::default();
+    if ArtifactStore::new(&cfg.artifacts_dir).exists() {
+        Some(cfg)
+    } else {
+        eprintln!("skipping: artifacts/ missing (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn serves_correct_labels_under_concurrent_load() {
+    let Some(cfg) = config_or_skip() else { return };
+    let store = ArtifactStore::new(&cfg.artifacts_dir);
+    let testset = store.load_testset().unwrap();
+    let mlp = store.load_mlp().unwrap();
+    let ideal = MultiplierModel::new(MultiplierKind::Ideal);
+
+    let (server, handle) = CoordinatorServer::start(cfg).unwrap();
+    let n = 48.min(testset.len());
+    let mut threads = Vec::new();
+    for t in 0..6 {
+        let handle = handle.clone();
+        let samples: Vec<(Vec<f32>, usize)> = testset.samples
+            [t * n / 6..(t + 1) * n / 6]
+            .iter()
+            .map(|s| (s.pixels.clone(), s.label))
+            .collect();
+        threads.push(std::thread::spawn(move || {
+            let mut results = Vec::new();
+            for (px, label) in samples {
+                let resp = handle.submit(px.clone()).expect("submit");
+                results.push((px, label, resp));
+            }
+            results
+        }));
+    }
+    let mut total = 0usize;
+    let mut functional_agree = 0usize;
+    for t in threads {
+        for (px, _label, resp) in t.join().unwrap() {
+            total += 1;
+            assert_eq!(resp.logits.len(), 10);
+            assert!(resp.sim_energy_fj > 0.0);
+            assert!(resp.sim_latency_ps > 0);
+            // served label must match the bit-accurate functional model
+            if resp.label == mlp.classify(&px, &ideal) {
+                functional_agree += 1;
+            }
+        }
+    }
+    assert_eq!(total, n / 6 * 6);
+    // float rounding-mode ties can flip an occasional argmax
+    assert!(functional_agree * 10 >= total * 9, "{functional_agree}/{total}");
+
+    let snap = server.metrics().snapshot();
+    assert_eq!(snap.requests, total as u64);
+    assert!(snap.batches >= (total / 8) as u64);
+    assert!(snap.throughput_rps > 0.0);
+    server.shutdown();
+}
+
+#[test]
+fn variant_server_uses_variant_numerics() {
+    let Some(mut cfg) = config_or_skip() else { return };
+    cfg.multiplier = MultiplierKind::Approx;
+    let store = ArtifactStore::new(&cfg.artifacts_dir);
+    let testset = store.load_testset().unwrap();
+    let mlp = store.load_mlp().unwrap();
+
+    let (server, handle) = CoordinatorServer::start(cfg).unwrap();
+    let approx = MultiplierModel::new(MultiplierKind::Approx);
+    let mut agree = 0usize;
+    let n = 16;
+    for s in testset.samples.iter().take(n) {
+        let resp = handle.submit(s.pixels.clone()).unwrap();
+        if resp.label == mlp.classify(&s.pixels, &approx) {
+            agree += 1;
+        }
+    }
+    assert!(agree * 10 >= n * 9, "approx-served labels diverge: {agree}/{n}");
+    server.shutdown();
+}
+
+#[test]
+fn mismatched_batch_config_is_rejected() {
+    let Some(mut cfg) = config_or_skip() else { return };
+    cfg.batcher.max_batch = 5; // artifacts were lowered with batch 8
+    assert!(CoordinatorServer::start(cfg).is_err());
+}
+
+#[test]
+fn wrong_input_dim_is_rejected_per_request() {
+    let Some(cfg) = config_or_skip() else { return };
+    let (server, handle) = CoordinatorServer::start(cfg).unwrap();
+    assert!(handle.submit(vec![0.0; 3]).is_err());
+    server.shutdown();
+}
+
+#[test]
+fn weight_stationary_energy_amortizes_across_batches() {
+    let Some(cfg) = config_or_skip() else { return };
+    let store = ArtifactStore::new(&cfg.artifacts_dir);
+    let testset = store.load_testset().unwrap();
+    let (server, handle) = CoordinatorServer::start(cfg).unwrap();
+    let px = testset.samples[0].pixels.clone();
+    let first = handle.submit(px.clone()).unwrap();
+    // drive enough requests to fill several batches
+    let mut last = first.clone();
+    for _ in 0..24 {
+        last = handle.submit(px.clone()).unwrap();
+    }
+    // later batches reprogram nothing, so per-request energy drops
+    assert!(
+        last.sim_energy_fj < first.sim_energy_fj,
+        "stationary reuse should amortize: first {} later {}",
+        first.sim_energy_fj,
+        last.sim_energy_fj
+    );
+    server.shutdown();
+}

@@ -1,0 +1,309 @@
+//! Property-based tests over the core invariants (DESIGN.md §6), using
+//! the in-tree `util::check` harness (proptest is unavailable offline).
+
+use luna_cim::cells::{tsmc65_library, CellKind};
+use luna_cim::config::Config;
+use luna_cim::coordinator::batcher::Batcher;
+use luna_cim::coordinator::request::InferenceRequest;
+use luna_cim::coordinator::tiler::{Tiler, UnitCosts};
+use luna_cim::logic::{from_bits, to_bits, EventSim, Stepper};
+use luna_cim::multiplier::{generic, MultiplierKind, MultiplierModel};
+use luna_cim::nn::{DigitsDataset, QuantLinear, QuantMlp, Quantizer};
+use luna_cim::prop_assert;
+use luna_cim::util::check::check;
+use std::time::Duration;
+
+// ---------------------------------------------------------------------------
+// multiplier invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_exact_kinds_equal_ideal_product() {
+    check("exact kinds == w*y", 300, |rng| {
+        let (w, y) = (rng.gen_u4(), rng.gen_u4());
+        for kind in [
+            MultiplierKind::Traditional,
+            MultiplierKind::Dnc,
+            MultiplierKind::DncOpt,
+            MultiplierKind::ArrayMult,
+        ] {
+            prop_assert!(kind.value(w, y) == w * y, "{kind} w={w} y={y}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_approx_errors_within_paper_ranges() {
+    check("approx error ranges", 300, |rng| {
+        let (w, y) = (rng.gen_u4(), rng.gen_u4());
+        let e1 = MultiplierKind::Approx.error(w, y);
+        let e2 = MultiplierKind::Approx2.error(w, y);
+        prop_assert!((0..=45).contains(&e1), "approx err {e1}");
+        prop_assert!((-15..=30).contains(&e2), "approx2 err {e2}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_generic_netlist_exact_for_random_even_widths() {
+    check("generic D&C == product", 40, |rng| {
+        let n = [4u32, 8, 16][rng.gen_below(3) as usize];
+        let netlist = generic::netlist(n);
+        let mut st = Stepper::new(&netlist);
+        let w = rng.gen_below(1 << n);
+        st.program(&generic::program_image(n, w));
+        for _ in 0..4 {
+            let y = rng.gen_below(1 << n);
+            let res = st.step(&netlist, &to_bits(y, n as usize));
+            prop_assert!(from_bits(&res.outputs) == w * y, "n={n} w={w} y={y}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_event_sim_agrees_with_stepper_steady_state() {
+    // The timing simulator and the zero-delay evaluator must agree on
+    // final values for every configuration and stimulus.
+    check("event sim == stepper", 60, |rng| {
+        let kind = MultiplierKind::PAPER_CONFIGS[rng.gen_below(5) as usize];
+        let netlist = kind.netlist().unwrap();
+        let w = rng.gen_u4();
+        let image = kind.program_image(w).unwrap();
+        let mut sim = EventSim::new(&netlist);
+        let mut st = Stepper::new(&netlist);
+        sim.program(&image);
+        st.program(&image);
+        for _ in 0..6 {
+            let y = rng.gen_u4();
+            sim.apply(&to_bits(y as u64, 4));
+            let out_nets = netlist.output_nets();
+            let sim_val = sim.bus_value(&out_nets);
+            let step_val = from_bits(&st.step(&netlist, &to_bits(y as u64, 4)).outputs);
+            prop_assert!(sim_val == step_val, "{kind} w={w} y={y}: {sim_val} vs {step_val}");
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// batcher invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_batcher_never_exceeds_max_and_preserves_order() {
+    check("batcher size & order", 80, |rng| {
+        let max_batch = 1 + rng.gen_below(8) as usize;
+        let mut b = Batcher::new(max_batch, Duration::from_secs(3600), 64.max(max_batch));
+        let n = rng.gen_below(40) as usize;
+        let mut emitted: Vec<u64> = Vec::new();
+        for id in 0..n as u64 {
+            if let Ok(Some(batch)) = b.push(InferenceRequest::new(id, vec![0.0])) {
+                prop_assert!(batch.requests.len() <= max_batch, "oversized batch");
+                prop_assert!(batch.padded_to == max_batch, "bad padding target");
+                emitted.extend(batch.requests.iter().map(|r| r.id));
+            }
+        }
+        for batch in b.flush_all() {
+            prop_assert!(batch.requests.len() <= max_batch, "oversized flush batch");
+            emitted.extend(batch.requests.iter().map(|r| r.id));
+        }
+        let expect: Vec<u64> = (0..n as u64).collect();
+        prop_assert!(emitted == expect, "requests lost or reordered: {emitted:?}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batcher_backpressure_never_drops_silently() {
+    check("batcher backpressure", 50, |rng| {
+        let depth = 2 + rng.gen_below(6) as usize;
+        let mut b = Batcher::new(depth, Duration::from_secs(3600), depth);
+        let mut accepted = 0usize;
+        let mut rejected = 0usize;
+        let mut emitted = 0usize;
+        for id in 0..(depth as u64 * 3) {
+            match b.push(InferenceRequest::new(id, vec![0.0])) {
+                Ok(Some(batch)) => {
+                    accepted += 1;
+                    emitted += batch.requests.len();
+                }
+                Ok(None) => accepted += 1,
+                Err(_) => rejected += 1,
+            }
+        }
+        emitted += b.flush_all().iter().map(|x| x.requests.len()).sum::<usize>();
+        prop_assert!(
+            emitted == accepted,
+            "accepted {accepted} != emitted {emitted} (rejected {rejected})"
+        );
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// tiler / fabric invariants
+// ---------------------------------------------------------------------------
+
+fn costs() -> UnitCosts {
+    UnitCosts::measure(MultiplierKind::DncOpt, &tsmc65_library())
+}
+
+#[test]
+fn prop_tiler_covers_every_mac_exactly_once() {
+    let c = costs();
+    check("tiler coverage", 30, |rng| {
+        let units = 1 + rng.gen_below(64) as usize;
+        let batch = 1 + rng.gen_below(8) as usize;
+        let mlp = QuantMlp::random_for_study(rng.next_u64());
+        let mut t = Tiler::new(units, 1, c);
+        let s = t.schedule(&mlp, batch);
+        prop_assert!(s.total_macs == mlp.macs() * batch as u64, "mac coverage");
+        for l in &s.layers {
+            prop_assert!(
+                l.programs + l.stationary_hits == l.elements as u64,
+                "programming accounting"
+            );
+            prop_assert!(
+                l.cycles as u128 * units as u128 >= l.macs as u128,
+                "cycles x units must cover macs"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tiler_energy_is_additive_and_monotone_in_batch() {
+    let c = costs();
+    check("tiler energy monotone", 20, |rng| {
+        let mlp = QuantMlp::random_for_study(rng.next_u64());
+        let mut t1 = Tiler::new(32, 1, c);
+        let mut t2 = Tiler::new(32, 1, c);
+        let b = 1 + rng.gen_below(4) as usize;
+        let e_small = t1.schedule(&mlp, b).total_energy_fj;
+        let e_big = t2.schedule(&mlp, b + 1).total_energy_fj;
+        prop_assert!(e_big > e_small, "more batch => more energy");
+        let sched = {
+            let mut t = Tiler::new(32, 1, c);
+            t.schedule(&mlp, b)
+        };
+        let layers_sum: f64 = sched.layers.iter().map(|l| l.energy_fj).sum();
+        prop_assert!((layers_sum - sched.total_energy_fj).abs() < 1e-6, "energy additivity");
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// nn invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_quantizer_roundtrip_error_bounded() {
+    check("quantizer roundtrip", 200, |rng| {
+        let max_abs = 0.05 + rng.gen_f64() as f32 * 8.0;
+        let q = Quantizer::for_activations(max_abs);
+        let x = rng.gen_f64() as f32 * max_abs;
+        let err = (q.dequantize(q.quantize(x)) - x).abs();
+        prop_assert!(err <= q.scale / 2.0 + 1e-5, "x={x} err={err}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mlp_text_roundtrip_is_identity() {
+    check("weights text roundtrip", 20, |rng| {
+        let mlp = QuantMlp::random_for_study(rng.next_u64());
+        let back = QuantMlp::from_text(&mlp.to_text()).map_err(|e| e.to_string())?;
+        let x: Vec<f32> = (0..16).map(|_| rng.gen_f64() as f32).collect();
+        let m = MultiplierModel::new(MultiplierKind::Approx2);
+        prop_assert!(mlp.forward(&x, &m) == back.forward(&x, &m), "outputs changed");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dataset_binary_roundtrip() {
+    check("dataset binary roundtrip", 15, |rng| {
+        let d = DigitsDataset::generate(1 + rng.gen_below(4) as usize, rng.next_u64());
+        let back = DigitsDataset::from_binary(&d.to_binary()).map_err(|e| e.to_string())?;
+        prop_assert!(back.len() == d.len(), "length changed");
+        for (a, b) in d.samples.iter().zip(back.samples.iter()) {
+            prop_assert!(a.label == b.label && a.pixels == b.pixels, "sample changed");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_exact_lut_layer_matches_integer_reference() {
+    check("quant layer vs integer reference", 40, |rng| {
+        let in_dim = 1 + rng.gen_below(24) as usize;
+        let out_dim = 1 + rng.gen_below(12) as usize;
+        let w: Vec<Vec<f32>> = (0..out_dim)
+            .map(|_| (0..in_dim).map(|_| rng.gen_range_f32(-0.5, 0.5)).collect())
+            .collect();
+        let bias = vec![0.0f32; out_dim];
+        let layer = QuantLinear::from_float(&w, bias, 1.0, false);
+        let xq: Vec<u8> = (0..in_dim).map(|_| rng.gen_u4()).collect();
+        let acc = layer.accumulate(&xq, &MultiplierModel::new(MultiplierKind::DncOpt));
+        // independent integer reference
+        for o in 0..out_dim {
+            let row = &layer.wq[o * in_dim..(o + 1) * in_dim];
+            let want: i32 =
+                row.iter().zip(&xq).map(|(&wc, &xc)| (wc as i32 - 8) * xc as i32).sum();
+            prop_assert!(acc[o] == want, "o={o}: {} vs {want}", acc[o]);
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// config invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_config_text_roundtrip() {
+    check("config roundtrip", 30, |rng| {
+        let mut cfg = Config::default();
+        cfg.batcher.max_batch = 1 + rng.gen_below(32) as usize;
+        cfg.batcher.queue_depth = cfg.batcher.max_batch + rng.gen_below(64) as usize;
+        cfg.workers.count = 1 + rng.gen_below(8) as usize;
+        cfg.banks.count = 1 + rng.gen_below(64) as usize;
+        cfg.banks.units_per_bank = 1 + rng.gen_below(4) as usize;
+        cfg.multiplier =
+            MultiplierKind::ALL[rng.gen_below(MultiplierKind::ALL.len() as u64) as usize];
+        let back = Config::from_text(&cfg.to_text()).map_err(|e| e.to_string())?;
+        prop_assert!(back == cfg, "roundtrip changed config");
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// energy accounting invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_bank_ledger_is_additive() {
+    let lib = tsmc65_library();
+    check("ledger additivity", 20, |rng| {
+        let mut bank = luna_cim::luna::LunaBank::new(MultiplierKind::DncOpt, 2);
+        let ops = 1 + rng.gen_below(20);
+        bank.program_unit(&lib, 0, rng.gen_u4());
+        bank.program_unit(&lib, 1, rng.gen_u4());
+        let after_prog = bank.ledger().total_fj();
+        for _ in 0..ops {
+            let _ = bank.mac(&lib, 0, rng.gen_u4());
+        }
+        let total = bank.ledger().total_fj();
+        prop_assert!(total >= after_prog, "energy decreased");
+        let unit_mux = bank.units[0].ledger().breakdown().get(CellKind::Mux2);
+        let merged_mux = bank.ledger().breakdown().get(CellKind::Mux2);
+        prop_assert!(
+            (merged_mux - unit_mux).abs() < 1e-9,
+            "merged mux energy {merged_mux} != unit {unit_mux}"
+        );
+        Ok(())
+    });
+}
