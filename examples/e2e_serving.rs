@@ -2,8 +2,9 @@
 //!
 //! Proves all layers compose (recorded in EXPERIMENTS.md):
 //!
-//!   JAX/Pallas LUT kernels --AOT HLO text--> PJRT worker pool
-//!        ^ build time                         ^ rust runtime
+//!   quantized model --+--> native batched LUT-GEMM workers (default)
+//!                     +--> PJRT workers over AOT HLO text (--features pjrt,
+//!                          pass `pjrt` as the first argument)
 //!   Rust coordinator: dynamic batcher -> router -> workers
 //!   LUNA fabric cost model: gate-level-calibrated energy & cycles
 //!
@@ -13,22 +14,29 @@
 //! and the simulated CiM energy (programming + MACs).
 //!
 //! Run: `make artifacts && cargo run --release --example e2e_serving`
+//! (the native backend needs only manifest/weights/testset from the
+//! artifact step — no HLO files).
 
-use luna_cim::config::Config;
+use luna_cim::config::{BackendKind, Config};
 use luna_cim::coordinator::CoordinatorServer;
 use luna_cim::multiplier::MultiplierKind;
 use luna_cim::runtime::ArtifactStore;
 use std::time::Instant;
 
 fn main() -> luna_cim::Result<()> {
+    let backend = match std::env::args().nth(1).as_deref() {
+        Some(s) => BackendKind::from_arg(s)?,
+        None => BackendKind::Native,
+    };
     let store = ArtifactStore::default_location();
     let meta = store.manifest()?;
     let testset = store.load_testset()?;
     println!(
-        "model {:?} | batch {} | {} test samples | quantized(ideal) accuracy from aot: {:.3}\n",
+        "model {:?} | batch {} | {} test samples | backend {} | quantized(ideal) accuracy from aot: {:.3}\n",
         meta.dims,
         meta.batch,
         testset.len(),
+        backend.slug(),
         meta.train_accuracy
     );
 
@@ -47,6 +55,7 @@ fn main() -> luna_cim::Result<()> {
     ] {
         let mut cfg = Config::default();
         cfg.multiplier = kind;
+        cfg.backend = backend;
         let (server, handle) = CoordinatorServer::start(cfg)?;
 
         let t0 = Instant::now();

@@ -1,0 +1,50 @@
+//! Batched native LUT-GEMM vs the scalar per-sample forward — the
+//! speedup the native execution backend buys the serving stack
+//! (EXPERIMENTS.md §Perf; the acceptance bar is ≥2× at batch 8 on the
+//! digits-shaped model).
+//!
+//! The per-sample loop is what `QuantLinear::accumulate` costs a worker
+//! that executes a batch one request at a time: one quantize + two Vec
+//! allocations per layer per sample, and a masked `mul` per MAC. The
+//! batched path quantizes the whole batch once per layer, flat-gathers
+//! the 256-entry table, hoists the zero-point correction per row, and
+//! reuses one scratch buffer across layers and batches.
+
+use luna_cim::multiplier::{MultiplierKind, MultiplierModel};
+use luna_cim::nn::{BatchScratch, QuantMlp};
+use luna_cim::util::bench::{black_box, Bencher};
+use luna_cim::util::Rng;
+
+fn main() {
+    let b = Bencher::default();
+    let mlp = QuantMlp::random_digits(5);
+    let model = MultiplierModel::new(MultiplierKind::DncOpt);
+    let in_dim = mlp.input_dim();
+    let mut rng = Rng::seed_from_u64(12);
+
+    let mut speedup_at_8 = 0.0f64;
+    for batch in [1usize, 8, 32, 128] {
+        let xs: Vec<f32> = (0..batch * in_dim).map(|_| rng.gen_range_f32(0.0, 1.0)).collect();
+        let macs = (mlp.macs() * batch as u64) as f64;
+
+        let scalar = b.run(&format!("per-sample forward x{batch}"), macs, || {
+            for r in 0..batch {
+                black_box(mlp.forward(&xs[r * in_dim..(r + 1) * in_dim], &model));
+            }
+        });
+
+        let mut scratch = BatchScratch::default();
+        let batched = b.run(&format!("native batched GEMM x{batch}"), macs, || {
+            black_box(mlp.forward_batch_with(&xs, batch, &model, &mut scratch));
+        });
+
+        let speedup = scalar.mean_ns / batched.mean_ns.max(1e-9);
+        println!("  -> batch {batch}: batched GEMM {speedup:.2}x the per-sample loop");
+        if batch == 8 {
+            speedup_at_8 = speedup;
+        }
+    }
+    println!(
+        "speedup at batch 8: {speedup_at_8:.2}x (target >= 2x on the digits-shaped model)"
+    );
+}

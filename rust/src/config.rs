@@ -11,6 +11,43 @@ use crate::Result;
 use anyhow::{bail, Context};
 use std::path::Path;
 
+/// Which execution backend the worker pool runs batches on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// In-process batched LUT-GEMM over the quantized model (default;
+    /// zero external dependencies — no HLO artifacts, no `xla` crate).
+    Native,
+    /// AOT-compiled HLO through PJRT (requires the `pjrt` cargo feature
+    /// and `make artifacts`).
+    Pjrt,
+}
+
+impl BackendKind {
+    /// Stable kebab-case identifier (config files, CLI).
+    pub fn slug(self) -> &'static str {
+        match self {
+            BackendKind::Native => "native",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+
+    /// Parse a slug (case-insensitive).
+    pub fn parse_slug(s: &str) -> Option<BackendKind> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "native" => Some(BackendKind::Native),
+            "pjrt" => Some(BackendKind::Pjrt),
+            _ => None,
+        }
+    }
+
+    /// Parse a slug with the canonical error message (CLI / config use
+    /// this so the known-backend list lives in one place).
+    pub fn from_arg(s: &str) -> Result<BackendKind> {
+        Self::parse_slug(s)
+            .ok_or_else(|| anyhow::anyhow!("unknown backend `{s}` (known: native, pjrt)"))
+    }
+}
+
 /// Top-level configuration.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Config {
@@ -18,6 +55,8 @@ pub struct Config {
     pub artifacts_dir: String,
     /// Multiplier configuration for the LUNA banks / model variant.
     pub multiplier: MultiplierKind,
+    /// Execution backend (`native` | `pjrt`).
+    pub backend: BackendKind,
     pub batcher: BatcherConfig,
     pub workers: WorkerConfig,
     pub banks: BankConfig,
@@ -35,10 +74,11 @@ pub struct BatcherConfig {
     pub queue_depth: usize,
 }
 
-/// PJRT worker pool.
+/// Execution worker pool.
 #[derive(Debug, Clone, PartialEq)]
 pub struct WorkerConfig {
-    /// Number of worker threads, each with its own PJRT client/executable.
+    /// Number of worker threads, each owning its own backend instance
+    /// (native GEMM scratch, or PJRT client/executable).
     pub count: usize,
 }
 
@@ -57,6 +97,7 @@ impl Default for Config {
         Config {
             artifacts_dir: "artifacts".to_string(),
             multiplier: MultiplierKind::DncOpt,
+            backend: BackendKind::Native,
             batcher: BatcherConfig::default(),
             workers: WorkerConfig::default(),
             banks: BankConfig::default(),
@@ -86,6 +127,7 @@ impl Default for BankConfig {
 const KNOWN_KEYS: &[&str] = &[
     "artifacts_dir",
     "multiplier",
+    "backend",
     "batcher.max_batch",
     "batcher.max_wait_us",
     "batcher.queue_depth",
@@ -111,6 +153,9 @@ impl Config {
         if let Some(v) = m.get_opt("multiplier") {
             cfg.multiplier = MultiplierKind::parse_slug(v)
                 .with_context(|| format!("unknown multiplier `{v}`"))?;
+        }
+        if let Some(v) = m.get_opt("backend") {
+            cfg.backend = BackendKind::from_arg(v)?;
         }
         if m.get_opt("batcher.max_batch").is_some() {
             cfg.batcher.max_batch = m.get_usize("batcher.max_batch")?;
@@ -146,6 +191,7 @@ impl Config {
         let mut m = KvMap::new();
         m.set("artifacts_dir", &self.artifacts_dir);
         m.set("multiplier", self.multiplier.slug());
+        m.set("backend", self.backend.slug());
         m.set("batcher.max_batch", self.batcher.max_batch);
         m.set("batcher.max_wait_us", self.batcher.max_wait_us);
         m.set("batcher.queue_depth", self.batcher.queue_depth);
@@ -158,10 +204,10 @@ impl Config {
     /// Sanity-check invariants.
     pub fn validate(&self) -> Result<()> {
         anyhow::ensure!(self.batcher.max_batch >= 1, "max_batch must be >= 1");
-        anyhow::ensure!(
-            self.batcher.queue_depth >= self.batcher.max_batch,
-            "queue_depth < max_batch"
-        );
+        // queue_depth may be below max_batch: the queue then fills before
+        // the size trigger and `push` backpressures (strict admission);
+        // batches still form via the deadline flush, padded to max_batch.
+        anyhow::ensure!(self.batcher.queue_depth >= 1, "queue_depth must be >= 1");
         anyhow::ensure!(self.workers.count >= 1, "need at least one worker");
         anyhow::ensure!(self.banks.count >= 1, "need at least one bank");
         anyhow::ensure!(
@@ -193,6 +239,27 @@ mod tests {
         let cfg = Config::from_text("multiplier approx\n").unwrap();
         assert_eq!(cfg.multiplier, MultiplierKind::Approx);
         assert_eq!(cfg.batcher.max_batch, BatcherConfig::default().max_batch);
+        assert_eq!(cfg.backend, BackendKind::Native);
+    }
+
+    #[test]
+    fn backend_key_parses_and_roundtrips() {
+        let cfg = Config::from_text("backend pjrt\n").unwrap();
+        assert_eq!(cfg.backend, BackendKind::Pjrt);
+        let back = Config::from_text(&cfg.to_text()).unwrap();
+        assert_eq!(back.backend, BackendKind::Pjrt);
+        assert!(Config::from_text("backend warp\n").is_err());
+        assert_eq!(BackendKind::parse_slug(" Native "), Some(BackendKind::Native));
+    }
+
+    #[test]
+    fn shallow_queue_depth_is_allowed() {
+        // strict-admission configuration: queue_depth below max_batch
+        let cfg = Config::from_text("batcher.max_batch 8\nbatcher.queue_depth 4\n").unwrap();
+        assert_eq!(cfg.batcher.queue_depth, 4);
+        let mut bad = Config::default();
+        bad.batcher.queue_depth = 0;
+        assert!(bad.validate().is_err());
     }
 
     #[test]

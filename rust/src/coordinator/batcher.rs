@@ -3,8 +3,15 @@
 //! Pure logic (no tokio) so its invariants are property-testable:
 //! * a batch never exceeds `max_batch`,
 //! * requests leave in arrival order,
-//! * a non-empty queue never waits longer than `max_wait`,
-//! * padding fills up to the executable's lowered batch size.
+//! * a non-empty queue never waits longer than `max_wait` — the deadline
+//!   clock tracks the **true enqueue time** of the oldest pending request
+//!   ([`InferenceRequest::enqueued_at`]), so a partial flush cannot reset
+//!   a leftover request's wait back to zero,
+//! * padding fills up to the executable's lowered batch size,
+//! * `push` backpressures (`Err(request)`) once `queue_depth` requests
+//!   are pending. A `queue_depth` below `max_batch` is allowed: the queue
+//!   then fills before the size trigger ever fires (strict admission) and
+//!   batches form via the deadline flush only.
 
 use super::request::InferenceRequest;
 use std::collections::VecDeque;
@@ -21,7 +28,16 @@ pub struct Batch {
 impl Batch {
     /// Flattened `padded_to × dim` input matrix; padding rows are zeros.
     pub fn flatten_inputs(&self, dim: usize) -> Vec<f32> {
-        let mut out = vec![0.0f32; self.padded_to * dim];
+        self.flatten_rows(dim, self.padded_to)
+    }
+
+    /// Flattened `rows × dim` input matrix (`rows >= requests.len()`);
+    /// rows beyond the real requests are zeros. Backends with a fixed
+    /// lowered batch shape (PJRT) pass `padded_to`; the native GEMM
+    /// passes `requests.len()` and skips the padding work entirely.
+    pub fn flatten_rows(&self, dim: usize, rows: usize) -> Vec<f32> {
+        assert!(rows >= self.requests.len(), "rows must cover every request");
+        let mut out = vec![0.0f32; rows * dim];
         for (i, r) in self.requests.iter().enumerate() {
             assert_eq!(r.pixels.len(), dim, "request {} has wrong input dim", r.id);
             out[i * dim..(i + 1) * dim].copy_from_slice(&r.pixels);
@@ -31,20 +47,23 @@ impl Batch {
 }
 
 /// Deadline-based dynamic batcher.
+///
+/// The deadline clock is *derived*: it is always the enqueue time of
+/// `queue.front()`, never cached — so no code path can desynchronize a
+/// leftover request's wait from its true enqueue time.
 #[derive(Debug)]
 pub struct Batcher {
     max_batch: usize,
     max_wait: Duration,
     queue_depth: usize,
     queue: VecDeque<InferenceRequest>,
-    oldest_at: Option<Instant>,
 }
 
 impl Batcher {
     pub fn new(max_batch: usize, max_wait: Duration, queue_depth: usize) -> Self {
         assert!(max_batch >= 1);
-        assert!(queue_depth >= max_batch);
-        Batcher { max_batch, max_wait, queue_depth, queue: VecDeque::new(), oldest_at: None }
+        assert!(queue_depth >= 1);
+        Batcher { max_batch, max_wait, queue_depth, queue: VecDeque::new() }
     }
 
     pub fn from_config(cfg: &crate::config::BatcherConfig) -> Self {
@@ -66,9 +85,6 @@ impl Batcher {
         if self.is_full() {
             return Err(req);
         }
-        if self.queue.is_empty() {
-            self.oldest_at = Some(Instant::now());
-        }
         self.queue.push_back(req);
         if self.queue.len() >= self.max_batch {
             Ok(Some(self.form_batch()))
@@ -79,8 +95,8 @@ impl Batcher {
 
     /// Flush if the oldest pending request has waited past the deadline.
     pub fn flush_due(&mut self, now: Instant) -> Option<Batch> {
-        match self.oldest_at {
-            Some(t0) if !self.queue.is_empty() && now.duration_since(t0) >= self.max_wait => {
+        match self.queue.front() {
+            Some(r) if now.duration_since(r.enqueued_at) >= self.max_wait => {
                 Some(self.form_batch())
             }
             _ => None,
@@ -98,15 +114,14 @@ impl Batcher {
 
     /// Time until the current deadline fires, if any (scheduler hint).
     pub fn next_deadline_in(&self, now: Instant) -> Option<Duration> {
-        self.oldest_at.filter(|_| !self.queue.is_empty()).map(|t0| {
-            (t0 + self.max_wait).saturating_duration_since(now)
-        })
+        self.queue
+            .front()
+            .map(|r| (r.enqueued_at + self.max_wait).saturating_duration_since(now))
     }
 
     fn form_batch(&mut self) -> Batch {
         let n = self.queue.len().min(self.max_batch);
         let requests: Vec<InferenceRequest> = self.queue.drain(..n).collect();
-        self.oldest_at = if self.queue.is_empty() { None } else { Some(Instant::now()) };
         Batch { requests, padded_to: self.max_batch }
     }
 }
@@ -153,22 +168,86 @@ mod tests {
 
     #[test]
     fn backpressure_when_full() {
-        let mut b = Batcher::new(2, Duration::from_secs(10), 2);
+        // queue_depth below the size trigger, so the queue genuinely
+        // fills: pushes 0..4 stay below max_batch=8 and accumulate.
+        let mut b = Batcher::new(8, Duration::from_secs(10), 4);
+        for i in 0..4 {
+            assert!(b.push(req(i)).unwrap().is_none());
+        }
+        assert!(b.is_full());
+        let rejected = b.push(req(99)).expect_err("queue at depth must reject");
+        assert_eq!(rejected.id, 99, "the rejected request comes back to the caller");
+        assert_eq!(b.pending(), 4);
+        // draining via the deadline path frees capacity again
+        let batch = b.flush_due(Instant::now() + Duration::from_secs(11)).expect("deadline");
+        assert_eq!(batch.requests.len(), 4);
+        assert_eq!(batch.padded_to, 8);
+        assert!(b.push(req(100)).unwrap().is_none());
+    }
+
+    #[test]
+    fn leftover_request_keeps_true_deadline_after_partial_flush() {
+        // Regression: form_batch used to reset a cached deadline clock to
+        // `now`, letting a leftover request wait up to ~2x max_wait.
+        let max_wait = Duration::from_millis(100);
+        let mut b = Batcher::new(2, max_wait, 16);
+        let t0 = Instant::now();
+        // three requests enqueued at t0; max_batch 2 leaves one behind
+        b.queue.push_back(InferenceRequest { id: 0, pixels: vec![0.0; 4], enqueued_at: t0 });
+        b.queue.push_back(InferenceRequest { id: 1, pixels: vec![0.0; 4], enqueued_at: t0 });
+        b.queue.push_back(InferenceRequest { id: 2, pixels: vec![0.0; 4], enqueued_at: t0 });
+        let first = b.flush_due(t0 + max_wait).expect("deadline fired");
+        assert_eq!(first.requests.len(), 2);
+        assert_eq!(b.pending(), 1);
+        // the leftover (id 2) enqueued at t0 — its deadline is t0+max_wait,
+        // already due: it must NOT be made to wait another max_wait.
+        assert_eq!(
+            b.next_deadline_in(t0 + max_wait),
+            Some(Duration::ZERO),
+            "leftover deadline must reflect its true enqueue time"
+        );
+        let second = b.flush_due(t0 + max_wait).expect("leftover is already due");
+        assert_eq!(second.requests[0].id, 2);
+    }
+
+    #[test]
+    fn push_uses_request_enqueue_time_for_deadline() {
+        let max_wait = Duration::from_millis(100);
+        let mut b = Batcher::new(8, max_wait, 16);
+        let Some(t0) = Instant::now().checked_sub(Duration::from_millis(60)) else {
+            return; // clock too close to boot to backdate
+        };
+        b.push(InferenceRequest { id: 0, pixels: vec![0.0; 4], enqueued_at: t0 }).unwrap();
+        // 60ms of the budget already burned before push
+        let left = b.next_deadline_in(Instant::now()).unwrap();
+        assert!(left <= Duration::from_millis(40), "deadline ignored enqueue time: {left:?}");
+        assert!(b.flush_due(t0 + max_wait).is_some());
+    }
+
+    #[test]
+    fn next_deadline_counts_down_and_clears() {
+        let max_wait = Duration::from_millis(500);
+        let mut b = Batcher::new(4, max_wait, 16);
+        assert_eq!(b.next_deadline_in(Instant::now()), None, "empty queue has no deadline");
         b.push(req(0)).unwrap();
-        // second push forms a batch, so queue drains; force fullness:
-        let mut b2 = Batcher::new(4, Duration::from_secs(10), 4);
-        for i in 0..3 {
-            b2.push(req(i)).unwrap();
-        }
-        // queue_depth 4 reached only transiently; craft depth 3 instead
-        let mut b3 = Batcher::new(8, Duration::from_secs(10), 8);
-        for i in 0..8 {
-            let r = b3.push(req(i)).unwrap();
-            if i == 7 {
-                assert!(r.is_some());
-            }
-        }
-        let _ = (b, b2);
+        let now = Instant::now(); // after push, so enqueue time <= now
+        let d = b.next_deadline_in(now).expect("pending request has a deadline");
+        assert!(d <= max_wait);
+        // past the deadline it saturates to zero rather than underflowing
+        assert_eq!(b.next_deadline_in(now + Duration::from_secs(1)), Some(Duration::ZERO));
+        let _ = b.flush_due(now + Duration::from_secs(1)).unwrap();
+        assert_eq!(b.next_deadline_in(now), None, "drained queue has no deadline");
+    }
+
+    #[test]
+    fn flatten_inputs_full_batch_has_no_padding() {
+        let mut b = Batcher::new(3, Duration::from_secs(1), 16);
+        b.push(InferenceRequest::new(0, vec![1.0, 2.0])).unwrap();
+        b.push(InferenceRequest::new(1, vec![3.0, 4.0])).unwrap();
+        let batch = b.push(InferenceRequest::new(2, vec![5.0, 6.0])).unwrap().unwrap();
+        assert_eq!(batch.requests.len(), batch.padded_to);
+        let flat = batch.flatten_inputs(2);
+        assert_eq!(flat, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
     }
 
     #[test]

@@ -69,6 +69,8 @@ pub struct Metrics {
     batches: AtomicU64,
     padded_slots: AtomicU64,
     rejected: AtomicU64,
+    failed_batches: AtomicU64,
+    failed_requests: AtomicU64,
     /// Simulated CiM energy total, in femtojoules (stored as fJ integer).
     sim_energy_fj: AtomicU64,
     started: Option<Instant>,
@@ -89,6 +91,13 @@ impl Metrics {
         self.rejected.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// A dispatched batch failed (worker error or dropped reply); its
+    /// `requests` waiters were dropped and will surface "request dropped".
+    pub fn record_batch_failure(&self, requests: usize) {
+        self.failed_batches.fetch_add(1, Ordering::Relaxed);
+        self.failed_requests.fetch_add(requests as u64, Ordering::Relaxed);
+    }
+
     pub fn record_sim_energy_fj(&self, fj: f64) {
         self.sim_energy_fj.fetch_add(fj.round() as u64, Ordering::Relaxed);
     }
@@ -101,6 +110,8 @@ impl Metrics {
             batches: self.batches.load(Ordering::Relaxed),
             padded_slots: self.padded_slots.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
+            failed_batches: self.failed_batches.load(Ordering::Relaxed),
+            failed_requests: self.failed_requests.load(Ordering::Relaxed),
             mean_latency_us: self.latency.mean_us(),
             p50_latency_us: self.latency.quantile_us(0.50),
             p99_latency_us: self.latency.quantile_us(0.99),
@@ -118,6 +129,8 @@ pub struct MetricsSnapshot {
     pub batches: u64,
     pub padded_slots: u64,
     pub rejected: u64,
+    pub failed_batches: u64,
+    pub failed_requests: u64,
     pub mean_latency_us: f64,
     pub p50_latency_us: u64,
     pub p99_latency_us: u64,
@@ -135,6 +148,28 @@ impl MetricsSnapshot {
         } else {
             self.requests as f64 / slots as f64
         }
+    }
+
+    /// Multi-line human-readable report (the serve CLI prints this).
+    pub fn render(&self) -> String {
+        format!(
+            "requests {} | batches {} (occupancy {:.2}) | rejected {} | \
+             failed batches {} ({} requests)\n\
+             latency mean {:.0} us p50 {} us p99 {} us max {} us | \
+             throughput {:.0} req/s | sim energy {:.2} nJ\n",
+            self.requests,
+            self.batches,
+            self.batch_occupancy(),
+            self.rejected,
+            self.failed_batches,
+            self.failed_requests,
+            self.mean_latency_us,
+            self.p50_latency_us,
+            self.p99_latency_us,
+            self.max_latency_us,
+            self.throughput_rps,
+            self.sim_energy_fj / 1e6,
+        )
     }
 }
 
@@ -163,6 +198,19 @@ mod tests {
         assert_eq!(snap.requests, 14);
         assert_eq!(snap.padded_slots, 2);
         assert!((snap.batch_occupancy() - 14.0 / 16.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn batch_failures_are_counted_and_rendered() {
+        let m = Metrics::new();
+        m.record_batch(8, 8);
+        m.record_batch_failure(8);
+        m.record_batch_failure(3);
+        let snap = m.snapshot();
+        assert_eq!(snap.failed_batches, 2);
+        assert_eq!(snap.failed_requests, 11);
+        let report = snap.render();
+        assert!(report.contains("failed batches 2 (11 requests)"), "{report}");
     }
 
     #[test]

@@ -4,16 +4,19 @@
 //! need what this module provides — the part a deployment would run:
 //!
 //! * [`batcher`] — dynamic batching with a max-batch/max-wait policy
-//!   (batches are padded to the AOT-lowered batch size);
-//! * [`worker`] — a pool of OS threads, each owning its own PJRT client
-//!   and compiled executable (PJRT handles are not `Send`);
+//!   (batches are padded to the AOT-lowered batch size; deadlines track
+//!   true enqueue times, and `push` backpressures at `queue_depth`);
+//! * [`worker`] — a pool of OS threads, each building its own execution
+//!   backend from a [`crate::engine::BackendSpec`]: the native batched
+//!   LUT-GEMM by default, or a PJRT client + compiled executable with the
+//!   `pjrt` feature (PJRT handles are not `Send`);
 //! * [`router`] — round-robin dispatch with in-flight accounting;
 //! * [`tiler`] — maps every 4b×4b MAC of the model onto LUNA banks
 //!   (weight-stationary scheduling) and prices the run in programming
 //!   events, cycles and femtojoules using the gate-level cost model;
 //! * [`state`] — bank programming state (which weight each unit holds);
-//! * [`metrics`] — latency/throughput/energy counters;
-//! * [`server`] — the tokio front-end tying it all together.
+//! * [`metrics`] — latency/throughput/energy/failure counters;
+//! * [`server`] — the std-thread front-end tying it all together.
 
 pub mod batcher;
 pub mod metrics;

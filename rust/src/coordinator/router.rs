@@ -1,4 +1,5 @@
-//! Round-robin router over the PJRT worker pool with in-flight accounting.
+//! Round-robin router over the execution worker pool with in-flight
+//! accounting (backend-agnostic: native LUT-GEMM or PJRT workers).
 
 use super::worker::{BatchJob, WorkerPool};
 use crate::Result;
@@ -88,35 +89,26 @@ impl Drop for InFlightGuard {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::path::PathBuf;
-
-    const ID_HLO: &str = r#"HloModule ident, entry_computation_layout={(f32[1,1]{1,0})->(f32[1,1]{1,0})}
-
-ENTRY main {
-  p0 = f32[1,1]{1,0} parameter(0)
-  ROOT t = (f32[1,1]{1,0}) tuple(p0)
-}
-"#;
-
-    fn hlo() -> PathBuf {
-        let dir = crate::util::test_dir("router");
-        let p = dir.join("id.hlo.txt");
-        std::fs::write(&p, ID_HLO).unwrap();
-        p
-    }
+    use crate::engine::BackendSpec;
+    use crate::multiplier::{MultiplierKind, MultiplierModel};
+    use crate::nn::QuantMlp;
 
     #[test]
     fn round_robin_spreads_work() {
-        let router = Router::new(WorkerPool::spawn(2, hlo()).unwrap());
+        let mlp = QuantMlp::random_for_study(13);
+        let model = MultiplierModel::new(MultiplierKind::Ideal);
+        let spec = BackendSpec::Native { mlp: mlp.clone(), kind: MultiplierKind::Ideal };
+        let router = Router::new(WorkerPool::spawn(2, spec).unwrap());
         let mut hit = [false; 2];
         for i in 0..6 {
             let (tx, rx) = crate::util::oneshot::channel();
+            let inputs = vec![i as f32 / 8.0; 16];
             let guard = router
-                .dispatch(BatchJob { inputs: vec![i as f32], batch: 1, dim: 1, reply: tx })
+                .dispatch(BatchJob { inputs: inputs.clone(), batch: 1, dim: 16, reply: tx })
                 .unwrap();
             hit[guard.worker] = true;
             let out = rx.recv().unwrap().unwrap();
-            assert_eq!(out[0], vec![i as f32]);
+            assert_eq!(out[0], mlp.forward(&inputs, &model));
             drop(guard);
         }
         assert!(hit[0] && hit[1], "both workers used");

@@ -1,6 +1,7 @@
 //! The serving front-end: accepts single requests, batches them, executes
-//! on the PJRT worker pool, prices the CiM work with the tiler, and fans
-//! per-request responses back out.
+//! on the worker pool (native LUT-GEMM by default, PJRT with the `pjrt`
+//! feature — see [`crate::engine`]), prices the CiM work with the tiler,
+//! and fans per-request responses back out.
 //!
 //! Concurrency model (std threads; no async runtime in this offline
 //! image): client threads block on a oneshot for their response; a
@@ -15,7 +16,8 @@ use super::request::{InferenceRequest, InferenceResponse, RequestId};
 use super::router::Router;
 use super::tiler::Tiler;
 use super::worker::{BatchJob, WorkerPool};
-use crate::config::Config;
+use crate::config::{BackendKind, Config};
+use crate::engine::BackendSpec;
 use crate::nn::QuantMlp;
 use crate::runtime::ArtifactStore;
 use crate::util::oneshot;
@@ -39,6 +41,9 @@ struct Shared {
     out_dim: usize,
     next_id: AtomicU64,
     stopping: AtomicBool,
+    /// Pad executed batches to `padded_to` (PJRT's lowered shape is
+    /// fixed); the native backend runs exactly the real rows.
+    pad_batches: bool,
     /// Queue feeding the persistent completion pool.
     completions: Mutex<std::sync::mpsc::Sender<CompletionJob>>,
 }
@@ -49,6 +54,7 @@ struct CompletionJob {
     rx: oneshot::Receiver<crate::Result<Vec<Vec<f32>>>>,
     guard: super::router::InFlightGuard,
     per_req_energy: f64,
+    total_energy_fj: f64,
     sim_latency_ps: u64,
 }
 
@@ -83,8 +89,13 @@ impl CoordinatorServer {
         let mlp = store.load_mlp().context("loading weights")?;
         let lib = crate::cells::tsmc65_library();
         let tiler = Tiler::from_config(&cfg, &lib);
-        let hlo = store.mlp_hlo(cfg.multiplier);
-        let pool = WorkerPool::spawn(cfg.workers.count, hlo)?;
+        // Backend choice: native runs the batched LUT-GEMM in-process
+        // (no HLO artifacts touched); pjrt compiles the AOT executable.
+        let spec = match cfg.backend {
+            BackendKind::Native => BackendSpec::Native { mlp: mlp.clone(), kind: cfg.multiplier },
+            BackendKind::Pjrt => BackendSpec::Pjrt { hlo: store.mlp_hlo(cfg.multiplier) },
+        };
+        let pool = WorkerPool::spawn(cfg.workers.count, spec)?;
         let in_dim = *meta.dims.first().unwrap();
         let out_dim = *meta.dims.last().unwrap();
         let (ctx, crx) = std::sync::mpsc::channel::<CompletionJob>();
@@ -100,6 +111,7 @@ impl CoordinatorServer {
             out_dim,
             next_id: AtomicU64::new(0),
             stopping: AtomicBool::new(false),
+            pad_batches: cfg.backend == BackendKind::Pjrt,
             completions: Mutex::new(ctx),
         });
         // Persistent completion pool: one thread per worker keeps the
@@ -212,19 +224,21 @@ fn dispatch_batch(shared: &Arc<Shared>, batch: Batch) {
     if n == 0 {
         return;
     }
-    shared.metrics.record_batch(n, batch.padded_to);
     // CiM cost model: schedule this batch on the LUNA fabric.
     let schedule = {
         let mut tiler = shared.tiler.lock().unwrap();
         tiler.schedule(&shared.mlp, n)
     };
     let per_req_energy = schedule.total_energy_fj / n as f64;
+    let total_energy_fj = schedule.total_energy_fj;
     let sim_latency_ps = schedule.latency_ps;
-    shared.metrics.record_sim_energy_fj(schedule.total_energy_fj);
 
-    let inputs = batch.flatten_inputs(shared.in_dim);
+    // PJRT's lowered executable has a fixed batch dimension; the native
+    // GEMM runs exactly the real rows (no MACs spent on padding).
+    let exec_rows = if shared.pad_batches { batch.padded_to } else { n };
+    let inputs = batch.flatten_rows(shared.in_dim, exec_rows);
     let (tx, rx) = oneshot::channel();
-    let job = BatchJob { inputs, batch: batch.padded_to, dim: shared.in_dim, reply: tx };
+    let job = BatchJob { inputs, batch: exec_rows, dim: shared.in_dim, reply: tx };
     let guard = match shared.router.dispatch(job) {
         Ok(g) => g,
         Err(e) => {
@@ -232,7 +246,7 @@ fn dispatch_batch(shared: &Arc<Shared>, batch: Batch) {
             return;
         }
     };
-    let job = CompletionJob { batch, rx, guard, per_req_energy, sim_latency_ps };
+    let job = CompletionJob { batch, rx, guard, per_req_energy, total_energy_fj, sim_latency_ps };
     let send_result = { shared.completions.lock().unwrap().send(job) };
     if let Err(std::sync::mpsc::SendError(job)) = send_result {
         // Pool already shut down (server tear-down path): complete inline.
@@ -242,10 +256,14 @@ fn dispatch_batch(shared: &Arc<Shared>, batch: Batch) {
 
 /// Receive one worker reply and fan it out to the per-request waiters.
 fn complete_batch(shared: &Arc<Shared>, job: CompletionJob) {
-    let CompletionJob { batch, rx, guard, per_req_energy, sim_latency_ps } = job;
+    let CompletionJob { batch, rx, guard, per_req_energy, total_energy_fj, sim_latency_ps } = job;
     let _guard = guard;
     match rx.recv() {
         Some(Ok(outputs)) => {
+            // Served-work metrics only count batches that actually
+            // produced replies; failures go to record_batch_failure.
+            shared.metrics.record_batch(batch.requests.len(), batch.padded_to);
+            shared.metrics.record_sim_energy_fj(total_energy_fj);
             let logits_all = &outputs[0];
             let out_dim = shared.out_dim;
             let mut waiters = shared.waiters.lock().unwrap();
@@ -273,6 +291,7 @@ fn complete_batch(shared: &Arc<Shared>, job: CompletionJob) {
 
 fn fail_batch(shared: &Arc<Shared>, batch: &Batch, why: &str) {
     // Drop the waiters; submit() surfaces this as "request dropped".
+    shared.metrics.record_batch_failure(batch.requests.len());
     let mut waiters = shared.waiters.lock().unwrap();
     for req in &batch.requests {
         waiters.remove(&req.id);

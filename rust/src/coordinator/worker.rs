@@ -1,16 +1,16 @@
-//! PJRT worker pool.
+//! Execution worker pool.
 //!
-//! PJRT handles are not `Send`, so each worker is an OS thread that builds
-//! its **own** client and compiles the artifact locally, then serves batch
-//! jobs from an mpsc queue. Replies travel over in-tree oneshot channels
+//! Each worker is an OS thread that builds its **own** backend from a
+//! [`BackendSpec`] — PJRT handles are not `Send`, and the native LUT-GEMM
+//! backend owns per-thread scratch buffers — then serves batch jobs from
+//! an mpsc queue. Replies travel over in-tree oneshot channels
 //! ([`crate::util::oneshot`]); the submitting client thread blocks on the
 //! receiver — the concurrency model of this std-thread coordinator.
 
-use crate::runtime::PjrtRuntime;
+use crate::engine::BackendSpec;
 use crate::util::oneshot;
 use crate::Result;
 use anyhow::{anyhow, ensure};
-use std::path::PathBuf;
 use std::sync::mpsc;
 use std::thread::JoinHandle;
 
@@ -24,28 +24,28 @@ pub struct BatchJob {
     pub reply: oneshot::Sender<Result<Vec<Vec<f32>>>>,
 }
 
-/// A pool of PJRT worker threads.
+/// A pool of execution worker threads.
 pub struct WorkerPool {
     senders: Vec<mpsc::Sender<BatchJob>>,
     handles: Vec<JoinHandle<()>>,
 }
 
 impl WorkerPool {
-    /// Spawn `count` workers, each compiling the HLO artifact at `hlo_path`.
-    /// Blocks until every worker reports successful compilation (or fails
-    /// fast with the first error).
-    pub fn spawn(count: usize, hlo_path: PathBuf) -> Result<Self> {
+    /// Spawn `count` workers, each building its own backend from `spec`.
+    /// Blocks until every worker reports successful construction (or
+    /// fails fast with the first error).
+    pub fn spawn(count: usize, spec: BackendSpec) -> Result<Self> {
         ensure!(count >= 1, "need at least one worker");
         let mut senders = Vec::with_capacity(count);
         let mut handles = Vec::with_capacity(count);
         let (ready_tx, ready_rx) = mpsc::channel::<std::result::Result<(), String>>();
         for worker_id in 0..count {
             let (tx, rx) = mpsc::channel::<BatchJob>();
-            let path = hlo_path.clone();
+            let spec = spec.clone();
             let ready = ready_tx.clone();
             let handle = std::thread::Builder::new()
-                .name(format!("pjrt-worker-{worker_id}"))
-                .spawn(move || worker_main(path, rx, ready))
+                .name(format!("luna-worker-{worker_id}"))
+                .spawn(move || worker_main(spec, rx, ready))
                 .expect("spawn worker thread");
             senders.push(tx);
             handles.push(handle);
@@ -82,14 +82,14 @@ impl WorkerPool {
 }
 
 fn worker_main(
-    path: PathBuf,
+    spec: BackendSpec,
     rx: mpsc::Receiver<BatchJob>,
     ready: mpsc::Sender<std::result::Result<(), String>>,
 ) {
-    let model = match PjrtRuntime::cpu().and_then(|rt| rt.load_hlo_text(&path)) {
-        Ok(m) => {
+    let mut backend = match spec.build() {
+        Ok(b) => {
             let _ = ready.send(Ok(()));
-            m
+            b
         }
         Err(e) => {
             let _ = ready.send(Err(format!("{e:#}")));
@@ -97,7 +97,7 @@ fn worker_main(
         }
     };
     while let Ok(job) = rx.recv() {
-        let res = model.run_f32(&[(&job.inputs, &[job.batch as i64, job.dim as i64])]);
+        let res = backend.run_batch(&job.inputs, job.batch, job.dim);
         let _ = job.reply.send(res);
     }
 }
@@ -105,8 +105,56 @@ fn worker_main(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::multiplier::{MultiplierKind, MultiplierModel};
+    use crate::nn::QuantMlp;
 
-    const DOUBLE_HLO: &str = r#"HloModule double, entry_computation_layout={(f32[2,3]{1,0})->(f32[2,3]{1,0})}
+    fn native_spec() -> (BackendSpec, QuantMlp) {
+        let mlp = QuantMlp::random_for_study(11);
+        (BackendSpec::Native { mlp: mlp.clone(), kind: MultiplierKind::DncOpt }, mlp)
+    }
+
+    #[test]
+    fn pool_executes_jobs_on_all_workers() {
+        let (spec, mlp) = native_spec();
+        let model = MultiplierModel::new(MultiplierKind::DncOpt);
+        let pool = WorkerPool::spawn(2, spec).unwrap();
+        for i in 0..4 {
+            let (tx, rx) = oneshot::channel();
+            let inputs: Vec<f32> = (0..32).map(|j| ((i * 32 + j) % 16) as f32 / 16.0).collect();
+            pool.submit(i, BatchJob { inputs: inputs.clone(), batch: 2, dim: 16, reply: tx })
+                .unwrap();
+            let out = rx.recv().unwrap().unwrap();
+            let expect = mlp.forward_batch(&inputs, 2, &model);
+            assert_eq!(out[0], expect);
+        }
+        pool.shutdown();
+    }
+
+    #[test]
+    fn worker_surfaces_bad_batch_shape_as_error() {
+        let (spec, _) = native_spec();
+        let pool = WorkerPool::spawn(1, spec).unwrap();
+        let (tx, rx) = oneshot::channel();
+        pool.submit(0, BatchJob { inputs: vec![0.0; 5], batch: 1, dim: 16, reply: tx }).unwrap();
+        assert!(rx.recv().unwrap().is_err());
+        pool.shutdown();
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn pjrt_spec_fails_fast_without_feature() {
+        let spec = BackendSpec::Pjrt { hlo: std::path::PathBuf::from("/no/such/file.hlo.txt") };
+        assert!(WorkerPool::spawn(1, spec).is_err());
+    }
+
+    #[cfg(feature = "pjrt")]
+    mod pjrt {
+        use crate::coordinator::worker::{BatchJob, WorkerPool};
+        use crate::engine::BackendSpec;
+        use crate::util::oneshot;
+        use std::path::PathBuf;
+
+        const DOUBLE_HLO: &str = r#"HloModule double, entry_computation_layout={(f32[2,3]{1,0})->(f32[2,3]{1,0})}
 
 ENTRY main {
   p0 = f32[2,3]{1,0} parameter(0)
@@ -115,38 +163,40 @@ ENTRY main {
 }
 "#;
 
-    fn hlo_file(tag: &str) -> PathBuf {
-        let dir = crate::util::test_dir(tag);
-        let path = dir.join("double.hlo.txt");
-        std::fs::write(&path, DOUBLE_HLO).unwrap();
-        path
-    }
-
-    #[test]
-    fn pool_executes_jobs_on_all_workers() {
-        let pool = WorkerPool::spawn(2, hlo_file("pool")).unwrap();
-        for i in 0..4 {
-            let (tx, rx) = oneshot::channel();
-            let inputs: Vec<f32> = (0..6).map(|j| (i * 6 + j) as f32).collect();
-            pool.submit(i, BatchJob { inputs: inputs.clone(), batch: 2, dim: 3, reply: tx })
-                .unwrap();
-            let out = rx.recv().unwrap().unwrap();
-            let expect: Vec<f32> = inputs.iter().map(|v| v * 2.0).collect();
-            assert_eq!(out[0], expect);
+        fn hlo_file(tag: &str) -> PathBuf {
+            let dir = crate::util::test_dir(tag);
+            let path = dir.join("double.hlo.txt");
+            std::fs::write(&path, DOUBLE_HLO).unwrap();
+            path
         }
-        pool.shutdown();
-    }
 
-    #[test]
-    fn bad_artifact_fails_fast() {
-        let dir = crate::util::test_dir("badhlo");
-        let path = dir.join("broken.hlo.txt");
-        std::fs::write(&path, "not hlo at all").unwrap();
-        assert!(WorkerPool::spawn(1, path).is_err());
-    }
+        #[test]
+        fn pjrt_pool_executes_jobs() {
+            let pool = WorkerPool::spawn(2, BackendSpec::Pjrt { hlo: hlo_file("pool") }).unwrap();
+            for i in 0..4 {
+                let (tx, rx) = oneshot::channel();
+                let inputs: Vec<f32> = (0..6).map(|j| (i * 6 + j) as f32).collect();
+                pool.submit(i, BatchJob { inputs: inputs.clone(), batch: 2, dim: 3, reply: tx })
+                    .unwrap();
+                let out = rx.recv().unwrap().unwrap();
+                let expect: Vec<f32> = inputs.iter().map(|v| v * 2.0).collect();
+                assert_eq!(out[0], expect);
+            }
+            pool.shutdown();
+        }
 
-    #[test]
-    fn missing_artifact_fails_fast() {
-        assert!(WorkerPool::spawn(1, PathBuf::from("/no/such/file.hlo.txt")).is_err());
+        #[test]
+        fn bad_artifact_fails_fast() {
+            let dir = crate::util::test_dir("badhlo");
+            let path = dir.join("broken.hlo.txt");
+            std::fs::write(&path, "not hlo at all").unwrap();
+            assert!(WorkerPool::spawn(1, BackendSpec::Pjrt { hlo: path }).is_err());
+        }
+
+        #[test]
+        fn missing_artifact_fails_fast() {
+            let spec = BackendSpec::Pjrt { hlo: PathBuf::from("/no/such/file.hlo.txt") };
+            assert!(WorkerPool::spawn(1, spec).is_err());
+        }
     }
 }

@@ -1,0 +1,102 @@
+//! Pluggable batch-execution backends for the serving coordinator.
+//!
+//! The coordinator used to hard-code the external PJRT runtime; this
+//! module makes execution a trait so the same serving stack (batcher →
+//! router → worker pool → completion pool) runs against either:
+//!
+//! * [`NativeBackend`] — the in-process batched LUT-GEMM over the
+//!   quantized functional model. Zero external dependencies: the whole
+//!   request path is pure Rust, so `backend native` (the default) serves
+//!   traffic without `make artifacts`' HLO outputs or the `xla` crate.
+//! * [`PjrtBackend`] *(feature `pjrt`)* — the AOT-compiled JAX/Pallas
+//!   executable through PJRT, unchanged from the original worker path.
+//!
+//! Workers construct their backend **per thread** from a cloneable
+//! [`BackendSpec`]: PJRT handles are not `Send`, and the native backend
+//! keeps per-thread scratch buffers, so neither backend ever crosses a
+//! thread boundary after construction.
+
+mod native;
+#[cfg(feature = "pjrt")]
+mod pjrt;
+
+pub use native::NativeBackend;
+#[cfg(feature = "pjrt")]
+pub use pjrt::PjrtBackend;
+
+use crate::multiplier::MultiplierKind;
+use crate::nn::QuantMlp;
+use crate::Result;
+use std::path::PathBuf;
+
+/// A batch executor. `run_batch` takes the padded row-major
+/// `batch × dim` input matrix and returns every output tuple element
+/// flattened (the MLP artifacts return a single-element tuple of
+/// `batch × out_dim` logits; the native backend mirrors that shape).
+///
+/// Takes `&mut self` because backends own per-thread state (PJRT device
+/// buffers, native scratch); each worker thread owns its backend
+/// exclusively.
+pub trait ExecBackend {
+    /// Stable backend identifier (logs, metrics).
+    fn name(&self) -> &'static str;
+
+    /// Execute one padded batch.
+    fn run_batch(&mut self, inputs: &[f32], batch: usize, dim: usize) -> Result<Vec<Vec<f32>>>;
+}
+
+/// Cloneable recipe a worker thread uses to build its own backend.
+#[derive(Debug, Clone)]
+pub enum BackendSpec {
+    /// In-process batched LUT-GEMM over the quantized model.
+    Native { mlp: QuantMlp, kind: MultiplierKind },
+    /// PJRT execution of the HLO-text artifact at `hlo` (feature `pjrt`).
+    Pjrt { hlo: PathBuf },
+}
+
+impl BackendSpec {
+    /// Construct the backend on the calling thread.
+    pub fn build(&self) -> Result<Box<dyn ExecBackend>> {
+        match self {
+            BackendSpec::Native { mlp, kind } => {
+                Ok(Box::new(NativeBackend::new(mlp.clone(), *kind)))
+            }
+            #[cfg(feature = "pjrt")]
+            BackendSpec::Pjrt { hlo } => Ok(Box::new(PjrtBackend::load(hlo)?)),
+            #[cfg(not(feature = "pjrt"))]
+            BackendSpec::Pjrt { hlo } => anyhow::bail!(
+                "PJRT backend requested ({}) but this build has no `pjrt` feature — \
+                 rebuild with `--features pjrt` or set `backend native`",
+                hlo.display()
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::multiplier::MultiplierModel;
+
+    #[test]
+    fn native_spec_builds_and_matches_functional_model() {
+        let mlp = QuantMlp::random_for_study(21);
+        let spec = BackendSpec::Native { mlp: mlp.clone(), kind: MultiplierKind::DncOpt };
+        let mut backend = spec.build().unwrap();
+        assert_eq!(backend.name(), "native");
+        let xs = vec![0.25f32; 2 * 16];
+        let out = backend.run_batch(&xs, 2, 16).unwrap();
+        assert_eq!(out.len(), 1);
+        let model = MultiplierModel::new(MultiplierKind::DncOpt);
+        let want = mlp.forward(&xs[0..16], &model);
+        assert_eq!(&out[0][0..8], &want[..]);
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn pjrt_spec_fails_clearly_without_feature() {
+        let spec = BackendSpec::Pjrt { hlo: PathBuf::from("/tmp/x.hlo.txt") };
+        let err = spec.build().unwrap_err();
+        assert!(format!("{err:#}").contains("backend native"));
+    }
+}

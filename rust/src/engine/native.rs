@@ -1,0 +1,106 @@
+//! Native batched LUT-GEMM execution: the quantized functional model run
+//! in-process, one flat 256-entry product-table gather per MAC.
+//!
+//! This is the paper's D&C promise cashed in at serving time: because the
+//! LUT multiplication is a table load, a whole `batch × in_dim` matrix
+//! runs through [`crate::nn::QuantMlp::forward_batch_with`] with the
+//! batch quantized once per layer, the zero-point correction hoisted out
+//! of the inner loop, and scratch buffers reused across layers and
+//! batches. Bit-exact with the per-sample forward for every
+//! [`MultiplierKind`].
+
+use super::ExecBackend;
+use crate::multiplier::{MultiplierKind, MultiplierModel};
+use crate::nn::{BatchScratch, QuantMlp};
+use crate::Result;
+use anyhow::ensure;
+
+/// In-process batched executor over the quantized MLP.
+pub struct NativeBackend {
+    mlp: QuantMlp,
+    model: MultiplierModel,
+    scratch: BatchScratch,
+}
+
+impl NativeBackend {
+    pub fn new(mlp: QuantMlp, kind: MultiplierKind) -> Self {
+        NativeBackend { mlp, model: MultiplierModel::new(kind), scratch: BatchScratch::default() }
+    }
+
+    pub fn kind(&self) -> MultiplierKind {
+        self.model.kind
+    }
+}
+
+impl ExecBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn run_batch(&mut self, inputs: &[f32], batch: usize, dim: usize) -> Result<Vec<Vec<f32>>> {
+        ensure!(
+            dim == self.mlp.input_dim(),
+            "input dim {} != model input dim {}",
+            dim,
+            self.mlp.input_dim()
+        );
+        ensure!(
+            inputs.len() == batch * dim,
+            "input length {} != batch {} x dim {}",
+            inputs.len(),
+            batch,
+            dim
+        );
+        let logits = self.mlp.forward_batch_with(inputs, batch, &self.model, &mut self.scratch);
+        Ok(vec![logits])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batched_run_is_bit_exact_with_per_sample_forward() {
+        let mlp = QuantMlp::random_digits(17);
+        let mut rng = crate::util::Rng::seed_from_u64(5);
+        let batch = 8;
+        let xs: Vec<f32> = (0..batch * 64).map(|_| rng.gen_range_f32(0.0, 1.0)).collect();
+        for kind in MultiplierKind::ALL {
+            let mut backend = NativeBackend::new(mlp.clone(), kind);
+            let out = backend.run_batch(&xs, batch, 64).unwrap();
+            let model = MultiplierModel::new(kind);
+            for b in 0..batch {
+                let want = mlp.forward(&xs[b * 64..(b + 1) * 64], &model);
+                assert_eq!(&out[0][b * 10..(b + 1) * 10], &want[..], "{kind} row {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn shape_mismatches_are_rejected() {
+        let mlp = QuantMlp::random_digits(1);
+        let mut backend = NativeBackend::new(mlp, MultiplierKind::Ideal);
+        assert!(backend.run_batch(&[0.0; 64], 1, 32).is_err());
+        assert!(backend.run_batch(&[0.0; 63], 1, 64).is_err());
+    }
+
+    #[test]
+    fn scratch_reuse_across_batches_stays_exact() {
+        let mlp = QuantMlp::random_digits(2);
+        let model = MultiplierModel::new(MultiplierKind::Approx2);
+        let mut backend = NativeBackend::new(mlp.clone(), MultiplierKind::Approx2);
+        for round in 0..3 {
+            let x = vec![0.1 * (round + 1) as f32; 64];
+            let mut xs = Vec::new();
+            for _ in 0..4 {
+                xs.extend_from_slice(&x);
+            }
+            let out = backend.run_batch(&xs, 4, 64).unwrap();
+            let want = mlp.forward(&x, &model);
+            for b in 0..4 {
+                assert_eq!(&out[0][b * 10..(b + 1) * 10], &want[..], "round {round} row {b}");
+            }
+        }
+    }
+}

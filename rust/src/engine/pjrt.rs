@@ -1,0 +1,63 @@
+//! PJRT-backed execution (feature `pjrt`): wraps the AOT-compiled
+//! JAX/Pallas HLO-text artifact behind [`ExecBackend`], preserving the
+//! original worker semantics (one client + executable per thread).
+
+use super::ExecBackend;
+use crate::runtime::{CompiledModel, PjrtRuntime};
+use crate::Result;
+use std::path::Path;
+
+/// One compiled PJRT executable. Not `Send` — build per worker thread
+/// via [`crate::engine::BackendSpec::build`].
+pub struct PjrtBackend {
+    model: CompiledModel,
+}
+
+impl PjrtBackend {
+    /// Create a CPU client and compile the HLO-text artifact at `hlo`.
+    pub fn load(hlo: impl AsRef<Path>) -> Result<Self> {
+        let rt = PjrtRuntime::cpu()?;
+        Ok(PjrtBackend { model: rt.load_hlo_text(hlo)? })
+    }
+}
+
+impl ExecBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn run_batch(&mut self, inputs: &[f32], batch: usize, dim: usize) -> Result<Vec<Vec<f32>>> {
+        self.model.run_f32(&[(inputs, &[batch as i64, dim as i64])])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOUBLE_HLO: &str = r#"HloModule double, entry_computation_layout={(f32[2,3]{1,0})->(f32[2,3]{1,0})}
+
+ENTRY main {
+  p0 = f32[2,3]{1,0} parameter(0)
+  add = f32[2,3]{1,0} add(p0, p0)
+  ROOT t = (f32[2,3]{1,0}) tuple(add)
+}
+"#;
+
+    #[test]
+    fn pjrt_backend_runs_hlo_text() {
+        let dir = crate::util::test_dir("engine-pjrt");
+        let path = dir.join("double.hlo.txt");
+        std::fs::write(&path, DOUBLE_HLO).unwrap();
+        let mut backend = PjrtBackend::load(&path).unwrap();
+        let inputs: Vec<f32> = (0..6).map(|i| i as f32).collect();
+        let out = backend.run_batch(&inputs, 2, 3).unwrap();
+        let expect: Vec<f32> = inputs.iter().map(|v| v * 2.0).collect();
+        assert_eq!(out[0], expect);
+    }
+
+    #[test]
+    fn missing_artifact_fails() {
+        assert!(PjrtBackend::load("/no/such/file.hlo.txt").is_err());
+    }
+}

@@ -22,10 +22,15 @@
 //!   cross-checked against the AOT-compiled JAX/Pallas artifacts) — see
 //!   [`nn`];
 //! * the **serving coordinator**: request queue, dynamic batcher, worker
-//!   pool over PJRT executables, and the bank scheduler that maps matmuls
-//!   onto LUNA units with energy/latency accounting — see [`coordinator`];
-//! * the **PJRT runtime** that loads the HLO-text artifacts produced by
-//!   `python/compile/aot.py` — see [`runtime`];
+//!   pool over pluggable execution backends, and the bank scheduler that
+//!   maps matmuls onto LUNA units with energy/latency accounting — see
+//!   [`coordinator`];
+//! * the **execution backends**: the native batched LUT-GEMM (default,
+//!   zero external dependencies) and the PJRT wrapper (feature `pjrt`)
+//!   — see [`engine`];
+//! * the **artifact store and PJRT runtime** that load the outputs of
+//!   `python/compile/aot.py` — see [`runtime`] (the PJRT client itself
+//!   is gated behind the `pjrt` cargo feature);
 //! * [`report`] — text/CSV regenerators for every table and figure.
 //!
 //! Python (JAX + Pallas) runs only at build time (`make artifacts`); the
@@ -35,6 +40,7 @@ pub mod analysis;
 pub mod cells;
 pub mod config;
 pub mod coordinator;
+pub mod engine;
 pub mod logic;
 pub mod luna;
 pub mod multiplier;

@@ -12,10 +12,9 @@
 //! * `eval [...]`               — offline accuracy/energy of every variant.
 
 use luna_cim::cells::tsmc65_library;
-use luna_cim::config::Config;
+use luna_cim::config::{BackendKind, Config};
 use luna_cim::coordinator::CoordinatorServer;
 use luna_cim::multiplier::{MultiplierKind, MultiplierModel};
-use luna_cim::nn::argmax;
 use luna_cim::report;
 use luna_cim::runtime::ArtifactStore;
 use luna_cim::Result;
@@ -28,12 +27,13 @@ USAGE:
   repro figures  [--id N] [--csv]
   repro mul <W> <Y>
   repro simulate [--multiplier SLUG] [--weight W] [--inputs a,b,c]
-  repro serve    [--config FILE] [--requests N] [--clients N] [--multiplier SLUG]
+  repro serve    [--config FILE] [--requests N] [--clients N] [--multiplier SLUG] [--backend native|pjrt]
   repro eval     [--artifacts DIR]
   repro ablation [--artifacts DIR]
   repro export   [--out DIR]
 
 Multiplier slugs: ideal traditional dnc dnc-opt approx approx2 array-mult
+Backends: native (in-process batched LUT-GEMM, default), pjrt (AOT HLO; needs the `pjrt` build feature)
 ";
 
 /// Minimal flag parser: `--key value` pairs plus positional args.
@@ -199,6 +199,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(m) = args.multiplier("multiplier")? {
         cfg.multiplier = m;
     }
+    if let Some(b) = args.flag("backend") {
+        cfg.backend = BackendKind::from_arg(b)?;
+    }
     let requests: usize = args.flag_parse("requests", 256)?;
     let clients: usize = args.flag_parse("clients", 16)?;
     serve_load(cfg, requests, clients)
@@ -210,8 +213,11 @@ fn serve_load(cfg: Config, requests: usize, clients: usize) -> Result<()> {
     let testset = store.load_testset()?;
     let (server, handle) = CoordinatorServer::start(cfg.clone())?;
     println!(
-        "serving with {} workers, batch {}, multiplier {}",
-        cfg.workers.count, cfg.batcher.max_batch, cfg.multiplier
+        "serving with {} workers, batch {}, multiplier {}, backend {}",
+        cfg.workers.count,
+        cfg.batcher.max_batch,
+        cfg.multiplier,
+        cfg.backend.slug()
     );
     let per_client = requests / clients.max(1);
     let mut threads = Vec::new();
@@ -238,18 +244,9 @@ fn serve_load(cfg: Config, requests: usize, clients: usize) -> Result<()> {
     let completed: usize = threads.into_iter().map(|t| t.join().unwrap_or(0)).sum();
     let snap = server.metrics().snapshot();
     println!("completed {completed}/{requests} requests");
+    print!("{}", snap.render());
     println!(
-        "throughput {:.0} req/s | latency mean {:.0} us p50 {} us p99 {} us | batches {} (occupancy {:.2})",
-        snap.throughput_rps,
-        snap.mean_latency_us,
-        snap.p50_latency_us,
-        snap.p99_latency_us,
-        snap.batches,
-        snap.batch_occupancy()
-    );
-    println!(
-        "simulated CiM energy {:.2} nJ total ({:.1} fJ / request)",
-        snap.sim_energy_fj / 1e6,
+        "simulated CiM energy per request: {:.1} fJ",
         snap.sim_energy_fj / completed.max(1) as f64
     );
     server.shutdown();
@@ -381,8 +378,20 @@ fn cmd_eval(args: &Args) -> Result<()> {
         );
     }
 
-    // PJRT cross-check: run the ideal artifact and compare classifications
-    // with the functional model on one batch.
+    pjrt_cross_check(&store, &meta, &mlp, &testset)?;
+    Ok(())
+}
+
+/// Run the ideal PJRT artifact and compare classifications with the
+/// functional model on one batch (only in `pjrt` builds).
+#[cfg(feature = "pjrt")]
+fn pjrt_cross_check(
+    store: &ArtifactStore,
+    meta: &luna_cim::runtime::ModelMeta,
+    mlp: &luna_cim::nn::QuantMlp,
+    testset: &luna_cim::nn::DigitsDataset,
+) -> Result<()> {
+    use luna_cim::nn::argmax;
     let rt = luna_cim::runtime::PjrtRuntime::cpu()?;
     let model = rt.load_hlo_text(store.mlp_hlo(MultiplierKind::Ideal))?;
     let b = meta.batch;
@@ -403,5 +412,16 @@ fn cmd_eval(args: &Args) -> Result<()> {
         }
     }
     println!("PJRT vs functional-model agreement on first batch: {agree}/{b}");
+    Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_cross_check(
+    _store: &ArtifactStore,
+    _meta: &luna_cim::runtime::ModelMeta,
+    _mlp: &luna_cim::nn::QuantMlp,
+    _testset: &luna_cim::nn::DigitsDataset,
+) -> Result<()> {
+    println!("(PJRT cross-check skipped: built without the `pjrt` feature)");
     Ok(())
 }

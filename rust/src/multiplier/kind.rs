@@ -168,10 +168,21 @@ impl MultiplierModel {
     }
 
     /// Product of 4-bit `w` and `y` under this configuration (one load).
+    ///
+    /// Both operands are masked to 4 bits: out-of-range codes are a caller
+    /// bug, but they must neither read out of bounds nor panic in release
+    /// builds — they wrap, exactly like the SRAM row decoder would.
     #[inline]
     pub fn mul(&self, w: u8, y: u8) -> u8 {
-        debug_assert!(w < 16 && y < 16);
-        self.table[((w as usize) << 4) | (y as usize & 0xf)]
+        self.table[(((w & 0xf) as usize) << 4) | (y & 0xf) as usize]
+    }
+
+    /// The full 256-entry product table, indexed `(w << 4) | y`. This is
+    /// the flat-gather fast path the batched LUT-GEMM uses: one bounds
+    /// check hoisted by the type, no per-element masking.
+    #[inline]
+    pub fn table(&self) -> &[u8; 256] {
+        &self.table
     }
 
     /// Dot product of 4-bit vectors under this configuration (the MAC the
@@ -224,5 +235,28 @@ mod tests {
     fn dot_product_accumulates() {
         let m = MultiplierModel::new(MultiplierKind::Ideal);
         assert_eq!(m.dot(&[1, 2, 3], &[4, 5, 6]), 4 + 10 + 18);
+    }
+
+    #[test]
+    fn mul_masks_both_out_of_range_operands() {
+        for kind in MultiplierKind::ALL {
+            let m = MultiplierModel::new(kind);
+            // both operands wrap identically — no panic, no OOB read
+            assert_eq!(m.mul(0x1f, 0x2f), m.mul(0xf, 0xf), "{kind}");
+            assert_eq!(m.mul(16, 3), m.mul(0, 3), "{kind}");
+            assert_eq!(m.mul(3, 16), m.mul(3, 0), "{kind}");
+            assert_eq!(m.mul(255, 255), m.mul(15, 15), "{kind}");
+        }
+    }
+
+    #[test]
+    fn table_matches_mul_for_all_pairs() {
+        let m = MultiplierModel::new(MultiplierKind::Approx2);
+        let table = m.table();
+        for w in 0..16u8 {
+            for y in 0..16u8 {
+                assert_eq!(table[((w as usize) << 4) | y as usize], m.mul(w, y));
+            }
+        }
     }
 }

@@ -106,6 +106,47 @@ impl QuantLinear {
     pub fn macs(&self) -> u64 {
         (self.in_dim * self.out_dim) as u64
     }
+
+    /// Batched LUT-GEMM over pre-quantized activations.
+    ///
+    /// `xq` is row-major `batch × in_dim` 4-bit codes; writes row-major
+    /// `batch × out_dim` dequantized (bias + ReLU applied) activations
+    /// into `out`, clearing it first. The inner loop is a flat gather
+    /// from the 256-entry product table with the zero-point correction
+    /// `zp · Σ_j xq_j` hoisted out per input row — the whole batch pays
+    /// one correction sum per row instead of one per MAC.
+    ///
+    /// Bit-exact with the per-sample path: the accumulation order, the
+    /// LUT contents and the dequantization expression are identical to
+    /// [`QuantLinear::accumulate`] + [`QuantLinear::forward`].
+    pub fn gemm_batch_into(
+        &self,
+        xq: &[u8],
+        batch: usize,
+        model: &MultiplierModel,
+        out: &mut Vec<f32>,
+    ) {
+        assert_eq!(xq.len(), batch * self.in_dim, "bad batch input shape");
+        out.clear();
+        out.reserve(batch * self.out_dim);
+        let table = model.table();
+        let zp = self.w_quant.zero_point as i32;
+        for b in 0..batch {
+            let xrow = &xq[b * self.in_dim..(b + 1) * self.in_dim];
+            let corr = zp * xrow.iter().map(|&x| x as i32).sum::<i32>();
+            for i in 0..self.out_dim {
+                let wrow = &self.wq[i * self.in_dim..(i + 1) * self.in_dim];
+                let lut: i32 = wrow
+                    .iter()
+                    .zip(xrow)
+                    .map(|(&w, &x)| table[((w as usize) << 4) | x as usize] as i32)
+                    .sum();
+                let a = lut - corr;
+                let v = a as f32 * self.w_quant.scale * self.x_quant.scale + self.bias[i];
+                out.push(if self.relu { v.max(0.0) } else { v });
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -173,5 +214,25 @@ mod tests {
     fn wrong_input_width_panics() {
         let l = toy_layer();
         let _ = l.forward(&[1.0], &MultiplierModel::new(MultiplierKind::Ideal));
+    }
+
+    #[test]
+    fn gemm_batch_is_bit_exact_with_per_sample_forward() {
+        let mut l = toy_layer();
+        l.relu = true;
+        let rows: [&[f32]; 3] = [&[0.8, 0.2, 0.5], &[0.0, 1.0, 0.3], &[0.6, 0.6, 0.9]];
+        for kind in MultiplierKind::ALL {
+            let model = MultiplierModel::new(kind);
+            let mut xq = Vec::new();
+            for r in rows {
+                xq.extend(l.x_quant.quantize_slice(r));
+            }
+            let mut out = Vec::new();
+            l.gemm_batch_into(&xq, rows.len(), &model, &mut out);
+            for (b, r) in rows.iter().enumerate() {
+                let want = l.forward(r, &model);
+                assert_eq!(&out[b * l.out_dim..(b + 1) * l.out_dim], &want[..], "{kind}");
+            }
+        }
     }
 }

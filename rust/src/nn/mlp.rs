@@ -7,6 +7,17 @@ use crate::Result;
 use anyhow::{ensure, Context};
 use std::fmt::Write as _;
 
+/// Reusable scratch buffers for [`QuantMlp::forward_batch_with`]: one
+/// quantized-code buffer plus two activation buffers that ping-pong
+/// across layers, so steady-state batched inference allocates nothing
+/// but the returned logits.
+#[derive(Debug, Default)]
+pub struct BatchScratch {
+    xq: Vec<u8>,
+    cur: Vec<f32>,
+    next: Vec<f32>,
+}
+
 /// An MLP whose every MAC routes through a configurable LUT multiplier.
 #[derive(Debug, Clone)]
 pub struct QuantMlp {
@@ -47,6 +58,42 @@ impl QuantMlp {
     /// Classify: forward + argmax.
     pub fn classify(&self, x: &[f32], model: &MultiplierModel) -> usize {
         super::argmax(&self.forward(x, model))
+    }
+
+    /// Batched forward pass: `xs` is row-major `batch × input_dim`;
+    /// returns row-major `batch × output_dim` logits.
+    ///
+    /// Per layer the whole batch is quantized once, then run through the
+    /// flat-gather LUT-GEMM ([`QuantLinear::gemm_batch_into`]). Bit-exact
+    /// with calling [`QuantMlp::forward`] on each row (the native
+    /// backend's equivalence test covers every [`MultiplierKind`]).
+    ///
+    /// [`MultiplierKind`]: crate::multiplier::MultiplierKind
+    pub fn forward_batch(&self, xs: &[f32], batch: usize, model: &MultiplierModel) -> Vec<f32> {
+        let mut scratch = BatchScratch::default();
+        self.forward_batch_with(xs, batch, model, &mut scratch)
+    }
+
+    /// [`QuantMlp::forward_batch`] with caller-owned scratch buffers so a
+    /// long-lived worker reuses its allocations across batches and layers.
+    pub fn forward_batch_with(
+        &self,
+        xs: &[f32],
+        batch: usize,
+        model: &MultiplierModel,
+        scratch: &mut BatchScratch,
+    ) -> Vec<f32> {
+        assert_eq!(xs.len(), batch * self.input_dim(), "bad batch input shape");
+        let BatchScratch { xq, cur, next } = scratch;
+        cur.clear();
+        cur.extend_from_slice(xs);
+        for layer in &self.layers {
+            xq.clear();
+            xq.extend(cur.iter().map(|&x| layer.x_quant.quantize(x)));
+            layer.gemm_batch_into(xq, batch, model, next);
+            std::mem::swap(cur, next);
+        }
+        cur.clone()
     }
 
     /// Random small MLP for the Fig 13 MAE study (16 → 12 → 8), with
@@ -175,6 +222,31 @@ mod tests {
         let a = QuantLinear::from_float(&[vec![0.1; 4]], vec![0.0], 1.0, true);
         let b = QuantLinear::from_float(&[vec![0.1; 3]], vec![0.0], 1.0, false);
         let _ = QuantMlp::new(vec![a, b]);
+    }
+
+    #[test]
+    fn forward_batch_matches_per_sample_forward_for_all_kinds() {
+        let mlp = QuantMlp::random_for_study(9);
+        let batch = 5;
+        let mut rng = crate::util::Rng::seed_from_u64(42);
+        let xs: Vec<f32> = (0..batch * 16).map(|_| rng.gen_range_f32(0.0, 1.0)).collect();
+        let mut scratch = super::BatchScratch::default();
+        for kind in MultiplierKind::ALL {
+            let model = MultiplierModel::new(kind);
+            let got = mlp.forward_batch_with(&xs, batch, &model, &mut scratch);
+            assert_eq!(got.len(), batch * mlp.output_dim());
+            for b in 0..batch {
+                let want = mlp.forward(&xs[b * 16..(b + 1) * 16], &model);
+                assert_eq!(&got[b * 8..(b + 1) * 8], &want[..], "{kind} row {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn forward_batch_handles_empty_batch() {
+        let mlp = QuantMlp::random_for_study(4);
+        let model = MultiplierModel::new(MultiplierKind::DncOpt);
+        assert!(mlp.forward_batch(&[], 0, &model).is_empty());
     }
 
     #[test]

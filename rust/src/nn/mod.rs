@@ -8,7 +8,9 @@
 //! * [`QuantLinear`] / [`QuantMlp`] — integer MACs where **every scalar
 //!   product goes through a [`MultiplierModel`]** (exact or approximate),
 //!   matching the Pallas kernel's semantics bit-for-bit (cross-checked in
-//!   integration tests against the AOT artifacts);
+//!   integration tests against the AOT artifacts); both per-sample
+//!   ([`QuantMlp::forward`]) and batched flat-gather LUT-GEMM
+//!   ([`QuantMlp::forward_batch`], bit-exact with the former) paths;
 //! * [`DigitsDataset`] — the synthetic 8×8 digits workload used by the
 //!   examples and the end-to-end serving driver.
 //!
@@ -21,7 +23,7 @@ mod quant;
 
 pub use dataset::{DigitsDataset, Sample};
 pub use linear::QuantLinear;
-pub use mlp::QuantMlp;
+pub use mlp::{BatchScratch, QuantMlp};
 pub use quant::Quantizer;
 
 /// Index of the maximum element (ties -> first).

@@ -1,15 +1,22 @@
-//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//! Artifact store + optional PJRT runtime for the AOT-compiled
+//! JAX/Pallas artifacts.
 //!
 //! `python/compile/aot.py` lowers the L2 model to **HLO text** (the
 //! interchange format that survives the jax≥0.5 / xla_extension 0.5.1
-//! proto-id mismatch — see DESIGN.md). This module wraps the `xla` crate:
-//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` → `compile` →
-//! `execute`. PJRT handles are not `Send`; the coordinator therefore gives
-//! each worker *thread* its own [`PjrtRuntime`] (see
-//! [`crate::coordinator::worker`]).
+//! proto-id mismatch — see DESIGN.md). The [`ArtifactStore`] (always
+//! available) resolves the artifact layout; the PJRT client wrapper is
+//! gated behind the `pjrt` cargo feature so the default build has zero
+//! external dependencies — serving then uses the native LUT-GEMM backend
+//! ([`crate::engine::NativeBackend`]). With `--features pjrt` this module
+//! wraps the `xla` crate: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile` → `execute`. PJRT handles
+//! are not `Send`; the coordinator therefore gives each worker *thread*
+//! its own [`PjrtRuntime`] (see [`crate::coordinator::worker`]).
 
 mod artifacts;
+#[cfg(feature = "pjrt")]
 mod client;
 
 pub use artifacts::{ArtifactStore, ModelMeta};
+#[cfg(feature = "pjrt")]
 pub use client::{CompiledModel, PjrtRuntime};

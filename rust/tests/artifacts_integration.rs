@@ -5,7 +5,10 @@
 //! Rust behavioural models and gate-level netlists.
 //!
 //! Skipped gracefully when artifacts are missing so plain `cargo test`
-//! works before `make artifacts`.
+//! works before `make artifacts`. The whole file requires the `pjrt`
+//! build feature (the default build has no PJRT client).
+
+#![cfg(feature = "pjrt")]
 
 use luna_cim::multiplier::MultiplierKind;
 use luna_cim::nn::argmax;

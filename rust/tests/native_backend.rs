@@ -1,0 +1,144 @@
+//! Native-backend integration tests.
+//!
+//! Unlike `coordinator_integration.rs` (which needs `make artifacts`),
+//! these synthesize a complete artifact directory — manifest, weights,
+//! test set, **no HLO files** — and drive the full serving stack
+//! (batcher → router → native workers → completion pool) through it,
+//! proving the coordinator serves traffic with zero external
+//! dependencies and stays bit-exact with the functional model.
+
+use luna_cim::config::{BackendKind, Config};
+use luna_cim::coordinator::CoordinatorServer;
+use luna_cim::engine::{BackendSpec, ExecBackend};
+use luna_cim::multiplier::{MultiplierKind, MultiplierModel};
+use luna_cim::nn::{DigitsDataset, QuantMlp};
+use luna_cim::runtime::{ArtifactStore, ModelMeta};
+use luna_cim::util::Rng;
+
+/// Write a self-contained artifact directory for the given model: the
+/// native backend needs manifest + weights + testset only.
+fn synth_artifacts(tag: &str, mlp: &QuantMlp, batch: usize) -> (ArtifactStore, DigitsDataset) {
+    let dir = luna_cim::util::test_dir(tag);
+    let store = ArtifactStore::new(&dir);
+    let testset = DigitsDataset::generate(4, 99);
+    let meta = ModelMeta {
+        dims: vec![64, 32, 10],
+        batch,
+        variants: vec!["ideal".into()],
+        train_accuracy: 0.0,
+        test_samples: testset.len(),
+    };
+    std::fs::write(store.manifest_path(), meta.to_text()).unwrap();
+    std::fs::write(store.weights_path(), mlp.to_text()).unwrap();
+    std::fs::write(store.testset_path(), testset.to_binary()).unwrap();
+    (store, testset)
+}
+
+#[test]
+fn batched_native_gemm_is_bit_exact_for_every_kind() {
+    // The headline equivalence: forward_batch == per-sample forward,
+    // exhaustively over every multiplier configuration, on the
+    // digits-shaped model with a padded (partially zero) batch.
+    let mlp = QuantMlp::random_digits(23);
+    let mut rng = Rng::seed_from_u64(77);
+    let batch = 8;
+    let mut xs: Vec<f32> = (0..batch * 64).map(|_| rng.gen_range_f32(0.0, 1.0)).collect();
+    // last two rows zero, like batcher padding
+    for v in xs.iter_mut().skip(6 * 64) {
+        *v = 0.0;
+    }
+    for kind in MultiplierKind::ALL {
+        let model = MultiplierModel::new(kind);
+        let got = mlp.forward_batch(&xs, batch, &model);
+        for b in 0..batch {
+            let want = mlp.forward(&xs[b * 64..(b + 1) * 64], &model);
+            assert_eq!(&got[b * 10..(b + 1) * 10], &want[..], "{kind} row {b}");
+        }
+    }
+}
+
+#[test]
+fn native_backend_through_spec_matches_forward_batch() {
+    let mlp = QuantMlp::random_digits(31);
+    let spec = BackendSpec::Native { mlp: mlp.clone(), kind: MultiplierKind::Approx };
+    let mut backend = spec.build().unwrap();
+    let model = MultiplierModel::new(MultiplierKind::Approx);
+    let xs = vec![0.5f32; 3 * 64];
+    let out = backend.run_batch(&xs, 3, 64).unwrap();
+    assert_eq!(out.len(), 1, "single logits tuple element");
+    assert_eq!(out[0], mlp.forward_batch(&xs, 3, &model));
+}
+
+#[test]
+fn native_server_completes_multi_batch_run_without_pjrt_artifacts() {
+    let mlp = QuantMlp::random_digits(47);
+    let (store, testset) = synth_artifacts("native-e2e", &mlp, 8);
+    // assert the premise: no PJRT/HLO artifacts exist in the directory
+    let hlo_files: Vec<_> = std::fs::read_dir(store.root())
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .filter(|e| e.file_name().to_string_lossy().contains("hlo"))
+        .collect();
+    assert!(hlo_files.is_empty(), "test dir must hold no HLO artifacts");
+
+    let mut cfg = Config::default();
+    cfg.artifacts_dir = store.root().display().to_string();
+    cfg.backend = BackendKind::Native;
+    cfg.multiplier = MultiplierKind::DncOpt;
+    let (server, handle) = CoordinatorServer::start(cfg).unwrap();
+
+    let model = MultiplierModel::new(MultiplierKind::DncOpt);
+    let n = 40.min(testset.len()); // 5 full batches of 8
+    let mut threads = Vec::new();
+    for t in 0..4 {
+        let handle = handle.clone();
+        let samples: Vec<Vec<f32>> = testset.samples[t * n / 4..(t + 1) * n / 4]
+            .iter()
+            .map(|s| s.pixels.clone())
+            .collect();
+        threads.push(std::thread::spawn(move || {
+            samples
+                .into_iter()
+                .map(|px| {
+                    let resp = handle.submit(px.clone()).expect("native serve");
+                    (px, resp)
+                })
+                .collect::<Vec<_>>()
+        }));
+    }
+    let mut total = 0usize;
+    for t in threads {
+        for (px, resp) in t.join().unwrap() {
+            total += 1;
+            assert_eq!(resp.logits.len(), 10);
+            // native execution is bit-exact with the functional model
+            assert_eq!(resp.logits, mlp.forward(&px, &model));
+            assert_eq!(resp.label, mlp.classify(&px, &model));
+            assert!(resp.sim_energy_fj > 0.0);
+        }
+    }
+    assert_eq!(total, n);
+    let snap = server.metrics().snapshot();
+    assert_eq!(snap.requests, n as u64);
+    assert!(snap.batches >= (n / 8) as u64, "multi-batch run expected");
+    assert_eq!(snap.failed_batches, 0);
+    server.shutdown();
+}
+
+#[test]
+fn native_and_variant_servers_disagree_on_approx_numerics() {
+    // Sanity that the backend threads the multiplier kind through: an
+    // Approx2 server must produce Approx2 logits, not ideal ones.
+    let mlp = QuantMlp::random_digits(53);
+    let (store, testset) = synth_artifacts("native-approx2", &mlp, 8);
+    let mut cfg = Config::default();
+    cfg.artifacts_dir = store.root().display().to_string();
+    cfg.multiplier = MultiplierKind::Approx2;
+    let (server, handle) = CoordinatorServer::start(cfg).unwrap();
+    let approx2 = MultiplierModel::new(MultiplierKind::Approx2);
+    for s in testset.samples.iter().take(8) {
+        let resp = handle.submit(s.pixels.clone()).unwrap();
+        assert_eq!(resp.logits, mlp.forward(&s.pixels, &approx2));
+    }
+    server.shutdown();
+}
