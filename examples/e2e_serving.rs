@@ -3,6 +3,10 @@
 //! Proves all layers compose (recorded in EXPERIMENTS.md):
 //!
 //!   quantized model --+--> native batched LUT-GEMM workers (default)
+//!                     +--> calibrated workers: native numerics + per-worker
+//!                          Tiler schedule replay (pass `calibrated`; an
+//!                          optional second argument sets the ps→wall-clock
+//!                          time_scale, 0 = report-only)
 //!                     +--> PJRT workers over AOT HLO text (--features pjrt,
 //!                          pass `pjrt` as the first argument)
 //!   Rust coordinator: dynamic batcher -> router -> workers
@@ -27,6 +31,10 @@ fn main() -> luna_cim::Result<()> {
     let backend = match std::env::args().nth(1).as_deref() {
         Some(s) => BackendKind::from_arg(s)?,
         None => BackendKind::Native,
+    };
+    let time_scale: f64 = match std::env::args().nth(2) {
+        Some(s) => s.parse().map_err(|_| anyhow::anyhow!("bad time-scale `{s}`"))?,
+        None => 0.0,
     };
     let store = ArtifactStore::default_location();
     let meta = store.manifest()?;
@@ -56,6 +64,7 @@ fn main() -> luna_cim::Result<()> {
         let mut cfg = Config::default();
         cfg.multiplier = kind;
         cfg.backend = backend;
+        cfg.timing.time_scale = time_scale;
         let (server, handle) = CoordinatorServer::start(cfg)?;
 
         let t0 = Instant::now();
@@ -106,6 +115,16 @@ fn main() -> luna_cim::Result<()> {
             snap.sim_energy_fj / total as f64 / 1e6,
             sim_ps as f64 / total as f64 / 1e3,
         );
+        if backend == BackendKind::Calibrated {
+            println!(
+                "{:<16} sim latency p50 {} ns p99 {} ns | programs {} | stationary hit-rate {:.3}",
+                "", // indent under the variant row
+                snap.sim_p50_latency_ns,
+                snap.sim_p99_latency_ns,
+                snap.sim_programs,
+                snap.stationary_hit_rate(),
+            );
+        }
         server.shutdown();
     }
 
@@ -116,7 +135,10 @@ fn main() -> luna_cim::Result<()> {
          * energy/req is the simulated CiM cost (weight-stationary: later\n\
            batches pay only MAC energy, no reprogramming);\n\
          * sim ns/req is the modelled in-array latency (cycles x measured\n\
-           critical path), independent of host wall-clock."
+           critical path), independent of host wall-clock;\n\
+         * with `calibrated`, pricing runs inside each worker on its own\n\
+           weight-stationary fabric, and a non-zero time_scale makes the\n\
+           simulated latency gate every reply."
     );
     Ok(())
 }

@@ -9,6 +9,7 @@ use luna_cim::coordinator::batcher::Batcher;
 use luna_cim::coordinator::request::InferenceRequest;
 use luna_cim::coordinator::tiler::{Tiler, UnitCosts};
 use luna_cim::coordinator::CoordinatorServer;
+use luna_cim::engine::{BackendSpec, ExecBackend};
 use luna_cim::multiplier::MultiplierKind;
 use luna_cim::nn::QuantMlp;
 use luna_cim::runtime::ArtifactStore;
@@ -30,7 +31,7 @@ fn main() {
 
     // 2. tiler scheduling (weight-stationary steady state)
     let lib = tsmc65_library();
-    let costs = UnitCosts::measure(MultiplierKind::DncOpt, &lib);
+    let costs = UnitCosts::measure_cached(MultiplierKind::DncOpt, &lib);
     let mlp = QuantMlp::random_digits(1);
     let mut tiler = Tiler::new(16, 4, costs);
     let _ = tiler.schedule(&mlp, 8); // warm: program the fabric
@@ -38,7 +39,32 @@ fn main() {
         black_box(tiler.schedule(&mlp, 8).total_energy_fj);
     });
 
-    // 3. full serve path, if artifacts are present
+    // 3. schedule_replay: native vs calibrated backend overhead on the
+    //    same batch (the calibrated delta = per-batch Tiler replay; the
+    //    report-only gate adds nothing else)
+    let mlp_d = QuantMlp::random_digits(2);
+    let xs: Vec<f32> = (0..8 * 64).map(|i| (i % 16) as f32 / 16.0).collect();
+    let mut native = BackendSpec::Native { mlp: mlp_d.clone(), kind: MultiplierKind::DncOpt }
+        .build()
+        .expect("native backend");
+    b.run("schedule_replay native run_batch 64-32-10 b=8", 8.0, || {
+        black_box(native.run_batch(&xs, 8, 64).unwrap().outputs.len());
+    });
+    let mut calibrated = BackendSpec::Calibrated {
+        mlp: mlp_d,
+        kind: MultiplierKind::DncOpt,
+        costs,
+        banks: 592,
+        units_per_bank: 4,
+        time_scale: 0.0,
+    }
+    .build()
+    .expect("calibrated backend");
+    b.run("schedule_replay calibrated run_batch 64-32-10 b=8", 8.0, || {
+        black_box(calibrated.run_batch(&xs, 8, 64).unwrap().cost.unwrap().latency_ps);
+    });
+
+    // 4. full serve path, if artifacts are present
     let store = ArtifactStore::default_location();
     if !store.exists() {
         println!("(skipping end-to-end serve bench: run `make artifacts`)");

@@ -94,7 +94,7 @@ pub fn stationarity_study(
     batches: usize,
     batch: usize,
 ) -> StationarityResult {
-    let costs = UnitCosts::measure(MultiplierKind::DncOpt, lib);
+    let costs = UnitCosts::measure_cached(MultiplierKind::DncOpt, lib);
     // stationary: one tiler across the stream
     let mut stationary = Tiler::new(units, 1, costs);
     let mut stationary_energy = 0.0;

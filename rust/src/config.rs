@@ -17,6 +17,11 @@ pub enum BackendKind {
     /// In-process batched LUT-GEMM over the quantized model (default;
     /// zero external dependencies — no HLO artifacts, no `xla` crate).
     Native,
+    /// Native numerics plus per-worker `Tiler` schedule replay: every
+    /// batch is priced on the simulated LUNA fabric, the cost rides on
+    /// each reply, and `timing.time_scale` optionally gates replies on
+    /// the simulated latency.
+    Calibrated,
     /// AOT-compiled HLO through PJRT (requires the `pjrt` cargo feature
     /// and `make artifacts`).
     Pjrt,
@@ -27,6 +32,7 @@ impl BackendKind {
     pub fn slug(self) -> &'static str {
         match self {
             BackendKind::Native => "native",
+            BackendKind::Calibrated => "calibrated",
             BackendKind::Pjrt => "pjrt",
         }
     }
@@ -35,6 +41,7 @@ impl BackendKind {
     pub fn parse_slug(s: &str) -> Option<BackendKind> {
         match s.trim().to_ascii_lowercase().as_str() {
             "native" => Some(BackendKind::Native),
+            "calibrated" => Some(BackendKind::Calibrated),
             "pjrt" => Some(BackendKind::Pjrt),
             _ => None,
         }
@@ -43,8 +50,9 @@ impl BackendKind {
     /// Parse a slug with the canonical error message (CLI / config use
     /// this so the known-backend list lives in one place).
     pub fn from_arg(s: &str) -> Result<BackendKind> {
-        Self::parse_slug(s)
-            .ok_or_else(|| anyhow::anyhow!("unknown backend `{s}` (known: native, pjrt)"))
+        Self::parse_slug(s).ok_or_else(|| {
+            anyhow::anyhow!("unknown backend `{s}` (known: native, calibrated, pjrt)")
+        })
     }
 }
 
@@ -54,12 +62,16 @@ pub struct Config {
     /// Artifact directory (output of `make artifacts`).
     pub artifacts_dir: String,
     /// Multiplier configuration for the LUNA banks / model variant.
+    /// Note: `ideal` is a behavioural model with no hardware netlist —
+    /// the tiler prices its schedules with `dnc-opt` unit costs (logged
+    /// once at tiler construction).
     pub multiplier: MultiplierKind,
-    /// Execution backend (`native` | `pjrt`).
+    /// Execution backend (`native` | `calibrated` | `pjrt`).
     pub backend: BackendKind,
     pub batcher: BatcherConfig,
     pub workers: WorkerConfig,
     pub banks: BankConfig,
+    pub timing: TimingConfig,
 }
 
 /// Dynamic batching policy.
@@ -92,6 +104,18 @@ pub struct BankConfig {
     pub units_per_bank: usize,
 }
 
+/// Simulated-timing knobs for `backend calibrated`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TimingConfig {
+    /// Maps simulated CiM picoseconds to wall-clock: each batch's reply
+    /// is delayed by `latency_ps × time_scale` (as wall-clock ps). `0`
+    /// (default) = report-only — costs are attached to replies and
+    /// metrics but nothing sleeps. `1.0` is "real time"; useful gating
+    /// values are ~`1e4`–`1e6`, stretching the schedule into the µs–ms
+    /// range. Ignored by `native`/`pjrt`.
+    pub time_scale: f64,
+}
+
 impl Default for Config {
     fn default() -> Self {
         Config {
@@ -101,7 +125,14 @@ impl Default for Config {
             batcher: BatcherConfig::default(),
             workers: WorkerConfig::default(),
             banks: BankConfig::default(),
+            timing: TimingConfig::default(),
         }
+    }
+}
+
+impl Default for TimingConfig {
+    fn default() -> Self {
+        TimingConfig { time_scale: 0.0 }
     }
 }
 
@@ -134,6 +165,7 @@ const KNOWN_KEYS: &[&str] = &[
     "workers.count",
     "banks.count",
     "banks.units_per_bank",
+    "timing.time_scale",
 ];
 
 impl Config {
@@ -175,6 +207,9 @@ impl Config {
         if m.get_opt("banks.units_per_bank").is_some() {
             cfg.banks.units_per_bank = m.get_usize("banks.units_per_bank")?;
         }
+        if m.get_opt("timing.time_scale").is_some() {
+            cfg.timing.time_scale = m.get_f64("timing.time_scale")?;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -198,6 +233,7 @@ impl Config {
         m.set("workers.count", self.workers.count);
         m.set("banks.count", self.banks.count);
         m.set("banks.units_per_bank", self.banks.units_per_bank);
+        m.set("timing.time_scale", self.timing.time_scale);
         m.render()
     }
 
@@ -213,6 +249,10 @@ impl Config {
         anyhow::ensure!(
             (1..=4).contains(&self.banks.units_per_bank),
             "an 8x8 array hosts 1..=4 LUNA units"
+        );
+        anyhow::ensure!(
+            self.timing.time_scale.is_finite() && self.timing.time_scale >= 0.0,
+            "timing.time_scale must be finite and >= 0 (0 = report-only)"
         );
         Ok(())
     }
@@ -250,6 +290,27 @@ mod tests {
         assert_eq!(back.backend, BackendKind::Pjrt);
         assert!(Config::from_text("backend warp\n").is_err());
         assert_eq!(BackendKind::parse_slug(" Native "), Some(BackendKind::Native));
+    }
+
+    #[test]
+    fn calibrated_backend_and_time_scale_parse_and_roundtrip() {
+        let cfg = Config::from_text("backend calibrated\ntiming.time_scale 1000.5\n").unwrap();
+        assert_eq!(cfg.backend, BackendKind::Calibrated);
+        assert!((cfg.timing.time_scale - 1000.5).abs() < 1e-9);
+        let back = Config::from_text(&cfg.to_text()).unwrap();
+        assert_eq!(back, cfg);
+        assert_eq!(BackendKind::parse_slug(" Calibrated "), Some(BackendKind::Calibrated));
+        assert_eq!(BackendKind::Calibrated.slug(), "calibrated");
+    }
+
+    #[test]
+    fn bad_time_scale_rejected() {
+        assert!(Config::from_text("timing.time_scale -1\n").is_err());
+        assert!(Config::from_text("timing.time_scale inf\n").is_err());
+        assert!(Config::from_text("timing.time_scale nope\n").is_err());
+        let mut cfg = Config::default();
+        cfg.timing.time_scale = f64::NAN;
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

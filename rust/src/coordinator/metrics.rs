@@ -3,6 +3,7 @@
 //! Lock-free on the hot path (atomics only); the histogram uses
 //! fixed log-spaced buckets so recording is a couple of atomic adds.
 
+use super::tiler::ScheduleCost;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
@@ -65,6 +66,10 @@ impl LatencyHistogram {
 #[derive(Debug, Default)]
 pub struct Metrics {
     pub latency: LatencyHistogram,
+    /// Simulated per-batch CiM latency. Values are recorded in
+    /// **nanoseconds** (ps / 1000) — the log-bucket math is
+    /// unit-agnostic, only the field names of [`LatencyHistogram`] say µs.
+    pub sim_latency: LatencyHistogram,
     requests: AtomicU64,
     batches: AtomicU64,
     padded_slots: AtomicU64,
@@ -73,6 +78,10 @@ pub struct Metrics {
     failed_requests: AtomicU64,
     /// Simulated CiM energy total, in femtojoules (stored as fJ integer).
     sim_energy_fj: AtomicU64,
+    /// LUT (re)programming events across all served batches.
+    sim_programs: AtomicU64,
+    /// Programs avoided by weight-stationary reuse.
+    sim_stationary_hits: AtomicU64,
     started: Option<Instant>,
 }
 
@@ -102,6 +111,17 @@ impl Metrics {
         self.sim_energy_fj.fetch_add(fj.round() as u64, Ordering::Relaxed);
     }
 
+    /// Record one served batch's simulated CiM cost (energy, modelled
+    /// latency, programming events, weight-stationary hits).
+    pub fn record_sim_cost(&self, cost: &ScheduleCost) {
+        self.record_sim_energy_fj(cost.energy_fj);
+        if cost.latency_ps > 0 {
+            self.sim_latency.record_us((cost.latency_ps / 1000).max(1));
+        }
+        self.sim_programs.fetch_add(cost.programs, Ordering::Relaxed);
+        self.sim_stationary_hits.fetch_add(cost.stationary_hits, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let requests = self.requests.load(Ordering::Relaxed);
         let elapsed = self.started.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);
@@ -118,6 +138,10 @@ impl Metrics {
             max_latency_us: self.latency.max_us(),
             throughput_rps: if elapsed > 0.0 { requests as f64 / elapsed } else { 0.0 },
             sim_energy_fj: self.sim_energy_fj.load(Ordering::Relaxed) as f64,
+            sim_p50_latency_ns: self.sim_latency.quantile_us(0.50),
+            sim_p99_latency_ns: self.sim_latency.quantile_us(0.99),
+            sim_programs: self.sim_programs.load(Ordering::Relaxed),
+            sim_stationary_hits: self.sim_stationary_hits.load(Ordering::Relaxed),
         }
     }
 }
@@ -137,6 +161,14 @@ pub struct MetricsSnapshot {
     pub max_latency_us: u64,
     pub throughput_rps: f64,
     pub sim_energy_fj: f64,
+    /// Simulated per-batch CiM latency percentiles (ns; bucket upper
+    /// bounds of the sim-latency histogram).
+    pub sim_p50_latency_ns: u64,
+    pub sim_p99_latency_ns: u64,
+    /// LUT (re)programming events across all served batches.
+    pub sim_programs: u64,
+    /// Programs avoided by weight-stationary reuse.
+    pub sim_stationary_hits: u64,
 }
 
 impl MetricsSnapshot {
@@ -150,13 +182,36 @@ impl MetricsSnapshot {
         }
     }
 
+    /// Fraction of LUT writes avoided by weight-stationary scheduling
+    /// (0.0 when nothing has been scheduled yet).
+    pub fn stationary_hit_rate(&self) -> f64 {
+        let total = self.sim_programs + self.sim_stationary_hits;
+        if total == 0 {
+            0.0
+        } else {
+            self.sim_stationary_hits as f64 / total as f64
+        }
+    }
+
+    /// Simulated CiM energy per served request (fJ).
+    pub fn sim_energy_per_request_fj(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.sim_energy_fj / self.requests as f64
+        }
+    }
+
     /// Multi-line human-readable report (the serve CLI prints this).
     pub fn render(&self) -> String {
         format!(
             "requests {} | batches {} (occupancy {:.2}) | rejected {} | \
              failed batches {} ({} requests)\n\
              latency mean {:.0} us p50 {} us p99 {} us max {} us | \
-             throughput {:.0} req/s | sim energy {:.2} nJ\n",
+             throughput {:.0} req/s\n\
+             sim energy {:.2} nJ ({:.1} fJ/req) | \
+             sim latency p50 {} ns p99 {} ns | \
+             programs {} stationary hits {} (hit-rate {:.2})\n",
             self.requests,
             self.batches,
             self.batch_occupancy(),
@@ -169,6 +224,12 @@ impl MetricsSnapshot {
             self.max_latency_us,
             self.throughput_rps,
             self.sim_energy_fj / 1e6,
+            self.sim_energy_per_request_fj(),
+            self.sim_p50_latency_ns,
+            self.sim_p99_latency_ns,
+            self.sim_programs,
+            self.sim_stationary_hits,
+            self.stationary_hit_rate(),
         )
     }
 }
@@ -219,5 +280,44 @@ mod tests {
         m.record_sim_energy_fj(100.4);
         m.record_sim_energy_fj(50.3);
         assert!((m.snapshot().sim_energy_fj - 150.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn sim_cost_aggregates_and_renders() {
+        let m = Metrics::new();
+        m.record_batch(8, 8);
+        m.record_sim_cost(&ScheduleCost {
+            latency_ps: 2_000_000, // 2000 ns
+            energy_fj: 1000.0,
+            programs: 90,
+            stationary_hits: 10,
+        });
+        m.record_sim_cost(&ScheduleCost {
+            latency_ps: 500_000, // 500 ns
+            energy_fj: 500.0,
+            programs: 0,
+            stationary_hits: 100,
+        });
+        let snap = m.snapshot();
+        assert_eq!(snap.sim_programs, 90);
+        assert_eq!(snap.sim_stationary_hits, 110);
+        assert!((snap.stationary_hit_rate() - 110.0 / 200.0).abs() < 1e-12);
+        assert!((snap.sim_energy_fj - 1500.0).abs() <= 1.0);
+        assert!(snap.sim_p50_latency_ns >= 500);
+        assert!(snap.sim_p50_latency_ns <= snap.sim_p99_latency_ns);
+        // 2000 ns falls in the [1024, 2048) bucket → p99 upper bound 2048
+        assert!(snap.sim_p99_latency_ns >= 2000);
+        let report = snap.render();
+        assert!(report.contains("sim latency p50"), "{report}");
+        assert!(report.contains("hit-rate 0.55"), "{report}");
+        assert!(report.contains("fJ/req"), "{report}");
+    }
+
+    #[test]
+    fn hit_rate_is_zero_without_sim_data() {
+        let snap = Metrics::new().snapshot();
+        assert_eq!(snap.stationary_hit_rate(), 0.0);
+        assert_eq!(snap.sim_energy_per_request_fj(), 0.0);
+        assert_eq!(snap.sim_p50_latency_ns, 0);
     }
 }

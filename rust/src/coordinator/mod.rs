@@ -13,7 +13,10 @@
 //! * [`router`] — round-robin dispatch with in-flight accounting;
 //! * [`tiler`] — maps every 4b×4b MAC of the model onto LUNA banks
 //!   (weight-stationary scheduling) and prices the run in programming
-//!   events, cycles and femtojoules using the gate-level cost model;
+//!   events, cycles and femtojoules using the gate-level cost model
+//!   (calibration measured once per process; with `backend calibrated`
+//!   each worker replays schedules on its own fabric and the simulated
+//!   latency can gate replies — see [`crate::engine::CalibratedBackend`]);
 //! * [`state`] — bank programming state (which weight each unit holds);
 //! * [`metrics`] — latency/throughput/energy/failure counters;
 //! * [`server`] — the std-thread front-end tying it all together.
@@ -33,5 +36,5 @@ pub use request::{InferenceRequest, InferenceResponse, RequestId};
 pub use router::Router;
 pub use server::{CoordinatorServer, ServerHandle};
 pub use state::BankState;
-pub use tiler::{LayerSchedule, ModelSchedule, Tiler};
+pub use tiler::{LayerSchedule, ModelSchedule, ScheduleCost, Tiler, UnitCosts};
 pub use worker::{BatchJob, WorkerPool};

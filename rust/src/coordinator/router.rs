@@ -108,7 +108,7 @@ mod tests {
                 .unwrap();
             hit[guard.worker] = true;
             let out = rx.recv().unwrap().unwrap();
-            assert_eq!(out[0], mlp.forward(&inputs, &model));
+            assert_eq!(out.outputs[0], mlp.forward(&inputs, &model));
             drop(guard);
         }
         assert!(hit[0] && hit[1], "both workers used");

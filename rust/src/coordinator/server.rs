@@ -1,7 +1,9 @@
 //! The serving front-end: accepts single requests, batches them, executes
-//! on the worker pool (native LUT-GEMM by default, PJRT with the `pjrt`
-//! feature — see [`crate::engine`]), prices the CiM work with the tiler,
-//! and fans per-request responses back out.
+//! on the worker pool (native LUT-GEMM by default, calibrated schedule
+//! replay with `backend calibrated`, PJRT with the `pjrt` feature — see
+//! [`crate::engine`]), prices the CiM work with the tiler (coordinator-
+//! side, or inside each calibrated worker), and fans per-request
+//! responses back out.
 //!
 //! Concurrency model (std threads; no async runtime in this offline
 //! image): client threads block on a oneshot for their response; a
@@ -14,10 +16,10 @@ use super::batcher::{Batch, Batcher};
 use super::metrics::Metrics;
 use super::request::{InferenceRequest, InferenceResponse, RequestId};
 use super::router::Router;
-use super::tiler::Tiler;
+use super::tiler::{ScheduleCost, Tiler, UnitCosts};
 use super::worker::{BatchJob, WorkerPool};
 use crate::config::{BackendKind, Config};
-use crate::engine::BackendSpec;
+use crate::engine::{BackendSpec, BatchOutput};
 use crate::nn::QuantMlp;
 use crate::runtime::ArtifactStore;
 use crate::util::oneshot;
@@ -33,7 +35,11 @@ type Waiter = oneshot::Sender<InferenceResponse>;
 struct Shared {
     batcher: Mutex<Batcher>,
     waiters: Mutex<HashMap<RequestId, Waiter>>,
-    tiler: Mutex<Tiler>,
+    /// Coordinator-side CiM pricing for backends that don't model cost
+    /// themselves; `None` for `backend calibrated`, where each worker's
+    /// own fabric replay prices the batch and the cost arrives on the
+    /// reply.
+    tiler: Option<Mutex<Tiler>>,
     router: Router,
     metrics: Arc<Metrics>,
     mlp: QuantMlp,
@@ -51,11 +57,11 @@ struct Shared {
 /// An in-flight batch awaiting its worker reply.
 struct CompletionJob {
     batch: Batch,
-    rx: oneshot::Receiver<crate::Result<Vec<Vec<f32>>>>,
+    rx: oneshot::Receiver<crate::Result<BatchOutput>>,
     guard: super::router::InFlightGuard,
-    per_req_energy: f64,
-    total_energy_fj: f64,
-    sim_latency_ps: u64,
+    /// Coordinator-side pricing (None when the calibrated backend prices
+    /// the batch itself; the reply's cost then takes over).
+    sched_cost: Option<ScheduleCost>,
 }
 
 /// The serving coordinator. Construct with [`CoordinatorServer::start`],
@@ -88,11 +94,29 @@ impl CoordinatorServer {
         );
         let mlp = store.load_mlp().context("loading weights")?;
         let lib = crate::cells::tsmc65_library();
-        let tiler = Tiler::from_config(&cfg, &lib);
+        // Coordinator-side pricing tiler for backends that don't model
+        // cost themselves. `calibrated` moves pricing into the workers
+        // (one weight-stationary fabric per worker), so the coordinator
+        // keeps none.
+        let tiler = match cfg.backend {
+            BackendKind::Calibrated => None,
+            _ => Some(Mutex::new(Tiler::from_config(&cfg, &lib))),
+        };
         // Backend choice: native runs the batched LUT-GEMM in-process
-        // (no HLO artifacts touched); pjrt compiles the AOT executable.
+        // (no HLO artifacts touched); calibrated wraps it with per-worker
+        // schedule replay (the gate-level calibration is measured once
+        // here and *carried in the spec* — never per worker thread);
+        // pjrt compiles the AOT executable.
         let spec = match cfg.backend {
             BackendKind::Native => BackendSpec::Native { mlp: mlp.clone(), kind: cfg.multiplier },
+            BackendKind::Calibrated => BackendSpec::Calibrated {
+                mlp: mlp.clone(),
+                kind: cfg.multiplier,
+                costs: UnitCosts::measure_cached(Tiler::pricing_kind(cfg.multiplier), &lib),
+                banks: cfg.banks.count,
+                units_per_bank: cfg.banks.units_per_bank,
+                time_scale: cfg.timing.time_scale,
+            },
             BackendKind::Pjrt => BackendSpec::Pjrt { hlo: store.mlp_hlo(cfg.multiplier) },
         };
         let pool = WorkerPool::spawn(cfg.workers.count, spec)?;
@@ -103,7 +127,7 @@ impl CoordinatorServer {
         let shared = Arc::new(Shared {
             batcher: Mutex::new(Batcher::from_config(&cfg.batcher)),
             waiters: Mutex::new(HashMap::new()),
-            tiler: Mutex::new(tiler),
+            tiler,
             router: Router::new(pool),
             metrics: Arc::new(Metrics::new()),
             mlp,
@@ -217,21 +241,19 @@ impl ServerHandle {
     }
 }
 
-/// Price the batch on the CiM fabric, run it on a PJRT worker, fan
-/// responses back out to the per-request waiters.
+/// Price the batch on the CiM fabric (unless the backend prices it
+/// itself), run it on a worker, fan responses back out to the
+/// per-request waiters.
 fn dispatch_batch(shared: &Arc<Shared>, batch: Batch) {
     let n = batch.requests.len();
     if n == 0 {
         return;
     }
-    // CiM cost model: schedule this batch on the LUNA fabric.
-    let schedule = {
-        let mut tiler = shared.tiler.lock().unwrap();
-        tiler.schedule(&shared.mlp, n)
-    };
-    let per_req_energy = schedule.total_energy_fj / n as f64;
-    let total_energy_fj = schedule.total_energy_fj;
-    let sim_latency_ps = schedule.latency_ps;
+    // CiM cost model: schedule this batch on the coordinator's fabric —
+    // skipped for `backend calibrated`, whose workers replay the schedule
+    // on their own weight-stationary fabrics and return the cost.
+    let sched_cost =
+        shared.tiler.as_ref().map(|t| t.lock().unwrap().schedule(&shared.mlp, n).cost());
 
     // PJRT's lowered executable has a fixed batch dimension; the native
     // GEMM runs exactly the real rows (no MACs spent on padding).
@@ -246,7 +268,7 @@ fn dispatch_batch(shared: &Arc<Shared>, batch: Batch) {
             return;
         }
     };
-    let job = CompletionJob { batch, rx, guard, per_req_energy, total_energy_fj, sim_latency_ps };
+    let job = CompletionJob { batch, rx, guard, sched_cost };
     let send_result = { shared.completions.lock().unwrap().send(job) };
     if let Err(std::sync::mpsc::SendError(job)) = send_result {
         // Pool already shut down (server tear-down path): complete inline.
@@ -256,15 +278,20 @@ fn dispatch_batch(shared: &Arc<Shared>, batch: Batch) {
 
 /// Receive one worker reply and fan it out to the per-request waiters.
 fn complete_batch(shared: &Arc<Shared>, job: CompletionJob) {
-    let CompletionJob { batch, rx, guard, per_req_energy, total_energy_fj, sim_latency_ps } = job;
+    let CompletionJob { batch, rx, guard, sched_cost } = job;
     let _guard = guard;
     match rx.recv() {
-        Some(Ok(outputs)) => {
+        Some(Ok(output)) => {
+            let n = batch.requests.len();
+            // The backend's own pricing (calibrated) wins over the
+            // coordinator-side schedule; exactly one of the two exists.
+            let cost = output.cost.or(sched_cost).unwrap_or_default();
             // Served-work metrics only count batches that actually
             // produced replies; failures go to record_batch_failure.
-            shared.metrics.record_batch(batch.requests.len(), batch.padded_to);
-            shared.metrics.record_sim_energy_fj(total_energy_fj);
-            let logits_all = &outputs[0];
+            shared.metrics.record_batch(n, batch.padded_to);
+            shared.metrics.record_sim_cost(&cost);
+            let per_req_energy = cost.energy_fj / n as f64;
+            let logits_all = &output.outputs[0];
             let out_dim = shared.out_dim;
             let mut waiters = shared.waiters.lock().unwrap();
             for (i, req) in batch.requests.iter().enumerate() {
@@ -279,7 +306,7 @@ fn complete_batch(shared: &Arc<Shared>, job: CompletionJob) {
                         label,
                         latency_us,
                         sim_energy_fj: per_req_energy,
-                        sim_latency_ps,
+                        sim_latency_ps: cost.latency_ps,
                     });
                 }
             }

@@ -13,6 +13,8 @@ use crate::cells::CellLibrary;
 use crate::luna::LunaUnit;
 use crate::multiplier::MultiplierKind;
 use crate::nn::QuantMlp;
+use std::collections::HashMap;
+use std::sync::{Mutex, Once, OnceLock};
 
 /// Measured per-operation costs of one LUNA unit configuration.
 #[derive(Debug, Clone, Copy)]
@@ -30,7 +32,24 @@ pub struct UnitCosts {
     pub lut_bits: u64,
 }
 
+/// Process-wide calibration cache. The gate-level event-sim measurement
+/// behind [`UnitCosts::measure`] is far too expensive to repeat per worker
+/// thread; one measurement per (multiplier kind, library name) serves the
+/// process.
+static COSTS_CACHE: OnceLock<Mutex<HashMap<(MultiplierKind, String), UnitCosts>>> = OnceLock::new();
+
 impl UnitCosts {
+    /// [`UnitCosts::measure`], memoized per process. The cache is keyed by
+    /// `(kind, lib.name)` — two libraries with the same name are assumed to
+    /// hold the same parameters (true of the singleton [`crate::cells::tsmc65_library`]
+    /// every call site uses). The serving stack goes through this so
+    /// calibration runs once, not once per worker thread.
+    pub fn measure_cached(kind: MultiplierKind, lib: &CellLibrary) -> Self {
+        let cache = COSTS_CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+        let mut cache = cache.lock().unwrap();
+        *cache.entry((kind, lib.name.clone())).or_insert_with(|| Self::measure(kind, lib))
+    }
+
     /// Calibrate by direct measurement of the gate-level model.
     pub fn measure(kind: MultiplierKind, lib: &CellLibrary) -> Self {
         let mut unit = LunaUnit::new(kind);
@@ -85,9 +104,37 @@ pub struct ModelSchedule {
     pub layers: Vec<LayerSchedule>,
     pub total_macs: u64,
     pub total_programs: u64,
+    pub total_stationary_hits: u64,
     pub total_cycles: u64,
     pub total_energy_fj: f64,
     pub latency_ps: u64,
+}
+
+impl ModelSchedule {
+    /// Flatten to the cost summary the serving path threads through
+    /// replies and metrics.
+    pub fn cost(&self) -> ScheduleCost {
+        ScheduleCost {
+            latency_ps: self.latency_ps,
+            energy_fj: self.total_energy_fj,
+            programs: self.total_programs,
+            stationary_hits: self.total_stationary_hits,
+        }
+    }
+}
+
+/// Simulated CiM cost of one batch: what the calibrated serving path
+/// attaches to worker replies and aggregates into the metrics.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ScheduleCost {
+    /// Modelled in-array latency: cycles × measured critical path (ps).
+    pub latency_ps: u64,
+    /// Programming + MAC energy for the batch (fJ).
+    pub energy_fj: f64,
+    /// LUT (re)programming events.
+    pub programs: u64,
+    /// Programs avoided by weight-stationary reuse.
+    pub stationary_hits: u64,
 }
 
 /// The tiler: owns fabric state and unit cost calibration.
@@ -102,15 +149,31 @@ impl Tiler {
         Tiler { state: BankState::new(banks, units_per_bank), costs }
     }
 
+    /// Build from `banks.*` config, pricing with the process-cached
+    /// calibration of [`Tiler::pricing_kind`]`(cfg.multiplier)`.
     pub fn from_config(cfg: &crate::config::Config, lib: &CellLibrary) -> Self {
-        // IDEAL has no hardware: price it as the optimized D&C unit (the
-        // exact configuration the paper builds).
-        let kind = if cfg.multiplier == MultiplierKind::Ideal {
+        let kind = Self::pricing_kind(cfg.multiplier);
+        Tiler::new(cfg.banks.count, cfg.banks.units_per_bank, UnitCosts::measure_cached(kind, lib))
+    }
+
+    /// The hardware configuration used to *price* `kind` on the fabric.
+    /// IDEAL is a behavioural model with no netlist, so its schedules are
+    /// silently priced as the optimized D&C unit — the exact configuration
+    /// the paper builds. The substitution is logged once per process so a
+    /// `multiplier ideal` serving run doesn't mistake the numbers for free.
+    pub fn pricing_kind(kind: MultiplierKind) -> MultiplierKind {
+        if kind == MultiplierKind::Ideal {
+            static LOGGED: Once = Once::new();
+            LOGGED.call_once(|| {
+                eprintln!(
+                    "tiler: multiplier `ideal` has no hardware netlist — \
+                     pricing schedules with `dnc-opt` unit costs"
+                );
+            });
             MultiplierKind::DncOpt
         } else {
-            cfg.multiplier
-        };
-        Tiler::new(cfg.banks.count, cfg.banks.units_per_bank, UnitCosts::measure(kind, lib))
+            kind
+        }
     }
 
     pub fn costs(&self) -> UnitCosts {
@@ -165,12 +228,14 @@ impl Tiler {
         }
         let total_macs = layers.iter().map(|l| l.macs).sum();
         let total_programs = layers.iter().map(|l| l.programs).sum();
+        let total_stationary_hits = layers.iter().map(|l| l.stationary_hits).sum();
         let total_cycles: u64 = layers.iter().map(|l| l.cycles).sum();
         let total_energy_fj = layers.iter().map(|l| l.energy_fj).sum();
         ModelSchedule {
             layers,
             total_macs,
             total_programs,
+            total_stationary_hits,
             total_cycles,
             latency_ps: total_cycles * self.costs.cycle_ps,
             total_energy_fj,
@@ -234,6 +299,48 @@ mod tests {
         let sb = big.schedule(&mlp, 1);
         assert!(ss.total_cycles > sb.total_cycles);
         assert_eq!(ss.total_macs, sb.total_macs);
+    }
+
+    #[test]
+    fn from_config_substitutes_dnc_opt_costs_for_ideal() {
+        let lib = tsmc65_library();
+        let mut cfg = crate::config::Config::default();
+        cfg.multiplier = MultiplierKind::Ideal;
+        let t = Tiler::from_config(&cfg, &lib);
+        // IDEAL has no netlist: priced as the optimized D&C unit.
+        assert_eq!(t.costs().kind, MultiplierKind::DncOpt);
+        assert_eq!(Tiler::pricing_kind(MultiplierKind::Ideal), MultiplierKind::DncOpt);
+        // hardware kinds price as themselves
+        cfg.multiplier = MultiplierKind::Approx;
+        assert_eq!(Tiler::from_config(&cfg, &lib).costs().kind, MultiplierKind::Approx);
+        assert_eq!(Tiler::pricing_kind(MultiplierKind::Approx), MultiplierKind::Approx);
+    }
+
+    #[test]
+    fn measure_cached_matches_direct_measurement() {
+        let lib = tsmc65_library();
+        let direct = UnitCosts::measure(MultiplierKind::Approx2, &lib);
+        let cached = UnitCosts::measure_cached(MultiplierKind::Approx2, &lib);
+        let again = UnitCosts::measure_cached(MultiplierKind::Approx2, &lib);
+        assert_eq!(direct.mac_energy_fj, cached.mac_energy_fj);
+        assert_eq!(direct.cycle_ps, cached.cycle_ps);
+        assert_eq!(cached.program_energy_fj, again.program_energy_fj);
+    }
+
+    #[test]
+    fn schedule_cost_flattens_totals() {
+        let mlp = QuantMlp::random_for_study(8);
+        let mut t = tiler(32);
+        let s = t.schedule(&mlp, 3);
+        let c = s.cost();
+        assert_eq!(c.latency_ps, s.latency_ps);
+        assert_eq!(c.programs, s.total_programs);
+        assert_eq!(c.stationary_hits, s.total_stationary_hits);
+        assert_eq!(c.energy_fj, s.total_energy_fj);
+        assert_eq!(
+            c.programs + c.stationary_hits,
+            s.layers.iter().map(|l| l.elements as u64).sum::<u64>()
+        );
     }
 
     #[test]

@@ -7,7 +7,7 @@
 //! ([`crate::util::oneshot`]); the submitting client thread blocks on the
 //! receiver — the concurrency model of this std-thread coordinator.
 
-use crate::engine::BackendSpec;
+use crate::engine::{BackendSpec, BatchOutput};
 use crate::util::oneshot;
 use crate::Result;
 use anyhow::{anyhow, ensure};
@@ -20,8 +20,9 @@ pub struct BatchJob {
     pub inputs: Vec<f32>,
     pub batch: usize,
     pub dim: usize,
-    /// Reply channel: every output tuple element, flattened.
-    pub reply: oneshot::Sender<Result<Vec<Vec<f32>>>>,
+    /// Reply channel: outputs plus the simulated CiM cost when the
+    /// backend models one (`backend calibrated`).
+    pub reply: oneshot::Sender<Result<BatchOutput>>,
 }
 
 /// A pool of execution worker threads.
@@ -125,8 +126,38 @@ mod tests {
                 .unwrap();
             let out = rx.recv().unwrap().unwrap();
             let expect = mlp.forward_batch(&inputs, 2, &model);
-            assert_eq!(out[0], expect);
+            assert_eq!(out.outputs[0], expect);
         }
+        pool.shutdown();
+    }
+
+    #[test]
+    fn calibrated_worker_keeps_fabric_state_across_jobs() {
+        let mlp = QuantMlp::random_for_study(12);
+        let lib = crate::cells::tsmc65_library();
+        // 288-unit fabric = every weight element of the study model
+        let spec = BackendSpec::Calibrated {
+            mlp: mlp.clone(),
+            kind: MultiplierKind::DncOpt,
+            costs: crate::coordinator::tiler::UnitCosts::measure_cached(
+                MultiplierKind::DncOpt,
+                &lib,
+            ),
+            banks: 288,
+            units_per_bank: 1,
+            time_scale: 0.0,
+        };
+        let pool = WorkerPool::spawn(1, spec).unwrap();
+        let mut costs = Vec::new();
+        for _ in 0..2 {
+            let (tx, rx) = oneshot::channel();
+            let inputs = vec![0.5f32; 2 * 16];
+            pool.submit(0, BatchJob { inputs, batch: 2, dim: 16, reply: tx }).unwrap();
+            costs.push(rx.recv().unwrap().unwrap().cost.expect("calibrated cost"));
+        }
+        assert!(costs[0].programs > 0);
+        assert_eq!(costs[1].programs, 0, "same worker, second batch fully stationary");
+        assert!(costs[1].energy_fj < costs[0].energy_fj);
         pool.shutdown();
     }
 
@@ -180,7 +211,7 @@ ENTRY main {
                     .unwrap();
                 let out = rx.recv().unwrap().unwrap();
                 let expect: Vec<f32> = inputs.iter().map(|v| v * 2.0).collect();
-                assert_eq!(out[0], expect);
+                assert_eq!(out.outputs[0], expect);
             }
             pool.shutdown();
         }

@@ -1,0 +1,154 @@
+//! Calibrated-timing execution: native LUT-GEMM numerics plus a replay of
+//! the batch on the simulated LUNA fabric.
+//!
+//! The paper's claim is a *hardware* cost — energy per MAC and
+//! LUT-programming overhead in TSMC 65 nm — but a software backend
+//! answers at host speed and reports nothing about the CiM fabric. This
+//! backend closes that gap on the reply path: every batch first runs
+//! through the wrapped [`NativeBackend`] (so logits stay bit-exact with
+//! `backend native`), then is scheduled onto a per-worker
+//! [`Tiler`] whose weight-stationary fabric state persists across
+//! batches — the first batch a worker serves pays LUT programming, later
+//! ones mostly [`ScheduleCost::stationary_hits`]. The resulting
+//! [`ScheduleCost`] rides back on the [`BatchOutput`] into per-request
+//! replies and the serving metrics.
+//!
+//! `time_scale` maps simulated picoseconds to wall-clock: after pricing,
+//! the worker sleeps `latency_ps × time_scale` simulated-ps-as-wall-ps,
+//! so the *simulated* CiM latency gates the reply. `0` (the default)
+//! reports costs without sleeping; `1.0` would be "real time" (one
+//! simulated ps per wall ps — far below timer resolution for this model);
+//! values around `1e4`–`1e6` stretch the schedule into the µs–ms range
+//! where batching and queueing behaviour under CiM-speed serving becomes
+//! observable.
+
+use super::{BatchOutput, ExecBackend, NativeBackend};
+use crate::coordinator::tiler::{ScheduleCost, Tiler};
+use crate::multiplier::MultiplierKind;
+use crate::nn::QuantMlp;
+use crate::Result;
+use std::time::Duration;
+
+/// Native execution wrapped with per-batch `Tiler` schedule replay and
+/// optional simulated-latency gating. Owns its fabric state — construct
+/// one per worker thread via [`crate::engine::BackendSpec::build`].
+pub struct CalibratedBackend {
+    inner: NativeBackend,
+    tiler: Tiler,
+    time_scale: f64,
+}
+
+impl CalibratedBackend {
+    /// `tiler` carries the (process-shared) [`crate::coordinator::tiler::UnitCosts`]
+    /// calibration and this worker's fabric state; `kind` is the *numeric*
+    /// multiplier the GEMM computes with (pricing uses the tiler's costs,
+    /// which may substitute — see [`Tiler::pricing_kind`]).
+    pub fn new(mlp: QuantMlp, kind: MultiplierKind, tiler: Tiler, time_scale: f64) -> Self {
+        assert!(time_scale >= 0.0 && time_scale.is_finite(), "time_scale must be finite and >= 0");
+        CalibratedBackend { inner: NativeBackend::new(mlp, kind), tiler, time_scale }
+    }
+
+    /// The wall-clock pause a schedule of `latency_ps` maps to (zero in
+    /// report-only mode).
+    pub fn gate_duration(&self, cost: &ScheduleCost) -> Duration {
+        if self.time_scale == 0.0 {
+            return Duration::ZERO;
+        }
+        // simulated ps × scale = wall ps; /1000 → ns for Duration.
+        Duration::from_nanos((cost.latency_ps as f64 * self.time_scale / 1000.0) as u64)
+    }
+}
+
+impl ExecBackend for CalibratedBackend {
+    fn name(&self) -> &'static str {
+        "calibrated"
+    }
+
+    fn run_batch(&mut self, inputs: &[f32], batch: usize, dim: usize) -> Result<BatchOutput> {
+        let mut out = self.inner.run_batch(inputs, batch, dim)?;
+        let cost = self.tiler.schedule(self.inner.mlp(), batch).cost();
+        let gate = self.gate_duration(&cost);
+        if gate > Duration::ZERO {
+            std::thread::sleep(gate);
+        }
+        out.cost = Some(cost);
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cells::tsmc65_library;
+    use crate::coordinator::tiler::UnitCosts;
+    use std::time::Instant;
+
+    /// `random_for_study` has 16·12 + 12·8 = 288 weight elements; a
+    /// 288-unit fabric holds the whole model (fully weight-stationary
+    /// after the first batch).
+    const STUDY_ELEMS: usize = 288;
+
+    fn study_tiler(units: usize) -> Tiler {
+        let lib = tsmc65_library();
+        Tiler::new(units, 1, UnitCosts::measure_cached(MultiplierKind::DncOpt, &lib))
+    }
+
+    #[test]
+    fn report_only_is_bit_exact_and_priced() {
+        let mlp = QuantMlp::random_for_study(41);
+        let mut cal =
+            CalibratedBackend::new(mlp.clone(), MultiplierKind::Approx, study_tiler(32), 0.0);
+        let mut native = NativeBackend::new(mlp.clone(), MultiplierKind::Approx);
+        let xs = vec![0.4f32; 3 * 16];
+        let got = cal.run_batch(&xs, 3, 16).unwrap();
+        let want = native.run_batch(&xs, 3, 16).unwrap();
+        assert_eq!(got.outputs, want.outputs, "calibrated numerics == native numerics");
+        let cost = got.cost.unwrap();
+        assert_eq!(cost.programs + cost.stationary_hits, STUDY_ELEMS as u64);
+        assert!(cost.energy_fj > 0.0 && cost.latency_ps > 0);
+    }
+
+    #[test]
+    fn fabric_state_persists_across_batches() {
+        let mlp = QuantMlp::random_for_study(42);
+        let mut cal =
+            CalibratedBackend::new(mlp, MultiplierKind::DncOpt, study_tiler(STUDY_ELEMS), 0.0);
+        let xs = vec![0.2f32; 2 * 16];
+        let first = cal.run_batch(&xs, 2, 16).unwrap().cost.unwrap();
+        let second = cal.run_batch(&xs, 2, 16).unwrap().cost.unwrap();
+        assert!(first.programs > 0, "fresh fabric must program");
+        assert_eq!(second.programs, 0, "model fits the fabric: second batch all hits");
+        assert_eq!(second.stationary_hits, STUDY_ELEMS as u64);
+        assert!(second.energy_fj < first.energy_fj);
+    }
+
+    #[test]
+    fn time_scale_gates_the_reply_on_simulated_latency() {
+        let mlp = QuantMlp::random_for_study(43);
+        // probe the schedule cost with an identical fresh tiler
+        let probe_ps = study_tiler(64).schedule(&mlp, 2).latency_ps;
+        assert!(probe_ps > 0);
+        // pick the scale so the gate sleeps ~2 ms wall-clock
+        let scale = 2_000_000.0 * 1000.0 / probe_ps as f64;
+        let mut cal = CalibratedBackend::new(mlp, MultiplierKind::DncOpt, study_tiler(64), scale);
+        let xs = vec![0.3f32; 2 * 16];
+        let t0 = Instant::now();
+        let out = cal.run_batch(&xs, 2, 16).unwrap();
+        let elapsed = t0.elapsed();
+        let cost = out.cost.unwrap();
+        assert_eq!(cost.latency_ps, probe_ps, "same model + fresh fabric = same schedule");
+        // sleep() guarantees at least the requested duration
+        assert!(
+            elapsed >= cal.gate_duration(&cost),
+            "reply returned before the simulated gate: {elapsed:?}"
+        );
+    }
+
+    #[test]
+    fn report_only_gate_is_zero() {
+        let mlp = QuantMlp::random_for_study(44);
+        let cal = CalibratedBackend::new(mlp, MultiplierKind::DncOpt, study_tiler(16), 0.0);
+        let cost = ScheduleCost { latency_ps: u64::MAX, ..Default::default() };
+        assert_eq!(cal.gate_duration(&cost), Duration::ZERO);
+    }
+}

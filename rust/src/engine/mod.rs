@@ -2,47 +2,76 @@
 //!
 //! The coordinator used to hard-code the external PJRT runtime; this
 //! module makes execution a trait so the same serving stack (batcher →
-//! router → worker pool → completion pool) runs against either:
+//! router → worker pool → completion pool) runs against any of:
 //!
 //! * [`NativeBackend`] — the in-process batched LUT-GEMM over the
 //!   quantized functional model. Zero external dependencies: the whole
 //!   request path is pure Rust, so `backend native` (the default) serves
 //!   traffic without `make artifacts`' HLO outputs or the `xla` crate.
+//! * [`CalibratedBackend`] — the native GEMM plus a per-worker
+//!   [`crate::coordinator::Tiler`] that replays every batch on the
+//!   simulated LUNA fabric (weight-stationary state persists across
+//!   batches) and attaches the [`ScheduleCost`] to the reply; a
+//!   `time_scale` knob optionally gates the reply on the simulated
+//!   latency mapped to wall-clock.
 //! * [`PjrtBackend`] *(feature `pjrt`)* — the AOT-compiled JAX/Pallas
 //!   executable through PJRT, unchanged from the original worker path.
 //!
 //! Workers construct their backend **per thread** from a cloneable
 //! [`BackendSpec`]: PJRT handles are not `Send`, and the native backend
 //! keeps per-thread scratch buffers, so neither backend ever crosses a
-//! thread boundary after construction.
+//! thread boundary after construction. The expensive part of the
+//! calibrated backend — the gate-level [`UnitCosts`] measurement — is
+//! computed once per process and carried *inside* the spec, so spawning
+//! more workers never re-runs the event-sim calibration.
 
+mod calibrated;
 mod native;
 #[cfg(feature = "pjrt")]
 mod pjrt;
 
+pub use calibrated::CalibratedBackend;
 pub use native::NativeBackend;
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtBackend;
 
+use crate::coordinator::tiler::{ScheduleCost, Tiler, UnitCosts};
 use crate::multiplier::MultiplierKind;
 use crate::nn::QuantMlp;
 use crate::Result;
 use std::path::PathBuf;
 
+/// Result of one executed batch: every output tuple element flattened
+/// (the MLP artifacts return a single-element tuple of `batch × out_dim`
+/// logits), plus the simulated CiM cost when the backend models it.
+#[derive(Debug, Clone)]
+pub struct BatchOutput {
+    /// Flattened output tuple elements.
+    pub outputs: Vec<Vec<f32>>,
+    /// Simulated CiM cost of this batch ([`CalibratedBackend`] only;
+    /// `None` from backends that execute without a timing model).
+    pub cost: Option<ScheduleCost>,
+}
+
+impl BatchOutput {
+    /// Outputs with no timing model attached.
+    pub fn plain(outputs: Vec<Vec<f32>>) -> Self {
+        BatchOutput { outputs, cost: None }
+    }
+}
+
 /// A batch executor. `run_batch` takes the padded row-major
-/// `batch × dim` input matrix and returns every output tuple element
-/// flattened (the MLP artifacts return a single-element tuple of
-/// `batch × out_dim` logits; the native backend mirrors that shape).
+/// `batch × dim` input matrix and returns a [`BatchOutput`].
 ///
 /// Takes `&mut self` because backends own per-thread state (PJRT device
-/// buffers, native scratch); each worker thread owns its backend
-/// exclusively.
+/// buffers, native scratch, the calibrated backend's fabric state); each
+/// worker thread owns its backend exclusively.
 pub trait ExecBackend {
     /// Stable backend identifier (logs, metrics).
     fn name(&self) -> &'static str;
 
     /// Execute one padded batch.
-    fn run_batch(&mut self, inputs: &[f32], batch: usize, dim: usize) -> Result<Vec<Vec<f32>>>;
+    fn run_batch(&mut self, inputs: &[f32], batch: usize, dim: usize) -> Result<BatchOutput>;
 }
 
 /// Cloneable recipe a worker thread uses to build its own backend.
@@ -50,6 +79,18 @@ pub trait ExecBackend {
 pub enum BackendSpec {
     /// In-process batched LUT-GEMM over the quantized model.
     Native { mlp: QuantMlp, kind: MultiplierKind },
+    /// Native execution + per-worker `Tiler` schedule replay. `costs` is
+    /// the process-shared calibration (measure once, clone everywhere);
+    /// `time_scale` maps simulated picoseconds to wall-clock (0 =
+    /// report-only, see [`crate::config::TimingConfig`]).
+    Calibrated {
+        mlp: QuantMlp,
+        kind: MultiplierKind,
+        costs: UnitCosts,
+        banks: usize,
+        units_per_bank: usize,
+        time_scale: f64,
+    },
     /// PJRT execution of the HLO-text artifact at `hlo` (feature `pjrt`).
     Pjrt { hlo: PathBuf },
 }
@@ -60,6 +101,10 @@ impl BackendSpec {
         match self {
             BackendSpec::Native { mlp, kind } => {
                 Ok(Box::new(NativeBackend::new(mlp.clone(), *kind)))
+            }
+            BackendSpec::Calibrated { mlp, kind, costs, banks, units_per_bank, time_scale } => {
+                let tiler = Tiler::new(*banks, *units_per_bank, *costs);
+                Ok(Box::new(CalibratedBackend::new(mlp.clone(), *kind, tiler, *time_scale)))
             }
             #[cfg(feature = "pjrt")]
             BackendSpec::Pjrt { hlo } => Ok(Box::new(PjrtBackend::load(hlo)?)),
@@ -76,6 +121,7 @@ impl BackendSpec {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cells::tsmc65_library;
     use crate::multiplier::MultiplierModel;
 
     #[test]
@@ -86,10 +132,35 @@ mod tests {
         assert_eq!(backend.name(), "native");
         let xs = vec![0.25f32; 2 * 16];
         let out = backend.run_batch(&xs, 2, 16).unwrap();
-        assert_eq!(out.len(), 1);
+        assert_eq!(out.outputs.len(), 1);
+        assert!(out.cost.is_none(), "native backend carries no timing model");
         let model = MultiplierModel::new(MultiplierKind::DncOpt);
         let want = mlp.forward(&xs[0..16], &model);
-        assert_eq!(&out[0][0..8], &want[..]);
+        assert_eq!(&out.outputs[0][0..8], &want[..]);
+    }
+
+    #[test]
+    fn calibrated_spec_builds_and_costs_batches() {
+        let mlp = QuantMlp::random_for_study(22);
+        let lib = tsmc65_library();
+        let spec = BackendSpec::Calibrated {
+            mlp: mlp.clone(),
+            kind: MultiplierKind::DncOpt,
+            costs: UnitCosts::measure_cached(MultiplierKind::DncOpt, &lib),
+            banks: 16,
+            units_per_bank: 4,
+            time_scale: 0.0,
+        };
+        let mut backend = spec.build().unwrap();
+        assert_eq!(backend.name(), "calibrated");
+        let xs = vec![0.25f32; 2 * 16];
+        let out = backend.run_batch(&xs, 2, 16).unwrap();
+        let cost = out.cost.expect("calibrated backend prices every batch");
+        assert!(cost.programs > 0 && cost.energy_fj > 0.0 && cost.latency_ps > 0);
+        // bit-exact with the plain native backend
+        let mut nb = BackendSpec::Native { mlp, kind: MultiplierKind::DncOpt }.build().unwrap();
+        let native = nb.run_batch(&xs, 2, 16).unwrap();
+        assert_eq!(out.outputs, native.outputs);
     }
 
     #[cfg(not(feature = "pjrt"))]

@@ -9,7 +9,7 @@
 //! batches. Bit-exact with the per-sample forward for every
 //! [`MultiplierKind`].
 
-use super::ExecBackend;
+use super::{BatchOutput, ExecBackend};
 use crate::multiplier::{MultiplierKind, MultiplierModel};
 use crate::nn::{BatchScratch, QuantMlp};
 use crate::Result;
@@ -30,6 +30,12 @@ impl NativeBackend {
     pub fn kind(&self) -> MultiplierKind {
         self.model.kind
     }
+
+    /// The quantized model this backend executes (the calibrated wrapper
+    /// replays its schedule on the simulated fabric).
+    pub fn mlp(&self) -> &QuantMlp {
+        &self.mlp
+    }
 }
 
 impl ExecBackend for NativeBackend {
@@ -37,7 +43,7 @@ impl ExecBackend for NativeBackend {
         "native"
     }
 
-    fn run_batch(&mut self, inputs: &[f32], batch: usize, dim: usize) -> Result<Vec<Vec<f32>>> {
+    fn run_batch(&mut self, inputs: &[f32], batch: usize, dim: usize) -> Result<BatchOutput> {
         ensure!(
             dim == self.mlp.input_dim(),
             "input dim {} != model input dim {}",
@@ -52,7 +58,7 @@ impl ExecBackend for NativeBackend {
             dim
         );
         let logits = self.mlp.forward_batch_with(inputs, batch, &self.model, &mut self.scratch);
-        Ok(vec![logits])
+        Ok(BatchOutput::plain(vec![logits]))
     }
 }
 
@@ -72,7 +78,7 @@ mod tests {
             let model = MultiplierModel::new(kind);
             for b in 0..batch {
                 let want = mlp.forward(&xs[b * 64..(b + 1) * 64], &model);
-                assert_eq!(&out[0][b * 10..(b + 1) * 10], &want[..], "{kind} row {b}");
+                assert_eq!(&out.outputs[0][b * 10..(b + 1) * 10], &want[..], "{kind} row {b}");
             }
         }
     }
@@ -99,7 +105,11 @@ mod tests {
             let out = backend.run_batch(&xs, 4, 64).unwrap();
             let want = mlp.forward(&x, &model);
             for b in 0..4 {
-                assert_eq!(&out[0][b * 10..(b + 1) * 10], &want[..], "round {round} row {b}");
+                assert_eq!(
+                    &out.outputs[0][b * 10..(b + 1) * 10],
+                    &want[..],
+                    "round {round} row {b}"
+                );
             }
         }
     }

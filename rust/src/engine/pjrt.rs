@@ -2,7 +2,7 @@
 //! JAX/Pallas HLO-text artifact behind [`ExecBackend`], preserving the
 //! original worker semantics (one client + executable per thread).
 
-use super::ExecBackend;
+use super::{BatchOutput, ExecBackend};
 use crate::runtime::{CompiledModel, PjrtRuntime};
 use crate::Result;
 use std::path::Path;
@@ -26,8 +26,8 @@ impl ExecBackend for PjrtBackend {
         "pjrt"
     }
 
-    fn run_batch(&mut self, inputs: &[f32], batch: usize, dim: usize) -> Result<Vec<Vec<f32>>> {
-        self.model.run_f32(&[(inputs, &[batch as i64, dim as i64])])
+    fn run_batch(&mut self, inputs: &[f32], batch: usize, dim: usize) -> Result<BatchOutput> {
+        Ok(BatchOutput::plain(self.model.run_f32(&[(inputs, &[batch as i64, dim as i64])])?))
     }
 }
 
@@ -53,7 +53,8 @@ ENTRY main {
         let inputs: Vec<f32> = (0..6).map(|i| i as f32).collect();
         let out = backend.run_batch(&inputs, 2, 3).unwrap();
         let expect: Vec<f32> = inputs.iter().map(|v| v * 2.0).collect();
-        assert_eq!(out[0], expect);
+        assert_eq!(out.outputs[0], expect);
+        assert!(out.cost.is_none());
     }
 
     #[test]

@@ -26,8 +26,9 @@
 //!   maps matmuls onto LUNA units with energy/latency accounting — see
 //!   [`coordinator`];
 //! * the **execution backends**: the native batched LUT-GEMM (default,
-//!   zero external dependencies) and the PJRT wrapper (feature `pjrt`)
-//!   — see [`engine`];
+//!   zero external dependencies), the calibrated-timing backend (native
+//!   numerics + per-worker schedule replay and optional simulated-latency
+//!   gating), and the PJRT wrapper (feature `pjrt`) — see [`engine`];
 //! * the **artifact store and PJRT runtime** that load the outputs of
 //!   `python/compile/aot.py` — see [`runtime`] (the PJRT client itself
 //!   is gated behind the `pjrt` cargo feature);
@@ -35,6 +36,43 @@
 //!
 //! Python (JAX + Pallas) runs only at build time (`make artifacts`); the
 //! request path is pure Rust + PJRT.
+//!
+//! ## Timing model
+//!
+//! The paper's claim is a hardware cost — energy per MAC and
+//! LUT-programming overhead measured in TSMC 65 nm — so the serving
+//! stack models CiM time, not just host time. The pieces:
+//!
+//! * **Calibration.** [`coordinator::UnitCosts`] measures one LUNA unit
+//!   configuration directly on the gate-level model: average switching
+//!   energy per multiply over a pseudo-random operand stream, the LUT
+//!   write energy per programming, and the worst observed critical-path
+//!   settle time (ps) from the event-driven simulator. The measurement is
+//!   expensive, so it is memoized per process
+//!   ([`coordinator::UnitCosts::measure_cached`]) and carried by value
+//!   into every worker — never re-run per thread. The `ideal` multiplier
+//!   has no netlist; its schedules are priced as the optimized D&C unit
+//!   (logged once — see [`coordinator::Tiler::pricing_kind`]).
+//!
+//! * **Waves.** The [`coordinator::Tiler`] maps each layer's `out×in`
+//!   grid of 4-bit weight codes onto the fabric's units round-robin, in
+//!   `⌈elements / units⌉` *waves*: during a wave every unit is programmed
+//!   once and then multiplies once per batch sample, so a layer costs
+//!   `waves × batch` cycles and `latency_ps = total_cycles × cycle_ps`.
+//!
+//! * **Weight-stationarity.** Fabric state persists across batches: a
+//!   unit already holding the required code skips the (re)programming —
+//!   a *stationary hit*. Programming is orders of magnitude costlier
+//!   than a multiply, so steady-state batches pay mostly MAC energy; the
+//!   metrics report the hit-rate.
+//!
+//! * **`timing.time_scale`** (config) maps simulated picoseconds to
+//!   wall-clock on `backend calibrated`: each batch's reply is held for
+//!   `latency_ps × time_scale` (as wall ps). `0` — the default — is
+//!   report-only: costs ride on replies and metrics but nothing sleeps;
+//!   `1.0` would be real time (far below timer resolution here); values
+//!   around `1e4`–`1e6` stretch the schedule into the µs–ms range so
+//!   batching/queueing behaviour under CiM-speed serving is observable.
 
 pub mod analysis;
 pub mod cells;

@@ -27,13 +27,16 @@ USAGE:
   repro figures  [--id N] [--csv]
   repro mul <W> <Y>
   repro simulate [--multiplier SLUG] [--weight W] [--inputs a,b,c]
-  repro serve    [--config FILE] [--requests N] [--clients N] [--multiplier SLUG] [--backend native|pjrt]
+  repro serve    [--config FILE] [--requests N] [--clients N] [--multiplier SLUG] [--backend native|calibrated|pjrt] [--time-scale X]
   repro eval     [--artifacts DIR]
   repro ablation [--artifacts DIR]
   repro export   [--out DIR]
 
 Multiplier slugs: ideal traditional dnc dnc-opt approx approx2 array-mult
-Backends: native (in-process batched LUT-GEMM, default), pjrt (AOT HLO; needs the `pjrt` build feature)
+Backends: native (in-process batched LUT-GEMM, default),
+          calibrated (native + per-worker Tiler schedule replay; --time-scale maps
+                      simulated ps to wall-clock, 0 = report-only),
+          pjrt (AOT HLO; needs the `pjrt` build feature)
 ";
 
 /// Minimal flag parser: `--key value` pairs plus positional args.
@@ -202,6 +205,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(b) = args.flag("backend") {
         cfg.backend = BackendKind::from_arg(b)?;
     }
+    cfg.timing.time_scale = args.flag_parse("time-scale", cfg.timing.time_scale)?;
+    cfg.validate()?;
     let requests: usize = args.flag_parse("requests", 256)?;
     let clients: usize = args.flag_parse("clients", 16)?;
     serve_load(cfg, requests, clients)
@@ -219,6 +224,17 @@ fn serve_load(cfg: Config, requests: usize, clients: usize) -> Result<()> {
         cfg.multiplier,
         cfg.backend.slug()
     );
+    if cfg.backend == BackendKind::Calibrated {
+        println!(
+            "calibrated timing: time_scale {} ({})",
+            cfg.timing.time_scale,
+            if cfg.timing.time_scale == 0.0 {
+                "report-only"
+            } else {
+                "simulated CiM latency gates replies"
+            }
+        );
+    }
     let per_client = requests / clients.max(1);
     let mut threads = Vec::new();
     for c in 0..clients {
@@ -244,11 +260,8 @@ fn serve_load(cfg: Config, requests: usize, clients: usize) -> Result<()> {
     let completed: usize = threads.into_iter().map(|t| t.join().unwrap_or(0)).sum();
     let snap = server.metrics().snapshot();
     println!("completed {completed}/{requests} requests");
+    // render() reports the simulated CiM energy/latency/hit-rate lines
     print!("{}", snap.render());
-    println!(
-        "simulated CiM energy per request: {:.1} fJ",
-        snap.sim_energy_fj / completed.max(1) as f64
-    );
     server.shutdown();
     Ok(())
 }

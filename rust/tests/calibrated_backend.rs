@@ -1,0 +1,194 @@
+//! Calibrated-backend integration tests (mirroring `native_backend.rs`):
+//! synthesize a complete artifact directory — manifest, weights, test
+//! set, no HLO files — and drive the full serving stack end-to-end with
+//! `backend calibrated`, proving:
+//!
+//! * replies are bit-exact with `backend native` (the timing model never
+//!   touches numerics);
+//! * every reply carries a populated simulated cost (`sim_energy_fj`,
+//!   `sim_latency_ps`) that matches an offline `Tiler` replay exactly;
+//! * the metrics report aggregates and renders the new energy/latency/
+//!   stationary-hit lines.
+
+mod common;
+
+use common::synth_artifacts;
+use luna_cim::config::{BackendKind, Config};
+use luna_cim::coordinator::tiler::{Tiler, UnitCosts};
+use luna_cim::coordinator::CoordinatorServer;
+use luna_cim::multiplier::{MultiplierKind, MultiplierModel};
+use luna_cim::nn::QuantMlp;
+use luna_cim::runtime::ArtifactStore;
+
+/// Total weight elements of the digits-shaped model (64·32 + 32·10).
+const DIGITS_ELEMS: u64 = 2368;
+
+/// A fresh offline tiler identical to the serving fabric of
+/// [`calibrated_cfg`] (2368 units, dnc-opt calibration) — used to replay
+/// the schedule stream the server's worker must have produced.
+fn replay_tiler() -> Tiler {
+    let lib = luna_cim::cells::tsmc65_library();
+    Tiler::new(2368, 1, UnitCosts::measure_cached(MultiplierKind::DncOpt, &lib))
+}
+
+/// A calibrated config over the synthesized artifacts: one worker (so
+/// the weight-stationary fabric sees every batch) and a fabric large
+/// enough to hold the whole digits model (592 banks × 4 units = 2368).
+fn calibrated_cfg(store: &ArtifactStore) -> Config {
+    let mut cfg = Config::default();
+    cfg.artifacts_dir = store.root().display().to_string();
+    cfg.backend = BackendKind::Calibrated;
+    cfg.multiplier = MultiplierKind::DncOpt;
+    cfg.workers.count = 1;
+    cfg.banks.count = 592;
+    cfg.banks.units_per_bank = 4;
+    cfg
+}
+
+#[test]
+fn calibrated_replies_are_bit_exact_with_native_and_match_offline_replay() {
+    let mlp = QuantMlp::random_digits(61);
+    let (store, testset) = synth_artifacts("calibrated-e2e", &mlp, 8);
+    let n = 9usize;
+    let samples: Vec<Vec<f32>> = testset.samples.iter().take(n).map(|s| s.pixels.clone()).collect();
+
+    // Reference run: plain native server over the same artifacts.
+    let mut native_cfg = calibrated_cfg(&store);
+    native_cfg.backend = BackendKind::Native;
+    let (native_server, native_handle) = CoordinatorServer::start(native_cfg).unwrap();
+    let native_logits: Vec<Vec<f32>> =
+        samples.iter().map(|px| native_handle.submit(px.clone()).unwrap().logits).collect();
+    native_server.shutdown();
+
+    // Calibrated run (report-only timing), sequential submissions: each
+    // request flushes as its own batch of 1, so the schedule stream is
+    // deterministic and replayable offline.
+    let (server, handle) = CoordinatorServer::start(calibrated_cfg(&store)).unwrap();
+    let model = MultiplierModel::new(MultiplierKind::DncOpt);
+    let mut replay = replay_tiler();
+    let mut energies = Vec::new();
+    for (i, px) in samples.iter().enumerate() {
+        let resp = handle.submit(px.clone()).unwrap();
+        // numerics: bit-exact with native serving and the functional model
+        assert_eq!(resp.logits, native_logits[i], "request {i}");
+        assert_eq!(resp.logits, mlp.forward(px, &model), "request {i}");
+        assert_eq!(resp.label, mlp.classify(px, &model), "request {i}");
+        // cost: populated, and exactly the offline schedule replay
+        let want = replay.schedule(&mlp, 1).cost();
+        assert!(resp.sim_energy_fj > 0.0 && resp.sim_latency_ps > 0, "request {i}");
+        assert_eq!(resp.sim_energy_fj, want.energy_fj, "request {i}");
+        assert_eq!(resp.sim_latency_ps, want.latency_ps, "request {i}");
+        energies.push(resp.sim_energy_fj);
+    }
+
+    // Weight-stationary amortization is visible per request: the first
+    // reply paid 2368 LUT programmings, later ones only MAC energy.
+    assert!(energies[0] > energies[1], "first request pays programming");
+    assert_eq!(energies[1], energies[2], "steady state: MAC energy only");
+    let later = handle.submit(samples[0].clone()).unwrap();
+    assert_eq!(later.sim_energy_fj, energies[1]);
+
+    let snap = server.metrics().snapshot();
+    assert_eq!(snap.requests, n as u64 + 1);
+    assert_eq!(snap.failed_batches, 0);
+    // one blank-fabric pass programs everything; every later pass hits
+    assert_eq!(snap.sim_programs, DIGITS_ELEMS);
+    assert_eq!(snap.sim_stationary_hits, DIGITS_ELEMS * n as u64);
+    assert!(snap.stationary_hit_rate() > 0.8);
+    assert!(snap.sim_p50_latency_ns > 0 && snap.sim_p99_latency_ns >= snap.sim_p50_latency_ns);
+    let report = snap.render();
+    assert!(report.contains("sim energy"), "{report}");
+    assert!(report.contains("sim latency p50"), "{report}");
+    assert!(report.contains("hit-rate"), "{report}");
+    server.shutdown();
+}
+
+#[test]
+fn calibrated_server_survives_concurrent_load() {
+    let mlp = QuantMlp::random_digits(67);
+    let (store, testset) = synth_artifacts("calibrated-concurrent", &mlp, 8);
+    let mut cfg = calibrated_cfg(&store);
+    cfg.workers.count = 2;
+    // modest fabric: far smaller than the model, forcing reprogramming
+    cfg.banks.count = 16;
+    let (server, handle) = CoordinatorServer::start(cfg).unwrap();
+    let model = MultiplierModel::new(MultiplierKind::DncOpt);
+    let n = 40.min(testset.len());
+    let mut threads = Vec::new();
+    for t in 0..4 {
+        let handle = handle.clone();
+        let samples: Vec<Vec<f32>> = testset.samples[t * n / 4..(t + 1) * n / 4]
+            .iter()
+            .map(|s| s.pixels.clone())
+            .collect();
+        threads.push(std::thread::spawn(move || {
+            samples
+                .into_iter()
+                .map(|px| {
+                    let resp = handle.submit(px.clone()).expect("calibrated serve");
+                    (px, resp)
+                })
+                .collect::<Vec<_>>()
+        }));
+    }
+    let mut total = 0usize;
+    for t in threads {
+        for (px, resp) in t.join().unwrap() {
+            total += 1;
+            assert_eq!(resp.logits, mlp.forward(&px, &model));
+            assert!(resp.sim_energy_fj > 0.0);
+            assert!(resp.sim_latency_ps > 0);
+        }
+    }
+    assert_eq!(total, n);
+    let snap = server.metrics().snapshot();
+    assert_eq!(snap.requests, n as u64);
+    assert_eq!(snap.failed_batches, 0);
+    assert!(snap.sim_programs > 0, "small fabric must reprogram");
+    server.shutdown();
+}
+
+#[test]
+fn time_scale_gates_served_requests() {
+    let mlp = QuantMlp::random_digits(71);
+    let (store, testset) = synth_artifacts("calibrated-gated", &mlp, 8);
+
+    // Probe the per-request simulated latency (batch of 1 on a fresh
+    // fabric of the same size).
+    let probe_ps = replay_tiler().schedule(&mlp, 1).latency_ps;
+    assert!(probe_ps > 0);
+
+    // Scale so each batch gates for ~3 ms wall-clock.
+    let mut cfg = calibrated_cfg(&store);
+    cfg.timing.time_scale = 3_000_000.0 * 1000.0 / probe_ps as f64;
+    let (server, handle) = CoordinatorServer::start(cfg).unwrap();
+    let t0 = std::time::Instant::now();
+    let resp = handle.submit(testset.samples[0].pixels.clone()).unwrap();
+    let elapsed = t0.elapsed();
+    assert_eq!(resp.sim_latency_ps, probe_ps);
+    // sleep() guarantees at least the requested duration (2 ms bound
+    // leaves slack for float truncation in the ps→ns mapping)
+    let floor = std::time::Duration::from_millis(2);
+    assert!(elapsed >= floor, "gated reply came back in {elapsed:?}");
+    server.shutdown();
+}
+
+#[test]
+fn calibrated_with_ideal_multiplier_prices_as_dnc_opt() {
+    // `ideal` has no netlist; the calibrated path must serve it anyway,
+    // priced with the substituted dnc-opt calibration.
+    let mlp = QuantMlp::random_digits(73);
+    let (store, testset) = synth_artifacts("calibrated-ideal", &mlp, 8);
+    let mut cfg = calibrated_cfg(&store);
+    cfg.multiplier = MultiplierKind::Ideal;
+    let (server, handle) = CoordinatorServer::start(cfg).unwrap();
+    let ideal = MultiplierModel::new(MultiplierKind::Ideal);
+    let resp = handle.submit(testset.samples[0].pixels.clone()).unwrap();
+    // numerics are ideal...
+    assert_eq!(resp.logits, mlp.forward(&testset.samples[0].pixels, &ideal));
+    // ...but the cost model is the substituted hardware calibration
+    let want = replay_tiler().schedule(&mlp, 1).cost();
+    assert_eq!(resp.sim_energy_fj, want.energy_fj);
+    assert_eq!(resp.sim_latency_ps, want.latency_ps);
+    server.shutdown();
+}

@@ -7,32 +7,15 @@
 //! proving the coordinator serves traffic with zero external
 //! dependencies and stays bit-exact with the functional model.
 
+mod common;
+
+use common::synth_artifacts;
 use luna_cim::config::{BackendKind, Config};
 use luna_cim::coordinator::CoordinatorServer;
 use luna_cim::engine::{BackendSpec, ExecBackend};
 use luna_cim::multiplier::{MultiplierKind, MultiplierModel};
-use luna_cim::nn::{DigitsDataset, QuantMlp};
-use luna_cim::runtime::{ArtifactStore, ModelMeta};
+use luna_cim::nn::QuantMlp;
 use luna_cim::util::Rng;
-
-/// Write a self-contained artifact directory for the given model: the
-/// native backend needs manifest + weights + testset only.
-fn synth_artifacts(tag: &str, mlp: &QuantMlp, batch: usize) -> (ArtifactStore, DigitsDataset) {
-    let dir = luna_cim::util::test_dir(tag);
-    let store = ArtifactStore::new(&dir);
-    let testset = DigitsDataset::generate(4, 99);
-    let meta = ModelMeta {
-        dims: vec![64, 32, 10],
-        batch,
-        variants: vec!["ideal".into()],
-        train_accuracy: 0.0,
-        test_samples: testset.len(),
-    };
-    std::fs::write(store.manifest_path(), meta.to_text()).unwrap();
-    std::fs::write(store.weights_path(), mlp.to_text()).unwrap();
-    std::fs::write(store.testset_path(), testset.to_binary()).unwrap();
-    (store, testset)
-}
 
 #[test]
 fn batched_native_gemm_is_bit_exact_for_every_kind() {
@@ -65,8 +48,9 @@ fn native_backend_through_spec_matches_forward_batch() {
     let model = MultiplierModel::new(MultiplierKind::Approx);
     let xs = vec![0.5f32; 3 * 64];
     let out = backend.run_batch(&xs, 3, 64).unwrap();
-    assert_eq!(out.len(), 1, "single logits tuple element");
-    assert_eq!(out[0], mlp.forward_batch(&xs, 3, &model));
+    assert_eq!(out.outputs.len(), 1, "single logits tuple element");
+    assert!(out.cost.is_none(), "native backend has no timing model");
+    assert_eq!(out.outputs[0], mlp.forward_batch(&xs, 3, &model));
 }
 
 #[test]
