@@ -44,9 +44,10 @@ fn main() {
     //    report-only gate adds nothing else)
     let mlp_d = QuantMlp::random_digits(2);
     let xs: Vec<f32> = (0..8 * 64).map(|i| (i % 16) as f32 / 16.0).collect();
-    let mut native = BackendSpec::Native { mlp: mlp_d.clone(), kind: MultiplierKind::DncOpt }
-        .build()
-        .expect("native backend");
+    let mut native =
+        BackendSpec::Native { mlp: mlp_d.clone(), kind: MultiplierKind::DncOpt, threads: 1 }
+            .build()
+            .expect("native backend");
     b.run("schedule_replay native run_batch 64-32-10 b=8", 8.0, || {
         black_box(native.run_batch(&xs, 8, 64).unwrap().outputs.len());
     });
@@ -57,6 +58,7 @@ fn main() {
         banks: 592,
         units_per_bank: 4,
         time_scale: 0.0,
+        threads: 1,
     }
     .build()
     .expect("calibrated backend");

@@ -1,50 +1,166 @@
-//! Batched native LUT-GEMM vs the scalar per-sample forward — the
-//! speedup the native execution backend buys the serving stack
-//! (EXPERIMENTS.md §Perf; the acceptance bar is ≥2× at batch 8 on the
-//! digits-shaped model).
+//! LUT-GEMM kernel shoot-out: per-sample scalar forward vs the batched
+//! flat-gather kernel vs the planned kernel (code-sorted weight plans +
+//! per-row LUT-strip expansion + scoped-thread batch tiling) — the
+//! speedups the native execution backend buys the serving stack
+//! (EXPERIMENTS.md §Perf; acceptance bars: batched ≥ 2× scalar at batch
+//! 8, planned beats flat-gather at batch ≥ 8 on the digits model).
 //!
-//! The per-sample loop is what `QuantLinear::accumulate` costs a worker
-//! that executes a batch one request at a time: one quantize + two Vec
-//! allocations per layer per sample, and a masked `mul` per MAC. The
-//! batched path quantizes the whole batch once per layer, flat-gathers
-//! the 256-entry table, hoists the zero-point correction per row, and
-//! reuses one scratch buffer across layers and batches.
+//! The flat-gather path pays a 2D table index `(w << 4) | x` and a
+//! random 256-entry gather per MAC; the planned path compiles weights
+//! once into 16-bucket column plans and expands the product table into
+//! an L1-resident strip once per input row, so each MAC is a sequential
+//! column read plus a strip add.
+//!
+//! Flags (after `--`): `--quick` shrinks the measurement budget for CI
+//! smoke runs; `--save-json [PATH]` writes per-kernel MACs/s records to
+//! `BENCH_lut_gemm.json` (default) so the perf trajectory has data
+//! points — CI uploads it as a workflow artifact.
 
 use luna_cim::multiplier::{MultiplierKind, MultiplierModel};
-use luna_cim::nn::{BatchScratch, QuantMlp};
+use luna_cim::nn::{BatchScratch, PlanScratch, QuantLinear, QuantMlp};
 use luna_cim::util::bench::{black_box, Bencher};
 use luna_cim::util::Rng;
+use std::fmt::Write as _;
 
-fn main() {
-    let b = Bencher::default();
-    let mlp = QuantMlp::random_digits(5);
+/// One measured kernel configuration, destined for BENCH_lut_gemm.json.
+struct Record {
+    model: &'static str,
+    batch: usize,
+    kernel: String,
+    macs_per_s: f64,
+    mean_ns: f64,
+}
+
+/// Run every kernel on one model at one batch size; returns the
+/// flat-vs-planned(t1) speedup for the summary.
+fn run_case(
+    b: &Bencher,
+    model_name: &'static str,
+    mlp: &QuantMlp,
+    batch: usize,
+    scalar_too: bool,
+    rng: &mut Rng,
+    records: &mut Vec<Record>,
+    gemm_threads: &[usize],
+) -> f64 {
     let model = MultiplierModel::new(MultiplierKind::DncOpt);
     let in_dim = mlp.input_dim();
-    let mut rng = Rng::seed_from_u64(12);
+    let xs: Vec<f32> = (0..batch * in_dim).map(|_| rng.gen_range_f32(0.0, 1.0)).collect();
+    let macs = (mlp.macs() * batch as u64) as f64;
+    let mut push = |kernel: String, r: &luna_cim::util::bench::BenchResult| {
+        records.push(Record {
+            model: model_name,
+            batch,
+            kernel,
+            macs_per_s: r.throughput_per_sec(),
+            mean_ns: r.mean_ns,
+        });
+    };
 
-    let mut speedup_at_8 = 0.0f64;
-    for batch in [1usize, 8, 32, 128] {
-        let xs: Vec<f32> = (0..batch * in_dim).map(|_| rng.gen_range_f32(0.0, 1.0)).collect();
-        let macs = (mlp.macs() * batch as u64) as f64;
-
-        let scalar = b.run(&format!("per-sample forward x{batch}"), macs, || {
-            for r in 0..batch {
-                black_box(mlp.forward(&xs[r * in_dim..(r + 1) * in_dim], &model));
+    if scalar_too {
+        let r = b.run(&format!("{model_name} per-sample forward x{batch}"), macs, || {
+            for row in 0..batch {
+                black_box(mlp.forward(&xs[row * in_dim..(row + 1) * in_dim], &model));
             }
         });
+        push("scalar".to_string(), &r);
+    }
 
-        let mut scratch = BatchScratch::default();
-        let batched = b.run(&format!("native batched GEMM x{batch}"), macs, || {
-            black_box(mlp.forward_batch_with(&xs, batch, &model, &mut scratch));
+    let mut scratch = BatchScratch::default();
+    let flat = b.run(&format!("{model_name} flat-gather GEMM x{batch}"), macs, || {
+        black_box(mlp.forward_batch_with(&xs, batch, &model, &mut scratch));
+    });
+    push("flat".to_string(), &flat);
+
+    let mut planned_t1_ns = f64::MAX;
+    // Record by *effective* thread count (the kernel clamps to the batch
+    // row count; 0 resolves to the core count), and skip duplicates so
+    // the JSON never reports a fake multi-thread data point at batch 1.
+    let mut seen = Vec::new();
+    for &threads in gemm_threads {
+        let plan = mlp.plan(threads);
+        let effective = plan.threads().min(batch.max(1));
+        if seen.contains(&effective) {
+            continue;
+        }
+        seen.push(effective);
+        let mut pscratch = PlanScratch::default();
+        let r = b.run(&format!("{model_name} planned GEMM x{batch} t{effective}"), macs, || {
+            black_box(plan.forward_batch_with(&xs, batch, &model, &mut pscratch));
         });
+        if effective == 1 {
+            planned_t1_ns = r.mean_ns;
+        }
+        push(format!("planned-t{effective}"), &r);
+    }
+    flat.mean_ns / planned_t1_ns.max(1e-9)
+}
 
-        let speedup = scalar.mean_ns / batched.mean_ns.max(1e-9);
-        println!("  -> batch {batch}: batched GEMM {speedup:.2}x the per-sample loop");
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let save_json: Option<String> = args.iter().position(|a| a == "--save-json").map(|i| {
+        match args.get(i + 1) {
+            Some(v) if !v.starts_with("--") => v.clone(),
+            _ => "BENCH_lut_gemm.json".to_string(),
+        }
+    });
+    let b = if quick { Bencher::quick() } else { Bencher::default() };
+    let mut rng = Rng::seed_from_u64(12);
+    let mut records = Vec::new();
+
+    // The serving-shaped digits classifier (64 → 32 → 10).
+    let digits = QuantMlp::random_digits(5);
+    let mut planned_speedup_at_8 = 0.0f64;
+    for batch in [1usize, 8, 64] {
+        let s =
+            run_case(&b, "digits-64-32-10", &digits, batch, true, &mut rng, &mut records, &[1, 2]);
+        println!("  -> digits batch {batch}: planned t1 is {s:.2}x the flat-gather kernel");
         if batch == 8 {
-            speedup_at_8 = speedup;
+            planned_speedup_at_8 = s;
         }
     }
+
+    // One wide 256×256 layer — the shape where strip expansion amortizes
+    // over many output rows and threading has real work to split.
+    let wide = {
+        let w: Vec<Vec<f32>> = (0..256)
+            .map(|_| (0..256).map(|_| rng.gen_range_f32(-0.4, 0.4)).collect())
+            .collect();
+        let bias: Vec<f32> = (0..256).map(|_| rng.gen_range_f32(-0.1, 0.1)).collect();
+        QuantMlp::new(vec![QuantLinear::from_float(&w, bias, 1.0, false)])
+    };
+    for batch in [8usize, 64] {
+        let s =
+            run_case(&b, "wide-256x256", &wide, batch, false, &mut rng, &mut records, &[1, 2, 0]);
+        println!("  -> wide batch {batch}: planned t1 is {s:.2}x the flat-gather kernel");
+    }
+
     println!(
-        "speedup at batch 8: {speedup_at_8:.2}x (target >= 2x on the digits-shaped model)"
+        "planned/flat speedup at digits batch 8: {planned_speedup_at_8:.2}x \
+         (target: planned beats flat at batch >= 8)"
     );
+
+    if let Some(path) = save_json {
+        let json = render_json(&records);
+        std::fs::write(&path, json).expect("write bench json");
+        println!("wrote {} records to {path}", records.len());
+    }
+}
+
+/// Hand-rolled JSON (no serde in this offline image): one record per
+/// (model, batch, kernel) with MACs/s and mean ns/iter.
+fn render_json(records: &[Record]) -> String {
+    let mut out = String::from("{\n  \"bench\": \"lut_gemm\",\n  \"cases\": [\n");
+    for (i, r) in records.iter().enumerate() {
+        let _ = write!(
+            out,
+            "    {{\"model\": \"{}\", \"batch\": {}, \"kernel\": \"{}\", \
+             \"macs_per_s\": {:.1}, \"mean_ns\": {:.1}}}",
+            r.model, r.batch, r.kernel, r.macs_per_s, r.mean_ns
+        );
+        out.push_str(if i + 1 < records.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("  ]\n}\n");
+    out
 }

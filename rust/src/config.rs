@@ -72,6 +72,7 @@ pub struct Config {
     pub workers: WorkerConfig,
     pub banks: BankConfig,
     pub timing: TimingConfig,
+    pub gemm: GemmConfig,
 }
 
 /// Dynamic batching policy.
@@ -104,8 +105,20 @@ pub struct BankConfig {
     pub units_per_bank: usize,
 }
 
-/// Simulated-timing knobs for `backend calibrated`.
+/// Planned LUT-GEMM kernel knobs (`backend native` / `calibrated`).
 #[derive(Debug, Clone, PartialEq)]
+pub struct GemmConfig {
+    /// In-batch GEMM threads **per worker**: batch rows are tiled across
+    /// this many scoped threads inside each worker's planned kernel.
+    /// `0` = one per available core; `1` (default) keeps the kernel
+    /// single-threaded — worker threads already scale across batches, so
+    /// widen this only for large batches / wide layers (or when
+    /// `workers.count` is small). Ignored by `backend pjrt`.
+    pub threads: usize,
+}
+
+/// Simulated-timing knobs for `backend calibrated`.
+#[derive(Debug, Clone, PartialEq, Default)]
 pub struct TimingConfig {
     /// Maps simulated CiM picoseconds to wall-clock: each batch's reply
     /// is delayed by `latency_ps × time_scale` (as wall-clock ps). `0`
@@ -126,13 +139,14 @@ impl Default for Config {
             workers: WorkerConfig::default(),
             banks: BankConfig::default(),
             timing: TimingConfig::default(),
+            gemm: GemmConfig::default(),
         }
     }
 }
 
-impl Default for TimingConfig {
+impl Default for GemmConfig {
     fn default() -> Self {
-        TimingConfig { time_scale: 0.0 }
+        GemmConfig { threads: 1 }
     }
 }
 
@@ -166,6 +180,7 @@ const KNOWN_KEYS: &[&str] = &[
     "banks.count",
     "banks.units_per_bank",
     "timing.time_scale",
+    "gemm.threads",
 ];
 
 impl Config {
@@ -210,6 +225,9 @@ impl Config {
         if m.get_opt("timing.time_scale").is_some() {
             cfg.timing.time_scale = m.get_f64("timing.time_scale")?;
         }
+        if m.get_opt("gemm.threads").is_some() {
+            cfg.gemm.threads = m.get_usize("gemm.threads")?;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -234,6 +252,7 @@ impl Config {
         m.set("banks.count", self.banks.count);
         m.set("banks.units_per_bank", self.banks.units_per_bank);
         m.set("timing.time_scale", self.timing.time_scale);
+        m.set("gemm.threads", self.gemm.threads);
         m.render()
     }
 
@@ -254,6 +273,9 @@ impl Config {
             self.timing.time_scale.is_finite() && self.timing.time_scale >= 0.0,
             "timing.time_scale must be finite and >= 0 (0 = report-only)"
         );
+        // 0 = auto (available_parallelism); anything above this is surely
+        // a typo, not a machine.
+        anyhow::ensure!(self.gemm.threads <= 1024, "gemm.threads must be <= 1024 (0 = auto)");
         Ok(())
     }
 }
@@ -321,6 +343,20 @@ mod tests {
         let mut bad = Config::default();
         bad.batcher.queue_depth = 0;
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn gemm_threads_parses_roundtrips_and_validates() {
+        let cfg = Config::from_text("gemm.threads 4\n").unwrap();
+        assert_eq!(cfg.gemm.threads, 4);
+        let back = Config::from_text(&cfg.to_text()).unwrap();
+        assert_eq!(back, cfg);
+        // 0 = auto is valid
+        assert_eq!(Config::from_text("gemm.threads 0\n").unwrap().gemm.threads, 0);
+        // default is single-threaded (workers already scale across batches)
+        assert_eq!(Config::default().gemm.threads, 1);
+        assert!(Config::from_text("gemm.threads 100000\n").is_err());
+        assert!(Config::from_text("gemm.threads nope\n").is_err());
     }
 
     #[test]

@@ -70,6 +70,11 @@ pub struct Metrics {
     /// **nanoseconds** (ps / 1000) — the log-bucket math is
     /// unit-agnostic, only the field names of [`LatencyHistogram`] say µs.
     pub sim_latency: LatencyHistogram,
+    /// Host-side per-batch GEMM wall time (µs): what the backend spent
+    /// computing each batch, excluding any simulated-latency gate. The
+    /// counterpart of `sim_latency` — one report shows host speed next
+    /// to CiM speed.
+    pub host_gemm: LatencyHistogram,
     requests: AtomicU64,
     batches: AtomicU64,
     padded_slots: AtomicU64,
@@ -111,6 +116,12 @@ impl Metrics {
         self.sim_energy_fj.fetch_add(fj.round() as u64, Ordering::Relaxed);
     }
 
+    /// Record one served batch's host-side GEMM wall time. Sub-µs
+    /// batches clamp to 1 µs (the histogram's resolution floor).
+    pub fn record_host_gemm_us(&self, us: u64) {
+        self.host_gemm.record_us(us.max(1));
+    }
+
     /// Record one served batch's simulated CiM cost (energy, modelled
     /// latency, programming events, weight-stationary hits).
     pub fn record_sim_cost(&self, cost: &ScheduleCost) {
@@ -142,6 +153,9 @@ impl Metrics {
             sim_p99_latency_ns: self.sim_latency.quantile_us(0.99),
             sim_programs: self.sim_programs.load(Ordering::Relaxed),
             sim_stationary_hits: self.sim_stationary_hits.load(Ordering::Relaxed),
+            host_gemm_mean_us: self.host_gemm.mean_us(),
+            host_gemm_p50_us: self.host_gemm.quantile_us(0.50),
+            host_gemm_p99_us: self.host_gemm.quantile_us(0.99),
         }
     }
 }
@@ -169,6 +183,11 @@ pub struct MetricsSnapshot {
     pub sim_programs: u64,
     /// Programs avoided by weight-stationary reuse.
     pub sim_stationary_hits: u64,
+    /// Host-side per-batch GEMM wall time (µs) — the backend's compute
+    /// cost, next to the simulated CiM latency above.
+    pub host_gemm_mean_us: f64,
+    pub host_gemm_p50_us: u64,
+    pub host_gemm_p99_us: u64,
 }
 
 impl MetricsSnapshot {
@@ -209,6 +228,7 @@ impl MetricsSnapshot {
              failed batches {} ({} requests)\n\
              latency mean {:.0} us p50 {} us p99 {} us max {} us | \
              throughput {:.0} req/s\n\
+             host gemm mean {:.0} us p50 {} us p99 {} us\n\
              sim energy {:.2} nJ ({:.1} fJ/req) | \
              sim latency p50 {} ns p99 {} ns | \
              programs {} stationary hits {} (hit-rate {:.2})\n",
@@ -223,6 +243,9 @@ impl MetricsSnapshot {
             self.p99_latency_us,
             self.max_latency_us,
             self.throughput_rps,
+            self.host_gemm_mean_us,
+            self.host_gemm_p50_us,
+            self.host_gemm_p99_us,
             self.sim_energy_fj / 1e6,
             self.sim_energy_per_request_fj(),
             self.sim_p50_latency_ns,
@@ -319,5 +342,22 @@ mod tests {
         assert_eq!(snap.stationary_hit_rate(), 0.0);
         assert_eq!(snap.sim_energy_per_request_fj(), 0.0);
         assert_eq!(snap.sim_p50_latency_ns, 0);
+        assert_eq!(snap.host_gemm_p50_us, 0);
+        assert_eq!(snap.host_gemm_mean_us, 0.0);
+    }
+
+    #[test]
+    fn host_gemm_time_aggregates_and_renders() {
+        let m = Metrics::new();
+        m.record_host_gemm_us(0); // sub-µs batch clamps to the 1 µs floor
+        m.record_host_gemm_us(40);
+        m.record_host_gemm_us(900);
+        let snap = m.snapshot();
+        assert_eq!(m.host_gemm.count(), 3);
+        assert!(snap.host_gemm_mean_us > 0.0);
+        assert!(snap.host_gemm_p50_us <= snap.host_gemm_p99_us);
+        assert!(snap.host_gemm_p99_us >= 900, "p99 bucket bound covers the max sample");
+        let report = snap.render();
+        assert!(report.contains("host gemm mean"), "{report}");
     }
 }

@@ -97,7 +97,8 @@ mod tests {
     fn round_robin_spreads_work() {
         let mlp = QuantMlp::random_for_study(13);
         let model = MultiplierModel::new(MultiplierKind::Ideal);
-        let spec = BackendSpec::Native { mlp: mlp.clone(), kind: MultiplierKind::Ideal };
+        let spec =
+            BackendSpec::Native { mlp: mlp.clone(), kind: MultiplierKind::Ideal, threads: 1 };
         let router = Router::new(WorkerPool::spawn(2, spec).unwrap());
         let mut hit = [false; 2];
         for i in 0..6 {

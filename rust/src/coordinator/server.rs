@@ -108,7 +108,11 @@ impl CoordinatorServer {
         // here and *carried in the spec* — never per worker thread);
         // pjrt compiles the AOT executable.
         let spec = match cfg.backend {
-            BackendKind::Native => BackendSpec::Native { mlp: mlp.clone(), kind: cfg.multiplier },
+            BackendKind::Native => BackendSpec::Native {
+                mlp: mlp.clone(),
+                kind: cfg.multiplier,
+                threads: cfg.gemm.threads,
+            },
             BackendKind::Calibrated => BackendSpec::Calibrated {
                 mlp: mlp.clone(),
                 kind: cfg.multiplier,
@@ -116,6 +120,7 @@ impl CoordinatorServer {
                 banks: cfg.banks.count,
                 units_per_bank: cfg.banks.units_per_bank,
                 time_scale: cfg.timing.time_scale,
+                threads: cfg.gemm.threads,
             },
             BackendKind::Pjrt => BackendSpec::Pjrt { hlo: store.mlp_hlo(cfg.multiplier) },
         };
@@ -290,6 +295,7 @@ fn complete_batch(shared: &Arc<Shared>, job: CompletionJob) {
             // produced replies; failures go to record_batch_failure.
             shared.metrics.record_batch(n, batch.padded_to);
             shared.metrics.record_sim_cost(&cost);
+            shared.metrics.record_host_gemm_us(output.host_gemm_us);
             let per_req_energy = cost.energy_fj / n as f64;
             let logits_all = &output.outputs[0];
             let out_dim = shared.out_dim;

@@ -111,7 +111,7 @@ mod tests {
 
     fn native_spec() -> (BackendSpec, QuantMlp) {
         let mlp = QuantMlp::random_for_study(11);
-        (BackendSpec::Native { mlp: mlp.clone(), kind: MultiplierKind::DncOpt }, mlp)
+        (BackendSpec::Native { mlp: mlp.clone(), kind: MultiplierKind::DncOpt, threads: 1 }, mlp)
     }
 
     #[test]
@@ -146,6 +146,7 @@ mod tests {
             banks: 288,
             units_per_bank: 1,
             time_scale: 0.0,
+            threads: 1,
         };
         let pool = WorkerPool::spawn(1, spec).unwrap();
         let mut costs = Vec::new();

@@ -42,10 +42,22 @@ impl CalibratedBackend {
     /// `tiler` carries the (process-shared) [`crate::coordinator::tiler::UnitCosts`]
     /// calibration and this worker's fabric state; `kind` is the *numeric*
     /// multiplier the GEMM computes with (pricing uses the tiler's costs,
-    /// which may substitute — see [`Tiler::pricing_kind`]).
-    pub fn new(mlp: QuantMlp, kind: MultiplierKind, tiler: Tiler, time_scale: f64) -> Self {
+    /// which may substitute — see [`Tiler::pricing_kind`]); `threads` is
+    /// the planned-GEMM thread cap forwarded to the wrapped
+    /// [`NativeBackend`] (`0` = one per available core).
+    pub fn new(
+        mlp: QuantMlp,
+        kind: MultiplierKind,
+        tiler: Tiler,
+        time_scale: f64,
+        threads: usize,
+    ) -> Self {
         assert!(time_scale >= 0.0 && time_scale.is_finite(), "time_scale must be finite and >= 0");
-        CalibratedBackend { inner: NativeBackend::new(mlp, kind), tiler, time_scale }
+        CalibratedBackend {
+            inner: NativeBackend::with_threads(mlp, kind, threads),
+            tiler,
+            time_scale,
+        }
     }
 
     /// The wall-clock pause a schedule of `latency_ps` maps to (zero in
@@ -97,7 +109,7 @@ mod tests {
     fn report_only_is_bit_exact_and_priced() {
         let mlp = QuantMlp::random_for_study(41);
         let mut cal =
-            CalibratedBackend::new(mlp.clone(), MultiplierKind::Approx, study_tiler(32), 0.0);
+            CalibratedBackend::new(mlp.clone(), MultiplierKind::Approx, study_tiler(32), 0.0, 2);
         let mut native = NativeBackend::new(mlp.clone(), MultiplierKind::Approx);
         let xs = vec![0.4f32; 3 * 16];
         let got = cal.run_batch(&xs, 3, 16).unwrap();
@@ -112,7 +124,7 @@ mod tests {
     fn fabric_state_persists_across_batches() {
         let mlp = QuantMlp::random_for_study(42);
         let mut cal =
-            CalibratedBackend::new(mlp, MultiplierKind::DncOpt, study_tiler(STUDY_ELEMS), 0.0);
+            CalibratedBackend::new(mlp, MultiplierKind::DncOpt, study_tiler(STUDY_ELEMS), 0.0, 1);
         let xs = vec![0.2f32; 2 * 16];
         let first = cal.run_batch(&xs, 2, 16).unwrap().cost.unwrap();
         let second = cal.run_batch(&xs, 2, 16).unwrap().cost.unwrap();
@@ -130,7 +142,8 @@ mod tests {
         assert!(probe_ps > 0);
         // pick the scale so the gate sleeps ~2 ms wall-clock
         let scale = 2_000_000.0 * 1000.0 / probe_ps as f64;
-        let mut cal = CalibratedBackend::new(mlp, MultiplierKind::DncOpt, study_tiler(64), scale);
+        let mut cal =
+            CalibratedBackend::new(mlp, MultiplierKind::DncOpt, study_tiler(64), scale, 1);
         let xs = vec![0.3f32; 2 * 16];
         let t0 = Instant::now();
         let out = cal.run_batch(&xs, 2, 16).unwrap();
@@ -147,7 +160,7 @@ mod tests {
     #[test]
     fn report_only_gate_is_zero() {
         let mlp = QuantMlp::random_for_study(44);
-        let cal = CalibratedBackend::new(mlp, MultiplierKind::DncOpt, study_tiler(16), 0.0);
+        let cal = CalibratedBackend::new(mlp, MultiplierKind::DncOpt, study_tiler(16), 0.0, 1);
         let cost = ScheduleCost { latency_ps: u64::MAX, ..Default::default() };
         assert_eq!(cal.gate_duration(&cost), Duration::ZERO);
     }

@@ -4,10 +4,13 @@
 //! module makes execution a trait so the same serving stack (batcher →
 //! router → worker pool → completion pool) runs against any of:
 //!
-//! * [`NativeBackend`] — the in-process batched LUT-GEMM over the
-//!   quantized functional model. Zero external dependencies: the whole
-//!   request path is pure Rust, so `backend native` (the default) serves
-//!   traffic without `make artifacts`' HLO outputs or the `xla` crate.
+//! * [`NativeBackend`] — the in-process **planned** LUT-GEMM over the
+//!   quantized functional model (weights compiled once into code-sorted
+//!   column buckets, one LUT-strip expansion per input row, optional
+//!   in-batch threading via `gemm.threads` — see [`crate::nn::MlpPlan`]).
+//!   Zero external dependencies: the whole request path is pure Rust, so
+//!   `backend native` (the default) serves traffic without
+//!   `make artifacts`' HLO outputs or the `xla` crate.
 //! * [`CalibratedBackend`] — the native GEMM plus a per-worker
 //!   [`crate::coordinator::Tiler`] that replays every batch on the
 //!   simulated LUNA fabric (weight-stationary state persists across
@@ -51,12 +54,16 @@ pub struct BatchOutput {
     /// Simulated CiM cost of this batch ([`CalibratedBackend`] only;
     /// `None` from backends that execute without a timing model).
     pub cost: Option<ScheduleCost>,
+    /// Host-side wall time the backend spent computing this batch (µs).
+    /// Excludes the calibrated backend's simulated-latency gate, so the
+    /// metrics can compare host GEMM speed against simulated CiM speed.
+    pub host_gemm_us: u64,
 }
 
 impl BatchOutput {
     /// Outputs with no timing model attached.
     pub fn plain(outputs: Vec<Vec<f32>>) -> Self {
-        BatchOutput { outputs, cost: None }
+        BatchOutput { outputs, cost: None, host_gemm_us: 0 }
     }
 }
 
@@ -75,10 +82,15 @@ pub trait ExecBackend {
 }
 
 /// Cloneable recipe a worker thread uses to build its own backend.
+///
+/// `threads` on the native/calibrated variants is the per-worker planned
+/// LUT-GEMM thread cap (`gemm.threads` in config: `0` = one per
+/// available core, `1` = the default single-threaded kernel — worker
+/// threads already scale across batches, so in-batch fan-out is opt-in).
 #[derive(Debug, Clone)]
 pub enum BackendSpec {
-    /// In-process batched LUT-GEMM over the quantized model.
-    Native { mlp: QuantMlp, kind: MultiplierKind },
+    /// In-process planned LUT-GEMM over the quantized model.
+    Native { mlp: QuantMlp, kind: MultiplierKind, threads: usize },
     /// Native execution + per-worker `Tiler` schedule replay. `costs` is
     /// the process-shared calibration (measure once, clone everywhere);
     /// `time_scale` maps simulated picoseconds to wall-clock (0 =
@@ -90,6 +102,7 @@ pub enum BackendSpec {
         banks: usize,
         units_per_bank: usize,
         time_scale: f64,
+        threads: usize,
     },
     /// PJRT execution of the HLO-text artifact at `hlo` (feature `pjrt`).
     Pjrt { hlo: PathBuf },
@@ -99,12 +112,26 @@ impl BackendSpec {
     /// Construct the backend on the calling thread.
     pub fn build(&self) -> Result<Box<dyn ExecBackend>> {
         match self {
-            BackendSpec::Native { mlp, kind } => {
-                Ok(Box::new(NativeBackend::new(mlp.clone(), *kind)))
+            BackendSpec::Native { mlp, kind, threads } => {
+                Ok(Box::new(NativeBackend::with_threads(mlp.clone(), *kind, *threads)))
             }
-            BackendSpec::Calibrated { mlp, kind, costs, banks, units_per_bank, time_scale } => {
+            BackendSpec::Calibrated {
+                mlp,
+                kind,
+                costs,
+                banks,
+                units_per_bank,
+                time_scale,
+                threads,
+            } => {
                 let tiler = Tiler::new(*banks, *units_per_bank, *costs);
-                Ok(Box::new(CalibratedBackend::new(mlp.clone(), *kind, tiler, *time_scale)))
+                Ok(Box::new(CalibratedBackend::new(
+                    mlp.clone(),
+                    *kind,
+                    tiler,
+                    *time_scale,
+                    *threads,
+                )))
             }
             #[cfg(feature = "pjrt")]
             BackendSpec::Pjrt { hlo } => Ok(Box::new(PjrtBackend::load(hlo)?)),
@@ -127,16 +154,19 @@ mod tests {
     #[test]
     fn native_spec_builds_and_matches_functional_model() {
         let mlp = QuantMlp::random_for_study(21);
-        let spec = BackendSpec::Native { mlp: mlp.clone(), kind: MultiplierKind::DncOpt };
-        let mut backend = spec.build().unwrap();
-        assert_eq!(backend.name(), "native");
-        let xs = vec![0.25f32; 2 * 16];
-        let out = backend.run_batch(&xs, 2, 16).unwrap();
-        assert_eq!(out.outputs.len(), 1);
-        assert!(out.cost.is_none(), "native backend carries no timing model");
-        let model = MultiplierModel::new(MultiplierKind::DncOpt);
-        let want = mlp.forward(&xs[0..16], &model);
-        assert_eq!(&out.outputs[0][0..8], &want[..]);
+        for threads in [1usize, 2, 0] {
+            let spec =
+                BackendSpec::Native { mlp: mlp.clone(), kind: MultiplierKind::DncOpt, threads };
+            let mut backend = spec.build().unwrap();
+            assert_eq!(backend.name(), "native");
+            let xs = vec![0.25f32; 2 * 16];
+            let out = backend.run_batch(&xs, 2, 16).unwrap();
+            assert_eq!(out.outputs.len(), 1);
+            assert!(out.cost.is_none(), "native backend carries no timing model");
+            let model = MultiplierModel::new(MultiplierKind::DncOpt);
+            let want = mlp.forward(&xs[0..16], &model);
+            assert_eq!(&out.outputs[0][0..8], &want[..], "threads {threads}");
+        }
     }
 
     #[test]
@@ -150,6 +180,7 @@ mod tests {
             banks: 16,
             units_per_bank: 4,
             time_scale: 0.0,
+            threads: 2,
         };
         let mut backend = spec.build().unwrap();
         assert_eq!(backend.name(), "calibrated");
@@ -157,8 +188,10 @@ mod tests {
         let out = backend.run_batch(&xs, 2, 16).unwrap();
         let cost = out.cost.expect("calibrated backend prices every batch");
         assert!(cost.programs > 0 && cost.energy_fj > 0.0 && cost.latency_ps > 0);
-        // bit-exact with the plain native backend
-        let mut nb = BackendSpec::Native { mlp, kind: MultiplierKind::DncOpt }.build().unwrap();
+        // bit-exact with the plain native backend, threaded or not
+        let mut nb = BackendSpec::Native { mlp, kind: MultiplierKind::DncOpt, threads: 1 }
+            .build()
+            .unwrap();
         let native = nb.run_batch(&xs, 2, 16).unwrap();
         assert_eq!(out.outputs, native.outputs);
     }

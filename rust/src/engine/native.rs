@@ -1,34 +1,57 @@
-//! Native batched LUT-GEMM execution: the quantized functional model run
-//! in-process, one flat 256-entry product-table gather per MAC.
+//! Native planned LUT-GEMM execution: the quantized functional model run
+//! in-process through a pre-compiled [`MlpPlan`].
 //!
-//! This is the paper's D&C promise cashed in at serving time: because the
-//! LUT multiplication is a table load, a whole `batch × in_dim` matrix
-//! runs through [`crate::nn::QuantMlp::forward_batch_with`] with the
-//! batch quantized once per layer, the zero-point correction hoisted out
-//! of the inner loop, and scratch buffers reused across layers and
-//! batches. Bit-exact with the per-sample forward for every
-//! [`MultiplierKind`].
+//! This is the paper's D&C promise cashed in at serving time. At backend
+//! construction the static weight codes are compiled into per-row
+//! 16-bucket column plans; at run time each input row expands the
+//! 256-entry product table into an L1-resident per-code LUT strip
+//! **once**, so the hot loop is sequential column reads and strip adds —
+//! no per-MAC `(w << 4) | x` index arithmetic. Batch rows optionally tile
+//! across scoped threads (`gemm.threads`). Bit-exact with the per-sample
+//! forward for every [`MultiplierKind`] and every thread count
+//! (`tests/gemm_plan.rs`).
 
 use super::{BatchOutput, ExecBackend};
 use crate::multiplier::{MultiplierKind, MultiplierModel};
-use crate::nn::{BatchScratch, QuantMlp};
+use crate::nn::{MlpPlan, PlanScratch, QuantMlp};
 use crate::Result;
 use anyhow::ensure;
+use std::time::Instant;
 
-/// In-process batched executor over the quantized MLP.
+/// In-process planned-LUT-GEMM executor over the quantized MLP.
 pub struct NativeBackend {
     mlp: QuantMlp,
+    plan: MlpPlan,
     model: MultiplierModel,
-    scratch: BatchScratch,
+    scratch: PlanScratch,
 }
 
 impl NativeBackend {
+    /// Single-threaded planned kernel (the serving default: worker
+    /// threads already scale across batches).
     pub fn new(mlp: QuantMlp, kind: MultiplierKind) -> Self {
-        NativeBackend { mlp, model: MultiplierModel::new(kind), scratch: BatchScratch::default() }
+        Self::with_threads(mlp, kind, 1)
+    }
+
+    /// Planned kernel with up to `threads` GEMM threads per batch
+    /// (`0` = one per available core).
+    pub fn with_threads(mlp: QuantMlp, kind: MultiplierKind, threads: usize) -> Self {
+        let plan = mlp.plan(threads);
+        NativeBackend {
+            mlp,
+            plan,
+            model: MultiplierModel::new(kind),
+            scratch: PlanScratch::default(),
+        }
     }
 
     pub fn kind(&self) -> MultiplierKind {
         self.model.kind
+    }
+
+    /// Resolved planned-GEMM thread cap.
+    pub fn threads(&self) -> usize {
+        self.plan.threads()
     }
 
     /// The quantized model this backend executes (the calibrated wrapper
@@ -57,8 +80,11 @@ impl ExecBackend for NativeBackend {
             batch,
             dim
         );
-        let logits = self.mlp.forward_batch_with(inputs, batch, &self.model, &mut self.scratch);
-        Ok(BatchOutput::plain(vec![logits]))
+        let t0 = Instant::now();
+        let logits = self.plan.forward_batch_with(inputs, batch, &self.model, &mut self.scratch);
+        let mut out = BatchOutput::plain(vec![logits]);
+        out.host_gemm_us = t0.elapsed().as_micros() as u64;
+        Ok(out)
     }
 }
 
@@ -73,12 +99,18 @@ mod tests {
         let batch = 8;
         let xs: Vec<f32> = (0..batch * 64).map(|_| rng.gen_range_f32(0.0, 1.0)).collect();
         for kind in MultiplierKind::ALL {
-            let mut backend = NativeBackend::new(mlp.clone(), kind);
-            let out = backend.run_batch(&xs, batch, 64).unwrap();
-            let model = MultiplierModel::new(kind);
-            for b in 0..batch {
-                let want = mlp.forward(&xs[b * 64..(b + 1) * 64], &model);
-                assert_eq!(&out.outputs[0][b * 10..(b + 1) * 10], &want[..], "{kind} row {b}");
+            for threads in [1usize, 3] {
+                let mut backend = NativeBackend::with_threads(mlp.clone(), kind, threads);
+                let out = backend.run_batch(&xs, batch, 64).unwrap();
+                let model = MultiplierModel::new(kind);
+                for b in 0..batch {
+                    let want = mlp.forward(&xs[b * 64..(b + 1) * 64], &model);
+                    assert_eq!(
+                        &out.outputs[0][b * 10..(b + 1) * 10],
+                        &want[..],
+                        "{kind} threads {threads} row {b}"
+                    );
+                }
             }
         }
     }
@@ -95,7 +127,7 @@ mod tests {
     fn scratch_reuse_across_batches_stays_exact() {
         let mlp = QuantMlp::random_digits(2);
         let model = MultiplierModel::new(MultiplierKind::Approx2);
-        let mut backend = NativeBackend::new(mlp.clone(), MultiplierKind::Approx2);
+        let mut backend = NativeBackend::with_threads(mlp.clone(), MultiplierKind::Approx2, 2);
         for round in 0..3 {
             let x = vec![0.1 * (round + 1) as f32; 64];
             let mut xs = Vec::new();
@@ -112,5 +144,16 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn zero_threads_resolves_and_runs() {
+        let mlp = QuantMlp::random_digits(3);
+        let mut backend = NativeBackend::with_threads(mlp.clone(), MultiplierKind::DncOpt, 0);
+        assert!(backend.threads() >= 1);
+        let xs = vec![0.5f32; 2 * 64];
+        let out = backend.run_batch(&xs, 2, 64).unwrap();
+        let model = MultiplierModel::new(MultiplierKind::DncOpt);
+        assert_eq!(&out.outputs[0][0..10], &mlp.forward(&xs[0..64], &model)[..]);
     }
 }

@@ -27,7 +27,11 @@ impl ExecBackend for PjrtBackend {
     }
 
     fn run_batch(&mut self, inputs: &[f32], batch: usize, dim: usize) -> Result<BatchOutput> {
-        Ok(BatchOutput::plain(self.model.run_f32(&[(inputs, &[batch as i64, dim as i64])])?))
+        let t0 = std::time::Instant::now();
+        let outputs = self.model.run_f32(&[(inputs, &[batch as i64, dim as i64])])?;
+        let mut out = BatchOutput::plain(outputs);
+        out.host_gemm_us = t0.elapsed().as_micros() as u64;
+        Ok(out)
     }
 }
 

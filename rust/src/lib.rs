@@ -37,6 +37,55 @@
 //! Python (JAX + Pallas) runs only at build time (`make artifacts`); the
 //! request path is pure Rust + PJRT.
 //!
+//! ## Kernel architecture
+//!
+//! The host-side realization of the paper's "a LUT load is cheaper than
+//! a multiply" claim went through three generations, all bit-exact with
+//! the per-sample [`nn::QuantMlp::forward`] for every
+//! [`multiplier::MultiplierKind`]:
+//!
+//! 1. **Scalar** — one [`multiplier::MultiplierModel::mul`] per MAC,
+//!    plus per-sample quantize and allocation overhead.
+//! 2. **Flat-gather** ([`nn::QuantLinear::gemm_batch_into`]) — the batch
+//!    quantized once per layer, the zero-point correction hoisted per
+//!    input row, but still a fresh 2D index `(w << 4) | x` and a random
+//!    256-entry gather for every MAC.
+//! 3. **Planned** ([`nn::MlpPlan`], the execution engine behind
+//!    `backend native` and `calibrated`) — built on the observation
+//!    that weights are static while activations arrive per request:
+//!
+//!    * *Plan compilation* (once, at backend construction): each weight
+//!      row's column indices are counting-sorted into 16 buckets, one
+//!      per 4-bit code — a CSR over codes ([`nn::LayerPlan`]).
+//!    * *LUT-strip expansion* (once per input row): the 256-entry
+//!      product table expands to a `16 × in_dim` strip
+//!      `g[w][j] = table[(w << 4) | x_j]` of `i16` products
+//!      (L1-resident). Every output row of that input then runs
+//!      sequential column reads + strip adds — zero per-MAC index
+//!      arithmetic, and the strip cost amortizes over `out_dim` rows.
+//!      Narrow heads (`out_dim < 16`) can't amortize 16 strip rows and
+//!      fall back to the flat gather per layer, decided at compile
+//!      time — bit-identical arithmetic on both paths.
+//!    * *Batch tiling* (`gemm.threads` config, `--gemm-threads` on
+//!      `repro serve`, `0` = one per core): batch rows split into
+//!      contiguous chunks across `std::thread::scope` threads, each
+//!      chunk running the whole layer stack on its own scratch. Every
+//!      output element is accumulated by exactly one thread in the
+//!      existing order, and integer accumulation is exact, so results
+//!      are bit-identical for every thread count (pinned by
+//!      `tests/gemm_plan.rs`). The default is `1`: worker threads
+//!      already scale across batches, so in-batch fan-out is opt-in for
+//!      big-batch / wide-layer deployments.
+//!
+//! `benches/lut_gemm.rs` races all three kernels at serving shapes and
+//! (`--save-json`) records MACs/s per kernel to `BENCH_lut_gemm.json`;
+//! CI runs it on every push and uploads the JSON as a workflow
+//! artifact, so the perf trajectory accumulates data points. The
+//! serving metrics report the host-side per-batch GEMM wall time next
+//! to the simulated CiM latency (`host gemm` line in
+//! [`coordinator::MetricsSnapshot::render`]), so host speed and fabric
+//! speed are comparable from one report.
+//!
 //! ## Timing model
 //!
 //! The paper's claim is a hardware cost — energy per MAC and

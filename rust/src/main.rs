@@ -27,7 +27,7 @@ USAGE:
   repro figures  [--id N] [--csv]
   repro mul <W> <Y>
   repro simulate [--multiplier SLUG] [--weight W] [--inputs a,b,c]
-  repro serve    [--config FILE] [--requests N] [--clients N] [--multiplier SLUG] [--backend native|calibrated|pjrt] [--time-scale X]
+  repro serve    [--config FILE] [--requests N] [--clients N] [--multiplier SLUG] [--backend native|calibrated|pjrt] [--time-scale X] [--gemm-threads N]
   repro eval     [--artifacts DIR]
   repro ablation [--artifacts DIR]
   repro export   [--out DIR]
@@ -37,6 +37,8 @@ Backends: native (in-process batched LUT-GEMM, default),
           calibrated (native + per-worker Tiler schedule replay; --time-scale maps
                       simulated ps to wall-clock, 0 = report-only),
           pjrt (AOT HLO; needs the `pjrt` build feature)
+--gemm-threads: in-batch planned-GEMM threads per worker (native/calibrated;
+                0 = one per core, default 1 — workers already scale across batches)
 ";
 
 /// Minimal flag parser: `--key value` pairs plus positional args.
@@ -206,6 +208,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         cfg.backend = BackendKind::from_arg(b)?;
     }
     cfg.timing.time_scale = args.flag_parse("time-scale", cfg.timing.time_scale)?;
+    cfg.gemm.threads = args.flag_parse("gemm-threads", cfg.gemm.threads)?;
     cfg.validate()?;
     let requests: usize = args.flag_parse("requests", 256)?;
     let clients: usize = args.flag_parse("clients", 16)?;
@@ -218,11 +221,16 @@ fn serve_load(cfg: Config, requests: usize, clients: usize) -> Result<()> {
     let testset = store.load_testset()?;
     let (server, handle) = CoordinatorServer::start(cfg.clone())?;
     println!(
-        "serving with {} workers, batch {}, multiplier {}, backend {}",
+        "serving with {} workers, batch {}, multiplier {}, backend {}, gemm threads {}",
         cfg.workers.count,
         cfg.batcher.max_batch,
         cfg.multiplier,
-        cfg.backend.slug()
+        cfg.backend.slug(),
+        if cfg.gemm.threads == 0 {
+            format!("auto ({})", luna_cim::nn::resolve_threads(0))
+        } else {
+            cfg.gemm.threads.to_string()
+        }
     );
     if cfg.backend == BackendKind::Calibrated {
         println!(

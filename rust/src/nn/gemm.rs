@@ -1,0 +1,486 @@
+//! Planned LUT-GEMM: code-sorted weight plans, per-row LUT-strip
+//! expansion, and multi-threaded batch tiling.
+//!
+//! The flat-gather kernel ([`QuantLinear::gemm_batch_into`]) still pays a
+//! 2D table index `(w << 4) | x` and a random 256-entry gather for every
+//! single MAC. Weights are static, so that work can be compiled away:
+//!
+//! 1. **Plan compilation** (once, at backend construction). Each weight
+//!    row's column indices are counting-sorted into 16 buckets, one per
+//!    4-bit weight code — a 16-bucket CSR per output row
+//!    ([`LayerPlan`]). The sort is stable, but order within a bucket is
+//!    irrelevant anyway: the accumulator is exact integer arithmetic, so
+//!    any summation order produces the same `i32` and therefore the same
+//!    dequantized `f32` bit pattern as the per-sample path.
+//!
+//! 2. **LUT-strip expansion** (once per *input row*, not per MAC). The
+//!    256-entry product table is expanded into a `16 × in_dim` strip
+//!    `g[w][j] = table[(w << 4) | x_j]` of `i16` products (≤ 4 KiB for
+//!    the digits model — L1-resident). Every MAC of every output row then
+//!    reads this strip; the amortized per-MAC cost is one sequential
+//!    `u16` column load plus one L1 strip load and an add — zero index
+//!    arithmetic. Layers too narrow to amortize the 16-row expansion
+//!    (`out_dim < 16`, e.g. a 10-class head) fall back to the flat
+//!    gather per layer at compile time; the arithmetic is identical
+//!    either way, only the instruction mix differs.
+//!
+//! 3. **Batch tiling** ([`MlpPlan::forward_batch_with`]). Batch rows are
+//!    split into contiguous chunks, one per thread
+//!    (`std::thread::scope`); each chunk runs the whole layer stack
+//!    independently, so every output element is still accumulated by
+//!    exactly one thread in the existing order — bit-exactness with
+//!    [`QuantMlp::forward`] holds for every thread count and every
+//!    [`MultiplierKind`](crate::multiplier::MultiplierKind) (pinned by
+//!    `tests/gemm_plan.rs`).
+
+use super::{QuantLinear, QuantMlp, Quantizer};
+use crate::multiplier::MultiplierModel;
+
+/// Resolve a `gemm.threads` knob: `0` means one thread per available
+/// core ([`std::thread::available_parallelism`]), anything else is taken
+/// literally. Never returns 0.
+pub fn resolve_threads(threads: usize) -> usize {
+    if threads == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        threads
+    }
+}
+
+/// One [`QuantLinear`] compiled for planned execution: per output row,
+/// the column indices grouped by 4-bit weight code (a 16-bucket CSR).
+/// Weight codes are static, so this is built once per backend and shared
+/// read-only across worker GEMM threads.
+#[derive(Debug, Clone)]
+pub struct LayerPlan {
+    in_dim: usize,
+    out_dim: usize,
+    /// `out_dim × in_dim` column indices; row `r` occupies
+    /// `cols[r·in_dim .. (r+1)·in_dim]`, grouped by weight code.
+    cols: Vec<u16>,
+    /// `out_dim × 17` absolute offsets into `cols`: row `r`'s bucket for
+    /// code `w` is `cols[offs[r·17 + w] .. offs[r·17 + w + 1]]`.
+    offs: Vec<u32>,
+    /// Row-major weight codes — populated only for flat-gather fallback
+    /// layers (empty when the strip path runs, which never reads codes).
+    wq: Vec<u8>,
+    /// Whether the strip path pays for itself (see [`LayerPlan::compile`]):
+    /// expanding 16 strip rows only amortizes over enough output rows.
+    use_strip: bool,
+    w_quant: Quantizer,
+    x_quant: Quantizer,
+    bias: Vec<f32>,
+    relu: bool,
+}
+
+impl LayerPlan {
+    /// Compile a layer's static weight codes into the bucketed plan.
+    pub fn compile(layer: &QuantLinear) -> Self {
+        let (in_dim, out_dim) = (layer.in_dim, layer.out_dim);
+        assert!(in_dim <= u16::MAX as usize + 1, "in_dim {in_dim} exceeds u16 column indices");
+        assert!(
+            in_dim.checked_mul(out_dim).is_some_and(|n| n <= u32::MAX as usize),
+            "{out_dim}x{in_dim} weight elements exceed u32 plan offsets"
+        );
+        assert!(
+            layer.wq.iter().all(|&w| w < 16),
+            "weight codes must be 4-bit to compile a LayerPlan"
+        );
+        let use_strip = out_dim >= 16;
+        let mut cols = vec![0u16; in_dim * out_dim];
+        let mut offs = Vec::with_capacity(out_dim * 17);
+        for r in 0..out_dim {
+            let row = &layer.wq[r * in_dim..(r + 1) * in_dim];
+            let base = (r * in_dim) as u32;
+            // counting sort of the row's columns by weight code
+            let mut counts = [0u32; 16];
+            for &w in row {
+                counts[w as usize] += 1;
+            }
+            let mut cursor = [0u32; 16];
+            let mut acc = 0u32;
+            for w in 0..16 {
+                offs.push(base + acc);
+                cursor[w] = base + acc;
+                acc += counts[w];
+            }
+            offs.push(base + acc);
+            for (j, &w) in row.iter().enumerate() {
+                cols[cursor[w as usize] as usize] = j as u16;
+                cursor[w as usize] += 1;
+            }
+        }
+        LayerPlan {
+            in_dim,
+            out_dim,
+            cols,
+            offs,
+            // The strip path never reads the raw codes; keep the copy
+            // only for the flat-gather fallback of narrow heads.
+            wq: if use_strip { Vec::new() } else { layer.wq.clone() },
+            // The strip costs 16·in_dim expansion entries per input row
+            // and saves per-MAC index arithmetic on out_dim·in_dim MACs;
+            // with fewer output rows than strip rows the expansion can't
+            // amortize, so narrow heads fall back to the flat gather
+            // (numerically identical — only the instruction mix differs).
+            use_strip,
+            w_quant: layer.w_quant,
+            x_quant: layer.x_quant,
+            bias: layer.bias.clone(),
+            relu: layer.relu,
+        }
+    }
+
+    /// Whether this layer executes via the LUT strip (wide layers) or
+    /// the flat-gather fallback (narrow heads). Both are bit-exact.
+    pub fn uses_strip(&self) -> bool {
+        self.use_strip
+    }
+
+    pub fn in_dim(&self) -> usize {
+        self.in_dim
+    }
+
+    pub fn out_dim(&self) -> usize {
+        self.out_dim
+    }
+
+    /// Planned GEMM over `rows` pre-quantized input rows: expands the
+    /// LUT strip once per input row, then sums each output row's buckets
+    /// with sequential column reads. Writes `rows × out_dim` dequantized
+    /// (bias + ReLU applied) activations into `out`, clearing it first.
+    /// Bit-exact with [`QuantLinear::gemm_batch_into`].
+    pub fn gemm_rows_into(
+        &self,
+        xq: &[u8],
+        rows: usize,
+        model: &MultiplierModel,
+        strip: &mut Vec<i16>,
+        out: &mut Vec<f32>,
+    ) {
+        assert_eq!(xq.len(), rows * self.in_dim, "bad batch input shape");
+        let table = model.table();
+        let zp = self.w_quant.zero_point as i32;
+        out.clear();
+        out.reserve(rows * self.out_dim);
+        for b in 0..rows {
+            let xrow = &xq[b * self.in_dim..(b + 1) * self.in_dim];
+            let corr = zp * xrow.iter().map(|&x| x as i32).sum::<i32>();
+            if self.use_strip {
+                expand_strip(table, xrow, strip);
+            }
+            for r in 0..self.out_dim {
+                let acc = if self.use_strip {
+                    self.accumulate_strip(r, strip)
+                } else {
+                    self.accumulate_flat(r, xrow, table)
+                };
+                // identical operation order to the flat-gather path —
+                // float multiplication is not associative, so the scales
+                // must not be pre-folded
+                let v = (acc - corr) as f32 * self.w_quant.scale * self.x_quant.scale
+                    + self.bias[r];
+                out.push(if self.relu { v.max(0.0) } else { v });
+            }
+        }
+    }
+
+    /// Strip inner loop: sequential column reads, pre-gathered products.
+    #[inline]
+    fn accumulate_strip(&self, r: usize, strip: &[i16]) -> i32 {
+        let ro = &self.offs[r * 17..r * 17 + 17];
+        let mut acc = 0i32;
+        for w in 0..16 {
+            let seg = &self.cols[ro[w] as usize..ro[w + 1] as usize];
+            if seg.is_empty() {
+                continue;
+            }
+            let srow = &strip[w * self.in_dim..(w + 1) * self.in_dim];
+            let mut sum = 0i32;
+            for &c in seg {
+                sum += srow[c as usize] as i32;
+            }
+            acc += sum;
+        }
+        acc
+    }
+
+    /// Flat-gather inner loop (same arithmetic as
+    /// [`QuantLinear::gemm_batch_into`]) for layers too narrow to
+    /// amortize the strip expansion.
+    #[inline]
+    fn accumulate_flat(&self, r: usize, xrow: &[u8], table: &[u8; 256]) -> i32 {
+        let wrow = &self.wq[r * self.in_dim..(r + 1) * self.in_dim];
+        wrow.iter()
+            .zip(xrow)
+            .map(|(&w, &x)| table[((w as usize) << 4) | x as usize] as i32)
+            .sum()
+    }
+}
+
+/// Expand the 256-entry product table into the per-code lookup strip for
+/// one input row: `strip[w·in_dim + j] = table[(w << 4) | x_j]`. Products
+/// of 4-bit codes are ≤ 225, so `i16` holds them losslessly.
+fn expand_strip(table: &[u8; 256], xrow: &[u8], strip: &mut Vec<i16>) {
+    strip.clear();
+    strip.reserve(16 * xrow.len());
+    for w in 0..16usize {
+        let base = w << 4;
+        let trow = &table[base..base + 16];
+        strip.extend(xrow.iter().map(|&x| trow[(x & 0xf) as usize] as i16));
+    }
+}
+
+/// Per-chunk scratch: quantized codes, ping-pong activation buffers and
+/// the LUT strip. One per GEMM thread, reused across batches.
+#[derive(Debug, Default)]
+struct ChunkScratch {
+    xq: Vec<u8>,
+    cur: Vec<f32>,
+    next: Vec<f32>,
+    strip: Vec<i16>,
+}
+
+/// Reusable scratch for [`MlpPlan::forward_batch_with`] — grows one
+/// [`ChunkScratch`] slot per GEMM thread on first use, so steady-state
+/// planned inference allocates nothing but the returned logits.
+#[derive(Debug, Default)]
+pub struct PlanScratch {
+    slots: Vec<ChunkScratch>,
+}
+
+/// A [`QuantMlp`] compiled for planned execution: one [`LayerPlan`] per
+/// layer plus the resolved GEMM thread count.
+#[derive(Debug, Clone)]
+pub struct MlpPlan {
+    layers: Vec<LayerPlan>,
+    threads: usize,
+}
+
+impl MlpPlan {
+    /// Compile every layer. `threads` follows the `gemm.threads`
+    /// convention (`0` = one per available core); the resolved count is
+    /// an upper bound — a batch never fans out wider than its row count.
+    pub fn compile(mlp: &QuantMlp, threads: usize) -> Self {
+        MlpPlan {
+            layers: mlp.layers.iter().map(QuantLinear::plan).collect(),
+            threads: resolve_threads(threads),
+        }
+    }
+
+    /// Resolved GEMM thread cap (≥ 1).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    pub fn input_dim(&self) -> usize {
+        self.layers[0].in_dim
+    }
+
+    pub fn output_dim(&self) -> usize {
+        self.layers.last().unwrap().out_dim
+    }
+
+    /// Planned batched forward pass with fresh scratch (tests, one-off
+    /// callers). See [`MlpPlan::forward_batch_with`].
+    pub fn forward_batch(&self, xs: &[f32], batch: usize, model: &MultiplierModel) -> Vec<f32> {
+        let mut scratch = PlanScratch::default();
+        self.forward_batch_with(xs, batch, model, &mut scratch)
+    }
+
+    /// Planned batched forward pass: `xs` is row-major
+    /// `batch × input_dim`, returns row-major `batch × output_dim`
+    /// logits. Batch rows are tiled into contiguous chunks across up to
+    /// [`MlpPlan::threads`] scoped threads; each chunk runs the whole
+    /// layer stack on its own scratch and writes a disjoint slice of the
+    /// output, so results are bit-exact with [`QuantMlp::forward`] per
+    /// row regardless of the thread count.
+    ///
+    /// Threads are spawned per call (`std::thread::scope`), which costs
+    /// tens of µs — that only amortizes when a batch carries real work
+    /// (big batches / wide layers). The serving default (`gemm.threads
+    /// 1`, see [`crate::config::GemmConfig`]) never spawns.
+    pub fn forward_batch_with(
+        &self,
+        xs: &[f32],
+        batch: usize,
+        model: &MultiplierModel,
+        scratch: &mut PlanScratch,
+    ) -> Vec<f32> {
+        let in_dim = self.input_dim();
+        let out_dim = self.output_dim();
+        assert_eq!(xs.len(), batch * in_dim, "bad batch input shape");
+        let mut out = vec![0.0f32; batch * out_dim];
+        if batch == 0 {
+            return out;
+        }
+        let threads = self.threads.min(batch);
+        if scratch.slots.len() < threads {
+            scratch.slots.resize_with(threads, ChunkScratch::default);
+        }
+        if threads == 1 {
+            self.run_chunk(xs, batch, model, &mut scratch.slots[0], &mut out);
+        } else {
+            let chunk = batch.div_ceil(threads);
+            std::thread::scope(|s| {
+                let mut out_rest = &mut out[..];
+                let mut row0 = 0usize;
+                for slot in scratch.slots[..threads].iter_mut() {
+                    let rows = chunk.min(batch - row0);
+                    if rows == 0 {
+                        break;
+                    }
+                    let xa = &xs[row0 * in_dim..(row0 + rows) * in_dim];
+                    let (oa, rest) = out_rest.split_at_mut(rows * out_dim);
+                    out_rest = rest;
+                    row0 += rows;
+                    s.spawn(move || self.run_chunk(xa, rows, model, slot, oa));
+                }
+            });
+        }
+        out
+    }
+
+    /// Run `rows` batch rows through every layer on one thread's scratch.
+    fn run_chunk(
+        &self,
+        xs: &[f32],
+        rows: usize,
+        model: &MultiplierModel,
+        slot: &mut ChunkScratch,
+        out: &mut [f32],
+    ) {
+        let ChunkScratch { xq, cur, next, strip } = slot;
+        cur.clear();
+        cur.extend_from_slice(xs);
+        for layer in &self.layers {
+            xq.clear();
+            xq.extend(cur.iter().map(|&x| layer.x_quant.quantize(x)));
+            layer.gemm_rows_into(xq, rows, model, strip, next);
+            std::mem::swap(cur, next);
+        }
+        out.copy_from_slice(cur);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::multiplier::{MultiplierKind, MultiplierModel};
+    use crate::util::Rng;
+
+    fn random_layer(rng: &mut Rng, in_dim: usize, out_dim: usize, relu: bool) -> QuantLinear {
+        let w: Vec<Vec<f32>> = (0..out_dim)
+            .map(|_| (0..in_dim).map(|_| rng.gen_range_f32(-0.5, 0.5)).collect())
+            .collect();
+        let b: Vec<f32> = (0..out_dim).map(|_| rng.gen_range_f32(-0.1, 0.1)).collect();
+        QuantLinear::from_float(&w, b, 1.0, relu)
+    }
+
+    #[test]
+    fn plan_buckets_are_a_code_sorted_permutation() {
+        let mut rng = Rng::seed_from_u64(3);
+        let layer = random_layer(&mut rng, 19, 7, true);
+        let plan = LayerPlan::compile(&layer);
+        for r in 0..layer.out_dim {
+            let row = &layer.wq[r * layer.in_dim..(r + 1) * layer.in_dim];
+            let ro = &plan.offs[r * 17..r * 17 + 17];
+            assert_eq!(ro[0] as usize, r * layer.in_dim);
+            assert_eq!(ro[16] as usize, (r + 1) * layer.in_dim);
+            let mut seen = vec![false; layer.in_dim];
+            for w in 0..16 {
+                assert!(ro[w] <= ro[w + 1], "offsets must be monotone");
+                for &c in &plan.cols[ro[w] as usize..ro[w + 1] as usize] {
+                    assert_eq!(row[c as usize], w as u8, "bucket {w} holds a foreign code");
+                    assert!(!seen[c as usize], "column {c} listed twice");
+                    seen[c as usize] = true;
+                }
+            }
+            assert!(seen.iter().all(|&s| s), "every column appears exactly once");
+        }
+    }
+
+    #[test]
+    fn strip_matches_table_products() {
+        let model = MultiplierModel::new(MultiplierKind::Approx2);
+        let xrow: Vec<u8> = (0..16).collect();
+        let mut strip = Vec::new();
+        expand_strip(model.table(), &xrow, &mut strip);
+        assert_eq!(strip.len(), 16 * xrow.len());
+        for w in 0..16u8 {
+            for (j, &x) in xrow.iter().enumerate() {
+                assert_eq!(strip[w as usize * xrow.len() + j], model.mul(w, x) as i16);
+            }
+        }
+    }
+
+    #[test]
+    fn planned_layer_matches_flat_gather_on_both_inner_paths() {
+        let mut rng = Rng::seed_from_u64(11);
+        // 23→9 takes the narrow-head fallback, 17→19 the strip path
+        for (in_dim, out_dim) in [(23usize, 9usize), (17, 19)] {
+            let mut layer = random_layer(&mut rng, in_dim, out_dim, false);
+            layer.relu = true;
+            let plan = LayerPlan::compile(&layer);
+            assert_eq!(plan.uses_strip(), out_dim >= 16);
+            let rows = 5;
+            let xq: Vec<u8> = (0..rows * in_dim).map(|_| rng.gen_range_u64(0, 16) as u8).collect();
+            for kind in MultiplierKind::ALL {
+                let model = MultiplierModel::new(kind);
+                let (mut flat, mut planned, mut strip) = (Vec::new(), Vec::new(), Vec::new());
+                layer.gemm_batch_into(&xq, rows, &model, &mut flat);
+                plan.gemm_rows_into(&xq, rows, &model, &mut strip, &mut planned);
+                assert_eq!(planned, flat, "{kind} {in_dim}x{out_dim}");
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_plan_is_bit_exact_with_per_sample_forward() {
+        let mlp = QuantMlp::random_for_study(8);
+        let model = MultiplierModel::new(MultiplierKind::Approx);
+        let batch = 7;
+        let mut rng = Rng::seed_from_u64(21);
+        let xs: Vec<f32> = (0..batch * 16).map(|_| rng.gen_range_f32(0.0, 1.0)).collect();
+        for threads in [1usize, 2, 3, 16] {
+            let plan = MlpPlan::compile(&mlp, threads);
+            let got = plan.forward_batch(&xs, batch, &model);
+            for b in 0..batch {
+                let want = mlp.forward(&xs[b * 16..(b + 1) * 16], &model);
+                assert_eq!(&got[b * 8..(b + 1) * 8], &want[..], "threads {threads} row {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_batch_returns_empty_logits() {
+        let plan = MlpPlan::compile(&QuantMlp::random_for_study(5), 4);
+        let model = MultiplierModel::new(MultiplierKind::Ideal);
+        assert!(plan.forward_batch(&[], 0, &model).is_empty());
+    }
+
+    #[test]
+    fn zero_threads_resolves_to_available_parallelism() {
+        assert!(resolve_threads(0) >= 1);
+        assert_eq!(resolve_threads(3), 3);
+        let plan = MlpPlan::compile(&QuantMlp::random_for_study(6), 0);
+        assert!(plan.threads() >= 1);
+    }
+
+    #[test]
+    fn scratch_reuse_across_batches_and_thread_counts_stays_exact() {
+        let mlp = QuantMlp::random_for_study(13);
+        let plan = MlpPlan::compile(&mlp, 2);
+        let model = MultiplierModel::new(MultiplierKind::Dnc);
+        let mut scratch = PlanScratch::default();
+        for round in 0..3 {
+            let batch = 1 + round * 2; // exercises chunking 1, 3, 5
+            let xs: Vec<f32> = (0..batch * 16).map(|i| (i % 10) as f32 / 10.0).collect();
+            let got = plan.forward_batch_with(&xs, batch, &model, &mut scratch);
+            for b in 0..batch {
+                let want = mlp.forward(&xs[b * 16..(b + 1) * 16], &model);
+                assert_eq!(&got[b * 8..(b + 1) * 8], &want[..], "round {round} row {b}");
+            }
+        }
+    }
+}

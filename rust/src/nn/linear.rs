@@ -38,9 +38,11 @@ impl QuantLinear {
         x_max_abs: f32,
         relu: bool,
     ) -> Self {
+        assert!(!w.is_empty(), "QuantLinear::from_float: weight matrix has no rows (out_dim = 0)");
         let out_dim = w.len();
         let in_dim = w[0].len();
-        assert!(w.iter().all(|r| r.len() == in_dim));
+        assert!(in_dim > 0, "QuantLinear::from_float: weight rows are empty (in_dim = 0)");
+        assert!(w.iter().all(|r| r.len() == in_dim), "weight rows must all have length {in_dim}");
         assert_eq!(bias.len(), out_dim);
         let w_max = w.iter().flatten().fold(0.0f32, |m, &v| m.max(v.abs()));
         let w_quant = Quantizer::for_weights(w_max);
@@ -105,6 +107,12 @@ impl QuantLinear {
     /// coordinator charges to LUNA units).
     pub fn macs(&self) -> u64 {
         (self.in_dim * self.out_dim) as u64
+    }
+
+    /// Compile this layer's static weight codes into the planned-kernel
+    /// representation (see [`super::LayerPlan`]).
+    pub fn plan(&self) -> super::LayerPlan {
+        super::LayerPlan::compile(self)
     }
 
     /// Batched LUT-GEMM over pre-quantized activations.
@@ -214,6 +222,18 @@ mod tests {
     fn wrong_input_width_panics() {
         let l = toy_layer();
         let _ = l.forward(&[1.0], &MultiplierModel::new(MultiplierKind::Ideal));
+    }
+
+    #[test]
+    #[should_panic(expected = "weight matrix has no rows")]
+    fn empty_weight_matrix_panics_with_context() {
+        let _ = QuantLinear::from_float(&[], vec![], 1.0, false);
+    }
+
+    #[test]
+    #[should_panic(expected = "weight rows are empty")]
+    fn empty_weight_rows_panic_with_context() {
+        let _ = QuantLinear::from_float(&[vec![], vec![]], vec![0.0, 0.0], 1.0, false);
     }
 
     #[test]

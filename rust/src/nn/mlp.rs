@@ -46,6 +46,16 @@ impl QuantMlp {
         self.layers.iter().map(|l| l.macs()).sum()
     }
 
+    /// Compile the planned LUT-GEMM kernel for this model: code-sorted
+    /// weight plans per layer plus batch tiling across up to `threads`
+    /// GEMM threads (`0` = one per available core). The execution
+    /// backends build this once at construction; it is bit-exact with
+    /// [`QuantMlp::forward`] for every thread count (see
+    /// [`super::MlpPlan`]).
+    pub fn plan(&self, threads: usize) -> super::MlpPlan {
+        super::MlpPlan::compile(self, threads)
+    }
+
     /// Forward pass under the given multiplier configuration.
     pub fn forward(&self, x: &[f32], model: &MultiplierModel) -> Vec<f32> {
         let mut h = x.to_vec();

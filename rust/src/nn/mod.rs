@@ -11,17 +11,24 @@
 //!   integration tests against the AOT artifacts); both per-sample
 //!   ([`QuantMlp::forward`]) and batched flat-gather LUT-GEMM
 //!   ([`QuantMlp::forward_batch`], bit-exact with the former) paths;
+//! * [`LayerPlan`] / [`MlpPlan`] — the *planned* LUT-GEMM kernel the
+//!   execution backends run: weights compiled once into code-sorted
+//!   column buckets, the product table expanded into a per-input-row LUT
+//!   strip, and batch rows tiled across scoped threads — bit-exact with
+//!   the paths above for every thread count;
 //! * [`DigitsDataset`] — the synthetic 8×8 digits workload used by the
 //!   examples and the end-to-end serving driver.
 //!
 //! [`MultiplierModel`]: crate::multiplier::MultiplierModel
 
 mod dataset;
+mod gemm;
 mod linear;
 mod mlp;
 mod quant;
 
 pub use dataset::{DigitsDataset, Sample};
+pub use gemm::{resolve_threads, LayerPlan, MlpPlan, PlanScratch};
 pub use linear::QuantLinear;
 pub use mlp::{BatchScratch, QuantMlp};
 pub use quant::Quantizer;

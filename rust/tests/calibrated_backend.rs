@@ -96,10 +96,15 @@ fn calibrated_replies_are_bit_exact_with_native_and_match_offline_replay() {
     assert_eq!(snap.sim_stationary_hits, DIGITS_ELEMS * n as u64);
     assert!(snap.stationary_hit_rate() > 0.8);
     assert!(snap.sim_p50_latency_ns > 0 && snap.sim_p99_latency_ns >= snap.sim_p50_latency_ns);
+    // host-side compute time recorded for every served batch (clamped
+    // to the 1 µs histogram floor), alongside the simulated latency
+    assert!(snap.host_gemm_p50_us >= 1, "host GEMM time must be recorded");
+    assert!(snap.host_gemm_p99_us >= snap.host_gemm_p50_us);
     let report = snap.render();
     assert!(report.contains("sim energy"), "{report}");
     assert!(report.contains("sim latency p50"), "{report}");
     assert!(report.contains("hit-rate"), "{report}");
+    assert!(report.contains("host gemm mean"), "{report}");
     server.shutdown();
 }
 

@@ -1,0 +1,149 @@
+//! Seeded property suite for the planned LUT-GEMM kernel.
+//!
+//! The planned kernel (code-sorted weight plans + per-row LUT-strip
+//! expansion + scoped-thread batch tiling, `src/nn/gemm.rs`) must be
+//! **bit-exact** with both the per-sample `QuantMlp::forward` and the
+//! old flat-gather batched path, for every `MultiplierKind`, every
+//! tested thread count, and arbitrary shapes — including degenerate
+//! `1×N` / `N×1` layers and empty/odd/large batches.
+
+use luna_cim::engine::{BackendSpec, ExecBackend};
+use luna_cim::multiplier::{MultiplierKind, MultiplierModel};
+use luna_cim::nn::{BatchScratch, PlanScratch, QuantLinear, QuantMlp};
+use luna_cim::util::Rng;
+
+/// Random MLP with the given layer dims; ReLU everywhere but the last.
+fn random_mlp(rng: &mut Rng, dims: &[usize]) -> QuantMlp {
+    assert!(dims.len() >= 2);
+    let layers: Vec<QuantLinear> = dims
+        .windows(2)
+        .enumerate()
+        .map(|(i, d)| {
+            let (in_dim, out_dim) = (d[0], d[1]);
+            let w: Vec<Vec<f32>> = (0..out_dim)
+                .map(|_| (0..in_dim).map(|_| rng.gen_range_f32(-0.6, 0.6)).collect())
+                .collect();
+            let b: Vec<f32> = (0..out_dim).map(|_| rng.gen_range_f32(-0.2, 0.2)).collect();
+            // generous x_max keeps deeper activations in quantizer range
+            QuantLinear::from_float(&w, b, 1.0 + 2.0 * i as f32, i + 2 < dims.len())
+        })
+        .collect();
+    QuantMlp::new(layers)
+}
+
+/// The shape matrix of the suite: degenerate single-row/column layers,
+/// a paper-shaped model, a 3-layer chain and an odd in-between.
+const DIMS: [&[usize]; 6] = [&[1, 7], &[9, 1], &[1, 1], &[5, 4, 3], &[64, 32, 10], &[33, 17]];
+
+const BATCHES: [usize; 4] = [0, 1, 7, 65];
+
+const THREADS: [usize; 3] = [1, 2, 0]; // 0 = available_parallelism
+
+#[test]
+fn planned_kernel_is_bit_exact_with_forward_and_flat_gather() {
+    let mut rng = Rng::seed_from_u64(0xC1A0);
+    for dims in DIMS {
+        let mlp = random_mlp(&mut rng, dims);
+        let in_dim = mlp.input_dim();
+        let out_dim = mlp.output_dim();
+        let mut flat_scratch = BatchScratch::default();
+        for &batch in &BATCHES {
+            let xs: Vec<f32> =
+                (0..batch * in_dim).map(|_| rng.gen_range_f32(0.0, 1.0)).collect();
+            for kind in MultiplierKind::ALL {
+                let model = MultiplierModel::new(kind);
+                // reference 1: the old flat-gather batched kernel
+                let flat = mlp.forward_batch_with(&xs, batch, &model, &mut flat_scratch);
+                for &threads in &THREADS {
+                    let plan = mlp.plan(threads);
+                    let mut scratch = PlanScratch::default();
+                    let got = plan.forward_batch_with(&xs, batch, &model, &mut scratch);
+                    assert_eq!(
+                        got, flat,
+                        "planned != flat: dims {dims:?} batch {batch} {kind} t{threads}"
+                    );
+                    // reference 2: the per-sample forward, row by row
+                    for b in 0..batch {
+                        let want = mlp.forward(&xs[b * in_dim..(b + 1) * in_dim], &model);
+                        assert_eq!(
+                            &got[b * out_dim..(b + 1) * out_dim],
+                            &want[..],
+                            "planned != forward: dims {dims:?} {kind} t{threads} row {b}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn plan_scratch_reuse_is_stable_across_varying_batches() {
+    // One plan + one scratch driven through growing and shrinking
+    // batches — the slot/strip buffers must not leak state between runs.
+    let mut rng = Rng::seed_from_u64(77);
+    let mlp = random_mlp(&mut rng, &[12, 9, 4]);
+    let model = MultiplierModel::new(MultiplierKind::Approx2);
+    let plan = mlp.plan(3);
+    let mut scratch = PlanScratch::default();
+    for &batch in &[5usize, 1, 8, 2, 0, 6] {
+        let xs: Vec<f32> = (0..batch * 12).map(|_| rng.gen_range_f32(0.0, 1.0)).collect();
+        let got = plan.forward_batch_with(&xs, batch, &model, &mut scratch);
+        for b in 0..batch {
+            let want = mlp.forward(&xs[b * 12..(b + 1) * 12], &model);
+            assert_eq!(&got[b * 4..(b + 1) * 4], &want[..], "batch {batch} row {b}");
+        }
+    }
+}
+
+#[test]
+fn native_backend_is_bit_exact_for_all_thread_counts() {
+    // Same property through the serving-stack entry point: the spec's
+    // threads knob must never change the numerics.
+    let mut rng = Rng::seed_from_u64(4242);
+    let mlp = random_mlp(&mut rng, &[16, 11, 6]);
+    let batch = 9;
+    let xs: Vec<f32> = (0..batch * 16).map(|_| rng.gen_range_f32(0.0, 1.0)).collect();
+    for kind in [MultiplierKind::Ideal, MultiplierKind::Approx, MultiplierKind::DncOpt] {
+        let model = MultiplierModel::new(kind);
+        for threads in THREADS {
+            let spec = BackendSpec::Native { mlp: mlp.clone(), kind, threads };
+            let mut backend = spec.build().unwrap();
+            let out = backend.run_batch(&xs, batch, 16).unwrap();
+            for b in 0..batch {
+                let want = mlp.forward(&xs[b * 16..(b + 1) * 16], &model);
+                assert_eq!(
+                    &out.outputs[0][b * 6..(b + 1) * 6],
+                    &want[..],
+                    "{kind} threads {threads} row {b}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn thread_cap_exceeding_batch_is_harmless() {
+    let mut rng = Rng::seed_from_u64(9);
+    let mlp = random_mlp(&mut rng, &[6, 5]);
+    let model = MultiplierModel::new(MultiplierKind::Dnc);
+    let plan = mlp.plan(64); // far more threads than rows
+    let xs: Vec<f32> = (0..3 * 6).map(|_| rng.gen_range_f32(0.0, 1.0)).collect();
+    let got = plan.forward_batch(&xs, 3, &model);
+    for b in 0..3 {
+        let want = mlp.forward(&xs[b * 6..(b + 1) * 6], &model);
+        assert_eq!(&got[b * 5..(b + 1) * 5], &want[..], "row {b}");
+    }
+}
+
+#[test]
+fn degenerate_single_mac_layer_plans_and_runs() {
+    // 1×1: one weight code, one bucket occupied, fifteen empty.
+    let l = QuantLinear::from_float(&[vec![0.4]], vec![0.1], 1.0, false);
+    let mlp = QuantMlp::new(vec![l]);
+    let plan = mlp.plan(2);
+    let model = MultiplierModel::new(MultiplierKind::Traditional);
+    let got = plan.forward_batch(&[0.7, 0.2], 2, &model);
+    assert_eq!(got[0..1], mlp.forward(&[0.7], &model)[..]);
+    assert_eq!(got[1..2], mlp.forward(&[0.2], &model)[..]);
+}

@@ -43,7 +43,7 @@ fn batched_native_gemm_is_bit_exact_for_every_kind() {
 #[test]
 fn native_backend_through_spec_matches_forward_batch() {
     let mlp = QuantMlp::random_digits(31);
-    let spec = BackendSpec::Native { mlp: mlp.clone(), kind: MultiplierKind::Approx };
+    let spec = BackendSpec::Native { mlp: mlp.clone(), kind: MultiplierKind::Approx, threads: 2 };
     let mut backend = spec.build().unwrap();
     let model = MultiplierModel::new(MultiplierKind::Approx);
     let xs = vec![0.5f32; 3 * 64];
