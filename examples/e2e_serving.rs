@@ -15,7 +15,10 @@
 //! For every multiplier variant it serves the exported digits test set
 //! through the batching coordinator under concurrent client load and
 //! reports accuracy, latency percentiles, throughput, batch occupancy
-//! and the simulated CiM energy (programming + MACs).
+//! and the simulated CiM energy (programming + MACs). A final pass
+//! re-serves the test set over the **wire protocol** (loopback TCP
+//! front-end, see `net` in the crate docs) and checks the responses
+//! stay bit-identical with direct in-process submission.
 //!
 //! Run: `make artifacts && cargo run --release --example e2e_serving`
 //! (the native backend needs only manifest/weights/testset from the
@@ -24,6 +27,7 @@
 use luna_cim::config::{BackendKind, Config};
 use luna_cim::coordinator::CoordinatorServer;
 use luna_cim::multiplier::MultiplierKind;
+use luna_cim::net::{Frame, NetClient, NetServer};
 use luna_cim::runtime::ArtifactStore;
 use std::time::Instant;
 
@@ -127,6 +131,38 @@ fn main() -> luna_cim::Result<()> {
         }
         server.shutdown();
     }
+
+    // Wire-protocol pass: the same coordinator behind the TCP
+    // front-end — loopback-served responses must be bit-identical with
+    // the direct in-process path.
+    let mut cfg = Config::default();
+    cfg.backend = backend;
+    cfg.timing.time_scale = time_scale;
+    let (server, handle) = CoordinatorServer::start(cfg.clone())?;
+    let net = NetServer::bind(handle.clone(), "127.0.0.1:0", cfg.net.max_connections)?;
+    let mut client = NetClient::connect(net.local_addr())?;
+    let n = testset.len().min(64);
+    let mut identical = 0usize;
+    for s in testset.samples.iter().take(n) {
+        match client.infer(&s.pixels)? {
+            Frame::Response { label, logits, .. } => {
+                let direct = handle.submit(s.pixels.clone())?;
+                if direct.label == label as usize && direct.logits == logits {
+                    identical += 1;
+                }
+            }
+            other => anyhow::bail!("unexpected wire reply {other:?}"),
+        }
+    }
+    println!(
+        "\nwire protocol ({} on {}): {identical}/{n} loopback responses \
+         bit-identical with direct submit",
+        client.info().backend,
+        net.local_addr()
+    );
+    anyhow::ensure!(identical == n, "wire/direct divergence: only {identical}/{n} bit-identical");
+    net.shutdown();
+    server.shutdown();
 
     println!(
         "\nnotes:\n\

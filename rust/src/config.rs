@@ -73,6 +73,8 @@ pub struct Config {
     pub banks: BankConfig,
     pub timing: TimingConfig,
     pub gemm: GemmConfig,
+    pub net: NetConfig,
+    pub loadgen: LoadgenConfig,
 }
 
 /// Dynamic batching policy.
@@ -117,6 +119,33 @@ pub struct GemmConfig {
     pub threads: usize,
 }
 
+/// Wire-protocol front-end knobs (see [`crate::net`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NetConfig {
+    /// TCP listen address for the wire-protocol front-end, e.g.
+    /// `127.0.0.1:7077` (port `0` = OS-assigned). Empty (the default) =
+    /// no network surface; `repro serve --listen ADDR` overrides.
+    pub listen: String,
+    /// Accepted-connection cap: further connects are turned away with a
+    /// `Rejected` frame before any request is read.
+    pub max_connections: usize,
+}
+
+/// `repro loadgen` defaults (every knob also has a CLI flag).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LoadgenConfig {
+    /// Concurrent client connections the generator drives.
+    pub connections: usize,
+    /// Requests per (scenario, offered-load) case, split across the
+    /// connections.
+    pub requests_per_level: usize,
+    /// Offered-load sweep for the open-loop scenarios (requests/s; the
+    /// ≥ 3 levels make the saturation curve of `BENCH_serve.json`).
+    pub loads: Vec<usize>,
+    /// Burst size for the bursty arrival process.
+    pub burst: usize,
+}
+
 /// Simulated-timing knobs for `backend calibrated`.
 #[derive(Debug, Clone, PartialEq, Default)]
 pub struct TimingConfig {
@@ -140,6 +169,25 @@ impl Default for Config {
             banks: BankConfig::default(),
             timing: TimingConfig::default(),
             gemm: GemmConfig::default(),
+            net: NetConfig::default(),
+            loadgen: LoadgenConfig::default(),
+        }
+    }
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig { listen: String::new(), max_connections: 64 }
+    }
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        LoadgenConfig {
+            connections: 4,
+            requests_per_level: 2000,
+            loads: vec![500, 2000, 8000],
+            burst: 32,
         }
     }
 }
@@ -181,6 +229,12 @@ const KNOWN_KEYS: &[&str] = &[
     "banks.units_per_bank",
     "timing.time_scale",
     "gemm.threads",
+    "net.listen",
+    "net.max_connections",
+    "loadgen.connections",
+    "loadgen.requests_per_level",
+    "loadgen.loads",
+    "loadgen.burst",
 ];
 
 impl Config {
@@ -228,6 +282,24 @@ impl Config {
         if m.get_opt("gemm.threads").is_some() {
             cfg.gemm.threads = m.get_usize("gemm.threads")?;
         }
+        if let Some(v) = m.get_opt("net.listen") {
+            cfg.net.listen = v.to_string();
+        }
+        if m.get_opt("net.max_connections").is_some() {
+            cfg.net.max_connections = m.get_usize("net.max_connections")?;
+        }
+        if m.get_opt("loadgen.connections").is_some() {
+            cfg.loadgen.connections = m.get_usize("loadgen.connections")?;
+        }
+        if m.get_opt("loadgen.requests_per_level").is_some() {
+            cfg.loadgen.requests_per_level = m.get_usize("loadgen.requests_per_level")?;
+        }
+        if m.get_opt("loadgen.loads").is_some() {
+            cfg.loadgen.loads = m.get_usize_list("loadgen.loads")?;
+        }
+        if m.get_opt("loadgen.burst").is_some() {
+            cfg.loadgen.burst = m.get_usize("loadgen.burst")?;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -253,6 +325,17 @@ impl Config {
         m.set("banks.units_per_bank", self.banks.units_per_bank);
         m.set("timing.time_scale", self.timing.time_scale);
         m.set("gemm.threads", self.gemm.threads);
+        // the kv format has no empty values; empty listen = disabled,
+        // so the key is simply absent (the parser defaults it back)
+        if !self.net.listen.is_empty() {
+            m.set("net.listen", &self.net.listen);
+        }
+        m.set("net.max_connections", self.net.max_connections);
+        m.set("loadgen.connections", self.loadgen.connections);
+        m.set("loadgen.requests_per_level", self.loadgen.requests_per_level);
+        let loads: Vec<String> = self.loadgen.loads.iter().map(|v| v.to_string()).collect();
+        m.set("loadgen.loads", loads.join(","));
+        m.set("loadgen.burst", self.loadgen.burst);
         m.render()
     }
 
@@ -276,6 +359,17 @@ impl Config {
         // 0 = auto (available_parallelism); anything above this is surely
         // a typo, not a machine.
         anyhow::ensure!(self.gemm.threads <= 1024, "gemm.threads must be <= 1024 (0 = auto)");
+        anyhow::ensure!(self.net.max_connections >= 1, "net.max_connections must be >= 1");
+        anyhow::ensure!(self.loadgen.connections >= 1, "loadgen.connections must be >= 1");
+        anyhow::ensure!(
+            self.loadgen.requests_per_level >= 1,
+            "loadgen.requests_per_level must be >= 1"
+        );
+        anyhow::ensure!(
+            !self.loadgen.loads.is_empty() && self.loadgen.loads.iter().all(|&r| r >= 1),
+            "loadgen.loads needs at least one level, each >= 1 req/s"
+        );
+        anyhow::ensure!(self.loadgen.burst >= 1, "loadgen.burst must be >= 1");
         Ok(())
     }
 }
@@ -357,6 +451,39 @@ mod tests {
         assert_eq!(Config::default().gemm.threads, 1);
         assert!(Config::from_text("gemm.threads 100000\n").is_err());
         assert!(Config::from_text("gemm.threads nope\n").is_err());
+    }
+
+    #[test]
+    fn net_keys_parse_roundtrip_and_validate() {
+        let cfg = Config::from_text("net.listen 127.0.0.1:7077\nnet.max_connections 8\n").unwrap();
+        assert_eq!(cfg.net.listen, "127.0.0.1:7077");
+        assert_eq!(cfg.net.max_connections, 8);
+        let back = Config::from_text(&cfg.to_text()).unwrap();
+        assert_eq!(back, cfg);
+        // empty listen (disabled) survives the roundtrip via key absence
+        let off = Config::default();
+        assert!(off.net.listen.is_empty());
+        assert!(!off.to_text().contains("net.listen"));
+        assert_eq!(Config::from_text(&off.to_text()).unwrap(), off);
+        assert!(Config::from_text("net.max_connections 0\n").is_err());
+    }
+
+    #[test]
+    fn loadgen_keys_parse_roundtrip_and_validate() {
+        let text = "loadgen.connections 2\nloadgen.requests_per_level 100\n\
+                    loadgen.loads 100,400,1600\nloadgen.burst 16\n";
+        let cfg = Config::from_text(text).unwrap();
+        assert_eq!(cfg.loadgen.connections, 2);
+        assert_eq!(cfg.loadgen.requests_per_level, 100);
+        assert_eq!(cfg.loadgen.loads, vec![100, 400, 1600]);
+        assert_eq!(cfg.loadgen.burst, 16);
+        let back = Config::from_text(&cfg.to_text()).unwrap();
+        assert_eq!(back, cfg);
+        // the default sweep has the >= 3 levels the serve bench needs
+        assert!(Config::default().loadgen.loads.len() >= 3);
+        assert!(Config::from_text("loadgen.loads 100,0\n").is_err());
+        assert!(Config::from_text("loadgen.burst 0\n").is_err());
+        assert!(Config::from_text("loadgen.connections 0\n").is_err());
     }
 
     #[test]

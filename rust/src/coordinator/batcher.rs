@@ -119,6 +119,23 @@ impl Batcher {
             .map(|r| (r.enqueued_at + self.max_wait).saturating_duration_since(now))
     }
 
+    /// Admission hint for a rejected request: an estimate (µs, always
+    /// ≥ 1) of when capacity frees. `backlog` is how many requests sit
+    /// ahead of the retrier — the pending queue when the batcher itself
+    /// rejected, or the server's total outstanding count when admission
+    /// failed above the batcher. The estimate assumes the backlog drains
+    /// in `max_batch`-sized flushes one `max_wait` apart, starting at
+    /// the oldest pending request's deadline (or a full `max_wait` when
+    /// nothing is queued and the backlog is all in flight). It is a
+    /// *hint*, not a promise: actual service time depends on worker
+    /// speed and any simulated-latency gate.
+    pub fn retry_after_us(&self, now: Instant, backlog: usize) -> u64 {
+        let until_flush = self.next_deadline_in(now).unwrap_or(self.max_wait);
+        let flushes_ahead = backlog.div_ceil(self.max_batch).max(1) as u32;
+        let wait = until_flush + self.max_wait * (flushes_ahead - 1);
+        (wait.as_micros() as u64).max(1)
+    }
+
     fn form_batch(&mut self) -> Batch {
         let n = self.queue.len().min(self.max_batch);
         let requests: Vec<InferenceRequest> = self.queue.drain(..n).collect();
@@ -183,6 +200,33 @@ mod tests {
         assert_eq!(batch.requests.len(), 4);
         assert_eq!(batch.padded_to, 8);
         assert!(b.push(req(100)).unwrap().is_none());
+    }
+
+    #[test]
+    fn retry_hint_tracks_flush_deadline_and_backlog() {
+        let max_wait = Duration::from_millis(10);
+        let mut b = Batcher::new(4, max_wait, 8);
+        let t0 = Instant::now();
+        b.queue.push_back(InferenceRequest { id: 0, pixels: vec![0.0; 4], enqueued_at: t0 });
+        // one pending request: the hint is the remaining deadline budget
+        let hint = b.retry_after_us(t0, 1);
+        assert!(hint >= 9_000 && hint <= 10_000, "hint {hint}");
+        // two max_batch-fulls of backlog: one extra max_wait of drain time
+        let deep = b.retry_after_us(t0, 8);
+        assert!(deep >= hint + 9_000, "deep {deep} vs {hint}");
+        // past the deadline the hint saturates at the 1 µs floor, never 0
+        assert_eq!(b.retry_after_us(t0 + Duration::from_secs(1), 1), 1);
+    }
+
+    #[test]
+    fn retry_hint_without_pending_queue_uses_max_wait() {
+        // all backlog in flight at the workers (nothing queued): the hint
+        // falls back to one max_wait heartbeat per max_batch of backlog
+        let b = Batcher::new(8, Duration::from_millis(5), 16);
+        let now = Instant::now();
+        let hint = b.retry_after_us(now, 16);
+        assert_eq!(hint, 10_000, "2 flushes x 5 ms");
+        assert!(b.retry_after_us(now, 1) >= 1);
     }
 
     #[test]

@@ -78,7 +78,14 @@ pub struct Metrics {
     requests: AtomicU64,
     batches: AtomicU64,
     padded_slots: AtomicU64,
+    /// Requests that passed admission (accepted into the batcher; they
+    /// may still fail later — `requests` counts only *served* ones).
+    accepted: AtomicU64,
     rejected: AtomicU64,
+    /// Rejections that carried a structured `retry_after_us` hint
+    /// (admission-control rejections do; a connection-limit turn-away
+    /// at the TCP front-end has no batcher state to derive one from).
+    retry_hints: AtomicU64,
     failed_batches: AtomicU64,
     failed_requests: AtomicU64,
     /// Simulated CiM energy total, in femtojoules (stored as fJ integer).
@@ -101,8 +108,20 @@ impl Metrics {
         self.padded_slots.fetch_add((padded_to - batch_size) as u64, Ordering::Relaxed);
     }
 
-    pub fn record_rejection(&self) {
+    /// A request passed admission control.
+    pub fn record_admission(&self) {
+        self.accepted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A request was rejected at admission. `retry_after_us > 0` means a
+    /// structured retry hint was issued with the rejection (429-style);
+    /// `0` records a hint-less turn-away (e.g. the TCP front-end's
+    /// connection cap).
+    pub fn record_rejection(&self, retry_after_us: u64) {
         self.rejected.fetch_add(1, Ordering::Relaxed);
+        if retry_after_us > 0 {
+            self.retry_hints.fetch_add(1, Ordering::Relaxed);
+        }
     }
 
     /// A dispatched batch failed (worker error or dropped reply); its
@@ -140,7 +159,9 @@ impl Metrics {
             requests,
             batches: self.batches.load(Ordering::Relaxed),
             padded_slots: self.padded_slots.load(Ordering::Relaxed),
+            accepted: self.accepted.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
+            retry_hints: self.retry_hints.load(Ordering::Relaxed),
             failed_batches: self.failed_batches.load(Ordering::Relaxed),
             failed_requests: self.failed_requests.load(Ordering::Relaxed),
             mean_latency_us: self.latency.mean_us(),
@@ -166,7 +187,11 @@ pub struct MetricsSnapshot {
     pub requests: u64,
     pub batches: u64,
     pub padded_slots: u64,
+    /// Requests admitted by admission control (`requests` counts served).
+    pub accepted: u64,
     pub rejected: u64,
+    /// Rejections that carried a `retry_after_us` hint.
+    pub retry_hints: u64,
     pub failed_batches: u64,
     pub failed_requests: u64,
     pub mean_latency_us: f64,
@@ -212,6 +237,17 @@ impl MetricsSnapshot {
         }
     }
 
+    /// Fraction of admission decisions that rejected (0.0 before any
+    /// decision) — the serving-level overload signal next to latency.
+    pub fn reject_rate(&self) -> f64 {
+        let decisions = self.accepted + self.rejected;
+        if decisions == 0 {
+            0.0
+        } else {
+            self.rejected as f64 / decisions as f64
+        }
+    }
+
     /// Simulated CiM energy per served request (fJ).
     pub fn sim_energy_per_request_fj(&self) -> f64 {
         if self.requests == 0 {
@@ -224,8 +260,9 @@ impl MetricsSnapshot {
     /// Multi-line human-readable report (the serve CLI prints this).
     pub fn render(&self) -> String {
         format!(
-            "requests {} | batches {} (occupancy {:.2}) | rejected {} | \
+            "requests {} | batches {} (occupancy {:.2}) | \
              failed batches {} ({} requests)\n\
+             admission accepted {} rejected {} (hints {}) | reject rate {:.3}\n\
              latency mean {:.0} us p50 {} us p99 {} us max {} us | \
              throughput {:.0} req/s\n\
              host gemm mean {:.0} us p50 {} us p99 {} us\n\
@@ -235,9 +272,12 @@ impl MetricsSnapshot {
             self.requests,
             self.batches,
             self.batch_occupancy(),
-            self.rejected,
             self.failed_batches,
             self.failed_requests,
+            self.accepted,
+            self.rejected,
+            self.retry_hints,
+            self.reject_rate(),
             self.mean_latency_us,
             self.p50_latency_us,
             self.p99_latency_us,
@@ -295,6 +335,29 @@ mod tests {
         assert_eq!(snap.failed_requests, 11);
         let report = snap.render();
         assert!(report.contains("failed batches 2 (11 requests)"), "{report}");
+    }
+
+    #[test]
+    fn admission_counters_and_reject_rate_render() {
+        let m = Metrics::new();
+        for _ in 0..6 {
+            m.record_admission();
+        }
+        m.record_rejection(1500); // hinted 429
+        m.record_rejection(0); // hint-less turn-away (connection cap)
+        let snap = m.snapshot();
+        assert_eq!(snap.accepted, 6);
+        assert_eq!(snap.rejected, 2);
+        assert_eq!(snap.retry_hints, 1);
+        assert!((snap.reject_rate() - 2.0 / 8.0).abs() < 1e-12);
+        let report = snap.render();
+        assert!(report.contains("admission accepted 6 rejected 2 (hints 1)"), "{report}");
+        assert!(report.contains("reject rate 0.250"), "{report}");
+    }
+
+    #[test]
+    fn reject_rate_is_zero_without_decisions() {
+        assert_eq!(Metrics::new().snapshot().reject_rate(), 0.0);
     }
 
     #[test]

@@ -34,7 +34,7 @@ pub use batcher::{Batch, Batcher};
 pub use metrics::{LatencyHistogram, Metrics, MetricsSnapshot};
 pub use request::{InferenceRequest, InferenceResponse, RequestId};
 pub use router::Router;
-pub use server::{CoordinatorServer, ServerHandle};
+pub use server::{Backpressure, Completion, CoordinatorServer, ServerHandle};
 pub use state::BankState;
 pub use tiler::{LayerSchedule, ModelSchedule, ScheduleCost, Tiler, UnitCosts};
 pub use worker::{BatchJob, WorkerPool};

@@ -33,6 +33,11 @@ pub struct InferenceResponse {
     pub sim_energy_fj: f64,
     /// Simulated CiM latency for the MAC schedule (ps).
     pub sim_latency_ps: u64,
+    /// LUT (re)programming events of this request's batch schedule.
+    pub sim_programs: u64,
+    /// Programs avoided by weight-stationary reuse in this request's
+    /// batch schedule.
+    pub sim_stationary_hits: u64,
 }
 
 #[cfg(test)]

@@ -6,11 +6,17 @@
 //! responses back out.
 //!
 //! Concurrency model (std threads; no async runtime in this offline
-//! image): client threads block on a oneshot for their response; a
-//! background flusher thread enforces the batching deadline; a small
-//! **persistent completion pool** receives worker replies and fans them
-//! out (a thread-per-batch design measured ~25% slower at 4 workers —
-//! EXPERIMENTS.md §Perf).
+//! image): every admitted request registers a [`Completion`] callback —
+//! blocking callers ([`ServerHandle::submit`]) wrap a oneshot in one,
+//! the TCP front-end ([`crate::net`]) registers a frame writer via
+//! [`ServerHandle::submit_with`]; a background flusher thread enforces
+//! the batching deadline; a small **persistent completion pool**
+//! receives worker replies and fans them out (a thread-per-batch design
+//! measured ~25% slower at 4 workers — EXPERIMENTS.md §Perf).
+//!
+//! Admission control bounds *total outstanding* requests (pending +
+//! in-flight) at `batcher.queue_depth`; rejections carry a structured
+//! [`Backpressure`] retry hint.
 
 use super::batcher::{Batch, Batcher};
 use super::metrics::Metrics;
@@ -30,11 +36,49 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-type Waiter = oneshot::Sender<InferenceResponse>;
+/// 429-style admission rejection with a structured retry hint.
+///
+/// [`ServerHandle::submit`]/[`ServerHandle::submit_with`] return this
+/// (wrapped in `anyhow::Error`; recover it with
+/// `err.downcast_ref::<Backpressure>()`) instead of an opaque "queue
+/// full" failure, and the wire front-end maps it onto the protocol's
+/// `Rejected` frame. The hint comes from
+/// [`Batcher::retry_after_us`](super::Batcher::retry_after_us): queue
+/// depth, `max_batch` and the flush deadline — an estimate, not a
+/// reservation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Backpressure {
+    /// Suggested client backoff before retrying (µs, always ≥ 1).
+    pub retry_after_us: u64,
+}
+
+impl std::fmt::Display for Backpressure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "server at capacity — retry in {} us", self.retry_after_us)
+    }
+}
+
+impl std::error::Error for Backpressure {}
+
+/// Completion callback a submission registers: invoked exactly once,
+/// from a coordinator thread, with the response or the batch-failure
+/// reason. The blocking [`ServerHandle::submit`] wraps a oneshot in one
+/// of these; the TCP front-end registers a frame writer instead, so a
+/// network connection can keep thousands of requests in flight without
+/// a blocked thread each.
+pub type Completion = Box<dyn FnOnce(std::result::Result<InferenceResponse, String>) + Send>;
 
 struct Shared {
     batcher: Mutex<Batcher>,
-    waiters: Mutex<HashMap<RequestId, Waiter>>,
+    waiters: Mutex<HashMap<RequestId, Completion>>,
+    /// Admission bound: total outstanding requests (pending in the
+    /// batcher + dispatched but not yet completed) may not exceed
+    /// `batcher.queue_depth` — the waiters map *is* the outstanding set,
+    /// so its size under its own lock is the authoritative count.
+    max_outstanding: usize,
+    /// Lowered batch size, echoed in the wire protocol's `Info` frame.
+    max_batch: usize,
+    backend: BackendKind,
     /// Coordinator-side CiM pricing for backends that don't model cost
     /// themselves; `None` for `backend calibrated`, where each worker's
     /// own fabric replay prices the batch and the cost arrives on the
@@ -132,6 +176,9 @@ impl CoordinatorServer {
         let shared = Arc::new(Shared {
             batcher: Mutex::new(Batcher::from_config(&cfg.batcher)),
             waiters: Mutex::new(HashMap::new()),
+            max_outstanding: cfg.batcher.queue_depth,
+            max_batch: cfg.batcher.max_batch,
+            backend: cfg.backend,
             tiler,
             router: Router::new(pool),
             metrics: Arc::new(Metrics::new()),
@@ -217,28 +264,99 @@ impl CoordinatorServer {
 
 impl ServerHandle {
     /// Submit one image and block until the batched execution completes.
+    /// Admission failures surface as [`Backpressure`] (downcastable from
+    /// the returned error) carrying a `retry_after_us` hint.
     pub fn submit(&self, pixels: Vec<f32>) -> Result<InferenceResponse> {
+        let (tx, rx) = oneshot::channel();
+        self.submit_with(
+            pixels,
+            Box::new(move |result| {
+                let _ = tx.send(result);
+            }),
+        )?;
+        match rx.recv() {
+            Some(Ok(resp)) => Ok(resp),
+            Some(Err(why)) => Err(anyhow!("request failed: {why}")),
+            None => Err(anyhow!("request dropped")),
+        }
+    }
+
+    /// Admission-checked asynchronous submission: on success, `done` is
+    /// invoked exactly once — with the response, or with the failure
+    /// reason if the batch dies — from a coordinator thread. On
+    /// rejection `done` is dropped unused (never invoked) and a
+    /// [`Backpressure`] error comes back, so the caller replies 429
+    /// itself.
+    ///
+    /// Admission bounds total outstanding requests (pending +
+    /// in-flight) by `batcher.queue_depth` — the genuine overload
+    /// guard. The batcher's own pending bound is subsumed here (every
+    /// queued request holds a waiter, so the pending queue is always
+    /// strictly smaller than the outstanding set this gate caps).
+    pub fn submit_with(&self, pixels: Vec<f32>, done: Completion) -> Result<()> {
         ensure!(pixels.len() == self.shared.in_dim, "expected {} pixels", self.shared.in_dim);
         let id = self.shared.next_id.fetch_add(1, Ordering::Relaxed);
-        let (tx, rx) = oneshot::channel();
-        {
-            self.shared.waiters.lock().unwrap().insert(id, tx);
+        let outstanding = {
+            let mut waiters = self.shared.waiters.lock().unwrap();
+            if waiters.len() >= self.shared.max_outstanding {
+                Some(waiters.len())
+            } else {
+                waiters.insert(id, done);
+                None
+            }
+        };
+        if let Some(backlog) = outstanding {
+            let hint = {
+                let batcher = self.shared.batcher.lock().unwrap();
+                batcher.retry_after_us(std::time::Instant::now(), backlog)
+            };
+            self.shared.metrics.record_rejection(hint);
+            return Err(Backpressure { retry_after_us: hint }.into());
         }
         let maybe_batch = {
             let mut batcher = self.shared.batcher.lock().unwrap();
             match batcher.push(InferenceRequest::new(id, pixels)) {
                 Ok(b) => b,
+                // Unreachable by invariant (pending < outstanding <=
+                // queue_depth at every push — the gate above already
+                // rejected); kept as defense in depth since the batcher
+                // is also driven standalone, where `push` genuinely
+                // backpressures.
                 Err(_rejected) => {
+                    let hint =
+                        batcher.retry_after_us(std::time::Instant::now(), batcher.pending());
+                    drop(batcher);
                     self.shared.waiters.lock().unwrap().remove(&id);
-                    self.shared.metrics.record_rejection();
-                    return Err(anyhow!("queue full — backpressure"));
+                    self.shared.metrics.record_rejection(hint);
+                    return Err(Backpressure { retry_after_us: hint }.into());
                 }
             }
         };
+        self.shared.metrics.record_admission();
         if let Some(batch) = maybe_batch {
             dispatch_batch(&self.shared, batch);
         }
-        rx.recv().ok_or_else(|| anyhow!("request {id} dropped"))
+        Ok(())
+    }
+
+    /// Input dimension the model expects (pixels per request).
+    pub fn input_dim(&self) -> usize {
+        self.shared.in_dim
+    }
+
+    /// Output dimension (logits per response).
+    pub fn output_dim(&self) -> usize {
+        self.shared.out_dim
+    }
+
+    /// The lowered batch size requests are batched up to.
+    pub fn max_batch(&self) -> usize {
+        self.shared.max_batch
+    }
+
+    /// Stable identifier of the execution backend serving this handle.
+    pub fn backend_slug(&self) -> &'static str {
+        self.shared.backend.slug()
     }
 
     pub fn metrics(&self) -> Arc<Metrics> {
@@ -299,21 +417,30 @@ fn complete_batch(shared: &Arc<Shared>, job: CompletionJob) {
             let per_req_energy = cost.energy_fj / n as f64;
             let logits_all = &output.outputs[0];
             let out_dim = shared.out_dim;
-            let mut waiters = shared.waiters.lock().unwrap();
-            for (i, req) in batch.requests.iter().enumerate() {
+            // One lock acquisition for the whole batch; completions are
+            // invoked after release — they run arbitrary caller code
+            // (the wire front-end serializes a frame here), which must
+            // never happen under the waiters lock.
+            let completions: Vec<_> = {
+                let mut waiters = shared.waiters.lock().unwrap();
+                batch.requests.iter().map(|req| waiters.remove(&req.id)).collect()
+            };
+            for ((i, req), waiter) in batch.requests.iter().enumerate().zip(completions) {
                 let logits = logits_all[i * out_dim..(i + 1) * out_dim].to_vec();
                 let label = crate::nn::argmax(&logits);
                 let latency_us = req.enqueued_at.elapsed().as_micros() as u64;
                 shared.metrics.latency.record_us(latency_us);
-                if let Some(w) = waiters.remove(&req.id) {
-                    let _ = w.send(InferenceResponse {
+                if let Some(done) = waiter {
+                    done(Ok(InferenceResponse {
                         id: req.id,
                         logits,
                         label,
                         latency_us,
                         sim_energy_fj: per_req_energy,
                         sim_latency_ps: cost.latency_ps,
-                    });
+                        sim_programs: cost.programs,
+                        sim_stationary_hits: cost.stationary_hits,
+                    }));
                 }
             }
         }
@@ -323,11 +450,16 @@ fn complete_batch(shared: &Arc<Shared>, job: CompletionJob) {
 }
 
 fn fail_batch(shared: &Arc<Shared>, batch: &Batch, why: &str) {
-    // Drop the waiters; submit() surfaces this as "request dropped".
+    // Complete every waiter with the structured reason; the blocking
+    // submit() surfaces it as "request failed: <why>" and the wire
+    // front-end sends an Error frame.
     shared.metrics.record_batch_failure(batch.requests.len());
-    let mut waiters = shared.waiters.lock().unwrap();
-    for req in &batch.requests {
-        waiters.remove(&req.id);
+    let completions: Vec<_> = {
+        let mut waiters = shared.waiters.lock().unwrap();
+        batch.requests.iter().map(|req| waiters.remove(&req.id)).collect()
+    };
+    for done in completions.into_iter().flatten() {
+        done(Err(why.to_string()));
     }
     eprintln!("batch of {} failed: {why}", batch.requests.len());
 }

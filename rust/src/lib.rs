@@ -32,6 +32,11 @@
 //! * the **artifact store and PJRT runtime** that load the outputs of
 //!   `python/compile/aot.py` — see [`runtime`] (the PJRT client itself
 //!   is gated behind the `pjrt` cargo feature);
+//! * the **network layer** that turns the coordinator into an actual
+//!   service: a versioned binary wire protocol, a threaded TCP
+//!   front-end with 429-style admission rejections, the matching
+//!   client, and the `repro loadgen` traffic generator — see [`net`]
+//!   and the `## Wire protocol` section below;
 //! * [`report`] — text/CSV regenerators for every table and figure.
 //!
 //! Python (JAX + Pallas) runs only at build time (`make artifacts`); the
@@ -122,6 +127,60 @@
 //!   `1.0` would be real time (far below timer resolution here); values
 //!   around `1e4`–`1e6` stretch the schedule into the µs–ms range so
 //!   batching/queueing behaviour under CiM-speed serving is observable.
+//!   `repro loadgen` against a gated `repro serve --listen` endpoint is
+//!   the tool for the queueing-aware saturation studies: sweep offered
+//!   load and compare the measured p99 against the waves model.
+//!
+//! ## Wire protocol
+//!
+//! [`net::protocol`] implements the network framing (std-only; no
+//! serde/protobuf in this offline image). This section is normative.
+//!
+//! **Frame layout.** Every frame is an 8-byte header plus a bounded
+//! payload, all integers little-endian:
+//!
+//! ```text
+//! offset  size  field
+//! 0       2     magic "LC" (0x4C 0x43)
+//! 2       1     version (currently 1)
+//! 3       1     frame type
+//! 4       4     payload length, u32 LE (<= 1 MiB)
+//! 8       n     payload
+//! ```
+//!
+//! Frame types (client → server): `Hello` (0x05, empty payload — must
+//! be answerable before any model state is known, hence the fixed
+//! header carries the version) and `Request` (0x01: `id u64`, `count
+//! u32`, `count × f32` pixels; `id` is client-assigned and echoed on
+//! the reply). Server → client: `Info` (0x06: `in_dim u32, out_dim
+//! u32, max_batch u32, backend string` — the `Hello` answer),
+//! `Response` (0x02: `id u64, label u32, latency_us u64`, then the
+//! schedule-cost fields `energy_fj f64, latency_ps u64, programs u64,
+//! stationary_hits u64`, then `count u32, count × f32` logits),
+//! `Rejected` (0x03: `id u64, retry_after_us u64, reason string` — the
+//! 429: admission control turned the request away; retry after the
+//! hint) and `Error` (0x04: `id u64, reason string`). Strings are
+//! `len u32` + UTF-8, at most 1024 bytes. Replies arrive in
+//! *completion* order, not send order — clients match on `id`.
+//!
+//! **Versioning rules.** The version byte bumps on ANY layout change —
+//! field order, widths, semantics, new frame types included. There is
+//! no negotiation: a server reads only its own version and answers
+//! anything else with an `Error` frame naming the supported version,
+//! then closes. Unknown frame types *within* a known version are a
+//! protocol error (close), not an extension point; extensions get a
+//! version bump. A corrupt or truncated frame closes the connection —
+//! a length-prefixed stream has no safe resynchronization point — but
+//! never affects other connections or the coordinator itself
+//! (`rust/tests/net_serving.rs` pins this).
+//!
+//! **Admission control.** `batcher.queue_depth` bounds the server's
+//! total outstanding requests (pending + in-flight). Past it, `submit`
+//! fails with a [`coordinator::Backpressure`] carrying `retry_after_us`
+//! (derived from the flush deadline, queue depth and `max_batch` — see
+//! [`coordinator::Batcher::retry_after_us`]), which the front-end maps
+//! onto the `Rejected` frame. The metrics' `admission` line reports
+//! accepted / rejected / hints issued and the reject rate.
 
 pub mod analysis;
 pub mod cells;
@@ -131,6 +190,7 @@ pub mod engine;
 pub mod logic;
 pub mod luna;
 pub mod multiplier;
+pub mod net;
 pub mod nn;
 pub mod report;
 pub mod runtime;

@@ -8,13 +8,17 @@
 //! * `figures [--id N] [--csv]` — regenerate any figure (1–18);
 //! * `mul W Y`                  — one 4b×4b multiply, every configuration;
 //! * `simulate [...]`           — gate-level transient (Fig 14 style);
-//! * `serve [...]`              — run the batching coordinator under load;
+//! * `serve [...]`              — run the batching coordinator under load,
+//!   or expose it over TCP with `--listen` (the wire protocol);
+//! * `loadgen [...]`            — drive a wire-protocol endpoint with
+//!   closed/poisson/bursty traffic and emit `BENCH_serve.json`;
 //! * `eval [...]`               — offline accuracy/energy of every variant.
 
 use luna_cim::cells::tsmc65_library;
 use luna_cim::config::{BackendKind, Config};
 use luna_cim::coordinator::CoordinatorServer;
 use luna_cim::multiplier::{MultiplierKind, MultiplierModel};
+use luna_cim::net::{loadgen, NetServer, Scenario};
 use luna_cim::report;
 use luna_cim::runtime::ArtifactStore;
 use luna_cim::Result;
@@ -27,7 +31,8 @@ USAGE:
   repro figures  [--id N] [--csv]
   repro mul <W> <Y>
   repro simulate [--multiplier SLUG] [--weight W] [--inputs a,b,c]
-  repro serve    [--config FILE] [--requests N] [--clients N] [--multiplier SLUG] [--backend native|calibrated|pjrt] [--time-scale X] [--gemm-threads N]
+  repro serve    [--config FILE] [--requests N] [--clients N] [--multiplier SLUG] [--backend native|calibrated|pjrt] [--time-scale X] [--gemm-threads N] [--listen ADDR]
+  repro loadgen  [--addr HOST:PORT | --synthetic] [--config FILE] [--scenario closed|poisson|bursty|all] [--loads R1,R2,..] [--connections N] [--requests N] [--burst N] [--backend SLUG] [--time-scale X] [--seed N] [--quick] [--save-json [PATH]]
   repro eval     [--artifacts DIR]
   repro ablation [--artifacts DIR]
   repro export   [--out DIR]
@@ -39,6 +44,13 @@ Backends: native (in-process batched LUT-GEMM, default),
           pjrt (AOT HLO; needs the `pjrt` build feature)
 --gemm-threads: in-batch planned-GEMM threads per worker (native/calibrated;
                 0 = one per core, default 1 — workers already scale across batches)
+--listen: expose the coordinator over TCP (wire protocol) instead of running
+          the in-process synthetic load; serves until killed
+loadgen:  drives a wire endpoint with closed-loop, open-loop poisson and bursty
+          arrivals, sweeping --loads (req/s) and reporting throughput, wall
+          p50/p99, sim p50/p99 and reject rate per level; with no --addr it
+          spawns its own loopback server (--synthetic = synthesized artifacts,
+          no `make artifacts` needed); --save-json writes BENCH_serve.json
 ";
 
 /// Minimal flag parser: `--key value` pairs plus positional args.
@@ -109,6 +121,7 @@ fn run(argv: &[String]) -> Result<()> {
         "mul" => cmd_mul(&args),
         "simulate" => cmd_simulate(&args),
         "serve" => cmd_serve(&args),
+        "loadgen" => cmd_loadgen(&args),
         "eval" => cmd_eval(&args),
         "ablation" => cmd_ablation(&args),
         "export" => cmd_export(&args),
@@ -209,10 +222,43 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     cfg.timing.time_scale = args.flag_parse("time-scale", cfg.timing.time_scale)?;
     cfg.gemm.threads = args.flag_parse("gemm-threads", cfg.gemm.threads)?;
+    if let Some(listen) = args.flag("listen") {
+        cfg.net.listen = listen.to_string();
+    }
     cfg.validate()?;
+    if !cfg.net.listen.is_empty() {
+        return serve_listen(cfg);
+    }
     let requests: usize = args.flag_parse("requests", 256)?;
     let clients: usize = args.flag_parse("clients", 16)?;
     serve_load(cfg, requests, clients)
+}
+
+/// Expose the coordinator over the wire protocol and serve until killed,
+/// printing a metrics snapshot whenever traffic has flowed.
+fn serve_listen(cfg: Config) -> Result<()> {
+    let (server, handle) = CoordinatorServer::start(cfg.clone())?;
+    let net = NetServer::bind(handle, &cfg.net.listen, cfg.net.max_connections)?;
+    println!(
+        "listening on {} | backend {} | {} workers | batch {} | {} connection slots",
+        net.local_addr(),
+        cfg.backend.slug(),
+        cfg.workers.count,
+        cfg.batcher.max_batch,
+        cfg.net.max_connections
+    );
+    println!("serving until killed (drive it with `repro loadgen --addr {}`)", net.local_addr());
+    let metrics = server.metrics();
+    let mut seen = 0u64;
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(10));
+        let snap = metrics.snapshot();
+        let decisions = snap.accepted + snap.rejected;
+        if decisions != seen {
+            seen = decisions;
+            print!("{}", snap.render());
+        }
+    }
 }
 
 /// Drive the coordinator with a synthetic client load and print metrics.
@@ -272,6 +318,105 @@ fn serve_load(cfg: Config, requests: usize, clients: usize) -> Result<()> {
     print!("{}", snap.render());
     server.shutdown();
     Ok(())
+}
+
+/// Drive a wire-protocol endpoint with scenario-diverse traffic. With
+/// no `--addr` it spawns its own loopback server first (from the
+/// config's artifacts, or fully self-contained with `--synthetic`).
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    let mut cfg = match args.flag("config") {
+        Some(path) => Config::from_file(path)?,
+        None => Config::default(),
+    };
+    if let Some(m) = args.multiplier("multiplier")? {
+        cfg.multiplier = m;
+    }
+    if let Some(b) = args.flag("backend") {
+        cfg.backend = BackendKind::from_arg(b)?;
+    }
+    cfg.timing.time_scale = args.flag_parse("time-scale", cfg.timing.time_scale)?;
+    if args.flag("quick").is_some() {
+        // CI smoke preset: small sweep, still >= 3 offered-load levels
+        cfg.loadgen.connections = 2;
+        cfg.loadgen.requests_per_level = 300;
+        cfg.loadgen.loads = vec![200, 800, 3200];
+        cfg.loadgen.burst = 16;
+    }
+    cfg.loadgen.connections = args.flag_parse("connections", cfg.loadgen.connections)?;
+    cfg.loadgen.requests_per_level = args.flag_parse("requests", cfg.loadgen.requests_per_level)?;
+    if let Some(loads) = args.flag("loads") {
+        cfg.loadgen.loads = loads
+            .split(',')
+            .map(|s| s.trim().parse::<usize>())
+            .collect::<std::result::Result<_, _>>()
+            .map_err(|_| anyhow::anyhow!("flag --loads: cannot parse `{loads}`"))?;
+    }
+    cfg.loadgen.burst = args.flag_parse("burst", cfg.loadgen.burst)?;
+    // validate in BOTH modes — an invalid knob must not silently
+    // produce a degenerate all-zero bench against an external endpoint
+    cfg.validate()?;
+    let scenarios = Scenario::parse_arg(args.flag("scenario").unwrap_or("all"))?;
+    let opts = loadgen::LoadgenOptions {
+        scenarios,
+        loads: cfg.loadgen.loads.iter().map(|&r| r as u64).collect(),
+        connections: cfg.loadgen.connections,
+        requests_per_level: cfg.loadgen.requests_per_level,
+        burst: cfg.loadgen.burst,
+        seed: args.flag_parse("seed", 17u64)?,
+    };
+    // `--save-json` without a value parses as boolean "true"
+    let save_json: Option<String> = match args.flag("save-json") {
+        Some("true") => Some("BENCH_serve.json".to_string()),
+        Some(path) => Some(path.to_string()),
+        None => None,
+    };
+
+    let (results, backend) = match args.flag("addr") {
+        Some(addr) => {
+            println!("driving external endpoint {addr}");
+            (loadgen::run(addr, &opts)?, "external".to_string())
+        }
+        None => {
+            if args.flag("synthetic").is_some() {
+                cfg.artifacts_dir = synth_artifacts_dir(cfg.batcher.max_batch)?;
+            }
+            let backend = cfg.backend.slug().to_string();
+            let (server, handle) = CoordinatorServer::start(cfg.clone())?;
+            // the self-spawned server must admit at least the
+            // generator's own connections (2x: one case's clients may
+            // linger server-side while the next case connects)
+            let slots = cfg.net.max_connections.max(cfg.loadgen.connections.saturating_mul(2));
+            let net = NetServer::bind(handle, "127.0.0.1:0", slots)?;
+            let addr = net.local_addr().to_string();
+            println!(
+                "spawned loopback server on {addr} (backend {backend}, {} workers, batch {})",
+                cfg.workers.count, cfg.batcher.max_batch
+            );
+            let results = loadgen::run(&addr, &opts)?;
+            net.shutdown();
+            println!("server-side metrics:\n{}", server.metrics().snapshot().render());
+            server.shutdown();
+            (results, backend)
+        }
+    };
+    print!("{}", loadgen::render_table(&results));
+    if let Some(path) = save_json {
+        std::fs::write(&path, loadgen::render_json(&results, &backend))?;
+        println!("wrote {} cases to {path}", results.len());
+    }
+    Ok(())
+}
+
+/// Write a self-contained synthesized artifact directory (random
+/// digits-shaped model + generated test set — no `make artifacts`, no
+/// Python) and return its path. One shared writer with the integration
+/// suites: `ArtifactStore::write_synthetic`.
+fn synth_artifacts_dir(batch: usize) -> Result<String> {
+    use luna_cim::nn::{DigitsDataset, QuantMlp};
+    let dir = luna_cim::util::test_dir("loadgen-synth");
+    let store = ArtifactStore::new(&dir);
+    store.write_synthetic(&QuantMlp::random_digits(5), &DigitsDataset::generate(4, 99), batch)?;
+    Ok(dir.display().to_string())
 }
 
 /// Design-choice ablations (fixed Z_LSB sweep, scheduling policy,

@@ -1,0 +1,139 @@
+//! Wire-protocol client: the counterpart of [`super::server::NetServer`].
+//!
+//! [`NetClient`] is the simple blocking form (send → recv) used by
+//! tests and closed-loop load; [`NetClient::split`] separates the send
+//! and receive halves onto two owned stream clones so an open-loop
+//! generator can keep sending on schedule while another thread drains
+//! replies (replies arrive in *completion* order, matched by `id`).
+
+use super::protocol::{read_frame, write_frame, Frame};
+use crate::Result;
+use anyhow::{bail, Context};
+use std::io::{BufReader, BufWriter, Write as _};
+use std::net::{TcpStream, ToSocketAddrs};
+
+/// Model/serving parameters the server reports in its `Info` frame.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ServerInfo {
+    pub in_dim: usize,
+    pub out_dim: usize,
+    pub max_batch: usize,
+    pub backend: String,
+}
+
+/// Sending half: owns a buffered stream clone and the id counter.
+pub struct NetSender {
+    w: BufWriter<TcpStream>,
+    next_id: u64,
+}
+
+/// Receiving half: decodes reply frames.
+pub struct NetReceiver {
+    r: BufReader<TcpStream>,
+}
+
+/// A connected wire-protocol client (handshake already done).
+pub struct NetClient {
+    tx: NetSender,
+    rx: NetReceiver,
+    info: ServerInfo,
+}
+
+impl NetClient {
+    /// Connect and handshake: sends `Hello`, reads the server `Info`.
+    /// Fails on version mismatch (the server answers with an `Error`
+    /// frame naming its version) or if the peer is not a LUNA server.
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<NetClient> {
+        let stream = TcpStream::connect(addr).context("connecting to serving endpoint")?;
+        let _ = stream.set_nodelay(true);
+        let read_half = stream.try_clone().context("cloning stream for receive half")?;
+        let mut tx = NetSender { w: BufWriter::new(stream), next_id: 0 };
+        let mut rx = NetReceiver { r: BufReader::new(read_half) };
+        tx.send_frame(&Frame::Hello)?;
+        let info = match rx.recv()? {
+            Frame::Info { in_dim, out_dim, max_batch, backend } => ServerInfo {
+                in_dim: in_dim as usize,
+                out_dim: out_dim as usize,
+                max_batch: max_batch as usize,
+                backend,
+            },
+            Frame::Error { reason, .. } => bail!("server refused handshake: {reason}"),
+            Frame::Rejected { reason, .. } => bail!("server rejected connection: {reason}"),
+            other => bail!("unexpected handshake reply {other:?}"),
+        };
+        Ok(NetClient { tx, rx, info })
+    }
+
+    /// The server's model/serving parameters from the handshake.
+    pub fn info(&self) -> &ServerInfo {
+        &self.info
+    }
+
+    /// Pipelined send: returns the wire id the reply will carry.
+    pub fn send(&mut self, pixels: &[f32]) -> Result<u64> {
+        self.tx.send(pixels)
+    }
+
+    /// Block for the next reply frame (any pending id).
+    pub fn recv(&mut self) -> Result<Frame> {
+        self.rx.recv()
+    }
+
+    /// Synchronous round-trip: send one request, wait for its reply.
+    /// (Only correct with no other requests in flight on this client —
+    /// use [`NetClient::split`] for pipelined traffic.)
+    pub fn infer(&mut self, pixels: &[f32]) -> Result<Frame> {
+        let id = self.send(pixels)?;
+        let reply = self.recv()?;
+        match reply {
+            Frame::Response { id: got, .. }
+            | Frame::Rejected { id: got, .. }
+            | Frame::Error { id: got, .. }
+                if got != id && got != 0 =>
+            {
+                bail!("reply id {got} for request {id} — interleaved use of infer()?")
+            }
+            _ => Ok(reply),
+        }
+    }
+
+    /// Split into independently-owned send/receive halves for
+    /// open-loop (pipelined) traffic across two threads.
+    pub fn split(self) -> (NetSender, NetReceiver, ServerInfo) {
+        (self.tx, self.rx, self.info)
+    }
+}
+
+impl NetSender {
+    /// The wire id the next [`NetSender::send`] will use — lets a
+    /// caller register send-time bookkeeping *before* the frame goes
+    /// out (a reply can otherwise race the bookkeeping).
+    pub fn next_id(&self) -> u64 {
+        self.next_id
+    }
+
+    /// Send one request frame; returns its wire id.
+    pub fn send(&mut self, pixels: &[f32]) -> Result<u64> {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.send_frame(&Frame::Request { id, pixels: pixels.to_vec() })?;
+        Ok(id)
+    }
+
+    fn send_frame(&mut self, frame: &Frame) -> Result<()> {
+        write_frame(&mut self.w, frame)?;
+        self.w.flush().context("flushing request")?;
+        Ok(())
+    }
+}
+
+impl NetReceiver {
+    /// Block for the next server frame. A clean server-side close is an
+    /// error here — callers track how many replies they are owed.
+    pub fn recv(&mut self) -> Result<Frame> {
+        match read_frame(&mut self.r)? {
+            Some(frame) => Ok(frame),
+            None => bail!("server closed the connection"),
+        }
+    }
+}

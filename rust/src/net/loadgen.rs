@@ -1,0 +1,503 @@
+//! Open-loop load generator for the wire-protocol front-end
+//! (`repro loadgen`).
+//!
+//! Serving papers evaluate at the traffic level — offered load vs
+//! throughput, tail latency and rejection — so this drives a
+//! [`super::server::NetServer`] over loopback (or any address) with
+//! three scenario shapes:
+//!
+//! * **closed** — `connections` clients in lock-step send→wait→send:
+//!   the classic saturation probe (offered load adapts to service rate,
+//!   so it measures capacity, not queueing).
+//! * **poisson** — open-loop arrivals with exponential gaps at a target
+//!   rate, split across connections. The schedule is absolute: a slow
+//!   server does **not** slow the generator down (that is the point of
+//!   open loop — it exposes queueing and admission behavior that a
+//!   closed loop hides by self-throttling).
+//! * **bursty** — the same average rate delivered as back-to-back
+//!   bursts of `burst` requests, one burst per period: worst-case
+//!   batcher pressure and the scenario where retry hints matter most.
+//!
+//! Open-loop scenarios sweep the configured offered-load levels; each
+//! case reports achieved throughput, client-measured wall-latency
+//! p50/p99 (exact, from raw samples — not histogram buckets), simulated
+//! CiM latency p50/p99 from the response cost fields, and the reject
+//! rate with the mean `retry_after_us` hint. `render_json` writes the
+//! `BENCH_serve.json` CI artifact.
+
+use super::client::NetClient;
+use super::protocol::Frame;
+use crate::util::Rng;
+use crate::Result;
+use anyhow::Context;
+use std::collections::HashMap;
+use std::fmt::Write as _;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Traffic shape of one loadgen case.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scenario {
+    Closed,
+    Poisson,
+    Bursty,
+}
+
+impl Scenario {
+    pub const ALL: [Scenario; 3] = [Scenario::Closed, Scenario::Poisson, Scenario::Bursty];
+
+    pub fn slug(self) -> &'static str {
+        match self {
+            Scenario::Closed => "closed",
+            Scenario::Poisson => "poisson",
+            Scenario::Bursty => "bursty",
+        }
+    }
+
+    /// Parse a slug; `all` selects every scenario.
+    pub fn parse_arg(s: &str) -> Result<Vec<Scenario>> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "closed" => Ok(vec![Scenario::Closed]),
+            "poisson" => Ok(vec![Scenario::Poisson]),
+            "bursty" => Ok(vec![Scenario::Bursty]),
+            "all" => Ok(Scenario::ALL.to_vec()),
+            other => anyhow::bail!("unknown scenario `{other}` (closed|poisson|bursty|all)"),
+        }
+    }
+}
+
+/// Loadgen knobs (defaults come from [`crate::config::LoadgenConfig`]).
+#[derive(Debug, Clone)]
+pub struct LoadgenOptions {
+    pub scenarios: Vec<Scenario>,
+    /// Offered-load levels for the open-loop scenarios (requests/s).
+    pub loads: Vec<u64>,
+    pub connections: usize,
+    /// Requests per case (split across connections).
+    pub requests_per_level: usize,
+    /// Burst size for the bursty scenario.
+    pub burst: usize,
+    /// Workload RNG seed (pixel noise + arrival gaps).
+    pub seed: u64,
+}
+
+/// One measured (scenario, offered-load) case.
+#[derive(Debug, Clone)]
+pub struct CaseResult {
+    pub scenario: &'static str,
+    /// Target offered load (req/s); `0` = closed-loop (self-clocked).
+    pub offered_rps: u64,
+    pub connections: usize,
+    pub sent: usize,
+    pub ok: usize,
+    pub rejected: usize,
+    pub errors: usize,
+    pub wall_s: f64,
+    /// Served throughput (completed / wall).
+    pub throughput_rps: f64,
+    /// Client-measured wall latency, exact percentiles (µs).
+    pub wall_p50_us: u64,
+    pub wall_p99_us: u64,
+    /// Simulated CiM latency from the response cost fields (ns).
+    pub sim_p50_ns: u64,
+    pub sim_p99_ns: u64,
+    /// Mean retry hint carried on `Rejected` frames (µs; 0 if none).
+    pub mean_retry_after_us: f64,
+}
+
+impl CaseResult {
+    pub fn reject_rate(&self) -> f64 {
+        if self.sent == 0 {
+            0.0
+        } else {
+            self.rejected as f64 / self.sent as f64
+        }
+    }
+}
+
+/// Per-connection tallies a reader thread accumulates.
+#[derive(Default)]
+struct ConnTally {
+    wall_us: Vec<u64>,
+    sim_ns: Vec<u64>,
+    ok: usize,
+    rejected: usize,
+    errors: usize,
+    retry_hint_sum_us: u64,
+}
+
+impl ConnTally {
+    fn absorb(&mut self, frame: &Frame, sent_at: Option<Instant>) {
+        match frame {
+            Frame::Response { cost, .. } => {
+                self.ok += 1;
+                if let Some(t) = sent_at {
+                    self.wall_us.push(t.elapsed().as_micros() as u64);
+                }
+                self.sim_ns.push(cost.latency_ps / 1000);
+            }
+            Frame::Rejected { retry_after_us, .. } => {
+                self.rejected += 1;
+                self.retry_hint_sum_us += retry_after_us;
+            }
+            _ => self.errors += 1,
+        }
+    }
+}
+
+/// Run every requested case against `addr` and return the results in
+/// execution order (closed first, then each open-loop scenario swept
+/// over the load levels).
+pub fn run(addr: &str, opts: &LoadgenOptions) -> Result<Vec<CaseResult>> {
+    anyhow::ensure!(!opts.scenarios.is_empty(), "no scenarios selected");
+    let mut results = Vec::new();
+    for &scenario in &opts.scenarios {
+        match scenario {
+            Scenario::Closed => results.push(run_closed(addr, opts)?),
+            Scenario::Poisson | Scenario::Bursty => {
+                for &rate in &opts.loads {
+                    results.push(run_open(addr, opts, scenario, rate)?);
+                }
+            }
+        }
+    }
+    Ok(results)
+}
+
+fn per_conn_quota(opts: &LoadgenOptions) -> usize {
+    (opts.requests_per_level / opts.connections.max(1)).max(1)
+}
+
+fn run_closed(addr: &str, opts: &LoadgenOptions) -> Result<CaseResult> {
+    let quota = per_conn_quota(opts);
+    let mut clients = Vec::new();
+    for _ in 0..opts.connections {
+        clients.push(NetClient::connect(addr)?);
+    }
+    let t0 = Instant::now();
+    let mut threads = Vec::new();
+    for (c, mut client) in clients.into_iter().enumerate() {
+        let seed = opts.seed ^ (c as u64).wrapping_mul(0x9E37_79B9);
+        threads.push(std::thread::spawn(move || -> Result<ConnTally> {
+            let mut rng = Rng::seed_from_u64(seed);
+            let in_dim = client.info().in_dim;
+            let mut tally = ConnTally::default();
+            for _ in 0..quota {
+                let pixels: Vec<f32> = (0..in_dim).map(|_| rng.gen_range_f32(0.0, 1.0)).collect();
+                let sent_at = Instant::now();
+                let reply = client.infer(&pixels)?;
+                tally.absorb(&reply, Some(sent_at));
+            }
+            Ok(tally)
+        }));
+    }
+    let tallies = join_tallies(threads)?;
+    Ok(aggregate("closed", 0, opts.connections, quota * opts.connections, t0, tallies))
+}
+
+fn run_open(
+    addr: &str,
+    opts: &LoadgenOptions,
+    scenario: Scenario,
+    rate_rps: u64,
+) -> Result<CaseResult> {
+    anyhow::ensure!(rate_rps >= 1, "offered load must be >= 1 req/s");
+    let quota = per_conn_quota(opts);
+    let rate_conn = rate_rps as f64 / opts.connections.max(1) as f64;
+    let mut clients = Vec::new();
+    for _ in 0..opts.connections {
+        clients.push(NetClient::connect(addr)?);
+    }
+    let t0 = Instant::now();
+    let mut threads = Vec::new();
+    for (c, client) in clients.into_iter().enumerate() {
+        let seed = opts.seed ^ (c as u64).wrapping_mul(0x517C_C1B7);
+        let burst = opts.burst.max(1);
+        let (mut tx, mut rx, info) = client.split();
+        // send-time map shared between the two halves: replies arrive
+        // in completion order, so latency is matched by wire id.
+        let pending: Arc<Mutex<HashMap<u64, Instant>>> = Arc::new(Mutex::new(HashMap::new()));
+        let sender_pending = pending.clone();
+        let sender = std::thread::spawn(move || -> Result<()> {
+            let mut rng = Rng::seed_from_u64(seed);
+            let mut due = Instant::now();
+            let mut in_burst = 0usize;
+            for _ in 0..quota {
+                match scenario {
+                    Scenario::Poisson => {
+                        due += Duration::from_secs_f64(exp_gap_s(&mut rng, rate_conn));
+                        sleep_until(due);
+                    }
+                    Scenario::Bursty => {
+                        // `burst` back-to-back sends, then one period of
+                        // silence — the same average rate as poisson.
+                        if in_burst == 0 {
+                            sleep_until(due);
+                            due += Duration::from_secs_f64(burst as f64 / rate_conn);
+                        }
+                        in_burst = (in_burst + 1) % burst;
+                    }
+                    Scenario::Closed => unreachable!("closed-loop uses run_closed"),
+                }
+                let pixels: Vec<f32> =
+                    (0..info.in_dim).map(|_| rng.gen_range_f32(0.0, 1.0)).collect();
+                // record the send time before the frame can be answered
+                let id = tx.next_id();
+                sender_pending.lock().unwrap().insert(id, Instant::now());
+                tx.send(&pixels)?;
+            }
+            Ok(())
+        });
+        threads.push(std::thread::spawn(move || -> Result<ConnTally> {
+            let mut tally = ConnTally::default();
+            for _ in 0..quota {
+                let reply = rx.recv().context("reply stream ended early")?;
+                let sent_at = reply_id(&reply).and_then(|id| pending.lock().unwrap().remove(&id));
+                tally.absorb(&reply, sent_at);
+            }
+            match sender.join() {
+                Ok(res) => res?,
+                Err(_) => anyhow::bail!("sender thread panicked"),
+            }
+            Ok(tally)
+        }));
+    }
+    let tallies = join_tallies(threads)?;
+    Ok(aggregate(
+        scenario.slug(),
+        rate_rps,
+        opts.connections,
+        quota * opts.connections,
+        t0,
+        tallies,
+    ))
+}
+
+fn reply_id(frame: &Frame) -> Option<u64> {
+    match frame {
+        Frame::Response { id, .. } | Frame::Rejected { id, .. } | Frame::Error { id, .. } => {
+            Some(*id)
+        }
+        _ => None,
+    }
+}
+
+fn join_tallies(
+    threads: Vec<std::thread::JoinHandle<Result<ConnTally>>>,
+) -> Result<Vec<ConnTally>> {
+    let mut out = Vec::new();
+    for t in threads {
+        match t.join() {
+            Ok(tally) => out.push(tally?),
+            Err(_) => anyhow::bail!("loadgen connection thread panicked"),
+        }
+    }
+    Ok(out)
+}
+
+fn aggregate(
+    scenario: &'static str,
+    offered_rps: u64,
+    connections: usize,
+    sent: usize,
+    t0: Instant,
+    tallies: Vec<ConnTally>,
+) -> CaseResult {
+    let wall_s = t0.elapsed().as_secs_f64();
+    let mut wall_us = Vec::new();
+    let mut sim_ns = Vec::new();
+    let (mut ok, mut rejected, mut errors, mut hint_sum) = (0usize, 0usize, 0usize, 0u64);
+    for t in tallies {
+        wall_us.extend(t.wall_us);
+        sim_ns.extend(t.sim_ns);
+        ok += t.ok;
+        rejected += t.rejected;
+        errors += t.errors;
+        hint_sum += t.retry_hint_sum_us;
+    }
+    wall_us.sort_unstable();
+    sim_ns.sort_unstable();
+    CaseResult {
+        scenario,
+        offered_rps,
+        connections,
+        sent,
+        ok,
+        rejected,
+        errors,
+        wall_s,
+        throughput_rps: if wall_s > 0.0 { ok as f64 / wall_s } else { 0.0 },
+        wall_p50_us: percentile(&wall_us, 0.50),
+        wall_p99_us: percentile(&wall_us, 0.99),
+        sim_p50_ns: percentile(&sim_ns, 0.50),
+        sim_p99_ns: percentile(&sim_ns, 0.99),
+        mean_retry_after_us: if rejected > 0 { hint_sum as f64 / rejected as f64 } else { 0.0 },
+    }
+}
+
+/// Exact percentile over a sorted sample set (0 when empty).
+fn percentile(sorted: &[u64], q: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let rank = ((q.clamp(0.0, 1.0) * sorted.len() as f64).ceil() as usize).max(1);
+    sorted[rank.min(sorted.len()) - 1]
+}
+
+/// Exponential inter-arrival gap (seconds) for a Poisson process.
+fn exp_gap_s(rng: &mut Rng, rate_per_s: f64) -> f64 {
+    -(1.0 - rng.gen_f64()).ln() / rate_per_s
+}
+
+/// Sleep until `due`; returns immediately when already behind schedule
+/// (open loop: late sends catch up back-to-back, never re-anchor).
+fn sleep_until(due: Instant) {
+    let now = Instant::now();
+    if due > now {
+        std::thread::sleep(due - now);
+    }
+}
+
+/// One human-readable summary line per case.
+pub fn render_table(results: &[CaseResult]) -> String {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "{:<8} {:>10} {:>7} {:>7} {:>7} {:>8} {:>10} {:>9} {:>9} {:>9} {:>9}",
+        "scenario",
+        "offered/s",
+        "sent",
+        "ok",
+        "reject",
+        "rate",
+        "served/s",
+        "p50 us",
+        "p99 us",
+        "sim p50",
+        "sim p99"
+    );
+    for r in results {
+        let offered =
+            if r.offered_rps == 0 { "closed".to_string() } else { r.offered_rps.to_string() };
+        let _ = writeln!(
+            out,
+            "{:<8} {:>10} {:>7} {:>7} {:>7} {:>8.3} {:>10.0} {:>9} {:>9} {:>9} {:>9}",
+            r.scenario,
+            offered,
+            r.sent,
+            r.ok,
+            r.rejected,
+            r.reject_rate(),
+            r.throughput_rps,
+            r.wall_p50_us,
+            r.wall_p99_us,
+            r.sim_p50_ns,
+            r.sim_p99_ns,
+        );
+    }
+    out
+}
+
+/// Hand-rolled JSON (no serde in this offline image): the
+/// `BENCH_serve.json` artifact CI uploads next to `BENCH_lut_gemm.json`.
+pub fn render_json(results: &[CaseResult], backend: &str) -> String {
+    let mut out = String::from("{\n  \"bench\": \"serve\",\n");
+    let _ = writeln!(out, "  \"backend\": \"{backend}\",");
+    out.push_str("  \"cases\": [\n");
+    for (i, r) in results.iter().enumerate() {
+        let _ = write!(
+            out,
+            "    {{\"scenario\": \"{}\", \"offered_rps\": {}, \"connections\": {}, \
+             \"sent\": {}, \"ok\": {}, \"rejected\": {}, \"errors\": {}, \
+             \"reject_rate\": {:.4}, \"throughput_rps\": {:.1}, \"wall_s\": {:.3}, \
+             \"wall_p50_us\": {}, \"wall_p99_us\": {}, \
+             \"sim_p50_ns\": {}, \"sim_p99_ns\": {}, \"mean_retry_after_us\": {:.1}}}",
+            r.scenario,
+            r.offered_rps,
+            r.connections,
+            r.sent,
+            r.ok,
+            r.rejected,
+            r.errors,
+            r.reject_rate(),
+            r.throughput_rps,
+            r.wall_s,
+            r.wall_p50_us,
+            r.wall_p99_us,
+            r.sim_p50_ns,
+            r.sim_p99_ns,
+            r.mean_retry_after_us,
+        );
+        out.push_str(if i + 1 < results.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_is_exact_on_small_samples() {
+        let s = vec![10, 20, 30, 40, 50, 60, 70, 80, 90, 100];
+        assert_eq!(percentile(&s, 0.50), 50);
+        assert_eq!(percentile(&s, 0.99), 100);
+        assert_eq!(percentile(&s, 0.0), 10);
+        assert_eq!(percentile(&s, 1.0), 100);
+        assert_eq!(percentile(&[], 0.5), 0);
+        assert_eq!(percentile(&[7], 0.99), 7);
+    }
+
+    #[test]
+    fn exp_gaps_have_the_right_mean() {
+        let mut rng = Rng::seed_from_u64(3);
+        let rate = 1000.0;
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| exp_gap_s(&mut rng, rate)).sum::<f64>() / n as f64;
+        assert!((mean - 1.0 / rate).abs() < 0.1 / rate, "mean gap {mean}");
+    }
+
+    #[test]
+    fn scenario_slugs_roundtrip_and_all_expands() {
+        for s in Scenario::ALL {
+            assert_eq!(Scenario::parse_arg(s.slug()).unwrap(), vec![s]);
+        }
+        assert_eq!(Scenario::parse_arg("all").unwrap().len(), 3);
+        assert!(Scenario::parse_arg("warp").is_err());
+    }
+
+    #[test]
+    fn json_shape_has_required_fields() {
+        let r = CaseResult {
+            scenario: "poisson",
+            offered_rps: 2000,
+            connections: 4,
+            sent: 100,
+            ok: 90,
+            rejected: 10,
+            errors: 0,
+            wall_s: 0.05,
+            throughput_rps: 1800.0,
+            wall_p50_us: 700,
+            wall_p99_us: 2100,
+            sim_p50_ns: 500,
+            sim_p99_ns: 900,
+            mean_retry_after_us: 450.0,
+        };
+        let json = render_json(&[r.clone(), r], "native");
+        for key in [
+            "\"bench\": \"serve\"",
+            "\"backend\": \"native\"",
+            "\"offered_rps\": 2000",
+            "\"reject_rate\": 0.1000",
+            "\"throughput_rps\": 1800.0",
+            "\"wall_p99_us\": 2100",
+            "\"sim_p99_ns\": 900",
+            "\"mean_retry_after_us\": 450.0",
+        ] {
+            assert!(json.contains(key), "missing {key} in {json}");
+        }
+        assert!(render_table(&[]).contains("scenario"));
+    }
+}

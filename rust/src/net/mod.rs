@@ -1,0 +1,30 @@
+//! L4 network layer: the wire-protocol serving subsystem.
+//!
+//! Everything below this module serves from *in-process* handles; this
+//! module is what makes the coordinator an actual service — std-only
+//! (hand-rolled framing, std TCP, OS threads; no async runtime or
+//! serde exist in this offline image):
+//!
+//! * [`protocol`] — the versioned length-prefixed binary framing
+//!   (normative layout in the crate docs' `## Wire protocol` section);
+//! * [`server`] — the TCP front-end: accept loop + per-connection
+//!   reader/writer threads feeding
+//!   [`crate::coordinator::ServerHandle::submit_with`], 429-style
+//!   `Rejected` frames with [`crate::coordinator::Backpressure`] retry
+//!   hints, and a graceful drain on shutdown;
+//! * [`client`] — the matching client (blocking or split into
+//!   send/receive halves for pipelined open-loop traffic);
+//! * [`loadgen`] — the `repro loadgen` engine: closed-loop, open-loop
+//!   Poisson and bursty arrival processes swept over offered-load
+//!   levels, reporting throughput, exact wall p50/p99, simulated-CiM
+//!   p50/p99 and reject rate per level (`BENCH_serve.json`).
+
+pub mod client;
+pub mod loadgen;
+pub mod protocol;
+pub mod server;
+
+pub use client::{NetClient, NetReceiver, NetSender, ServerInfo};
+pub use loadgen::{CaseResult, LoadgenOptions, Scenario};
+pub use protocol::{Frame, WireCost};
+pub use server::NetServer;

@@ -1,0 +1,500 @@
+//! The LUNA-CiM wire protocol: a hand-rolled, versioned,
+//! length-prefixed binary framing (std-only; no serde in this offline
+//! image). See the crate docs' `## Wire protocol` section for the
+//! normative layout and versioning rules.
+//!
+//! Every frame is an 8-byte header followed by a bounded payload:
+//!
+//! ```text
+//! offset  size  field
+//! 0       2     magic  "LC" (0x4C 0x43)
+//! 2       1     version (currently 1)
+//! 3       1     frame type
+//! 4       4     payload length, u32 LE (<= MAX_PAYLOAD)
+//! 8       n     payload (type-specific, all integers LE)
+//! ```
+//!
+//! Decoding is strict: bad magic, unknown version, unknown frame type,
+//! oversized or short payloads, and trailing payload bytes are all hard
+//! errors — the transport layer closes the connection rather than
+//! resynchronize (a length-prefixed stream has no safe resync point).
+
+use crate::coordinator::InferenceResponse;
+use crate::Result;
+use anyhow::{bail, ensure, Context};
+use std::io::{Read, Write};
+
+/// Frame magic: ASCII "LC".
+pub const MAGIC: [u8; 2] = *b"LC";
+/// Current protocol version. Bump on ANY layout change (see the
+/// versioning rules in the crate docs).
+pub const VERSION: u8 = 1;
+/// Upper bound on a frame payload (1 MiB) — caps per-connection memory
+/// and rejects garbage lengths before allocating.
+pub const MAX_PAYLOAD: u32 = 1 << 20;
+/// Upper bound on a reason string carried in `Rejected`/`Error` frames.
+pub const MAX_REASON: usize = 1024;
+
+const TYPE_REQUEST: u8 = 0x01;
+const TYPE_RESPONSE: u8 = 0x02;
+const TYPE_REJECTED: u8 = 0x03;
+const TYPE_ERROR: u8 = 0x04;
+const TYPE_HELLO: u8 = 0x05;
+const TYPE_INFO: u8 = 0x06;
+
+/// Simulated CiM cost fields riding on every response — the wire form
+/// of [`crate::coordinator::ScheduleCost`] (energy is the per-request
+/// share; latency/programs/hits are the request's batch schedule).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WireCost {
+    pub energy_fj: f64,
+    pub latency_ps: u64,
+    pub programs: u64,
+    pub stationary_hits: u64,
+}
+
+/// One protocol frame. Clients send `Hello` then `Request`s; servers
+/// answer `Info`, then one `Response`, `Rejected` or `Error` per
+/// request (matched by `id`, in completion order — not send order).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// Client → server: classify one image. `id` is client-assigned and
+    /// echoed verbatim on the matching reply.
+    Request { id: u64, pixels: Vec<f32> },
+    /// Server → client: the served answer plus the cost model fields.
+    Response {
+        id: u64,
+        label: u32,
+        /// Wall-clock enqueue-to-completion time measured server-side (µs).
+        latency_us: u64,
+        cost: WireCost,
+        logits: Vec<f32>,
+    },
+    /// Server → client: 429-style admission rejection. `retry_after_us`
+    /// is the structured backoff hint (`0` = unspecified, e.g. a
+    /// connection-limit turn-away with no queue state to derive one).
+    Rejected { id: u64, retry_after_us: u64, reason: String },
+    /// Server → client: the request was admitted but failed (worker
+    /// error) or was itself malformed (wrong pixel count).
+    Error { id: u64, reason: String },
+    /// Client → server: first frame on a connection; the version in the
+    /// header doubles as version negotiation.
+    Hello,
+    /// Server → client: model/serving parameters, answering `Hello`.
+    Info { in_dim: u32, out_dim: u32, max_batch: u32, backend: String },
+}
+
+impl Frame {
+    fn frame_type(&self) -> u8 {
+        match self {
+            Frame::Request { .. } => TYPE_REQUEST,
+            Frame::Response { .. } => TYPE_RESPONSE,
+            Frame::Rejected { .. } => TYPE_REJECTED,
+            Frame::Error { .. } => TYPE_ERROR,
+            Frame::Hello => TYPE_HELLO,
+            Frame::Info { .. } => TYPE_INFO,
+        }
+    }
+
+    /// Build the `Response` frame for a served request, echoing the
+    /// client's wire id (the coordinator's internal id differs).
+    pub fn response(wire_id: u64, resp: &InferenceResponse) -> Frame {
+        Frame::Response {
+            id: wire_id,
+            label: resp.label as u32,
+            latency_us: resp.latency_us,
+            cost: WireCost {
+                energy_fj: resp.sim_energy_fj,
+                latency_ps: resp.sim_latency_ps,
+                programs: resp.sim_programs,
+                stationary_hits: resp.sim_stationary_hits,
+            },
+            logits: resp.logits.clone(),
+        }
+    }
+
+    fn encode_payload(&self) -> Vec<u8> {
+        let mut p = Vec::new();
+        match self {
+            Frame::Request { id, pixels } => {
+                put_u64(&mut p, *id);
+                put_u32(&mut p, pixels.len() as u32);
+                for &x in pixels {
+                    put_f32(&mut p, x);
+                }
+            }
+            Frame::Response { id, label, latency_us, cost, logits } => {
+                put_u64(&mut p, *id);
+                put_u32(&mut p, *label);
+                put_u64(&mut p, *latency_us);
+                put_f64(&mut p, cost.energy_fj);
+                put_u64(&mut p, cost.latency_ps);
+                put_u64(&mut p, cost.programs);
+                put_u64(&mut p, cost.stationary_hits);
+                put_u32(&mut p, logits.len() as u32);
+                for &x in logits {
+                    put_f32(&mut p, x);
+                }
+            }
+            Frame::Rejected { id, retry_after_us, reason } => {
+                put_u64(&mut p, *id);
+                put_u64(&mut p, *retry_after_us);
+                put_str(&mut p, reason);
+            }
+            Frame::Error { id, reason } => {
+                put_u64(&mut p, *id);
+                put_str(&mut p, reason);
+            }
+            Frame::Hello => {}
+            Frame::Info { in_dim, out_dim, max_batch, backend } => {
+                put_u32(&mut p, *in_dim);
+                put_u32(&mut p, *out_dim);
+                put_u32(&mut p, *max_batch);
+                put_str(&mut p, backend);
+            }
+        }
+        p
+    }
+
+    fn decode_payload(frame_type: u8, payload: &[u8]) -> Result<Frame> {
+        let mut c = Cursor { buf: payload, pos: 0 };
+        let frame = match frame_type {
+            TYPE_REQUEST => {
+                let id = c.u64()?;
+                let n = c.u32()? as usize;
+                ensure!(n * 4 == c.remaining(), "request pixel count disagrees with payload");
+                let mut pixels = Vec::with_capacity(n);
+                for _ in 0..n {
+                    pixels.push(c.f32()?);
+                }
+                Frame::Request { id, pixels }
+            }
+            TYPE_RESPONSE => {
+                let id = c.u64()?;
+                let label = c.u32()?;
+                let latency_us = c.u64()?;
+                let cost = WireCost {
+                    energy_fj: c.f64()?,
+                    latency_ps: c.u64()?,
+                    programs: c.u64()?,
+                    stationary_hits: c.u64()?,
+                };
+                let n = c.u32()? as usize;
+                ensure!(n * 4 == c.remaining(), "logit count disagrees with payload");
+                let mut logits = Vec::with_capacity(n);
+                for _ in 0..n {
+                    logits.push(c.f32()?);
+                }
+                Frame::Response { id, label, latency_us, cost, logits }
+            }
+            TYPE_REJECTED => {
+                let id = c.u64()?;
+                let retry_after_us = c.u64()?;
+                let reason = c.str()?;
+                Frame::Rejected { id, retry_after_us, reason }
+            }
+            TYPE_ERROR => {
+                let id = c.u64()?;
+                let reason = c.str()?;
+                Frame::Error { id, reason }
+            }
+            TYPE_HELLO => Frame::Hello,
+            TYPE_INFO => {
+                let in_dim = c.u32()?;
+                let out_dim = c.u32()?;
+                let max_batch = c.u32()?;
+                let backend = c.str()?;
+                Frame::Info { in_dim, out_dim, max_batch, backend }
+            }
+            other => bail!("unknown frame type 0x{other:02x}"),
+        };
+        ensure!(c.remaining() == 0, "{} trailing payload bytes", c.remaining());
+        Ok(frame)
+    }
+}
+
+/// Serialize one frame (header + payload) to the writer. Does not
+/// flush — callers batch or flush per their latency needs.
+pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> Result<()> {
+    let payload = frame.encode_payload();
+    ensure!(
+        payload.len() as u64 <= MAX_PAYLOAD as u64,
+        "frame payload {} exceeds MAX_PAYLOAD",
+        payload.len()
+    );
+    let mut header = [0u8; 8];
+    header[0..2].copy_from_slice(&MAGIC);
+    header[2] = VERSION;
+    header[3] = frame.frame_type();
+    header[4..8].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    w.write_all(&header).context("writing frame header")?;
+    w.write_all(&payload).context("writing frame payload")?;
+    Ok(())
+}
+
+/// Read one frame. `Ok(None)` is a clean end-of-stream (the peer closed
+/// at a frame boundary); any malformed, truncated, oversized or
+/// version-mismatched input is an `Err` — the caller must close the
+/// connection, since a corrupt length prefix poisons everything after it.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Frame>> {
+    let mut header = [0u8; 8];
+    match read_exact_or_eof(r, &mut header)? {
+        ReadOutcome::CleanEof => return Ok(None),
+        ReadOutcome::Filled => {}
+    }
+    ensure!(header[0..2] == MAGIC, "bad frame magic {:02x}{:02x}", header[0], header[1]);
+    ensure!(
+        header[2] == VERSION,
+        "protocol version {} unsupported (this build speaks {VERSION})",
+        header[2]
+    );
+    let frame_type = header[3];
+    let len = u32::from_le_bytes(header[4..8].try_into().unwrap());
+    ensure!(len <= MAX_PAYLOAD, "frame payload {len} exceeds MAX_PAYLOAD ({MAX_PAYLOAD})");
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload).context("reading frame payload (truncated frame?)")?;
+    Frame::decode_payload(frame_type, &payload)
+}
+
+enum ReadOutcome {
+    Filled,
+    CleanEof,
+}
+
+/// `read_exact`, except a clean EOF before the *first* byte is not an
+/// error — that is how a peer hangs up between frames.
+fn read_exact_or_eof<R: Read>(r: &mut R, buf: &mut [u8]) -> Result<ReadOutcome> {
+    let mut filled = 0usize;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) if filled == 0 => return Ok(ReadOutcome::CleanEof),
+            Ok(0) => bail!("connection closed mid-frame ({filled} header bytes read)"),
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e).context("reading frame header"),
+        }
+    }
+    Ok(ReadOutcome::Filled)
+}
+
+fn put_u32(p: &mut Vec<u8>, v: u32) {
+    p.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(p: &mut Vec<u8>, v: u64) {
+    p.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(p: &mut Vec<u8>, v: f32) {
+    p.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(p: &mut Vec<u8>, v: f64) {
+    p.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Length-prefixed UTF-8, truncated to [`MAX_REASON`] bytes on a char
+/// boundary (reasons are diagnostics, not data).
+fn put_str(p: &mut Vec<u8>, s: &str) {
+    let mut end = s.len().min(MAX_REASON);
+    while !s.is_char_boundary(end) {
+        end -= 1;
+    }
+    put_u32(p, end as u32);
+    p.extend_from_slice(&s.as_bytes()[..end]);
+}
+
+/// Bounds-checked little-endian payload reader.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let left = self.remaining();
+        ensure!(left >= n, "payload truncated: need {n} bytes, {left} left");
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        ensure!(n <= MAX_REASON, "reason length {n} exceeds MAX_REASON");
+        let bytes = self.take(n)?;
+        Ok(std::str::from_utf8(bytes).context("reason is not UTF-8")?.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(frame: Frame) -> Frame {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &frame).unwrap();
+        let mut r = &buf[..];
+        let back = read_frame(&mut r).unwrap().expect("one frame");
+        assert!(r.is_empty(), "frame must consume its exact bytes");
+        back
+    }
+
+    #[test]
+    fn every_frame_kind_roundtrips_bit_exactly() {
+        let frames = vec![
+            Frame::Hello,
+            Frame::Request { id: 7, pixels: vec![0.0, 0.25, -1.5, f32::MIN_POSITIVE] },
+            Frame::Request { id: u64::MAX, pixels: vec![] },
+            Frame::Response {
+                id: 9,
+                label: 3,
+                latency_us: 1234,
+                cost: WireCost {
+                    energy_fj: 1.5e6,
+                    latency_ps: 987_654,
+                    programs: 42,
+                    stationary_hits: 2326,
+                },
+                logits: vec![-0.5, 0.5, 1e-7],
+            },
+            Frame::Rejected { id: 11, retry_after_us: 500, reason: "server at capacity".into() },
+            Frame::Rejected { id: 0, retry_after_us: 0, reason: String::new() },
+            Frame::Error { id: 13, reason: "worker died".into() },
+            Frame::Info { in_dim: 64, out_dim: 10, max_batch: 8, backend: "calibrated".into() },
+        ];
+        for f in frames {
+            assert_eq!(roundtrip(f.clone()), f);
+        }
+    }
+
+    #[test]
+    fn frames_concatenate_on_one_stream() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::Hello).unwrap();
+        write_frame(&mut buf, &Frame::Request { id: 1, pixels: vec![0.5; 64] }).unwrap();
+        let mut r = &buf[..];
+        assert_eq!(read_frame(&mut r).unwrap(), Some(Frame::Hello));
+        match read_frame(&mut r).unwrap() {
+            Some(Frame::Request { id: 1, pixels }) => assert_eq!(pixels.len(), 64),
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(read_frame(&mut r).unwrap(), None, "clean EOF after last frame");
+    }
+
+    #[test]
+    fn clean_eof_is_none_but_midframe_eof_is_error() {
+        let mut empty: &[u8] = &[];
+        assert!(read_frame(&mut empty).unwrap().is_none());
+        // a truncated header
+        let mut short: &[u8] = &[b'L', b'C', VERSION];
+        assert!(read_frame(&mut short).is_err());
+        // a full header promising more payload than the stream holds
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::Request { id: 1, pixels: vec![0.5; 16] }).unwrap();
+        buf.truncate(buf.len() - 3);
+        let mut r = &buf[..];
+        assert!(read_frame(&mut r).is_err());
+    }
+
+    #[test]
+    fn bad_magic_version_type_and_oversize_are_rejected() {
+        let mut ok = Vec::new();
+        write_frame(&mut ok, &Frame::Hello).unwrap();
+
+        let mut bad_magic = ok.clone();
+        bad_magic[0] = b'X';
+        assert!(read_frame(&mut &bad_magic[..]).is_err());
+
+        let mut bad_version = ok.clone();
+        bad_version[2] = VERSION + 1;
+        let err = read_frame(&mut &bad_version[..]).unwrap_err();
+        assert!(format!("{err:#}").contains("version"), "{err:#}");
+
+        let mut bad_type = ok.clone();
+        bad_type[3] = 0x7f;
+        assert!(read_frame(&mut &bad_type[..]).is_err());
+
+        let mut oversize = ok;
+        oversize[4..8].copy_from_slice(&(MAX_PAYLOAD + 1).to_le_bytes());
+        assert!(read_frame(&mut &oversize[..]).is_err());
+    }
+
+    #[test]
+    fn inconsistent_counts_and_trailing_bytes_are_rejected() {
+        // request whose pixel count disagrees with the payload length
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::Request { id: 1, pixels: vec![1.0, 2.0] }).unwrap();
+        // corrupt the count (first payload field after the 8-byte id)
+        buf[8 + 8] = 9;
+        assert!(read_frame(&mut &buf[..]).is_err());
+
+        // hello with trailing payload bytes
+        let mut hello = Vec::new();
+        write_frame(&mut hello, &Frame::Hello).unwrap();
+        hello[4] = 2; // claim 2 payload bytes
+        hello.extend_from_slice(&[0, 0]);
+        assert!(read_frame(&mut &hello[..]).is_err());
+    }
+
+    #[test]
+    fn long_reasons_truncate_on_char_boundary() {
+        let reason = "é".repeat(MAX_REASON); // 2 bytes per char
+        let f = roundtrip(Frame::Error { id: 1, reason });
+        match f {
+            Frame::Error { reason, .. } => {
+                assert!(reason.len() <= MAX_REASON);
+                assert!(!reason.is_empty());
+                assert!(reason.chars().all(|c| c == 'é'), "no split surrogate");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn response_frame_carries_schedule_cost_fields() {
+        let resp = InferenceResponse {
+            id: 4,
+            logits: vec![0.1, 0.9],
+            label: 1,
+            latency_us: 77,
+            sim_energy_fj: 123.5,
+            sim_latency_ps: 4567,
+            sim_programs: 8,
+            sim_stationary_hits: 90,
+        };
+        match Frame::response(42, &resp) {
+            Frame::Response { id, label, latency_us, cost, logits } => {
+                assert_eq!(id, 42, "wire id, not the coordinator id");
+                assert_eq!(label, 1);
+                assert_eq!(latency_us, 77);
+                assert_eq!(cost.energy_fj, 123.5);
+                assert_eq!(cost.latency_ps, 4567);
+                assert_eq!(cost.programs, 8);
+                assert_eq!(cost.stationary_hits, 90);
+                assert_eq!(logits, vec![0.1, 0.9]);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,319 @@
+//! The TCP front-end: turns a [`ServerHandle`] into a network service.
+//!
+//! Concurrency model (std threads, matching the coordinator): one
+//! accept-loop thread; per connection, one **reader** thread decoding
+//! frames and feeding [`ServerHandle::submit_with`], and one **writer**
+//! thread serializing reply frames from an mpsc queue. Completions are
+//! callbacks, not blocked threads, so a single connection can keep the
+//! whole admission window in flight while costing two OS threads total.
+//!
+//! Replies go out in *completion* order (the `id` field matches them to
+//! requests), so a pipelined client never suffers head-of-line blocking
+//! behind a slower batch.
+//!
+//! Failure containment: a malformed or truncated frame closes that one
+//! connection (best-effort `Error` frame first) — the coordinator and
+//! every other connection are untouched, because the reader owns
+//! nothing but its socket and a cloned handle. Admission rejections ride
+//! the 429-style `Rejected` frame with the structured
+//! [`Backpressure`] retry hint.
+//!
+//! Shutdown drains: `shutdown()` stops accepting, closes every
+//! connection's read half (no new requests), then joins the writers —
+//! which exit only after every in-flight completion has been written.
+//! In-flight requests therefore always get their response before the
+//! socket closes. Call it *before* `CoordinatorServer::shutdown`. The
+//! drain is bounded: pending partial batches flush within the
+//! batcher's `max_wait` (the deadline flusher), and a peer that stops
+//! reading its socket cannot pin a writer forever — every connection
+//! carries a [`WRITE_TIMEOUT`], after which the stalled write fails
+//! and the writer closes that connection.
+
+use super::protocol::{read_frame, write_frame, Frame};
+use crate::coordinator::{Backpressure, Completion, ServerHandle};
+use crate::Result;
+use anyhow::Context;
+use std::io::{BufReader, BufWriter, Write as _};
+use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Per-connection socket write timeout. Reply frames are small, so any
+/// write that stalls this long means the peer stopped draining its
+/// receive buffer; the writer then drops the connection instead of
+/// blocking forever — this is what keeps [`NetServer::shutdown`]'s
+/// drain (which joins every writer) bounded against stalled or
+/// malicious clients.
+pub const WRITE_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// One live connection's handles, kept so shutdown can close and join it.
+struct Conn {
+    /// Extra stream clone for `Shutdown::Read` during drain.
+    stream: TcpStream,
+    reader: JoinHandle<()>,
+    writer: JoinHandle<()>,
+}
+
+struct NetShared {
+    stopping: AtomicBool,
+    /// Connections currently open (admission-checked against
+    /// `net.max_connections` in the accept loop).
+    live: AtomicUsize,
+    conns: Mutex<Vec<Conn>>,
+}
+
+/// The wire-protocol serving front-end. Bind with [`NetServer::bind`];
+/// every accepted connection serves the [`ServerHandle`] given there.
+pub struct NetServer {
+    addr: SocketAddr,
+    accept: Option<JoinHandle<()>>,
+    state: Arc<NetShared>,
+}
+
+impl NetServer {
+    /// Bind `listen` (e.g. `127.0.0.1:7077`, or port `0` for an
+    /// OS-assigned port — see [`NetServer::local_addr`]) and start
+    /// accepting connections that serve `handle`.
+    pub fn bind(handle: ServerHandle, listen: &str, max_connections: usize) -> Result<NetServer> {
+        anyhow::ensure!(max_connections >= 1, "need at least one connection slot");
+        let listener =
+            TcpListener::bind(listen).with_context(|| format!("binding net.listen {listen}"))?;
+        let addr = listener.local_addr().context("resolving bound address")?;
+        let state = Arc::new(NetShared {
+            stopping: AtomicBool::new(false),
+            live: AtomicUsize::new(0),
+            conns: Mutex::new(Vec::new()),
+        });
+        let accept = {
+            let state = state.clone();
+            std::thread::Builder::new()
+                .name("luna-net-accept".into())
+                .spawn(move || accept_loop(listener, handle, state, max_connections))
+                .context("spawning accept thread")?
+        };
+        Ok(NetServer { addr, accept: Some(accept), state })
+    }
+
+    /// The actually-bound address (resolves port `0` bindings).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Connections currently open.
+    pub fn live_connections(&self) -> usize {
+        self.state.live.load(Ordering::Relaxed)
+    }
+
+    /// Graceful drain: stop accepting, close every connection's read
+    /// half, then join the per-connection threads — writers finish only
+    /// after every in-flight request's reply has been written, so
+    /// admitted work is never silently dropped. Bounded by the batcher's
+    /// `max_wait` (pending partial batches flush on that deadline).
+    pub fn shutdown(mut self) {
+        self.state.stopping.store(true, Ordering::Relaxed);
+        // Wake the blocking accept() with a throwaway connection; the
+        // loop sees `stopping` and exits. Unspecified listen addresses
+        // (0.0.0.0 / ::) are dialed back on the loopback of the family.
+        let _ = TcpStream::connect(wake_addr(self.addr));
+        if let Some(a) = self.accept.take() {
+            let _ = a.join();
+        }
+        let conns = std::mem::take(&mut *self.state.conns.lock().unwrap());
+        for c in &conns {
+            let _ = c.stream.shutdown(Shutdown::Read);
+        }
+        for c in conns {
+            let _ = c.reader.join();
+            let _ = c.writer.join();
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        // `shutdown()` consumed self and already cleaned up in the
+        // normal path; this covers early-drop (e.g. error unwinding) so
+        // the accept thread does not linger on a dead listener.
+        if let Some(a) = self.accept.take() {
+            self.state.stopping.store(true, Ordering::Relaxed);
+            let _ = TcpStream::connect(wake_addr(self.addr));
+            let _ = a.join();
+        }
+    }
+}
+
+fn wake_addr(bound: SocketAddr) -> SocketAddr {
+    let ip = match bound.ip() {
+        ip if !ip.is_unspecified() => ip,
+        IpAddr::V4(_) => IpAddr::V4(Ipv4Addr::LOCALHOST),
+        IpAddr::V6(_) => IpAddr::V6(Ipv6Addr::LOCALHOST),
+    };
+    SocketAddr::new(ip, bound.port())
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    handle: ServerHandle,
+    state: Arc<NetShared>,
+    max_connections: usize,
+) {
+    loop {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                if state.stopping.load(Ordering::Relaxed) {
+                    return; // the shutdown wake-up (or a racing client)
+                }
+                prune_finished(&state);
+                if state.live.load(Ordering::Relaxed) >= max_connections {
+                    reject_connection(stream, &handle);
+                    continue;
+                }
+                match spawn_connection(stream, handle.clone(), state.clone()) {
+                    Ok(conn) => state.conns.lock().unwrap().push(conn),
+                    Err(e) => eprintln!("net: connection setup failed: {e:#}"),
+                }
+            }
+            Err(e) => {
+                if state.stopping.load(Ordering::Relaxed) {
+                    return;
+                }
+                eprintln!("net: accept error: {e:#}");
+            }
+        }
+    }
+}
+
+/// Join and drop registry entries whose threads have exited, so a
+/// long-lived server does not accumulate dead handles.
+fn prune_finished(state: &NetShared) {
+    let mut conns = state.conns.lock().unwrap();
+    let mut kept = Vec::with_capacity(conns.len());
+    for c in conns.drain(..) {
+        if c.reader.is_finished() && c.writer.is_finished() {
+            let _ = c.reader.join();
+            let _ = c.writer.join();
+        } else {
+            kept.push(c);
+        }
+    }
+    *conns = kept;
+}
+
+/// Over-capacity turn-away: one best-effort `Rejected` frame (id 0 =
+/// connection-scoped, no retry hint derivable without queue state),
+/// then close.
+fn reject_connection(stream: TcpStream, handle: &ServerHandle) {
+    handle.metrics().record_rejection(0);
+    let mut w = BufWriter::new(&stream);
+    let frame =
+        Frame::Rejected { id: 0, retry_after_us: 0, reason: "connection limit reached".into() };
+    let _ = write_frame(&mut w, &frame);
+    let _ = w.flush();
+}
+
+fn spawn_connection(
+    stream: TcpStream,
+    handle: ServerHandle,
+    state: Arc<NetShared>,
+) -> Result<Conn> {
+    // Request/response frames are small and latency-bound.
+    let _ = stream.set_nodelay(true);
+    // A peer that stops reading must not pin the writer (and thereby
+    // shutdown's join) forever.
+    let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
+    let reader_stream = stream.try_clone().context("cloning stream for reader")?;
+    let writer_stream = stream.try_clone().context("cloning stream for writer")?;
+    let (tx, rx) = mpsc::channel::<Frame>();
+    state.live.fetch_add(1, Ordering::Relaxed);
+    let writer_state = state.clone();
+    let writer_spawn = std::thread::Builder::new().name("luna-net-writer".into()).spawn(move || {
+        {
+            let mut w = BufWriter::new(&writer_stream);
+            // Exits when every sender is gone: the reader's plus one
+            // clone per in-flight completion — i.e. after the drain.
+            while let Ok(frame) = rx.recv() {
+                if write_frame(&mut w, &frame).is_err() || w.flush().is_err() {
+                    break;
+                }
+            }
+        }
+        // Last one out closes the socket for every clone (the
+        // registry still holds one, so Drop alone would not).
+        let _ = writer_stream.shutdown(Shutdown::Both);
+        writer_state.live.fetch_sub(1, Ordering::Relaxed);
+    });
+    let writer = match writer_spawn {
+        Ok(w) => w,
+        Err(e) => {
+            // The writer closure never ran, so its decrement never
+            // will: undo the increment or the slot leaks forever.
+            state.live.fetch_sub(1, Ordering::Relaxed);
+            return Err(e).context("spawning connection writer");
+        }
+    };
+    let reader = std::thread::Builder::new()
+        .name("luna-net-reader".into())
+        .spawn(move || reader_main(reader_stream, tx, handle))
+        .context("spawning connection reader")?;
+    Ok(Conn { stream, reader, writer })
+}
+
+fn reader_main(stream: TcpStream, tx: mpsc::Sender<Frame>, handle: ServerHandle) {
+    let mut r = BufReader::new(&stream);
+    loop {
+        match read_frame(&mut r) {
+            Ok(Some(Frame::Hello)) => {
+                let info = Frame::Info {
+                    in_dim: handle.input_dim() as u32,
+                    out_dim: handle.output_dim() as u32,
+                    max_batch: handle.max_batch() as u32,
+                    backend: handle.backend_slug().to_string(),
+                };
+                if tx.send(info).is_err() {
+                    return;
+                }
+            }
+            Ok(Some(Frame::Request { id, pixels })) => {
+                let reply = tx.clone();
+                let done: Completion = Box::new(move |res| {
+                    let frame = match res {
+                        Ok(resp) => Frame::response(id, &resp),
+                        Err(why) => Frame::Error { id, reason: why },
+                    };
+                    let _ = reply.send(frame);
+                });
+                if let Err(e) = handle.submit_with(pixels, done) {
+                    let frame = match e.downcast_ref::<Backpressure>() {
+                        Some(bp) => Frame::Rejected {
+                            id,
+                            retry_after_us: bp.retry_after_us,
+                            reason: e.to_string(),
+                        },
+                        None => Frame::Error { id, reason: format!("{e:#}") },
+                    };
+                    if tx.send(frame).is_err() {
+                        return;
+                    }
+                }
+            }
+            Ok(Some(other)) => {
+                // Server-to-client frame types from a client are a
+                // protocol violation; close rather than guess.
+                let reason = format!("unexpected client frame {other:?}");
+                let _ = tx.send(Frame::Error { id: 0, reason });
+                return;
+            }
+            Ok(None) => return, // peer hung up cleanly
+            Err(e) => {
+                // Malformed/truncated input: best-effort diagnostic,
+                // then close this connection only — the coordinator and
+                // other connections never see the bad bytes.
+                let reason = format!("protocol error: {e:#}");
+                let _ = tx.send(Frame::Error { id: 0, reason });
+                return;
+            }
+        }
+    }
+}

@@ -126,6 +126,34 @@ impl ArtifactStore {
         let bytes = std::fs::read(self.testset_path())?;
         crate::nn::DigitsDataset::from_binary(&bytes)
     }
+
+    /// Write a complete **synthetic** artifact directory for `mlp`:
+    /// manifest (dims derived from the model), weights and test set —
+    /// everything the native/calibrated backends need, with no Python
+    /// exporter and no HLO files. The integration suites and
+    /// `repro loadgen --synthetic` share this one writer, so the
+    /// synthesized layout cannot drift from what the loaders expect.
+    pub fn write_synthetic(
+        &self,
+        mlp: &crate::nn::QuantMlp,
+        testset: &crate::nn::DigitsDataset,
+        batch: usize,
+    ) -> Result<()> {
+        let mut dims = vec![mlp.input_dim()];
+        dims.extend(mlp.layers.iter().map(|l| l.out_dim));
+        let meta = ModelMeta {
+            dims,
+            batch,
+            variants: vec!["ideal".into()],
+            train_accuracy: 0.0,
+            test_samples: testset.len(),
+        };
+        std::fs::create_dir_all(self.root())?;
+        std::fs::write(self.manifest_path(), meta.to_text())?;
+        std::fs::write(self.weights_path(), mlp.to_text())?;
+        std::fs::write(self.testset_path(), testset.to_binary())?;
+        Ok(())
+    }
 }
 
 #[cfg(test)]

@@ -2,24 +2,15 @@
 //! over synthesized artifacts (no `make artifacts`, no HLO files).
 
 use luna_cim::nn::{DigitsDataset, QuantMlp};
-use luna_cim::runtime::{ArtifactStore, ModelMeta};
+use luna_cim::runtime::ArtifactStore;
 
 /// Write a self-contained artifact directory for the given digits-shaped
 /// model: the native and calibrated backends need manifest + weights +
-/// testset only.
+/// testset only (one shared writer — see `ArtifactStore::write_synthetic`).
 pub fn synth_artifacts(tag: &str, mlp: &QuantMlp, batch: usize) -> (ArtifactStore, DigitsDataset) {
     let dir = luna_cim::util::test_dir(tag);
     let store = ArtifactStore::new(&dir);
     let testset = DigitsDataset::generate(4, 99);
-    let meta = ModelMeta {
-        dims: vec![64, 32, 10],
-        batch,
-        variants: vec!["ideal".into()],
-        train_accuracy: 0.0,
-        test_samples: testset.len(),
-    };
-    std::fs::write(store.manifest_path(), meta.to_text()).unwrap();
-    std::fs::write(store.weights_path(), mlp.to_text()).unwrap();
-    std::fs::write(store.testset_path(), testset.to_binary()).unwrap();
+    store.write_synthetic(mlp, &testset, batch).unwrap();
     (store, testset)
 }

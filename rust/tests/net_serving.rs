@@ -1,0 +1,244 @@
+//! Loopback integration tests of the wire-protocol serving subsystem
+//! (`rust/src/net/`): TCP front-end + coordinator over synthesized
+//! artifacts — no `make artifacts`, no HLO files, no external network.
+//!
+//! Pins the acceptance bars of the net subsystem:
+//! * wire-served responses are **bit-identical** with direct in-process
+//!   `submit` for every backend exercised here (`native`, `calibrated`);
+//! * the rejection path returns a parseable 429-style retry hint, both
+//!   on the wire and (as a downcastable [`Backpressure`]) in-process;
+//! * malformed/truncated/mis-versioned frames close that connection
+//!   without poisoning the coordinator or other connections;
+//! * graceful shutdown drains in-flight requests before closing.
+
+mod common;
+
+use common::synth_artifacts;
+use luna_cim::config::{BackendKind, Config};
+use luna_cim::coordinator::{Backpressure, CoordinatorServer, ServerHandle};
+use luna_cim::multiplier::{MultiplierKind, MultiplierModel};
+use luna_cim::net::protocol::{read_frame, write_frame, Frame, MAGIC, VERSION};
+use luna_cim::net::{NetClient, NetServer};
+use luna_cim::nn::QuantMlp;
+use std::io::Write as _;
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+/// Start a full serving stack (coordinator + TCP front-end) over
+/// synthesized artifacts.
+fn start_stack(
+    tag: &str,
+    mlp: &QuantMlp,
+    tweak: impl FnOnce(&mut Config),
+) -> (CoordinatorServer, ServerHandle, NetServer, Vec<Vec<f32>>) {
+    let (store, testset) = synth_artifacts(tag, mlp, 8);
+    let mut cfg = Config::default();
+    cfg.artifacts_dir = store.root().display().to_string();
+    tweak(&mut cfg);
+    let (server, handle) = CoordinatorServer::start(cfg.clone()).unwrap();
+    let net = NetServer::bind(handle.clone(), "127.0.0.1:0", cfg.net.max_connections).unwrap();
+    let pixels = testset.samples.iter().map(|s| s.pixels.clone()).collect();
+    (server, handle, net, pixels)
+}
+
+/// Poll the admission counter until `accepted` requests have been
+/// admitted (bounds the races in shutdown/backpressure tests).
+fn wait_accepted(handle: &ServerHandle, accepted: u64) {
+    let t0 = Instant::now();
+    while handle.metrics().snapshot().accepted < accepted {
+        assert!(t0.elapsed() < Duration::from_secs(5), "requests never admitted");
+        std::thread::yield_now();
+    }
+}
+
+#[test]
+fn wire_responses_bit_identical_with_direct_submit_native_and_calibrated() {
+    for backend in [BackendKind::Native, BackendKind::Calibrated] {
+        let mlp = QuantMlp::random_digits(61);
+        let (server, handle, net, pixels) = start_stack("net-bitexact", &mlp, |cfg| {
+            cfg.backend = backend;
+            cfg.multiplier = MultiplierKind::DncOpt;
+        });
+        let model = MultiplierModel::new(MultiplierKind::DncOpt);
+        let mut client = NetClient::connect(net.local_addr()).unwrap();
+        let info = client.info().clone();
+        assert_eq!(info.in_dim, 64);
+        assert_eq!(info.out_dim, 10);
+        assert_eq!(info.max_batch, 8);
+        assert_eq!(info.backend, backend.slug());
+        for px in pixels.iter().take(12) {
+            let wire = match client.infer(px).unwrap() {
+                Frame::Response { label, logits, cost, latency_us, .. } => {
+                    assert!(latency_us > 0);
+                    assert!(cost.energy_fj > 0.0, "{backend:?} prices every reply");
+                    if backend == BackendKind::Calibrated {
+                        assert!(cost.latency_ps > 0);
+                        assert!(cost.programs + cost.stationary_hits > 0);
+                    }
+                    (label as usize, logits)
+                }
+                other => panic!("expected a response, got {other:?}"),
+            };
+            let direct = handle.submit(px.clone()).unwrap();
+            assert_eq!(wire.1, direct.logits, "wire logits must be bit-identical");
+            assert_eq!(wire.0, direct.label);
+            // and both equal the functional model exactly
+            assert_eq!(wire.1, mlp.forward(px, &model));
+        }
+        net.shutdown();
+        server.shutdown();
+    }
+}
+
+#[test]
+fn rejection_carries_parseable_retry_hint_on_wire_and_in_process() {
+    let mlp = QuantMlp::random_digits(67);
+    // strict admission: one outstanding request fills the server
+    let (server, handle, net, pixels) = start_stack("net-reject", &mlp, |cfg| {
+        cfg.batcher.queue_depth = 1;
+        cfg.batcher.max_wait_us = 500_000; // flush well after the test's probes
+    });
+    let client = NetClient::connect(net.local_addr()).unwrap();
+    let (mut tx, mut rx, _info) = client.split();
+    tx.send(&pixels[0]).unwrap();
+    wait_accepted(&handle, 1);
+
+    // in-process submit: typed Backpressure with a usable hint
+    let err = handle.submit(pixels[1].clone()).expect_err("server is full");
+    let bp = err.downcast_ref::<Backpressure>().expect("typed backpressure error");
+    assert!(bp.retry_after_us >= 1, "hint must be actionable");
+    assert!(bp.retry_after_us <= 2_000_000, "hint {} out of scale", bp.retry_after_us);
+    assert!(err.to_string().contains("retry in"), "{err}");
+
+    // wire submit: 429-style Rejected frame with the same structured hint
+    tx.send(&pixels[1]).unwrap();
+    let mut got_reject = None;
+    let mut got_response = None;
+    for _ in 0..2 {
+        match rx.recv().unwrap() {
+            Frame::Rejected { id, retry_after_us, reason } => {
+                got_reject = Some((id, retry_after_us, reason));
+            }
+            Frame::Response { id, .. } => got_response = Some(id),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+    let (rid, hint, reason) = got_reject.expect("second request is rejected");
+    assert_eq!(rid, 1, "the rejected wire id");
+    assert!(hint >= 1 && hint <= 2_000_000, "wire hint {hint}");
+    assert!(reason.contains("retry in"), "{reason}");
+    assert_eq!(got_response, Some(0), "the admitted request still completes");
+
+    let snap = handle.metrics().snapshot();
+    assert_eq!(snap.accepted, 1);
+    assert_eq!(snap.rejected, 2);
+    assert_eq!(snap.retry_hints, 2, "both rejections carried hints");
+    assert!(snap.reject_rate() > 0.5);
+    net.shutdown();
+    server.shutdown();
+}
+
+#[test]
+fn malformed_frames_close_connection_without_poisoning_coordinator() {
+    let mlp = QuantMlp::random_digits(71);
+    let (server, handle, net, pixels) = start_stack("net-garbage", &mlp, |cfg| {
+        cfg.batcher.max_wait_us = 1_000;
+    });
+
+    // 1) pure garbage bytes: bad magic
+    let mut s = TcpStream::connect(net.local_addr()).unwrap();
+    s.write_all(b"GARBAGE!GARBAGE!").unwrap();
+    match read_frame(&mut s).unwrap() {
+        Some(Frame::Error { reason, .. }) => assert!(reason.contains("magic"), "{reason}"),
+        other => panic!("expected a protocol error, got {other:?}"),
+    }
+    assert!(read_frame(&mut s).unwrap().is_none(), "server closes after garbage");
+
+    // 2) truncated frame: valid header, missing payload bytes
+    let mut s = TcpStream::connect(net.local_addr()).unwrap();
+    let mut buf = Vec::new();
+    write_frame(&mut buf, &Frame::Request { id: 0, pixels: vec![0.5; 64] }).unwrap();
+    s.write_all(&buf[..buf.len() - 7]).unwrap();
+    s.shutdown(std::net::Shutdown::Write).unwrap();
+    match read_frame(&mut s).unwrap() {
+        Some(Frame::Error { .. }) => {}
+        other => panic!("expected a protocol error, got {other:?}"),
+    }
+    assert!(read_frame(&mut s).unwrap().is_none());
+
+    // 3) wrong protocol version: rejected by name
+    let mut s = TcpStream::connect(net.local_addr()).unwrap();
+    let header = [MAGIC[0], MAGIC[1], VERSION + 1, 0x05, 0, 0, 0, 0];
+    s.write_all(&header).unwrap();
+    match read_frame(&mut s).unwrap() {
+        Some(Frame::Error { reason, .. }) => assert!(reason.contains("version"), "{reason}"),
+        other => panic!("expected a version error, got {other:?}"),
+    }
+
+    // the coordinator is untouched: both a fresh wire client and the
+    // in-process path still serve, bit-exact
+    let model = MultiplierModel::new(MultiplierKind::DncOpt);
+    let mut client = NetClient::connect(net.local_addr()).unwrap();
+    match client.infer(&pixels[0]).unwrap() {
+        Frame::Response { logits, .. } => assert_eq!(logits, mlp.forward(&pixels[0], &model)),
+        other => panic!("unexpected {other:?}"),
+    }
+    let direct = handle.submit(pixels[1].clone()).unwrap();
+    assert_eq!(direct.logits, mlp.forward(&pixels[1], &model));
+    let snap = handle.metrics().snapshot();
+    assert_eq!(snap.failed_batches, 0, "garbage must never reach a batch");
+    net.shutdown();
+    server.shutdown();
+}
+
+#[test]
+fn graceful_shutdown_drains_in_flight_requests() {
+    let mlp = QuantMlp::random_digits(73);
+    let (server, handle, net, pixels) = start_stack("net-drain", &mlp, |cfg| {
+        // partial batch: 3 requests sit in the batcher until the
+        // 30 ms deadline flush — genuinely in flight during shutdown
+        cfg.batcher.max_wait_us = 30_000;
+    });
+    let client = NetClient::connect(net.local_addr()).unwrap();
+    let (mut tx, mut rx, _info) = client.split();
+    for px in pixels.iter().take(3) {
+        tx.send(px).unwrap();
+    }
+    wait_accepted(&handle, 3);
+    net.shutdown(); // must block until the in-flight replies are written
+    let mut labels = Vec::new();
+    for _ in 0..3 {
+        match rx.recv().unwrap() {
+            Frame::Response { id, label, .. } => labels.push((id, label)),
+            other => panic!("in-flight request lost in shutdown: {other:?}"),
+        }
+    }
+    labels.sort_unstable();
+    let model = MultiplierModel::new(MultiplierKind::DncOpt);
+    for (i, (id, label)) in labels.into_iter().enumerate() {
+        assert_eq!(id, i as u64);
+        assert_eq!(label as usize, mlp.classify(&pixels[i], &model));
+    }
+    assert!(rx.recv().is_err(), "connection closes after the drain");
+    server.shutdown();
+}
+
+#[test]
+fn connection_cap_turns_away_with_rejected_frame() {
+    let mlp = QuantMlp::random_digits(79);
+    let (store, _testset) = synth_artifacts("net-cap", &mlp, 8);
+    let mut cfg = Config::default();
+    cfg.artifacts_dir = store.root().display().to_string();
+    let (server, handle) = CoordinatorServer::start(cfg).unwrap();
+    let net = NetServer::bind(handle.clone(), "127.0.0.1:0", 1).unwrap();
+    let first = NetClient::connect(net.local_addr()).unwrap();
+    assert_eq!(net.live_connections(), 1);
+    let err = NetClient::connect(net.local_addr()).expect_err("over the cap");
+    assert!(format!("{err:#}").contains("connection limit"), "{err:#}");
+    let snap = handle.metrics().snapshot();
+    assert_eq!(snap.rejected, 1);
+    assert_eq!(snap.retry_hints, 0, "connection turn-away has no queue-derived hint");
+    drop(first);
+    net.shutdown();
+    server.shutdown();
+}
