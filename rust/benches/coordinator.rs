@@ -11,7 +11,8 @@ use luna_cim::coordinator::tiler::{Tiler, UnitCosts};
 use luna_cim::coordinator::CoordinatorServer;
 use luna_cim::engine::{BackendSpec, ExecBackend};
 use luna_cim::multiplier::MultiplierKind;
-use luna_cim::nn::QuantMlp;
+use luna_cim::net::{loadgen, NetServer, Scenario};
+use luna_cim::nn::{DigitsDataset, QuantMlp};
 use luna_cim::runtime::ArtifactStore;
 use luna_cim::util::bench::{black_box, Bencher};
 use std::time::Duration;
@@ -49,7 +50,7 @@ fn main() {
             .build()
             .expect("native backend");
     b.run("schedule_replay native run_batch 64-32-10 b=8", 8.0, || {
-        black_box(native.run_batch(&xs, 8, 64).unwrap().outputs.len());
+        black_box(native.run_batch(&xs, 8, 64).unwrap().logits.len());
     });
     let mut calibrated = BackendSpec::Calibrated {
         mlp: mlp_d,
@@ -66,7 +67,52 @@ fn main() {
         black_box(calibrated.run_batch(&xs, 8, 64).unwrap().cost.unwrap().latency_ps);
     });
 
-    // 4. full serve path, if artifacts are present
+    // 4. shard sweep at fixed offered load: the full wire-protocol stack
+    //    over synthesized artifacts (self-contained — no `make
+    //    artifacts`), 1/2/4 batcher shards driven by the same open-loop
+    //    poisson schedule. Lock-contention relief shows up as throughput
+    //    and tail latency; replies stay bit-identical (pinned in
+    //    tests/net_serving.rs).
+    {
+        let mlp = QuantMlp::random_digits(29);
+        let dir = luna_cim::util::test_dir("bench-shards");
+        let store = ArtifactStore::new(&dir);
+        store
+            .write_synthetic(&mlp, &DigitsDataset::generate(4, 7), 8)
+            .expect("write synthetic artifacts");
+        for shards in [1usize, 2, 4] {
+            let mut cfg = Config::default();
+            cfg.artifacts_dir = dir.display().to_string();
+            cfg.workers.count = 4;
+            cfg.batcher.shards = shards;
+            let (server, handle) = CoordinatorServer::start(cfg).expect("server");
+            let net = NetServer::bind(handle, "127.0.0.1:0", 16).expect("bind");
+            let opts = loadgen::LoadgenOptions {
+                scenarios: vec![Scenario::Poisson],
+                loads: vec![4000],
+                connections: 4,
+                requests_per_level: 2000,
+                burst: 16,
+                seed: 11,
+                retry: false,
+            };
+            let results =
+                loadgen::run(&net.local_addr().to_string(), &opts).expect("shard sweep case");
+            let r = &results[0];
+            println!(
+                "bench serve shards={shards} offered=4000/s  served {:>6.0} req/s  \
+                 p50 {:>5} us  p99 {:>6} us  reject rate {:.3}",
+                r.throughput_rps,
+                r.wall_p50_us,
+                r.wall_p99_us,
+                r.reject_rate()
+            );
+            net.shutdown();
+            server.shutdown();
+        }
+    }
+
+    // 5. full serve path, if artifacts are present
     let store = ArtifactStore::default_location();
     if !store.exists() {
         println!("(skipping end-to-end serve bench: run `make artifacts`)");

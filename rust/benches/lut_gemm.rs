@@ -17,7 +17,7 @@
 //! points — CI uploads it as a workflow artifact.
 
 use luna_cim::multiplier::{MultiplierKind, MultiplierModel};
-use luna_cim::nn::{BatchScratch, PlanScratch, QuantLinear, QuantMlp};
+use luna_cim::nn::{BatchScratch, LayerPlan, PlanScratch, QuantLinear, QuantMlp};
 use luna_cim::util::bench::{black_box, Bencher};
 use luna_cim::util::Rng;
 use std::fmt::Write as _;
@@ -96,6 +96,44 @@ fn run_case(
     flat.mean_ns / planned_t1_ns.max(1e-9)
 }
 
+/// Race the SWAR strip accumulator against the retained scalar path on
+/// one layer (the per-layer view of the packed-lane win; both are
+/// bit-identical — `tests/gemm_plan.rs` pins that).
+fn run_swar_case(
+    b: &Bencher,
+    model_name: &'static str,
+    layer: &QuantLinear,
+    rows: usize,
+    rng: &mut Rng,
+    records: &mut Vec<Record>,
+) -> f64 {
+    let model = MultiplierModel::new(MultiplierKind::DncOpt);
+    let plan = LayerPlan::compile(layer);
+    assert!(plan.uses_strip(), "SWAR case needs a strip-path layer");
+    let in_dim = layer.in_dim;
+    let macs = (layer.macs() * rows as u64) as f64;
+    let xq: Vec<u8> = (0..rows * in_dim).map(|_| rng.gen_range_u64(0, 16) as u8).collect();
+    let (mut strip, mut out) = (Vec::new(), Vec::new());
+    let swar = b.run(&format!("{model_name} strip SWAR x{rows}"), macs, || {
+        plan.gemm_rows_into(&xq, rows, &model, &mut strip, &mut out);
+        black_box(out.len());
+    });
+    let scalar = b.run(&format!("{model_name} strip scalar x{rows}"), macs, || {
+        plan.gemm_rows_into_scalar(&xq, rows, &model, &mut strip, &mut out);
+        black_box(out.len());
+    });
+    for (kernel, r) in [("strip-swar", &swar), ("strip-scalar", &scalar)] {
+        records.push(Record {
+            model: model_name,
+            batch: rows,
+            kernel: kernel.to_string(),
+            macs_per_s: r.throughput_per_sec(),
+            mean_ns: r.mean_ns,
+        });
+    }
+    scalar.mean_ns / swar.mean_ns.max(1e-9)
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let quick = args.iter().any(|a| a == "--quick");
@@ -135,6 +173,16 @@ fn main() {
             run_case(&b, "wide-256x256", &wide, batch, false, &mut rng, &mut records, &[1, 2, 0]);
         println!("  -> wide batch {batch}: planned t1 is {s:.2}x the flat-gather kernel");
     }
+
+    // Per-layer SWAR vs scalar strip accumulate (the packed 4×i16 lanes
+    // inside the planned kernel): the two strip-path layer shapes of the
+    // suite, at a serving row count.
+    let digits_hidden = &digits.layers[0]; // 64 → 32, strip path
+    let s = run_swar_case(&b, "layer-64x32", digits_hidden, 8, &mut rng, &mut records);
+    println!("  -> layer 64x32: SWAR strip accumulate is {s:.2}x the scalar strip");
+    let wide_layer = &wide.layers[0]; // 256 → 256
+    let s = run_swar_case(&b, "layer-256x256", wide_layer, 8, &mut rng, &mut records);
+    println!("  -> layer 256x256: SWAR strip accumulate is {s:.2}x the scalar strip");
 
     println!(
         "planned/flat speedup at digits batch 8: {planned_speedup_at_8:.2}x \

@@ -87,6 +87,13 @@ pub struct BatcherConfig {
     pub max_wait_us: u64,
     /// Bound on the pending-request queue (backpressure beyond this).
     pub queue_depth: usize,
+    /// Independent batcher lanes (request-id-affine dispatch): each
+    /// shard owns its own batcher lock and waiter map, so connections on
+    /// different shards never contend. Admission (`queue_depth`) stays a
+    /// single global bound across all shards. `1` (default) = the
+    /// unsharded batcher. Replies are bit-identical for every shard
+    /// count.
+    pub shards: usize,
 }
 
 /// Execution worker pool.
@@ -144,6 +151,12 @@ pub struct LoadgenConfig {
     pub loads: Vec<usize>,
     /// Burst size for the bursty arrival process.
     pub burst: usize,
+    /// Client-side auto-retry: when a request is rejected with a
+    /// `retry_after_us` hint, re-send it after the hinted backoff (up to
+    /// a bounded number of attempts) and report goodput next to offered
+    /// load. Off by default — a raw open loop measures the admission
+    /// behaviour itself.
+    pub retry: bool,
 }
 
 /// Simulated-timing knobs for `backend calibrated`.
@@ -188,6 +201,7 @@ impl Default for LoadgenConfig {
             requests_per_level: 2000,
             loads: vec![500, 2000, 8000],
             burst: 32,
+            retry: false,
         }
     }
 }
@@ -200,7 +214,7 @@ impl Default for GemmConfig {
 
 impl Default for BatcherConfig {
     fn default() -> Self {
-        BatcherConfig { max_batch: 8, max_wait_us: 500, queue_depth: 1024 }
+        BatcherConfig { max_batch: 8, max_wait_us: 500, queue_depth: 1024, shards: 1 }
     }
 }
 
@@ -224,6 +238,7 @@ const KNOWN_KEYS: &[&str] = &[
     "batcher.max_batch",
     "batcher.max_wait_us",
     "batcher.queue_depth",
+    "batcher.shards",
     "workers.count",
     "banks.count",
     "banks.units_per_bank",
@@ -235,6 +250,7 @@ const KNOWN_KEYS: &[&str] = &[
     "loadgen.requests_per_level",
     "loadgen.loads",
     "loadgen.burst",
+    "loadgen.retry",
 ];
 
 impl Config {
@@ -266,6 +282,9 @@ impl Config {
         }
         if m.get_opt("batcher.queue_depth").is_some() {
             cfg.batcher.queue_depth = m.get_usize("batcher.queue_depth")?;
+        }
+        if m.get_opt("batcher.shards").is_some() {
+            cfg.batcher.shards = m.get_usize("batcher.shards")?;
         }
         if m.get_opt("workers.count").is_some() {
             cfg.workers.count = m.get_usize("workers.count")?;
@@ -300,6 +319,13 @@ impl Config {
         if m.get_opt("loadgen.burst").is_some() {
             cfg.loadgen.burst = m.get_usize("loadgen.burst")?;
         }
+        if let Some(v) = m.get_opt("loadgen.retry") {
+            cfg.loadgen.retry = match v.trim() {
+                "1" | "true" => true,
+                "0" | "false" => false,
+                other => bail!("loadgen.retry must be 0/1/true/false, got `{other}`"),
+            };
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -320,6 +346,7 @@ impl Config {
         m.set("batcher.max_batch", self.batcher.max_batch);
         m.set("batcher.max_wait_us", self.batcher.max_wait_us);
         m.set("batcher.queue_depth", self.batcher.queue_depth);
+        m.set("batcher.shards", self.batcher.shards);
         m.set("workers.count", self.workers.count);
         m.set("banks.count", self.banks.count);
         m.set("banks.units_per_bank", self.banks.units_per_bank);
@@ -336,6 +363,7 @@ impl Config {
         let loads: Vec<String> = self.loadgen.loads.iter().map(|v| v.to_string()).collect();
         m.set("loadgen.loads", loads.join(","));
         m.set("loadgen.burst", self.loadgen.burst);
+        m.set("loadgen.retry", if self.loadgen.retry { 1 } else { 0 });
         m.render()
     }
 
@@ -346,6 +374,10 @@ impl Config {
         // the size trigger and `push` backpressures (strict admission);
         // batches still form via the deadline flush, padded to max_batch.
         anyhow::ensure!(self.batcher.queue_depth >= 1, "queue_depth must be >= 1");
+        anyhow::ensure!(
+            (1..=64).contains(&self.batcher.shards),
+            "batcher.shards must be in 1..=64"
+        );
         anyhow::ensure!(self.workers.count >= 1, "need at least one worker");
         anyhow::ensure!(self.banks.count >= 1, "need at least one bank");
         anyhow::ensure!(
@@ -484,6 +516,36 @@ mod tests {
         assert!(Config::from_text("loadgen.loads 100,0\n").is_err());
         assert!(Config::from_text("loadgen.burst 0\n").is_err());
         assert!(Config::from_text("loadgen.connections 0\n").is_err());
+    }
+
+    #[test]
+    fn shard_count_parses_roundtrips_and_validates() {
+        let cfg = Config::from_text("batcher.shards 4\n").unwrap();
+        assert_eq!(cfg.batcher.shards, 4);
+        let back = Config::from_text(&cfg.to_text()).unwrap();
+        assert_eq!(back, cfg);
+        assert_eq!(Config::default().batcher.shards, 1, "unsharded by default");
+        assert!(Config::from_text("batcher.shards 0\n").is_err());
+        assert!(Config::from_text("batcher.shards 65\n").is_err());
+    }
+
+    #[test]
+    fn loadgen_retry_parses_roundtrips_and_validates() {
+        let cases = [
+            ("loadgen.retry 1\n", true),
+            ("loadgen.retry true\n", true),
+            ("loadgen.retry 0\n", false),
+            ("loadgen.retry false\n", false),
+        ];
+        for (text, want) in cases {
+            assert_eq!(Config::from_text(text).unwrap().loadgen.retry, want, "{text}");
+        }
+        assert!(!Config::default().loadgen.retry, "raw open loop by default");
+        let mut cfg = Config::default();
+        cfg.loadgen.retry = true;
+        let back = Config::from_text(&cfg.to_text()).unwrap();
+        assert_eq!(back, cfg);
+        assert!(Config::from_text("loadgen.retry maybe\n").is_err());
     }
 
     #[test]

@@ -14,13 +14,16 @@
 //!   batches form via the deadline flush only.
 
 use super::request::InferenceRequest;
+use crate::util::PooledVec;
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
-/// A formed batch, padded to the lowered batch size.
+/// A formed batch, padded to the lowered batch size. The request vec is
+/// pooled: dropping the batch after completion recycles it (and every
+/// request's pixel buffer) instead of freeing.
 #[derive(Debug)]
 pub struct Batch {
-    pub requests: Vec<InferenceRequest>,
+    pub requests: PooledVec<InferenceRequest>,
     /// The batch dimension the executable expects (`>= requests.len()`).
     pub padded_to: usize,
 }
@@ -28,21 +31,29 @@ pub struct Batch {
 impl Batch {
     /// Flattened `padded_to × dim` input matrix; padding rows are zeros.
     pub fn flatten_inputs(&self, dim: usize) -> Vec<f32> {
-        self.flatten_rows(dim, self.padded_to)
+        let mut out = Vec::new();
+        self.flatten_into(dim, self.padded_to, &mut out);
+        out
     }
 
-    /// Flattened `rows × dim` input matrix (`rows >= requests.len()`);
-    /// rows beyond the real requests are zeros. Backends with a fixed
-    /// lowered batch shape (PJRT) pass `padded_to`; the native GEMM
-    /// passes `requests.len()` and skips the padding work entirely.
-    pub fn flatten_rows(&self, dim: usize, rows: usize) -> Vec<f32> {
+    /// Write the flattened `rows × dim` input matrix into `out`
+    /// (cleared first). `rows >= requests.len()`; only rows beyond the
+    /// real requests are zeroed — the real rows are copied straight in,
+    /// with no dead pre-zeroing pass. Backends with a fixed lowered
+    /// batch shape (PJRT) pass `padded_to` and get their zero tail; the
+    /// native GEMM passes `requests.len()`, so the zero fill vanishes
+    /// entirely. `out` drawn from the buffer pool makes this
+    /// allocation-free after warmup.
+    pub fn flatten_into(&self, dim: usize, rows: usize, out: &mut Vec<f32>) {
         assert!(rows >= self.requests.len(), "rows must cover every request");
-        let mut out = vec![0.0f32; rows * dim];
-        for (i, r) in self.requests.iter().enumerate() {
+        out.clear();
+        out.reserve(rows * dim);
+        for r in self.requests.iter() {
             assert_eq!(r.pixels.len(), dim, "request {} has wrong input dim", r.id);
-            out[i * dim..(i + 1) * dim].copy_from_slice(&r.pixels);
+            out.extend_from_slice(&r.pixels);
         }
-        out
+        // padding tail only (PJRT's fixed shape); no-op at rows == len
+        out.resize(rows * dim, 0.0);
     }
 }
 
@@ -138,7 +149,8 @@ impl Batcher {
 
     fn form_batch(&mut self) -> Batch {
         let n = self.queue.len().min(self.max_batch);
-        let requests: Vec<InferenceRequest> = self.queue.drain(..n).collect();
+        let mut requests = PooledVec::with_capacity(n);
+        requests.extend(self.queue.drain(..n));
         Batch { requests, padded_to: self.max_batch }
     }
 }
@@ -207,7 +219,7 @@ mod tests {
         let max_wait = Duration::from_millis(10);
         let mut b = Batcher::new(4, max_wait, 8);
         let t0 = Instant::now();
-        b.queue.push_back(InferenceRequest { id: 0, pixels: vec![0.0; 4], enqueued_at: t0 });
+        b.queue.push_back(InferenceRequest { id: 0, pixels: vec![0.0; 4].into(), enqueued_at: t0 });
         // one pending request: the hint is the remaining deadline budget
         let hint = b.retry_after_us(t0, 1);
         assert!(hint >= 9_000 && hint <= 10_000, "hint {hint}");
@@ -237,9 +249,9 @@ mod tests {
         let mut b = Batcher::new(2, max_wait, 16);
         let t0 = Instant::now();
         // three requests enqueued at t0; max_batch 2 leaves one behind
-        b.queue.push_back(InferenceRequest { id: 0, pixels: vec![0.0; 4], enqueued_at: t0 });
-        b.queue.push_back(InferenceRequest { id: 1, pixels: vec![0.0; 4], enqueued_at: t0 });
-        b.queue.push_back(InferenceRequest { id: 2, pixels: vec![0.0; 4], enqueued_at: t0 });
+        b.queue.push_back(InferenceRequest { id: 0, pixels: vec![0.0; 4].into(), enqueued_at: t0 });
+        b.queue.push_back(InferenceRequest { id: 1, pixels: vec![0.0; 4].into(), enqueued_at: t0 });
+        b.queue.push_back(InferenceRequest { id: 2, pixels: vec![0.0; 4].into(), enqueued_at: t0 });
         let first = b.flush_due(t0 + max_wait).expect("deadline fired");
         assert_eq!(first.requests.len(), 2);
         assert_eq!(b.pending(), 1);
@@ -261,7 +273,7 @@ mod tests {
         let Some(t0) = Instant::now().checked_sub(Duration::from_millis(60)) else {
             return; // clock too close to boot to backdate
         };
-        b.push(InferenceRequest { id: 0, pixels: vec![0.0; 4], enqueued_at: t0 }).unwrap();
+        b.push(InferenceRequest { id: 0, pixels: vec![0.0; 4].into(), enqueued_at: t0 }).unwrap();
         // 60ms of the budget already burned before push
         let left = b.next_deadline_in(Instant::now()).unwrap();
         assert!(left <= Duration::from_millis(40), "deadline ignored enqueue time: {left:?}");

@@ -155,7 +155,9 @@ impl Metrics {
     pub fn snapshot(&self) -> MetricsSnapshot {
         let requests = self.requests.load(Ordering::Relaxed);
         let elapsed = self.started.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);
+        let pool = crate::util::pool::stats();
         MetricsSnapshot {
+            pool,
             requests,
             batches: self.batches.load(Ordering::Relaxed),
             padded_slots: self.padded_slots.load(Ordering::Relaxed),
@@ -213,6 +215,11 @@ pub struct MetricsSnapshot {
     pub host_gemm_mean_us: f64,
     pub host_gemm_p50_us: u64,
     pub host_gemm_p99_us: u64,
+    /// Buffer-pool counters at snapshot time (process-wide — the pool
+    /// is shared by every server in the process; see
+    /// [`crate::util::pool`]). A healthy steady state shows the hit
+    /// rate converging to ~1.0: the serving hot path stops allocating.
+    pub pool: crate::util::PoolStats,
 }
 
 impl MetricsSnapshot {
@@ -266,6 +273,7 @@ impl MetricsSnapshot {
              latency mean {:.0} us p50 {} us p99 {} us max {} us | \
              throughput {:.0} req/s\n\
              host gemm mean {:.0} us p50 {} us p99 {} us\n\
+             pool hits {} misses {} recycled {} (hit rate {:.3})\n\
              sim energy {:.2} nJ ({:.1} fJ/req) | \
              sim latency p50 {} ns p99 {} ns | \
              programs {} stationary hits {} (hit-rate {:.2})\n",
@@ -286,6 +294,10 @@ impl MetricsSnapshot {
             self.host_gemm_mean_us,
             self.host_gemm_p50_us,
             self.host_gemm_p99_us,
+            self.pool.hits,
+            self.pool.misses,
+            self.pool.recycled,
+            self.pool.hit_rate(),
             self.sim_energy_fj / 1e6,
             self.sim_energy_per_request_fj(),
             self.sim_p50_latency_ns,
@@ -422,5 +434,20 @@ mod tests {
         assert!(snap.host_gemm_p99_us >= 900, "p99 bucket bound covers the max sample");
         let report = snap.render();
         assert!(report.contains("host gemm mean"), "{report}");
+    }
+
+    #[test]
+    fn pool_line_renders_with_bounded_hit_rate() {
+        // exercise the pool so the process-wide counters move
+        let v = crate::util::PooledVec::<f32>::with_capacity(64);
+        drop(v);
+        let _again = crate::util::PooledVec::<f32>::with_capacity(64);
+        let snap = Metrics::new().snapshot();
+        assert!(snap.pool.hits + snap.pool.misses > 0);
+        let r = snap.pool.hit_rate();
+        assert!((0.0..=1.0).contains(&r), "hit rate {r}");
+        let report = snap.render();
+        assert!(report.contains("pool hits"), "{report}");
+        assert!(report.contains("hit rate"), "{report}");
     }
 }

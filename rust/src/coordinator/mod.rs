@@ -5,7 +5,10 @@
 //!
 //! * [`batcher`] — dynamic batching with a max-batch/max-wait policy
 //!   (batches are padded to the AOT-lowered batch size; deadlines track
-//!   true enqueue times, and `push` backpressures at `queue_depth`);
+//!   true enqueue times, and `push` backpressures at `queue_depth`).
+//!   The server runs `batcher.shards` independent batcher lanes with
+//!   request-id-affine dispatch and pooled, allocation-free request
+//!   buffers (see the crate docs' `## Serving hot path`);
 //! * [`worker`] — a pool of OS threads, each building its own execution
 //!   backend from a [`crate::engine::BackendSpec`]: the native batched
 //!   LUT-GEMM by default, or a PJRT client + compiled executable with the
@@ -37,4 +40,4 @@ pub use router::Router;
 pub use server::{Backpressure, Completion, CoordinatorServer, ServerHandle};
 pub use state::BankState;
 pub use tiler::{LayerSchedule, ModelSchedule, ScheduleCost, Tiler, UnitCosts};
-pub use worker::{BatchJob, WorkerPool};
+pub use worker::{BatchJob, ReplyTicket, ReplyTo, WorkerPool, WorkerReply};

@@ -1,21 +1,39 @@
 //! Request/response types on the serving path.
 
+use crate::util::pool::{ClassPool, PoolItem, PooledVec};
 use std::time::Instant;
 
 /// Monotonically increasing request identifier.
 pub type RequestId = u64;
 
 /// One inference request: an 8×8 image flattened to 64 pixels in [0, 1].
+///
+/// The pixels live in a pooled buffer ([`PooledVec`]) so the wire path
+/// can decode a request and carry it to the batcher without allocating;
+/// the buffer recycles when the request is dropped after its batch
+/// completes. `Vec<f32>` converts in via `Into`, so non-hot-path callers
+/// keep passing plain vectors.
 #[derive(Debug, Clone)]
 pub struct InferenceRequest {
     pub id: RequestId,
-    pub pixels: Vec<f32>,
+    pub pixels: PooledVec<f32>,
     pub enqueued_at: Instant,
 }
 
 impl InferenceRequest {
-    pub fn new(id: RequestId, pixels: Vec<f32>) -> Self {
-        InferenceRequest { id, pixels, enqueued_at: Instant::now() }
+    pub fn new(id: RequestId, pixels: impl Into<PooledVec<f32>>) -> Self {
+        InferenceRequest { id, pixels: pixels.into(), enqueued_at: Instant::now() }
+    }
+}
+
+/// The batcher's formed-batch request vecs recycle through their own
+/// pool class; returning one drops its requests, which cascades each
+/// pixel buffer back to the `f32` pool.
+static REQUEST_VEC_POOL: ClassPool<InferenceRequest> = ClassPool::new();
+
+impl PoolItem for InferenceRequest {
+    fn pool() -> &'static ClassPool<InferenceRequest> {
+        &REQUEST_VEC_POOL
     }
 }
 
@@ -48,6 +66,14 @@ mod tests {
     fn request_records_enqueue_time() {
         let r = InferenceRequest::new(7, vec![0.0; 64]);
         assert_eq!(r.id, 7);
+        assert_eq!(r.pixels.len(), 64);
         assert!(r.enqueued_at.elapsed().as_secs() < 1);
+    }
+
+    #[test]
+    fn request_accepts_pooled_pixels_directly() {
+        let px = PooledVec::from_slice(&[0.25f32; 4]);
+        let r = InferenceRequest::new(1, px);
+        assert_eq!(r.pixels, vec![0.25f32; 4]);
     }
 }

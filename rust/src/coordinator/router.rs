@@ -28,11 +28,10 @@ impl Router {
         self.pool.size()
     }
 
-    /// Pick a worker: rotation target unless it is clearly busier than the
-    /// least-loaded worker.
-    fn pick(&self) -> usize {
-        let n = self.pool.size();
-        let rot = self.next.fetch_add(1, Ordering::Relaxed) % n;
+    /// Pick a worker starting from a rotation position: the rotation
+    /// target unless it is clearly busier than the least-loaded worker.
+    fn pick_from(&self, rot: usize) -> usize {
+        let rot = rot % self.pool.size();
         let (mut best, mut best_load) = (rot, self.in_flight[rot].load(Ordering::Relaxed));
         for (i, c) in self.in_flight.iter().enumerate() {
             let load = c.load(Ordering::Relaxed);
@@ -45,16 +44,35 @@ impl Router {
         best
     }
 
+    /// Reserve a worker slot *before* the job exists: returns the chosen
+    /// worker and the in-flight guard, so a caller can register
+    /// completion state keyed on the batch first and only then submit
+    /// ([`Router::submit_to`]) — a reply can never race its own context.
+    /// `rot` seeds the rotation (sharded batcher lanes pass
+    /// `shard + k·shards` so distinct shards prefer disjoint workers);
+    /// [`Router::dispatch`] uses the internal rotation counter.
+    pub fn begin(&self, rot: usize) -> (usize, InFlightGuard) {
+        let idx = self.pick_from(rot);
+        self.in_flight[idx].fetch_add(1, Ordering::Relaxed);
+        self.dispatched.fetch_add(1, Ordering::Relaxed);
+        (idx, InFlightGuard { counter: self.in_flight[idx].clone(), worker: idx })
+    }
+
+    /// Submit a job to the worker reserved by [`Router::begin`]. On
+    /// error the caller still holds the guard; dropping it releases the
+    /// in-flight slot.
+    pub fn submit_to(&self, idx: usize, job: BatchJob) -> Result<()> {
+        self.pool.submit(idx, job)
+    }
+
     /// Dispatch a job; the returned guard decrements the in-flight counter
     /// when dropped (call after the reply resolves).
     pub fn dispatch(&self, job: BatchJob) -> Result<InFlightGuard> {
-        let idx = self.pick();
-        self.in_flight[idx].fetch_add(1, Ordering::Relaxed);
-        self.dispatched.fetch_add(1, Ordering::Relaxed);
-        match self.pool.submit(idx, job) {
-            Ok(()) => Ok(InFlightGuard { counter: self.in_flight[idx].clone(), worker: idx }),
+        let (idx, guard) = self.begin(self.next.fetch_add(1, Ordering::Relaxed));
+        match self.submit_to(idx, job) {
+            Ok(()) => Ok(guard),
             Err(e) => {
-                self.in_flight[idx].fetch_sub(1, Ordering::Relaxed);
+                drop(guard);
                 Err(e)
             }
         }
@@ -104,12 +122,16 @@ mod tests {
         for i in 0..6 {
             let (tx, rx) = crate::util::oneshot::channel();
             let inputs = vec![i as f32 / 8.0; 16];
-            let guard = router
-                .dispatch(BatchJob { inputs: inputs.clone(), batch: 1, dim: 16, reply: tx })
-                .unwrap();
+            let job = BatchJob {
+                inputs: inputs.clone().into(),
+                batch: 1,
+                dim: 16,
+                reply: crate::coordinator::worker::ReplyTo::Oneshot(tx),
+            };
+            let guard = router.dispatch(job).unwrap();
             hit[guard.worker] = true;
             let out = rx.recv().unwrap().unwrap();
-            assert_eq!(out.outputs[0], mlp.forward(&inputs, &model));
+            assert_eq!(out.logits, mlp.forward(&inputs, &model));
             drop(guard);
         }
         assert!(hit[0] && hit[1], "both workers used");

@@ -3,31 +3,90 @@
 //! Each worker is an OS thread that builds its **own** backend from a
 //! [`BackendSpec`] — PJRT handles are not `Send`, and the native LUT-GEMM
 //! backend owns per-thread scratch buffers — then serves batch jobs from
-//! an mpsc queue. Replies travel over in-tree oneshot channels
-//! ([`crate::util::oneshot`]); the submitting client thread blocks on the
-//! receiver — the concurrency model of this std-thread coordinator.
+//! an allocation-free [`crate::util::queue`]. Replies go one of two
+//! ways ([`ReplyTo`]): standalone callers (tests, benches) block on an
+//! in-tree oneshot; the serving coordinator instead has the worker push
+//! a [`WorkerReply`] straight onto the shared completion queue, so the
+//! steady-state batch path allocates nothing — no per-batch oneshot, no
+//! mpsc node.
 
 use crate::engine::{BackendSpec, BatchOutput};
-use crate::util::oneshot;
+use crate::util::{oneshot, queue, PooledVec};
 use crate::Result;
 use anyhow::{anyhow, ensure};
 use std::sync::mpsc;
 use std::thread::JoinHandle;
 
-/// One unit of work: an already-padded batch.
+/// One unit of work: an already-flattened batch. `inputs` is pooled and
+/// recycles as soon as the worker finishes the batch.
 pub struct BatchJob {
     /// Row-major `batch × dim` inputs.
-    pub inputs: Vec<f32>,
+    pub inputs: PooledVec<f32>,
     pub batch: usize,
     pub dim: usize,
-    /// Reply channel: outputs plus the simulated CiM cost when the
-    /// backend models one (`backend calibrated`).
-    pub reply: oneshot::Sender<Result<BatchOutput>>,
+    /// Where the result goes.
+    pub reply: ReplyTo,
+}
+
+/// Reply route for a [`BatchJob`].
+pub enum ReplyTo {
+    /// Block-and-wait callers: one oneshot per job (tests, benches —
+    /// allocates, off the serving hot path).
+    Oneshot(oneshot::Sender<Result<BatchOutput>>),
+    /// The serving path: a drop-guarded ticket that pushes a
+    /// [`WorkerReply`] onto the coordinator's completion queue
+    /// (allocation-free on the happy path).
+    Queue(ReplyTicket),
+}
+
+/// A finished batch on its way to the completion pool.
+pub struct WorkerReply {
+    /// Matches the [`BatchJob`]'s ticket (keys the coordinator's
+    /// pending-batch context; the shard index rides in the low bits).
+    pub batch_id: u64,
+    pub result: Result<BatchOutput>,
+}
+
+/// One-shot completion-queue reply handle. [`ReplyTicket::send`]
+/// delivers the worker's result; a ticket dropped *without* sending —
+/// a worker panic unwinding mid-batch, or a queued job discarded when
+/// its worker's queue died — delivers a "worker dropped reply" error
+/// instead, so a dispatched batch context can never be stranded. (The
+/// old per-batch oneshot gave the same guarantee via `recv() == None`,
+/// at the cost of an allocation per batch.)
+pub struct ReplyTicket {
+    tx: Option<queue::Sender<WorkerReply>>,
+    batch_id: u64,
+}
+
+impl ReplyTicket {
+    pub fn new(tx: queue::Sender<WorkerReply>, batch_id: u64) -> Self {
+        ReplyTicket { tx: Some(tx), batch_id }
+    }
+
+    /// Deliver the result (consumes the ticket; the drop guard disarms).
+    pub fn send(mut self, result: Result<BatchOutput>) {
+        if let Some(tx) = self.tx.take() {
+            let _ = tx.send(WorkerReply { batch_id: self.batch_id, result });
+        }
+    }
+}
+
+impl Drop for ReplyTicket {
+    fn drop(&mut self) {
+        if let Some(tx) = self.tx.take() {
+            let reply = WorkerReply {
+                batch_id: self.batch_id,
+                result: Err(anyhow!("worker dropped reply")),
+            };
+            let _ = tx.send(reply);
+        }
+    }
 }
 
 /// A pool of execution worker threads.
 pub struct WorkerPool {
-    senders: Vec<mpsc::Sender<BatchJob>>,
+    senders: Vec<queue::Sender<BatchJob>>,
     handles: Vec<JoinHandle<()>>,
 }
 
@@ -41,7 +100,7 @@ impl WorkerPool {
         let mut handles = Vec::with_capacity(count);
         let (ready_tx, ready_rx) = mpsc::channel::<std::result::Result<(), String>>();
         for worker_id in 0..count {
-            let (tx, rx) = mpsc::channel::<BatchJob>();
+            let (tx, rx) = queue::channel::<BatchJob>();
             let spec = spec.clone();
             let ready = ready_tx.clone();
             let handle = std::thread::Builder::new()
@@ -84,7 +143,7 @@ impl WorkerPool {
 
 fn worker_main(
     spec: BackendSpec,
-    rx: mpsc::Receiver<BatchJob>,
+    rx: queue::Receiver<BatchJob>,
     ready: mpsc::Sender<std::result::Result<(), String>>,
 ) {
     let mut backend = match spec.build() {
@@ -97,9 +156,17 @@ fn worker_main(
             return;
         }
     };
-    while let Ok(job) = rx.recv() {
-        let res = backend.run_batch(&job.inputs, job.batch, job.dim);
-        let _ = job.reply.send(res);
+    while let Some(job) = rx.recv() {
+        let BatchJob { inputs, batch, dim, reply } = job;
+        let res = backend.run_batch(&inputs, batch, dim);
+        // recycle the flat input buffer before waking the reply path
+        drop(inputs);
+        match reply {
+            ReplyTo::Oneshot(tx) => {
+                let _ = tx.send(res);
+            }
+            ReplyTo::Queue(ticket) => ticket.send(res),
+        }
     }
 }
 
@@ -108,6 +175,15 @@ mod tests {
     use super::*;
     use crate::multiplier::{MultiplierKind, MultiplierModel};
     use crate::nn::QuantMlp;
+
+    fn job(
+        inputs: Vec<f32>,
+        batch: usize,
+        dim: usize,
+    ) -> (BatchJob, oneshot::Receiver<Result<BatchOutput>>) {
+        let (tx, rx) = oneshot::channel();
+        (BatchJob { inputs: inputs.into(), batch, dim, reply: ReplyTo::Oneshot(tx) }, rx)
+    }
 
     fn native_spec() -> (BackendSpec, QuantMlp) {
         let mlp = QuantMlp::random_for_study(11);
@@ -120,15 +196,55 @@ mod tests {
         let model = MultiplierModel::new(MultiplierKind::DncOpt);
         let pool = WorkerPool::spawn(2, spec).unwrap();
         for i in 0..4 {
-            let (tx, rx) = oneshot::channel();
             let inputs: Vec<f32> = (0..32).map(|j| ((i * 32 + j) % 16) as f32 / 16.0).collect();
-            pool.submit(i, BatchJob { inputs: inputs.clone(), batch: 2, dim: 16, reply: tx })
-                .unwrap();
+            let (j, rx) = job(inputs.clone(), 2, 16);
+            pool.submit(i, j).unwrap();
             let out = rx.recv().unwrap().unwrap();
             let expect = mlp.forward_batch(&inputs, 2, &model);
-            assert_eq!(out.outputs[0], expect);
+            assert_eq!(out.logits, expect);
         }
         pool.shutdown();
+    }
+
+    #[test]
+    fn queue_reply_routes_through_completion_channel() {
+        let (spec, mlp) = native_spec();
+        let model = MultiplierModel::new(MultiplierKind::DncOpt);
+        let pool = WorkerPool::spawn(1, spec).unwrap();
+        let (ctx, crx) = queue::channel::<WorkerReply>();
+        let inputs = vec![0.25f32; 2 * 16];
+        pool.submit(
+            0,
+            BatchJob {
+                inputs: inputs.clone().into(),
+                batch: 2,
+                dim: 16,
+                reply: ReplyTo::Queue(ReplyTicket::new(ctx, 42)),
+            },
+        )
+        .unwrap();
+        let reply = crx.recv().expect("worker pushes onto the completion queue");
+        assert_eq!(reply.batch_id, 42);
+        assert_eq!(reply.result.unwrap().logits, mlp.forward_batch(&inputs, 2, &model));
+        pool.shutdown();
+    }
+
+    #[test]
+    fn dropped_ticket_delivers_a_worker_death_error() {
+        // A ticket dropped without sending (panic unwind, discarded job)
+        // must still resolve its batch — the stranded-context guard.
+        let (ctx, crx) = queue::channel::<WorkerReply>();
+        drop(ReplyTicket::new(ctx, 7));
+        let reply = crx.recv().expect("drop guard delivers");
+        assert_eq!(reply.batch_id, 7);
+        let err = reply.result.expect_err("drop guard reports worker death");
+        assert!(format!("{err:#}").contains("worker dropped reply"), "{err:#}");
+
+        // and a consumed ticket's guard is disarmed: exactly one reply
+        let (ctx, crx) = queue::channel::<WorkerReply>();
+        ReplyTicket::new(ctx, 8).send(Ok(BatchOutput::plain(vec![1.0f32])));
+        assert_eq!(crx.recv().unwrap().batch_id, 8);
+        assert!(crx.try_recv().is_none(), "no double delivery");
     }
 
     #[test]
@@ -151,9 +267,8 @@ mod tests {
         let pool = WorkerPool::spawn(1, spec).unwrap();
         let mut costs = Vec::new();
         for _ in 0..2 {
-            let (tx, rx) = oneshot::channel();
-            let inputs = vec![0.5f32; 2 * 16];
-            pool.submit(0, BatchJob { inputs, batch: 2, dim: 16, reply: tx }).unwrap();
+            let (j, rx) = job(vec![0.5f32; 2 * 16], 2, 16);
+            pool.submit(0, j).unwrap();
             costs.push(rx.recv().unwrap().unwrap().cost.expect("calibrated cost"));
         }
         assert!(costs[0].programs > 0);
@@ -166,8 +281,8 @@ mod tests {
     fn worker_surfaces_bad_batch_shape_as_error() {
         let (spec, _) = native_spec();
         let pool = WorkerPool::spawn(1, spec).unwrap();
-        let (tx, rx) = oneshot::channel();
-        pool.submit(0, BatchJob { inputs: vec![0.0; 5], batch: 1, dim: 16, reply: tx }).unwrap();
+        let (j, rx) = job(vec![0.0; 5], 1, 16);
+        pool.submit(0, j).unwrap();
         assert!(rx.recv().unwrap().is_err());
         pool.shutdown();
     }
@@ -181,7 +296,7 @@ mod tests {
 
     #[cfg(feature = "pjrt")]
     mod pjrt {
-        use crate::coordinator::worker::{BatchJob, WorkerPool};
+        use crate::coordinator::worker::{BatchJob, ReplyTo, WorkerPool};
         use crate::engine::BackendSpec;
         use crate::util::oneshot;
         use std::path::PathBuf;
@@ -208,11 +323,19 @@ ENTRY main {
             for i in 0..4 {
                 let (tx, rx) = oneshot::channel();
                 let inputs: Vec<f32> = (0..6).map(|j| (i * 6 + j) as f32).collect();
-                pool.submit(i, BatchJob { inputs: inputs.clone(), batch: 2, dim: 3, reply: tx })
-                    .unwrap();
+                pool.submit(
+                    i,
+                    BatchJob {
+                        inputs: inputs.clone().into(),
+                        batch: 2,
+                        dim: 3,
+                        reply: ReplyTo::Oneshot(tx),
+                    },
+                )
+                .unwrap();
                 let out = rx.recv().unwrap().unwrap();
                 let expect: Vec<f32> = inputs.iter().map(|v| v * 2.0).collect();
-                assert_eq!(out.outputs[0], expect);
+                assert_eq!(out.logits, expect);
             }
             pool.shutdown();
         }

@@ -114,7 +114,7 @@ mod tests {
         let xs = vec![0.4f32; 3 * 16];
         let got = cal.run_batch(&xs, 3, 16).unwrap();
         let want = native.run_batch(&xs, 3, 16).unwrap();
-        assert_eq!(got.outputs, want.outputs, "calibrated numerics == native numerics");
+        assert_eq!(got.logits, want.logits, "calibrated numerics == native numerics");
         let cost = got.cost.unwrap();
         assert_eq!(cost.programs + cost.stationary_hits, STUDY_ELEMS as u64);
         assert!(cost.energy_fj > 0.0 && cost.latency_ps > 0);

@@ -41,16 +41,19 @@ pub use pjrt::PjrtBackend;
 use crate::coordinator::tiler::{ScheduleCost, Tiler, UnitCosts};
 use crate::multiplier::MultiplierKind;
 use crate::nn::QuantMlp;
+use crate::util::PooledVec;
 use crate::Result;
 use std::path::PathBuf;
 
-/// Result of one executed batch: every output tuple element flattened
-/// (the MLP artifacts return a single-element tuple of `batch × out_dim`
-/// logits), plus the simulated CiM cost when the backend models it.
+/// Result of one executed batch: the flattened `batch × out_dim` logits
+/// (every serving artifact returns a single logits tensor; PJRT's
+/// single-element output tuple unwraps to the same shape), plus the
+/// simulated CiM cost when the backend models it. The logits buffer is
+/// pooled — dropping the output after fan-out recycles it.
 #[derive(Debug, Clone)]
 pub struct BatchOutput {
-    /// Flattened output tuple elements.
-    pub outputs: Vec<Vec<f32>>,
+    /// Flattened `batch × out_dim` logits.
+    pub logits: PooledVec<f32>,
     /// Simulated CiM cost of this batch ([`CalibratedBackend`] only;
     /// `None` from backends that execute without a timing model).
     pub cost: Option<ScheduleCost>,
@@ -61,9 +64,9 @@ pub struct BatchOutput {
 }
 
 impl BatchOutput {
-    /// Outputs with no timing model attached.
-    pub fn plain(outputs: Vec<Vec<f32>>) -> Self {
-        BatchOutput { outputs, cost: None, host_gemm_us: 0 }
+    /// Logits with no timing model attached.
+    pub fn plain(logits: impl Into<PooledVec<f32>>) -> Self {
+        BatchOutput { logits: logits.into(), cost: None, host_gemm_us: 0 }
     }
 }
 
@@ -161,11 +164,11 @@ mod tests {
             assert_eq!(backend.name(), "native");
             let xs = vec![0.25f32; 2 * 16];
             let out = backend.run_batch(&xs, 2, 16).unwrap();
-            assert_eq!(out.outputs.len(), 1);
+            assert_eq!(out.logits.len(), 2 * 8);
             assert!(out.cost.is_none(), "native backend carries no timing model");
             let model = MultiplierModel::new(MultiplierKind::DncOpt);
             let want = mlp.forward(&xs[0..16], &model);
-            assert_eq!(&out.outputs[0][0..8], &want[..], "threads {threads}");
+            assert_eq!(&out.logits[0..8], &want[..], "threads {threads}");
         }
     }
 
@@ -193,7 +196,7 @@ mod tests {
             .build()
             .unwrap();
         let native = nb.run_batch(&xs, 2, 16).unwrap();
-        assert_eq!(out.outputs, native.outputs);
+        assert_eq!(out.logits, native.logits);
     }
 
     #[cfg(not(feature = "pjrt"))]

@@ -14,6 +14,7 @@
 use super::{BatchOutput, ExecBackend};
 use crate::multiplier::{MultiplierKind, MultiplierModel};
 use crate::nn::{MlpPlan, PlanScratch, QuantMlp};
+use crate::util::PooledVec;
 use crate::Result;
 use anyhow::ensure;
 use std::time::Instant;
@@ -81,8 +82,11 @@ impl ExecBackend for NativeBackend {
             dim
         );
         let t0 = Instant::now();
-        let logits = self.plan.forward_batch_with(inputs, batch, &self.model, &mut self.scratch);
-        let mut out = BatchOutput::plain(vec![logits]);
+        // pooled output: the logits buffer recycles once the reply path
+        // has fanned the batch out (zero steady-state allocations)
+        let mut logits = PooledVec::with_capacity(batch * self.mlp.output_dim());
+        self.plan.forward_batch_into(inputs, batch, &self.model, &mut self.scratch, &mut logits);
+        let mut out = BatchOutput::plain(logits);
         out.host_gemm_us = t0.elapsed().as_micros() as u64;
         Ok(out)
     }
@@ -106,7 +110,7 @@ mod tests {
                 for b in 0..batch {
                     let want = mlp.forward(&xs[b * 64..(b + 1) * 64], &model);
                     assert_eq!(
-                        &out.outputs[0][b * 10..(b + 1) * 10],
+                        &out.logits[b * 10..(b + 1) * 10],
                         &want[..],
                         "{kind} threads {threads} row {b}"
                     );
@@ -138,7 +142,7 @@ mod tests {
             let want = mlp.forward(&x, &model);
             for b in 0..4 {
                 assert_eq!(
-                    &out.outputs[0][b * 10..(b + 1) * 10],
+                    &out.logits[b * 10..(b + 1) * 10],
                     &want[..],
                     "round {round} row {b}"
                 );
@@ -154,6 +158,6 @@ mod tests {
         let xs = vec![0.5f32; 2 * 64];
         let out = backend.run_batch(&xs, 2, 64).unwrap();
         let model = MultiplierModel::new(MultiplierKind::DncOpt);
-        assert_eq!(&out.outputs[0][0..10], &mlp.forward(&xs[0..64], &model)[..]);
+        assert_eq!(&out.logits[0..10], &mlp.forward(&xs[0..64], &model)[..]);
     }
 }

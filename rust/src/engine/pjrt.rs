@@ -28,8 +28,11 @@ impl ExecBackend for PjrtBackend {
 
     fn run_batch(&mut self, inputs: &[f32], batch: usize, dim: usize) -> Result<BatchOutput> {
         let t0 = std::time::Instant::now();
-        let outputs = self.model.run_f32(&[(inputs, &[batch as i64, dim as i64])])?;
-        let mut out = BatchOutput::plain(outputs);
+        let mut outputs = self.model.run_f32(&[(inputs, &[batch as i64, dim as i64])])?;
+        // The serving artifacts lower to a single-element output tuple;
+        // the logits tensor is its first element.
+        anyhow::ensure!(!outputs.is_empty(), "executable returned an empty output tuple");
+        let mut out = BatchOutput::plain(outputs.swap_remove(0));
         out.host_gemm_us = t0.elapsed().as_micros() as u64;
         Ok(out)
     }
@@ -57,7 +60,7 @@ ENTRY main {
         let inputs: Vec<f32> = (0..6).map(|i| i as f32).collect();
         let out = backend.run_batch(&inputs, 2, 3).unwrap();
         let expect: Vec<f32> = inputs.iter().map(|v| v * 2.0).collect();
-        assert_eq!(out.outputs[0], expect);
+        assert_eq!(out.logits, expect);
         assert!(out.cost.is_none());
     }
 

@@ -71,6 +71,16 @@
 //!      Narrow heads (`out_dim < 16`) can't amortize 16 strip rows and
 //!      fall back to the flat gather per layer, decided at compile
 //!      time — bit-identical arithmetic on both paths.
+//!    * *SWAR strip accumulate*: within each bucket segment, four
+//!      gathered strip products pack into one `u64` as 4×16-bit lanes,
+//!      collapsing four adds into one 64-bit add. Strip products are
+//!      multiplier-table bytes (`u8`, so ≤ 255 even for approximate
+//!      tables) and lanes flush into a wide sum every 256 packed adds
+//!      (256 · 255 < 2¹⁶), so no lane can carry into its neighbour —
+//!      integer addition being associative, the result is bit-identical
+//!      to the retained scalar path (the tail for short segments, and
+//!      the reference `LayerPlan::gemm_rows_into_scalar` the benches
+//!      race against).
 //!    * *Batch tiling* (`gemm.threads` config, `--gemm-threads` on
 //!      `repro serve`, `0` = one per core): batch rows split into
 //!      contiguous chunks across `std::thread::scope` threads, each
@@ -90,6 +100,58 @@
 //! to the simulated CiM latency (`host gemm` line in
 //! [`coordinator::MetricsSnapshot::render`]), so host speed and fabric
 //! speed are comparable from one report.
+//!
+//! ## Serving hot path
+//!
+//! Lookup only beats arithmetic when the data movement around it is
+//! cheap, so the steady-state request path is **allocation-free and
+//! contention-free** end to end (pinned by `tests/hot_path_allocs.rs`:
+//! a counting global allocator proves zero heap allocations per warm
+//! request over the loopback wire path).
+//!
+//! **Pooled buffer lifecycle.** Every hot-path buffer is a
+//! [`util::PooledVec`] drawn from a process-wide size-classed pool
+//! ([`util::pool`]) and returned on drop:
+//!
+//! ```text
+//! socket ──▶ reader: decode via reusable payload scratch
+//!            pixels ◀── pool          (Request frame, pooled)
+//!        ──▶ submit: request carries the pixel buffer into a shard's
+//!            batcher (admission = one shared atomic outstanding count)
+//!        ──▶ flush: batch's request vec ◀── pool
+//!            flatten_into: flat inputs ◀── pool   (no dead zero fill;
+//!            only PJRT's fixed shape pads a zero tail)
+//!        ──▶ worker (util::queue, allocation-free): planned GEMM writes
+//!            logits ◀── pool; input buffer ──▶ pool
+//!        ──▶ completion pool: fan out under the shard's waiter lock,
+//!            reply frame logits ◀── pool; batch + pixels ──▶ pool
+//!        ──▶ writer: encode via reusable scratch, flush socket,
+//!            drop frame ──▶ logits back to pool
+//! ```
+//!
+//! Worker jobs, worker replies and per-connection reply frames travel
+//! over [`util::queue`] (`Mutex<VecDeque>` + condvar — steady-state
+//! capacity, no per-send node like `std::sync::mpsc`), and the
+//! coordinator-side tiler cost is memoized per batch size once the
+//! fabric state is warm. The metrics' `pool` line (hits / misses /
+//! recycled, hit rate) shows the pool converging.
+//!
+//! **Shard dispatch rules** (`batcher.shards`, `--shards`): request ids
+//! assign round-robin, and a request with id `i` lives entirely on
+//! shard `i % shards` — its batcher slot, its waiter entry, its batch.
+//! Batches never mix shards, each shard seeds the worker router at a
+//! disjoint rotation (`shard + turn·shards`), and admission stays one
+//! global atomic bound (`batcher.queue_depth`) so `retry_after_us`
+//! hints and reject totals are exact across shards. Because the planned
+//! kernel accumulates each output row independently in a fixed integer
+//! order, replies are bit-identical for every shard count
+//! (`tests/net_serving.rs` sweeps shards ∈ {1, 2, 4}).
+//!
+//! **SWAR safety argument**: see the packed-lane bullet under
+//! `## Kernel architecture` — bounded products (`u8` table entries,
+//! ≤ 255) plus a flush every 256 packed adds keep every 16-bit lane
+//! below overflow, so the packed sum equals the scalar sum exactly,
+//! not approximately.
 //!
 //! ## Timing model
 //!

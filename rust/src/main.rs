@@ -31,8 +31,8 @@ USAGE:
   repro figures  [--id N] [--csv]
   repro mul <W> <Y>
   repro simulate [--multiplier SLUG] [--weight W] [--inputs a,b,c]
-  repro serve    [--config FILE] [--requests N] [--clients N] [--multiplier SLUG] [--backend native|calibrated|pjrt] [--time-scale X] [--gemm-threads N] [--listen ADDR]
-  repro loadgen  [--addr HOST:PORT | --synthetic] [--config FILE] [--scenario closed|poisson|bursty|all] [--loads R1,R2,..] [--connections N] [--requests N] [--burst N] [--backend SLUG] [--time-scale X] [--seed N] [--quick] [--save-json [PATH]]
+  repro serve    [--config FILE] [--requests N] [--clients N] [--multiplier SLUG] [--backend native|calibrated|pjrt] [--time-scale X] [--gemm-threads N] [--shards N] [--listen ADDR]
+  repro loadgen  [--addr HOST:PORT | --synthetic] [--config FILE] [--scenario closed|poisson|bursty|all] [--loads R1,R2,..] [--connections N] [--requests N] [--burst N] [--retry] [--shards N] [--backend SLUG] [--time-scale X] [--seed N] [--quick] [--save-json [PATH]]
   repro eval     [--artifacts DIR]
   repro ablation [--artifacts DIR]
   repro export   [--out DIR]
@@ -44,13 +44,17 @@ Backends: native (in-process batched LUT-GEMM, default),
           pjrt (AOT HLO; needs the `pjrt` build feature)
 --gemm-threads: in-batch planned-GEMM threads per worker (native/calibrated;
                 0 = one per core, default 1 — workers already scale across batches)
+--shards: independent batcher lanes (request-id-affine dispatch; admission
+          stays one global bound, replies are bit-identical for any count)
 --listen: expose the coordinator over TCP (wire protocol) instead of running
           the in-process synthetic load; serves until killed
 loadgen:  drives a wire endpoint with closed-loop, open-loop poisson and bursty
           arrivals, sweeping --loads (req/s) and reporting throughput, wall
           p50/p99, sim p50/p99 and reject rate per level; with no --addr it
           spawns its own loopback server (--synthetic = synthesized artifacts,
-          no `make artifacts` needed); --save-json writes BENCH_serve.json
+          no `make artifacts` needed); --retry honors retry_after_us hints
+          client-side and reports goodput vs offered load; --save-json
+          writes BENCH_serve.json
 ";
 
 /// Minimal flag parser: `--key value` pairs plus positional args.
@@ -222,6 +226,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     cfg.timing.time_scale = args.flag_parse("time-scale", cfg.timing.time_scale)?;
     cfg.gemm.threads = args.flag_parse("gemm-threads", cfg.gemm.threads)?;
+    cfg.batcher.shards = args.flag_parse("shards", cfg.batcher.shards)?;
     if let Some(listen) = args.flag("listen") {
         cfg.net.listen = listen.to_string();
     }
@@ -240,11 +245,12 @@ fn serve_listen(cfg: Config) -> Result<()> {
     let (server, handle) = CoordinatorServer::start(cfg.clone())?;
     let net = NetServer::bind(handle, &cfg.net.listen, cfg.net.max_connections)?;
     println!(
-        "listening on {} | backend {} | {} workers | batch {} | {} connection slots",
+        "listening on {} | backend {} | {} workers | batch {} | {} shard(s) | {} connection slots",
         net.local_addr(),
         cfg.backend.slug(),
         cfg.workers.count,
         cfg.batcher.max_batch,
+        cfg.batcher.shards,
         cfg.net.max_connections
     );
     println!("serving until killed (drive it with `repro loadgen --addr {}`)", net.local_addr());
@@ -352,6 +358,10 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
             .map_err(|_| anyhow::anyhow!("flag --loads: cannot parse `{loads}`"))?;
     }
     cfg.loadgen.burst = args.flag_parse("burst", cfg.loadgen.burst)?;
+    if args.flag("retry").is_some() {
+        cfg.loadgen.retry = true;
+    }
+    cfg.batcher.shards = args.flag_parse("shards", cfg.batcher.shards)?;
     // validate in BOTH modes — an invalid knob must not silently
     // produce a degenerate all-zero bench against an external endpoint
     cfg.validate()?;
@@ -363,6 +373,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         requests_per_level: cfg.loadgen.requests_per_level,
         burst: cfg.loadgen.burst,
         seed: args.flag_parse("seed", 17u64)?,
+        retry: cfg.loadgen.retry,
     };
     // `--save-json` without a value parses as boolean "true"
     let save_json: Option<String> = match args.flag("save-json") {
@@ -389,8 +400,12 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
             let net = NetServer::bind(handle, "127.0.0.1:0", slots)?;
             let addr = net.local_addr().to_string();
             println!(
-                "spawned loopback server on {addr} (backend {backend}, {} workers, batch {})",
-                cfg.workers.count, cfg.batcher.max_batch
+                "spawned loopback server on {addr} (backend {backend}, {} workers, batch {}, \
+                 {} shard(s){})",
+                cfg.workers.count,
+                cfg.batcher.max_batch,
+                cfg.batcher.shards,
+                if cfg.loadgen.retry { ", client retry on" } else { "" }
             );
             let results = loadgen::run(&addr, &opts)?;
             net.shutdown();

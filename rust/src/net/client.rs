@@ -6,7 +6,8 @@
 //! generator can keep sending on schedule while another thread drains
 //! replies (replies arrive in *completion* order, matched by `id`).
 
-use super::protocol::{read_frame, write_frame, Frame};
+use super::protocol::{read_frame_with, write_frame_with, Frame};
+use crate::util::PooledVec;
 use crate::Result;
 use anyhow::{bail, Context};
 use std::io::{BufReader, BufWriter, Write as _};
@@ -21,15 +22,21 @@ pub struct ServerInfo {
     pub backend: String,
 }
 
-/// Sending half: owns a buffered stream clone and the id counter.
+/// Sending half: owns a buffered stream clone, the id counter and a
+/// reusable encode scratch (steady-state sends allocate nothing — the
+/// request's pixel buffer comes from the pool, the payload encodes
+/// through the scratch).
 pub struct NetSender {
     w: BufWriter<TcpStream>,
     next_id: u64,
+    scratch: Vec<u8>,
 }
 
-/// Receiving half: decodes reply frames.
+/// Receiving half: decodes reply frames through a reusable payload
+/// scratch into pooled float buffers (dropping a reply recycles them).
 pub struct NetReceiver {
     r: BufReader<TcpStream>,
+    scratch: Vec<u8>,
 }
 
 /// A connected wire-protocol client (handshake already done).
@@ -47,8 +54,8 @@ impl NetClient {
         let stream = TcpStream::connect(addr).context("connecting to serving endpoint")?;
         let _ = stream.set_nodelay(true);
         let read_half = stream.try_clone().context("cloning stream for receive half")?;
-        let mut tx = NetSender { w: BufWriter::new(stream), next_id: 0 };
-        let mut rx = NetReceiver { r: BufReader::new(read_half) };
+        let mut tx = NetSender { w: BufWriter::new(stream), next_id: 0, scratch: Vec::new() };
+        let mut rx = NetReceiver { r: BufReader::new(read_half), scratch: Vec::new() };
         tx.send_frame(&Frame::Hello)?;
         let info = match rx.recv()? {
             Frame::Info { in_dim, out_dim, max_batch, backend } => ServerInfo {
@@ -112,16 +119,18 @@ impl NetSender {
         self.next_id
     }
 
-    /// Send one request frame; returns its wire id.
+    /// Send one request frame; returns its wire id. The pixel slice
+    /// copies into a pooled buffer and the frame encodes through the
+    /// sender's scratch — zero allocations once warm.
     pub fn send(&mut self, pixels: &[f32]) -> Result<u64> {
         let id = self.next_id;
         self.next_id += 1;
-        self.send_frame(&Frame::Request { id, pixels: pixels.to_vec() })?;
+        self.send_frame(&Frame::Request { id, pixels: PooledVec::from_slice(pixels) })?;
         Ok(id)
     }
 
     fn send_frame(&mut self, frame: &Frame) -> Result<()> {
-        write_frame(&mut self.w, frame)?;
+        write_frame_with(&mut self.w, frame, &mut self.scratch)?;
         self.w.flush().context("flushing request")?;
         Ok(())
     }
@@ -131,7 +140,7 @@ impl NetReceiver {
     /// Block for the next server frame. A clean server-side close is an
     /// error here — callers track how many replies they are owed.
     pub fn recv(&mut self) -> Result<Frame> {
-        match read_frame(&mut self.r)? {
+        match read_frame_with(&mut self.r, &mut self.scratch)? {
             Some(frame) => Ok(frame),
             None => bail!("server closed the connection"),
         }

@@ -24,6 +24,14 @@
 //! CiM latency p50/p99 from the response cost fields, and the reject
 //! rate with the mean `retry_after_us` hint. `render_json` writes the
 //! `BENCH_serve.json` CI artifact.
+//!
+//! With `--retry` (`loadgen.retry`), the generator honors the server's
+//! structured hints: a `Rejected` reply re-sends after sleeping the
+//! hinted backoff, up to [`RETRY_ATTEMPTS`] attempts, and the reported
+//! **goodput** (successfully served rate) next to the offered load shows
+//! what admission control actually delivers under retry storms. Wall
+//! latency for a retried request runs from its *first* send, so retry
+//! queueing shows up in the percentiles.
 
 use super::client::NetClient;
 use super::protocol::Frame;
@@ -32,8 +40,17 @@ use crate::Result;
 use anyhow::Context;
 use std::collections::HashMap;
 use std::fmt::Write as _;
-use std::sync::{Arc, Mutex};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
+
+/// Maximum send attempts per logical request under `--retry` (1 initial
+/// + up to 2 hint-honoring retries); a request still rejected after the
+/// budget counts as a terminal rejection.
+pub const RETRY_ATTEMPTS: u32 = 2;
+
+/// Ceiling on how long a retry sleeps on one hint (a pathological hint
+/// must not stall the generator).
+const MAX_RETRY_BACKOFF: Duration = Duration::from_millis(50);
 
 /// Traffic shape of one loadgen case.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -79,6 +96,8 @@ pub struct LoadgenOptions {
     pub burst: usize,
     /// Workload RNG seed (pixel noise + arrival gaps).
     pub seed: u64,
+    /// Honor `retry_after_us` hints with client-side re-sends.
+    pub retry: bool,
 }
 
 /// One measured (scenario, offered-load) case.
@@ -88,13 +107,24 @@ pub struct CaseResult {
     /// Target offered load (req/s); `0` = closed-loop (self-clocked).
     pub offered_rps: u64,
     pub connections: usize,
+    /// Logical requests issued (retries are counted in `retries`, not
+    /// here — `sent` is the denominator of `reject_rate`).
     pub sent: usize,
     pub ok: usize,
+    /// Terminal rejections (with `--retry`: still rejected after the
+    /// retry budget).
     pub rejected: usize,
     pub errors: usize,
+    /// Hint-honoring re-sends performed (0 without `--retry`).
+    pub retries: usize,
     pub wall_s: f64,
     /// Served throughput (completed / wall).
     pub throughput_rps: f64,
+    /// Goodput: successfully served requests per second — what the
+    /// clients actually got, next to the offered load (identical to
+    /// `throughput_rps`; named separately in the JSON so the
+    /// goodput-vs-offered curve reads directly).
+    pub goodput_rps: f64,
     /// Client-measured wall latency, exact percentiles (µs).
     pub wall_p50_us: u64,
     pub wall_p99_us: u64,
@@ -123,10 +153,13 @@ struct ConnTally {
     ok: usize,
     rejected: usize,
     errors: usize,
+    retries: usize,
     retry_hint_sum_us: u64,
 }
 
 impl ConnTally {
+    /// Record a terminal reply. `Rejected` handling (terminal vs retry)
+    /// lives at the call sites, which own the retry policy.
     fn absorb(&mut self, frame: &Frame, sent_at: Option<Instant>) {
         match frame {
             Frame::Response { cost, .. } => {
@@ -143,6 +176,47 @@ impl ConnTally {
             _ => self.errors += 1,
         }
     }
+}
+
+/// Sleep the hinted backoff (bounded by [`MAX_RETRY_BACKOFF`]).
+fn backoff(retry_after_us: u64) {
+    std::thread::sleep(Duration::from_micros(retry_after_us).min(MAX_RETRY_BACKOFF));
+}
+
+/// Execute one re-send order (sender thread): wait out the hint, then
+/// send a fresh workload sample carrying the original first-send time
+/// and the incremented attempt count.
+fn resend(
+    tx: &mut super::client::NetSender,
+    rng: &mut Rng,
+    in_dim: usize,
+    pending: &Mutex<HashMap<u64, Pending>>,
+    order: RetryOrder,
+) -> Result<()> {
+    sleep_until(order.due);
+    let pixels: Vec<f32> = (0..in_dim).map(|_| rng.gen_range_f32(0.0, 1.0)).collect();
+    let id = tx.next_id();
+    pending
+        .lock()
+        .unwrap()
+        .insert(id, Pending { first_sent: order.first_sent, attempt: order.attempt });
+    tx.send(&pixels)?;
+    Ok(())
+}
+
+/// Send-time bookkeeping per in-flight wire id.
+struct Pending {
+    /// First attempt's send time — retried requests measure wall
+    /// latency from here, so retry queueing shows in the percentiles.
+    first_sent: Instant,
+    attempt: u32,
+}
+
+/// A receiver-decided re-send, executed by the sender thread once due.
+struct RetryOrder {
+    due: Instant,
+    attempt: u32,
+    first_sent: Instant,
 }
 
 /// Run every requested case against `addr` and return the results in
@@ -170,6 +244,7 @@ fn per_conn_quota(opts: &LoadgenOptions) -> usize {
 
 fn run_closed(addr: &str, opts: &LoadgenOptions) -> Result<CaseResult> {
     let quota = per_conn_quota(opts);
+    let retry = opts.retry;
     let mut clients = Vec::new();
     for _ in 0..opts.connections {
         clients.push(NetClient::connect(addr)?);
@@ -185,8 +260,23 @@ fn run_closed(addr: &str, opts: &LoadgenOptions) -> Result<CaseResult> {
             for _ in 0..quota {
                 let pixels: Vec<f32> = (0..in_dim).map(|_| rng.gen_range_f32(0.0, 1.0)).collect();
                 let sent_at = Instant::now();
-                let reply = client.infer(&pixels)?;
-                tally.absorb(&reply, Some(sent_at));
+                let mut attempt = 0u32;
+                loop {
+                    let reply = client.infer(&pixels)?;
+                    match &reply {
+                        Frame::Rejected { retry_after_us, .. }
+                            if retry && attempt < RETRY_ATTEMPTS && *retry_after_us >= 1 =>
+                        {
+                            attempt += 1;
+                            tally.retries += 1;
+                            backoff(*retry_after_us);
+                        }
+                        _ => {
+                            tally.absorb(&reply, Some(sent_at));
+                            break;
+                        }
+                    }
+                }
             }
             Ok(tally)
         }));
@@ -213,15 +303,21 @@ fn run_open(
     for (c, client) in clients.into_iter().enumerate() {
         let seed = opts.seed ^ (c as u64).wrapping_mul(0x517C_C1B7);
         let burst = opts.burst.max(1);
+        let retry = opts.retry;
         let (mut tx, mut rx, info) = client.split();
         // send-time map shared between the two halves: replies arrive
         // in completion order, so latency is matched by wire id.
-        let pending: Arc<Mutex<HashMap<u64, Instant>>> = Arc::new(Mutex::new(HashMap::new()));
+        let pending: Arc<Mutex<HashMap<u64, Pending>>> = Arc::new(Mutex::new(HashMap::new()));
         let sender_pending = pending.clone();
+        // receiver → sender re-send orders (retry mode); dropping the
+        // producer ends the sender's drain loop.
+        let (retry_tx, retry_rx) = mpsc::channel::<RetryOrder>();
         let sender = std::thread::spawn(move || -> Result<()> {
             let mut rng = Rng::seed_from_u64(seed);
             let mut due = Instant::now();
             let mut in_burst = 0usize;
+            // not-yet-due retries parked between scheduled sends
+            let mut parked: Vec<RetryOrder> = Vec::new();
             for _ in 0..quota {
                 match scenario {
                     Scenario::Poisson => {
@@ -239,22 +335,83 @@ fn run_open(
                     }
                     Scenario::Closed => unreachable!("closed-loop uses run_closed"),
                 }
+                // service retries that came due during the pacing gap
+                // (re-sends interleave at send-loop granularity — the
+                // open-loop schedule itself is never delayed by more
+                // than one due retry)
+                while let Ok(o) = retry_rx.try_recv() {
+                    parked.push(o);
+                }
+                let now = Instant::now();
+                let mut i = 0;
+                while i < parked.len() {
+                    if parked[i].due <= now {
+                        let o = parked.swap_remove(i);
+                        resend(&mut tx, &mut rng, info.in_dim, &sender_pending, o)?;
+                    } else {
+                        i += 1;
+                    }
+                }
                 let pixels: Vec<f32> =
                     (0..info.in_dim).map(|_| rng.gen_range_f32(0.0, 1.0)).collect();
                 // record the send time before the frame can be answered
                 let id = tx.next_id();
-                sender_pending.lock().unwrap().insert(id, Instant::now());
+                sender_pending
+                    .lock()
+                    .unwrap()
+                    .insert(id, Pending { first_sent: Instant::now(), attempt: 0 });
                 tx.send(&pixels)?;
+            }
+            // drain: keep servicing re-send orders until the receiver
+            // has its full quota of terminal replies and hangs up
+            loop {
+                while let Ok(o) = retry_rx.try_recv() {
+                    parked.push(o);
+                }
+                if parked.is_empty() {
+                    match retry_rx.recv() {
+                        Ok(o) => parked.push(o),
+                        Err(_) => break,
+                    }
+                } else {
+                    let next = parked
+                        .iter()
+                        .enumerate()
+                        .min_by_key(|(_, o)| o.due)
+                        .map(|(i, _)| i)
+                        .unwrap();
+                    let o = parked.swap_remove(next);
+                    resend(&mut tx, &mut rng, info.in_dim, &sender_pending, o)?;
+                }
             }
             Ok(())
         });
         threads.push(std::thread::spawn(move || -> Result<ConnTally> {
             let mut tally = ConnTally::default();
-            for _ in 0..quota {
+            let mut terminals = 0usize;
+            while terminals < quota {
                 let reply = rx.recv().context("reply stream ended early")?;
-                let sent_at = reply_id(&reply).and_then(|id| pending.lock().unwrap().remove(&id));
-                tally.absorb(&reply, sent_at);
+                let pend = reply_id(&reply).and_then(|id| pending.lock().unwrap().remove(&id));
+                let first_sent = pend.as_ref().map(|p| p.first_sent);
+                let attempt = pend.as_ref().map(|p| p.attempt).unwrap_or(0);
+                if let Frame::Rejected { retry_after_us, .. } = &reply {
+                    if retry && attempt < RETRY_ATTEMPTS && *retry_after_us >= 1 {
+                        let order = RetryOrder {
+                            due: Instant::now()
+                                + Duration::from_micros(*retry_after_us).min(MAX_RETRY_BACKOFF),
+                            attempt: attempt + 1,
+                            first_sent: first_sent.unwrap_or_else(Instant::now),
+                        };
+                        if retry_tx.send(order).is_ok() {
+                            tally.retries += 1;
+                            continue; // not terminal: the re-send answers later
+                        }
+                    }
+                }
+                tally.absorb(&reply, first_sent);
+                terminals += 1;
             }
+            drop(retry_tx); // ends the sender's drain loop
             match sender.join() {
                 Ok(res) => res?,
                 Err(_) => anyhow::bail!("sender thread panicked"),
@@ -306,17 +463,20 @@ fn aggregate(
     let wall_s = t0.elapsed().as_secs_f64();
     let mut wall_us = Vec::new();
     let mut sim_ns = Vec::new();
-    let (mut ok, mut rejected, mut errors, mut hint_sum) = (0usize, 0usize, 0usize, 0u64);
+    let (mut ok, mut rejected, mut errors) = (0usize, 0usize, 0usize);
+    let (mut retries, mut hint_sum) = (0usize, 0u64);
     for t in tallies {
         wall_us.extend(t.wall_us);
         sim_ns.extend(t.sim_ns);
         ok += t.ok;
         rejected += t.rejected;
         errors += t.errors;
+        retries += t.retries;
         hint_sum += t.retry_hint_sum_us;
     }
     wall_us.sort_unstable();
     sim_ns.sort_unstable();
+    let served_rps = if wall_s > 0.0 { ok as f64 / wall_s } else { 0.0 };
     CaseResult {
         scenario,
         offered_rps,
@@ -325,8 +485,10 @@ fn aggregate(
         ok,
         rejected,
         errors,
+        retries,
         wall_s,
-        throughput_rps: if wall_s > 0.0 { ok as f64 / wall_s } else { 0.0 },
+        throughput_rps: served_rps,
+        goodput_rps: served_rps,
         wall_p50_us: percentile(&wall_us, 0.50),
         wall_p99_us: percentile(&wall_us, 0.99),
         sim_p50_ns: percentile(&sim_ns, 0.50),
@@ -363,14 +525,15 @@ pub fn render_table(results: &[CaseResult]) -> String {
     let mut out = String::new();
     let _ = writeln!(
         out,
-        "{:<8} {:>10} {:>7} {:>7} {:>7} {:>8} {:>10} {:>9} {:>9} {:>9} {:>9}",
+        "{:<8} {:>10} {:>7} {:>7} {:>7} {:>7} {:>8} {:>10} {:>9} {:>9} {:>9} {:>9}",
         "scenario",
         "offered/s",
         "sent",
         "ok",
+        "retry",
         "reject",
         "rate",
-        "served/s",
+        "goodput/s",
         "p50 us",
         "p99 us",
         "sim p50",
@@ -381,14 +544,15 @@ pub fn render_table(results: &[CaseResult]) -> String {
             if r.offered_rps == 0 { "closed".to_string() } else { r.offered_rps.to_string() };
         let _ = writeln!(
             out,
-            "{:<8} {:>10} {:>7} {:>7} {:>7} {:>8.3} {:>10.0} {:>9} {:>9} {:>9} {:>9}",
+            "{:<8} {:>10} {:>7} {:>7} {:>7} {:>7} {:>8.3} {:>10.0} {:>9} {:>9} {:>9} {:>9}",
             r.scenario,
             offered,
             r.sent,
             r.ok,
+            r.retries,
             r.rejected,
             r.reject_rate(),
-            r.throughput_rps,
+            r.goodput_rps,
             r.wall_p50_us,
             r.wall_p99_us,
             r.sim_p50_ns,
@@ -408,9 +572,9 @@ pub fn render_json(results: &[CaseResult], backend: &str) -> String {
         let _ = write!(
             out,
             "    {{\"scenario\": \"{}\", \"offered_rps\": {}, \"connections\": {}, \
-             \"sent\": {}, \"ok\": {}, \"rejected\": {}, \"errors\": {}, \
-             \"reject_rate\": {:.4}, \"throughput_rps\": {:.1}, \"wall_s\": {:.3}, \
-             \"wall_p50_us\": {}, \"wall_p99_us\": {}, \
+             \"sent\": {}, \"ok\": {}, \"rejected\": {}, \"errors\": {}, \"retries\": {}, \
+             \"reject_rate\": {:.4}, \"throughput_rps\": {:.1}, \"goodput_rps\": {:.1}, \
+             \"wall_s\": {:.3}, \"wall_p50_us\": {}, \"wall_p99_us\": {}, \
              \"sim_p50_ns\": {}, \"sim_p99_ns\": {}, \"mean_retry_after_us\": {:.1}}}",
             r.scenario,
             r.offered_rps,
@@ -419,8 +583,10 @@ pub fn render_json(results: &[CaseResult], backend: &str) -> String {
             r.ok,
             r.rejected,
             r.errors,
+            r.retries,
             r.reject_rate(),
             r.throughput_rps,
+            r.goodput_rps,
             r.wall_s,
             r.wall_p50_us,
             r.wall_p99_us,
@@ -477,8 +643,10 @@ mod tests {
             ok: 90,
             rejected: 10,
             errors: 0,
+            retries: 7,
             wall_s: 0.05,
             throughput_rps: 1800.0,
+            goodput_rps: 1800.0,
             wall_p50_us: 700,
             wall_p99_us: 2100,
             sim_p50_ns: 500,
@@ -492,6 +660,8 @@ mod tests {
             "\"offered_rps\": 2000",
             "\"reject_rate\": 0.1000",
             "\"throughput_rps\": 1800.0",
+            "\"goodput_rps\": 1800.0",
+            "\"retries\": 7",
             "\"wall_p99_us\": 2100",
             "\"sim_p99_ns\": 900",
             "\"mean_retry_after_us\": 450.0",

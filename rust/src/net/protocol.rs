@@ -19,7 +19,7 @@
 //! errors — the transport layer closes the connection rather than
 //! resynchronize (a length-prefixed stream has no safe resync point).
 
-use crate::coordinator::InferenceResponse;
+use crate::util::PooledVec;
 use crate::Result;
 use anyhow::{bail, ensure, Context};
 use std::io::{Read, Write};
@@ -56,11 +56,17 @@ pub struct WireCost {
 /// One protocol frame. Clients send `Hello` then `Request`s; servers
 /// answer `Info`, then one `Response`, `Rejected` or `Error` per
 /// request (matched by `id`, in completion order — not send order).
+///
+/// The float payloads (`Request` pixels, `Response` logits) live in
+/// pooled buffers ([`PooledVec`]; plain `Vec<f32>` converts in with
+/// `.into()`): decoding draws from the pool instead of allocating, and
+/// dropping a frame after it is handled recycles the buffer — the wire
+/// path's half of the zero-allocation hot path.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Frame {
     /// Client → server: classify one image. `id` is client-assigned and
     /// echoed verbatim on the matching reply.
-    Request { id: u64, pixels: Vec<f32> },
+    Request { id: u64, pixels: PooledVec<f32> },
     /// Server → client: the served answer plus the cost model fields.
     Response {
         id: u64,
@@ -68,7 +74,7 @@ pub enum Frame {
         /// Wall-clock enqueue-to-completion time measured server-side (µs).
         latency_us: u64,
         cost: WireCost,
-        logits: Vec<f32>,
+        logits: PooledVec<f32>,
     },
     /// Server → client: 429-style admission rejection. `retry_after_us`
     /// is the structured backoff hint (`0` = unspecified, e.g. a
@@ -96,64 +102,46 @@ impl Frame {
         }
     }
 
-    /// Build the `Response` frame for a served request, echoing the
-    /// client's wire id (the coordinator's internal id differs).
-    pub fn response(wire_id: u64, resp: &InferenceResponse) -> Frame {
-        Frame::Response {
-            id: wire_id,
-            label: resp.label as u32,
-            latency_us: resp.latency_us,
-            cost: WireCost {
-                energy_fj: resp.sim_energy_fj,
-                latency_ps: resp.sim_latency_ps,
-                programs: resp.sim_programs,
-                stationary_hits: resp.sim_stationary_hits,
-            },
-            logits: resp.logits.clone(),
-        }
-    }
-
-    fn encode_payload(&self) -> Vec<u8> {
-        let mut p = Vec::new();
+    fn encode_payload_into(&self, p: &mut Vec<u8>) {
+        p.clear();
         match self {
             Frame::Request { id, pixels } => {
-                put_u64(&mut p, *id);
-                put_u32(&mut p, pixels.len() as u32);
-                for &x in pixels {
-                    put_f32(&mut p, x);
+                put_u64(p, *id);
+                put_u32(p, pixels.len() as u32);
+                for &x in pixels.iter() {
+                    put_f32(p, x);
                 }
             }
             Frame::Response { id, label, latency_us, cost, logits } => {
-                put_u64(&mut p, *id);
-                put_u32(&mut p, *label);
-                put_u64(&mut p, *latency_us);
-                put_f64(&mut p, cost.energy_fj);
-                put_u64(&mut p, cost.latency_ps);
-                put_u64(&mut p, cost.programs);
-                put_u64(&mut p, cost.stationary_hits);
-                put_u32(&mut p, logits.len() as u32);
-                for &x in logits {
-                    put_f32(&mut p, x);
+                put_u64(p, *id);
+                put_u32(p, *label);
+                put_u64(p, *latency_us);
+                put_f64(p, cost.energy_fj);
+                put_u64(p, cost.latency_ps);
+                put_u64(p, cost.programs);
+                put_u64(p, cost.stationary_hits);
+                put_u32(p, logits.len() as u32);
+                for &x in logits.iter() {
+                    put_f32(p, x);
                 }
             }
             Frame::Rejected { id, retry_after_us, reason } => {
-                put_u64(&mut p, *id);
-                put_u64(&mut p, *retry_after_us);
-                put_str(&mut p, reason);
+                put_u64(p, *id);
+                put_u64(p, *retry_after_us);
+                put_str(p, reason);
             }
             Frame::Error { id, reason } => {
-                put_u64(&mut p, *id);
-                put_str(&mut p, reason);
+                put_u64(p, *id);
+                put_str(p, reason);
             }
             Frame::Hello => {}
             Frame::Info { in_dim, out_dim, max_batch, backend } => {
-                put_u32(&mut p, *in_dim);
-                put_u32(&mut p, *out_dim);
-                put_u32(&mut p, *max_batch);
-                put_str(&mut p, backend);
+                put_u32(p, *in_dim);
+                put_u32(p, *out_dim);
+                put_u32(p, *max_batch);
+                put_str(p, backend);
             }
         }
-        p
     }
 
     fn decode_payload(frame_type: u8, payload: &[u8]) -> Result<Frame> {
@@ -163,7 +151,7 @@ impl Frame {
                 let id = c.u64()?;
                 let n = c.u32()? as usize;
                 ensure!(n * 4 == c.remaining(), "request pixel count disagrees with payload");
-                let mut pixels = Vec::with_capacity(n);
+                let mut pixels = PooledVec::with_capacity(n);
                 for _ in 0..n {
                     pixels.push(c.f32()?);
                 }
@@ -181,7 +169,7 @@ impl Frame {
                 };
                 let n = c.u32()? as usize;
                 ensure!(n * 4 == c.remaining(), "logit count disagrees with payload");
-                let mut logits = Vec::with_capacity(n);
+                let mut logits = PooledVec::with_capacity(n);
                 for _ in 0..n {
                     logits.push(c.f32()?);
                 }
@@ -214,21 +202,32 @@ impl Frame {
 }
 
 /// Serialize one frame (header + payload) to the writer. Does not
-/// flush — callers batch or flush per their latency needs.
+/// flush — callers batch or flush per their latency needs. Allocates a
+/// fresh payload buffer per call; long-lived writers use
+/// [`write_frame_with`] with a reusable scratch instead.
 pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> Result<()> {
-    let payload = frame.encode_payload();
+    let mut scratch = Vec::new();
+    write_frame_with(w, frame, &mut scratch)
+}
+
+/// [`write_frame`] encoding into a caller-owned scratch buffer (cleared
+/// first, capacity retained) — the per-connection writer threads and
+/// client senders reuse one scratch across frames, so steady-state
+/// serialization allocates nothing.
+pub fn write_frame_with<W: Write>(w: &mut W, frame: &Frame, scratch: &mut Vec<u8>) -> Result<()> {
+    frame.encode_payload_into(scratch);
     ensure!(
-        payload.len() as u64 <= MAX_PAYLOAD as u64,
+        scratch.len() as u64 <= MAX_PAYLOAD as u64,
         "frame payload {} exceeds MAX_PAYLOAD",
-        payload.len()
+        scratch.len()
     );
     let mut header = [0u8; 8];
     header[0..2].copy_from_slice(&MAGIC);
     header[2] = VERSION;
     header[3] = frame.frame_type();
-    header[4..8].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    header[4..8].copy_from_slice(&(scratch.len() as u32).to_le_bytes());
     w.write_all(&header).context("writing frame header")?;
-    w.write_all(&payload).context("writing frame payload")?;
+    w.write_all(scratch).context("writing frame payload")?;
     Ok(())
 }
 
@@ -236,7 +235,18 @@ pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> Result<()> {
 /// at a frame boundary); any malformed, truncated, oversized or
 /// version-mismatched input is an `Err` — the caller must close the
 /// connection, since a corrupt length prefix poisons everything after it.
+/// Allocates a fresh payload buffer per call; long-lived readers use
+/// [`read_frame_with`] with a reusable scratch instead.
 pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Frame>> {
+    let mut scratch = Vec::new();
+    read_frame_with(r, &mut scratch)
+}
+
+/// [`read_frame`] decoding through a caller-owned payload scratch
+/// (cleared first, capacity retained). Decoded float payloads draw from
+/// the buffer pool, so a warm connection reads requests and responses
+/// without allocating.
+pub fn read_frame_with<R: Read>(r: &mut R, scratch: &mut Vec<u8>) -> Result<Option<Frame>> {
     let mut header = [0u8; 8];
     match read_exact_or_eof(r, &mut header)? {
         ReadOutcome::CleanEof => return Ok(None),
@@ -251,9 +261,16 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Frame>> {
     let frame_type = header[3];
     let len = u32::from_le_bytes(header[4..8].try_into().unwrap());
     ensure!(len <= MAX_PAYLOAD, "frame payload {len} exceeds MAX_PAYLOAD ({MAX_PAYLOAD})");
-    let mut payload = vec![0u8; len as usize];
-    r.read_exact(&mut payload).context("reading frame payload (truncated frame?)")?;
-    Frame::decode_payload(frame_type, &payload)
+    let len = len as usize;
+    // high-water scratch: grow (zero-filling) only when a frame exceeds
+    // every previous one; otherwise read_exact overwrites in place — no
+    // per-frame zeroing pass on the warm path
+    if scratch.len() < len {
+        scratch.resize(len, 0);
+    }
+    let payload = &mut scratch[..len];
+    r.read_exact(payload).context("reading frame payload (truncated frame?)")?;
+    Frame::decode_payload(frame_type, payload)
 }
 
 enum ReadOutcome {
@@ -364,8 +381,8 @@ mod tests {
     fn every_frame_kind_roundtrips_bit_exactly() {
         let frames = vec![
             Frame::Hello,
-            Frame::Request { id: 7, pixels: vec![0.0, 0.25, -1.5, f32::MIN_POSITIVE] },
-            Frame::Request { id: u64::MAX, pixels: vec![] },
+            Frame::Request { id: 7, pixels: vec![0.0, 0.25, -1.5, f32::MIN_POSITIVE].into() },
+            Frame::Request { id: u64::MAX, pixels: vec![].into() },
             Frame::Response {
                 id: 9,
                 label: 3,
@@ -376,7 +393,7 @@ mod tests {
                     programs: 42,
                     stationary_hits: 2326,
                 },
-                logits: vec![-0.5, 0.5, 1e-7],
+                logits: vec![-0.5, 0.5, 1e-7].into(),
             },
             Frame::Rejected { id: 11, retry_after_us: 500, reason: "server at capacity".into() },
             Frame::Rejected { id: 0, retry_after_us: 0, reason: String::new() },
@@ -392,7 +409,7 @@ mod tests {
     fn frames_concatenate_on_one_stream() {
         let mut buf = Vec::new();
         write_frame(&mut buf, &Frame::Hello).unwrap();
-        write_frame(&mut buf, &Frame::Request { id: 1, pixels: vec![0.5; 64] }).unwrap();
+        write_frame(&mut buf, &Frame::Request { id: 1, pixels: vec![0.5; 64].into() }).unwrap();
         let mut r = &buf[..];
         assert_eq!(read_frame(&mut r).unwrap(), Some(Frame::Hello));
         match read_frame(&mut r).unwrap() {
@@ -411,7 +428,7 @@ mod tests {
         assert!(read_frame(&mut short).is_err());
         // a full header promising more payload than the stream holds
         let mut buf = Vec::new();
-        write_frame(&mut buf, &Frame::Request { id: 1, pixels: vec![0.5; 16] }).unwrap();
+        write_frame(&mut buf, &Frame::Request { id: 1, pixels: vec![0.5; 16].into() }).unwrap();
         buf.truncate(buf.len() - 3);
         let mut r = &buf[..];
         assert!(read_frame(&mut r).is_err());
@@ -444,7 +461,7 @@ mod tests {
     fn inconsistent_counts_and_trailing_bytes_are_rejected() {
         // request whose pixel count disagrees with the payload length
         let mut buf = Vec::new();
-        write_frame(&mut buf, &Frame::Request { id: 1, pixels: vec![1.0, 2.0] }).unwrap();
+        write_frame(&mut buf, &Frame::Request { id: 1, pixels: vec![1.0, 2.0].into() }).unwrap();
         // corrupt the count (first payload field after the 8-byte id)
         buf[8 + 8] = 9;
         assert!(read_frame(&mut &buf[..]).is_err());
@@ -466,33 +483,6 @@ mod tests {
                 assert!(reason.len() <= MAX_REASON);
                 assert!(!reason.is_empty());
                 assert!(reason.chars().all(|c| c == 'é'), "no split surrogate");
-            }
-            other => panic!("unexpected {other:?}"),
-        }
-    }
-
-    #[test]
-    fn response_frame_carries_schedule_cost_fields() {
-        let resp = InferenceResponse {
-            id: 4,
-            logits: vec![0.1, 0.9],
-            label: 1,
-            latency_us: 77,
-            sim_energy_fj: 123.5,
-            sim_latency_ps: 4567,
-            sim_programs: 8,
-            sim_stationary_hits: 90,
-        };
-        match Frame::response(42, &resp) {
-            Frame::Response { id, label, latency_us, cost, logits } => {
-                assert_eq!(id, 42, "wire id, not the coordinator id");
-                assert_eq!(label, 1);
-                assert_eq!(latency_us, 77);
-                assert_eq!(cost.energy_fj, 123.5);
-                assert_eq!(cost.latency_ps, 4567);
-                assert_eq!(cost.programs, 8);
-                assert_eq!(cost.stationary_hits, 90);
-                assert_eq!(logits, vec![0.1, 0.9]);
             }
             other => panic!("unexpected {other:?}"),
         }

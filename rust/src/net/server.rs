@@ -3,9 +3,15 @@
 //! Concurrency model (std threads, matching the coordinator): one
 //! accept-loop thread; per connection, one **reader** thread decoding
 //! frames and feeding [`ServerHandle::submit_with`], and one **writer**
-//! thread serializing reply frames from an mpsc queue. Completions are
-//! callbacks, not blocked threads, so a single connection can keep the
-//! whole admission window in flight while costing two OS threads total.
+//! thread serializing reply frames from an allocation-free queue
+//! ([`crate::util::queue`]). Completions are reply-queue registrations
+//! ([`Completion::Frame`]), not blocked threads, so a single connection
+//! can keep the whole admission window in flight while costing two OS
+//! threads total — and a warm connection's read → submit → reply →
+//! write cycle performs zero heap allocations: the reader decodes
+//! through a reusable payload scratch into pooled pixel buffers, the
+//! coordinator answers with pooled-logit frames, and the writer encodes
+//! through its own scratch before the frame drops back into the pool.
 //!
 //! Replies go out in *completion* order (the `id` field matches them to
 //! requests), so a pipelined client never suffers head-of-line blocking
@@ -29,14 +35,15 @@
 //! carries a [`WRITE_TIMEOUT`], after which the stalled write fails
 //! and the writer closes that connection.
 
-use super::protocol::{read_frame, write_frame, Frame};
+use super::protocol::{read_frame_with, write_frame, write_frame_with, Frame};
 use crate::coordinator::{Backpressure, Completion, ServerHandle};
+use crate::util::queue;
 use crate::Result;
 use anyhow::Context;
 use std::io::{BufReader, BufWriter, Write as _};
 use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
@@ -225,16 +232,19 @@ fn spawn_connection(
     let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
     let reader_stream = stream.try_clone().context("cloning stream for reader")?;
     let writer_stream = stream.try_clone().context("cloning stream for writer")?;
-    let (tx, rx) = mpsc::channel::<Frame>();
+    let (tx, rx) = queue::channel::<Frame>();
     state.live.fetch_add(1, Ordering::Relaxed);
     let writer_state = state.clone();
     let writer_spawn = std::thread::Builder::new().name("luna-net-writer".into()).spawn(move || {
         {
             let mut w = BufWriter::new(&writer_stream);
+            // reused across frames: steady-state encoding allocates
+            // nothing, and the frame's pooled payload recycles on drop
+            let mut scratch = Vec::new();
             // Exits when every sender is gone: the reader's plus one
             // clone per in-flight completion — i.e. after the drain.
-            while let Ok(frame) = rx.recv() {
-                if write_frame(&mut w, &frame).is_err() || w.flush().is_err() {
+            while let Some(frame) = rx.recv() {
+                if write_frame_with(&mut w, &frame, &mut scratch).is_err() || w.flush().is_err() {
                     break;
                 }
             }
@@ -260,10 +270,13 @@ fn spawn_connection(
     Ok(Conn { stream, reader, writer })
 }
 
-fn reader_main(stream: TcpStream, tx: mpsc::Sender<Frame>, handle: ServerHandle) {
+fn reader_main(stream: TcpStream, tx: queue::Sender<Frame>, handle: ServerHandle) {
     let mut r = BufReader::new(&stream);
+    // reused payload scratch: a warm connection decodes every frame
+    // through this buffer and pooled pixel vecs — no allocation per read
+    let mut scratch = Vec::new();
     loop {
-        match read_frame(&mut r) {
+        match read_frame_with(&mut r, &mut scratch) {
             Ok(Some(Frame::Hello)) => {
                 let info = Frame::Info {
                     in_dim: handle.input_dim() as u32,
@@ -276,14 +289,10 @@ fn reader_main(stream: TcpStream, tx: mpsc::Sender<Frame>, handle: ServerHandle)
                 }
             }
             Ok(Some(Frame::Request { id, pixels })) => {
-                let reply = tx.clone();
-                let done: Completion = Box::new(move |res| {
-                    let frame = match res {
-                        Ok(resp) => Frame::response(id, &resp),
-                        Err(why) => Frame::Error { id, reason: why },
-                    };
-                    let _ = reply.send(frame);
-                });
+                // the coordinator builds the Response/Error frame itself
+                // (pooled logits) and pushes it onto this connection's
+                // writer queue — no boxed closure, no allocation
+                let done = Completion::Frame { tx: tx.clone(), wire_id: id };
                 if let Err(e) = handle.submit_with(pixels, done) {
                     let frame = match e.downcast_ref::<Backpressure>() {
                         Some(bp) => Frame::Rejected {

@@ -24,6 +24,14 @@
 //!    gather per layer at compile time; the arithmetic is identical
 //!    either way, only the instruction mix differs.
 //!
+//!    Bucket segments accumulate via **SWAR**: four gathered strip
+//!    products pack into one `u64` as 4×16-bit lanes, so four adds
+//!    collapse into one 64-bit add (see [`swar_segment_sum`]; lane-
+//!    overflow analysis and the bit-identity argument are there). The
+//!    scalar path is retained — as the tail for segment lengths not
+//!    divisible by four, and whole ([`LayerPlan::gemm_rows_into_scalar`])
+//!    as the reference the SWAR kernel is pinned against.
+//!
 //! 3. **Batch tiling** ([`MlpPlan::forward_batch_with`]). Batch rows are
 //!    split into contiguous chunks, one per thread
 //!    (`std::thread::scope`); each chunk runs the whole layer stack
@@ -147,9 +155,10 @@ impl LayerPlan {
 
     /// Planned GEMM over `rows` pre-quantized input rows: expands the
     /// LUT strip once per input row, then sums each output row's buckets
-    /// with sequential column reads. Writes `rows × out_dim` dequantized
-    /// (bias + ReLU applied) activations into `out`, clearing it first.
-    /// Bit-exact with [`QuantLinear::gemm_batch_into`].
+    /// with sequential column reads and the SWAR accumulator. Writes
+    /// `rows × out_dim` dequantized (bias + ReLU applied) activations
+    /// into `out`, clearing it first. Bit-exact with
+    /// [`QuantLinear::gemm_batch_into`].
     pub fn gemm_rows_into(
         &self,
         xq: &[u8],
@@ -157,6 +166,34 @@ impl LayerPlan {
         model: &MultiplierModel,
         strip: &mut Vec<i16>,
         out: &mut Vec<f32>,
+    ) {
+        self.gemm_rows_impl(xq, rows, model, strip, out, true);
+    }
+
+    /// The reference kernel: identical to [`LayerPlan::gemm_rows_into`]
+    /// but with the scalar strip accumulator — the fallback the SWAR
+    /// path is pinned against (`benches/lut_gemm.rs` races the two to
+    /// quantify the win per layer; `tests/gemm_plan.rs` asserts
+    /// bit-identity).
+    pub fn gemm_rows_into_scalar(
+        &self,
+        xq: &[u8],
+        rows: usize,
+        model: &MultiplierModel,
+        strip: &mut Vec<i16>,
+        out: &mut Vec<f32>,
+    ) {
+        self.gemm_rows_impl(xq, rows, model, strip, out, false);
+    }
+
+    fn gemm_rows_impl(
+        &self,
+        xq: &[u8],
+        rows: usize,
+        model: &MultiplierModel,
+        strip: &mut Vec<i16>,
+        out: &mut Vec<f32>,
+        swar: bool,
     ) {
         assert_eq!(xq.len(), rows * self.in_dim, "bad batch input shape");
         let table = model.table();
@@ -171,7 +208,7 @@ impl LayerPlan {
             }
             for r in 0..self.out_dim {
                 let acc = if self.use_strip {
-                    self.accumulate_strip(r, strip)
+                    self.accumulate_strip(r, strip, swar)
                 } else {
                     self.accumulate_flat(r, xrow, table)
                 };
@@ -185,9 +222,10 @@ impl LayerPlan {
         }
     }
 
-    /// Strip inner loop: sequential column reads, pre-gathered products.
+    /// Strip inner loop: sequential column reads, pre-gathered products,
+    /// accumulated four lanes at a time (`swar`) or one by one.
     #[inline]
-    fn accumulate_strip(&self, r: usize, strip: &[i16]) -> i32 {
+    fn accumulate_strip(&self, r: usize, strip: &[i16], swar: bool) -> i32 {
         let ro = &self.offs[r * 17..r * 17 + 17];
         let mut acc = 0i32;
         for w in 0..16 {
@@ -196,11 +234,7 @@ impl LayerPlan {
                 continue;
             }
             let srow = &strip[w * self.in_dim..(w + 1) * self.in_dim];
-            let mut sum = 0i32;
-            for &c in seg {
-                sum += srow[c as usize] as i32;
-            }
-            acc += sum;
+            acc += if swar { swar_segment_sum(seg, srow) } else { scalar_segment_sum(seg, srow) };
         }
         acc
     }
@@ -218,9 +252,73 @@ impl LayerPlan {
     }
 }
 
+/// How many packed adds the SWAR accumulator performs before flushing
+/// its lanes into the wide sum. Strip products come from a
+/// [`MultiplierModel`] table of `u8`s — an *exact* multiplier caps them
+/// at 15·15 = 225, but approximate tables may hold any `u8`, so the
+/// guaranteed bound is the `u8` maximum 255. After 256 packed adds a
+/// 16-bit lane holds at most 256 · 255 = 65 280 < 2¹⁶, so no lane can
+/// ever carry into its neighbour. Do NOT raise this above 256: the
+/// safety margin is sized for 255-valued products, not 225. (With
+/// `in_dim ≤ 4096` a bucket segment packs at most 1024 adds — at most
+/// four flushes per segment.)
+const SWAR_FLUSH_EVERY: u32 = 256;
+
+/// Sum `srow[c]` over a bucket segment's column indices, four columns
+/// per step: the gathered `i16` products (non-negative, ≤ 255 — see
+/// [`SWAR_FLUSH_EVERY`]) pack into one `u64` as 4×16-bit lanes, so four
+/// scalar adds collapse into a single 64-bit add. Lanes flush into a
+/// plain sum before they can overflow and the `seg.len() % 4` tail is
+/// summed scalar, so the result equals the scalar sum exactly — integer
+/// addition is associative, making the kernel bit-identical to
+/// [`scalar_segment_sum`] by construction.
+#[inline]
+fn swar_segment_sum(seg: &[u16], srow: &[i16]) -> i32 {
+    let mut total = 0u64;
+    let mut packed = 0u64;
+    let mut packs = 0u32;
+    let mut chunks = seg.chunks_exact(4);
+    for c in chunks.by_ref() {
+        let p = (srow[c[0] as usize] as u16 as u64)
+            | ((srow[c[1] as usize] as u16 as u64) << 16)
+            | ((srow[c[2] as usize] as u16 as u64) << 32)
+            | ((srow[c[3] as usize] as u16 as u64) << 48);
+        packed += p;
+        packs += 1;
+        if packs == SWAR_FLUSH_EVERY {
+            total += flush_lanes(packed);
+            packed = 0;
+            packs = 0;
+        }
+    }
+    total += flush_lanes(packed);
+    let mut sum = total as i32;
+    for &c in chunks.remainder() {
+        sum += srow[c as usize] as i32;
+    }
+    sum
+}
+
+/// Sum the four 16-bit lanes of a SWAR accumulator.
+#[inline]
+fn flush_lanes(packed: u64) -> u64 {
+    (packed & 0xffff) + ((packed >> 16) & 0xffff) + ((packed >> 32) & 0xffff) + (packed >> 48)
+}
+
+/// The scalar strip accumulator (the SWAR tail and reference path).
+#[inline]
+fn scalar_segment_sum(seg: &[u16], srow: &[i16]) -> i32 {
+    let mut sum = 0i32;
+    for &c in seg {
+        sum += srow[c as usize] as i32;
+    }
+    sum
+}
+
 /// Expand the 256-entry product table into the per-code lookup strip for
-/// one input row: `strip[w·in_dim + j] = table[(w << 4) | x_j]`. Products
-/// of 4-bit codes are ≤ 225, so `i16` holds them losslessly.
+/// one input row: `strip[w·in_dim + j] = table[(w << 4) | x_j]`. Table
+/// entries are `u8` (≤ 255; exact multipliers cap at 15·15 = 225), so
+/// `i16` holds them losslessly.
 fn expand_strip(table: &[u8; 256], xrow: &[u8], strip: &mut Vec<i16>) {
     strip.clear();
     strip.reserve(16 * xrow.len());
@@ -307,19 +405,37 @@ impl MlpPlan {
         model: &MultiplierModel,
         scratch: &mut PlanScratch,
     ) -> Vec<f32> {
+        let mut out = Vec::new();
+        self.forward_batch_into(xs, batch, model, scratch, &mut out);
+        out
+    }
+
+    /// [`MlpPlan::forward_batch_with`] writing the logits into a
+    /// caller-owned buffer (cleared first), so a long-lived backend that
+    /// draws `out` from the buffer pool serves batches with zero heap
+    /// allocations (see [`crate::util::pool`]).
+    pub fn forward_batch_into(
+        &self,
+        xs: &[f32],
+        batch: usize,
+        model: &MultiplierModel,
+        scratch: &mut PlanScratch,
+        out: &mut Vec<f32>,
+    ) {
         let in_dim = self.input_dim();
         let out_dim = self.output_dim();
         assert_eq!(xs.len(), batch * in_dim, "bad batch input shape");
-        let mut out = vec![0.0f32; batch * out_dim];
+        out.clear();
+        out.resize(batch * out_dim, 0.0);
         if batch == 0 {
-            return out;
+            return;
         }
         let threads = self.threads.min(batch);
         if scratch.slots.len() < threads {
             scratch.slots.resize_with(threads, ChunkScratch::default);
         }
         if threads == 1 {
-            self.run_chunk(xs, batch, model, &mut scratch.slots[0], &mut out);
+            self.run_chunk(xs, batch, model, &mut scratch.slots[0], out);
         } else {
             let chunk = batch.div_ceil(threads);
             std::thread::scope(|s| {
@@ -338,7 +454,6 @@ impl MlpPlan {
                 }
             });
         }
-        out
     }
 
     /// Run `rows` batch rows through every layer on one thread's scratch.
@@ -448,6 +563,72 @@ mod tests {
             for b in 0..batch {
                 let want = mlp.forward(&xs[b * 16..(b + 1) * 16], &model);
                 assert_eq!(&got[b * 8..(b + 1) * 8], &want[..], "threads {threads} row {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn swar_segment_sum_matches_scalar_on_random_segments() {
+        let mut rng = Rng::seed_from_u64(31);
+        for len in [0usize, 1, 2, 3, 4, 5, 7, 8, 13, 64, 255, 256, 257, 1000] {
+            let srow: Vec<i16> = (0..1024).map(|_| rng.gen_range_u64(0, 226) as i16).collect();
+            let seg: Vec<u16> = (0..len).map(|_| rng.gen_range_u64(0, 1024) as u16).collect();
+            assert_eq!(
+                swar_segment_sum(&seg, &srow),
+                scalar_segment_sum(&seg, &srow),
+                "len {len}"
+            );
+        }
+    }
+
+    #[test]
+    fn swar_lanes_never_overflow_at_worst_case_products() {
+        // 4096 columns of the worst legal table value 255 (approximate
+        // multiplier tables are arbitrary u8s — exact ones cap at 225)
+        // — the regime the flush cadence is sized for
+        // (SWAR_FLUSH_EVERY · 255 < 2^16).
+        let srow = vec![255i16; 4096];
+        let seg: Vec<u16> = (0..4096).map(|c| c as u16).collect();
+        assert_eq!(swar_segment_sum(&seg, &srow), 4096 * 255);
+        // one past a flush boundary exercises the carry-over path
+        let seg2 = &seg[..(SWAR_FLUSH_EVERY as usize * 4 + 5)];
+        assert_eq!(swar_segment_sum(seg2, &srow), seg2.len() as i32 * 255);
+    }
+
+    #[test]
+    fn swar_plan_is_bit_identical_with_scalar_plan() {
+        let mut rng = Rng::seed_from_u64(59);
+        for (in_dim, out_dim) in [(17usize, 19usize), (64, 32), (130, 16)] {
+            let layer = random_layer(&mut rng, in_dim, out_dim, true);
+            let plan = LayerPlan::compile(&layer);
+            assert!(plan.uses_strip());
+            let rows = 3;
+            let xq: Vec<u8> = (0..rows * in_dim).map(|_| rng.gen_range_u64(0, 16) as u8).collect();
+            for kind in MultiplierKind::ALL {
+                let model = MultiplierModel::new(kind);
+                let (mut strip, mut swar, mut scalar) = (Vec::new(), Vec::new(), Vec::new());
+                plan.gemm_rows_into(&xq, rows, &model, &mut strip, &mut swar);
+                plan.gemm_rows_into_scalar(&xq, rows, &model, &mut strip, &mut scalar);
+                assert_eq!(swar, scalar, "{kind} {in_dim}x{out_dim}");
+            }
+        }
+    }
+
+    #[test]
+    fn forward_batch_into_reuses_the_output_buffer() {
+        let mlp = QuantMlp::random_for_study(15);
+        let model = MultiplierModel::new(MultiplierKind::DncOpt);
+        let plan = MlpPlan::compile(&mlp, 1);
+        let mut scratch = PlanScratch::default();
+        let mut out = Vec::new();
+        for round in 0..3 {
+            let batch = 2 + round;
+            let xs: Vec<f32> = (0..batch * 16).map(|i| (i % 9) as f32 / 9.0).collect();
+            plan.forward_batch_into(&xs, batch, &model, &mut scratch, &mut out);
+            assert_eq!(out.len(), batch * 8);
+            for b in 0..batch {
+                let want = mlp.forward(&xs[b * 16..(b + 1) * 16], &model);
+                assert_eq!(&out[b * 8..(b + 1) * 8], &want[..], "round {round} row {b}");
             }
         }
     }

@@ -14,13 +14,21 @@
 //! * [`check`] — a micro property-testing helper (replaces proptest):
 //!   runs a closure over a deterministic random stream and reports the
 //!   failing seed.
+//! * [`pool`] — size-classed recycled buffers ([`PooledVec`]) backing
+//!   the zero-allocation serving hot path;
+//! * [`queue`] — a steady-state allocation-free MPMC queue (replaces
+//!   `std::sync::mpsc`, which allocates message blocks, on the serving
+//!   hot path).
 
 pub mod bench;
 pub mod check;
 pub mod kv;
 pub mod oneshot;
+pub mod pool;
+pub mod queue;
 pub mod rng;
 
+pub use pool::{ClassPool, PoolItem, PoolStats, PooledVec};
 pub use rng::Rng;
 
 /// Create a unique scratch directory under the system temp dir

@@ -1,0 +1,371 @@
+//! Size-classed buffer pool: recycled `Vec`s for the serving hot path.
+//!
+//! Every layer of the request path used to allocate — frame decode,
+//! request pixels, the batcher's flat input matrix, backend logits,
+//! reply frames. [`PooledVec`] replaces all of them with buffers drawn
+//! from a process-wide free list and returned **on drop**, so after
+//! warmup a steady-state request performs zero heap allocations end to
+//! end (pinned by `tests/hot_path_allocs.rs`).
+//!
+//! Design:
+//!
+//! * **Size classes.** Buffers live in power-of-two capacity classes
+//!   (class `k` holds capacities in `[2^k, 2^(k+1))`). A `get(min_cap)`
+//!   pops from class `ceil(log2(min_cap))`, whose every member is large
+//!   enough by construction; a miss allocates the full class size so the
+//!   buffer recycles cleanly. Serving buffer sizes are effectively
+//!   static (pixels, logits, one flat batch), so each class converges to
+//!   a handful of resident buffers.
+//! * **Drop-based recycling.** [`PooledVec`] is a thin owner that
+//!   returns its buffer in `Drop` — no call-site discipline needed; a
+//!   buffer that crosses threads (request → worker → reply writer) goes
+//!   home from wherever it dies. `clear()` on return drops elements, so
+//!   pools of element types that themselves own pooled buffers (e.g. a
+//!   request vec whose requests hold pixel buffers) cascade correctly.
+//! * **Global, typed pools.** One static [`ClassPool`] per element type
+//!   (registered via [`PoolItem`]); no `Arc` plumbing through ten
+//!   layers, and the pool survives server restarts within a process.
+//!   Stats (hits / misses / recycled) are process-wide atomics surfaced
+//!   on the metrics `pool` line
+//!   ([`crate::coordinator::MetricsSnapshot::render`]).
+
+use std::mem::ManuallyDrop;
+use std::ops::{Deref, DerefMut};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Number of power-of-two size classes (`2^0 ..= 2^(CLASSES-1)` element
+/// capacities; larger buffers share the last class, see [`ClassPool::get`]).
+const CLASSES: usize = 24;
+
+/// Free buffers retained per class; beyond this, returns are dropped
+/// (bounds resident memory against a burst that later subsides).
+const MAX_PER_CLASS: usize = 1024;
+
+/// Process-wide pool counters (all typed pools share them): `hits` =
+/// `get` served from the free list, `misses` = `get` that had to
+/// allocate, `recycled` = buffers returned to a free list.
+static HITS: AtomicU64 = AtomicU64::new(0);
+static MISSES: AtomicU64 = AtomicU64::new(0);
+static RECYCLED: AtomicU64 = AtomicU64::new(0);
+
+/// Point-in-time view of the pool counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub recycled: u64,
+}
+
+impl PoolStats {
+    /// Fraction of `get`s served without allocating (0.0 before any).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Snapshot the process-wide pool counters.
+pub fn stats() -> PoolStats {
+    PoolStats {
+        hits: HITS.load(Ordering::Relaxed),
+        misses: MISSES.load(Ordering::Relaxed),
+        recycled: RECYCLED.load(Ordering::Relaxed),
+    }
+}
+
+/// A free list of `Vec<T>` buffers in power-of-two capacity classes.
+/// Usually used through [`PooledVec`] / [`PoolItem`] rather than
+/// directly.
+pub struct ClassPool<T> {
+    classes: [Mutex<Vec<Vec<T>>>; CLASSES],
+}
+
+/// ceil(log2(cap)) clamped to the class range; class 0 holds capacity 1.
+fn class_for_request(min_cap: usize) -> usize {
+    if min_cap <= 1 {
+        return 0;
+    }
+    ((usize::BITS - (min_cap - 1).leading_zeros()) as usize).min(CLASSES - 1)
+}
+
+/// floor(log2(cap)) clamped: the class whose every member a buffer of
+/// this capacity can serve.
+fn class_for_return(cap: usize) -> usize {
+    debug_assert!(cap >= 1);
+    ((usize::BITS - 1 - cap.leading_zeros()) as usize).min(CLASSES - 1)
+}
+
+impl<T> ClassPool<T> {
+    pub const fn new() -> Self {
+        ClassPool { classes: [const { Mutex::new(Vec::new()) }; CLASSES] }
+    }
+
+    /// Pop a cleared buffer with `capacity >= min_cap` (allocating one
+    /// rounded up to the class size on a miss).
+    pub fn get(&self, min_cap: usize) -> Vec<T> {
+        let class = class_for_request(min_cap);
+        let popped = { self.classes[class].lock().unwrap().pop() };
+        match popped {
+            Some(mut v) => {
+                HITS.fetch_add(1, Ordering::Relaxed);
+                // Only the open-ended last class can under-deliver
+                // (buffers beyond 2^(CLASSES-1) share it).
+                if v.capacity() < min_cap {
+                    v.reserve(min_cap);
+                }
+                v
+            }
+            None => {
+                MISSES.fetch_add(1, Ordering::Relaxed);
+                Vec::with_capacity((1usize << class).max(min_cap))
+            }
+        }
+    }
+
+    /// Return a buffer to its class (cleared; elements are dropped here,
+    /// which cascades nested pooled buffers home). Zero-capacity buffers
+    /// and over-full classes are simply dropped.
+    pub fn put(&self, mut v: Vec<T>) {
+        v.clear();
+        if v.capacity() == 0 {
+            return;
+        }
+        let class = class_for_return(v.capacity());
+        let mut list = self.classes[class].lock().unwrap();
+        if list.len() < MAX_PER_CLASS {
+            list.push(v);
+            RECYCLED.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Element types with a process-wide [`ClassPool`]. Implemented for the
+/// serving path's buffer elements (`u8`, `f32` here; request vecs in
+/// [`crate::coordinator::request`]).
+pub trait PoolItem: Sized + 'static {
+    fn pool() -> &'static ClassPool<Self>;
+}
+
+static U8_POOL: ClassPool<u8> = ClassPool::new();
+static F32_POOL: ClassPool<f32> = ClassPool::new();
+
+impl PoolItem for u8 {
+    fn pool() -> &'static ClassPool<u8> {
+        &U8_POOL
+    }
+}
+
+impl PoolItem for f32 {
+    fn pool() -> &'static ClassPool<f32> {
+        &F32_POOL
+    }
+}
+
+/// An owned `Vec<T>` drawn from (and returned to) the type's process
+/// pool. Derefs to `Vec<T>`, so `push`/`extend_from_slice`/indexing all
+/// work in place; dropping it anywhere recycles the buffer.
+pub struct PooledVec<T: PoolItem> {
+    buf: ManuallyDrop<Vec<T>>,
+}
+
+impl<T: PoolItem> PooledVec<T> {
+    /// An empty pooled buffer (no capacity reserved until first use).
+    pub fn new() -> Self {
+        PooledVec { buf: ManuallyDrop::new(Vec::new()) }
+    }
+
+    /// A cleared pooled buffer with at least `cap` capacity.
+    pub fn with_capacity(cap: usize) -> Self {
+        PooledVec { buf: ManuallyDrop::new(T::pool().get(cap)) }
+    }
+
+    /// Copy a slice into a pooled buffer (the hot-path constructor).
+    pub fn from_slice(s: &[T]) -> Self
+    where
+        T: Clone,
+    {
+        let mut v = Self::with_capacity(s.len());
+        v.extend_from_slice(s);
+        v
+    }
+
+    /// Unwrap into a plain `Vec`, opting the buffer out of recycling.
+    pub fn take(mut self) -> Vec<T> {
+        // Safety: `self` is forgotten immediately, so Drop never runs on
+        // the now-empty ManuallyDrop.
+        let v = unsafe { ManuallyDrop::take(&mut self.buf) };
+        std::mem::forget(self);
+        v
+    }
+}
+
+impl<T: PoolItem> Drop for PooledVec<T> {
+    fn drop(&mut self) {
+        // Safety: Drop runs at most once; `take` forgets self first.
+        let v = unsafe { ManuallyDrop::take(&mut self.buf) };
+        T::pool().put(v);
+    }
+}
+
+impl<T: PoolItem> Default for PooledVec<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T: PoolItem> Deref for PooledVec<T> {
+    type Target = Vec<T>;
+    fn deref(&self) -> &Vec<T> {
+        &self.buf
+    }
+}
+
+impl<T: PoolItem> DerefMut for PooledVec<T> {
+    fn deref_mut(&mut self) -> &mut Vec<T> {
+        &mut self.buf
+    }
+}
+
+/// Adopt an existing `Vec` (it will recycle into the pool on drop).
+impl<T: PoolItem> From<Vec<T>> for PooledVec<T> {
+    fn from(v: Vec<T>) -> Self {
+        PooledVec { buf: ManuallyDrop::new(v) }
+    }
+}
+
+impl<T: PoolItem + Clone> Clone for PooledVec<T> {
+    fn clone(&self) -> Self {
+        let mut v = Self::with_capacity(self.len());
+        v.extend_from_slice(self);
+        v
+    }
+}
+
+impl<T: PoolItem + std::fmt::Debug> std::fmt::Debug for PooledVec<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        (**self).fmt(f)
+    }
+}
+
+impl<T: PoolItem + PartialEq> PartialEq for PooledVec<T> {
+    fn eq(&self, other: &Self) -> bool {
+        **self == **other
+    }
+}
+
+impl<T: PoolItem + PartialEq> PartialEq<Vec<T>> for PooledVec<T> {
+    fn eq(&self, other: &Vec<T>) -> bool {
+        **self == *other
+    }
+}
+
+impl<T: PoolItem + PartialEq> PartialEq<PooledVec<T>> for Vec<T> {
+    fn eq(&self, other: &PooledVec<T>) -> bool {
+        *self == **other
+    }
+}
+
+impl<T: PoolItem + PartialEq> PartialEq<[T]> for PooledVec<T> {
+    fn eq(&self, other: &[T]) -> bool {
+        **self == other
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn class_math_covers_requests_and_returns() {
+        assert_eq!(class_for_request(0), 0);
+        assert_eq!(class_for_request(1), 0);
+        assert_eq!(class_for_request(2), 1);
+        assert_eq!(class_for_request(3), 2);
+        assert_eq!(class_for_request(64), 6);
+        assert_eq!(class_for_request(65), 7);
+        assert_eq!(class_for_return(1), 0);
+        assert_eq!(class_for_return(64), 6);
+        assert_eq!(class_for_return(127), 6);
+        assert_eq!(class_for_return(128), 7);
+        // the capacity invariant below the open-ended last class: the
+        // smallest capacity stored in class k is 2^k, and the largest
+        // request routed to k is exactly 2^k — so every stored buffer
+        // serves every request of its class
+        for k in 1..CLASSES - 1 {
+            assert_eq!(class_for_request(1 << k), k, "largest request of class {k}");
+            assert_eq!(class_for_request((1 << k) + 1), k + 1, "first request past class {k}");
+            assert_eq!(class_for_return(1 << k), k, "smallest buffer stored in class {k}");
+            assert_eq!(class_for_return((1 << (k + 1)) - 1), k, "largest buffer in class {k}");
+        }
+    }
+
+    #[test]
+    fn get_after_put_reuses_the_buffer() {
+        let pool: ClassPool<u64> = ClassPool::new();
+        let mut v = pool.get(100);
+        assert!(v.capacity() >= 100);
+        v.extend(0..100u64);
+        let cap = v.capacity();
+        let ptr = v.as_ptr();
+        pool.put(v);
+        let back = pool.get(100);
+        assert_eq!(back.as_ptr(), ptr, "same buffer comes back");
+        assert_eq!(back.capacity(), cap);
+        assert!(back.is_empty(), "recycled buffers come back cleared");
+    }
+
+    #[test]
+    fn pooled_vec_roundtrips_through_drop() {
+        // a size class no other concurrently-running test touches, so
+        // the pointer identity below cannot race another taker
+        const CAP: usize = (1 << 21) + 3;
+        let mut a = PooledVec::<f32>::with_capacity(CAP);
+        a.extend_from_slice(&[1.0, 2.0, 3.0]);
+        assert_eq!(a.len(), 3);
+        assert_eq!(a[1], 2.0);
+        let ptr = a.as_ptr();
+        drop(a);
+        let b = PooledVec::<f32>::with_capacity(CAP);
+        assert_eq!(b.as_ptr(), ptr, "same-class request gets the recycled buffer");
+    }
+
+    #[test]
+    fn pooled_vec_equality_and_clone() {
+        let a = PooledVec::<f32>::from_slice(&[0.5, -1.0]);
+        let b = a.clone();
+        assert_eq!(a, b);
+        assert_eq!(a, vec![0.5, -1.0]);
+        assert_eq!(vec![0.5, -1.0], a);
+        assert_ne!(a, vec![0.5]);
+        assert_eq!(format!("{a:?}"), "[0.5, -1.0]");
+    }
+
+    #[test]
+    fn take_opts_out_of_recycling() {
+        let mut a = PooledVec::<u8>::with_capacity(8);
+        a.push(7);
+        let v = a.take();
+        assert_eq!(v, vec![7u8]);
+        // adopted vecs recycle on drop
+        let adopted: PooledVec<u8> = v.into();
+        drop(adopted);
+    }
+
+    #[test]
+    fn stats_move_and_hit_rate_is_bounded() {
+        let before = stats();
+        let v = PooledVec::<u8>::with_capacity(1 << 20); // surely a fresh class entry
+        drop(v);
+        let _again = PooledVec::<u8>::with_capacity(1 << 20);
+        let after = stats();
+        assert!(after.hits + after.misses > before.hits + before.misses);
+        assert!(after.recycled > before.recycled);
+        let r = after.hit_rate();
+        assert!((0.0..=1.0).contains(&r));
+    }
+}

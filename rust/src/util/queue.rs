@@ -1,0 +1,243 @@
+//! Steady-state allocation-free MPMC queue (`Mutex<VecDeque>` +
+//! `Condvar`).
+//!
+//! `std::sync::mpsc` allocates per block of messages on every channel,
+//! which breaks the serving path's zero-allocation invariant (see
+//! [`super::pool`]). This queue's ring buffer reaches a steady capacity
+//! after warmup and never allocates again; send is a lock + push +
+//! notify, receive blocks on the condvar.
+//!
+//! Disconnect semantics match `mpsc`: [`Sender::send`] fails (returning
+//! the value) once every receiver is gone; [`Receiver::recv`] returns
+//! `None` once the queue is empty **and** every sender is gone. Both
+//! halves are cloneable — the coordinator's completion pool shares one
+//! receiver across its threads.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+
+struct State<T> {
+    queue: VecDeque<T>,
+    senders: usize,
+    receivers: usize,
+}
+
+struct Inner<T> {
+    state: Mutex<State<T>>,
+    ready: Condvar,
+}
+
+/// Cloneable producer half.
+pub struct Sender<T> {
+    inner: Arc<Inner<T>>,
+}
+
+/// Cloneable consumer half (multiple consumers block on one queue).
+pub struct Receiver<T> {
+    inner: Arc<Inner<T>>,
+}
+
+/// Create a connected queue pair.
+pub fn channel<T>() -> (Sender<T>, Receiver<T>) {
+    let inner = Arc::new(Inner {
+        state: Mutex::new(State { queue: VecDeque::new(), senders: 1, receivers: 1 }),
+        ready: Condvar::new(),
+    });
+    (Sender { inner: inner.clone() }, Receiver { inner })
+}
+
+impl<T> Sender<T> {
+    /// Enqueue a value; `Err(value)` if every receiver is gone.
+    pub fn send(&self, value: T) -> Result<(), T> {
+        let mut st = self.inner.state.lock().unwrap();
+        if st.receivers == 0 {
+            return Err(value);
+        }
+        st.queue.push_back(value);
+        drop(st);
+        self.inner.ready.notify_one();
+        Ok(())
+    }
+}
+
+impl<T> Clone for Sender<T> {
+    fn clone(&self) -> Self {
+        self.inner.state.lock().unwrap().senders += 1;
+        Sender { inner: self.inner.clone() }
+    }
+}
+
+impl<T> Drop for Sender<T> {
+    fn drop(&mut self) {
+        let last = {
+            let mut st = self.inner.state.lock().unwrap();
+            st.senders -= 1;
+            st.senders == 0
+        };
+        if last {
+            // wake every blocked receiver so it can observe disconnect
+            self.inner.ready.notify_all();
+        }
+    }
+}
+
+impl<T> Receiver<T> {
+    /// Block for the next value; `None` once the queue is drained and
+    /// every sender is gone.
+    pub fn recv(&self) -> Option<T> {
+        let mut st = self.inner.state.lock().unwrap();
+        loop {
+            if let Some(v) = st.queue.pop_front() {
+                return Some(v);
+            }
+            if st.senders == 0 {
+                return None;
+            }
+            st = self.inner.ready.wait(st).unwrap();
+        }
+    }
+
+    /// Pop without blocking (`None` when empty, disconnected or not).
+    pub fn try_recv(&self) -> Option<T> {
+        self.inner.state.lock().unwrap().queue.pop_front()
+    }
+
+    /// Values currently queued.
+    pub fn len(&self) -> usize {
+        self.inner.state.lock().unwrap().queue.len()
+    }
+}
+
+impl<T> Clone for Receiver<T> {
+    fn clone(&self) -> Self {
+        self.inner.state.lock().unwrap().receivers += 1;
+        Receiver { inner: self.inner.clone() }
+    }
+}
+
+impl<T> Drop for Receiver<T> {
+    fn drop(&mut self) {
+        // `mpsc` parity: the last receiver drops every queued value
+        // (senders discover the disconnect on their next send). Values
+        // are dropped *outside* the lock — their destructors may take
+        // other locks (e.g. a worker job's reply ticket sending onto a
+        // different queue).
+        let drained = {
+            let mut st = self.inner.state.lock().unwrap();
+            st.receivers -= 1;
+            if st.receivers == 0 {
+                std::mem::take(&mut st.queue)
+            } else {
+                VecDeque::new()
+            }
+        };
+        drop(drained);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn fifo_roundtrip() {
+        let (tx, rx) = channel();
+        for i in 0..5 {
+            tx.send(i).unwrap();
+        }
+        for i in 0..5 {
+            assert_eq!(rx.recv(), Some(i));
+        }
+        assert_eq!(rx.try_recv(), None);
+        assert_eq!(rx.len(), 0);
+    }
+
+    #[test]
+    fn recv_sees_disconnect_after_drain() {
+        let (tx, rx) = channel();
+        tx.send(1u32).unwrap();
+        let tx2 = tx.clone();
+        drop(tx);
+        drop(tx2);
+        assert_eq!(rx.recv(), Some(1), "queued values survive sender drop");
+        assert_eq!(rx.recv(), None);
+    }
+
+    #[test]
+    fn send_fails_once_receivers_gone() {
+        let (tx, rx) = channel();
+        let rx2 = rx.clone();
+        drop(rx);
+        tx.send(9u8).unwrap();
+        assert_eq!(rx2.recv(), Some(9));
+        drop(rx2);
+        assert_eq!(tx.send(7), Err(7));
+    }
+
+    #[test]
+    fn blocking_recv_wakes_on_send_and_on_disconnect() {
+        let (tx, rx) = channel::<u64>();
+        let t = std::thread::spawn(move || rx.recv());
+        std::thread::sleep(Duration::from_millis(10));
+        tx.send(42).unwrap();
+        assert_eq!(t.join().unwrap(), Some(42));
+
+        let (tx, rx) = channel::<u64>();
+        let t = std::thread::spawn(move || rx.recv());
+        std::thread::sleep(Duration::from_millis(10));
+        drop(tx);
+        assert_eq!(t.join().unwrap(), None, "disconnect wakes a parked receiver");
+    }
+
+    #[test]
+    fn last_receiver_drop_drains_queued_values() {
+        use std::sync::Arc;
+        let (tx, rx) = channel();
+        let probe = Arc::new(());
+        tx.send(probe.clone()).unwrap();
+        tx.send(probe.clone()).unwrap();
+        assert_eq!(Arc::strong_count(&probe), 3);
+        drop(rx);
+        assert_eq!(Arc::strong_count(&probe), 1, "queued values dropped with the last receiver");
+        assert!(tx.send(probe.clone()).is_err());
+    }
+
+    #[test]
+    fn multiple_consumers_share_one_queue() {
+        let (tx, rx) = channel::<usize>();
+        let mut handles = Vec::new();
+        for _ in 0..3 {
+            let rx = rx.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut got = 0usize;
+                while rx.recv().is_some() {
+                    got += 1;
+                }
+                got
+            }));
+        }
+        drop(rx);
+        for i in 0..30 {
+            tx.send(i).unwrap();
+        }
+        drop(tx);
+        let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(total, 30, "every value consumed exactly once");
+    }
+
+    #[test]
+    fn steady_state_capacity_stabilizes() {
+        let (tx, rx) = channel::<u32>();
+        // fill/drain cycles must not grow the ring unboundedly
+        for round in 0..10 {
+            for i in 0..8 {
+                tx.send(round * 8 + i).unwrap();
+            }
+            for _ in 0..8 {
+                rx.recv().unwrap();
+            }
+        }
+        assert_eq!(rx.len(), 0);
+    }
+}

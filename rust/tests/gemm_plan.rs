@@ -113,7 +113,7 @@ fn native_backend_is_bit_exact_for_all_thread_counts() {
             for b in 0..batch {
                 let want = mlp.forward(&xs[b * 16..(b + 1) * 16], &model);
                 assert_eq!(
-                    &out.outputs[0][b * 6..(b + 1) * 6],
+                    &out.logits[b * 6..(b + 1) * 6],
                     &want[..],
                     "{kind} threads {threads} row {b}"
                 );

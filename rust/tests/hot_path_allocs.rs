@@ -1,0 +1,110 @@
+//! The zero-allocation pin: N warm requests through a loopback
+//! wire-protocol server (native backend) must perform **zero** heap
+//! allocations end to end — socket read, frame decode, admission,
+//! batching, flatten, worker GEMM, reply frame, socket write, and the
+//! client's own send/receive loop.
+//!
+//! A counting global allocator wraps the system allocator; after a
+//! generous warmup (pools populated, maps at steady capacity, schedule
+//! memo filled) the allocation counter must not move across hundreds of
+//! requests. Any regression — a stray `to_vec`, a fresh batch buffer, a
+//! per-send channel node — shows up as a precise nonzero delta.
+//!
+//! This file intentionally holds a single `#[test]`: the counter is
+//! process-global, so a concurrently running second test would pollute
+//! the measured window.
+
+mod common;
+
+use common::synth_artifacts;
+use luna_cim::config::{BackendKind, Config};
+use luna_cim::coordinator::CoordinatorServer;
+use luna_cim::net::{Frame, NetClient, NetServer};
+use luna_cim::nn::QuantMlp;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Counts every allocation event (alloc, alloc_zeroed, realloc) before
+/// delegating to the system allocator.
+struct CountingAlloc;
+
+static ALLOC_EVENTS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static COUNTER: CountingAlloc = CountingAlloc;
+
+/// Drive `n` closed-loop requests over the wire; panics on any
+/// non-Response reply. The loop itself is allocation-free: one reused
+/// pixel buffer, pooled frames in and out.
+fn drive(client: &mut NetClient, pixels: &[f32], n: usize) {
+    for _ in 0..n {
+        match client.infer(pixels) {
+            Ok(Frame::Response { label, .. }) => assert!((label as usize) < 10),
+            Ok(other) => panic!("unexpected reply {other:?}"),
+            Err(e) => panic!("infer failed: {e:#}"),
+        }
+    }
+}
+
+#[test]
+fn warm_wire_requests_allocate_nothing() {
+    for shards in [1usize, 2] {
+        let mlp = QuantMlp::random_digits(97);
+        let (store, testset) = synth_artifacts("hot-path-allocs", &mlp, 8);
+        let mut cfg = Config::default();
+        cfg.artifacts_dir = store.root().display().to_string();
+        cfg.backend = BackendKind::Native;
+        cfg.batcher.shards = shards;
+        // short deadline so the closed loop turns around quickly
+        cfg.batcher.max_wait_us = 200;
+        let (server, handle) = CoordinatorServer::start(cfg).unwrap();
+        let net = NetServer::bind(handle.clone(), "127.0.0.1:0", 4).unwrap();
+        let mut client = NetClient::connect(net.local_addr()).unwrap();
+        let pixels = testset.samples[0].pixels.clone();
+
+        // Warmup: populate every pool class, grow the maps and queue
+        // rings to steady capacity, fill the schedule memo. Two rounds
+        // so anything the first round's completions recycle late is
+        // re-drawn before measurement.
+        drive(&mut client, &pixels, 128);
+        drive(&mut client, &pixels, 64);
+
+        let before = ALLOC_EVENTS.load(Ordering::Relaxed);
+        drive(&mut client, &pixels, 256);
+        let delta = ALLOC_EVENTS.load(Ordering::Relaxed) - before;
+        assert_eq!(
+            delta, 0,
+            "warm wire path allocated {delta} times across 256 requests \
+             ({shards} shard(s)) — the hot path must be allocation-free"
+        );
+
+        // sanity: the server actually served everything we sent
+        let snap = handle.metrics().snapshot();
+        assert_eq!(snap.accepted, 448, "{shards} shard(s) admission count");
+        assert_eq!(snap.rejected, 0);
+        assert!(snap.pool.hits > 0, "pooled buffers must be recycling");
+        net.shutdown();
+        server.shutdown();
+    }
+}

@@ -48,9 +48,9 @@ fn native_backend_through_spec_matches_forward_batch() {
     let model = MultiplierModel::new(MultiplierKind::Approx);
     let xs = vec![0.5f32; 3 * 64];
     let out = backend.run_batch(&xs, 3, 64).unwrap();
-    assert_eq!(out.outputs.len(), 1, "single logits tuple element");
+    assert_eq!(out.logits.len(), 3 * 10, "batch x out_dim logits");
     assert!(out.cost.is_none(), "native backend has no timing model");
-    assert_eq!(out.outputs[0], mlp.forward_batch(&xs, 3, &model));
+    assert_eq!(out.logits, mlp.forward_batch(&xs, 3, &model));
 }
 
 #[test]

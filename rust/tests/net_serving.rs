@@ -157,7 +157,7 @@ fn malformed_frames_close_connection_without_poisoning_coordinator() {
     // 2) truncated frame: valid header, missing payload bytes
     let mut s = TcpStream::connect(net.local_addr()).unwrap();
     let mut buf = Vec::new();
-    write_frame(&mut buf, &Frame::Request { id: 0, pixels: vec![0.5; 64] }).unwrap();
+    write_frame(&mut buf, &Frame::Request { id: 0, pixels: vec![0.5; 64].into() }).unwrap();
     s.write_all(&buf[..buf.len() - 7]).unwrap();
     s.shutdown(std::net::Shutdown::Write).unwrap();
     match read_frame(&mut s).unwrap() {
@@ -220,6 +220,91 @@ fn graceful_shutdown_drains_in_flight_requests() {
         assert_eq!(label as usize, mlp.classify(&pixels[i], &model));
     }
     assert!(rx.recv().is_err(), "connection closes after the drain");
+    server.shutdown();
+}
+
+#[test]
+fn shard_sweep_is_bit_identical_with_correct_admission_totals() {
+    // The sharded batcher must be invisible to clients: for shards in
+    // {1, 2, 4} the same requests produce byte-identical logits (and
+    // match the functional model), every request is admitted exactly
+    // once, and the per-request responses remain correctly paired under
+    // pipelined (out-of-order-completion) traffic.
+    let mlp = QuantMlp::random_digits(83);
+    let model = MultiplierModel::new(MultiplierKind::DncOpt);
+    let n = 24usize;
+    let mut baseline: Option<Vec<Vec<f32>>> = None;
+    for shards in [1usize, 2, 4] {
+        let (server, handle, net, pixels) = start_stack("net-shards", &mlp, |cfg| {
+            cfg.batcher.shards = shards;
+            cfg.batcher.max_wait_us = 1_000;
+        });
+        assert_eq!(handle.shards(), shards);
+        let client = NetClient::connect(net.local_addr()).unwrap();
+        let (mut tx, mut rx, _info) = client.split();
+        // pipelined: all n requests in flight at once, spread across
+        // every shard by the id-affine dispatch
+        for px in pixels.iter().cycle().take(n) {
+            tx.send(px).unwrap();
+        }
+        let mut got: Vec<Option<Vec<f32>>> = vec![None; n];
+        for _ in 0..n {
+            match rx.recv().unwrap() {
+                Frame::Response { id, logits, .. } => {
+                    assert!(got[id as usize].is_none(), "duplicate reply for {id}");
+                    got[id as usize] = Some(logits.take());
+                }
+                other => panic!("unexpected {other:?} at {shards} shards"),
+            }
+        }
+        let logits: Vec<Vec<f32>> =
+            got.into_iter().map(|g| g.expect("every request answered")).collect();
+        for (i, lg) in logits.iter().enumerate() {
+            let want = mlp.forward(&pixels[i % pixels.len()], &model);
+            assert_eq!(lg, &want, "shards {shards} request {i} diverged from the model");
+        }
+        match &baseline {
+            None => baseline = Some(logits),
+            Some(base) => {
+                assert_eq!(&logits, base, "{shards} shards diverged from the 1-shard replies");
+            }
+        }
+        let snap = handle.metrics().snapshot();
+        assert_eq!(snap.accepted, n as u64, "{shards} shards admission total");
+        assert_eq!(snap.rejected, 0, "{shards} shards spurious rejections");
+        assert_eq!(snap.requests, n as u64, "{shards} shards served total");
+        net.shutdown();
+        server.shutdown();
+    }
+}
+
+#[test]
+fn sharded_admission_bound_stays_global() {
+    // queue_depth must bound *total* outstanding across all shards, not
+    // per shard: with 4 shards and queue_depth 2, a third concurrent
+    // request is rejected no matter which shard it would land on.
+    let mlp = QuantMlp::random_digits(89);
+    let (server, handle, net, pixels) = start_stack("net-shards-admit", &mlp, |cfg| {
+        cfg.batcher.shards = 4;
+        cfg.batcher.queue_depth = 2;
+        cfg.batcher.max_wait_us = 500_000; // hold the first two in the batchers
+    });
+    let client = NetClient::connect(net.local_addr()).unwrap();
+    let (mut tx, mut rx, _info) = client.split();
+    tx.send(&pixels[0]).unwrap();
+    tx.send(&pixels[1]).unwrap();
+    wait_accepted(&handle, 2);
+    let err = handle.submit(pixels[2].clone()).expect_err("global bound reached");
+    let bp = err.downcast_ref::<Backpressure>().expect("typed backpressure");
+    assert!(bp.retry_after_us >= 1);
+    let snap = handle.metrics().snapshot();
+    assert_eq!(snap.accepted, 2);
+    assert_eq!(snap.rejected, 1);
+    // drain so shutdown is clean
+    net.shutdown();
+    for _ in 0..2 {
+        assert!(matches!(rx.recv().unwrap(), Frame::Response { .. }));
+    }
     server.shutdown();
 }
 
