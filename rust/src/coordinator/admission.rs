@@ -1,0 +1,158 @@
+//! Global admission gate: one shared atomic bounds total outstanding
+//! requests (pending in any batcher shard + dispatched but not yet
+//! completed) at `batcher.queue_depth`.
+//!
+//! Extracted from the server so the invariant is model-checkable in
+//! isolation: under every interleaving of concurrent
+//! admit/reject/release, the number of *held* permits never exceeds the
+//! bound and no permit leaks (`tests/loom_models.rs` and the
+//! `#[cfg(loom)]` model below pin both). The counter may transiently
+//! overshoot the bound — a losing `try_admit` increments before it
+//! checks, then backs out — but a permit is only ever *held* after the
+//! check passes, so the held count stays exact.
+//!
+//! Memory-ordering contract: every access is `Relaxed`, which is
+//! sufficient — and what the loom models verify — because the gate is a
+//! pure counter protocol. Atomic read-modify-writes on one cell form a
+//! single total modification order even at `Relaxed`, which is all the
+//! bound needs; no other memory is published through this atomic (the
+//! request data a permit guards travels through the shard mutexes and
+//! the worker queue, whose lock/unlock edges provide the
+//! happens-before).
+
+use crate::util::sync::atomic::{AtomicUsize, Ordering};
+
+/// Counting admission gate with a hard upper bound on held permits.
+pub struct AdmissionGate {
+    outstanding: AtomicUsize,
+    max: usize,
+}
+
+impl AdmissionGate {
+    /// A gate admitting at most `max` concurrently held permits.
+    pub fn new(max: usize) -> Self {
+        AdmissionGate { outstanding: AtomicUsize::new(0), max }
+    }
+
+    /// The bound (the server's `batcher.queue_depth`).
+    pub fn max(&self) -> usize {
+        self.max
+    }
+
+    /// Currently outstanding permits. May transiently read up to one
+    /// over `max` per concurrently rejecting caller (see module docs);
+    /// use only for monitoring and retry hints, never for decisions.
+    pub fn outstanding(&self) -> usize {
+        // ordering: Relaxed — monitoring read, no decision or
+        // publication hangs off it (module docs).
+        self.outstanding.load(Ordering::Relaxed)
+    }
+
+    /// Try to take one permit. `Err(observed)` when the gate is full,
+    /// carrying the outstanding count the attempt observed (the
+    /// backlog estimate behind `retry_after_us` hints).
+    pub fn try_admit(&self) -> Result<(), usize> {
+        // Increment-then-check: the RMW reserves a slot atomically, so
+        // two racing admits can never both pass a `prev >= max` check
+        // against the same prior value — at most `max` callers ever see
+        // `prev < max` while their permits are held.
+        // ordering: Relaxed — counter-only protocol; RMWs on one atomic
+        // are totally ordered regardless (module docs).
+        let prev = self.outstanding.fetch_add(1, Ordering::Relaxed);
+        if prev >= self.max {
+            // back out the reservation; the permit was never held
+            self.outstanding.fetch_sub(1, Ordering::Relaxed);
+            Err(prev)
+        } else {
+            Ok(())
+        }
+    }
+
+    /// Return `n` permits (a completed or failed batch releases its
+    /// whole batch at once).
+    pub fn release(&self, n: usize) {
+        // ordering: Relaxed — see module docs.
+        let before = self.outstanding.fetch_sub(n, Ordering::Relaxed);
+        debug_assert!(before >= n, "released more permits than were held");
+    }
+}
+
+#[cfg(all(test, loom))]
+mod loom_models {
+    use super::*;
+    use crate::util::sync::Arc;
+    use std::sync::atomic::{AtomicUsize as StdAtomicUsize, Ordering as StdOrdering};
+
+    /// Three admitters racing a bound of 1: in every interleaving the
+    /// number of simultaneously *held* permits never exceeds the bound,
+    /// and after everyone releases, nothing has leaked.
+    #[test]
+    fn bound_holds_and_permits_never_leak() {
+        loom::model(|| {
+            let gate = Arc::new(AdmissionGate::new(1));
+            // std atomic: an observer ledger outside the model's memory
+            // system, counting *held* permits exactly
+            let held = std::sync::Arc::new(StdAtomicUsize::new(0));
+            let mut threads = Vec::new();
+            for _ in 0..2 {
+                let g = gate.clone();
+                let h = held.clone();
+                threads.push(loom::thread::spawn(move || {
+                    if g.try_admit().is_ok() {
+                        let now = h.fetch_add(1, StdOrdering::Relaxed) + 1;
+                        assert!(now <= 1, "{now} permits held past a bound of 1");
+                        h.fetch_sub(1, StdOrdering::Relaxed);
+                        g.release(1);
+                    }
+                }));
+            }
+            if gate.try_admit().is_ok() {
+                let now = held.fetch_add(1, StdOrdering::Relaxed) + 1;
+                assert!(now <= 1, "{now} permits held past a bound of 1");
+                held.fetch_sub(1, StdOrdering::Relaxed);
+                gate.release(1);
+            }
+            for t in threads {
+                t.join().unwrap();
+            }
+            assert_eq!(gate.outstanding(), 0, "no permit leaked");
+        });
+    }
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admits_up_to_the_bound_then_rejects_with_observation() {
+        let gate = AdmissionGate::new(2);
+        assert_eq!(gate.max(), 2);
+        assert!(gate.try_admit().is_ok());
+        assert!(gate.try_admit().is_ok());
+        assert_eq!(gate.outstanding(), 2);
+        assert_eq!(gate.try_admit(), Err(2), "full gate reports what it observed");
+        assert_eq!(gate.outstanding(), 2, "rejection backs its reservation out");
+        gate.release(1);
+        assert!(gate.try_admit().is_ok(), "released capacity is reusable");
+        gate.release(2);
+        assert_eq!(gate.outstanding(), 0);
+    }
+
+    #[test]
+    fn batch_release_returns_all_permits_at_once() {
+        let gate = AdmissionGate::new(8);
+        for _ in 0..5 {
+            gate.try_admit().unwrap();
+        }
+        gate.release(5);
+        assert_eq!(gate.outstanding(), 0);
+    }
+
+    #[test]
+    fn zero_bound_rejects_everything() {
+        let gate = AdmissionGate::new(0);
+        assert_eq!(gate.try_admit(), Err(0));
+        assert_eq!(gate.outstanding(), 0);
+    }
+}

@@ -2,6 +2,11 @@
 //!
 //! Lock-free on the hot path (atomics only); the histogram uses
 //! fixed log-spaced buckets so recording is a couple of atomic adds.
+//!
+//! Ordering audit: every atomic access here is Relaxed by design. These
+//! are monotonic monitoring counters — a snapshot tolerates tearing
+//! across counters (it is a statistical view, not a consistent cut),
+//! and nothing is published through them.
 
 use super::tiler::ScheduleCost;
 use std::sync::atomic::{AtomicU64, Ordering};

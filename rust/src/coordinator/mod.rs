@@ -3,6 +3,10 @@
 //! The paper contributes a multiplier + array integration; to *use* it you
 //! need what this module provides — the part a deployment would run:
 //!
+//! * [`admission`] — the global outstanding-count admission gate (one
+//!   shared atomic bound across every batcher shard; its never-exceeds /
+//!   never-leaks invariant is model-checked under loom — see the crate
+//!   docs' `## Concurrency model`);
 //! * [`batcher`] — dynamic batching with a max-batch/max-wait policy
 //!   (batches are padded to the AOT-lowered batch size; deadlines track
 //!   true enqueue times, and `push` backpressures at `queue_depth`).
@@ -24,6 +28,7 @@
 //! * [`metrics`] — latency/throughput/energy/failure counters;
 //! * [`server`] — the std-thread front-end tying it all together.
 
+pub mod admission;
 pub mod batcher;
 pub mod metrics;
 pub mod request;
@@ -33,6 +38,7 @@ pub mod state;
 pub mod tiler;
 pub mod worker;
 
+pub use admission::AdmissionGate;
 pub use batcher::{Batch, Batcher};
 pub use metrics::{LatencyHistogram, Metrics, MetricsSnapshot};
 pub use request::{InferenceRequest, InferenceResponse, RequestId};

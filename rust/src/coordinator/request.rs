@@ -1,6 +1,8 @@
 //! Request/response types on the serving path.
 
-use crate::util::pool::{ClassPool, PoolItem, PooledVec};
+#[cfg(not(loom))]
+use crate::util::pool::ClassPool;
+use crate::util::pool::{PoolItem, PooledVec};
 use std::time::Instant;
 
 /// Monotonically increasing request identifier.
@@ -28,10 +30,13 @@ impl InferenceRequest {
 
 /// The batcher's formed-batch request vecs recycle through their own
 /// pool class; returning one drops its requests, which cascades each
-/// pixel buffer back to the `f32` pool.
+/// pixel buffer back to the `f32` pool. (Gated off loom builds — loom
+/// primitives cannot live in statics; see [`crate::util::sync`].)
+#[cfg(not(loom))]
 static REQUEST_VEC_POOL: ClassPool<InferenceRequest> = ClassPool::new();
 
 impl PoolItem for InferenceRequest {
+    #[cfg(not(loom))]
     fn pool() -> &'static ClassPool<InferenceRequest> {
         &REQUEST_VEC_POOL
     }

@@ -3,6 +3,11 @@
 
 use super::worker::{BatchJob, WorkerPool};
 use crate::Result;
+// Ordering audit: every atomic here is Relaxed by design. The in-flight
+// counters and the rotation cursor are load *estimates* — `pick_from`
+// tolerates stale reads (it only biases placement), and no data is
+// published through them (jobs travel over the worker queues, whose
+// locks provide the happens-before).
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 

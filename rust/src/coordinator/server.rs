@@ -37,6 +37,7 @@
 //! in-flight) at `batcher.queue_depth`; rejections carry a structured
 //! [`Backpressure`] retry hint.
 
+use super::admission::AdmissionGate;
 use super::batcher::{Batch, Batcher};
 use super::metrics::Metrics;
 use super::request::{InferenceRequest, InferenceResponse, RequestId};
@@ -52,6 +53,10 @@ use crate::util::{oneshot, queue, PooledVec};
 use crate::Result;
 use anyhow::{anyhow, ensure, Context};
 use std::collections::HashMap;
+// Deliberately std (not the loom shim): the coordinator's background
+// threads hold `Weak` references, which loom's `Arc` lacks, and these
+// atomics are id counters and stop flags with no cross-thread publication
+// role. The model-checked admission bound lives in [`AdmissionGate`].
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
@@ -147,10 +152,11 @@ struct Shared {
     shards: Vec<Shard>,
     /// Admission bound: total outstanding requests (pending in any
     /// shard's batcher + dispatched but not yet completed) may not
-    /// exceed `batcher.queue_depth`. One shared atomic keeps the bound
-    /// globally correct across shards without a global lock.
-    outstanding: AtomicUsize,
-    max_outstanding: usize,
+    /// exceed `batcher.queue_depth`. One shared gate keeps the bound
+    /// globally correct across shards without a global lock; its
+    /// never-exceeds / never-leaks invariant is loom-model-checked
+    /// ([`super::admission`]).
+    admission: AdmissionGate,
     /// Lowered batch size, echoed in the wire protocol's `Info` frame.
     max_batch: usize,
     backend: BackendKind,
@@ -271,8 +277,7 @@ impl CoordinatorServer {
         drop(ctx);
         let shared = Arc::new(Shared {
             shards,
-            outstanding: AtomicUsize::new(0),
-            max_outstanding: cfg.batcher.queue_depth,
+            admission: AdmissionGate::new(cfg.batcher.queue_depth),
             max_batch: cfg.batcher.max_batch,
             backend: cfg.backend,
             tiler,
@@ -304,7 +309,7 @@ impl CoordinatorServer {
                         // sized up front: fan-out never allocates, even
                         // on a thread that serves its first batch late
                         let mut scratch: Vec<Option<Completion>> =
-                            Vec::with_capacity(max_batch);
+                            Vec::with_capacity(max_batch); // lint: allow(alloc): startup scratch
                         while let Some(reply) = crx.recv() {
                             let Some(shared) = weak.upgrade() else { return };
                             // the batch id's low bits name the shard
@@ -410,13 +415,12 @@ impl ServerHandle {
     pub fn submit_with(&self, pixels: impl Into<PooledVec<f32>>, done: Completion) -> Result<()> {
         let pixels = pixels.into();
         ensure!(pixels.len() == self.shared.in_dim, "expected {} pixels", self.shared.in_dim);
+        // ordering: Relaxed — pure id allocation, no publication.
         let id = self.shared.next_id.fetch_add(1, Ordering::Relaxed);
-        let prev = self.shared.outstanding.fetch_add(1, Ordering::Relaxed);
-        if prev >= self.shared.max_outstanding {
-            self.shared.outstanding.fetch_sub(1, Ordering::Relaxed);
+        if let Err(observed) = self.shared.admission.try_admit() {
             let hint = {
                 let batcher = self.shared.shard_of(id).batcher.lock().unwrap();
-                batcher.retry_after_us(std::time::Instant::now(), prev)
+                batcher.retry_after_us(std::time::Instant::now(), observed)
             };
             self.shared.metrics.record_rejection(hint);
             return Err(Backpressure { retry_after_us: hint }.into());
@@ -438,7 +442,7 @@ impl ServerHandle {
                         batcher.retry_after_us(std::time::Instant::now(), batcher.pending());
                     drop(batcher);
                     shard.waiters.lock().unwrap().remove(&id);
-                    self.shared.outstanding.fetch_sub(1, Ordering::Relaxed);
+                    self.shared.admission.release(1);
                     self.shared.metrics.record_rejection(hint);
                     return Err(Backpressure { retry_after_us: hint }.into());
                 }
@@ -495,8 +499,10 @@ fn coordinator_cost(shared: &Shared, tiler: &Mutex<Tiler>, n: usize) -> Schedule
     // a schedule that actually ran first on the cold fabric.
     let (was_warm, cost) = {
         let mut t = tiler.lock().unwrap();
+        // ordering: Relaxed — the swap runs under the tiler lock, which
+        // already orders it against every other schedule walk.
         let was_warm = shared.sched_warm.swap(true, Ordering::Relaxed);
-        (was_warm, t.schedule(&shared.mlp, n).cost())
+        (was_warm, t.schedule_cost(&shared.mlp, n))
     };
     if was_warm {
         shared.sched_cache.lock().unwrap().insert(n, cost);
@@ -589,7 +595,7 @@ fn complete_batch(
                 let mut waiters = shard.waiters.lock().unwrap();
                 scratch.extend(batch.requests.iter().map(|req| waiters.remove(&req.id)));
             }
-            shared.outstanding.fetch_sub(n, Ordering::Relaxed);
+            shared.admission.release(n);
             for ((i, req), waiter) in batch.requests.iter().enumerate().zip(scratch.drain(..)) {
                 let logits = &output.logits[i * out_dim..(i + 1) * out_dim];
                 let label = crate::nn::argmax(logits);
@@ -641,7 +647,7 @@ fn fail_batch(shared: &Arc<Shared>, batch: &Batch, why: &str) {
         let mut waiters = shard.waiters.lock().unwrap();
         batch.requests.iter().map(|req| waiters.remove(&req.id)).collect()
     };
-    shared.outstanding.fetch_sub(batch.requests.len(), Ordering::Relaxed);
+    shared.admission.release(batch.requests.len());
     for done in completions.into_iter().flatten() {
         match done {
             Completion::Callback(f) => f(Err(why.to_string())),

@@ -27,6 +27,8 @@ impl BankState {
         BankState {
             banks,
             units_per_bank,
+            // lint: allow(alloc): fabric-state construction, once per
+            // worker at startup — the per-batch walk mutates in place.
             codes: vec![None; banks * units_per_bank],
             programs: 0,
             hits: 0,

@@ -86,7 +86,7 @@ impl UnitCosts {
 }
 
 /// Schedule and cost of one layer for one batch.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Copy)]
 pub struct LayerSchedule {
     pub layer: usize,
     pub elements: usize,
@@ -137,16 +137,23 @@ pub struct ScheduleCost {
     pub stationary_hits: u64,
 }
 
-/// The tiler: owns fabric state and unit cost calibration.
+/// The tiler: owns fabric state, the unit cost calibration, and a
+/// reusable per-schedule layer buffer.
 #[derive(Debug, Clone)]
 pub struct Tiler {
     state: BankState,
     costs: UnitCosts,
+    /// Arena for the schedule walk: grows to the model's layer count on
+    /// the first schedule and is reused (cleared, refilled in place)
+    /// ever after, so steady-state pricing via [`Tiler::schedule_cost`]
+    /// allocates nothing — the calibrated backend's zero-allocation
+    /// guarantee rides on this (`tests/hot_path_allocs.rs`).
+    scratch: Vec<LayerSchedule>,
 }
 
 impl Tiler {
     pub fn new(banks: usize, units_per_bank: usize, costs: UnitCosts) -> Self {
-        Tiler { state: BankState::new(banks, units_per_bank), costs }
+        Tiler { state: BankState::new(banks, units_per_bank), costs, scratch: Vec::new() }
     }
 
     /// Build from `banks.*` config, pricing with the process-cached
@@ -184,13 +191,13 @@ impl Tiler {
         &self.state
     }
 
-    /// Schedule one batched forward pass of `mlp` (batch size `batch`).
-    /// Mutates fabric state (weight-stationary across calls: a second
-    /// identical batch reprograms nothing).
-    pub fn schedule(&mut self, mlp: &QuantMlp, batch: usize) -> ModelSchedule {
+    /// Walk one batched forward pass into the reusable scratch buffer,
+    /// mutating fabric state. `schedule`/`schedule_cost` read it back;
+    /// after the first call the walk performs no allocation.
+    fn schedule_into_scratch(&mut self, mlp: &QuantMlp, batch: usize) {
         assert!(batch >= 1);
         let units = self.state.total_units();
-        let mut layers = Vec::with_capacity(mlp.layers.len());
+        self.scratch.clear();
         // Deterministic placement cursor: layers occupy consecutive unit
         // ranges (mod capacity), so a fabric large enough for the whole
         // model is fully weight-stationary across batches.
@@ -215,7 +222,7 @@ impl Tiler {
             let cycles = waves as u64 * batch as u64;
             let energy_fj = programs as f64 * self.costs.program_energy_fj
                 + macs as f64 * self.costs.mac_energy_fj;
-            layers.push(LayerSchedule {
+            self.scratch.push(LayerSchedule {
                 layer: li,
                 elements,
                 waves,
@@ -226,6 +233,16 @@ impl Tiler {
                 energy_fj,
             });
         }
+    }
+
+    /// Schedule one batched forward pass of `mlp` (batch size `batch`).
+    /// Mutates fabric state (weight-stationary across calls: a second
+    /// identical batch reprograms nothing). Materializes the per-layer
+    /// vec — offline callers (eval, benches); the serving path uses the
+    /// allocation-free [`Tiler::schedule_cost`].
+    pub fn schedule(&mut self, mlp: &QuantMlp, batch: usize) -> ModelSchedule {
+        self.schedule_into_scratch(mlp, batch);
+        let layers = self.scratch.clone();
         let total_macs = layers.iter().map(|l| l.macs).sum();
         let total_programs = layers.iter().map(|l| l.programs).sum();
         let total_stationary_hits = layers.iter().map(|l| l.stationary_hits).sum();
@@ -239,6 +256,22 @@ impl Tiler {
             total_cycles,
             latency_ps: total_cycles * self.costs.cycle_ps,
             total_energy_fj,
+        }
+    }
+
+    /// [`Tiler::schedule`] flattened to its [`ScheduleCost`] without
+    /// materializing a [`ModelSchedule`]: totals accumulate straight off
+    /// the reusable scratch, so a warm tiler prices a batch with zero
+    /// heap allocations (identical fabric mutation and totals —
+    /// `schedule_cost(m, b) == schedule(m, b).cost()` from equal state).
+    pub fn schedule_cost(&mut self, mlp: &QuantMlp, batch: usize) -> ScheduleCost {
+        self.schedule_into_scratch(mlp, batch);
+        let total_cycles: u64 = self.scratch.iter().map(|l| l.cycles).sum();
+        ScheduleCost {
+            latency_ps: total_cycles * self.costs.cycle_ps,
+            energy_fj: self.scratch.iter().map(|l| l.energy_fj).sum(),
+            programs: self.scratch.iter().map(|l| l.programs).sum(),
+            stationary_hits: self.scratch.iter().map(|l| l.stationary_hits).sum(),
         }
     }
 }
@@ -341,6 +374,29 @@ mod tests {
             c.programs + c.stationary_hits,
             s.layers.iter().map(|l| l.elements as u64).sum::<u64>()
         );
+    }
+
+    #[test]
+    fn schedule_cost_matches_schedule_and_reuses_scratch() {
+        let mlp = QuantMlp::random_for_study(9);
+        // two tilers from identical state walk the same schedule
+        let mut a = tiler(32);
+        let mut b = tiler(32);
+        for batch in [1usize, 3, 8] {
+            assert_eq!(a.schedule_cost(&mlp, batch), b.schedule(&mlp, batch).cost());
+        }
+        // the arena stabilizes at the model's layer count: repeated
+        // pricing neither grows nor reallocates it, and every warm walk
+        // prices identically (deterministic post-model fabric state)
+        let cap = a.scratch.capacity();
+        let ptr = a.scratch.as_ptr();
+        let warm = a.schedule_cost(&mlp, 4);
+        for _ in 0..3 {
+            assert_eq!(a.schedule_cost(&mlp, 4), warm, "warm walks price identically");
+        }
+        assert_eq!(a.scratch.capacity(), cap);
+        assert_eq!(a.scratch.as_ptr(), ptr, "scratch buffer reused in place");
+        assert_eq!(a.scratch.len(), mlp.layers.len());
     }
 
     #[test]

@@ -14,7 +14,6 @@ use crate::engine::{BackendSpec, BatchOutput};
 use crate::util::{oneshot, queue, PooledVec};
 use crate::Result;
 use anyhow::{anyhow, ensure};
-use std::sync::mpsc;
 use std::thread::JoinHandle;
 
 /// One unit of work: an already-flattened batch. `inputs` is pooled and
@@ -96,9 +95,11 @@ impl WorkerPool {
     /// fails fast with the first error).
     pub fn spawn(count: usize, spec: BackendSpec) -> Result<Self> {
         ensure!(count >= 1, "need at least one worker");
+        // lint: allow(alloc): spawn-time bookkeeping, once per pool.
         let mut senders = Vec::with_capacity(count);
+        // lint: allow(alloc): spawn-time bookkeeping, once per pool.
         let mut handles = Vec::with_capacity(count);
-        let (ready_tx, ready_rx) = mpsc::channel::<std::result::Result<(), String>>();
+        let (ready_tx, ready_rx) = queue::channel::<std::result::Result<(), String>>();
         for worker_id in 0..count {
             let (tx, rx) = queue::channel::<BatchJob>();
             let spec = spec.clone();
@@ -113,9 +114,9 @@ impl WorkerPool {
         drop(ready_tx);
         for _ in 0..count {
             match ready_rx.recv() {
-                Ok(Ok(())) => {}
-                Ok(Err(msg)) => return Err(anyhow!("worker failed to initialize: {msg}")),
-                Err(_) => return Err(anyhow!("worker exited before reporting readiness")),
+                Some(Ok(())) => {}
+                Some(Err(msg)) => return Err(anyhow!("worker failed to initialize: {msg}")),
+                None => return Err(anyhow!("worker exited before reporting readiness")),
             }
         }
         Ok(WorkerPool { senders, handles })
@@ -144,7 +145,7 @@ impl WorkerPool {
 fn worker_main(
     spec: BackendSpec,
     rx: queue::Receiver<BatchJob>,
-    ready: mpsc::Sender<std::result::Result<(), String>>,
+    ready: queue::Sender<std::result::Result<(), String>>,
 ) {
     let mut backend = match spec.build() {
         Ok(b) => {
@@ -170,7 +171,9 @@ fn worker_main(
     }
 }
 
-#[cfg(test)]
+// Real-thread worker pools have no place under loom's scheduler; the
+// ticket/queue protocol models live in `tests/loom_models.rs`.
+#[cfg(all(test, not(loom)))]
 mod tests {
     use super::*;
     use crate::multiplier::{MultiplierKind, MultiplierModel};

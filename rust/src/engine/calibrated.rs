@@ -78,7 +78,10 @@ impl ExecBackend for CalibratedBackend {
 
     fn run_batch(&mut self, inputs: &[f32], batch: usize, dim: usize) -> Result<BatchOutput> {
         let mut out = self.inner.run_batch(inputs, batch, dim)?;
-        let cost = self.tiler.schedule(self.inner.mlp(), batch).cost();
+        // schedule_cost prices off the tiler's reusable scratch, so a
+        // warm worker's replay allocates nothing (hot_path_allocs.rs
+        // pins the calibrated backend end to end).
+        let cost = self.tiler.schedule_cost(self.inner.mlp(), batch);
         let gate = self.gate_duration(&cost);
         if gate > Duration::ZERO {
             std::thread::sleep(gate);

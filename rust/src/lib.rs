@@ -243,12 +243,74 @@
 //! [`coordinator::Batcher::retry_after_us`]), which the front-end maps
 //! onto the `Rejected` frame. The metrics' `admission` line reports
 //! accepted / rejected / hints issued and the reject rate.
+//!
+//! ## Concurrency model
+//!
+//! The serving stack is hand-rolled threads + locks (no async runtime
+//! in this offline image), so its correctness argument is explicit and
+//! machine-checked. This section is normative; the harness that
+//! enforces it is described at the end.
+//!
+//! **Queue close/drain protocol** ([`util::queue`]). Channels carry
+//! sender and receiver counts inside the queue mutex. `recv` returns
+//! `None` (never blocks forever) once all senders are gone and the
+//! buffer is empty; `send` fails once all receivers are gone. The *last*
+//! receiver to drop drains any buffered jobs **outside the lock**, so
+//! values that carry drop-guards (worker jobs holding a
+//! [`coordinator::worker::ReplyTicket`]) run their drop logic — which
+//! may itself send on another channel — without re-entering the queue
+//! mutex. Disconnect semantics intentionally mirror `std::sync::mpsc`
+//! (pinned by the parity tests in `util::queue`).
+//!
+//! **Ticket drop semantics** ([`coordinator::worker::ReplyTicket`]).
+//! Every batch handed to a worker is wrapped in a ticket that guarantees
+//! the coordinator hears back *exactly once*: either the worker replies
+//! explicitly (success or error), or the ticket's `Drop` sends a
+//! "worker dropped reply" error — covering worker panics and
+//! queue-drain teardown. Double-reply is impossible (replying consumes
+//! the ticket); no-reply is impossible (drop fires the guard).
+//!
+//! **Admission-count invariant** ([`coordinator::AdmissionGate`]). One
+//! process-wide atomic bounds outstanding requests (pending +
+//! in-flight) across every shard: the number of *held* permits never
+//! exceeds `batcher.queue_depth`, and every admit is balanced by
+//! exactly one release on completion, failure, or batcher rejection.
+//! The raw counter may transiently overshoot the bound while a losing
+//! `try_admit` backs out its speculative increment — observers treat
+//! [`coordinator::AdmissionGate::outstanding`] as monitoring data, not
+//! a permit count.
+//!
+//! **Memory-ordering contract.** Every cross-thread *data* hand-off in
+//! this crate happens through a mutex or a channel, which already
+//! provide the happens-before edges. Bare atomics are therefore only
+//! counters (metrics, pool stats, router load estimates, id
+//! allocation, the admission count) whose readers tolerate stale or
+//! torn-across-fields views, and `Ordering::Relaxed` is the repo-wide
+//! default — RMW atomicity (each `fetch_add` observed exactly once) is
+//! all they need. Any ordering stronger than `Relaxed` is an exception
+//! that must carry an `// ordering:` justification comment; `repro
+//! lint` rejects unjustified ones.
+//!
+//! **The harness.** Four CI gates check the above rather than trusting
+//! it: (1) *loom* — `RUSTFLAGS="--cfg loom"` swaps every concurrent
+//! module onto loom's model-checked primitives via the [`util::sync`]
+//! shim, and `tests/loom_models.rs` plus the `#[cfg(loom)]` unit models
+//! exhaustively explore the queue close/drain races, ticket
+//! exactly-once delivery, pool recycle races, and the admission bound;
+//! (2) *Miri* (strict provenance) runs the pool's `unsafe` paths and
+//! the protocol decode tests under the interpreter; (3) *ThreadSanitizer*
+//! (nightly `-Zsanitizer=thread`) runs the real serving integration
+//! tests with multiple shards; (4) *`repro lint`* enforces the
+//! source-level invariants (SAFETY comments on `unsafe` blocks, no
+//! `mpsc`/bare allocation in hot-path modules, justified orderings) —
+//! see [`lint`].
 
 pub mod analysis;
 pub mod cells;
 pub mod config;
 pub mod coordinator;
 pub mod engine;
+pub mod lint;
 pub mod logic;
 pub mod luna;
 pub mod multiplier;

@@ -1,0 +1,595 @@
+//! `repro lint` — repo-invariant source checker for rules clippy can't
+//! express (run as a CI gate next to clippy; see `.github/workflows/ci.yml`).
+//!
+//! Enforced invariants:
+//!
+//! 1. **`safety-comment`** — every `unsafe` *block* is immediately
+//!    preceded by a `// SAFETY:` comment (same line or the contiguous
+//!    comment run above). `unsafe fn` / `unsafe impl` / `unsafe trait`
+//!    declarations are exempt: the obligation sits where the block is.
+//! 2. **`no-mpsc`** — hot-path modules (`src/net/`, `src/coordinator/`,
+//!    `src/util/`) never touch `std::sync::mpsc`: it allocates a node
+//!    per send, which breaks the zero-allocation serving invariant.
+//!    [`crate::util::queue`] is the in-tree replacement.
+//! 3. **`no-bare-alloc`** — the same modules (minus the pool itself)
+//!    contain no bare `Vec::with_capacity` / `vec![]` in non-test code:
+//!    hot-path buffers come from [`crate::util::pool::PooledVec`].
+//! 4. **`ordering-justified`** — every `Ordering::` stronger than
+//!    `Relaxed` carries an `ordering:` justification comment; the
+//!    memory-ordering contract (crate docs, `## Concurrency model`)
+//!    makes `Relaxed` the default and anything stronger a documented
+//!    exception.
+//!
+//! Deliberate exceptions are waived in the source with a reasoned
+//! directive comment: `lint: allow(mpsc): <reason>` or
+//! `lint: allow(alloc): <reason>` on the offending line or in the
+//! comment run directly above it; `lint: allow-file(mpsc): <reason>`
+//! waives a whole file. A directive without a reason is itself a
+//! violation — waivers are documentation, not escape hatches.
+//!
+//! The checker is line-oriented but tracks strings (including raw
+//! strings), nested block comments, and `#[cfg(test)]` module blocks
+//! across lines, so doc prose, string payloads and test-only code never
+//! false-positive. `repro lint --self-test` proves the teeth: each rule
+//! must reject a seeded violation (the negative self-test CI runs).
+
+use crate::Result;
+use anyhow::{bail, Context};
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// One rule violation at a source location.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Stable rule slug (`safety-comment`, `no-mpsc`, ...).
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+/// Cross-line lexer state for [`split_line`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Lex {
+    Code,
+    /// Inside `/* */`, with nesting depth.
+    Block(u32),
+    /// Inside a normal `"` string.
+    Str,
+    /// Inside a raw string with this many `#`s.
+    RawStr(u32),
+}
+
+/// Split one source line into its code part and its comment part,
+/// blanking string/char contents out of the code part (so patterns in
+/// payloads never match) while preserving byte positions.
+fn split_line(state: Lex, line: &str) -> (String, String, Lex) {
+    let mut code = String::with_capacity(line.len());
+    let mut comment = String::new();
+    let mut st = state;
+    let bytes = line.as_bytes();
+    let mut i = 0usize;
+    while i < bytes.len() {
+        match st {
+            Lex::Block(depth) => {
+                if bytes[i..].starts_with(b"*/") {
+                    st = if depth > 1 { Lex::Block(depth - 1) } else { Lex::Code };
+                    i += 2;
+                } else if bytes[i..].starts_with(b"/*") {
+                    st = Lex::Block(depth + 1);
+                    i += 2;
+                } else {
+                    comment.push(bytes[i] as char);
+                    i += 1;
+                }
+            }
+            Lex::Str => {
+                if bytes[i] == b'\\' {
+                    i += 2; // skip the escaped byte (may run past EOL)
+                } else if bytes[i] == b'"' {
+                    st = Lex::Code;
+                    code.push(' ');
+                    i += 1;
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+            Lex::RawStr(hashes) => {
+                let close_len = 1 + hashes as usize;
+                if bytes[i] == b'"' && ends_raw(&bytes[i + 1..], hashes) {
+                    st = Lex::Code;
+                    code.push(' ');
+                    i += close_len;
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+            Lex::Code => {
+                if bytes[i..].starts_with(b"//") {
+                    comment.push_str(&line[i + 2..]);
+                    i = bytes.len();
+                } else if bytes[i..].starts_with(b"/*") {
+                    st = Lex::Block(1);
+                    i += 2;
+                } else if bytes[i] == b'"' {
+                    st = Lex::Str;
+                    code.push(' ');
+                    i += 1;
+                } else if bytes[i] == b'r' && !prev_is_ident(bytes, i) {
+                    if let Some(hashes) = raw_str_open(&bytes[i + 1..]) {
+                        st = Lex::RawStr(hashes);
+                        code.push(' ');
+                        i += 1 + hashes as usize + 1;
+                    } else {
+                        code.push('r');
+                        i += 1;
+                    }
+                } else if bytes[i] == b'\'' {
+                    // char literal vs lifetime: a closing quote within a
+                    // few bytes means char — skip it so '"' or '{' in a
+                    // char can't derail the lexer.
+                    if let Some(len) = char_literal_len(&bytes[i..]) {
+                        for _ in 0..len {
+                            code.push(' ');
+                        }
+                        i += len;
+                    } else {
+                        code.push('\'');
+                        i += 1;
+                    }
+                } else {
+                    code.push(bytes[i] as char);
+                    i += 1;
+                }
+            }
+        }
+    }
+    // a normal string cannot continue past EOL unless the line ended in
+    // an escape; keep it simple and carry the state either way (rustc
+    // accepts multi-line strings)
+    (code, comment, st)
+}
+
+fn prev_is_ident(bytes: &[u8], i: usize) -> bool {
+    i > 0 && (bytes[i - 1].is_ascii_alphanumeric() || bytes[i - 1] == b'_')
+}
+
+/// After an `r`, does a raw string open here? Returns the `#` count.
+fn raw_str_open(rest: &[u8]) -> Option<u32> {
+    let mut hashes = 0u32;
+    for &b in rest {
+        match b {
+            b'#' => hashes += 1,
+            b'"' => return Some(hashes),
+            _ => return None,
+        }
+    }
+    None
+}
+
+/// Do `hashes` `#`s follow (closing a raw string)?
+fn ends_raw(rest: &[u8], hashes: u32) -> bool {
+    let n = hashes as usize;
+    rest.len() >= n && rest[..n].iter().all(|&b| b == b'#')
+}
+
+/// Length of a char literal starting at `'`, or None for a lifetime.
+fn char_literal_len(bytes: &[u8]) -> Option<usize> {
+    if bytes.len() >= 3 && bytes[1] == b'\\' {
+        // escaped char: '\n', '\'', '\\', '\x7f', '\u{..}'
+        for (j, &b) in bytes.iter().enumerate().skip(2) {
+            if b == b'\'' && j >= 3 {
+                return Some(j + 1);
+            }
+            if b == b'\'' && bytes[1] == b'\\' && j == 3 {
+                return Some(j + 1);
+            }
+            if j > 12 {
+                return None;
+            }
+        }
+        None
+    } else if bytes.len() >= 3 && bytes[2] == b'\'' {
+        Some(3)
+    } else {
+        None
+    }
+}
+
+/// Does `code` contain `needle` as a non-identifier-prefixed match?
+/// (`PooledVec::with_capacity` must not match `Vec::with_capacity`.)
+fn contains_bare(code: &str, needle: &str) -> bool {
+    let mut from = 0;
+    while let Some(pos) = code[from..].find(needle) {
+        let at = from + pos;
+        let bounded = at == 0 || {
+            let prev = code.as_bytes()[at - 1];
+            !(prev.is_ascii_alphanumeric() || prev == b'_')
+        };
+        if bounded {
+            return true;
+        }
+        from = at + needle.len();
+    }
+    false
+}
+
+/// Does `code` contain `word` as a whole token (both sides bounded)?
+fn contains_word(code: &str, word: &str) -> bool {
+    let mut from = 0;
+    while let Some(pos) = code[from..].find(word) {
+        let at = from + pos;
+        let prev_ok = at == 0 || {
+            let prev = code.as_bytes()[at - 1];
+            !(prev.is_ascii_alphanumeric() || prev == b'_')
+        };
+        if prev_ok && !starts_ident_cont(code, at + word.len()) {
+            return true;
+        }
+        from = at + word.len();
+    }
+    false
+}
+
+/// Find the word `unsafe` introducing a *block* (not `fn`/`impl`/
+/// `trait`/`extern`) in a code line.
+fn has_unsafe_block(code: &str) -> bool {
+    let mut from = 0;
+    while let Some(pos) = code[from..].find("unsafe") {
+        let at = from + pos;
+        let before_ok = at == 0 || {
+            let prev = code.as_bytes()[at - 1];
+            !(prev.is_ascii_alphanumeric() || prev == b'_')
+        };
+        let rest = code[at + "unsafe".len()..].trim_start();
+        let after_ok = !rest.starts_with(char::is_alphanumeric) && !rest.starts_with('_');
+        if before_ok && after_ok {
+            let declares = ["fn", "impl", "trait", "extern"]
+                .iter()
+                .any(|kw| rest.starts_with(kw) && !starts_ident_cont(rest, kw.len()));
+            if !declares {
+                return true;
+            }
+        }
+        from = at + "unsafe".len();
+    }
+    false
+}
+
+fn starts_ident_cont(s: &str, at: usize) -> bool {
+    s.as_bytes().get(at).is_some_and(|b| b.is_ascii_alphanumeric() || *b == b'_')
+}
+
+/// A waiver directive for `rule` with a non-empty reason, in comment text.
+fn has_waiver(comment: &str, rule: &str) -> bool {
+    directive_with_reason(comment, &format!("lint: allow({rule}):"))
+}
+
+fn has_file_waiver(comment: &str, rule: &str) -> bool {
+    directive_with_reason(comment, &format!("lint: allow-file({rule}):"))
+}
+
+fn directive_with_reason(comment: &str, directive: &str) -> bool {
+    comment
+        .find(directive)
+        .is_some_and(|at| !comment[at + directive.len()..].trim().is_empty())
+}
+
+/// Orderings that demand a justification comment.
+const STRONG_ORDERINGS: [&str; 4] =
+    ["Ordering::Acquire", "Ordering::Release", "Ordering::AcqRel", "Ordering::SeqCst"];
+
+/// Is this path inside the hot-path module set the alloc/mpsc rules
+/// police? (`label` uses `/` separators — normalized by [`lint_tree`].)
+fn is_hot_path(label: &str) -> bool {
+    ["src/net/", "src/coordinator/", "src/util/"].iter().any(|m| label.contains(m))
+}
+
+fn is_pool_module(label: &str) -> bool {
+    label.ends_with("src/util/pool.rs")
+}
+
+/// Lint one file's source text. `label` is the path reported in
+/// violations and used for rule scoping.
+pub fn lint_source(label: &str, text: &str) -> Vec<Violation> {
+    let mut out = Vec::new();
+    let hot = is_hot_path(label);
+    let pool = is_pool_module(label);
+    let file_waives_mpsc = has_file_waiver(text, "mpsc");
+    let file_waives_alloc = has_file_waiver(text, "alloc");
+
+    let mut lex = Lex::Code;
+    // comment run directly above the current line (reset by code/blank)
+    let mut run = String::new();
+    let mut depth = 0i64;
+    // #[cfg(test)] module skipping for the mpsc/alloc rules
+    let mut test_attr_pending = false;
+    let mut test_skip_above: Option<i64> = None;
+
+    for (idx, raw) in text.lines().enumerate() {
+        let line_no = idx + 1;
+        let (code, comment, next_lex) = split_line(lex, raw);
+        lex = next_lex;
+        let code_trim = code.trim();
+        let in_test_block = test_skip_above.is_some();
+
+        if code_trim.is_empty() {
+            if comment.is_empty() {
+                run.clear(); // blank line breaks the comment run
+            } else {
+                run.push('\n');
+                run.push_str(&comment);
+            }
+            continue;
+        }
+
+        // --- rule checks on this code-bearing line ---
+        let waived = |rule: &str| has_waiver(&run, rule) || has_waiver(&comment, rule);
+
+        if has_unsafe_block(code_trim)
+            && !run.contains("SAFETY:")
+            && !comment.contains("SAFETY:")
+        {
+            out.push(Violation {
+                file: label.to_string(),
+                line: line_no,
+                rule: "safety-comment",
+                msg: "`unsafe` block without an immediately preceding `// SAFETY:` comment"
+                    .to_string(),
+            });
+        }
+
+        for pat in STRONG_ORDERINGS {
+            if contains_bare(code_trim, pat)
+                && !run.contains("ordering:")
+                && !comment.contains("ordering:")
+            {
+                out.push(Violation {
+                    file: label.to_string(),
+                    line: line_no,
+                    rule: "ordering-justified",
+                    msg: format!(
+                        "`{pat}` without an `// ordering:` justification — \
+                         the repo default is Relaxed (crate docs, Concurrency model)"
+                    ),
+                });
+            }
+        }
+
+        if hot && !in_test_block {
+            if contains_bare(code_trim, "mpsc") && !file_waives_mpsc && !waived("mpsc") {
+                out.push(Violation {
+                    file: label.to_string(),
+                    line: line_no,
+                    rule: "no-mpsc",
+                    msg: "std::sync::mpsc in a hot-path module (allocates per send); \
+                          use crate::util::queue"
+                        .to_string(),
+                });
+            }
+            if !pool && !file_waives_alloc && !waived("alloc") {
+                let bare_vec = contains_bare(code_trim, "Vec::with_capacity")
+                    || contains_bare(code_trim, "vec!");
+                if bare_vec {
+                    out.push(Violation {
+                        file: label.to_string(),
+                        line: line_no,
+                        rule: "no-bare-alloc",
+                        msg: "bare Vec::with_capacity / vec![] in a hot-path module; \
+                              use PooledVec (or waive with a reason)"
+                            .to_string(),
+                    });
+                }
+            }
+        }
+
+        // --- bookkeeping for the next line ---
+        if test_attr_pending {
+            if contains_word(code_trim, "mod") {
+                test_skip_above = Some(depth);
+                test_attr_pending = false;
+            } else if !code_trim.starts_with("#[") {
+                test_attr_pending = false;
+            }
+        }
+        if code_trim.contains("#[cfg(test)") || code_trim.contains("#[cfg(all(test") {
+            test_attr_pending = true;
+        }
+        depth += code.matches('{').count() as i64;
+        depth -= code.matches('}').count() as i64;
+        if let Some(above) = test_skip_above {
+            if depth <= above {
+                test_skip_above = None;
+            }
+        }
+        run.clear();
+        if !comment.is_empty() {
+            // a trailing comment on a code line also seeds the run for
+            // the next line (attribute-then-code patterns)
+            run.push_str(&comment);
+        }
+    }
+    out
+}
+
+/// Recursively collect `.rs` files under `dir` (sorted for determinism).
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let mut entries: Vec<_> = std::fs::read_dir(dir)
+        .with_context(|| format!("reading {}", dir.display()))?
+        .collect::<std::io::Result<_>>()?;
+    entries.sort_by_key(|e| e.path());
+    for entry in entries {
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Lint the whole tree rooted at the crate dir (the one holding `src/`):
+/// `src/`, `tests/`, `benches/`.
+pub fn lint_tree(root: &Path) -> Result<Vec<Violation>> {
+    let mut files = Vec::new();
+    for sub in ["src", "tests", "benches"] {
+        let dir = root.join(sub);
+        if dir.is_dir() {
+            collect_rs(&dir, &mut files)?;
+        }
+    }
+    if files.is_empty() {
+        bail!("no .rs files under {} — wrong --root?", root.display());
+    }
+    let mut out = Vec::new();
+    for path in files {
+        let text =
+            std::fs::read_to_string(&path).with_context(|| format!("reading {}", path.display()))?;
+        let label = path
+            .strip_prefix(root)
+            .unwrap_or(&path)
+            .to_string_lossy()
+            .replace(std::path::MAIN_SEPARATOR, "/");
+        out.extend(lint_source(&label, &text));
+    }
+    Ok(out)
+}
+
+/// Negative self-test: every rule must reject its seeded violation and
+/// accept the corrected twin. Violations are assembled from fragments so
+/// linting this file's own source never trips on them.
+pub fn self_test() -> Result<()> {
+    let mut failures = Vec::new();
+    let mut expect = |name: &str, rule: &str, src: &str, want: usize| {
+        let got = lint_source("src/coordinator/seeded.rs", src)
+            .iter()
+            .filter(|v| v.rule == rule)
+            .count();
+        if got != want {
+            failures.push(format!("{name}: expected {want} `{rule}` violation(s), got {got}"));
+        }
+    };
+
+    // seeded: unsafe block with no SAFETY comment (the acceptance
+    // criterion's canonical violation)
+    let uns = String::from("uns") + "afe";
+    let bad_safety = format!("fn f(p: *const u8) -> u8 {{\n    {uns} {{ *p }}\n}}\n");
+    expect("missing-SAFETY", "safety-comment", &bad_safety, 1);
+    let good_safety =
+        format!("fn f(p: *const u8) -> u8 {{\n    // SAFETY: contract\n    {uns} {{ *p }}\n}}\n");
+    expect("present-SAFETY", "safety-comment", &good_safety, 0);
+    let decl = format!("{uns} fn g() {{}}\n{uns} impl Send for T {{}}\n");
+    expect("unsafe-declarations-exempt", "safety-comment", &decl, 0);
+
+    // seeded: strong ordering without justification
+    let seq = String::from("Ordering::Seq") + "Cst";
+    let bad_ord = format!("fn f() {{ X.load({seq}); }}\n");
+    expect("unjustified-SeqCst", "ordering-justified", &bad_ord, 1);
+    let good_ord = format!("fn f() {{\n    // ordering: publishes map\n    X.load({seq});\n}}\n");
+    expect("justified-SeqCst", "ordering-justified", &good_ord, 0);
+
+    // seeded: mpsc in a hot-path module
+    let mp = String::from("mp") + "sc";
+    let bad_mpsc = format!("use std::sync::{mp};\n");
+    expect("hot-path-mpsc", "no-mpsc", &bad_mpsc, 1);
+    let waived = format!("// lint: allow({mp}): off the hot loop\nuse std::sync::{mp};\n");
+    expect("waived-mpsc", "no-mpsc", &waived, 0);
+
+    // seeded: bare allocation in a hot-path module
+    let vwc = String::from("Vec::with_cap") + "acity";
+    let bad_alloc = format!("fn f() {{ let v: Vec<u8> = {vwc}(8); }}\n");
+    expect("hot-path-bare-alloc", "no-bare-alloc", &bad_alloc, 1);
+    let pooled = format!("fn f() {{ let v = Pooled{vwc}(8); }}\n");
+    expect("pooledvec-not-flagged", "no-bare-alloc", &pooled, 0);
+    let in_test = format!("#[cfg(test)]\nmod t {{\n    let v: Vec<u8> = {vwc}(8);\n}}\n");
+    expect("test-code-exempt", "no-bare-alloc", &in_test, 0);
+
+    if failures.is_empty() {
+        println!("lint self-test: every rule rejects its seeded violation");
+        Ok(())
+    } else {
+        bail!("lint self-test failed:\n  {}", failures.join("\n  "));
+    }
+}
+
+/// CLI entry: lint the tree, print violations, error out if any.
+pub fn run(root: &Path) -> Result<()> {
+    let violations = lint_tree(root)?;
+    if violations.is_empty() {
+        println!("lint: clean");
+        return Ok(());
+    }
+    for v in &violations {
+        eprintln!("{v}");
+    }
+    bail!("{} lint violation(s)", violations.len());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn self_test_passes() {
+        self_test().unwrap();
+    }
+
+    #[test]
+    fn strings_and_comments_never_false_positive() {
+        // the patterns appear only in a doc comment and a string payload
+        let src = "//! replaces std::sync::mpsc on the hot path\n\
+                   fn f() -> &'static str {\n    \"Vec::with_capacity(8) vec![]\"\n}\n";
+        assert!(lint_source("src/util/doc.rs", src).is_empty());
+    }
+
+    #[test]
+    fn raw_strings_span_lines_without_leaking_code() {
+        let src = "fn f() -> &'static str {\n    r#\"\nuse std::sync::mpsc;\nvec![1]\n\"#\n}\n";
+        assert!(lint_source("src/net/raw.rs", src).is_empty());
+    }
+
+    #[test]
+    fn scoping_limits_alloc_and_mpsc_rules_to_hot_modules() {
+        let src = "fn f() { let v: Vec<u8> = Vec::with_capacity(8); let w = vec![1]; }\n";
+        assert!(lint_source("src/analysis/free.rs", src).is_empty(), "cold modules are free");
+        assert_eq!(lint_source("src/net/hot.rs", src).len(), 2, "hot modules are policed");
+        assert!(lint_source("src/util/pool.rs", src).is_empty(), "the pool is the allocator");
+    }
+
+    #[test]
+    fn waiver_requires_a_reason() {
+        let bare = "// lint: allow(alloc):\nfn f() { let v: Vec<u8> = Vec::with_capacity(8); }\n";
+        assert_eq!(lint_source("src/util/x.rs", bare).len(), 1, "reasonless waiver is void");
+        let reasoned = "// lint: allow(alloc): startup scratch\nlet v = Vec::with_capacity(8);\n";
+        assert!(lint_source("src/util/x.rs", reasoned).is_empty());
+    }
+
+    #[test]
+    fn ordering_rule_ignores_relaxed() {
+        let src = "fn f() { X.load(Ordering::Relaxed); }\n";
+        assert!(lint_source("src/util/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn tree_lint_passes_on_this_repo() {
+        // CI runs `repro lint` from rust/; the unit test finds the crate
+        // root relative to this source file instead.
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+        let violations = lint_tree(root).unwrap();
+        assert!(
+            violations.is_empty(),
+            "repo must lint clean:\n{}",
+            violations.iter().map(|v| v.to_string()).collect::<Vec<_>>().join("\n")
+        );
+    }
+}

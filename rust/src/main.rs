@@ -12,7 +12,8 @@
 //!   or expose it over TCP with `--listen` (the wire protocol);
 //! * `loadgen [...]`            — drive a wire-protocol endpoint with
 //!   closed/poisson/bursty traffic and emit `BENCH_serve.json`;
-//! * `eval [...]`               — offline accuracy/energy of every variant.
+//! * `eval [...]`               — offline accuracy/energy of every variant;
+//! * `lint [...]`               — repo-invariant source checker (CI gate).
 
 use luna_cim::cells::tsmc65_library;
 use luna_cim::config::{BackendKind, Config};
@@ -36,6 +37,7 @@ USAGE:
   repro eval     [--artifacts DIR]
   repro ablation [--artifacts DIR]
   repro export   [--out DIR]
+  repro lint     [--root DIR] [--self-test]
 
 Multiplier slugs: ideal traditional dnc dnc-opt approx approx2 array-mult
 Backends: native (in-process batched LUT-GEMM, default),
@@ -48,6 +50,10 @@ Backends: native (in-process batched LUT-GEMM, default),
           stays one global bound, replies are bit-identical for any count)
 --listen: expose the coordinator over TCP (wire protocol) instead of running
           the in-process synthetic load; serves until killed
+lint:     repo-invariant source checker (SAFETY comments on unsafe blocks,
+          no mpsc / bare allocation in hot-path modules, justified memory
+          orderings); --self-test proves each rule rejects a seeded
+          violation; --root points at the crate dir (default: auto)
 loadgen:  drives a wire endpoint with closed-loop, open-loop poisson and bursty
           arrivals, sweeping --loads (req/s) and reporting throughput, wall
           p50/p99, sim p50/p99 and reject rate per level; with no --addr it
@@ -129,6 +135,7 @@ fn run(argv: &[String]) -> Result<()> {
         "eval" => cmd_eval(&args),
         "ablation" => cmd_ablation(&args),
         "export" => cmd_export(&args),
+        "lint" => cmd_lint(&args),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
             Ok(())
@@ -506,6 +513,21 @@ fn cmd_export(args: &Args) -> Result<()> {
     }
     println!("wrote tables, figures and CSVs to {}", out.display());
     Ok(())
+}
+
+fn cmd_lint(args: &Args) -> Result<()> {
+    if args.flag("self-test").is_some() {
+        return luna_cim::lint::self_test();
+    }
+    let root = match args.flag("root") {
+        Some(dir) => std::path::PathBuf::from(dir),
+        // auto: the crate dir itself (CI runs from rust/) or rust/ when
+        // invoked from the repo root
+        None if std::path::Path::new("src").is_dir() => std::path::PathBuf::from("."),
+        None if std::path::Path::new("rust/src").is_dir() => std::path::PathBuf::from("rust"),
+        None => anyhow::bail!("cannot find the crate dir; pass --root"),
+    };
+    luna_cim::lint::run(&root)
 }
 
 fn cmd_eval(args: &Args) -> Result<()> {

@@ -32,6 +32,10 @@
 //! what admission control actually delivers under retry storms. Wall
 //! latency for a retried request runs from its *first* send, so retry
 //! queueing shows up in the percentiles.
+//!
+//! lint: allow-file(alloc): the generator is the measuring *client*;
+//! its allocations land on loadgen threads, never on the server's
+//! serving hot path (which `tests/hot_path_allocs.rs` pins at zero).
 
 use super::client::NetClient;
 use super::protocol::Frame;
@@ -40,6 +44,8 @@ use crate::Result;
 use anyhow::Context;
 use std::collections::HashMap;
 use std::fmt::Write as _;
+// lint: allow(mpsc): loadgen is the measuring client, not the serving
+// hot path — per-send allocation here never touches server steady state.
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -311,6 +317,7 @@ fn run_open(
         let sender_pending = pending.clone();
         // receiver → sender re-send orders (retry mode); dropping the
         // producer ends the sender's drain loop.
+        // lint: allow(mpsc): client-side retry plumbing, off the serving path.
         let (retry_tx, retry_rx) = mpsc::channel::<RetryOrder>();
         let sender = std::thread::spawn(move || -> Result<()> {
             let mut rng = Rng::seed_from_u64(seed);

@@ -196,6 +196,8 @@ fn accept_loop(
 /// long-lived server does not accumulate dead handles.
 fn prune_finished(state: &NetShared) {
     let mut conns = state.conns.lock().unwrap();
+    // lint: allow(alloc): accept-loop housekeeping between connections,
+    // never on a request's path.
     let mut kept = Vec::with_capacity(conns.len());
     for c in conns.drain(..) {
         if c.reader.is_finished() && c.writer.is_finished() {

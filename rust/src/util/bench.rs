@@ -70,6 +70,9 @@ impl Bencher {
             f();
         }
         // Measure individual iterations.
+        // lint: allow(alloc): measurement harness buffer, outside any
+        // serving path (growth during a run would perturb samples, so
+        // it pre-sizes once here).
         let mut samples_ns: Vec<f64> = Vec::with_capacity(4096);
         let t1 = Instant::now();
         while t1.elapsed() < self.measure {

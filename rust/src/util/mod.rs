@@ -19,6 +19,9 @@
 //! * [`queue`] — a steady-state allocation-free MPMC queue (replaces
 //!   `std::sync::mpsc`, which allocates message blocks, on the serving
 //!   hot path).
+//! * [`sync`] — the std/loom synchronization shim every concurrent
+//!   module imports its primitives through, so `--cfg loom` swaps the
+//!   whole crate onto loom's model-checked versions.
 
 pub mod bench;
 pub mod check;
@@ -27,6 +30,7 @@ pub mod oneshot;
 pub mod pool;
 pub mod queue;
 pub mod rng;
+pub mod sync;
 
 pub use pool::{ClassPool, PoolItem, PoolStats, PooledVec};
 pub use rng::Rng;

@@ -3,6 +3,10 @@
 //! The worker pool replies through these; `recv` blocks the calling
 //! (client) thread, which is the concurrency model of the std-thread
 //! coordinator (no async runtime in this offline image).
+//!
+//! lint: allow-file(mpsc): this module IS the mpsc wrapper — in-process
+//! `repro serve` clients block on it, but the wire serving hot path
+//! replies through `util::queue` and never constructs one.
 
 use std::sync::mpsc;
 use std::time::Duration;

@@ -28,11 +28,22 @@
 //!   Stats (hits / misses / recycled) are process-wide atomics surfaced
 //!   on the metrics `pool` line
 //!   ([`crate::coordinator::MetricsSnapshot::render`]).
+//!
+//! Under `--cfg loom` the class mutexes come from the
+//! [`super::sync`] shim and the recycle protocol is model-checked
+//! against pool instances created inside the model (loom types are not
+//! const-constructible, so the global typed pools are compiled out and
+//! [`PooledVec`] falls back to plain allocation — the *protocol* is
+//! what the models pin, on `ClassPool` values they own).
 
+use crate::util::sync::Mutex;
 use std::mem::ManuallyDrop;
 use std::ops::{Deref, DerefMut};
+// Stats stay std atomics even under loom: they are monitoring counters
+// with no synchronization role (nothing reads them to make a
+// happens-before decision), and keeping them off the shim lets the loom
+// models read exact cross-thread deltas after `join`.
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
 
 /// Number of power-of-two size classes (`2^0 ..= 2^(CLASSES-1)` element
 /// capacities; larger buffers share the last class, see [`ClassPool::get`]).
@@ -101,8 +112,16 @@ fn class_for_return(cap: usize) -> usize {
 }
 
 impl<T> ClassPool<T> {
+    // Const-constructible only off loom (loom's Mutex has no const
+    // constructor); the loom models build pools at model runtime.
+    #[cfg(not(loom))]
     pub const fn new() -> Self {
         ClassPool { classes: [const { Mutex::new(Vec::new()) }; CLASSES] }
+    }
+
+    #[cfg(loom)]
+    pub fn new() -> Self {
+        ClassPool { classes: std::array::from_fn(|_| Mutex::new(Vec::new())) }
     }
 
     /// Pop a cleared buffer with `capacity >= min_cap` (allocating one
@@ -147,20 +166,29 @@ impl<T> ClassPool<T> {
 /// Element types with a process-wide [`ClassPool`]. Implemented for the
 /// serving path's buffer elements (`u8`, `f32` here; request vecs in
 /// [`crate::coordinator::request`]).
+///
+/// The `pool()` accessor only exists off loom: loom primitives cannot
+/// live in statics, so `--cfg loom` builds have no global pools and
+/// [`PooledVec`] allocates plainly (see the module docs).
 pub trait PoolItem: Sized + 'static {
+    #[cfg(not(loom))]
     fn pool() -> &'static ClassPool<Self>;
 }
 
+#[cfg(not(loom))]
 static U8_POOL: ClassPool<u8> = ClassPool::new();
+#[cfg(not(loom))]
 static F32_POOL: ClassPool<f32> = ClassPool::new();
 
 impl PoolItem for u8 {
+    #[cfg(not(loom))]
     fn pool() -> &'static ClassPool<u8> {
         &U8_POOL
     }
 }
 
 impl PoolItem for f32 {
+    #[cfg(not(loom))]
     fn pool() -> &'static ClassPool<f32> {
         &F32_POOL
     }
@@ -180,8 +208,15 @@ impl<T: PoolItem> PooledVec<T> {
     }
 
     /// A cleared pooled buffer with at least `cap` capacity.
+    #[cfg(not(loom))]
     pub fn with_capacity(cap: usize) -> Self {
         PooledVec { buf: ManuallyDrop::new(T::pool().get(cap)) }
+    }
+
+    /// Loom builds have no global pools (see module docs): plain alloc.
+    #[cfg(loom)]
+    pub fn with_capacity(cap: usize) -> Self {
+        PooledVec { buf: ManuallyDrop::new(Vec::with_capacity(cap)) }
     }
 
     /// Copy a slice into a pooled buffer (the hot-path constructor).
@@ -196,8 +231,9 @@ impl<T: PoolItem> PooledVec<T> {
 
     /// Unwrap into a plain `Vec`, opting the buffer out of recycling.
     pub fn take(mut self) -> Vec<T> {
-        // Safety: `self` is forgotten immediately, so Drop never runs on
-        // the now-empty ManuallyDrop.
+        // SAFETY: `self` is forgotten immediately after this take, so
+        // `Drop` never runs on the now-empty `ManuallyDrop` — the inner
+        // `Vec` is moved out exactly once.
         let v = unsafe { ManuallyDrop::take(&mut self.buf) };
         std::mem::forget(self);
         v
@@ -206,9 +242,15 @@ impl<T: PoolItem> PooledVec<T> {
 
 impl<T: PoolItem> Drop for PooledVec<T> {
     fn drop(&mut self) {
-        // Safety: Drop runs at most once; `take` forgets self first.
+        // SAFETY: `Drop` runs at most once, and the only other
+        // `ManuallyDrop::take` site (`PooledVec::take`) forgets `self`
+        // before `Drop` could run — so the inner `Vec` is still present
+        // here and is moved out exactly once.
         let v = unsafe { ManuallyDrop::take(&mut self.buf) };
+        #[cfg(not(loom))]
         T::pool().put(v);
+        #[cfg(loom)]
+        drop(v);
     }
 }
 
@@ -276,7 +318,49 @@ impl<T: PoolItem + PartialEq> PartialEq<[T]> for PooledVec<T> {
     }
 }
 
-#[cfg(test)]
+// Recycle-race models. Loom explores every interleaving of the two
+// threads' get/put sequences against the class mutex and the stats
+// counters; `tests/loom_models.rs` holds the cross-module protocols.
+#[cfg(all(test, loom))]
+mod loom_models {
+    use super::*;
+    use crate::util::sync::Arc;
+
+    /// Two threads racing get/put on one class: stats account for every
+    /// operation exactly once in every interleaving, no buffer is lost,
+    /// and both buffers end up on the free list (the next two gets hit).
+    #[test]
+    fn concurrent_recycle_keeps_stats_and_buffers_consistent() {
+        loom::model(|| {
+            let pool = Arc::new(ClassPool::<u8>::new());
+            let before = stats();
+            let p = pool.clone();
+            let t = loom::thread::spawn(move || {
+                let v = p.get(8);
+                assert!(v.capacity() >= 8);
+                p.put(v);
+            });
+            let v = pool.get(8);
+            assert!(v.capacity() >= 8);
+            pool.put(v);
+            t.join().unwrap();
+            let after = stats();
+            // exactly two gets and two successful returns, in every
+            // interleaving (MAX_PER_CLASS is far above 2)
+            assert_eq!(after.hits + after.misses, before.hits + before.misses + 2);
+            assert_eq!(after.recycled, before.recycled + 2);
+            // both buffers are on the free list: two more gets both hit
+            let a = pool.get(8);
+            let b = pool.get(8);
+            let mid = stats();
+            assert_eq!(mid.hits, after.hits + 2, "recycled buffers serve later gets");
+            assert!(!std::ptr::eq(a.as_ptr(), b.as_ptr()), "distinct buffers");
+        });
+    }
+}
+
+// The global typed pools these exercise are compiled out under loom.
+#[cfg(all(test, not(loom)))]
 mod tests {
     use super::*;
 

@@ -1,0 +1,47 @@
+//! loom-aware synchronization primitives.
+//!
+//! Every hot-path concurrency primitive ([`super::queue`], the class
+//! mutexes in [`super::pool`], the admission gate in
+//! [`crate::coordinator::admission`]) imports `Mutex`/`Condvar`/`Arc` and
+//! the `atomic` module from here instead of `std::sync`. In a normal
+//! build the re-exports *are* `std::sync` — zero cost, zero behavioral
+//! difference. Under `RUSTFLAGS="--cfg loom"` they become loom's
+//! model-checked versions, and the `#[cfg(loom)]` model suites
+//! (`tests/loom_models.rs` plus in-module models) exhaustively explore
+//! every interleaving of the protocols built on them:
+//!
+//! * the queue's sender/receiver-count close-and-drain protocol,
+//! * the `ReplyTicket` exactly-once drop-guard delivery,
+//! * pool recycle races and stats consistency,
+//! * the admission count's never-exceeds / never-leaks invariant.
+//!
+//! Run the models with:
+//!
+//! ```text
+//! RUSTFLAGS="--cfg loom" LOOM_MAX_PREEMPTIONS=3 \
+//!     cargo test --release --test loom_models
+//! ```
+//!
+//! Shim contract (what loom's types do NOT support, and the repo rules
+//! that follow):
+//!
+//! * loom primitives are not const-constructible — statics built on the
+//!   shim must be gated `#[cfg(not(loom))]` (see the typed pool statics
+//!   in [`super::pool`]); under loom, code paths that would touch them
+//!   take a model-local or bypass route instead.
+//! * loom primitives cannot cross model iterations — anything shimmed
+//!   must be created inside `loom::model(|| ...)`.
+//! * loom's `Arc` has no `downgrade`/`Weak` — the coordinator's
+//!   background threads keep `std::sync::Arc` (they are not modeled;
+//!   only the admission atomic they share moved onto the shim, inside
+//!   [`crate::coordinator::admission::AdmissionGate`]).
+
+#[cfg(not(loom))]
+pub use std::sync::atomic;
+#[cfg(not(loom))]
+pub use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+#[cfg(loom)]
+pub use loom::sync::atomic;
+#[cfg(loom)]
+pub use loom::sync::{Arc, Condvar, Mutex, MutexGuard};

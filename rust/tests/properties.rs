@@ -11,6 +11,8 @@ use luna_cim::multiplier::{generic, MultiplierKind, MultiplierModel};
 use luna_cim::nn::{DigitsDataset, QuantLinear, QuantMlp, Quantizer};
 use luna_cim::prop_assert;
 use luna_cim::util::check::check;
+use luna_cim::util::pool::stats as pool_stats;
+use luna_cim::util::ClassPool;
 use std::time::Duration;
 
 // ---------------------------------------------------------------------------
@@ -138,6 +140,52 @@ fn prop_batcher_backpressure_never_drops_silently() {
             emitted == accepted,
             "accepted {accepted} != emitted {emitted} (rejected {rejected})"
         );
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// buffer-pool invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_pool_class_boundaries_at_powers_of_two_and_stats_monotone() {
+    // Class k's smallest stored buffer is 2^k and its largest routed
+    // request is exactly 2^k — so a power-of-two request must recycle a
+    // same-sized buffer, while one element more must route to the next
+    // class. Stats are process-global (parallel tests also bump them),
+    // so only monotone lower bounds are asserted.
+    check("pool class boundaries", 60, |rng| {
+        let pool: ClassPool<u64> = ClassPool::new();
+        let k = 1 + rng.gen_below(16) as usize;
+        let exact = 1usize << k;
+        let before = pool_stats();
+
+        let v1 = pool.get(exact);
+        prop_assert!(v1.capacity() >= exact, "k={k}: under-capacity get");
+        let ptr1 = v1.as_ptr();
+        pool.put(v1);
+
+        let v2 = pool.get(exact);
+        prop_assert!(
+            v2.as_ptr() == ptr1,
+            "k={k}: exact power-of-two request must hit its own class"
+        );
+
+        // one past the boundary routes to class k+1: fresh buffer, big
+        // enough, and not the one class k still considers its own size
+        let v3 = pool.get(exact + 1);
+        prop_assert!(v3.capacity() >= exact + 1, "k={k}: boundary+1 under-capacity");
+        prop_assert!(v3.as_ptr() != ptr1, "k={k}: boundary+1 must not reuse class k's buffer");
+        pool.put(v2);
+        pool.put(v3);
+
+        let after = pool_stats();
+        prop_assert!(after.hits >= before.hits + 1, "recycle must register as a hit");
+        prop_assert!(after.misses >= before.misses + 2, "two fresh classes must miss");
+        prop_assert!(after.recycled >= before.recycled + 3, "three puts must recycle");
+        let r = after.hit_rate();
+        prop_assert!((0.0..=1.0).contains(&r), "hit rate {r} out of range");
         Ok(())
     });
 }
