@@ -1,0 +1,81 @@
+//! End-to-end serving demo: two `repro serve`-equivalent backends
+//! behind the `repro route` front tier, driven by a wire client.
+//!
+//! Run with `cargo run --release --example e2e_serving`. Everything is
+//! loopback over synthesized artifacts — no external network, no `make
+//! artifacts` — and the demo asserts the router is *transparent*: the
+//! logits served through it are bit-identical with a direct in-process
+//! `submit` against the same model, and with the functional model.
+
+use luna_cim::config::{Config, DispatchPolicy, RouterConfig};
+use luna_cim::coordinator::CoordinatorServer;
+use luna_cim::multiplier::{MultiplierKind, MultiplierModel};
+use luna_cim::net::{Frame, NetClient, NetServer, RouterServer};
+use luna_cim::nn::{DigitsDataset, QuantMlp};
+use luna_cim::runtime::ArtifactStore;
+
+fn main() -> anyhow::Result<()> {
+    let mlp = QuantMlp::random_digits(7);
+    let testset = DigitsDataset::generate(4, 99);
+    let model = MultiplierModel::new(MultiplierKind::DncOpt);
+
+    // two independent backend stacks, each on its own loopback port —
+    // stand-ins for two `repro serve --listen` processes
+    let mut nets = Vec::new();
+    let mut servers = Vec::new();
+    let mut handles = Vec::new();
+    for tag in ["e2e-router-a", "e2e-router-b"] {
+        let dir = luna_cim::util::test_dir(tag);
+        let store = ArtifactStore::new(&dir);
+        store.write_synthetic(&mlp, &testset, 8)?;
+        let mut cfg = Config::default();
+        cfg.artifacts_dir = store.root().display().to_string();
+        cfg.batcher.max_wait_us = 1_000;
+        let (server, handle) = CoordinatorServer::start(cfg)?;
+        let net = NetServer::bind(handle.clone(), "127.0.0.1:0", 64)?;
+        println!("backend {tag} listening on {}", net.local_addr());
+        handles.push(handle);
+        nets.push(net);
+        servers.push(server);
+    }
+
+    let router_cfg = RouterConfig {
+        listen: "127.0.0.1:0".into(),
+        backends: nets.iter().map(|n| n.local_addr().to_string()).collect(),
+        policy: DispatchPolicy::Hash,
+        vnodes: 160,
+        max_connections: 64,
+        probe_ms: 50,
+        max_backoff_ms: 500,
+    };
+    let router = RouterServer::bind(&router_cfg)?;
+    println!("router listening on {} (policy {})", router.local_addr(), router_cfg.policy.slug());
+
+    let mut client = NetClient::connect(router.local_addr())?;
+    let info = client.info().clone();
+    println!("fleet info: in={} out={} max_batch={}", info.in_dim, info.out_dim, info.max_batch);
+
+    let mut checked = 0usize;
+    for sample in testset.samples.iter().take(16) {
+        let (label, logits) = match client.infer(&sample.pixels)? {
+            Frame::Response { label, logits, .. } => (label as usize, logits.take()),
+            other => anyhow::bail!("unexpected reply: {other:?}"),
+        };
+        let direct = handles[0].submit(sample.pixels.clone())?;
+        assert_eq!(logits, direct.logits, "router must be bit-transparent");
+        assert_eq!(logits, mlp.forward(&sample.pixels, &model));
+        assert_eq!(label, direct.label);
+        checked += 1;
+    }
+    println!("{checked}/16 routed replies bit-identical with direct submit");
+    print!("{}", router.metrics().snapshot().render());
+
+    router.shutdown();
+    for net in nets {
+        net.shutdown();
+    }
+    for server in servers {
+        server.shutdown();
+    }
+    Ok(())
+}

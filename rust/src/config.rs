@@ -75,6 +75,126 @@ pub struct Config {
     pub gemm: GemmConfig,
     pub net: NetConfig,
     pub loadgen: LoadgenConfig,
+    pub router: RouterConfig,
+}
+
+/// How requests map onto batcher shards (see
+/// [`BatcherConfig::affinity`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardAffinity {
+    /// Request-id round-robin: consecutive requests spread across
+    /// shards regardless of which connection sent them (the historical
+    /// default — maximum lane utilization under few connections).
+    Request,
+    /// Connection-id affine: every request from one connection lands on
+    /// the same shard, so a connection's traffic keeps one batcher lane
+    /// (and its worker rotation) warm — cache affinity over spread.
+    Connection,
+}
+
+impl ShardAffinity {
+    /// Stable kebab-case identifier (config files, CLI).
+    pub fn slug(self) -> &'static str {
+        match self {
+            ShardAffinity::Request => "request",
+            ShardAffinity::Connection => "connection",
+        }
+    }
+
+    /// Parse a slug (case-insensitive).
+    pub fn parse_slug(s: &str) -> Option<ShardAffinity> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "request" => Some(ShardAffinity::Request),
+            "connection" => Some(ShardAffinity::Connection),
+            _ => None,
+        }
+    }
+
+    /// Parse with the canonical error message.
+    pub fn from_arg(s: &str) -> Result<ShardAffinity> {
+        Self::parse_slug(s).ok_or_else(|| {
+            anyhow::anyhow!("unknown shard affinity `{s}` (known: request, connection)")
+        })
+    }
+}
+
+/// How the router tier picks a backend per request (see
+/// [`crate::net::router`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DispatchPolicy {
+    /// Consistent hash on the client connection id over a vnode ring:
+    /// one connection's requests stick to one backend (cache/weight-
+    /// stationary affinity), and backend removal remaps only ~1/N of
+    /// connections (minimal disruption).
+    Hash,
+    /// Pick the connected backend with the fewest in-flight requests:
+    /// best load spreading, no affinity.
+    LeastOutstanding,
+}
+
+impl DispatchPolicy {
+    /// Stable kebab-case identifier (config files, CLI).
+    pub fn slug(self) -> &'static str {
+        match self {
+            DispatchPolicy::Hash => "hash",
+            DispatchPolicy::LeastOutstanding => "least-outstanding",
+        }
+    }
+
+    /// Parse a slug (case-insensitive).
+    pub fn parse_slug(s: &str) -> Option<DispatchPolicy> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "hash" => Some(DispatchPolicy::Hash),
+            "least-outstanding" => Some(DispatchPolicy::LeastOutstanding),
+            _ => None,
+        }
+    }
+
+    /// Parse with the canonical error message.
+    pub fn from_arg(s: &str) -> Result<DispatchPolicy> {
+        Self::parse_slug(s).ok_or_else(|| {
+            anyhow::anyhow!("unknown dispatch policy `{s}` (known: hash, least-outstanding)")
+        })
+    }
+}
+
+/// Front-tier router knobs (`repro route`; see [`crate::net::router`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RouterConfig {
+    /// TCP listen address of the router front tier (port `0` =
+    /// OS-assigned). Empty (the default) = no router; `repro route`
+    /// defaults it to `127.0.0.1:0` when unset.
+    pub listen: String,
+    /// Backend endpoints (`repro serve --listen` addresses) the router
+    /// load-balances across. At most 64 (per-request routing state is a
+    /// 64-bit tried mask).
+    pub backends: Vec<String>,
+    /// Dispatch policy: `hash` (default) or `least-outstanding`.
+    pub policy: DispatchPolicy,
+    /// Virtual nodes per backend on the consistent-hash ring (more =
+    /// smoother key distribution, larger ring).
+    pub vnodes: usize,
+    /// Client-connection cap at the router front tier.
+    pub max_connections: usize,
+    /// Base health-probe / reconnect period (ms); failed backends back
+    /// off exponentially from here.
+    pub probe_ms: u64,
+    /// Ceiling on the reconnect backoff (ms).
+    pub max_backoff_ms: u64,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            listen: String::new(),
+            backends: Vec::new(),
+            policy: DispatchPolicy::Hash,
+            vnodes: 160,
+            max_connections: 64,
+            probe_ms: 100,
+            max_backoff_ms: 2000,
+        }
+    }
 }
 
 /// Dynamic batching policy.
@@ -87,13 +207,16 @@ pub struct BatcherConfig {
     pub max_wait_us: u64,
     /// Bound on the pending-request queue (backpressure beyond this).
     pub queue_depth: usize,
-    /// Independent batcher lanes (request-id-affine dispatch): each
-    /// shard owns its own batcher lock and waiter map, so connections on
-    /// different shards never contend. Admission (`queue_depth`) stays a
-    /// single global bound across all shards. `1` (default) = the
-    /// unsharded batcher. Replies are bit-identical for every shard
-    /// count.
+    /// Independent batcher lanes: each shard owns its own batcher lock
+    /// and waiter map, so connections on different shards never contend.
+    /// Admission (`queue_depth`) stays a single global bound across all
+    /// shards. `1` (default) = the unsharded batcher. Replies are
+    /// bit-identical for every shard count.
     pub shards: usize,
+    /// Shard-selection rule: `request` (default, request-id round-robin)
+    /// or `connection` (pin each connection's requests to one shard for
+    /// lane/cache affinity). Bit-identical replies either way.
+    pub affinity: ShardAffinity,
 }
 
 /// Execution worker pool.
@@ -184,6 +307,7 @@ impl Default for Config {
             gemm: GemmConfig::default(),
             net: NetConfig::default(),
             loadgen: LoadgenConfig::default(),
+            router: RouterConfig::default(),
         }
     }
 }
@@ -214,7 +338,13 @@ impl Default for GemmConfig {
 
 impl Default for BatcherConfig {
     fn default() -> Self {
-        BatcherConfig { max_batch: 8, max_wait_us: 500, queue_depth: 1024, shards: 1 }
+        BatcherConfig {
+            max_batch: 8,
+            max_wait_us: 500,
+            queue_depth: 1024,
+            shards: 1,
+            affinity: ShardAffinity::Request,
+        }
     }
 }
 
@@ -239,6 +369,7 @@ const KNOWN_KEYS: &[&str] = &[
     "batcher.max_wait_us",
     "batcher.queue_depth",
     "batcher.shards",
+    "batcher.affinity",
     "workers.count",
     "banks.count",
     "banks.units_per_bank",
@@ -251,6 +382,13 @@ const KNOWN_KEYS: &[&str] = &[
     "loadgen.loads",
     "loadgen.burst",
     "loadgen.retry",
+    "router.listen",
+    "router.backends",
+    "router.policy",
+    "router.vnodes",
+    "router.max_connections",
+    "router.probe_ms",
+    "router.max_backoff_ms",
 ];
 
 impl Config {
@@ -285,6 +423,9 @@ impl Config {
         }
         if m.get_opt("batcher.shards").is_some() {
             cfg.batcher.shards = m.get_usize("batcher.shards")?;
+        }
+        if let Some(v) = m.get_opt("batcher.affinity") {
+            cfg.batcher.affinity = ShardAffinity::from_arg(v)?;
         }
         if m.get_opt("workers.count").is_some() {
             cfg.workers.count = m.get_usize("workers.count")?;
@@ -326,6 +467,28 @@ impl Config {
                 other => bail!("loadgen.retry must be 0/1/true/false, got `{other}`"),
             };
         }
+        if let Some(v) = m.get_opt("router.listen") {
+            cfg.router.listen = v.to_string();
+        }
+        if let Some(v) = m.get_opt("router.backends") {
+            cfg.router.backends =
+                v.split(',').map(str::trim).filter(|s| !s.is_empty()).map(String::from).collect();
+        }
+        if let Some(v) = m.get_opt("router.policy") {
+            cfg.router.policy = DispatchPolicy::from_arg(v)?;
+        }
+        if m.get_opt("router.vnodes").is_some() {
+            cfg.router.vnodes = m.get_usize("router.vnodes")?;
+        }
+        if m.get_opt("router.max_connections").is_some() {
+            cfg.router.max_connections = m.get_usize("router.max_connections")?;
+        }
+        if m.get_opt("router.probe_ms").is_some() {
+            cfg.router.probe_ms = m.get_u64("router.probe_ms")?;
+        }
+        if m.get_opt("router.max_backoff_ms").is_some() {
+            cfg.router.max_backoff_ms = m.get_u64("router.max_backoff_ms")?;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -347,6 +510,7 @@ impl Config {
         m.set("batcher.max_wait_us", self.batcher.max_wait_us);
         m.set("batcher.queue_depth", self.batcher.queue_depth);
         m.set("batcher.shards", self.batcher.shards);
+        m.set("batcher.affinity", self.batcher.affinity.slug());
         m.set("workers.count", self.workers.count);
         m.set("banks.count", self.banks.count);
         m.set("banks.units_per_bank", self.banks.units_per_bank);
@@ -364,6 +528,18 @@ impl Config {
         m.set("loadgen.loads", loads.join(","));
         m.set("loadgen.burst", self.loadgen.burst);
         m.set("loadgen.retry", if self.loadgen.retry { 1 } else { 0 });
+        // same empty-value rule as net.listen: absent key = disabled
+        if !self.router.listen.is_empty() {
+            m.set("router.listen", &self.router.listen);
+        }
+        if !self.router.backends.is_empty() {
+            m.set("router.backends", self.router.backends.join(","));
+        }
+        m.set("router.policy", self.router.policy.slug());
+        m.set("router.vnodes", self.router.vnodes);
+        m.set("router.max_connections", self.router.max_connections);
+        m.set("router.probe_ms", self.router.probe_ms);
+        m.set("router.max_backoff_ms", self.router.max_backoff_ms);
         m.render()
     }
 
@@ -402,6 +578,24 @@ impl Config {
             "loadgen.loads needs at least one level, each >= 1 req/s"
         );
         anyhow::ensure!(self.loadgen.burst >= 1, "loadgen.burst must be >= 1");
+        // the router's per-request routing state is a 64-bit tried mask
+        anyhow::ensure!(
+            self.router.backends.len() <= 64,
+            "router.backends supports at most 64 endpoints"
+        );
+        anyhow::ensure!(
+            (1..=4096).contains(&self.router.vnodes),
+            "router.vnodes must be in 1..=4096"
+        );
+        anyhow::ensure!(
+            self.router.max_connections >= 1,
+            "router.max_connections must be >= 1"
+        );
+        anyhow::ensure!(self.router.probe_ms >= 1, "router.probe_ms must be >= 1");
+        anyhow::ensure!(
+            self.router.max_backoff_ms >= self.router.probe_ms,
+            "router.max_backoff_ms must be >= router.probe_ms"
+        );
         Ok(())
     }
 }
@@ -546,6 +740,53 @@ mod tests {
         let back = Config::from_text(&cfg.to_text()).unwrap();
         assert_eq!(back, cfg);
         assert!(Config::from_text("loadgen.retry maybe\n").is_err());
+    }
+
+    #[test]
+    fn router_keys_parse_roundtrip_and_validate() {
+        let text = "router.listen 127.0.0.1:7070\n\
+                    router.backends 127.0.0.1:7071,127.0.0.1:7072\n\
+                    router.policy least-outstanding\nrouter.vnodes 64\n\
+                    router.max_connections 8\nrouter.probe_ms 50\nrouter.max_backoff_ms 400\n";
+        let cfg = Config::from_text(text).unwrap();
+        assert_eq!(cfg.router.listen, "127.0.0.1:7070");
+        assert_eq!(cfg.router.backends, vec!["127.0.0.1:7071", "127.0.0.1:7072"]);
+        assert_eq!(cfg.router.policy, DispatchPolicy::LeastOutstanding);
+        assert_eq!(cfg.router.vnodes, 64);
+        assert_eq!(cfg.router.max_connections, 8);
+        assert_eq!(cfg.router.probe_ms, 50);
+        assert_eq!(cfg.router.max_backoff_ms, 400);
+        let back = Config::from_text(&cfg.to_text()).unwrap();
+        assert_eq!(back, cfg);
+        // empty listen/backends survive the roundtrip via key absence
+        let off = Config::default();
+        assert!(!off.to_text().contains("router.listen"));
+        assert!(!off.to_text().contains("router.backends"));
+        assert_eq!(Config::from_text(&off.to_text()).unwrap(), off);
+        assert_eq!(off.router.policy, DispatchPolicy::Hash);
+        assert!(Config::from_text("router.policy roulette\n").is_err());
+        assert!(Config::from_text("router.vnodes 0\n").is_err());
+        assert!(Config::from_text("router.vnodes 5000\n").is_err());
+        assert!(Config::from_text("router.probe_ms 0\n").is_err());
+        assert!(Config::from_text("router.probe_ms 100\nrouter.max_backoff_ms 50\n").is_err());
+        let mut wide = Config::default();
+        wide.router.backends = (0..65).map(|i| format!("127.0.0.1:{}", 7000 + i)).collect();
+        assert!(wide.validate().is_err(), "tried mask is 64-bit");
+    }
+
+    #[test]
+    fn batcher_affinity_parses_roundtrips_and_validates() {
+        let cfg = Config::from_text("batcher.affinity connection\n").unwrap();
+        assert_eq!(cfg.batcher.affinity, ShardAffinity::Connection);
+        let back = Config::from_text(&cfg.to_text()).unwrap();
+        assert_eq!(back, cfg);
+        assert_eq!(
+            Config::default().batcher.affinity,
+            ShardAffinity::Request,
+            "request-id round-robin by default"
+        );
+        assert_eq!(ShardAffinity::parse_slug(" Connection "), Some(ShardAffinity::Connection));
+        assert!(Config::from_text("batcher.affinity sticky\n").is_err());
     }
 
     #[test]

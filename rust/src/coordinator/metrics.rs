@@ -314,6 +314,150 @@ impl MetricsSnapshot {
     }
 }
 
+/// Per-backend counters for one router endpoint (see
+/// [`crate::net::router`]). All Relaxed — same monitoring-only audit as
+/// the module header.
+#[derive(Debug)]
+struct BackendCounters {
+    addr: String,
+    /// Requests successfully written to this backend.
+    routed: AtomicU64,
+    /// `Rejected` replies this backend returned (admission pushback).
+    rejected: AtomicU64,
+    /// In-flight requests resolved with a retryable `Rejected` frame
+    /// because this backend's link died under them.
+    failed_over: AtomicU64,
+    /// Healthy→quarantined transitions (a live link died, or the first
+    /// probe of an unreachable endpoint failed).
+    quarantines: AtomicU64,
+    /// Quarantined→healthy transitions (a health probe's Hello/Info
+    /// handshake succeeded again).
+    recoveries: AtomicU64,
+}
+
+/// Router-tier metrics: one counter block per configured backend plus
+/// fleet-level terminal rejections (requests no backend would take).
+#[derive(Debug)]
+pub struct RouterMetrics {
+    backends: Vec<BackendCounters>,
+    terminal_rejections: AtomicU64,
+}
+
+impl RouterMetrics {
+    pub fn new(addrs: &[String]) -> Self {
+        RouterMetrics {
+            backends: addrs
+                .iter()
+                .map(|addr| BackendCounters {
+                    addr: addr.clone(),
+                    routed: AtomicU64::new(0),
+                    rejected: AtomicU64::new(0),
+                    failed_over: AtomicU64::new(0),
+                    quarantines: AtomicU64::new(0),
+                    recoveries: AtomicU64::new(0),
+                })
+                .collect(),
+            terminal_rejections: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record_routed(&self, backend: usize) {
+        self.backends[backend].routed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_backend_rejection(&self, backend: usize) {
+        self.backends[backend].rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_failed_over(&self, backend: usize) {
+        self.backends[backend].failed_over.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_quarantine(&self, backend: usize) {
+        self.backends[backend].quarantines.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_recovery(&self, backend: usize) {
+        self.backends[backend].recoveries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A request the router rejected back to the client because no
+    /// backend would take it (all rejected / none healthy).
+    pub fn record_terminal_rejection(&self) {
+        self.terminal_rejections.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> RouterSnapshot {
+        RouterSnapshot {
+            backends: self
+                .backends
+                .iter()
+                .map(|b| BackendStats {
+                    addr: b.addr.clone(),
+                    routed: b.routed.load(Ordering::Relaxed),
+                    rejected: b.rejected.load(Ordering::Relaxed),
+                    failed_over: b.failed_over.load(Ordering::Relaxed),
+                    quarantines: b.quarantines.load(Ordering::Relaxed),
+                    recoveries: b.recoveries.load(Ordering::Relaxed),
+                })
+                .collect(),
+            terminal_rejections: self.terminal_rejections.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time view of one backend's router counters.
+#[derive(Debug, Clone)]
+pub struct BackendStats {
+    pub addr: String,
+    pub routed: u64,
+    pub rejected: u64,
+    pub failed_over: u64,
+    pub quarantines: u64,
+    pub recoveries: u64,
+}
+
+/// Point-in-time view of [`RouterMetrics`].
+#[derive(Debug, Clone)]
+pub struct RouterSnapshot {
+    pub backends: Vec<BackendStats>,
+    pub terminal_rejections: u64,
+}
+
+impl RouterSnapshot {
+    pub fn routed_total(&self) -> u64 {
+        self.backends.iter().map(|b| b.routed).sum()
+    }
+
+    pub fn failed_over_total(&self) -> u64 {
+        self.backends.iter().map(|b| b.failed_over).sum()
+    }
+
+    pub fn quarantines_total(&self) -> u64 {
+        self.backends.iter().map(|b| b.quarantines).sum()
+    }
+
+    /// Multi-line human-readable report (the route CLI prints this): a
+    /// fleet summary line, then one line per backend.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "router routed {} failed-over {} quarantines {} terminal rejections {}\n",
+            self.routed_total(),
+            self.failed_over_total(),
+            self.quarantines_total(),
+            self.terminal_rejections,
+        );
+        for (i, b) in self.backends.iter().enumerate() {
+            out.push_str(&format!(
+                "backend {} {} routed {} rejected {} failed-over {} \
+                 quarantined {} recovered {}\n",
+                i, b.addr, b.routed, b.rejected, b.failed_over, b.quarantines, b.recoveries,
+            ));
+        }
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -439,6 +583,42 @@ mod tests {
         assert!(snap.host_gemm_p99_us >= 900, "p99 bucket bound covers the max sample");
         let report = snap.render();
         assert!(report.contains("host gemm mean"), "{report}");
+    }
+
+    #[test]
+    fn router_counters_aggregate_per_backend_and_render() {
+        let m = RouterMetrics::new(&["127.0.0.1:7071".to_string(), "127.0.0.1:7072".to_string()]);
+        m.record_routed(0);
+        m.record_routed(0);
+        m.record_routed(1);
+        m.record_backend_rejection(1);
+        m.record_failed_over(1);
+        m.record_quarantine(1);
+        m.record_recovery(1);
+        m.record_terminal_rejection();
+        let snap = m.snapshot();
+        assert_eq!(snap.backends.len(), 2);
+        assert_eq!(snap.backends[0].routed, 2);
+        assert_eq!(snap.backends[0].failed_over, 0);
+        assert_eq!(snap.backends[1].routed, 1);
+        assert_eq!(snap.backends[1].rejected, 1);
+        assert_eq!(snap.backends[1].failed_over, 1);
+        assert_eq!(snap.backends[1].quarantines, 1);
+        assert_eq!(snap.backends[1].recoveries, 1);
+        assert_eq!(snap.routed_total(), 3);
+        assert_eq!(snap.failed_over_total(), 1);
+        assert_eq!(snap.quarantines_total(), 1);
+        assert_eq!(snap.terminal_rejections, 1);
+        let report = snap.render();
+        assert!(
+            report.contains("router routed 3 failed-over 1 quarantines 1 terminal rejections 1"),
+            "{report}"
+        );
+        assert!(report.contains("backend 0 127.0.0.1:7071 routed 2"), "{report}");
+        assert!(
+            report.contains("backend 1 127.0.0.1:7072 routed 1 rejected 1 failed-over 1"),
+            "{report}"
+        );
     }
 
     #[test]

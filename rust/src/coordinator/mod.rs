@@ -25,7 +25,9 @@
 //!   each worker replays schedules on its own fabric and the simulated
 //!   latency can gate replies — see [`crate::engine::CalibratedBackend`]);
 //! * [`state`] — bank programming state (which weight each unit holds);
-//! * [`metrics`] — latency/throughput/energy/failure counters;
+//! * [`metrics`] — latency/throughput/energy/failure counters, plus the
+//!   per-backend routed/failed-over/quarantine counters the front-tier
+//!   router ([`crate::net::router`]) reports;
 //! * [`server`] — the std-thread front-end tying it all together.
 
 pub mod admission;
@@ -40,7 +42,9 @@ pub mod worker;
 
 pub use admission::AdmissionGate;
 pub use batcher::{Batch, Batcher};
-pub use metrics::{LatencyHistogram, Metrics, MetricsSnapshot};
+pub use metrics::{
+    BackendStats, LatencyHistogram, Metrics, MetricsSnapshot, RouterMetrics, RouterSnapshot,
+};
 pub use request::{InferenceRequest, InferenceResponse, RequestId};
 pub use router::Router;
 pub use server::{Backpressure, Completion, CoordinatorServer, ServerHandle};

@@ -15,14 +15,19 @@
 //! design measured ~25% slower at 4 workers — EXPERIMENTS.md §Perf).
 //!
 //! **Sharded batching** (`batcher.shards`, default 1): requests dispatch
-//! request-id-affine onto independent batcher lanes — each shard owns
-//! its own batcher mutex and waiter map, so connections landing on
-//! different shards never contend on one lock. Admission stays globally
-//! correct through one shared atomic outstanding count, and distinct
-//! shards seed the router at disjoint worker rotations. Per-request
-//! numerics are batch-composition-independent (integer accumulation is
-//! order-exact per row), so replies are bit-identical for every shard
-//! count (`tests/net_serving.rs`).
+//! onto independent batcher lanes — each shard owns its own batcher
+//! mutex and waiter map, so connections landing on different shards
+//! never contend on one lock. The lane is chosen by `batcher.affinity`:
+//! `request` (default) round-robins on the request id, `connection`
+//! pins every request from one connection to `conn % shards` (the TCP
+//! front-end passes its connection id through
+//! [`ServerHandle::submit_from`]), keeping that lane — and the worker
+//! rotation it seeds — warm for the connection. Admission stays
+//! globally correct through one shared atomic outstanding count, and
+//! distinct shards seed the router at disjoint worker rotations.
+//! Per-request numerics are batch-composition-independent (integer
+//! accumulation is order-exact per row), so replies are bit-identical
+//! for every shard count and either affinity (`tests/net_serving.rs`).
 //!
 //! **Zero-allocation hot path**: pixels, flat batch inputs, logits and
 //! reply frames all live in pooled buffers ([`crate::util::pool`]),
@@ -44,7 +49,7 @@ use super::request::{InferenceRequest, InferenceResponse, RequestId};
 use super::router::{InFlightGuard, Router};
 use super::tiler::{ScheduleCost, Tiler, UnitCosts};
 use super::worker::{BatchJob, ReplyTicket, ReplyTo, WorkerPool, WorkerReply};
-use crate::config::{BackendKind, Config};
+use crate::config::{BackendKind, Config, ShardAffinity};
 use crate::engine::{BackendSpec, BatchOutput};
 use crate::net::protocol::{Frame, WireCost};
 use crate::nn::QuantMlp;
@@ -179,6 +184,8 @@ struct Shared {
     router: Router,
     metrics: Arc<Metrics>,
     mlp: QuantMlp,
+    /// Shard-selection rule (`batcher.affinity`; see the module docs).
+    affinity: ShardAffinity,
     in_dim: usize,
     out_dim: usize,
     next_id: AtomicU64,
@@ -196,8 +203,14 @@ impl Shared {
         (id % self.shards.len() as u64) as usize
     }
 
-    fn shard_of(&self, id: RequestId) -> &Shard {
-        &self.shards[self.shard_index(id)]
+    /// The lane a fresh request lands on: request-id round-robin, or —
+    /// under connection affinity, when the submitter identified its
+    /// connection — pinned to `conn % shards`.
+    fn shard_for(&self, id: RequestId, conn: Option<u64>) -> usize {
+        match (self.affinity, conn) {
+            (ShardAffinity::Connection, Some(conn)) => (conn % self.shards.len() as u64) as usize,
+            _ => self.shard_index(id),
+        }
     }
 }
 
@@ -286,6 +299,7 @@ impl CoordinatorServer {
             router: Router::new(pool),
             metrics: Arc::new(Metrics::new()),
             mlp,
+            affinity: cfg.batcher.affinity,
             in_dim,
             out_dim,
             next_id: AtomicU64::new(0),
@@ -312,11 +326,17 @@ impl CoordinatorServer {
                             Vec::with_capacity(max_batch); // lint: allow(alloc): startup scratch
                         while let Some(reply) = crx.recv() {
                             let Some(shared) = weak.upgrade() else { return };
-                            // the batch id's low bits name the shard
-                            let shard = shared.shard_of(reply.batch_id);
-                            let ctx = { shard.pending.lock().unwrap().remove(&reply.batch_id) };
+                            // the batch id's low bits name the shard —
+                            // the *dispatching* lane, which under
+                            // connection affinity is not derivable from
+                            // request ids
+                            let shard_idx = shared.shard_index(reply.batch_id);
+                            let ctx = {
+                                let shard = &shared.shards[shard_idx];
+                                shard.pending.lock().unwrap().remove(&reply.batch_id)
+                            };
                             if let Some(ctx) = ctx {
-                                complete_batch(&shared, ctx, reply.result, &mut scratch);
+                                complete_batch(&shared, shard_idx, ctx, reply.result, &mut scratch);
                             }
                         }
                     })
@@ -413,19 +433,42 @@ impl ServerHandle {
     /// across batcher shards. Pixels arrive in a pooled buffer (plain
     /// `Vec<f32>` converts in), keeping the wire path allocation-free.
     pub fn submit_with(&self, pixels: impl Into<PooledVec<f32>>, done: Completion) -> Result<()> {
-        let pixels = pixels.into();
+        self.submit_inner(None, pixels.into(), done)
+    }
+
+    /// [`submit_with`](Self::submit_with), identifying the submitting
+    /// connection: under `batcher.affinity connection` every request
+    /// carrying the same `conn` id lands on the same batcher shard
+    /// (lane/cache affinity); under the default request affinity the id
+    /// is ignored. The TCP front-end calls this with its per-connection
+    /// counter.
+    pub fn submit_from(
+        &self,
+        conn: u64,
+        pixels: impl Into<PooledVec<f32>>,
+        done: Completion,
+    ) -> Result<()> {
+        self.submit_inner(Some(conn), pixels.into(), done)
+    }
+
+    fn submit_inner(
+        &self,
+        conn: Option<u64>,
+        pixels: PooledVec<f32>,
+        done: Completion,
+    ) -> Result<()> {
         ensure!(pixels.len() == self.shared.in_dim, "expected {} pixels", self.shared.in_dim);
         // ordering: Relaxed — pure id allocation, no publication.
         let id = self.shared.next_id.fetch_add(1, Ordering::Relaxed);
+        let shard_idx = self.shared.shard_for(id, conn);
         if let Err(observed) = self.shared.admission.try_admit() {
             let hint = {
-                let batcher = self.shared.shard_of(id).batcher.lock().unwrap();
+                let batcher = self.shared.shards[shard_idx].batcher.lock().unwrap();
                 batcher.retry_after_us(std::time::Instant::now(), observed)
             };
             self.shared.metrics.record_rejection(hint);
             return Err(Backpressure { retry_after_us: hint }.into());
         }
-        let shard_idx = self.shared.shard_index(id);
         let shard = &self.shared.shards[shard_idx];
         shard.waiters.lock().unwrap().insert(id, done);
         let maybe_batch = {
@@ -533,7 +576,7 @@ fn dispatch_batch(shared: &Arc<Shared>, shard_idx: usize, batch: Batch) {
     let shard = &shared.shards[shard_idx];
     let ctx_tx = { shard.completions.lock().unwrap().clone() };
     let Some(ctx_tx) = ctx_tx else {
-        fail_batch(shared, &batch, "server is shutting down");
+        fail_batch(shared, shard_idx, &batch, "server is shutting down");
         return;
     };
     // Reserve the worker before parking the context so the reply can
@@ -556,15 +599,19 @@ fn dispatch_batch(shared: &Arc<Shared>, shard_idx: usize, batch: Batch) {
     if let Err(e) = shared.router.submit_to(worker, job) {
         let ctx = { shard.pending.lock().unwrap().remove(&batch_id) };
         if let Some(ctx) = ctx {
-            fail_batch(shared, &ctx.batch, &format!("{e:#}"));
+            fail_batch(shared, shard_idx, &ctx.batch, &format!("{e:#}"));
         }
     }
 }
 
 /// Fan one worker reply out to the batch's per-request completions.
-/// `scratch` is the calling completion thread's reusable fan-out buffer.
+/// `shard_idx` is the lane the batch dispatched from (its waiters live
+/// there — under connection affinity that lane is not derivable from
+/// request ids). `scratch` is the calling completion thread's reusable
+/// fan-out buffer.
 fn complete_batch(
     shared: &Arc<Shared>,
+    shard_idx: usize,
     ctx: BatchCtx,
     result: Result<BatchOutput>,
     scratch: &mut Vec<Option<Completion>>,
@@ -591,7 +638,7 @@ fn complete_batch(
             // the waiters lock.
             scratch.clear();
             {
-                let shard = shared.shard_of(batch.requests[0].id);
+                let shard = &shared.shards[shard_idx];
                 let mut waiters = shard.waiters.lock().unwrap();
                 scratch.extend(batch.requests.iter().map(|req| waiters.remove(&req.id)));
             }
@@ -632,18 +679,20 @@ fn complete_batch(
                 }
             }
         }
-        Err(e) => fail_batch(shared, &batch, &format!("{e:#}")),
+        Err(e) => fail_batch(shared, shard_idx, &batch, &format!("{e:#}")),
     }
 }
 
-fn fail_batch(shared: &Arc<Shared>, batch: &Batch, why: &str) {
+fn fail_batch(shared: &Arc<Shared>, shard_idx: usize, batch: &Batch, why: &str) {
     // Complete every waiter with the structured reason; the blocking
     // submit() surfaces it as "request failed: <why>" and the wire
     // front-end sends an Error frame.
-    let Some(first) = batch.requests.first() else { return };
+    if batch.requests.is_empty() {
+        return;
+    }
     shared.metrics.record_batch_failure(batch.requests.len());
     let completions: Vec<_> = {
-        let shard = shared.shard_of(first.id);
+        let shard = &shared.shards[shard_idx];
         let mut waiters = shard.waiters.lock().unwrap();
         batch.requests.iter().map(|req| waiters.remove(&req.id)).collect()
     };

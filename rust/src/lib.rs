@@ -35,8 +35,9 @@
 //! * the **network layer** that turns the coordinator into an actual
 //!   service: a versioned binary wire protocol, a threaded TCP
 //!   front-end with 429-style admission rejections, the matching
-//!   client, and the `repro loadgen` traffic generator — see [`net`]
-//!   and the `## Wire protocol` section below;
+//!   client, the `repro route` front-tier router (multi-process
+//!   shard-out — see `## Router tier`) and the `repro loadgen` traffic
+//!   generator — see [`net`] and the `## Wire protocol` section below;
 //! * [`report`] — text/CSV regenerators for every table and figure.
 //!
 //! Python (JAX + Pallas) runs only at build time (`make artifacts`); the
@@ -136,16 +137,22 @@
 //! fabric state is warm. The metrics' `pool` line (hits / misses /
 //! recycled, hit rate) shows the pool converging.
 //!
-//! **Shard dispatch rules** (`batcher.shards`, `--shards`): request ids
-//! assign round-robin, and a request with id `i` lives entirely on
-//! shard `i % shards` — its batcher slot, its waiter entry, its batch.
-//! Batches never mix shards, each shard seeds the worker router at a
-//! disjoint rotation (`shard + turn·shards`), and admission stays one
-//! global atomic bound (`batcher.queue_depth`) so `retry_after_us`
-//! hints and reject totals are exact across shards. Because the planned
-//! kernel accumulates each output row independently in a fixed integer
-//! order, replies are bit-identical for every shard count
-//! (`tests/net_serving.rs` sweeps shards ∈ {1, 2, 4}).
+//! **Shard dispatch rules** (`batcher.shards`, `--shards`): a request's
+//! shard is picked by `batcher.affinity` — `request` (default) assigns
+//! request ids round-robin (`id % shards`), `connection` pins every
+//! request of one wire connection to `conn % shards` so a connection's
+//! traffic keeps one batcher lane (and its worker rotation) warm.
+//! Either way the request lives entirely on that shard — its batcher
+//! slot, its waiter entry, its batch — and batch ids encode their lane
+//! (`seq·shards + shard`), so completion fan-out never needs to
+//! re-derive a lane from request ids. Batches never mix shards, each
+//! shard seeds the worker router at a disjoint rotation
+//! (`shard + turn·shards`), and admission stays one global atomic bound
+//! (`batcher.queue_depth`) so `retry_after_us` hints and reject totals
+//! are exact across shards. Because the planned kernel accumulates each
+//! output row independently in a fixed integer order, replies are
+//! bit-identical for every shard count and either affinity
+//! (`tests/net_serving.rs` sweeps shards ∈ {1, 2, 4} under both).
 //!
 //! **SWAR safety argument**: see the packed-lane bullet under
 //! `## Kernel architecture` — bounded products (`u8` table entries,
@@ -243,6 +250,54 @@
 //! [`coordinator::Batcher::retry_after_us`]), which the front-end maps
 //! onto the `Rejected` frame. The metrics' `admission` line reports
 //! accepted / rejected / hints issued and the reject rate.
+//!
+//! ## Router tier
+//!
+//! One process scales with `batcher.shards`; `repro route`
+//! ([`net::router::RouterServer`]) scales *across* processes: a front
+//! tier speaking the same versioned wire protocol on both sides, so
+//! clients cannot tell a router from a single backend and backends
+//! cannot tell a router from a client.
+//!
+//! **Dispatch policies** (`router.policy`). `hash` (default) places
+//! each backend at `router.vnodes` salted points on a u64 ring and
+//! routes a connection's requests to the first live point clockwise
+//! from the connection id's hash: one connection sticks to one backend
+//! (weight-stationary fabric and batcher lanes stay warm), removing a
+//! backend remaps only ~1/N of connections, and dead backends are
+//! walked past — both properties pinned by
+//! `tests/router_properties.rs`. `least-outstanding` picks the
+//! connected backend with the fewest in-flight requests: best
+//! spreading, no affinity.
+//!
+//! **Health / drain state machine.** Per backend: *connected* ⇄
+//! *quarantined*. A connect + `Hello`/`Info` handshake (agreeing with
+//! the fleet's model dimensions) promotes a probe connection to the
+//! live multiplexed link; any link failure — read error, EOF, write
+//! failure, a connection-scoped `Error` frame — quarantines the
+//! backend: the link closes and **every request parked on it resolves
+//! immediately with a retryable `Rejected` frame**
+//! ([`net::router::FAILOVER_RETRY_US`], always ≥ 1 so hint-honoring
+//! clients re-send). No request ever hangs on a dead backend — the
+//! failover battery in `tests/net_serving.rs` kills a backend
+//! mid-load and proves every in-flight request resolves. A prober
+//! re-connects quarantined backends with exponential backoff
+//! (`router.probe_ms` doubling to `router.max_backoff_ms`); success
+//! counts a recovery and the backend rejoins the ring.
+//!
+//! **Fleet-wide admission rule.** A `Rejected` from one backend
+//! triggers failover, not a client reject: the router remembers the
+//! minimum `retry_after_us` hint seen and re-dispatches to untried
+//! connected backends. The client sees `Rejected` only when *all*
+//! backends rejected (carrying that minimum hint) or none are
+//! connected — so a fleet's backpressure hint is exactly the soonest
+//! any member could accept.
+//!
+//! **Affinity caveat.** The router multiplexes all client traffic to a
+//! backend over *one* link, so backend-side
+//! `batcher.affinity connection` would pin an entire router's traffic
+//! to one lane on that backend; connection affinity is for
+//! directly-serving stacks, which is why `request` stays the default.
 //!
 //! ## Concurrency model
 //!

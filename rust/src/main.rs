@@ -10,16 +10,18 @@
 //! * `simulate [...]`           — gate-level transient (Fig 14 style);
 //! * `serve [...]`              — run the batching coordinator under load,
 //!   or expose it over TCP with `--listen` (the wire protocol);
+//! * `route [...]`              — front-tier router: load-balance the wire
+//!   protocol across N `repro serve --listen` backends;
 //! * `loadgen [...]`            — drive a wire-protocol endpoint with
 //!   closed/poisson/bursty traffic and emit `BENCH_serve.json`;
 //! * `eval [...]`               — offline accuracy/energy of every variant;
 //! * `lint [...]`               — repo-invariant source checker (CI gate).
 
 use luna_cim::cells::tsmc65_library;
-use luna_cim::config::{BackendKind, Config};
+use luna_cim::config::{BackendKind, Config, DispatchPolicy, RouterConfig, ShardAffinity};
 use luna_cim::coordinator::CoordinatorServer;
 use luna_cim::multiplier::{MultiplierKind, MultiplierModel};
-use luna_cim::net::{loadgen, NetServer, Scenario};
+use luna_cim::net::{loadgen, NetServer, RouterServer, Scenario};
 use luna_cim::report;
 use luna_cim::runtime::ArtifactStore;
 use luna_cim::Result;
@@ -32,8 +34,9 @@ USAGE:
   repro figures  [--id N] [--csv]
   repro mul <W> <Y>
   repro simulate [--multiplier SLUG] [--weight W] [--inputs a,b,c]
-  repro serve    [--config FILE] [--requests N] [--clients N] [--multiplier SLUG] [--backend native|calibrated|pjrt] [--time-scale X] [--gemm-threads N] [--shards N] [--listen ADDR]
-  repro loadgen  [--addr HOST:PORT | --synthetic] [--config FILE] [--scenario closed|poisson|bursty|all] [--loads R1,R2,..] [--connections N] [--requests N] [--burst N] [--retry] [--shards N] [--backend SLUG] [--time-scale X] [--seed N] [--quick] [--save-json [PATH]]
+  repro serve    [--config FILE] [--requests N] [--clients N] [--multiplier SLUG] [--backend native|calibrated|pjrt] [--time-scale X] [--gemm-threads N] [--shards N] [--affinity request|connection] [--listen ADDR]
+  repro route    --backends A1,A2,.. [--config FILE] [--listen ADDR] [--policy hash|least-outstanding] [--vnodes N] [--max-connections N] [--probe-ms MS] [--max-backoff-ms MS]
+  repro loadgen  [--addr A1[,A2,..] | --synthetic] [--config FILE] [--scenario closed|poisson|bursty|all] [--loads R1,R2,..] [--connections N] [--requests N] [--burst N] [--retry] [--shards N] [--affinity request|connection] [--via-router N] [--router-scale P1,P2,..] [--backend SLUG] [--time-scale X] [--seed N] [--quick] [--save-json [PATH]]
   repro eval     [--artifacts DIR]
   repro ablation [--artifacts DIR]
   repro export   [--out DIR]
@@ -46,10 +49,19 @@ Backends: native (in-process batched LUT-GEMM, default),
           pjrt (AOT HLO; needs the `pjrt` build feature)
 --gemm-threads: in-batch planned-GEMM threads per worker (native/calibrated;
                 0 = one per core, default 1 — workers already scale across batches)
---shards: independent batcher lanes (request-id-affine dispatch; admission
-          stays one global bound, replies are bit-identical for any count)
+--shards: independent batcher lanes (admission stays one global bound,
+          replies are bit-identical for any count)
+--affinity: how requests map onto batcher lanes — request (round-robin by
+          request id, default) or connection (one connection pins one lane)
 --listen: expose the coordinator over TCP (wire protocol) instead of running
           the in-process synthetic load; serves until killed
+route:    front tier speaking the same wire protocol on both sides: probes
+          each backend (Hello/Info), dispatches by consistent hash on the
+          connection id (--policy hash, cache affinity) or least-outstanding,
+          quarantines dead backends with backoff re-probes, resolves every
+          in-flight request of a dying backend with a retryable Rejected
+          frame, and forwards the minimum retry hint across a saturated
+          fleet (terminal Reject only when ALL backends reject)
 lint:     repo-invariant source checker (SAFETY comments on unsafe blocks,
           no mpsc / bare allocation in hot-path modules, justified memory
           orderings); --self-test proves each rule rejects a seeded
@@ -60,7 +72,12 @@ loadgen:  drives a wire endpoint with closed-loop, open-loop poisson and bursty
           spawns its own loopback server (--synthetic = synthesized artifacts,
           no `make artifacts` needed); --retry honors retry_after_us hints
           client-side and reports goodput vs offered load; --save-json
-          writes BENCH_serve.json
+          writes BENCH_serve.json; --addr takes a comma-separated list
+          (connection i drives endpoint i mod len); --via-router N fronts an
+          in-process N-backend fleet with the router tier; --router-scale
+          sweeps backend-process counts through the router and lands the
+          goodput/p99 scaling curve (plus the request-vs-connection affinity
+          stationary-hit-rate comparison) in the JSON
 ";
 
 /// Minimal flag parser: `--key value` pairs plus positional args.
@@ -131,6 +148,7 @@ fn run(argv: &[String]) -> Result<()> {
         "mul" => cmd_mul(&args),
         "simulate" => cmd_simulate(&args),
         "serve" => cmd_serve(&args),
+        "route" => cmd_route(&args),
         "loadgen" => cmd_loadgen(&args),
         "eval" => cmd_eval(&args),
         "ablation" => cmd_ablation(&args),
@@ -234,6 +252,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     cfg.timing.time_scale = args.flag_parse("time-scale", cfg.timing.time_scale)?;
     cfg.gemm.threads = args.flag_parse("gemm-threads", cfg.gemm.threads)?;
     cfg.batcher.shards = args.flag_parse("shards", cfg.batcher.shards)?;
+    if let Some(a) = args.flag("affinity") {
+        cfg.batcher.affinity = ShardAffinity::from_arg(a)?;
+    }
     if let Some(listen) = args.flag("listen") {
         cfg.net.listen = listen.to_string();
     }
@@ -333,6 +354,145 @@ fn serve_load(cfg: Config, requests: usize, clients: usize) -> Result<()> {
     Ok(())
 }
 
+/// Front-tier router: load-balance the wire protocol across N backend
+/// processes, printing routed/failed-over/quarantine counters whenever
+/// traffic (or a health transition) has flowed.
+fn cmd_route(args: &Args) -> Result<()> {
+    let mut cfg = match args.flag("config") {
+        Some(path) => Config::from_file(path)?,
+        None => Config::default(),
+    };
+    if let Some(b) = args.flag("backends") {
+        cfg.router.backends =
+            b.split(',').map(str::trim).filter(|s| !s.is_empty()).map(String::from).collect();
+    }
+    if let Some(listen) = args.flag("listen") {
+        cfg.router.listen = listen.to_string();
+    }
+    if let Some(p) = args.flag("policy") {
+        cfg.router.policy = DispatchPolicy::from_arg(p)?;
+    }
+    cfg.router.vnodes = args.flag_parse("vnodes", cfg.router.vnodes)?;
+    cfg.router.max_connections = args.flag_parse("max-connections", cfg.router.max_connections)?;
+    cfg.router.probe_ms = args.flag_parse("probe-ms", cfg.router.probe_ms)?;
+    cfg.router.max_backoff_ms = args.flag_parse("max-backoff-ms", cfg.router.max_backoff_ms)?;
+    anyhow::ensure!(
+        !cfg.router.backends.is_empty(),
+        "route needs --backends a,b,c (or router.backends in the config)"
+    );
+    cfg.validate()?;
+    let router = RouterServer::bind(&cfg.router)?;
+    println!(
+        "routing on {} -> {} backend(s) [{}] (policy {})",
+        router.local_addr(),
+        cfg.router.backends.len(),
+        cfg.router.backends.join(", "),
+        cfg.router.policy.slug()
+    );
+    println!(
+        "serving until killed (drive it with `repro loadgen --addr {}`)",
+        router.local_addr()
+    );
+    let metrics = router.metrics();
+    let mut seen = 0u64;
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(10));
+        let snap = metrics.snapshot();
+        let moved = snap.routed_total() + snap.failed_over_total() + snap.quarantines_total();
+        if moved != seen {
+            seen = moved;
+            print!("{}", snap.render());
+        }
+    }
+}
+
+/// An in-process fleet: `n` full serving stacks (coordinator + wire
+/// front-end, each on its own loopback port) behind one
+/// [`RouterServer`]. This is CI's shard-per-process scaling stand-in:
+/// the wire path through router and backends is byte-identical to true
+/// multi-process (`repro route --backends` against separately launched
+/// `repro serve --listen` processes); only the process isolation is
+/// collapsed.
+struct Fleet {
+    router: RouterServer,
+    nets: Vec<NetServer>,
+    servers: Vec<CoordinatorServer>,
+}
+
+impl Fleet {
+    fn spawn(cfg: &Config, processes: usize) -> Result<Fleet> {
+        let mut nets = Vec::new();
+        let mut servers = Vec::new();
+        let mut backends = Vec::new();
+        let slots = cfg.net.max_connections.max(cfg.loadgen.connections.saturating_mul(2));
+        for _ in 0..processes {
+            let (server, handle) = CoordinatorServer::start(cfg.clone())?;
+            let net = NetServer::bind(handle, "127.0.0.1:0", slots)?;
+            backends.push(net.local_addr().to_string());
+            nets.push(net);
+            servers.push(server);
+        }
+        let rcfg = RouterConfig {
+            listen: String::new(),
+            backends,
+            policy: cfg.router.policy,
+            vnodes: cfg.router.vnodes,
+            max_connections: slots,
+            probe_ms: cfg.router.probe_ms.min(50),
+            max_backoff_ms: cfg.router.max_backoff_ms,
+        };
+        let router = RouterServer::bind(&rcfg)?;
+        Ok(Fleet { router, nets, servers })
+    }
+
+    fn addr(&self) -> String {
+        self.router.local_addr().to_string()
+    }
+
+    /// Shutdown order matters: router first (its backend links close
+    /// gracefully), then the wire front-ends, then the coordinators.
+    fn shutdown(self) {
+        let Fleet { router, nets, servers } = self;
+        router.shutdown();
+        for n in nets {
+            n.shutdown();
+        }
+        for s in servers {
+            s.shutdown();
+        }
+    }
+}
+
+/// Measure the weight-stationary hit rate with per-request vs
+/// per-connection shard affinity under the same closed-loop load, at
+/// `shards >= 2` (with one lane the policies coincide and the
+/// comparison is vacuous).
+fn measure_affinity_hit_rates(
+    cfg: &Config,
+    opts: &loadgen::LoadgenOptions,
+) -> Result<loadgen::AffinityComparison> {
+    let mut rates = [0.0f64; 2];
+    for (i, affinity) in [ShardAffinity::Request, ShardAffinity::Connection].iter().enumerate() {
+        let mut cfg = cfg.clone();
+        cfg.batcher.affinity = *affinity;
+        cfg.batcher.shards = cfg.batcher.shards.max(2);
+        let slots = cfg.net.max_connections.max(opts.connections.saturating_mul(2));
+        let (server, handle) = CoordinatorServer::start(cfg.clone())?;
+        let net = NetServer::bind(handle, "127.0.0.1:0", slots)?;
+        let addr = net.local_addr().to_string();
+        let closed = loadgen::LoadgenOptions { scenarios: vec![Scenario::Closed], ..opts.clone() };
+        loadgen::run(&addr, &closed)?;
+        net.shutdown();
+        rates[i] = server.metrics().snapshot().stationary_hit_rate();
+        server.shutdown();
+    }
+    println!(
+        "affinity stationary hit-rate: request {:.4} vs connection {:.4}",
+        rates[0], rates[1]
+    );
+    Ok(loadgen::AffinityComparison { request_hit_rate: rates[0], connection_hit_rate: rates[1] })
+}
+
 /// Drive a wire-protocol endpoint with scenario-diverse traffic. With
 /// no `--addr` it spawns its own loopback server first (from the
 /// config's artifacts, or fully self-contained with `--synthetic`).
@@ -369,6 +529,26 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         cfg.loadgen.retry = true;
     }
     cfg.batcher.shards = args.flag_parse("shards", cfg.batcher.shards)?;
+    if let Some(a) = args.flag("affinity") {
+        cfg.batcher.affinity = ShardAffinity::from_arg(a)?;
+    }
+    let via_router: usize = args.flag_parse("via-router", 0)?;
+    let router_scale: Vec<usize> = match args.flag("router-scale") {
+        Some(list) => list
+            .split(',')
+            .map(|s| s.trim().parse::<usize>())
+            .collect::<std::result::Result<_, _>>()
+            .map_err(|_| anyhow::anyhow!("flag --router-scale: cannot parse `{list}`"))?,
+        None => Vec::new(),
+    };
+    anyhow::ensure!(
+        (via_router == 0 && router_scale.is_empty()) || args.flag("addr").is_none(),
+        "--via-router / --router-scale spawn their own fleet; drop --addr"
+    );
+    anyhow::ensure!(
+        router_scale.iter().all(|&p| (1..=64).contains(&p)),
+        "--router-scale process counts must be in 1..=64"
+    );
     // validate in BOTH modes — an invalid knob must not silently
     // produce a degenerate all-zero bench against an external endpoint
     cfg.validate()?;
@@ -393,6 +573,24 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         Some(addr) => {
             println!("driving external endpoint {addr}");
             (loadgen::run(addr, &opts)?, "external".to_string())
+        }
+        None if via_router > 0 => {
+            if args.flag("synthetic").is_some() {
+                cfg.artifacts_dir = synth_artifacts_dir(cfg.batcher.max_batch)?;
+            }
+            let backend = cfg.backend.slug().to_string();
+            let fleet = Fleet::spawn(&cfg, via_router)?;
+            let addr = fleet.addr();
+            let retry_note = if cfg.loadgen.retry { ", client retry on" } else { "" };
+            println!(
+                "spawned {via_router}-backend fleet behind router {addr} (backend {backend}, \
+                 policy {}{retry_note})",
+                cfg.router.policy.slug()
+            );
+            let results = loadgen::run(&addr, &opts)?;
+            println!("router metrics:\n{}", fleet.router.metrics().snapshot().render());
+            fleet.shutdown();
+            (results, backend)
         }
         None => {
             if args.flag("synthetic").is_some() {
@@ -422,8 +620,35 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         }
     };
     print!("{}", loadgen::render_table(&results));
+    // shard-per-process scaling sweep: the closed-loop case measured
+    // through a fresh router-fronted fleet at each process count
+    let mut scaling = Vec::new();
+    if !router_scale.is_empty() {
+        let closed = loadgen::LoadgenOptions { scenarios: vec![Scenario::Closed], ..opts.clone() };
+        for &p in &router_scale {
+            let fleet = Fleet::spawn(&cfg, p)?;
+            let case = loadgen::run(&fleet.addr(), &closed)?.remove(0);
+            fleet.shutdown();
+            println!(
+                "scale {p}: goodput {:.0}/s wall p99 {} us sim p99 {} ns",
+                case.goodput_rps, case.wall_p99_us, case.sim_p99_ns
+            );
+            scaling.push(loadgen::ScalePoint {
+                processes: p,
+                goodput_rps: case.goodput_rps,
+                wall_p99_us: case.wall_p99_us,
+                sim_p99_ns: case.sim_p99_ns,
+            });
+        }
+    }
+    let affinity = if router_scale.is_empty() {
+        None
+    } else {
+        Some(measure_affinity_hit_rates(&cfg, &opts)?)
+    };
     if let Some(path) = save_json {
-        std::fs::write(&path, loadgen::render_json(&results, &backend))?;
+        let json = loadgen::render_json_full(&results, &backend, &scaling, affinity.as_ref());
+        std::fs::write(&path, json)?;
         println!("wrote {} cases to {path}", results.len());
     }
     Ok(())

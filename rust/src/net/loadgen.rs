@@ -33,6 +33,13 @@
 //! latency for a retried request runs from its *first* send, so retry
 //! queueing shows up in the percentiles.
 //!
+//! `addr` may be a comma-separated list (`--addr a,b,c`): connection
+//! `i` connects to endpoint `i % len` — client-side round-robin
+//! shard-out for measuring a fleet without a router in front. Routed
+//! sweeps (`--via-router`) instead point every connection at one
+//! [`super::router::RouterServer`] and land the shard-per-process
+//! scaling curve in the JSON's `scaling` array ([`ScalePoint`]).
+//!
 //! lint: allow-file(alloc): the generator is the measuring *client*;
 //! its allocations land on loadgen threads, never on the server's
 //! serving hot path (which `tests/hot_path_allocs.rs` pins at zero).
@@ -151,6 +158,36 @@ impl CaseResult {
     }
 }
 
+/// One point on the shard-per-process scaling curve (`--router-scale`):
+/// the closed-loop case measured through `repro route` fronting
+/// `processes` backend stacks.
+#[derive(Debug, Clone)]
+pub struct ScalePoint {
+    pub processes: usize,
+    pub goodput_rps: f64,
+    pub wall_p99_us: u64,
+    pub sim_p99_ns: u64,
+}
+
+/// Weight-stationary hit rates measured with `batcher.affinity` set to
+/// `request` vs `connection` — the before/after the shard-affinity
+/// follow-up asked for, reported next to the scaling curve.
+#[derive(Debug, Clone)]
+pub struct AffinityComparison {
+    pub request_hit_rate: f64,
+    pub connection_hit_rate: f64,
+}
+
+/// Split a (possibly comma-separated) `--addr` list.
+pub fn endpoints(addr: &str) -> Vec<&str> {
+    let eps: Vec<&str> = addr.split(',').map(str::trim).filter(|s| !s.is_empty()).collect();
+    if eps.is_empty() {
+        vec![addr]
+    } else {
+        eps
+    }
+}
+
 /// Per-connection tallies a reader thread accumulates.
 #[derive(Default)]
 struct ConnTally {
@@ -251,9 +288,10 @@ fn per_conn_quota(opts: &LoadgenOptions) -> usize {
 fn run_closed(addr: &str, opts: &LoadgenOptions) -> Result<CaseResult> {
     let quota = per_conn_quota(opts);
     let retry = opts.retry;
+    let eps = endpoints(addr);
     let mut clients = Vec::new();
-    for _ in 0..opts.connections {
-        clients.push(NetClient::connect(addr)?);
+    for i in 0..opts.connections {
+        clients.push(NetClient::connect(eps[i % eps.len()])?);
     }
     let t0 = Instant::now();
     let mut threads = Vec::new();
@@ -300,9 +338,10 @@ fn run_open(
     anyhow::ensure!(rate_rps >= 1, "offered load must be >= 1 req/s");
     let quota = per_conn_quota(opts);
     let rate_conn = rate_rps as f64 / opts.connections.max(1) as f64;
+    let eps = endpoints(addr);
     let mut clients = Vec::new();
-    for _ in 0..opts.connections {
-        clients.push(NetClient::connect(addr)?);
+    for i in 0..opts.connections {
+        clients.push(NetClient::connect(eps[i % eps.len()])?);
     }
     let t0 = Instant::now();
     let mut threads = Vec::new();
@@ -572,6 +611,18 @@ pub fn render_table(results: &[CaseResult]) -> String {
 /// Hand-rolled JSON (no serde in this offline image): the
 /// `BENCH_serve.json` artifact CI uploads next to `BENCH_lut_gemm.json`.
 pub fn render_json(results: &[CaseResult], backend: &str) -> String {
+    render_json_full(results, backend, &[], None)
+}
+
+/// [`render_json`] plus the router-tier columns: the `scaling` array
+/// (goodput + wall/sim p99 per backend-process count, routed through
+/// `repro route`) and the affinity hit-rate comparison when measured.
+pub fn render_json_full(
+    results: &[CaseResult],
+    backend: &str,
+    scaling: &[ScalePoint],
+    affinity: Option<&AffinityComparison>,
+) -> String {
     let mut out = String::from("{\n  \"bench\": \"serve\",\n");
     let _ = writeln!(out, "  \"backend\": \"{backend}\",");
     out.push_str("  \"cases\": [\n");
@@ -603,7 +654,29 @@ pub fn render_json(results: &[CaseResult], backend: &str) -> String {
         );
         out.push_str(if i + 1 < results.len() { ",\n" } else { "\n" });
     }
-    out.push_str("  ]\n}\n");
+    out.push_str("  ],\n  \"scaling\": [\n");
+    for (i, p) in scaling.iter().enumerate() {
+        let _ = write!(
+            out,
+            "    {{\"processes\": {}, \"goodput_rps\": {:.1}, \"wall_p99_us\": {}, \
+             \"sim_p99_ns\": {}}}",
+            p.processes, p.goodput_rps, p.wall_p99_us, p.sim_p99_ns,
+        );
+        out.push_str(if i + 1 < scaling.len() { ",\n" } else { "\n" });
+    }
+    match affinity {
+        Some(a) => {
+            out.push_str("  ],\n");
+            let _ = writeln!(
+                out,
+                "  \"affinity_stationary_hit_rate\": {{\"request\": {:.4}, \
+                 \"connection\": {:.4}}}",
+                a.request_hit_rate, a.connection_hit_rate
+            );
+            out.push_str("}\n");
+        }
+        None => out.push_str("  ]\n}\n"),
+    }
     out
 }
 
@@ -676,5 +749,37 @@ mod tests {
             assert!(json.contains(key), "missing {key} in {json}");
         }
         assert!(render_table(&[]).contains("scenario"));
+        // the plain renderer always carries an (empty) scaling array so
+        // downstream consumers can rely on the key
+        assert!(json.contains("\"scaling\": ["), "missing scaling array in {json}");
+    }
+
+    #[test]
+    fn json_scaling_and_affinity_columns_render() {
+        let scaling = [
+            ScalePoint { processes: 1, goodput_rps: 900.0, wall_p99_us: 1500, sim_p99_ns: 800 },
+            ScalePoint { processes: 4, goodput_rps: 3100.0, wall_p99_us: 1700, sim_p99_ns: 820 },
+        ];
+        let aff = AffinityComparison { request_hit_rate: 0.91, connection_hit_rate: 0.88 };
+        let json = render_json_full(&[], "native", &scaling, Some(&aff));
+        for key in [
+            "\"scaling\": [",
+            "\"processes\": 1",
+            "\"processes\": 4",
+            "\"goodput_rps\": 3100.0",
+            "\"wall_p99_us\": 1700",
+            "\"sim_p99_ns\": 820",
+            "\"affinity_stationary_hit_rate\": {\"request\": 0.9100, \"connection\": 0.8800}",
+        ] {
+            assert!(json.contains(key), "missing {key} in {json}");
+        }
+    }
+
+    #[test]
+    fn endpoints_split_and_roundrobin_assignment() {
+        assert_eq!(endpoints("127.0.0.1:9000"), vec!["127.0.0.1:9000"]);
+        assert_eq!(endpoints("a:1, b:2 ,c:3"), vec!["a:1", "b:2", "c:3"]);
+        assert_eq!(endpoints("a:1,,b:2"), vec!["a:1", "b:2"]);
+        assert_eq!(endpoints(""), vec![""]);
     }
 }

@@ -17,14 +17,20 @@
 //! * [`loadgen`] — the `repro loadgen` engine: closed-loop, open-loop
 //!   Poisson and bursty arrival processes swept over offered-load
 //!   levels, reporting throughput, exact wall p50/p99, simulated-CiM
-//!   p50/p99 and reject rate per level (`BENCH_serve.json`).
+//!   p50/p99 and reject rate per level (`BENCH_serve.json`);
+//! * [`router`] — the `repro route` front tier: consistent-hash or
+//!   least-outstanding dispatch over N backends speaking the same
+//!   protocol, with health probing, quarantine/recovery, fleet-wide
+//!   admission aggregation and no-request-hangs failover.
 
 pub mod client;
 pub mod loadgen;
 pub mod protocol;
+pub mod router;
 pub mod server;
 
 pub use client::{NetClient, NetReceiver, NetSender, ServerInfo};
-pub use loadgen::{CaseResult, LoadgenOptions, Scenario};
+pub use loadgen::{AffinityComparison, CaseResult, LoadgenOptions, ScalePoint, Scenario};
 pub use protocol::{Frame, WireCost};
+pub use router::{mix64, pick_least_outstanding, HashRing, RouterServer};
 pub use server::NetServer;

@@ -1,0 +1,940 @@
+//! The front-tier router (`repro route`): multi-process shard-out of
+//! the wire protocol.
+//!
+//! [`RouterServer`] speaks the same versioned protocol on both sides.
+//! Clients connect to it exactly as they would to a single
+//! [`super::server::NetServer`] (Hello → Info handshake, pipelined
+//! `Request`/`Response` frames); behind it, N `repro serve --listen`
+//! backends each hold one multiplexed **link** the router demultiplexes
+//! replies from. Per-process lane sharding (`batcher.shards`) scales one
+//! process; this tier scales across processes and hosts.
+//!
+//! **Dispatch policies** (`router.policy`):
+//! * `hash` (default) — consistent hash of the client connection id
+//!   over a [`HashRing`] of `router.vnodes` virtual nodes per backend.
+//!   One connection's requests stick to one backend, keeping that
+//!   backend's batcher lanes and weight-stationary fabric warm, and
+//!   removing a backend remaps only ~1/N of connections (the ring walk
+//!   skips dead backends, so the minimal-disruption invariant holds
+//!   under failure too — `tests/router_properties.rs`).
+//! * `least-outstanding` — the connected backend with the fewest
+//!   in-flight requests wins: best spreading, no affinity.
+//!
+//! **Health / drain state machine.** Each backend is `connected` or
+//! `quarantined`. A link failure (read error, EOF, write failure, or a
+//! connection-scoped `Error` frame) moves the backend to quarantined:
+//! the socket closes, and **every in-flight request parked on that link
+//! resolves immediately with a retryable `Rejected` frame** (hint
+//! [`FAILOVER_RETRY_US`] ≥ 1 — hint-honoring clients like `repro
+//! loadgen --retry` re-send; nothing ever hangs). A prober thread then
+//! re-connects with exponential backoff (`router.probe_ms` doubling up
+//! to `router.max_backoff_ms`); a successful Hello/Info handshake —
+//! which must agree with the fleet's model dimensions — promotes the
+//! fresh connection to the live link and clears the quarantine.
+//!
+//! **Fleet-wide admission rule.** A backend answering `Rejected` does
+//! not end the request: the router remembers the smallest
+//! `retry_after_us` hint seen and re-dispatches to the next connected
+//! backend it has not tried. Only when *all* backends rejected (or none
+//! are connected) does the client see `Rejected` — carrying that
+//! minimum hint, so fleet-wide backpressure stays exactly as meaningful
+//! as single-process backpressure.
+//!
+//! Ordering audit: every atomic here is Relaxed by design — connection
+//! counters, monitoring counters, and cooperative flags (`stopping`,
+//! `connected`) whose consumers tolerate staleness by construction
+//! (a stale `connected` just costs one extra tried-and-failed dispatch
+//! hop). Links are published via `Mutex<Option<Arc<Link>>>`, never
+//! through an atomic.
+
+use super::client::ServerInfo;
+use super::protocol::{read_frame_with, write_frame, write_frame_with, Frame};
+use super::server::WRITE_TIMEOUT;
+use crate::config::{DispatchPolicy, RouterConfig};
+use crate::coordinator::RouterMetrics;
+use crate::util::{queue, PooledVec};
+use crate::Result;
+use anyhow::{bail, ensure, Context};
+use std::collections::HashMap;
+use std::io::{BufReader, BufWriter, Write as _};
+use std::net::{
+    IpAddr, Ipv4Addr, Ipv6Addr, Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs,
+};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Retry hint (µs) on frames that resolve requests lost to a dying
+/// backend or to router shutdown. Always ≥ 1, so hint-honoring clients
+/// treat the loss as retryable backpressure rather than a hard error.
+pub const FAILOVER_RETRY_US: u64 = 2_000;
+
+/// Retry hint (µs) when no backend is connected at all — longer than
+/// [`FAILOVER_RETRY_US`] because recovery needs a health probe to
+/// succeed first.
+pub const NO_BACKEND_RETRY_US: u64 = 10_000;
+
+/// Backend connect timeout during a health probe.
+const PROBE_CONNECT_TIMEOUT: Duration = Duration::from_secs(1);
+
+/// Backend handshake read timeout during a health probe (cleared once
+/// the link is promoted — demux reads then block indefinitely).
+const PROBE_READ_TIMEOUT: Duration = Duration::from_secs(2);
+
+/// Ring-point salt: vnode points are `mix64(SALT ^ ((backend << 32) |
+/// vnode))`. Without the salt, backend 0's low-vnode points are exactly
+/// `mix64(small)` — i.e. the hashes of small sequential keys — and
+/// every such key would structurally collide onto backend 0.
+const RING_SALT: u64 = 0x5249_4E47_5F50_4E54; // b"RING_PNT"
+
+/// SplitMix64 finalizer: a cheap, well-mixed u64 → u64 permutation
+/// (the same finalizer [`crate::util::rng::Rng`] uses per step).
+pub fn mix64(mut x: u64) -> u64 {
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^= x >> 31;
+    x
+}
+
+/// Consistent-hash ring: `vnodes` pseudo-random points per backend on
+/// the u64 circle; a key belongs to the first point clockwise from its
+/// hash. Dead backends are skipped by walking further clockwise, which
+/// is exactly the minimal-disruption remap (keys owned by live backends
+/// do not move).
+pub struct HashRing {
+    /// (ring point, backend index), sorted by point.
+    points: Vec<(u64, usize)>,
+}
+
+impl HashRing {
+    pub fn new(backends: usize, vnodes: usize) -> HashRing {
+        let mut points = Vec::new(); // lint: allow(alloc): construction, not a request path
+        for b in 0..backends {
+            for v in 0..vnodes {
+                let point = mix64(RING_SALT ^ (((b as u64) << 32) | v as u64));
+                points.push((point, b));
+            }
+        }
+        points.sort_unstable();
+        HashRing { points }
+    }
+
+    /// First backend clockwise from `key_hash` for which `alive`
+    /// returns true; `None` when none is. Pass the key through
+    /// [`mix64`] first — raw small integers are not uniform on the
+    /// circle.
+    pub fn pick_where(&self, key_hash: u64, alive: impl Fn(usize) -> bool) -> Option<usize> {
+        if self.points.is_empty() {
+            return None;
+        }
+        let start = self.points.partition_point(|&(p, _)| p < key_hash);
+        let n = self.points.len();
+        for off in 0..n {
+            let (_, b) = self.points[(start + off) % n];
+            if alive(b) {
+                return Some(b);
+            }
+        }
+        None
+    }
+}
+
+/// The backend with the smallest load among those `alive` (first wins
+/// ties); `None` when none is alive. Pure so the property tests can pin
+/// it: a quarantined (non-alive) backend is never picked, whatever its
+/// load.
+pub fn pick_least_outstanding(loads: &[u64], alive: impl Fn(usize) -> bool) -> Option<usize> {
+    let mut best: Option<(u64, usize)> = None;
+    for (i, &load) in loads.iter().enumerate() {
+        if !alive(i) {
+            continue;
+        }
+        match best {
+            Some((b, _)) if b <= load => {}
+            _ => best = Some((load, i)),
+        }
+    }
+    best.map(|(_, i)| i)
+}
+
+/// One request in flight to a backend, parked in that link's inflight
+/// map until its reply (or the link's death) resolves it.
+struct Route {
+    /// The client connection's writer queue.
+    client_tx: queue::Sender<Frame>,
+    /// The client's wire id, echoed on whatever frame resolves this.
+    client_id: u64,
+    /// Client connection id — the hash-policy key.
+    conn_key: u64,
+    /// Retained so a `Rejected` backend can be failed over to the next.
+    pixels: PooledVec<f32>,
+    /// Bitmask of backends already tried for this request.
+    tried: u64,
+    /// Smallest `retry_after_us` seen from a rejecting backend.
+    min_hint: u64,
+}
+
+struct LinkWriter {
+    w: BufWriter<TcpStream>,
+    /// Reused frame-encode scratch (steady-state forwards allocate only
+    /// the pooled pixel copy).
+    scratch: Vec<u8>,
+}
+
+struct Inflight {
+    /// Set (under this mutex) when the link dies: dispatch must not
+    /// insert past the failover drain, or the route would leak.
+    closed: bool,
+    map: HashMap<u64, Route>,
+}
+
+/// One live multiplexed connection to a backend. Replaced wholesale on
+/// reconnect; `gen` guards against a stale failure report tearing down
+/// the replacement.
+struct Link {
+    gen: u64,
+    /// For `Shutdown::Both` on failure (reads and writes both unblock).
+    stream: TcpStream,
+    writer: Mutex<LinkWriter>,
+    inflight: Mutex<Inflight>,
+    /// Backend-side wire ids (independent of client wire ids).
+    next_id: AtomicU64,
+}
+
+struct Backend {
+    addr: String,
+    link: Mutex<Option<Arc<Link>>>,
+    connected: AtomicBool,
+    /// In-flight requests on this backend (least-outstanding's load).
+    outstanding: AtomicU64,
+    /// Consecutive probe/link failures (drives the backoff exponent).
+    failures: AtomicU64,
+    /// Earliest next probe, ms since router start.
+    next_probe_at_ms: AtomicU64,
+    /// True while quarantined; the transition edges feed the
+    /// quarantine/recovery counters exactly once each.
+    was_quarantined: AtomicBool,
+    /// Link generation counter.
+    gen: AtomicU64,
+}
+
+/// One live client connection's handles.
+struct Conn {
+    stream: TcpStream,
+    reader: JoinHandle<()>,
+    writer: JoinHandle<()>,
+}
+
+struct RouterShared {
+    policy: DispatchPolicy,
+    ring: HashRing,
+    probe_ms: u64,
+    max_backoff_ms: u64,
+    started: Instant,
+    /// Fleet model info from the first successful probe; later probes
+    /// must agree on dimensions. Served to clients on Hello.
+    info: Mutex<Option<ServerInfo>>,
+    backends: Vec<Backend>,
+    metrics: Arc<RouterMetrics>,
+    stopping: AtomicBool,
+    live: AtomicUsize,
+    next_conn: AtomicU64,
+    conns: Mutex<Vec<Conn>>,
+    /// Demux-thread handles (a failed link's demux thread can't join
+    /// itself; shutdown joins them all here).
+    graveyard: Mutex<Vec<JoinHandle<()>>>,
+}
+
+fn now_ms(shared: &RouterShared) -> u64 {
+    shared.started.elapsed().as_millis() as u64
+}
+
+/// The router front tier. Bind with [`RouterServer::bind`]; shut down
+/// with [`RouterServer::shutdown`] (resolves any parked request with a
+/// retryable frame — never hangs a client).
+pub struct RouterServer {
+    addr: SocketAddr,
+    accept: Option<JoinHandle<()>>,
+    prober: Option<JoinHandle<()>>,
+    shared: Arc<RouterShared>,
+}
+
+impl RouterServer {
+    /// Bind the front tier and probe every backend once synchronously
+    /// (unreachable backends start quarantined on the prober's backoff
+    /// schedule — the router comes up even with the whole fleet down).
+    pub fn bind(cfg: &RouterConfig) -> Result<RouterServer> {
+        ensure!(!cfg.backends.is_empty(), "router needs at least one backend");
+        ensure!(cfg.backends.len() <= 64, "router supports at most 64 backends");
+        ensure!(cfg.vnodes >= 1, "router.vnodes must be >= 1");
+        ensure!(cfg.max_connections >= 1, "need at least one connection slot");
+        ensure!(cfg.probe_ms >= 1, "router.probe_ms must be >= 1");
+        let listen = if cfg.listen.is_empty() { "127.0.0.1:0" } else { cfg.listen.as_str() };
+        let listener = TcpListener::bind(listen)
+            .with_context(|| format!("binding router.listen {listen}"))?;
+        let addr = listener.local_addr().context("resolving bound address")?;
+        // lint: allow(alloc): construction, not a request path.
+        let mut backends = Vec::with_capacity(cfg.backends.len());
+        for addr in &cfg.backends {
+            backends.push(Backend {
+                addr: addr.clone(),
+                link: Mutex::new(None),
+                connected: AtomicBool::new(false),
+                outstanding: AtomicU64::new(0),
+                failures: AtomicU64::new(0),
+                next_probe_at_ms: AtomicU64::new(0),
+                was_quarantined: AtomicBool::new(false),
+                gen: AtomicU64::new(0),
+            });
+        }
+        let shared = Arc::new(RouterShared {
+            policy: cfg.policy,
+            ring: HashRing::new(cfg.backends.len(), cfg.vnodes),
+            probe_ms: cfg.probe_ms,
+            max_backoff_ms: cfg.max_backoff_ms.max(cfg.probe_ms),
+            started: Instant::now(),
+            info: Mutex::new(None),
+            backends,
+            metrics: Arc::new(RouterMetrics::new(&cfg.backends)),
+            stopping: AtomicBool::new(false),
+            live: AtomicUsize::new(0),
+            next_conn: AtomicU64::new(0),
+            conns: Mutex::new(Vec::new()),
+            graveyard: Mutex::new(Vec::new()),
+        });
+        for idx in 0..shared.backends.len() {
+            if let Err(e) = probe_backend(&shared, idx) {
+                note_probe_failure(&shared, idx);
+                eprintln!(
+                    "router: backend {} unavailable at start: {e:#}",
+                    shared.backends[idx].addr
+                );
+            }
+        }
+        let prober = {
+            let shared = shared.clone();
+            std::thread::Builder::new()
+                .name("luna-router-prober".into())
+                .spawn(move || prober_main(shared))
+                .context("spawning prober thread")?
+        };
+        let accept = {
+            let shared = shared.clone();
+            let max_connections = cfg.max_connections;
+            std::thread::Builder::new()
+                .name("luna-router-accept".into())
+                .spawn(move || accept_loop(listener, shared, max_connections))
+                .context("spawning accept thread")?
+        };
+        Ok(RouterServer { addr, accept: Some(accept), prober: Some(prober), shared })
+    }
+
+    /// The actually-bound front-tier address (resolves port `0`).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Client connections currently open.
+    pub fn live_connections(&self) -> usize {
+        self.shared.live.load(Ordering::Relaxed)
+    }
+
+    /// Per-backend routed/rejected/failed-over/quarantine counters.
+    pub fn metrics(&self) -> Arc<RouterMetrics> {
+        self.shared.metrics.clone()
+    }
+
+    /// Whether backend `idx` currently holds a live link.
+    pub fn backend_connected(&self, idx: usize) -> bool {
+        self.shared.backends[idx].connected.load(Ordering::Relaxed)
+    }
+
+    /// Drain and stop: no new connections or probes, client read halves
+    /// close (no new requests), in-flight replies flush, anything still
+    /// parked on a backend link resolves with a retryable `Rejected`
+    /// frame. No client is ever left waiting.
+    pub fn shutdown(mut self) {
+        self.shared.stopping.store(true, Ordering::Relaxed);
+        let _ = TcpStream::connect(wake_addr(self.addr));
+        if let Some(a) = self.accept.take() {
+            let _ = a.join();
+        }
+        if let Some(p) = self.prober.take() {
+            let _ = p.join();
+        }
+        let conns = std::mem::take(&mut *self.shared.conns.lock().unwrap());
+        for c in &conns {
+            let _ = c.stream.shutdown(Shutdown::Read);
+        }
+        // lint: allow(alloc): shutdown path, never per-request.
+        let mut writers = Vec::with_capacity(conns.len());
+        for c in conns {
+            let _ = c.reader.join();
+            writers.push(c.writer);
+        }
+        // Readers are gone, so no new dispatches from clients; resolve
+        // whatever is still parked, closing every link (their demux
+        // threads exit on the socket shutdown).
+        close_all_links(&self.shared, "router shutting down");
+        // Writers exit once every route's sender clone is resolved and
+        // the queue drains — i.e. after every client got its answer.
+        for w in writers {
+            let _ = w.join();
+        }
+        let demux = std::mem::take(&mut *self.shared.graveyard.lock().unwrap());
+        for d in demux {
+            let _ = d.join();
+        }
+    }
+}
+
+impl Drop for RouterServer {
+    fn drop(&mut self) {
+        // shutdown() consumed self in the normal path; this covers
+        // early drops (error unwinding) so the accept/prober/demux
+        // threads do not linger. Client connection threads exit when
+        // their peers disconnect.
+        if self.accept.is_some() || self.prober.is_some() {
+            self.shared.stopping.store(true, Ordering::Relaxed);
+            let _ = TcpStream::connect(wake_addr(self.addr));
+            if let Some(a) = self.accept.take() {
+                let _ = a.join();
+            }
+            if let Some(p) = self.prober.take() {
+                let _ = p.join();
+            }
+            close_all_links(&self.shared, "router dropped");
+        }
+    }
+}
+
+fn wake_addr(bound: SocketAddr) -> SocketAddr {
+    let ip = match bound.ip() {
+        ip if !ip.is_unspecified() => ip,
+        IpAddr::V4(_) => IpAddr::V4(Ipv4Addr::LOCALHOST),
+        IpAddr::V6(_) => IpAddr::V6(Ipv6Addr::LOCALHOST),
+    };
+    SocketAddr::new(ip, bound.port())
+}
+
+// ---------------------------------------------------------------------
+// Backend side: probing, links, demux, failover
+// ---------------------------------------------------------------------
+
+/// Connect + handshake one backend and promote the connection to its
+/// live link. The Info must agree with the fleet's model dimensions.
+fn probe_backend(shared: &Arc<RouterShared>, idx: usize) -> Result<()> {
+    let backend = &shared.backends[idx];
+    let sa = backend
+        .addr
+        .to_socket_addrs()
+        .with_context(|| format!("resolving backend {}", backend.addr))?
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("backend {} resolves to nothing", backend.addr))?;
+    let stream = TcpStream::connect_timeout(&sa, PROBE_CONNECT_TIMEOUT)
+        .with_context(|| format!("connecting backend {}", backend.addr))?;
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
+    let _ = stream.set_read_timeout(Some(PROBE_READ_TIMEOUT));
+    let read_half = stream.try_clone().context("cloning backend stream")?;
+    let write_half = stream.try_clone().context("cloning backend stream")?;
+    let mut w = BufWriter::new(write_half);
+    write_frame(&mut w, &Frame::Hello)?;
+    w.flush().context("flushing Hello")?;
+    let mut r = BufReader::new(read_half);
+    let mut scratch = Vec::new();
+    let info = match read_frame_with(&mut r, &mut scratch)? {
+        Some(Frame::Info { in_dim, out_dim, max_batch, backend }) => ServerInfo {
+            in_dim: in_dim as usize,
+            out_dim: out_dim as usize,
+            max_batch: max_batch as usize,
+            backend,
+        },
+        Some(Frame::Error { reason, .. }) => bail!("backend refused handshake: {reason}"),
+        Some(Frame::Rejected { reason, .. }) => bail!("backend rejected connection: {reason}"),
+        Some(other) => bail!("unexpected handshake reply {other:?}"),
+        None => bail!("backend closed during handshake"),
+    };
+    {
+        let mut agg = shared.info.lock().unwrap();
+        match agg.as_ref() {
+            Some(have) => ensure!(
+                have.in_dim == info.in_dim && have.out_dim == info.out_dim,
+                "backend {} serves a {}→{} model, fleet serves {}→{}",
+                backend.addr,
+                info.in_dim,
+                info.out_dim,
+                have.in_dim,
+                have.out_dim
+            ),
+            None => *agg = Some(info),
+        }
+    }
+    // Handshake timeouts off: demux reads block until traffic or death.
+    let _ = stream.set_read_timeout(None);
+    let gen = backend.gen.fetch_add(1, Ordering::Relaxed) + 1;
+    let link = Arc::new(Link {
+        gen,
+        stream,
+        writer: Mutex::new(LinkWriter { w, scratch: Vec::new() }),
+        inflight: Mutex::new(Inflight { closed: false, map: HashMap::new() }),
+        next_id: AtomicU64::new(0),
+    });
+    let demux = {
+        let shared = shared.clone();
+        let link = link.clone();
+        std::thread::Builder::new()
+            .name(format!("luna-router-demux-{idx}"))
+            .spawn(move || demux_main(shared, idx, link, r))
+            .context("spawning backend demux thread")?
+    };
+    shared.graveyard.lock().unwrap().push(demux);
+    *backend.link.lock().unwrap() = Some(link);
+    backend.connected.store(true, Ordering::Relaxed);
+    backend.failures.store(0, Ordering::Relaxed);
+    if backend.was_quarantined.swap(false, Ordering::Relaxed) {
+        shared.metrics.record_recovery(idx);
+    }
+    Ok(())
+}
+
+/// Schedule the next probe with exponential backoff and count the
+/// healthy→quarantined edge (once per outage).
+fn note_probe_failure(shared: &Arc<RouterShared>, idx: usize) {
+    let backend = &shared.backends[idx];
+    let fails = backend.failures.fetch_add(1, Ordering::Relaxed) + 1;
+    let backoff = shared
+        .probe_ms
+        .saturating_mul(1u64 << (fails - 1).min(16))
+        .min(shared.max_backoff_ms);
+    backend.next_probe_at_ms.store(now_ms(shared).saturating_add(backoff), Ordering::Relaxed);
+    if !backend.was_quarantined.swap(true, Ordering::Relaxed) {
+        shared.metrics.record_quarantine(idx);
+    }
+}
+
+fn prober_main(shared: Arc<RouterShared>) {
+    let tick = Duration::from_millis(shared.probe_ms.clamp(5, 50));
+    loop {
+        std::thread::sleep(tick);
+        if shared.stopping.load(Ordering::Relaxed) {
+            return;
+        }
+        let now = now_ms(&shared);
+        for idx in 0..shared.backends.len() {
+            let backend = &shared.backends[idx];
+            if backend.connected.load(Ordering::Relaxed)
+                || now < backend.next_probe_at_ms.load(Ordering::Relaxed)
+            {
+                continue;
+            }
+            if shared.stopping.load(Ordering::Relaxed) {
+                return;
+            }
+            if probe_backend(&shared, idx).is_err() {
+                note_probe_failure(&shared, idx);
+            }
+        }
+    }
+}
+
+/// Tear a dead link down (generation-guarded: a stale failure report
+/// never kills a replacement link) and resolve every request parked on
+/// it with a retryable `Rejected` frame — the no-request-hangs
+/// guarantee. During shutdown the teardown still resolves routes but
+/// skips the quarantine bookkeeping.
+fn fail_link(shared: &Arc<RouterShared>, idx: usize, gen: u64, why: &str) {
+    let backend = &shared.backends[idx];
+    let link = {
+        let mut guard = backend.link.lock().unwrap();
+        match guard.as_ref() {
+            Some(l) if l.gen == gen => guard.take(),
+            _ => return,
+        }
+    };
+    let Some(link) = link else { return };
+    backend.connected.store(false, Ordering::Relaxed);
+    if !shared.stopping.load(Ordering::Relaxed) {
+        note_probe_failure(shared, idx);
+        eprintln!("router: backend {} quarantined: {why}", backend.addr);
+    }
+    let _ = link.stream.shutdown(Shutdown::Both);
+    // Drain under the inflight lock (closed stops racing inserts), then
+    // resolve outside it — sends must not run under the map lock.
+    let drained: Vec<(u64, Route)> = {
+        let mut inf = link.inflight.lock().unwrap();
+        inf.closed = true;
+        inf.map.drain().collect()
+    };
+    for (_, route) in drained {
+        backend.outstanding.fetch_sub(1, Ordering::Relaxed);
+        shared.metrics.record_failed_over(idx);
+        let _ = route.client_tx.send(Frame::Rejected {
+            id: route.client_id,
+            retry_after_us: FAILOVER_RETRY_US,
+            reason: format!("backend {} lost mid-request ({why}) — safe to retry", backend.addr),
+        });
+    }
+}
+
+/// Close every live link (shutdown path).
+fn close_all_links(shared: &Arc<RouterShared>, why: &str) {
+    for idx in 0..shared.backends.len() {
+        let gen = { shared.backends[idx].link.lock().unwrap().as_ref().map(|l| l.gen) };
+        if let Some(gen) = gen {
+            fail_link(shared, idx, gen, why);
+        }
+    }
+}
+
+fn take_route(link: &Link, id: u64) -> Option<Route> {
+    link.inflight.lock().unwrap().map.remove(&id)
+}
+
+/// Per-link reply pump: demultiplex backend frames back onto the owning
+/// client connections' writer queues. Exits by failing the link.
+fn demux_main(shared: Arc<RouterShared>, idx: usize, link: Arc<Link>, mut r: BufReader<TcpStream>) {
+    let mut scratch = Vec::new();
+    loop {
+        let frame = match read_frame_with(&mut r, &mut scratch) {
+            Ok(Some(f)) => f,
+            Ok(None) => return fail_link(&shared, idx, link.gen, "connection closed"),
+            Err(e) => return fail_link(&shared, idx, link.gen, &format!("{e:#}")),
+        };
+        match frame {
+            Frame::Response { id, label, latency_us, cost, logits } => {
+                if let Some(route) = take_route(&link, id) {
+                    shared.backends[idx].outstanding.fetch_sub(1, Ordering::Relaxed);
+                    let _ = route.client_tx.send(Frame::Response {
+                        id: route.client_id,
+                        label,
+                        latency_us,
+                        cost,
+                        logits,
+                    });
+                }
+            }
+            Frame::Rejected { id, retry_after_us, .. } => {
+                if let Some(mut route) = take_route(&link, id) {
+                    shared.backends[idx].outstanding.fetch_sub(1, Ordering::Relaxed);
+                    shared.metrics.record_backend_rejection(idx);
+                    // fleet admission rule: remember the smallest hint,
+                    // try the remaining backends before telling the
+                    // client anything
+                    route.min_hint = route.min_hint.min(retry_after_us.max(1));
+                    dispatch(&shared, route);
+                }
+            }
+            Frame::Error { id, reason } => {
+                if id == 0 {
+                    // connection-scoped backend error: link poisoned
+                    let why = format!("backend error: {reason}");
+                    return fail_link(&shared, idx, link.gen, &why);
+                }
+                if let Some(route) = take_route(&link, id) {
+                    shared.backends[idx].outstanding.fetch_sub(1, Ordering::Relaxed);
+                    let _ = route.client_tx.send(Frame::Error { id: route.client_id, reason });
+                }
+            }
+            other => {
+                let why = format!("unexpected backend frame {other:?}");
+                return fail_link(&shared, idx, link.gen, &why);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Client side: accept loop, per-connection reader/writer, dispatch
+// ---------------------------------------------------------------------
+
+/// Route one request: pick a backend by policy (skipping quarantined
+/// and already-tried ones), park the route on its link, forward the
+/// request. Loops on rejection/write failure until a backend takes it
+/// or every backend has been tried — then the client gets a `Rejected`
+/// carrying the minimum hint seen (fleet admission aggregation).
+fn dispatch(shared: &Arc<RouterShared>, mut route: Route) {
+    loop {
+        let idx = {
+            let alive = |b: usize| {
+                route.tried & (1u64 << b) == 0
+                    && shared.backends[b].connected.load(Ordering::Relaxed)
+            };
+            match shared.policy {
+                DispatchPolicy::Hash => shared.ring.pick_where(mix64(route.conn_key), &alive),
+                DispatchPolicy::LeastOutstanding => {
+                    let mut loads = [0u64; 64];
+                    for (i, b) in shared.backends.iter().enumerate() {
+                        loads[i] = b.outstanding.load(Ordering::Relaxed);
+                    }
+                    pick_least_outstanding(&loads[..shared.backends.len()], &alive)
+                }
+            }
+        };
+        let Some(idx) = idx else {
+            let (hint, reason) = if route.tried == 0 {
+                (NO_BACKEND_RETRY_US, "no healthy backends behind the router".to_string())
+            } else {
+                let hint =
+                    if route.min_hint == u64::MAX { FAILOVER_RETRY_US } else { route.min_hint };
+                (hint, "all backends at capacity".to_string())
+            };
+            shared.metrics.record_terminal_rejection();
+            let _ = route.client_tx.send(Frame::Rejected {
+                id: route.client_id,
+                retry_after_us: hint,
+                reason,
+            });
+            return;
+        };
+        route.tried |= 1u64 << idx;
+        let link = { shared.backends[idx].link.lock().unwrap().clone() };
+        let Some(link) = link else { continue };
+        let bid;
+        let pixels;
+        {
+            let mut inf = link.inflight.lock().unwrap();
+            if inf.closed {
+                continue; // raced a failover; the tried bit is set, move on
+            }
+            bid = link.next_id.fetch_add(1, Ordering::Relaxed);
+            pixels = PooledVec::from_slice(&route.pixels);
+            inf.map.insert(bid, route);
+        }
+        shared.backends[idx].outstanding.fetch_add(1, Ordering::Relaxed);
+        let wrote = {
+            let mut guard = link.writer.lock().unwrap();
+            let lw = &mut *guard;
+            let frame = Frame::Request { id: bid, pixels };
+            let sent = write_frame_with(&mut lw.w, &frame, &mut lw.scratch);
+            sent.is_ok() && lw.w.flush().is_ok()
+        };
+        if wrote {
+            shared.metrics.record_routed(idx);
+            return;
+        }
+        // Broken link: reclaim the route if the failover drain has not
+        // already resolved it, fail the link (resolving its other
+        // in-flight requests), and try the next backend.
+        let reclaimed = take_route(&link, bid);
+        fail_link(shared, idx, link.gen, "write failed");
+        match reclaimed {
+            Some(r) => {
+                shared.backends[idx].outstanding.fetch_sub(1, Ordering::Relaxed);
+                route = r;
+            }
+            None => return, // fail_link's drain already answered the client
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<RouterShared>, max_connections: usize) {
+    loop {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                if shared.stopping.load(Ordering::Relaxed) {
+                    return; // the shutdown wake-up (or a racing client)
+                }
+                prune_finished(&shared);
+                if shared.live.load(Ordering::Relaxed) >= max_connections {
+                    reject_connection(stream);
+                    continue;
+                }
+                match spawn_connection(stream, shared.clone()) {
+                    Ok(conn) => shared.conns.lock().unwrap().push(conn),
+                    Err(e) => eprintln!("router: connection setup failed: {e:#}"),
+                }
+            }
+            Err(e) => {
+                if shared.stopping.load(Ordering::Relaxed) {
+                    return;
+                }
+                eprintln!("router: accept error: {e:#}");
+            }
+        }
+    }
+}
+
+/// Join and drop registry entries whose threads have exited.
+fn prune_finished(shared: &RouterShared) {
+    let mut conns = shared.conns.lock().unwrap();
+    // lint: allow(alloc): accept-loop housekeeping between connections,
+    // never on a request's path.
+    let mut kept = Vec::with_capacity(conns.len());
+    for c in conns.drain(..) {
+        if c.reader.is_finished() && c.writer.is_finished() {
+            let _ = c.reader.join();
+            let _ = c.writer.join();
+        } else {
+            kept.push(c);
+        }
+    }
+    *conns = kept;
+}
+
+/// Over-capacity turn-away, mirroring the backend front-end's.
+fn reject_connection(stream: TcpStream) {
+    let mut w = BufWriter::new(&stream);
+    let frame =
+        Frame::Rejected { id: 0, retry_after_us: 0, reason: "connection limit reached".into() };
+    let _ = write_frame(&mut w, &frame);
+    let _ = w.flush();
+}
+
+fn spawn_connection(stream: TcpStream, shared: Arc<RouterShared>) -> Result<Conn> {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
+    let reader_stream = stream.try_clone().context("cloning stream for reader")?;
+    let writer_stream = stream.try_clone().context("cloning stream for writer")?;
+    let (tx, rx) = queue::channel::<Frame>();
+    shared.live.fetch_add(1, Ordering::Relaxed);
+    let writer_shared = shared.clone();
+    let writer_spawn = std::thread::Builder::new().name("luna-rt-writer".into()).spawn(move || {
+        {
+            let mut w = BufWriter::new(&writer_stream);
+            // reused across frames, exactly as on the backend front-end
+            let mut scratch = Vec::new();
+            // Exits when every sender is gone: the reader's plus one
+            // clone per route still in flight — i.e. after every
+            // request this connection sent has been resolved.
+            while let Some(frame) = rx.recv() {
+                if write_frame_with(&mut w, &frame, &mut scratch).is_err() || w.flush().is_err() {
+                    break;
+                }
+            }
+        }
+        let _ = writer_stream.shutdown(Shutdown::Both);
+        writer_shared.live.fetch_sub(1, Ordering::Relaxed);
+    });
+    let writer = match writer_spawn {
+        Ok(w) => w,
+        Err(e) => {
+            shared.live.fetch_sub(1, Ordering::Relaxed);
+            return Err(e).context("spawning connection writer");
+        }
+    };
+    let conn_key = shared.next_conn.fetch_add(1, Ordering::Relaxed);
+    let reader = std::thread::Builder::new()
+        .name("luna-router-reader".into())
+        .spawn(move || conn_reader(shared, reader_stream, tx, conn_key))
+        .context("spawning connection reader")?;
+    Ok(Conn { stream, reader, writer })
+}
+
+fn conn_reader(
+    shared: Arc<RouterShared>,
+    stream: TcpStream,
+    tx: queue::Sender<Frame>,
+    conn_key: u64,
+) {
+    let mut r = BufReader::new(&stream);
+    let mut scratch = Vec::new();
+    loop {
+        match read_frame_with(&mut r, &mut scratch) {
+            Ok(Some(Frame::Hello)) => {
+                let info = { shared.info.lock().unwrap().clone() };
+                match info {
+                    Some(info) => {
+                        let frame = Frame::Info {
+                            in_dim: info.in_dim as u32,
+                            out_dim: info.out_dim as u32,
+                            max_batch: info.max_batch as u32,
+                            backend: info.backend,
+                        };
+                        if tx.send(frame).is_err() {
+                            return;
+                        }
+                    }
+                    None => {
+                        // No backend has ever handshaken: nothing to
+                        // serve and no model info to report.
+                        let reason = "router has no healthy backend yet".to_string();
+                        let _ = tx.send(Frame::Error { id: 0, reason });
+                        return;
+                    }
+                }
+            }
+            Ok(Some(Frame::Request { id, pixels })) => {
+                let route = Route {
+                    client_tx: tx.clone(),
+                    client_id: id,
+                    conn_key,
+                    pixels,
+                    tried: 0,
+                    min_hint: u64::MAX,
+                };
+                dispatch(&shared, route);
+            }
+            Ok(Some(other)) => {
+                let reason = format!("unexpected client frame {other:?}");
+                let _ = tx.send(Frame::Error { id: 0, reason });
+                return;
+            }
+            Ok(None) => return, // peer hung up cleanly
+            Err(e) => {
+                let reason = format!("protocol error: {e:#}");
+                let _ = tx.send(Frame::Error { id: 0, reason });
+                return;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mix64_is_a_permutation_sample() {
+        // distinct inputs → distinct outputs on a decent sample
+        let mut seen = std::collections::HashSet::new();
+        for x in 0..10_000u64 {
+            assert!(seen.insert(mix64(x)));
+        }
+        // and it actually moves small integers
+        assert_ne!(mix64(1), 1);
+        assert_ne!(mix64(2), 2);
+    }
+
+    #[test]
+    fn ring_salt_defeats_structural_collisions() {
+        // Unsalted, backend 0's vnode points would equal the hashes of
+        // small keys; salted, sequential keys spread across backends.
+        let ring = HashRing::new(4, 160);
+        let mut hit = [0usize; 4];
+        for key in 0..64u64 {
+            hit[ring.pick_where(mix64(key), |_| true).unwrap()] += 1;
+        }
+        assert!(hit.iter().all(|&h| h > 0), "sequential keys all on one backend: {hit:?}");
+    }
+
+    #[test]
+    fn ring_walk_skips_dead_backends() {
+        let ring = HashRing::new(3, 64);
+        for key in 0..200u64 {
+            let h = mix64(key);
+            let full = ring.pick_where(h, |_| true).unwrap();
+            let alive = ring.pick_where(h, |b| b != full).unwrap();
+            assert_ne!(alive, full);
+            // keys not owned by the dead backend do not move
+            if let Some(other) = ring.pick_where(h, |b| b != ((full + 1) % 3)) {
+                if full != (full + 1) % 3 {
+                    assert_eq!(other, full);
+                }
+            }
+        }
+        assert_eq!(ring.pick_where(42, |_| false), None);
+    }
+
+    #[test]
+    fn least_outstanding_picks_min_and_respects_alive() {
+        assert_eq!(pick_least_outstanding(&[5, 2, 9], |_| true), Some(1));
+        assert_eq!(pick_least_outstanding(&[5, 2, 9], |b| b != 1), Some(0));
+        assert_eq!(pick_least_outstanding(&[3, 3, 3], |_| true), Some(0), "first wins ties");
+        assert_eq!(pick_least_outstanding(&[1, 2], |_| false), None);
+        assert_eq!(pick_least_outstanding(&[], |_| true), None);
+    }
+}

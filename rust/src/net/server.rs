@@ -42,7 +42,7 @@ use crate::Result;
 use anyhow::Context;
 use std::io::{BufReader, BufWriter, Write as _};
 use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, Shutdown, SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
@@ -68,6 +68,10 @@ struct NetShared {
     /// Connections currently open (admission-checked against
     /// `net.max_connections` in the accept loop).
     live: AtomicUsize,
+    /// Monotonic connection id: each accepted connection gets the next
+    /// value and submits through [`ServerHandle::submit_from`] with it,
+    /// so `batcher.affinity connection` can pin its lane.
+    next_conn: AtomicU64,
     conns: Mutex<Vec<Conn>>,
 }
 
@@ -91,6 +95,7 @@ impl NetServer {
         let state = Arc::new(NetShared {
             stopping: AtomicBool::new(false),
             live: AtomicUsize::new(0),
+            next_conn: AtomicU64::new(0),
             conns: Mutex::new(Vec::new()),
         });
         let accept = {
@@ -130,6 +135,27 @@ impl NetServer {
         let conns = std::mem::take(&mut *self.state.conns.lock().unwrap());
         for c in &conns {
             let _ = c.stream.shutdown(Shutdown::Read);
+        }
+        for c in conns {
+            let _ = c.reader.join();
+            let _ = c.writer.join();
+        }
+    }
+
+    /// Ungraceful kill: close every socket (both halves) immediately —
+    /// in-flight requests get no reply, peers see a dead connection.
+    /// This simulates a crashed backend process; the router's failover
+    /// tests use it. For production teardown use
+    /// [`shutdown`](Self::shutdown), which drains.
+    pub fn abort(mut self) {
+        self.state.stopping.store(true, Ordering::Relaxed);
+        let _ = TcpStream::connect(wake_addr(self.addr));
+        if let Some(a) = self.accept.take() {
+            let _ = a.join();
+        }
+        let conns = std::mem::take(&mut *self.state.conns.lock().unwrap());
+        for c in &conns {
+            let _ = c.stream.shutdown(Shutdown::Both);
         }
         for c in conns {
             let _ = c.reader.join();
@@ -265,14 +291,15 @@ fn spawn_connection(
             return Err(e).context("spawning connection writer");
         }
     };
+    let conn_id = state.next_conn.fetch_add(1, Ordering::Relaxed);
     let reader = std::thread::Builder::new()
         .name("luna-net-reader".into())
-        .spawn(move || reader_main(reader_stream, tx, handle))
+        .spawn(move || reader_main(reader_stream, tx, handle, conn_id))
         .context("spawning connection reader")?;
     Ok(Conn { stream, reader, writer })
 }
 
-fn reader_main(stream: TcpStream, tx: queue::Sender<Frame>, handle: ServerHandle) {
+fn reader_main(stream: TcpStream, tx: queue::Sender<Frame>, handle: ServerHandle, conn_id: u64) {
     let mut r = BufReader::new(&stream);
     // reused payload scratch: a warm connection decodes every frame
     // through this buffer and pooled pixel vecs — no allocation per read
@@ -295,7 +322,7 @@ fn reader_main(stream: TcpStream, tx: queue::Sender<Frame>, handle: ServerHandle
                 // (pooled logits) and pushes it onto this connection's
                 // writer queue — no boxed closure, no allocation
                 let done = Completion::Frame { tx: tx.clone(), wire_id: id };
-                if let Err(e) = handle.submit_with(pixels, done) {
+                if let Err(e) = handle.submit_from(conn_id, pixels, done) {
                     let frame = match e.downcast_ref::<Backpressure>() {
                         Some(bp) => Frame::Rejected {
                             id,

@@ -9,19 +9,24 @@
 //!   on the wire and (as a downcastable [`Backpressure`]) in-process;
 //! * malformed/truncated/mis-versioned frames close that connection
 //!   without poisoning the coordinator or other connections;
-//! * graceful shutdown drains in-flight requests before closing.
+//! * graceful shutdown drains in-flight requests before closing;
+//! * the router front tier is transparent and never hangs a request:
+//!   killing a backend mid-load resolves every in-flight request with a
+//!   retryable frame, quarantines the endpoint, and recovers it when a
+//!   health probe succeeds again.
 
 mod common;
 
 use common::synth_artifacts;
-use luna_cim::config::{BackendKind, Config};
+use luna_cim::config::{BackendKind, Config, DispatchPolicy, RouterConfig, ShardAffinity};
 use luna_cim::coordinator::{Backpressure, CoordinatorServer, ServerHandle};
 use luna_cim::multiplier::{MultiplierKind, MultiplierModel};
 use luna_cim::net::protocol::{read_frame, write_frame, Frame, MAGIC, VERSION};
-use luna_cim::net::{NetClient, NetServer};
+use luna_cim::net::{loadgen, NetClient, NetServer, RouterServer, Scenario};
 use luna_cim::nn::QuantMlp;
 use std::io::Write as _;
 use std::net::TcpStream;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Start a full serving stack (coordinator + TCP front-end) over
@@ -326,4 +331,255 @@ fn connection_cap_turns_away_with_rejected_frame() {
     drop(first);
     net.shutdown();
     server.shutdown();
+}
+
+/// Router config over the given backend addresses, tuned for tests
+/// (fast probing, tight backoff).
+fn router_cfg(backends: Vec<String>, probe_ms: u64) -> RouterConfig {
+    RouterConfig {
+        listen: "127.0.0.1:0".into(),
+        backends,
+        policy: DispatchPolicy::Hash,
+        vnodes: 160,
+        max_connections: 64,
+        probe_ms,
+        max_backoff_ms: probe_ms * 5,
+    }
+}
+
+#[test]
+fn router_failover_resolves_every_in_flight_request() {
+    // Kill one of two backends while its requests are parked in the
+    // batcher. The acceptance bar: *every* in-flight request resolves —
+    // a Response from the survivor or a retryable Rejected for the dead
+    // backend's — none hang; the failover and quarantine counters match
+    // the frames observed; and a retrying loadgen still completes a run
+    // through the degraded router.
+    let mlp = QuantMlp::random_digits(101);
+    let mut servers = Vec::new();
+    let mut handles = Vec::new();
+    let mut nets: Vec<Option<NetServer>> = Vec::new();
+    let mut pixels = Vec::new();
+    for tag in ["net-failover-a", "net-failover-b"] {
+        let (server, handle, net, px) = start_stack(tag, &mlp, |cfg| {
+            // hold requests in flight long enough to die mid-batch
+            cfg.batcher.max_wait_us = 400_000;
+        });
+        servers.push(server);
+        handles.push(handle);
+        nets.push(Some(net));
+        pixels = px;
+    }
+    let addrs = vec![
+        nets[0].as_ref().unwrap().local_addr().to_string(),
+        nets[1].as_ref().unwrap().local_addr().to_string(),
+    ];
+    let router = RouterServer::bind(&router_cfg(addrs, 20)).unwrap();
+    assert!(router.backend_connected(0) && router.backend_connected(1));
+
+    // one in-flight request per connection, fanned out by the hash policy
+    let n = 6usize;
+    let mut conns = Vec::new();
+    for i in 0..n {
+        let client = NetClient::connect(router.local_addr()).unwrap();
+        let (mut tx, rx, _info) = client.split();
+        tx.send(&pixels[i % pixels.len()]).unwrap();
+        conns.push((tx, rx));
+    }
+    let resolved = Arc::new(Mutex::new(Vec::new()));
+    let mut waiters = Vec::new();
+    for (i, (tx, mut rx)) in conns.into_iter().enumerate() {
+        let resolved = Arc::clone(&resolved);
+        waiters.push(std::thread::spawn(move || {
+            let frame = rx.recv();
+            resolved.lock().unwrap().push((i, frame));
+            drop(tx); // keep the write half open until resolution
+        }));
+    }
+    let t0 = Instant::now();
+    loop {
+        let total: u64 = handles.iter().map(|h| h.metrics().snapshot().accepted).sum();
+        if total == n as u64 {
+            break;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(5), "requests never admitted");
+        std::thread::yield_now();
+    }
+    let snap = router.metrics().snapshot();
+    assert_eq!(snap.routed_total(), n as u64);
+    let victim = if snap.backends[0].routed >= snap.backends[1].routed { 0 } else { 1 };
+    let survivor = 1 - victim;
+    assert!(snap.backends[victim].routed > 0);
+    nets[victim].take().unwrap().abort();
+
+    let t0 = Instant::now();
+    while resolved.lock().unwrap().len() < n {
+        assert!(t0.elapsed() < Duration::from_secs(15), "in-flight request hung in failover");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    for w in waiters {
+        w.join().unwrap();
+    }
+    let resolved = resolved.lock().unwrap();
+    let (mut responses, mut failovers) = (0u64, 0u64);
+    for (i, frame) in resolved.iter() {
+        match frame {
+            Ok(Frame::Response { .. }) => responses += 1,
+            Ok(Frame::Rejected { retry_after_us, reason, .. }) => {
+                assert!(*retry_after_us >= 1, "failover hint must be actionable");
+                assert!(reason.contains("retry"), "{reason}");
+                failovers += 1;
+            }
+            other => panic!("connection {i}: {other:?}"),
+        }
+    }
+    assert_eq!(responses + failovers, n as u64, "every in-flight request resolved");
+    assert!(failovers > 0, "the dead backend's requests fail over");
+
+    let snap = router.metrics().snapshot();
+    assert_eq!(snap.failed_over_total(), failovers, "counters match the frames observed");
+    assert_eq!(snap.backends[victim].failed_over, failovers);
+    assert_eq!(snap.quarantines_total(), 1, "exactly the dead backend is quarantined");
+    assert_eq!(snap.backends[victim].quarantines, 1);
+    assert_eq!(snap.backends[survivor].quarantines, 0);
+    assert!(!router.backend_connected(victim));
+    assert!(router.backend_connected(survivor));
+
+    // a hint-honoring loadgen run completes against the degraded fleet
+    let opts = loadgen::LoadgenOptions {
+        scenarios: vec![Scenario::Closed],
+        loads: vec![],
+        connections: 2,
+        requests_per_level: 6,
+        burst: 4,
+        seed: 7,
+        retry: true,
+    };
+    let cases = loadgen::run(&router.local_addr().to_string(), &opts).unwrap();
+    assert_eq!(cases.len(), 1);
+    assert_eq!(cases[0].ok, cases[0].sent, "retrying loadgen completes every request");
+    assert_eq!(cases[0].errors, 0, "no protocol errors through failover");
+
+    router.shutdown();
+    nets[survivor].take().unwrap().shutdown();
+    for server in servers {
+        server.shutdown();
+    }
+}
+
+#[test]
+fn router_quarantines_dead_backend_and_recovers_on_probe() {
+    let mlp = QuantMlp::random_digits(103);
+    let model = MultiplierModel::new(MultiplierKind::DncOpt);
+    let (server_a, _handle_a, net_a, pixels) = start_stack("net-recover-a", &mlp, |cfg| {
+        cfg.batcher.max_wait_us = 1_000;
+    });
+    // reserve an endpoint that refuses connections until B binds it
+    let reserve = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let dead_addr = reserve.local_addr().unwrap().to_string();
+    drop(reserve);
+    let addrs = vec![net_a.local_addr().to_string(), dead_addr.clone()];
+    let router = RouterServer::bind(&router_cfg(addrs, 10)).unwrap();
+    assert!(router.backend_connected(0));
+    assert!(!router.backend_connected(1));
+
+    // the healthy half serves through the router meanwhile
+    let mut client = NetClient::connect(router.local_addr()).unwrap();
+    match client.infer(&pixels[0]).unwrap() {
+        Frame::Response { logits, .. } => assert_eq!(logits, mlp.forward(&pixels[0], &model)),
+        other => panic!("unexpected {other:?}"),
+    }
+    let snap = router.metrics().snapshot();
+    assert_eq!(snap.backends[1].quarantines, 1, "dead endpoint is quarantined");
+    assert_eq!(snap.backends[1].recoveries, 0);
+    assert_eq!(snap.backends[1].routed, 0, "nothing routed to a quarantined backend");
+
+    // stand a second backend up on the quarantined endpoint
+    let (store_b, _testset) = synth_artifacts("net-recover-b", &mlp, 8);
+    let mut cfg_b = Config::default();
+    cfg_b.artifacts_dir = store_b.root().display().to_string();
+    cfg_b.batcher.max_wait_us = 1_000;
+    let (server_b, handle_b) = CoordinatorServer::start(cfg_b).unwrap();
+    let net_b = NetServer::bind(handle_b.clone(), &dead_addr, 64).unwrap();
+
+    let t0 = Instant::now();
+    while router.metrics().snapshot().backends[1].recoveries < 1 {
+        assert!(t0.elapsed() < Duration::from_secs(10), "probe never recovered the backend");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(router.backend_connected(1));
+
+    // fresh connections (new conn keys) eventually hash onto the
+    // recovered backend, proving it is back in rotation
+    let mut hit = false;
+    for i in 0..32 {
+        let mut c = NetClient::connect(router.local_addr()).unwrap();
+        assert!(matches!(c.infer(&pixels[i % pixels.len()]).unwrap(), Frame::Response { .. }));
+        if router.metrics().snapshot().backends[1].routed > 0 {
+            hit = true;
+            break;
+        }
+    }
+    assert!(hit, "no connection ever hashed onto the recovered backend");
+    let snap = router.metrics().snapshot();
+    assert_eq!(snap.backends[1].quarantines, snap.backends[1].recoveries);
+    router.shutdown();
+    net_a.shutdown();
+    net_b.shutdown();
+    server_a.shutdown();
+    server_b.shutdown();
+}
+
+#[test]
+fn connection_affinity_is_bit_identical_across_shard_counts() {
+    // `batcher.affinity = connection` pins each connection's requests to
+    // one batcher lane. Like the request-affine default it must be
+    // invisible in the replies: byte-identical logits for shards in
+    // {1, 2, 4} under pipelined multi-connection traffic.
+    let mlp = QuantMlp::random_digits(97);
+    let model = MultiplierModel::new(MultiplierKind::DncOpt);
+    let per_conn = 8usize;
+    let mut baseline: Option<Vec<Vec<f32>>> = None;
+    for shards in [1usize, 2, 4] {
+        let (server, handle, net, pixels) = start_stack("net-affinity", &mlp, |cfg| {
+            cfg.batcher.shards = shards;
+            cfg.batcher.affinity = ShardAffinity::Connection;
+            cfg.batcher.max_wait_us = 1_000;
+        });
+        let mut all = Vec::new();
+        for conn in 0..3usize {
+            let client = NetClient::connect(net.local_addr()).unwrap();
+            let (mut tx, mut rx, _info) = client.split();
+            for i in 0..per_conn {
+                tx.send(&pixels[(conn * per_conn + i) % pixels.len()]).unwrap();
+            }
+            let mut got: Vec<Option<Vec<f32>>> = vec![None; per_conn];
+            for _ in 0..per_conn {
+                match rx.recv().unwrap() {
+                    Frame::Response { id, logits, .. } => {
+                        assert!(got[id as usize].is_none(), "duplicate reply for {id}");
+                        got[id as usize] = Some(logits.take());
+                    }
+                    other => panic!("unexpected {other:?} at {shards} shards"),
+                }
+            }
+            for (i, g) in got.into_iter().enumerate() {
+                let lg = g.expect("every request answered");
+                let want = mlp.forward(&pixels[(conn * per_conn + i) % pixels.len()], &model);
+                assert_eq!(lg, want, "shards {shards} conn {conn} request {i} diverged");
+                all.push(lg);
+            }
+        }
+        match &baseline {
+            None => baseline = Some(all),
+            Some(base) => {
+                assert_eq!(&all, base, "connection affinity diverged at {shards} shards");
+            }
+        }
+        let snap = handle.metrics().snapshot();
+        assert_eq!(snap.accepted, (3 * per_conn) as u64, "{shards} shards admission total");
+        assert_eq!(snap.rejected, 0, "{shards} shards spurious rejections");
+        net.shutdown();
+        server.shutdown();
+    }
 }

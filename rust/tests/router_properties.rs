@@ -1,0 +1,127 @@
+//! Seeded property tests for the router tier's pure dispatch pieces
+//! (`luna_cim::net::router`): consistent-hash balance within the
+//! documented imbalance bound, minimal-disruption remapping when a
+//! backend dies, the least-outstanding picker's quarantine discipline,
+//! and `repro lint` hot-path coverage of the router module itself.
+//! Everything here is deterministic (SplitMix64 seeds, and the ring
+//! itself is a pure function of its salt) — no sockets, no threads.
+
+use luna_cim::lint::lint_source;
+use luna_cim::net::{mix64, pick_least_outstanding, HashRing};
+use luna_cim::util::Rng;
+
+/// The `router.vnodes` default; the documented imbalance bound below is
+/// stated for this resolution.
+const VNODES: usize = 160;
+
+/// Half sequential connection ids (the realistic pattern: a per-router
+/// accept counter), half raw 64-bit values — the ring must balance
+/// both, since `dispatch` hashes whatever key the policy feeds it.
+fn test_keys(count: usize, seed: u64) -> Vec<u64> {
+    let mut keys: Vec<u64> = (0..(count / 2) as u64).collect();
+    let mut rng = Rng::seed_from_u64(seed);
+    while keys.len() < count {
+        keys.push(rng.next_u64());
+    }
+    keys
+}
+
+/// Documented bound (crate docs, `## Router tier`): at 160 vnodes every
+/// backend's share of a large key population stays within ±25% of the
+/// fair share. The ring is deterministic, so this either always holds
+/// or never does — the seeds only perturb the key population.
+#[test]
+fn hash_ring_balances_within_documented_bound() {
+    for n in [2usize, 3, 4, 8] {
+        let ring = HashRing::new(n, VNODES);
+        let keys = test_keys(40_000, 0xC0FF_EE00 + n as u64);
+        let mut share = vec![0usize; n];
+        for &k in &keys {
+            share[ring.pick_where(mix64(k), |_| true).unwrap()] += 1;
+        }
+        let mean = keys.len() as f64 / n as f64;
+        for (b, &s) in share.iter().enumerate() {
+            let rel = s as f64 / mean;
+            assert!((0.75..=1.25).contains(&rel), "backend {b}/{n}: {rel:.3}x mean ({share:?})");
+        }
+    }
+}
+
+/// Minimal disruption: marking one backend dead remaps *only* the keys
+/// it owned (~1/n of the population); every key owned by a live backend
+/// keeps its owner, so cache affinity survives a failover.
+#[test]
+fn removing_a_backend_remaps_only_its_own_keys() {
+    for n in [2usize, 3, 4, 8] {
+        let ring = HashRing::new(n, VNODES);
+        let keys = test_keys(20_000, 0xD15C_0000 + n as u64);
+        let dead = n - 1;
+        let mut moved = 0usize;
+        for &k in &keys {
+            let h = mix64(k);
+            let before = ring.pick_where(h, |_| true).unwrap();
+            let after = ring.pick_where(h, |b| b != dead).unwrap();
+            if before == dead {
+                moved += 1;
+            } else {
+                assert_eq!(after, before, "key moved off a live backend (n={n})");
+            }
+        }
+        let frac = moved as f64 / keys.len() as f64;
+        let ideal = 1.0 / n as f64;
+        assert!(frac >= 0.75 * ideal, "dead backend owned too few keys: {frac:.4} vs {ideal:.4}");
+        assert!(frac <= 1.25 * ideal, "dead backend owned too many keys: {frac:.4} vs {ideal:.4}");
+    }
+}
+
+/// The clockwise walk reaches the sole surviving backend from anywhere
+/// on the circle, and only an all-dead fleet yields `None`.
+#[test]
+fn ring_returns_none_only_when_every_backend_is_dead() {
+    let ring = HashRing::new(4, VNODES);
+    assert_eq!(ring.pick_where(mix64(7), |_| false), None);
+    for survivor in 0..4usize {
+        for k in 0..200u64 {
+            let pick = ring.pick_where(mix64(k), |b| b == survivor);
+            assert_eq!(pick, Some(survivor), "walk must reach the sole live backend");
+        }
+    }
+}
+
+/// The least-outstanding policy never picks a quarantined backend —
+/// whatever its load — and among live backends always picks a minimal
+/// one. 2000 random fleets of 1..=8 backends.
+#[test]
+fn least_outstanding_never_picks_a_quarantined_backend() {
+    let mut rng = Rng::seed_from_u64(31);
+    for _ in 0..2_000 {
+        let n = (1 + rng.gen_below(8)) as usize;
+        let loads: Vec<u64> = (0..n).map(|_| rng.gen_below(50)).collect();
+        let alive: Vec<bool> = (0..n).map(|_| rng.gen_bool(0.7)).collect();
+        match pick_least_outstanding(&loads, |b| alive[b]) {
+            Some(b) => {
+                assert!(alive[b], "picked a quarantined backend");
+                let min = (0..n).filter(|&i| alive[i]).map(|i| loads[i]).min().unwrap();
+                assert_eq!(loads[b], min, "picked a non-minimal live backend");
+            }
+            None => assert!(!alive.contains(&true), "returned None with a live backend"),
+        }
+    }
+}
+
+/// `repro lint` polices hot-path modules by path, and the router is one
+/// of them: seeded violations under its label must be reported, while
+/// the same source under a cold-module label stays clean.
+#[test]
+fn repro_lint_polices_the_router_as_a_hot_path() {
+    let bad_alloc = "fn f() { let v = vec![0u8; 4]; let _ = v; }\n";
+    let hits = lint_source("src/net/router.rs", bad_alloc);
+    assert!(hits.iter().any(|v| v.rule == "no-bare-alloc"), "router not policed: {hits:?}");
+
+    let bad_mpsc = "use std::sync::mpsc;\n";
+    let hits = lint_source("src/net/router.rs", bad_mpsc);
+    assert!(hits.iter().any(|v| v.rule == "no-mpsc"), "router not policed for mpsc: {hits:?}");
+
+    assert!(lint_source("src/report.rs", bad_alloc).is_empty());
+    assert!(lint_source("src/report.rs", bad_mpsc).is_empty());
+}
