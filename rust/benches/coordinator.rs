@@ -95,6 +95,8 @@ fn main() {
                 burst: 16,
                 seed: 11,
                 retry: false,
+                models: vec![],
+                mix: loadgen::ModelMix::Zipf,
             };
             let results =
                 loadgen::run(&net.local_addr().to_string(), &opts).expect("shard sweep case");

@@ -6,18 +6,28 @@
 //! artifacts` — and the demo asserts the router is *transparent*: the
 //! logits served through it are bit-identical with a direct in-process
 //! `submit` against the same model, and with the functional model.
+//! Both backends also host a second tenant (`study`), so model-tagged
+//! requests through the router exercise the compiled-plan cache; their
+//! replies are asserted bit-identical with the second functional model.
 
 use luna_cim::config::{Config, DispatchPolicy, RouterConfig};
 use luna_cim::coordinator::CoordinatorServer;
 use luna_cim::multiplier::{MultiplierKind, MultiplierModel};
-use luna_cim::net::{Frame, NetClient, NetServer, RouterServer};
+use luna_cim::net::{Frame, ModelId, NetClient, NetServer, RouterServer};
 use luna_cim::nn::{DigitsDataset, QuantMlp};
 use luna_cim::runtime::ArtifactStore;
 
 fn main() -> anyhow::Result<()> {
     let mlp = QuantMlp::random_digits(7);
+    let mlp_study = QuantMlp::random_digits(8);
     let testset = DigitsDataset::generate(4, 99);
     let model = MultiplierModel::new(MultiplierKind::DncOpt);
+
+    // the second tenant's artifacts, shared by both backends
+    let study_dir = luna_cim::util::test_dir("e2e-router-study");
+    let study_store = ArtifactStore::new(&study_dir);
+    study_store.write_synthetic(&mlp_study, &testset, 8)?;
+    let study = ModelId::new("study")?;
 
     // two independent backend stacks, each on its own loopback port —
     // stand-ins for two `repro serve --listen` processes
@@ -31,6 +41,8 @@ fn main() -> anyhow::Result<()> {
         let mut cfg = Config::default();
         cfg.artifacts_dir = store.root().display().to_string();
         cfg.batcher.max_wait_us = 1_000;
+        cfg.serving.models =
+            vec![("study".to_string(), study_store.root().display().to_string())];
         let (server, handle) = CoordinatorServer::start(cfg)?;
         let net = NetServer::bind(handle.clone(), "127.0.0.1:0", 64)?;
         println!("backend {tag} listening on {}", net.local_addr());
@@ -54,6 +66,7 @@ fn main() -> anyhow::Result<()> {
     let mut client = NetClient::connect(router.local_addr())?;
     let info = client.info().clone();
     println!("fleet info: in={} out={} max_batch={}", info.in_dim, info.out_dim, info.max_batch);
+    anyhow::ensure!(info.models == vec!["study".to_string()], "fleet-agreed tenant list");
 
     let mut checked = 0usize;
     for sample in testset.samples.iter().take(16) {
@@ -65,9 +78,16 @@ fn main() -> anyhow::Result<()> {
         assert_eq!(logits, direct.logits, "router must be bit-transparent");
         assert_eq!(logits, mlp.forward(&sample.pixels, &model));
         assert_eq!(label, direct.label);
+        // the second tenant through the same router connection: served
+        // from the plan cache, bit-identical with its functional model
+        let tagged = match client.infer_model(study, &sample.pixels)? {
+            Frame::Response { logits, .. } => logits.take(),
+            other => anyhow::bail!("unexpected study reply: {other:?}"),
+        };
+        assert_eq!(tagged, mlp_study.forward(&sample.pixels, &model), "study tenant diverged");
         checked += 1;
     }
-    println!("{checked}/16 routed replies bit-identical with direct submit");
+    println!("{checked}/16 routed replies bit-identical with direct submit (both tenants)");
     print!("{}", router.metrics().snapshot().render());
 
     router.shutdown();

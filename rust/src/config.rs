@@ -76,6 +76,38 @@ pub struct Config {
     pub net: NetConfig,
     pub loadgen: LoadgenConfig,
     pub router: RouterConfig,
+    pub serving: ServingConfig,
+    pub plan_cache: PlanCacheConfig,
+}
+
+/// Multi-tenant serving: which model artifacts one server hosts beside
+/// the default model (see [`crate::coordinator::server`]).
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct ServingConfig {
+    /// Extra models as `(id, artifacts_dir)` pairs. Config/CLI syntax:
+    /// `serving.models ida=dirA,idb=dirB`. Empty (default) = only the
+    /// default model (`artifacts_dir`). Every model's geometry (dims,
+    /// lowered batch) must match the default model's; ids must be
+    /// unique, non-empty and at most
+    /// [`crate::net::protocol::MAX_MODEL_ID`] bytes. More models can be
+    /// hot-loaded at runtime via the `LoadModel` admin frame.
+    pub models: Vec<(String, String)>,
+}
+
+/// Compiled-plan cache sizing (see [`crate::engine::PlanCache`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PlanCacheConfig {
+    /// Byte budget across all cached compiled plans (weights + LUT-GEMM
+    /// plan heap bytes). Least-recently-used models are evicted (and
+    /// recompiled on their next request) once the budget is exceeded;
+    /// a single over-budget model is served uncached.
+    pub max_bytes: usize,
+}
+
+impl Default for PlanCacheConfig {
+    fn default() -> Self {
+        PlanCacheConfig { max_bytes: 64 << 20 }
+    }
 }
 
 /// How requests map onto batcher shards (see
@@ -308,6 +340,8 @@ impl Default for Config {
             net: NetConfig::default(),
             loadgen: LoadgenConfig::default(),
             router: RouterConfig::default(),
+            serving: ServingConfig::default(),
+            plan_cache: PlanCacheConfig::default(),
         }
     }
 }
@@ -389,6 +423,8 @@ const KNOWN_KEYS: &[&str] = &[
     "router.max_connections",
     "router.probe_ms",
     "router.max_backoff_ms",
+    "serving.models",
+    "plan_cache.max_bytes",
 ];
 
 impl Config {
@@ -489,6 +525,19 @@ impl Config {
         if m.get_opt("router.max_backoff_ms").is_some() {
             cfg.router.max_backoff_ms = m.get_u64("router.max_backoff_ms")?;
         }
+        if let Some(v) = m.get_opt("serving.models") {
+            let mut models = Vec::new();
+            for pair in v.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+                let Some((id, dir)) = pair.split_once('=') else {
+                    bail!("serving.models entry `{pair}` is not of the form id=dir");
+                };
+                models.push((id.trim().to_string(), dir.trim().to_string()));
+            }
+            cfg.serving.models = models;
+        }
+        if m.get_opt("plan_cache.max_bytes").is_some() {
+            cfg.plan_cache.max_bytes = m.get_usize("plan_cache.max_bytes")?;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -540,6 +589,13 @@ impl Config {
         m.set("router.max_connections", self.router.max_connections);
         m.set("router.probe_ms", self.router.probe_ms);
         m.set("router.max_backoff_ms", self.router.max_backoff_ms);
+        // absent when no extra models are configured (same empty-value rule)
+        if !self.serving.models.is_empty() {
+            let pairs: Vec<String> =
+                self.serving.models.iter().map(|(id, dir)| format!("{id}={dir}")).collect();
+            m.set("serving.models", pairs.join(","));
+        }
+        m.set("plan_cache.max_bytes", self.plan_cache.max_bytes);
         m.render()
     }
 
@@ -596,6 +652,18 @@ impl Config {
             self.router.max_backoff_ms >= self.router.probe_ms,
             "router.max_backoff_ms must be >= router.probe_ms"
         );
+        let mut seen = std::collections::HashSet::new();
+        for (id, dir) in &self.serving.models {
+            anyhow::ensure!(!id.is_empty(), "serving.models ids must be non-empty");
+            anyhow::ensure!(
+                id.len() <= crate::net::protocol::MAX_MODEL_ID,
+                "serving.models id `{id}` exceeds {} bytes",
+                crate::net::protocol::MAX_MODEL_ID
+            );
+            anyhow::ensure!(seen.insert(id.as_str()), "serving.models id `{id}` is duplicated");
+            anyhow::ensure!(!dir.is_empty(), "serving.models dir for `{id}` must be non-empty");
+        }
+        anyhow::ensure!(self.plan_cache.max_bytes >= 1, "plan_cache.max_bytes must be >= 1");
         Ok(())
     }
 }
@@ -772,6 +840,35 @@ mod tests {
         let mut wide = Config::default();
         wide.router.backends = (0..65).map(|i| format!("127.0.0.1:{}", 7000 + i)).collect();
         assert!(wide.validate().is_err(), "tried mask is 64-bit");
+    }
+
+    #[test]
+    fn serving_keys_parse_roundtrip_and_validate() {
+        let text = "serving.models mnist=artifacts/a, study=artifacts/b\n\
+                    plan_cache.max_bytes 1048576\n";
+        let cfg = Config::from_text(text).unwrap();
+        assert_eq!(
+            cfg.serving.models,
+            vec![
+                ("mnist".to_string(), "artifacts/a".to_string()),
+                ("study".to_string(), "artifacts/b".to_string()),
+            ]
+        );
+        assert_eq!(cfg.plan_cache.max_bytes, 1 << 20);
+        let back = Config::from_text(&cfg.to_text()).unwrap();
+        assert_eq!(back, cfg);
+        // no extra models = key absent (same empty-value rule as listen)
+        let off = Config::default();
+        assert!(!off.to_text().contains("serving.models"));
+        assert_eq!(Config::from_text(&off.to_text()).unwrap(), off);
+        assert_eq!(off.plan_cache.max_bytes, 64 << 20);
+        // malformed pair, duplicate id, empty dir, oversize id, zero budget
+        assert!(Config::from_text("serving.models mnist\n").is_err());
+        assert!(Config::from_text("serving.models a=x,a=y\n").is_err());
+        assert!(Config::from_text("serving.models a=\n").is_err());
+        let long = format!("serving.models {}=x\n", "m".repeat(64));
+        assert!(Config::from_text(&long).is_err());
+        assert!(Config::from_text("plan_cache.max_bytes 0\n").is_err());
     }
 
     #[test]

@@ -10,6 +10,7 @@
 
 use super::tiler::ScheduleCost;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Log-spaced latency histogram (µs), 1 µs .. ~16 s.
@@ -67,6 +68,79 @@ impl LatencyHistogram {
     }
 }
 
+/// Compiled-plan cache counters, shared between the engine-level
+/// [`crate::engine::PlanCache`] (which records) and the serving metrics
+/// (which render). Same Relaxed monitoring-only audit as the module
+/// header; `resident`/`resident_bytes` are gauges, the rest monotonic.
+#[derive(Debug, Default)]
+pub struct PlanCacheCounters {
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+    compiles: AtomicU64,
+    /// Gauge: models currently resident in the cache.
+    resident: AtomicU64,
+    /// Gauge: plan + model bytes currently resident.
+    resident_bytes: AtomicU64,
+    /// Per-compile wall time (µs).
+    pub compile: LatencyHistogram,
+    /// Per-request stall waiting on another thread's in-flight compile
+    /// of the same model (µs) — the single-flight queueing cost.
+    pub stall: LatencyHistogram,
+}
+
+impl PlanCacheCounters {
+    /// The request found a ready compiled plan (the zero-alloc path).
+    pub fn record_hit(&self) {
+        self.hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// The request missed: it either compiled the plan or waited on the
+    /// thread that is compiling it.
+    pub fn record_miss(&self) {
+        self.misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// An entry was evicted to make room under the byte budget.
+    pub fn record_eviction(&self) {
+        self.evictions.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One cold compile completed (single-flight: concurrent misses on
+    /// one model record exactly one compile).
+    pub fn record_compile_us(&self, us: u64) {
+        self.compiles.fetch_add(1, Ordering::Relaxed);
+        self.compile.record_us(us.max(1));
+    }
+
+    /// One request stalled `us` µs behind an in-flight compile.
+    pub fn record_stall_us(&self, us: u64) {
+        self.stall.record_us(us.max(1));
+    }
+
+    /// Update the residency gauges after an insert/evict/retire.
+    pub fn set_resident(&self, models: u64, bytes: u64) {
+        self.resident.store(models, Ordering::Relaxed);
+        self.resident_bytes.store(bytes, Ordering::Relaxed);
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    pub fn compiles(&self) -> u64 {
+        self.compiles.load(Ordering::Relaxed)
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+}
+
 /// Aggregate serving metrics.
 #[derive(Debug, Default)]
 pub struct Metrics {
@@ -99,6 +173,9 @@ pub struct Metrics {
     sim_programs: AtomicU64,
     /// Programs avoided by weight-stationary reuse.
     sim_stationary_hits: AtomicU64,
+    /// Compiled-plan cache counters, shared with the engine's
+    /// `PlanCache` (the coordinator hands it a clone of this `Arc`).
+    pub plan_cache: Arc<PlanCacheCounters>,
     started: Option<Instant>,
 }
 
@@ -184,6 +261,14 @@ impl Metrics {
             host_gemm_mean_us: self.host_gemm.mean_us(),
             host_gemm_p50_us: self.host_gemm.quantile_us(0.50),
             host_gemm_p99_us: self.host_gemm.quantile_us(0.99),
+            plan_hits: self.plan_cache.hits(),
+            plan_misses: self.plan_cache.misses(),
+            plan_evictions: self.plan_cache.evictions.load(Ordering::Relaxed),
+            plan_compiles: self.plan_cache.compiles(),
+            plan_resident: self.plan_cache.resident.load(Ordering::Relaxed),
+            plan_resident_bytes: self.plan_cache.resident_bytes.load(Ordering::Relaxed),
+            plan_compile_p99_us: self.plan_cache.compile.quantile_us(0.99),
+            plan_stall_p99_us: self.plan_cache.stall.quantile_us(0.99),
         }
     }
 }
@@ -220,6 +305,20 @@ pub struct MetricsSnapshot {
     pub host_gemm_mean_us: f64,
     pub host_gemm_p50_us: u64,
     pub host_gemm_p99_us: u64,
+    /// Compiled-plan cache: lookups that found a ready plan.
+    pub plan_hits: u64,
+    /// Lookups that compiled, or stalled behind an in-flight compile.
+    pub plan_misses: u64,
+    pub plan_evictions: u64,
+    /// Cold compiles actually run (single-flight: ≤ one per miss burst).
+    pub plan_compiles: u64,
+    /// Gauge: models resident at snapshot time.
+    pub plan_resident: u64,
+    /// Gauge: plan + model bytes resident at snapshot time.
+    pub plan_resident_bytes: u64,
+    pub plan_compile_p99_us: u64,
+    /// p99 time a request spent stalled behind another thread's compile.
+    pub plan_stall_p99_us: u64,
     /// Buffer-pool counters at snapshot time (process-wide — the pool
     /// is shared by every server in the process; see
     /// [`crate::util::pool`]). A healthy steady state shows the hit
@@ -246,6 +345,19 @@ impl MetricsSnapshot {
             0.0
         } else {
             self.sim_stationary_hits as f64 / total as f64
+        }
+    }
+
+    /// Fraction of plan-cache lookups that found a ready plan (0.0
+    /// before any lookup). Single-model serving converges to ~1.0 after
+    /// the startup compile; multi-tenant serving under eviction pressure
+    /// is exactly what this measures.
+    pub fn plan_hit_rate(&self) -> f64 {
+        let lookups = self.plan_hits + self.plan_misses;
+        if lookups == 0 {
+            0.0
+        } else {
+            self.plan_hits as f64 / lookups as f64
         }
     }
 
@@ -279,6 +391,8 @@ impl MetricsSnapshot {
              throughput {:.0} req/s\n\
              host gemm mean {:.0} us p50 {} us p99 {} us\n\
              pool hits {} misses {} recycled {} (hit rate {:.3})\n\
+             plan cache hits {} misses {} (hit rate {:.3}) evictions {} compiles {} | \
+             resident {} ({} KiB) | compile p99 {} us stall p99 {} us\n\
              sim energy {:.2} nJ ({:.1} fJ/req) | \
              sim latency p50 {} ns p99 {} ns | \
              programs {} stationary hits {} (hit-rate {:.2})\n",
@@ -303,6 +417,15 @@ impl MetricsSnapshot {
             self.pool.misses,
             self.pool.recycled,
             self.pool.hit_rate(),
+            self.plan_hits,
+            self.plan_misses,
+            self.plan_hit_rate(),
+            self.plan_evictions,
+            self.plan_compiles,
+            self.plan_resident,
+            self.plan_resident_bytes / 1024,
+            self.plan_compile_p99_us,
+            self.plan_stall_p99_us,
             self.sim_energy_fj / 1e6,
             self.sim_energy_per_request_fj(),
             self.sim_p50_latency_ns,
@@ -619,6 +742,37 @@ mod tests {
             report.contains("backend 1 127.0.0.1:7072 routed 1 rejected 1 failed-over 1"),
             "{report}"
         );
+    }
+
+    #[test]
+    fn plan_cache_counters_aggregate_and_render() {
+        let m = Metrics::new();
+        for _ in 0..3 {
+            m.plan_cache.record_hit();
+        }
+        m.plan_cache.record_miss();
+        m.plan_cache.record_compile_us(1800);
+        m.plan_cache.record_stall_us(250);
+        m.plan_cache.record_eviction();
+        m.plan_cache.set_resident(2, 64 * 1024);
+        let snap = m.snapshot();
+        assert_eq!(snap.plan_hits, 3);
+        assert_eq!(snap.plan_misses, 1);
+        assert_eq!(snap.plan_compiles, 1);
+        assert_eq!(snap.plan_evictions, 1);
+        assert_eq!(snap.plan_resident, 2);
+        assert_eq!(snap.plan_resident_bytes, 64 * 1024);
+        assert!((snap.plan_hit_rate() - 0.75).abs() < 1e-12);
+        assert!(snap.plan_compile_p99_us >= 1800);
+        assert!(snap.plan_stall_p99_us >= 250);
+        let report = snap.render();
+        assert!(report.contains("plan cache hits 3 misses 1 (hit rate 0.750)"), "{report}");
+        assert!(report.contains("resident 2 (64 KiB)"), "{report}");
+    }
+
+    #[test]
+    fn plan_hit_rate_is_zero_without_lookups() {
+        assert_eq!(Metrics::new().snapshot().plan_hit_rate(), 0.0);
     }
 
     #[test]

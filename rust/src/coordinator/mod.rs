@@ -27,8 +27,12 @@
 //! * [`state`] — bank programming state (which weight each unit holds);
 //! * [`metrics`] — latency/throughput/energy/failure counters, plus the
 //!   per-backend routed/failed-over/quarantine counters the front-tier
-//!   router ([`crate::net::router`]) reports;
-//! * [`server`] — the std-thread front-end tying it all together.
+//!   router ([`crate::net::router`]) reports, and the plan-cache
+//!   hit/miss/eviction/compile gauges ([`metrics::PlanCacheCounters`]);
+//! * [`server`] — the std-thread front-end tying it all together:
+//!   multi-tenant model registry, per-model batching lanes, the shared
+//!   compiled-plan cache ([`crate::engine::PlanCache`]) and hot
+//!   load/retire of models under live traffic.
 
 pub mod admission;
 pub mod batcher;
@@ -47,7 +51,9 @@ pub use metrics::{
 };
 pub use request::{InferenceRequest, InferenceResponse, RequestId};
 pub use router::Router;
-pub use server::{Backpressure, Completion, CoordinatorServer, ServerHandle};
+pub use server::{
+    Backpressure, Completion, CoordinatorServer, ModelStats, ModelUnavailable, ServerHandle,
+};
 pub use state::BankState;
 pub use tiler::{LayerSchedule, ModelSchedule, ScheduleCost, Tiler, UnitCosts};
 pub use worker::{BatchJob, ReplyTicket, ReplyTo, WorkerPool, WorkerReply};

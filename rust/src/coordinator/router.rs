@@ -91,6 +91,12 @@ impl Router {
         self.in_flight[worker].load(Ordering::Relaxed)
     }
 
+    /// Broadcast a model retire to every worker in the pool (each drops
+    /// its per-model executor — see [`WorkerPool::retire`]).
+    pub fn retire(&self, model: crate::net::protocol::ModelId) {
+        self.pool.retire(model);
+    }
+
     pub fn shutdown(self) {
         self.pool.shutdown();
     }
@@ -127,12 +133,12 @@ mod tests {
         for i in 0..6 {
             let (tx, rx) = crate::util::oneshot::channel();
             let inputs = vec![i as f32 / 8.0; 16];
-            let job = BatchJob {
-                inputs: inputs.clone().into(),
-                batch: 1,
-                dim: 16,
-                reply: crate::coordinator::worker::ReplyTo::Oneshot(tx),
-            };
+            let job = BatchJob::new(
+                inputs.clone(),
+                1,
+                16,
+                crate::coordinator::worker::ReplyTo::Oneshot(tx),
+            );
             let guard = router.dispatch(job).unwrap();
             hit[guard.worker] = true;
             let out = rx.recv().unwrap().unwrap();

@@ -14,10 +14,24 @@
 //! pool** receives worker replies and fans them out (a thread-per-batch
 //! design measured ~25% slower at 4 workers — EXPERIMENTS.md §Perf).
 //!
+//! **Multi-tenant serving** (`serving.models`): one coordinator hosts
+//! many model artifacts. A model **registry** maps ids to artifact
+//! directories; compiled plans live in a byte-budgeted, single-flight
+//! [`PlanCache`] shared by every submit path, so a model's plan compiles
+//! once no matter how many shards, connections or workers touch it.
+//! Requests name their model ([`ServerHandle::submit_model`]); each
+//! batcher shard keeps an independent **lane per model**, so batches
+//! form per model within a shard and never mix tenants. Hot swap:
+//! [`ServerHandle::load_model`] registers a new tenant at runtime;
+//! [`ServerHandle::retire_model`] flips the model's retiring flag (new
+//! requests get a structured [`ModelUnavailable`]), drains its in-flight
+//! requests, then drops its lanes, cache entry and per-worker executors
+//! — no connection is dropped and every in-flight request resolves.
+//!
 //! **Sharded batching** (`batcher.shards`, default 1): requests dispatch
-//! onto independent batcher lanes — each shard owns its own batcher
-//! mutex and waiter map, so connections landing on different shards
-//! never contend on one lock. The lane is chosen by `batcher.affinity`:
+//! onto independent batcher lanes — each shard owns its own lane map
+//! and waiter map, so connections landing on different shards never
+//! contend on one lock. The lane is chosen by `batcher.affinity`:
 //! `request` (default) round-robins on the request id, `connection`
 //! pins every request from one connection to `conn % shards` (the TCP
 //! front-end passes its connection id through
@@ -32,9 +46,10 @@
 //! **Zero-allocation hot path**: pixels, flat batch inputs, logits and
 //! reply frames all live in pooled buffers ([`crate::util::pool`]),
 //! worker jobs and replies travel over the allocation-free
-//! [`crate::util::queue`], and the steady-state coordinator-side
-//! schedule cost is memoized per batch size — after warmup a request
-//! performs zero heap allocations from socket to reply
+//! [`crate::util::queue`], a plan-cache hit is one lock + one lookup +
+//! one `Arc` clone, and the steady-state coordinator-side schedule cost
+//! is memoized per (model, batch size) — after warmup a request performs
+//! zero heap allocations from socket to reply
 //! (`tests/hot_path_allocs.rs`; lifecycle diagram in the crate docs'
 //! `## Serving hot path` section).
 //!
@@ -49,9 +64,9 @@ use super::request::{InferenceRequest, InferenceResponse, RequestId};
 use super::router::{InFlightGuard, Router};
 use super::tiler::{ScheduleCost, Tiler, UnitCosts};
 use super::worker::{BatchJob, ReplyTicket, ReplyTo, WorkerPool, WorkerReply};
-use crate::config::{BackendKind, Config, ShardAffinity};
-use crate::engine::{BackendSpec, BatchOutput};
-use crate::net::protocol::{Frame, WireCost};
+use crate::config::{BackendKind, BatcherConfig, Config, ShardAffinity};
+use crate::engine::{BackendSpec, BatchOutput, ModelEntry, PlanCache};
+use crate::net::protocol::{Frame, ModelId, WireCost};
 use crate::nn::QuantMlp;
 use crate::runtime::ArtifactStore;
 use crate::util::{oneshot, queue, PooledVec};
@@ -63,7 +78,7 @@ use std::collections::HashMap;
 // atomics are id counters and stop flags with no cross-thread publication
 // role. The model-checked admission bound lives in [`AdmissionGate`].
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::Duration;
 
 /// 429-style admission rejection with a structured retry hint.
@@ -89,6 +104,59 @@ impl std::fmt::Display for Backpressure {
 }
 
 impl std::error::Error for Backpressure {}
+
+/// Structured "this model cannot take requests" rejection: the id is
+/// unknown, or the model is mid-[`ServerHandle::retire_model`]. The wire
+/// front-end maps `retiring` onto a retryable `Rejected` frame (the
+/// model may return after a swap) and an unknown id onto a terminal
+/// `Error`. Recover with `err.downcast_ref::<ModelUnavailable>()`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ModelUnavailable {
+    pub model: ModelId,
+    /// True when the model is draining for retirement (transient);
+    /// false when the id is simply not registered.
+    pub retiring: bool,
+}
+
+impl std::fmt::Display for ModelUnavailable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.retiring {
+            write!(f, "model {} is retiring", self.model)
+        } else {
+            write!(f, "model {} is not being served", self.model)
+        }
+    }
+}
+
+impl std::error::Error for ModelUnavailable {}
+
+/// Per-model serving counters ([`ServerHandle::model_stats`]): the
+/// per-tenant goodput and weight-stationarity numbers the loadgen
+/// reports per model.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ModelStats {
+    /// Requests served to completion.
+    pub requests: u64,
+    /// Currently outstanding (admitted, not yet resolved).
+    pub inflight: u64,
+    /// Simulated LUT programming events attributed to this model.
+    pub programs: u64,
+    /// Simulated weight-stationary hits attributed to this model.
+    pub stationary_hits: u64,
+}
+
+impl ModelStats {
+    /// Fraction of this model's scheduled weight placements that hit an
+    /// already-programmed unit (0.0 when nothing has been priced).
+    pub fn stationary_hit_rate(&self) -> f64 {
+        let total = self.programs + self.stationary_hits;
+        if total == 0 {
+            0.0
+        } else {
+            self.stationary_hits as f64 / total as f64
+        }
+    }
+}
 
 /// How a submission receives its reply — resolved exactly once, from a
 /// coordinator thread.
@@ -123,12 +191,86 @@ impl Completion {
     }
 }
 
-/// One independent batcher lane (see the module docs on sharding).
+/// One registered tenant: where its artifacts live plus its lifecycle
+/// and per-tenant counters. All atomics are Relaxed: `retiring` and
+/// `inflight` get their ordering from the registry `RwLock` (see
+/// [`ServerHandle::retire_model`]); the stats are monitoring counters.
+struct ModelSlot {
+    dir: String,
+    retiring: AtomicBool,
+    /// Admitted-but-unresolved requests for this model. Incremented
+    /// under the registry read lock *before* the retiring check;
+    /// decremented when the request resolves (reply, failure, or
+    /// admission rollback) — the count [`ServerHandle::retire_model`]
+    /// drains to zero.
+    inflight: AtomicU64,
+    requests: AtomicU64,
+    programs: AtomicU64,
+    stationary_hits: AtomicU64,
+}
+
+impl ModelSlot {
+    fn new(dir: String) -> Self {
+        ModelSlot {
+            dir,
+            retiring: AtomicBool::new(false),
+            inflight: AtomicU64::new(0),
+            requests: AtomicU64::new(0),
+            programs: AtomicU64::new(0),
+            stationary_hits: AtomicU64::new(0),
+        }
+    }
+
+    fn stats(&self) -> ModelStats {
+        ModelStats {
+            requests: self.requests.load(Ordering::Relaxed),
+            inflight: self.inflight.load(Ordering::Relaxed),
+            programs: self.programs.load(Ordering::Relaxed),
+            stationary_hits: self.stationary_hits.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Drops a model's in-flight reservation unless disarmed — keeps
+/// `submit_inner`'s error returns from leaking the count the retire
+/// drain waits on. Disarmed once the request is owned by the batch
+/// lifecycle (complete/fail paths decrement per request).
+struct InflightToken {
+    slot: Option<Arc<ModelSlot>>,
+}
+
+impl InflightToken {
+    fn disarm(&mut self) {
+        self.slot = None;
+    }
+}
+
+impl Drop for InflightToken {
+    fn drop(&mut self) {
+        if let Some(slot) = self.slot.take() {
+            slot.inflight.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// One model's batching lane within a shard: its batcher plus the
+/// shared compiled entry and registry slot every batch dispatched from
+/// this lane rides with.
+struct Lane {
+    batcher: Batcher,
+    entry: Arc<ModelEntry>,
+    slot: Arc<ModelSlot>,
+}
+
+/// One independent batcher shard (see the module docs on sharding).
 struct Shard {
-    batcher: Mutex<Batcher>,
+    /// Per-model batching lanes: batches form per model within a shard
+    /// and never mix tenants. Lanes appear on a model's first request
+    /// through this shard and leave at retire.
+    lanes: Mutex<HashMap<ModelId, Lane>>,
     /// Completions for requests whose `id % shards` routes here. Insert
     /// and removal stay on this shard's lock; the global outstanding
-    /// count lives in [`Shared::outstanding`].
+    /// count lives in [`Shared::admission`].
     waiters: Mutex<HashMap<RequestId, Completion>>,
     /// This shard's worker-rotation turn counter (`shard + turn·shards`
     /// seeds the router so distinct shards prefer disjoint workers).
@@ -151,6 +293,16 @@ struct BatchCtx {
     /// Coordinator-side pricing (None when the calibrated backend prices
     /// the batch itself; the reply's cost then takes over).
     sched_cost: Option<ScheduleCost>,
+    /// The tenant the batch belongs to (per-model stats + drain count).
+    slot: Arc<ModelSlot>,
+}
+
+/// The coordinator-side pricing tiler plus which model last ran on its
+/// fabric (multi-tenant schedules interleave on the one pricing fabric;
+/// see [`coordinator_cost`]).
+struct PricingState {
+    tiler: Tiler,
+    last: Option<ModelId>,
 }
 
 struct Shared {
@@ -169,21 +321,24 @@ struct Shared {
     /// themselves; `None` for `backend calibrated`, where each worker's
     /// own fabric replay prices the batch and the cost arrives on the
     /// reply.
-    tiler: Option<Mutex<Tiler>>,
-    /// Steady-state schedule memo per batch size. The tiler maps
-    /// elements onto units round-robin, so the fabric state after any
-    /// full schedule of this model is a fixed function of the model —
-    /// every schedule after the first prices deterministically per
-    /// batch size. Cache those warm costs and skip the O(model)
-    /// scheduling walk (and its allocations) per batch.
-    sched_cache: Mutex<HashMap<usize, ScheduleCost>>,
-    /// Whether the coordinator tiler has run at least one schedule (its
-    /// state is then the deterministic post-model state — see
-    /// [`Shared::sched_cache`]).
-    sched_warm: AtomicBool,
+    pricing: Option<Mutex<PricingState>>,
+    /// Steady-state schedule memo per (model, batch size) — see
+    /// [`coordinator_cost`] for what "steady state" means with tenants
+    /// interleaving on one pricing fabric.
+    sched_cache: Mutex<HashMap<(ModelId, usize), ScheduleCost>>,
     router: Router,
     metrics: Arc<Metrics>,
-    mlp: QuantMlp,
+    /// Model id → registered tenant. Read-locked on every submit (the
+    /// hot path takes no write lock); write-locked only by
+    /// load/retire admin operations.
+    registry: RwLock<HashMap<ModelId, Arc<ModelSlot>>>,
+    /// Byte-budgeted single-flight cache of compiled plans, shared by
+    /// every submit path (see [`crate::engine::plan_cache`]).
+    plan_cache: Arc<PlanCache>,
+    /// Lane construction recipe (new model lanes appear at runtime).
+    batcher_cfg: BatcherConfig,
+    /// `gemm.threads`, forwarded into every lazy plan compile.
+    gemm_threads: usize,
     /// Shard-selection rule (`batcher.affinity`; see the module docs).
     affinity: ShardAffinity,
     in_dim: usize,
@@ -212,6 +367,30 @@ impl Shared {
             _ => self.shard_index(id),
         }
     }
+
+    /// Load + quantize + plan-compile `model` from `dir`, validating its
+    /// manifest against the serving geometry (the cold half of
+    /// [`PlanCache::get_or_compile`]).
+    fn compile_model(&self, model: ModelId, dir: &str) -> Result<ModelEntry> {
+        let store = ArtifactStore::new(dir);
+        let meta =
+            store.manifest().with_context(|| format!("model {model}: artifacts at {dir}"))?;
+        ensure!(
+            meta.batch == self.max_batch,
+            "model {model}: lowered batch {} != serving max_batch {}",
+            meta.batch,
+            self.max_batch
+        );
+        let (first, last) = (*meta.dims.first().unwrap(), *meta.dims.last().unwrap());
+        ensure!(
+            first == self.in_dim && last == self.out_dim,
+            "model {model}: dims {first}→{last} != serving {}→{}",
+            self.in_dim,
+            self.out_dim
+        );
+        let mlp = store.load_mlp().with_context(|| format!("model {model}: loading weights"))?;
+        Ok(ModelEntry::compile(model, mlp, self.gemm_threads))
+    }
 }
 
 /// The serving coordinator. Construct with [`CoordinatorServer::start`],
@@ -234,6 +413,11 @@ impl CoordinatorServer {
     /// deadline flusher. Requires `make artifacts` to have run.
     pub fn start(cfg: Config) -> Result<(Self, ServerHandle)> {
         cfg.validate()?;
+        ensure!(
+            cfg.backend != BackendKind::Pjrt || cfg.serving.models.is_empty(),
+            "multi-tenant serving (serving.models) needs backend native or calibrated — \
+             the PJRT executable serves a single model"
+        );
         let store = ArtifactStore::new(&cfg.artifacts_dir);
         let meta = store.manifest()?;
         ensure!(
@@ -246,11 +430,14 @@ impl CoordinatorServer {
         let lib = crate::cells::tsmc65_library();
         // Coordinator-side pricing tiler for backends that don't model
         // cost themselves. `calibrated` moves pricing into the workers
-        // (one weight-stationary fabric per worker), so the coordinator
-        // keeps none.
-        let tiler = match cfg.backend {
+        // (one weight-stationary fabric per worker per model), so the
+        // coordinator keeps none.
+        let pricing = match cfg.backend {
             BackendKind::Calibrated => None,
-            _ => Some(Mutex::new(Tiler::from_config(&cfg, &lib))),
+            _ => Some(Mutex::new(PricingState {
+                tiler: Tiler::from_config(&cfg, &lib),
+                last: None,
+            })),
         };
         // Backend choice: native runs the batched LUT-GEMM in-process
         // (no HLO artifacts touched); calibrated wraps it with per-worker
@@ -274,13 +461,54 @@ impl CoordinatorServer {
             },
             BackendKind::Pjrt => BackendSpec::Pjrt { hlo: store.mlp_hlo(cfg.multiplier) },
         };
-        let pool = WorkerPool::spawn(cfg.workers.count, spec)?;
         let in_dim = *meta.dims.first().unwrap();
         let out_dim = *meta.dims.last().unwrap();
+        // Model registry: the default model plus every configured
+        // tenant. Tenant manifests are validated now (fail fast on a
+        // bad config); their plans compile lazily, on first request,
+        // through the plan cache.
+        let mut registry = HashMap::new();
+        registry.insert(ModelId::DEFAULT, Arc::new(ModelSlot::new(cfg.artifacts_dir.clone())));
+        for (id, dir) in &cfg.serving.models {
+            let model = ModelId::new(id)?;
+            ensure!(!model.is_default(), "serving.models ids must be non-empty");
+            let m = ArtifactStore::new(dir)
+                .manifest()
+                .with_context(|| format!("model {id}: artifacts at {dir}"))?;
+            ensure!(
+                m.batch == meta.batch
+                    && m.dims.first() == meta.dims.first()
+                    && m.dims.last() == meta.dims.last(),
+                "model {id}: geometry must match the default model \
+                 (got batch {} dims {:?}, want batch {} dims {}→{})",
+                m.batch,
+                m.dims,
+                meta.batch,
+                in_dim,
+                out_dim
+            );
+            let slot = Arc::new(ModelSlot::new(dir.clone()));
+            ensure!(registry.insert(model, slot).is_none(), "duplicate model id {id}");
+        }
+        let metrics = Arc::new(Metrics::new());
+        let plan_cache =
+            Arc::new(PlanCache::new(cfg.plan_cache.max_bytes, metrics.plan_cache.clone()));
+        // Compile the default model once, through the cache, and seed
+        // every worker with the shared plan — N workers no longer
+        // compile N private copies. (PJRT owns its executable; its
+        // workers build from the spec.)
+        let default_entry = plan_cache.get_or_compile(ModelId::DEFAULT, || {
+            Ok(ModelEntry::compile(ModelId::DEFAULT, mlp, cfg.gemm.threads))
+        })?;
+        let seed = match cfg.backend {
+            BackendKind::Pjrt => None,
+            _ => Some(Arc::clone(&default_entry)),
+        };
+        let pool = WorkerPool::spawn_seeded(cfg.workers.count, spec, seed)?;
         let (ctx, crx) = queue::channel::<WorkerReply>();
         let shards = (0..cfg.batcher.shards)
             .map(|_| Shard {
-                batcher: Mutex::new(Batcher::from_config(&cfg.batcher)),
+                lanes: Mutex::new(HashMap::new()),
                 waiters: Mutex::new(HashMap::new()),
                 rr: AtomicUsize::new(0),
                 pending: Mutex::new(HashMap::new()),
@@ -293,12 +521,14 @@ impl CoordinatorServer {
             admission: AdmissionGate::new(cfg.batcher.queue_depth),
             max_batch: cfg.batcher.max_batch,
             backend: cfg.backend,
-            tiler,
+            pricing,
             sched_cache: Mutex::new(HashMap::new()),
-            sched_warm: AtomicBool::new(false),
             router: Router::new(pool),
-            metrics: Arc::new(Metrics::new()),
-            mlp,
+            metrics,
+            registry: RwLock::new(registry),
+            plan_cache,
+            batcher_cfg: cfg.batcher.clone(),
+            gemm_threads: cfg.gemm.threads,
             affinity: cfg.batcher.affinity,
             in_dim,
             out_dim,
@@ -349,19 +579,34 @@ impl CoordinatorServer {
             let period = Duration::from_micros((cfg.batcher.max_wait_us.max(50)) / 2);
             std::thread::Builder::new()
                 .name("luna-flusher".into())
-                .spawn(move || loop {
-                    std::thread::sleep(period);
-                    let Some(shared) = weak.upgrade() else { return };
-                    if shared.stopping.load(Ordering::Relaxed) {
-                        return;
-                    }
-                    for idx in 0..shared.shards.len() {
-                        let due = {
-                            let mut b = shared.shards[idx].batcher.lock().unwrap();
-                            b.flush_due(std::time::Instant::now())
-                        };
-                        if let Some(batch) = due {
-                            dispatch_batch(&shared, idx, batch);
+                .spawn(move || {
+                    // reused across ticks; reaches lane-count capacity
+                    // once and then never grows again
+                    let mut due: Vec<(ModelId, Arc<ModelEntry>, Arc<ModelSlot>, Batch)> =
+                        Vec::new();
+                    loop {
+                        std::thread::sleep(period);
+                        let Some(shared) = weak.upgrade() else { return };
+                        if shared.stopping.load(Ordering::Relaxed) {
+                            return;
+                        }
+                        for idx in 0..shared.shards.len() {
+                            due.clear();
+                            {
+                                let mut lanes = shared.shards[idx].lanes.lock().unwrap();
+                                let now = std::time::Instant::now();
+                                for (model, lane) in lanes.iter_mut() {
+                                    if let Some(batch) = lane.batcher.flush_due(now) {
+                                        let entry = Arc::clone(&lane.entry);
+                                        let slot = Arc::clone(&lane.slot);
+                                        due.push((*model, entry, slot, batch));
+                                    }
+                                }
+                            }
+                            // dispatch after the lane lock is released
+                            for (model, entry, slot, batch) in due.drain(..) {
+                                dispatch_batch(&shared, idx, model, &entry, &slot, batch);
+                            }
                         }
                     }
                 })
@@ -379,9 +624,21 @@ impl CoordinatorServer {
     pub fn shutdown(mut self) {
         self.shared.stopping.store(true, Ordering::Relaxed);
         for idx in 0..self.shared.shards.len() {
-            let batches = { self.shared.shards[idx].batcher.lock().unwrap().flush_all() };
-            for b in batches {
-                dispatch_batch(&self.shared, idx, b);
+            let flushed: Vec<(ModelId, Arc<ModelEntry>, Arc<ModelSlot>, Vec<Batch>)> = {
+                let mut lanes = self.shared.shards[idx].lanes.lock().unwrap();
+                lanes
+                    .iter_mut()
+                    .map(|(m, lane)| {
+                        let entry = Arc::clone(&lane.entry);
+                        let slot = Arc::clone(&lane.slot);
+                        (*m, entry, slot, lane.batcher.flush_all())
+                    })
+                    .collect()
+            };
+            for (model, entry, slot, batches) in flushed {
+                for b in batches {
+                    dispatch_batch(&self.shared, idx, model, &entry, &slot, b);
+                }
             }
         }
         if let Some(f) = self.flusher.take() {
@@ -402,13 +659,22 @@ impl CoordinatorServer {
 }
 
 impl ServerHandle {
-    /// Submit one image and block until the batched execution completes.
-    /// Admission failures surface as [`Backpressure`] (downcastable from
-    /// the returned error) carrying a `retry_after_us` hint.
+    /// Submit one image to the default model and block until the batched
+    /// execution completes. Admission failures surface as
+    /// [`Backpressure`] (downcastable from the returned error) carrying
+    /// a `retry_after_us` hint.
     pub fn submit(&self, pixels: Vec<f32>) -> Result<InferenceResponse> {
+        self.submit_model(ModelId::DEFAULT, pixels)
+    }
+
+    /// [`submit`](Self::submit) against a named model. Unknown or
+    /// retiring models fail with a downcastable [`ModelUnavailable`].
+    pub fn submit_model(&self, model: ModelId, pixels: Vec<f32>) -> Result<InferenceResponse> {
         let (tx, rx) = oneshot::channel();
-        self.submit_with(
-            pixels,
+        self.submit_inner(
+            None,
+            model,
+            pixels.into(),
             Completion::callback(move |result| {
                 let _ = tx.send(result);
             }),
@@ -420,12 +686,12 @@ impl ServerHandle {
         }
     }
 
-    /// Admission-checked asynchronous submission: on success, `done` is
-    /// resolved exactly once — with the response, or with the failure
-    /// reason if the batch dies — from a coordinator thread. On
-    /// rejection `done` is dropped unused (never resolved) and a
-    /// [`Backpressure`] error comes back, so the caller replies 429
-    /// itself.
+    /// Admission-checked asynchronous submission to the default model:
+    /// on success, `done` is resolved exactly once — with the response,
+    /// or with the failure reason if the batch dies — from a
+    /// coordinator thread. On rejection `done` is dropped unused (never
+    /// resolved) and a [`Backpressure`] error comes back, so the caller
+    /// replies 429 itself.
     ///
     /// Admission bounds total outstanding requests (pending +
     /// in-flight) by `batcher.queue_depth` — the genuine overload
@@ -433,7 +699,7 @@ impl ServerHandle {
     /// across batcher shards. Pixels arrive in a pooled buffer (plain
     /// `Vec<f32>` converts in), keeping the wire path allocation-free.
     pub fn submit_with(&self, pixels: impl Into<PooledVec<f32>>, done: Completion) -> Result<()> {
-        self.submit_inner(None, pixels.into(), done)
+        self.submit_inner(None, ModelId::DEFAULT, pixels.into(), done)
     }
 
     /// [`submit_with`](Self::submit_with), identifying the submitting
@@ -448,42 +714,82 @@ impl ServerHandle {
         pixels: impl Into<PooledVec<f32>>,
         done: Completion,
     ) -> Result<()> {
-        self.submit_inner(Some(conn), pixels.into(), done)
+        self.submit_inner(Some(conn), ModelId::DEFAULT, pixels.into(), done)
+    }
+
+    /// [`submit_from`](Self::submit_from) against a named model — the
+    /// multi-tenant wire front-end's entry point.
+    pub fn submit_model_from(
+        &self,
+        conn: u64,
+        model: ModelId,
+        pixels: impl Into<PooledVec<f32>>,
+        done: Completion,
+    ) -> Result<()> {
+        self.submit_inner(Some(conn), model, pixels.into(), done)
     }
 
     fn submit_inner(
         &self,
         conn: Option<u64>,
+        model: ModelId,
         pixels: PooledVec<f32>,
         done: Completion,
     ) -> Result<()> {
         ensure!(pixels.len() == self.shared.in_dim, "expected {} pixels", self.shared.in_dim);
+        let slot = {
+            let registry = self.shared.registry.read().unwrap();
+            let Some(slot) = registry.get(&model) else {
+                return Err(ModelUnavailable { model, retiring: false }.into());
+            };
+            // ordering: Relaxed — both under the registry *read* lock;
+            // retire_model flips `retiring` under the write lock and
+            // only then reads `inflight`, so either this request sees
+            // the flag, or the drain sees this increment. The increment
+            // must precede the check for that pairing to hold.
+            slot.inflight.fetch_add(1, Ordering::Relaxed);
+            if slot.retiring.load(Ordering::Relaxed) {
+                slot.inflight.fetch_sub(1, Ordering::Relaxed);
+                return Err(ModelUnavailable { model, retiring: true }.into());
+            }
+            Arc::clone(slot)
+        };
+        let mut token = InflightToken { slot: Some(Arc::clone(&slot)) };
+        // Resolve the compiled plan BEFORE admission: a compile stall
+        // (single-flight, measured) must not hold an admission slot,
+        // and a failed compile must not count against the queue depth.
+        let entry = self
+            .shared
+            .plan_cache
+            .get_or_compile(model, || self.shared.compile_model(model, &slot.dir))?;
         // ordering: Relaxed — pure id allocation, no publication.
         let id = self.shared.next_id.fetch_add(1, Ordering::Relaxed);
         let shard_idx = self.shared.shard_for(id, conn);
+        let shard = &self.shared.shards[shard_idx];
         if let Err(observed) = self.shared.admission.try_admit() {
             let hint = {
-                let batcher = self.shared.shards[shard_idx].batcher.lock().unwrap();
-                batcher.retry_after_us(std::time::Instant::now(), observed)
+                let mut lanes = shard.lanes.lock().unwrap();
+                let lane = lane_for(&mut lanes, model, &entry, &slot, &self.shared.batcher_cfg);
+                lane.batcher.retry_after_us(std::time::Instant::now(), observed)
             };
             self.shared.metrics.record_rejection(hint);
             return Err(Backpressure { retry_after_us: hint }.into());
         }
-        let shard = &self.shared.shards[shard_idx];
         shard.waiters.lock().unwrap().insert(id, done);
         let maybe_batch = {
-            let mut batcher = shard.batcher.lock().unwrap();
-            match batcher.push(InferenceRequest::new(id, pixels)) {
+            let mut lanes = shard.lanes.lock().unwrap();
+            let lane = lane_for(&mut lanes, model, &entry, &slot, &self.shared.batcher_cfg);
+            match lane.batcher.push(InferenceRequest::new(id, pixels)) {
                 Ok(b) => b,
-                // Unreachable by invariant (every shard's pending queue
+                // Unreachable by invariant (every lane's pending queue
                 // is a subset of the outstanding set the gate above
                 // caps); kept as defense in depth since the batcher is
                 // also driven standalone, where `push` genuinely
                 // backpressures.
                 Err(_rejected) => {
-                    let hint =
-                        batcher.retry_after_us(std::time::Instant::now(), batcher.pending());
-                    drop(batcher);
+                    let now = std::time::Instant::now();
+                    let hint = lane.batcher.retry_after_us(now, lane.batcher.pending());
+                    drop(lanes);
                     shard.waiters.lock().unwrap().remove(&id);
                     self.shared.admission.release(1);
                     self.shared.metrics.record_rejection(hint);
@@ -491,11 +797,102 @@ impl ServerHandle {
                 }
             }
         };
+        // the request is now owned by the batch lifecycle; complete/
+        // fail paths decrement the per-model in-flight count
+        token.disarm();
         self.shared.metrics.record_admission();
         if let Some(batch) = maybe_batch {
-            dispatch_batch(&self.shared, shard_idx, batch);
+            dispatch_batch(&self.shared, shard_idx, model, &entry, &slot, batch);
         }
         Ok(())
+    }
+
+    /// Register a new tenant at runtime (hot load). Validates the
+    /// artifacts' geometry now; the plan compiles lazily on the model's
+    /// first request. Fails if the id is already serving — hot *swap*
+    /// is [`retire_model`](Self::retire_model) then `load_model`.
+    pub fn load_model(&self, model: ModelId, dir: &str) -> Result<()> {
+        ensure!(!model.is_default(), "the default model is always loaded");
+        let store = ArtifactStore::new(dir);
+        let meta =
+            store.manifest().with_context(|| format!("model {model}: artifacts at {dir}"))?;
+        let (first, last) = (*meta.dims.first().unwrap(), *meta.dims.last().unwrap());
+        ensure!(
+            meta.batch == self.shared.max_batch
+                && first == self.shared.in_dim
+                && last == self.shared.out_dim,
+            "model {model}: geometry (batch {} dims {first}→{last}) must match serving \
+             (batch {} dims {}→{})",
+            meta.batch,
+            self.shared.max_batch,
+            self.shared.in_dim,
+            self.shared.out_dim
+        );
+        let mut registry = self.shared.registry.write().unwrap();
+        ensure!(
+            !registry.contains_key(&model),
+            "model {model} is already serving — retire it first to swap"
+        );
+        registry.insert(model, Arc::new(ModelSlot::new(dir.to_string())));
+        Ok(())
+    }
+
+    /// Retire a tenant (hot unload): flag it retiring (new requests are
+    /// rejected with a structured [`ModelUnavailable`]), drain every
+    /// in-flight request, then drop its lanes, cached plan and
+    /// per-worker executors. Connections are never dropped; this call
+    /// returns once the model is fully gone.
+    pub fn retire_model(&self, model: ModelId) -> Result<()> {
+        ensure!(!model.is_default(), "cannot retire the default model");
+        let slot = {
+            let registry = self.shared.registry.write().unwrap();
+            let Some(slot) = registry.get(&model) else {
+                return Err(ModelUnavailable { model, retiring: false }.into());
+            };
+            // ordering: Relaxed — the registry write lock orders this
+            // store against every submit's read-locked admit sequence;
+            // after we release the lock, no submit can pass the
+            // retiring check, so `inflight` only counts down.
+            slot.retiring.store(true, Ordering::Relaxed);
+            Arc::clone(slot)
+        };
+        while slot.inflight.load(Ordering::Relaxed) > 0 {
+            if self.shared.stopping.load(Ordering::Relaxed) {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        self.shared.registry.write().unwrap().remove(&model);
+        for shard in &self.shared.shards {
+            shard.lanes.lock().unwrap().remove(&model);
+        }
+        self.shared.plan_cache.retire(model);
+        self.shared.router.retire(model);
+        self.shared.sched_cache.lock().unwrap().retain(|(m, _), _| *m != model);
+        Ok(())
+    }
+
+    /// Sorted ids of the non-default models currently registered (the
+    /// wire `Info` frame's model list; the default model is implicit on
+    /// every server).
+    pub fn models(&self) -> Vec<String> {
+        let registry = self.shared.registry.read().unwrap();
+        let mut out: Vec<String> =
+            registry.keys().filter(|m| !m.is_default()).map(|m| m.as_str().to_string()).collect();
+        out.sort();
+        out
+    }
+
+    /// Per-tenant serving counters, `None` for an unregistered id. The
+    /// default model reports under [`ModelId::DEFAULT`].
+    pub fn model_stats(&self, model: ModelId) -> Option<ModelStats> {
+        self.shared.registry.read().unwrap().get(&model).map(|s| s.stats())
+    }
+
+    /// The shared compiled-plan cache (tests and tools; serving goes
+    /// through [`submit_model`](Self::submit_model)).
+    pub fn plan_cache(&self) -> Arc<PlanCache> {
+        Arc::clone(&self.shared.plan_cache)
     }
 
     /// Input dimension the model expects (pixels per request).
@@ -528,27 +925,51 @@ impl ServerHandle {
     }
 }
 
-/// Coordinator-side CiM pricing with the steady-state memo (see
-/// [`Shared::sched_cache`]).
-fn coordinator_cost(shared: &Shared, tiler: &Mutex<Tiler>, n: usize) -> ScheduleCost {
-    if let Some(c) = shared.sched_cache.lock().unwrap().get(&n) {
+/// This shard's lane for `model`, created on first touch (cold path;
+/// the warm path is a plain map hit).
+fn lane_for<'a>(
+    lanes: &'a mut HashMap<ModelId, Lane>,
+    model: ModelId,
+    entry: &Arc<ModelEntry>,
+    slot: &Arc<ModelSlot>,
+    cfg: &BatcherConfig,
+) -> &'a mut Lane {
+    lanes.entry(model).or_insert_with(|| Lane {
+        batcher: Batcher::from_config(cfg),
+        entry: Arc::clone(entry),
+        slot: Arc::clone(slot),
+    })
+}
+
+/// Coordinator-side CiM pricing with the steady-state memo.
+///
+/// Multi-tenant schedules interleave on the one pricing fabric, so a
+/// walk's programming cost depends on which model ran before it. A cost
+/// is memoized for (model, n) only when the fabric's previous schedule
+/// was the *same* model — the model-after-itself steady state, i.e. the
+/// per-tenant cost as if the tenant owned the fabric. Cold walks (first
+/// ever, or first after another tenant) report their genuine
+/// programming cost and are never cached. Single-tenant behaviour is
+/// identical to the classic warm-memo: first walk cold and uncached,
+/// every later one serves from the memo.
+fn coordinator_cost(
+    shared: &Shared,
+    pricing: &Mutex<PricingState>,
+    mlp: &QuantMlp,
+    model: ModelId,
+    n: usize,
+) -> ScheduleCost {
+    if let Some(c) = shared.sched_cache.lock().unwrap().get(&(model, n)) {
         return *c;
     }
-    // The first schedule runs from the cold fabric (its programming cost
-    // is real and must not be cached); every later one starts from the
-    // deterministic post-model state, so its cost is a pure function of
-    // (model, n) — identical to what an uncached walk would report. The
-    // warm flag flips under the tiler lock so "warm" can never describe
-    // a schedule that actually ran first on the cold fabric.
     let (was_warm, cost) = {
-        let mut t = tiler.lock().unwrap();
-        // ordering: Relaxed — the swap runs under the tiler lock, which
-        // already orders it against every other schedule walk.
-        let was_warm = shared.sched_warm.swap(true, Ordering::Relaxed);
-        (was_warm, t.schedule_cost(&shared.mlp, n))
+        let mut p = pricing.lock().unwrap();
+        let was_warm = p.last == Some(model);
+        p.last = Some(model);
+        (was_warm, p.tiler.schedule_cost(mlp, n))
     };
     if was_warm {
-        shared.sched_cache.lock().unwrap().insert(n, cost);
+        shared.sched_cache.lock().unwrap().insert((model, n), cost);
     }
     cost
 }
@@ -556,7 +977,14 @@ fn coordinator_cost(shared: &Shared, tiler: &Mutex<Tiler>, n: usize) -> Schedule
 /// Price the batch on the CiM fabric (unless the backend prices it
 /// itself), park its context under a batch id, and hand the flattened
 /// inputs to a worker; the completion pool picks the reply up by id.
-fn dispatch_batch(shared: &Arc<Shared>, shard_idx: usize, batch: Batch) {
+fn dispatch_batch(
+    shared: &Arc<Shared>,
+    shard_idx: usize,
+    model: ModelId,
+    entry: &Arc<ModelEntry>,
+    slot: &Arc<ModelSlot>,
+    batch: Batch,
+) {
     let n = batch.requests.len();
     if n == 0 {
         return;
@@ -564,7 +992,8 @@ fn dispatch_batch(shared: &Arc<Shared>, shard_idx: usize, batch: Batch) {
     // CiM cost model: schedule this batch on the coordinator's fabric —
     // skipped for `backend calibrated`, whose workers replay the schedule
     // on their own weight-stationary fabrics and return the cost.
-    let sched_cost = shared.tiler.as_ref().map(|t| coordinator_cost(shared, t, n));
+    let sched_cost =
+        shared.pricing.as_ref().map(|p| coordinator_cost(shared, p, &entry.mlp, model, n));
 
     // PJRT's lowered executable has a fixed batch dimension; the native
     // GEMM runs exactly the real rows (no MACs spent on padding, and no
@@ -576,7 +1005,7 @@ fn dispatch_batch(shared: &Arc<Shared>, shard_idx: usize, batch: Batch) {
     let shard = &shared.shards[shard_idx];
     let ctx_tx = { shard.completions.lock().unwrap().clone() };
     let Some(ctx_tx) = ctx_tx else {
-        fail_batch(shared, shard_idx, &batch, "server is shutting down");
+        fail_batch(shared, shard_idx, &batch, slot, "server is shutting down");
         return;
     };
     // Reserve the worker before parking the context so the reply can
@@ -589,17 +1018,20 @@ fn dispatch_batch(shared: &Arc<Shared>, shard_idx: usize, batch: Batch) {
     // reply back to this shard's pending map
     let seq = shared.batch_seq.fetch_add(1, Ordering::Relaxed);
     let batch_id = seq * shared.shards.len() as u64 + shard_idx as u64;
-    shard.pending.lock().unwrap().insert(batch_id, BatchCtx { batch, guard, sched_cost });
+    let ctx = BatchCtx { batch, guard, sched_cost, slot: Arc::clone(slot) };
+    shard.pending.lock().unwrap().insert(batch_id, ctx);
     let job = BatchJob {
         inputs,
         batch: exec_rows,
         dim: shared.in_dim,
+        model,
+        entry: Some(Arc::clone(entry)),
         reply: ReplyTo::Queue(ReplyTicket::new(ctx_tx, batch_id)),
     };
     if let Err(e) = shared.router.submit_to(worker, job) {
         let ctx = { shard.pending.lock().unwrap().remove(&batch_id) };
         if let Some(ctx) = ctx {
-            fail_batch(shared, shard_idx, &ctx.batch, &format!("{e:#}"));
+            fail_batch(shared, shard_idx, &ctx.batch, &ctx.slot, &format!("{e:#}"));
         }
     }
 }
@@ -616,7 +1048,7 @@ fn complete_batch(
     result: Result<BatchOutput>,
     scratch: &mut Vec<Option<Completion>>,
 ) {
-    let BatchCtx { batch, guard, sched_cost } = ctx;
+    let BatchCtx { batch, guard, sched_cost, slot } = ctx;
     let _guard = guard;
     match result {
         Ok(output) => {
@@ -629,6 +1061,11 @@ fn complete_batch(
             shared.metrics.record_batch(n, batch.padded_to);
             shared.metrics.record_sim_cost(&cost);
             shared.metrics.record_host_gemm_us(output.host_gemm_us);
+            // per-tenant accounting: requests served and how weight-
+            // stationary this model's scheduled work was
+            slot.requests.fetch_add(n as u64, Ordering::Relaxed);
+            slot.programs.fetch_add(cost.programs, Ordering::Relaxed);
+            slot.stationary_hits.fetch_add(cost.stationary_hits, Ordering::Relaxed);
             let per_req_energy = cost.energy_fj / n as f64;
             let out_dim = shared.out_dim;
             // A batch forms inside one shard, so one lock acquisition on
@@ -643,6 +1080,7 @@ fn complete_batch(
                 scratch.extend(batch.requests.iter().map(|req| waiters.remove(&req.id)));
             }
             shared.admission.release(n);
+            slot.inflight.fetch_sub(n as u64, Ordering::Relaxed);
             for ((i, req), waiter) in batch.requests.iter().enumerate().zip(scratch.drain(..)) {
                 let logits = &output.logits[i * out_dim..(i + 1) * out_dim];
                 let label = crate::nn::argmax(logits);
@@ -679,11 +1117,17 @@ fn complete_batch(
                 }
             }
         }
-        Err(e) => fail_batch(shared, shard_idx, &batch, &format!("{e:#}")),
+        Err(e) => fail_batch(shared, shard_idx, &batch, &slot, &format!("{e:#}")),
     }
 }
 
-fn fail_batch(shared: &Arc<Shared>, shard_idx: usize, batch: &Batch, why: &str) {
+fn fail_batch(
+    shared: &Arc<Shared>,
+    shard_idx: usize,
+    batch: &Batch,
+    slot: &Arc<ModelSlot>,
+    why: &str,
+) {
     // Complete every waiter with the structured reason; the blocking
     // submit() surfaces it as "request failed: <why>" and the wire
     // front-end sends an Error frame.
@@ -697,6 +1141,7 @@ fn fail_batch(shared: &Arc<Shared>, shard_idx: usize, batch: &Batch, why: &str) 
         batch.requests.iter().map(|req| waiters.remove(&req.id)).collect()
     };
     shared.admission.release(batch.requests.len());
+    slot.inflight.fetch_sub(batch.requests.len() as u64, Ordering::Relaxed);
     for done in completions.into_iter().flatten() {
         match done {
             Completion::Callback(f) => f(Err(why.to_string())),

@@ -9,11 +9,24 @@
 //! a [`WorkerReply`] straight onto the shared completion queue, so the
 //! steady-state batch path allocates nothing — no per-batch oneshot, no
 //! mpsc node.
+//!
+//! **Multi-tenant execution**: a [`BatchJob`] names its model. The
+//! default model runs on the backend built at spawn (from the spec, or
+//! from a plan-cache entry the pool was seeded with); any other model's
+//! first batch on a worker builds a per-model executor from the job's
+//! shared [`ModelEntry`] — no recompile, the compiled plan rides in by
+//! `Arc` — and keeps it (including the calibrated backend's per-model
+//! weight-stationary fabric) until a [`WorkerPool::retire`] broadcast
+//! drops it. Retire messages travel the same queue as jobs, so a
+//! retiring model's already-queued batches still execute first.
 
-use crate::engine::{BackendSpec, BatchOutput};
+use crate::engine::{BackendSpec, BatchOutput, ExecBackend, ModelEntry};
+use crate::net::protocol::ModelId;
 use crate::util::{oneshot, queue, PooledVec};
 use crate::Result;
 use anyhow::{anyhow, ensure};
+use std::collections::HashMap;
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
 /// One unit of work: an already-flattened batch. `inputs` is pooled and
@@ -23,8 +36,42 @@ pub struct BatchJob {
     pub inputs: PooledVec<f32>,
     pub batch: usize,
     pub dim: usize,
+    /// The model these rows belong to (batches never mix models).
+    pub model: ModelId,
+    /// The compiled plan for `model`, shared from the plan cache. The
+    /// worker needs it only for its *first* batch of a non-default
+    /// model (to build the per-model executor); `None` is fine for the
+    /// default model.
+    pub entry: Option<Arc<ModelEntry>>,
     /// Where the result goes.
     pub reply: ReplyTo,
+}
+
+impl BatchJob {
+    /// A default-model job (the single-tenant form tests and benches
+    /// use; the coordinator fills `model`/`entry` itself).
+    pub fn new(
+        inputs: impl Into<PooledVec<f32>>,
+        batch: usize,
+        dim: usize,
+        reply: ReplyTo,
+    ) -> Self {
+        BatchJob {
+            inputs: inputs.into(),
+            batch,
+            dim,
+            model: ModelId::DEFAULT,
+            entry: None,
+            reply,
+        }
+    }
+}
+
+/// What travels the worker queue: batch work, or a retire broadcast
+/// telling the worker to drop a model's per-worker executor state.
+enum WorkerMsg {
+    Job(BatchJob),
+    Retire(ModelId),
 }
 
 /// Reply route for a [`BatchJob`].
@@ -85,7 +132,7 @@ impl Drop for ReplyTicket {
 
 /// A pool of execution worker threads.
 pub struct WorkerPool {
-    senders: Vec<queue::Sender<BatchJob>>,
+    senders: Vec<queue::Sender<WorkerMsg>>,
     handles: Vec<JoinHandle<()>>,
 }
 
@@ -94,6 +141,19 @@ impl WorkerPool {
     /// Blocks until every worker reports successful construction (or
     /// fails fast with the first error).
     pub fn spawn(count: usize, spec: BackendSpec) -> Result<Self> {
+        Self::spawn_seeded(count, spec, None)
+    }
+
+    /// [`WorkerPool::spawn`], optionally seeding every worker's
+    /// default-model backend from an already-compiled plan-cache entry
+    /// (so N workers share one compiled plan instead of compiling N
+    /// copies). `None` keeps the classic behaviour: each worker builds
+    /// from the spec's own model.
+    pub fn spawn_seeded(
+        count: usize,
+        spec: BackendSpec,
+        default_entry: Option<Arc<ModelEntry>>,
+    ) -> Result<Self> {
         ensure!(count >= 1, "need at least one worker");
         // lint: allow(alloc): spawn-time bookkeeping, once per pool.
         let mut senders = Vec::with_capacity(count);
@@ -101,12 +161,13 @@ impl WorkerPool {
         let mut handles = Vec::with_capacity(count);
         let (ready_tx, ready_rx) = queue::channel::<std::result::Result<(), String>>();
         for worker_id in 0..count {
-            let (tx, rx) = queue::channel::<BatchJob>();
+            let (tx, rx) = queue::channel::<WorkerMsg>();
             let spec = spec.clone();
+            let seed = default_entry.clone();
             let ready = ready_tx.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("luna-worker-{worker_id}"))
-                .spawn(move || worker_main(spec, rx, ready))
+                .spawn(move || worker_main(spec, seed, rx, ready))
                 .expect("spawn worker thread");
             senders.push(tx);
             handles.push(handle);
@@ -129,8 +190,18 @@ impl WorkerPool {
     /// Submit a job to worker `idx`.
     pub fn submit(&self, idx: usize, job: BatchJob) -> Result<()> {
         self.senders[idx % self.senders.len()]
-            .send(job)
+            .send(WorkerMsg::Job(job))
             .map_err(|_| anyhow!("worker {idx} has shut down"))
+    }
+
+    /// Broadcast a retire to every worker: each drops its per-model
+    /// executor for `model` (freeing the plan `Arc` and any calibrated
+    /// fabric state). Queued jobs for the model submitted *before* this
+    /// call still execute — the message rides the same FIFO queue.
+    pub fn retire(&self, model: ModelId) {
+        for tx in &self.senders {
+            let _ = tx.send(WorkerMsg::Retire(model));
+        }
     }
 
     /// Drop the queues and join every worker.
@@ -142,12 +213,41 @@ impl WorkerPool {
     }
 }
 
+/// The executor a job runs on: the spawn-time default backend for the
+/// default model, otherwise a lazily-built per-model backend shared
+/// nothing across workers but sharing the compiled plan by `Arc`.
+fn backend_for<'a>(
+    spec: &BackendSpec,
+    default: &'a mut Box<dyn ExecBackend>,
+    extras: &'a mut HashMap<ModelId, Box<dyn ExecBackend>>,
+    model: ModelId,
+    entry: Option<&Arc<ModelEntry>>,
+) -> Result<&'a mut dyn ExecBackend> {
+    if model.is_default() {
+        return Ok(default.as_mut());
+    }
+    if !extras.contains_key(&model) {
+        // first batch of this model on this worker: build its executor
+        // from the shared compiled plan (cold path — the coordinator
+        // always attaches the entry for non-default models)
+        let entry = entry.ok_or_else(|| anyhow!("no compiled plan attached for model {model}"))?;
+        let backend = spec.build_for(Arc::clone(&entry.mlp), Arc::clone(&entry.plan))?;
+        extras.insert(model, backend);
+    }
+    Ok(extras.get_mut(&model).expect("just ensured present").as_mut())
+}
+
 fn worker_main(
     spec: BackendSpec,
-    rx: queue::Receiver<BatchJob>,
+    default_entry: Option<Arc<ModelEntry>>,
+    rx: queue::Receiver<WorkerMsg>,
     ready: queue::Sender<std::result::Result<(), String>>,
 ) {
-    let mut backend = match spec.build() {
+    let built = match &default_entry {
+        Some(e) => spec.build_for(Arc::clone(&e.mlp), Arc::clone(&e.plan)),
+        None => spec.build(),
+    };
+    let mut backend = match built {
         Ok(b) => {
             let _ = ready.send(Ok(()));
             b
@@ -157,9 +257,19 @@ fn worker_main(
             return;
         }
     };
-    while let Some(job) = rx.recv() {
-        let BatchJob { inputs, batch, dim, reply } = job;
-        let res = backend.run_batch(&inputs, batch, dim);
+    // per-model executors for non-default tenants (lazy; retire drops)
+    let mut extras: HashMap<ModelId, Box<dyn ExecBackend>> = HashMap::new();
+    while let Some(msg) = rx.recv() {
+        let job = match msg {
+            WorkerMsg::Job(job) => job,
+            WorkerMsg::Retire(model) => {
+                extras.remove(&model);
+                continue;
+            }
+        };
+        let BatchJob { inputs, batch, dim, model, entry, reply } = job;
+        let res = backend_for(&spec, &mut backend, &mut extras, model, entry.as_ref())
+            .and_then(|b| b.run_batch(&inputs, batch, dim));
         // recycle the flat input buffer before waking the reply path
         drop(inputs);
         match reply {
@@ -185,7 +295,7 @@ mod tests {
         dim: usize,
     ) -> (BatchJob, oneshot::Receiver<Result<BatchOutput>>) {
         let (tx, rx) = oneshot::channel();
-        (BatchJob { inputs: inputs.into(), batch, dim, reply: ReplyTo::Oneshot(tx) }, rx)
+        (BatchJob::new(inputs, batch, dim, ReplyTo::Oneshot(tx)), rx)
     }
 
     fn native_spec() -> (BackendSpec, QuantMlp) {
@@ -218,12 +328,7 @@ mod tests {
         let inputs = vec![0.25f32; 2 * 16];
         pool.submit(
             0,
-            BatchJob {
-                inputs: inputs.clone().into(),
-                batch: 2,
-                dim: 16,
-                reply: ReplyTo::Queue(ReplyTicket::new(ctx, 42)),
-            },
+            BatchJob::new(inputs.clone(), 2, 16, ReplyTo::Queue(ReplyTicket::new(ctx, 42))),
         )
         .unwrap();
         let reply = crx.recv().expect("worker pushes onto the completion queue");
@@ -281,6 +386,54 @@ mod tests {
     }
 
     #[test]
+    fn multi_model_jobs_execute_on_their_own_backends() {
+        let (spec, default_mlp) = native_spec();
+        let other_mlp = QuantMlp::random_for_study(99);
+        let entry = Arc::new(ModelEntry::compile(
+            ModelId::new("other").unwrap(),
+            other_mlp.clone(),
+            1,
+        ));
+        let model = MultiplierModel::new(MultiplierKind::DncOpt);
+        let pool = WorkerPool::spawn(1, spec).unwrap();
+        let inputs = vec![0.3f32; 16];
+
+        // default-model job runs on the spawn-time backend
+        let (j, rx) = job(inputs.clone(), 1, 16);
+        pool.submit(0, j).unwrap();
+        let got = rx.recv().unwrap().unwrap();
+        assert_eq!(got.logits, default_mlp.forward(&inputs, &model));
+
+        // tagged job builds its executor from the shared entry and
+        // computes with the *other* model's weights
+        let (tx, rx) = oneshot::channel();
+        let mut j = BatchJob::new(inputs.clone(), 1, 16, ReplyTo::Oneshot(tx));
+        j.model = entry.model;
+        j.entry = Some(Arc::clone(&entry));
+        pool.submit(0, j).unwrap();
+        let got = rx.recv().unwrap().unwrap();
+        assert_eq!(got.logits, other_mlp.forward(&inputs, &model));
+
+        // a tagged job with no entry (and no cached executor) errors
+        pool.retire(entry.model);
+        let (tx, rx) = oneshot::channel();
+        let mut j = BatchJob::new(inputs.clone(), 1, 16, ReplyTo::Oneshot(tx));
+        j.model = entry.model;
+        pool.submit(0, j).unwrap();
+        let err = rx.recv().unwrap().unwrap_err();
+        assert!(format!("{err:#}").contains("no compiled plan"), "{err:#}");
+
+        // re-attaching the entry rebuilds the executor after retire
+        let (tx, rx) = oneshot::channel();
+        let mut j = BatchJob::new(inputs.clone(), 1, 16, ReplyTo::Oneshot(tx));
+        j.model = entry.model;
+        j.entry = Some(Arc::clone(&entry));
+        pool.submit(0, j).unwrap();
+        assert_eq!(rx.recv().unwrap().unwrap().logits, other_mlp.forward(&inputs, &model));
+        pool.shutdown();
+    }
+
+    #[test]
     fn worker_surfaces_bad_batch_shape_as_error() {
         let (spec, _) = native_spec();
         let pool = WorkerPool::spawn(1, spec).unwrap();
@@ -326,16 +479,8 @@ ENTRY main {
             for i in 0..4 {
                 let (tx, rx) = oneshot::channel();
                 let inputs: Vec<f32> = (0..6).map(|j| (i * 6 + j) as f32).collect();
-                pool.submit(
-                    i,
-                    BatchJob {
-                        inputs: inputs.clone().into(),
-                        batch: 2,
-                        dim: 3,
-                        reply: ReplyTo::Oneshot(tx),
-                    },
-                )
-                .unwrap();
+                pool.submit(i, BatchJob::new(inputs.clone(), 2, 3, ReplyTo::Oneshot(tx)))
+                    .unwrap();
                 let out = rx.recv().unwrap().unwrap();
                 let expect: Vec<f32> = inputs.iter().map(|v| v * 2.0).collect();
                 assert_eq!(out.logits, expect);

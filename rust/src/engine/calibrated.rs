@@ -52,12 +52,25 @@ impl CalibratedBackend {
         time_scale: f64,
         threads: usize,
     ) -> Self {
+        Self::from_inner(NativeBackend::with_threads(mlp, kind, threads), tiler, time_scale)
+    }
+
+    /// [`CalibratedBackend::new`] over an already-compiled shared plan —
+    /// the plan-cache hit path (see [`NativeBackend::from_shared`]). The
+    /// tiler's fabric state is still private to this backend.
+    pub fn from_shared(
+        mlp: std::sync::Arc<QuantMlp>,
+        plan: std::sync::Arc<crate::nn::MlpPlan>,
+        kind: MultiplierKind,
+        tiler: Tiler,
+        time_scale: f64,
+    ) -> Self {
+        Self::from_inner(NativeBackend::from_shared(mlp, plan, kind), tiler, time_scale)
+    }
+
+    fn from_inner(inner: NativeBackend, tiler: Tiler, time_scale: f64) -> Self {
         assert!(time_scale >= 0.0 && time_scale.is_finite(), "time_scale must be finite and >= 0");
-        CalibratedBackend {
-            inner: NativeBackend::with_threads(mlp, kind, threads),
-            tiler,
-            time_scale,
-        }
+        CalibratedBackend { inner, tiler, time_scale }
     }
 
     /// The wall-clock pause a schedule of `latency_ps` maps to (zero in

@@ -30,20 +30,23 @@
 
 mod calibrated;
 mod native;
+pub mod plan_cache;
 #[cfg(feature = "pjrt")]
 mod pjrt;
 
 pub use calibrated::CalibratedBackend;
 pub use native::NativeBackend;
+pub use plan_cache::{ModelEntry, PlanCache};
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtBackend;
 
 use crate::coordinator::tiler::{ScheduleCost, Tiler, UnitCosts};
 use crate::multiplier::MultiplierKind;
-use crate::nn::QuantMlp;
+use crate::nn::{MlpPlan, QuantMlp};
 use crate::util::PooledVec;
 use crate::Result;
 use std::path::PathBuf;
+use std::sync::Arc;
 
 /// Result of one executed batch: the flattened `batch × out_dim` logits
 /// (every serving artifact returns a single logits tensor; PJRT's
@@ -142,6 +145,36 @@ impl BackendSpec {
             BackendSpec::Pjrt { hlo } => anyhow::bail!(
                 "PJRT backend requested ({}) but this build has no `pjrt` feature — \
                  rebuild with `--features pjrt` or set `backend native`",
+                hlo.display()
+            ),
+        }
+    }
+
+    /// Construct the backend over an **already-compiled** shared model +
+    /// plan instead of this spec's own model. This is how multi-tenant
+    /// workers build per-model executors from plan-cache entries: the
+    /// spec contributes the execution *style* (multiplier kind,
+    /// calibration, banks, `time_scale`), the cache contributes the
+    /// compiled artifacts, and nothing is recompiled or copied per
+    /// worker. The PJRT backend is single-model (its executable is the
+    /// artifact) and rejects this path.
+    pub fn build_for(
+        &self,
+        mlp: Arc<QuantMlp>,
+        plan: Arc<MlpPlan>,
+    ) -> Result<Box<dyn ExecBackend>> {
+        match self {
+            BackendSpec::Native { kind, .. } => {
+                Ok(Box::new(NativeBackend::from_shared(mlp, plan, *kind)))
+            }
+            BackendSpec::Calibrated { kind, costs, banks, units_per_bank, time_scale, .. } => {
+                let tiler = Tiler::new(*banks, *units_per_bank, *costs);
+                Ok(Box::new(CalibratedBackend::from_shared(mlp, plan, *kind, tiler, *time_scale)))
+            }
+            BackendSpec::Pjrt { hlo } => anyhow::bail!(
+                "the PJRT backend ({}) serves a single compiled executable and cannot \
+                 execute plan-cache models — use `backend native` or `backend calibrated` \
+                 for multi-tenant serving",
                 hlo.display()
             ),
         }

@@ -17,12 +17,20 @@ use crate::nn::{MlpPlan, PlanScratch, QuantMlp};
 use crate::util::PooledVec;
 use crate::Result;
 use anyhow::ensure;
+use std::sync::Arc;
 use std::time::Instant;
 
 /// In-process planned-LUT-GEMM executor over the quantized MLP.
+///
+/// The model and its compiled plan are held behind `Arc`s: the plan is
+/// the expensive compile-once object, so the multi-tenant plan cache
+/// ([`crate::engine::PlanCache`]) compiles it once per model and every
+/// worker backend shares the same read-only copy
+/// ([`NativeBackend::from_shared`]). Scratch and fabric state stay
+/// per-backend, so sharing never crosses the `&mut self` contract.
 pub struct NativeBackend {
-    mlp: QuantMlp,
-    plan: MlpPlan,
+    mlp: Arc<QuantMlp>,
+    plan: Arc<MlpPlan>,
     model: MultiplierModel,
     scratch: PlanScratch,
 }
@@ -35,9 +43,16 @@ impl NativeBackend {
     }
 
     /// Planned kernel with up to `threads` GEMM threads per batch
-    /// (`0` = one per available core).
+    /// (`0` = one per available core). Compiles the plan on the calling
+    /// thread; cached-plan callers use [`NativeBackend::from_shared`].
     pub fn with_threads(mlp: QuantMlp, kind: MultiplierKind, threads: usize) -> Self {
-        let plan = mlp.plan(threads);
+        let plan = Arc::new(mlp.plan(threads));
+        Self::from_shared(Arc::new(mlp), plan, kind)
+    }
+
+    /// Planned kernel over an already-compiled shared plan — no compile,
+    /// no model copy; this is the plan-cache hit path.
+    pub fn from_shared(mlp: Arc<QuantMlp>, plan: Arc<MlpPlan>, kind: MultiplierKind) -> Self {
         NativeBackend {
             mlp,
             plan,

@@ -1,0 +1,384 @@
+//! Byte-budgeted LRU cache of compiled model plans — the multi-tenant
+//! serving core.
+//!
+//! LUT-PIM is a capacity–computation tradeoff: what stays resident
+//! determines throughput. In this stack the expensive compile-once
+//! object is the [`MlpPlan`] (16-bucket code-sorted CSR + strip layout,
+//! see [`crate::nn::gemm`]); serving a model the coordinator has never
+//! seen costs a full plan compile, serving a resident one costs a map
+//! lookup. The cache makes that tradeoff explicit and measurable:
+//!
+//! * **Byte budget.** Every entry is priced at its actual heap
+//!   footprint (model weights + compiled plan buffers); the resident
+//!   set never exceeds `max_bytes`. An entry larger than the whole
+//!   budget is served *uncached* — the caller gets a usable entry, the
+//!   invariant holds, and the next request recompiles.
+//! * **LRU eviction.** Each hit stamps a monotonic tick; eviction
+//!   removes the least-recently-stamped `Ready` entry until the new
+//!   entry fits. Evicted entries stay alive (`Arc`) for any in-flight
+//!   batch still executing them.
+//! * **Single-flight compilation.** The first miss installs a
+//!   `Compiling` marker and compiles outside the lock; concurrent
+//!   misses for the same model block on a condvar instead of
+//!   recompiling, so N concurrent cold requests trigger exactly one
+//!   compile. Waiters record their stall time — the compile-stall
+//!   latency the loadgen reports as p99.
+//! * **Metrics.** Hits, misses, evictions, compiles, compile time,
+//!   stall time and residency gauges land on the shared
+//!   [`PlanCacheCounters`] and render as the `plan cache` metrics line.
+//!
+//! The hit path is allocation-free: one mutex lock, one hash lookup,
+//! one tick store, one `Arc` clone. This file is covered by the
+//! hot-path lint rules (`repro lint`) like the rest of the serving
+//! path.
+
+use crate::coordinator::metrics::PlanCacheCounters;
+use crate::net::protocol::ModelId;
+use crate::nn::{MlpPlan, QuantMlp};
+use crate::Result;
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+/// One resident model: the quantized weights, the compiled plan, and
+/// the byte price the cache charges for keeping both. Shared read-only
+/// (`Arc`) between the cache, the per-shard batch lanes and every
+/// worker backend built from it.
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub model: ModelId,
+    pub mlp: Arc<QuantMlp>,
+    pub plan: Arc<MlpPlan>,
+    /// Heap bytes of `mlp` + `plan` — the cache's unit of account.
+    pub bytes: usize,
+}
+
+impl ModelEntry {
+    /// Compile `mlp` into an entry (this is the expensive call the
+    /// cache exists to amortize). `threads` follows the `gemm.threads`
+    /// convention.
+    pub fn compile(model: ModelId, mlp: QuantMlp, threads: usize) -> Self {
+        let plan = mlp.plan(threads);
+        let bytes = mlp.heap_bytes() + plan.heap_bytes();
+        ModelEntry { model, mlp: Arc::new(mlp), plan: Arc::new(plan), bytes }
+    }
+}
+
+enum Slot {
+    /// Compiled and servable; `tick` is the last-use stamp (LRU key).
+    Ready { entry: Arc<ModelEntry>, tick: u64 },
+    /// A thread is compiling this model outside the lock; misses wait
+    /// on the condvar instead of duplicating the compile.
+    Compiling,
+}
+
+struct Inner {
+    slots: HashMap<ModelId, Slot>,
+    /// Total bytes of all `Ready` entries (the budget invariant:
+    /// `used <= max_bytes` at every lock release).
+    used: usize,
+    /// Monotonic LRU clock, bumped on every hit and insert.
+    tick: u64,
+}
+
+/// Size-bounded, single-flight LRU of compiled model plans. See the
+/// module docs for the contract; constructed once per
+/// [`crate::coordinator::CoordinatorServer`] and shared (`Arc`) with
+/// every submit path.
+pub struct PlanCache {
+    max_bytes: usize,
+    counters: Arc<PlanCacheCounters>,
+    inner: Mutex<Inner>,
+    cv: Condvar,
+}
+
+impl PlanCache {
+    /// `max_bytes` bounds the resident set (must be ≥ 1 — a zero budget
+    /// would cache nothing and recompile every request silently).
+    /// `counters` is shared with the serving metrics so the `plan
+    /// cache` line renders from the same numbers the cache records.
+    pub fn new(max_bytes: usize, counters: Arc<PlanCacheCounters>) -> Self {
+        assert!(max_bytes >= 1, "plan cache budget must be >= 1 byte");
+        PlanCache {
+            max_bytes,
+            counters,
+            inner: Mutex::new(Inner { slots: HashMap::new(), used: 0, tick: 0 }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// A cache with its own private counters (tests, tools).
+    pub fn standalone(max_bytes: usize) -> Self {
+        Self::new(max_bytes, Arc::new(PlanCacheCounters::default()))
+    }
+
+    pub fn max_bytes(&self) -> usize {
+        self.max_bytes
+    }
+
+    pub fn counters(&self) -> &Arc<PlanCacheCounters> {
+        &self.counters
+    }
+
+    /// Bytes currently resident (always ≤ [`PlanCache::max_bytes`]).
+    pub fn resident_bytes(&self) -> usize {
+        self.inner.lock().unwrap().used
+    }
+
+    /// Is `model` resident and ready right now?
+    pub fn is_resident(&self, model: ModelId) -> bool {
+        matches!(self.inner.lock().unwrap().slots.get(&model), Some(Slot::Ready { .. }))
+    }
+
+    /// Look up `model`, compiling it with `compile` on a miss.
+    ///
+    /// * **Hit:** stamps the LRU tick and returns the shared entry —
+    ///   one lock, one lookup, one `Arc` clone, no allocation.
+    /// * **Miss, first:** installs the single-flight marker, runs
+    ///   `compile` *outside* the lock (other models keep hitting
+    ///   meanwhile), then inserts under the byte budget, evicting LRU
+    ///   entries as needed.
+    /// * **Miss, concurrent:** blocks until the in-flight compile
+    ///   resolves, recording the stall; every concurrent miss counts as
+    ///   a miss but only the compiling thread counts a compile.
+    ///
+    /// An entry reporting more bytes than the entire budget is returned
+    /// uncached (the budget invariant outranks residency). A failed
+    /// compile clears the marker and propagates the error; the next
+    /// request retries.
+    pub fn get_or_compile<F>(&self, model: ModelId, compile: F) -> Result<Arc<ModelEntry>>
+    where
+        F: FnOnce() -> Result<ModelEntry>,
+    {
+        let mut counted = false;
+        let mut stall_start: Option<Instant> = None;
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            let now = inner.tick + 1;
+            match inner.slots.get_mut(&model) {
+                Some(Slot::Ready { entry, tick }) => {
+                    *tick = now;
+                    let entry = entry.clone();
+                    inner.tick = now;
+                    match stall_start {
+                        // we waited behind another thread's compile:
+                        // already counted as a miss, record the stall
+                        Some(t0) => self.counters.record_stall_us(t0.elapsed().as_micros() as u64),
+                        None => self.counters.record_hit(),
+                    }
+                    return Ok(entry);
+                }
+                Some(Slot::Compiling) => {
+                    if !counted {
+                        counted = true;
+                        self.counters.record_miss();
+                        stall_start = Some(Instant::now());
+                    }
+                    inner = self.cv.wait(inner).unwrap();
+                }
+                None => {
+                    if !counted {
+                        self.counters.record_miss();
+                    }
+                    inner.slots.insert(model, Slot::Compiling);
+                    break;
+                }
+            }
+        }
+        drop(inner);
+
+        let t0 = Instant::now();
+        let compiled = compile();
+        let compile_us = t0.elapsed().as_micros() as u64;
+
+        let mut inner = self.inner.lock().unwrap();
+        let entry = match compiled {
+            Ok(entry) => Arc::new(entry),
+            Err(e) => {
+                // clear the marker so waiters retry (one becomes the
+                // next compiler) instead of hanging on a dead compile
+                inner.slots.remove(&model);
+                self.cv.notify_all();
+                return Err(e);
+            }
+        };
+        self.counters.record_compile_us(compile_us);
+        if entry.bytes > self.max_bytes {
+            // oversize: serve it, but never admit it — the budget
+            // invariant holds and the next request recompiles
+            inner.slots.remove(&model);
+            self.cv.notify_all();
+            return Ok(entry);
+        }
+        while inner.used + entry.bytes > self.max_bytes {
+            // LRU victim: the Ready slot with the oldest tick. `used`
+            // only counts Ready entries, so whenever the loop runs a
+            // victim exists and the loop strictly shrinks `used`.
+            let mut victim: Option<(u64, ModelId)> = None;
+            for (m, s) in inner.slots.iter() {
+                if let Slot::Ready { tick, .. } = s {
+                    let older = match victim {
+                        Some((t, _)) => *tick < t,
+                        None => true,
+                    };
+                    if older {
+                        victim = Some((*tick, *m));
+                    }
+                }
+            }
+            let Some((_, m)) = victim else { break };
+            if let Some(Slot::Ready { entry: evicted, .. }) = inner.slots.remove(&m) {
+                inner.used -= evicted.bytes;
+                self.counters.record_eviction();
+            }
+        }
+        inner.tick += 1;
+        let tick = inner.tick;
+        inner.used += entry.bytes;
+        inner.slots.insert(model, Slot::Ready { entry: entry.clone(), tick });
+        self.publish_gauges(&inner);
+        self.cv.notify_all();
+        Ok(entry)
+    }
+
+    /// Drop `model`'s resident entry (hot-swap retire). In-flight
+    /// batches keep their `Arc`; the bytes leave the budget now.
+    /// Returns whether an entry was resident. The coordinator only
+    /// calls this after draining the model's in-flight requests, so an
+    /// in-progress compile marker for it cannot exist here; if one
+    /// does (direct API use), it is left for the compiling thread.
+    pub fn retire(&self, model: ModelId) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        match inner.slots.get(&model) {
+            Some(Slot::Ready { .. }) => {
+                if let Some(Slot::Ready { entry, .. }) = inner.slots.remove(&model) {
+                    inner.used -= entry.bytes;
+                }
+                self.publish_gauges(&inner);
+                true
+            }
+            Some(Slot::Compiling) | None => false,
+        }
+    }
+
+    fn publish_gauges(&self, inner: &Inner) {
+        let models = inner.slots.values().filter(|s| matches!(s, Slot::Ready { .. })).count();
+        self.counters.set_resident(models as u64, inner.used as u64);
+    }
+}
+
+impl std::fmt::Debug for PlanCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let inner = self.inner.lock().unwrap();
+        f.debug_struct("PlanCache")
+            .field("max_bytes", &self.max_bytes)
+            .field("used", &inner.used)
+            .field("models", &inner.slots.len())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    fn mid(s: &str) -> ModelId {
+        ModelId::new(s).unwrap()
+    }
+
+    fn entry(name: &str, seed: u64) -> ModelEntry {
+        ModelEntry::compile(mid(name), QuantMlp::random_digits(seed), 1)
+    }
+
+    #[test]
+    fn hits_share_one_entry_and_count() {
+        let cache = PlanCache::standalone(64 << 20);
+        let a1 = cache.get_or_compile(mid("a"), || Ok(entry("a", 1))).unwrap();
+        let a2 = cache.get_or_compile(mid("a"), || panic!("must not recompile")).unwrap();
+        assert!(Arc::ptr_eq(&a1, &a2), "hit must return the same entry");
+        assert_eq!(cache.counters().hits(), 1);
+        assert_eq!(cache.counters().misses(), 1);
+        assert_eq!(cache.counters().compiles(), 1);
+        assert!(cache.is_resident(mid("a")));
+        assert_eq!(cache.resident_bytes(), a1.bytes);
+    }
+
+    #[test]
+    fn budget_evicts_least_recently_used() {
+        let one = entry("a", 1).bytes;
+        // room for exactly two digit models
+        let cache = PlanCache::standalone(2 * one + one / 2);
+        cache.get_or_compile(mid("a"), || Ok(entry("a", 1))).unwrap();
+        cache.get_or_compile(mid("b"), || Ok(entry("b", 2))).unwrap();
+        // touch `a` so `b` is the LRU victim
+        cache.get_or_compile(mid("a"), || panic!("resident")).unwrap();
+        cache.get_or_compile(mid("c"), || Ok(entry("c", 3))).unwrap();
+        assert!(cache.is_resident(mid("a")), "recently used survives");
+        assert!(!cache.is_resident(mid("b")), "LRU entry evicted");
+        assert!(cache.is_resident(mid("c")));
+        assert!(cache.resident_bytes() <= cache.max_bytes());
+        assert_eq!(cache.counters().misses(), 3);
+    }
+
+    #[test]
+    fn oversize_entries_are_served_uncached() {
+        let cache = PlanCache::standalone(16); // smaller than any real model
+        let e = cache.get_or_compile(mid("big"), || Ok(entry("big", 4))).unwrap();
+        assert!(e.bytes > cache.max_bytes());
+        assert!(!cache.is_resident(mid("big")));
+        assert_eq!(cache.resident_bytes(), 0);
+        // next lookup misses again (recompile, still served)
+        cache.get_or_compile(mid("big"), || Ok(entry("big", 4))).unwrap();
+        assert_eq!(cache.counters().compiles(), 2);
+    }
+
+    #[test]
+    fn failed_compiles_clear_the_marker_and_retry() {
+        let cache = PlanCache::standalone(64 << 20);
+        let err = cache.get_or_compile(mid("a"), || anyhow::bail!("no artifact"));
+        assert!(err.is_err());
+        assert!(!cache.is_resident(mid("a")));
+        cache.get_or_compile(mid("a"), || Ok(entry("a", 5))).unwrap();
+        assert!(cache.is_resident(mid("a")));
+    }
+
+    #[test]
+    fn retire_frees_budget_but_keeps_shared_entries_alive() {
+        let cache = PlanCache::standalone(64 << 20);
+        let held = cache.get_or_compile(mid("a"), || Ok(entry("a", 6))).unwrap();
+        assert!(cache.retire(mid("a")));
+        assert!(!cache.is_resident(mid("a")));
+        assert_eq!(cache.resident_bytes(), 0);
+        assert!(!cache.retire(mid("a")), "second retire is a no-op");
+        // the in-flight handle still works (Arc keeps the plan alive)
+        assert_eq!(held.plan.input_dim(), held.mlp.input_dim());
+    }
+
+    #[test]
+    fn concurrent_cold_gets_compile_exactly_once() {
+        let cache = Arc::new(PlanCache::standalone(64 << 20));
+        let compiles = Arc::new(AtomicU64::new(0));
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let cache = Arc::clone(&cache);
+                let compiles = Arc::clone(&compiles);
+                s.spawn(move || {
+                    let e = cache
+                        .get_or_compile(mid("shared"), || {
+                            // ordering: test-only event counter, no
+                            // publication — Relaxed is sufficient
+                            compiles.fetch_add(1, Ordering::Relaxed);
+                            std::thread::sleep(std::time::Duration::from_millis(10));
+                            Ok(entry("shared", 7))
+                        })
+                        .unwrap();
+                    assert_eq!(e.model, mid("shared"));
+                });
+            }
+        });
+        assert_eq!(compiles.load(Ordering::Relaxed), 1, "single-flight");
+        assert_eq!(cache.counters().compiles(), 1);
+        assert_eq!(cache.counters().misses() + cache.counters().hits(), 8);
+    }
+}

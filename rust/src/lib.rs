@@ -22,8 +22,10 @@
 //!   cross-checked against the AOT-compiled JAX/Pallas artifacts) — see
 //!   [`nn`];
 //! * the **serving coordinator**: request queue, dynamic batcher, worker
-//!   pool over pluggable execution backends, and the bank scheduler that
-//!   maps matmuls onto LUNA units with energy/latency accounting — see
+//!   pool over pluggable execution backends, the bank scheduler that
+//!   maps matmuls onto LUNA units with energy/latency accounting, and
+//!   multi-tenant model hosting behind a byte-budgeted compiled-plan
+//!   cache with hot model swap (see `## Multi-tenant serving`) — see
 //!   [`coordinator`];
 //! * the **execution backends**: the native batched LUT-GEMM (default,
 //!   zero external dependencies), the calibrated-timing backend (native
@@ -200,6 +202,53 @@
 //!   the tool for the queueing-aware saturation studies: sweep offered
 //!   load and compare the measured p99 against the waves model.
 //!
+//! ## Multi-tenant serving
+//!
+//! One coordinator hosts many model artifacts (`serving.models` in the
+//! config, `--model id=dir` on `repro serve`): requests carry an
+//! optional model id and are batched **per model** — a batch never
+//! mixes tenants, so every single-tenant bit-identity guarantee holds
+//! per tenant unchanged. An absent id means the default model
+//! (`artifacts_dir`), so single-tenant deployments and v0.1 clients
+//! are the degenerate case, not a special one.
+//!
+//! **Compiled-plan cache** ([`engine::PlanCache`]). Plan compilation
+//! (the counting-sort described under `## Kernel architecture`) is the
+//! expensive per-model step, so compiled [`nn::MlpPlan`]s live in a
+//! byte-budgeted LRU keyed by model id (`plan_cache.max_bytes`, default
+//! 64 MiB). Exact byte accounting (weights + plan heap), strict LRU
+//! eviction, and **single-flight** compilation — concurrent cold misses
+//! on one model block on a condvar while exactly one thread compiles;
+//! per-model churn properties are pinned by `tests/plan_cache.rs`. An
+//! entry larger than the whole budget is served uncached rather than
+//! evicting the world. A cache *hit* is one lock, one map lookup and an
+//! `Arc` clone — `tests/hot_path_allocs.rs` pins that warm two-tenant
+//! traffic allocates nothing. Evicting a plan never changes results:
+//! recompiles are bit-identical with the evicted plan for every
+//! multiplier kind (same tests), so the budget is purely a
+//! memory/latency trade-off. The metrics' `plan cache` line reports
+//! hits / misses / evictions / compiles, resident bytes and the
+//! compile and compile-stall p99s.
+//!
+//! **Hot model swap.** `LoadModel { model, dir }` installs a new
+//! tenant on a live server (geometry must match the resident models);
+//! `RetireModel { model }` drains it — new requests for the retiring
+//! model get a retryable `Rejected`, in-flight ones complete, and the
+//! `AdminOk` ack is sent only once nothing references the old weights,
+//! so `AdminOk` *is* the "swap window open" signal. No connection is
+//! dropped at any point; replacing a model is retire + load under live
+//! traffic (pinned by the hot-swap battery in `tests/net_serving.rs`).
+//!
+//! **Fleet rule.** A router backend must agree with the fleet on the
+//! *model set*, not just the dimensions — a backend serving a
+//! different tenant list fails the handshake and quarantines, so a
+//! model-tagged request never reaches a backend that would `Error` it.
+//!
+//! `repro loadgen --models N --mix zipf|uniform` drives a multi-tenant
+//! mix and lands per-tenant goodput, plan-cache hit rate and
+//! compile-stall p99 in `BENCH_serve.json`; per-model fabric
+//! weight-stationarity shows up in `model_stats`.
+//!
 //! ## Wire protocol
 //!
 //! [`net::protocol`] implements the network framing (std-only; no
@@ -211,7 +260,7 @@
 //! ```text
 //! offset  size  field
 //! 0       2     magic "LC" (0x4C 0x43)
-//! 2       1     version (currently 1)
+//! 2       1     version: (major << 4) | minor — currently 0x02 (v0.2)
 //! 3       1     frame type
 //! 4       4     payload length, u32 LE (<= 1 MiB)
 //! 8       n     payload
@@ -220,28 +269,47 @@
 //! Frame types (client → server): `Hello` (0x05, empty payload — must
 //! be answerable before any model state is known, hence the fixed
 //! header carries the version) and `Request` (0x01: `id u64`, `count
-//! u32`, `count × f32` pixels; `id` is client-assigned and echoed on
-//! the reply). Server → client: `Info` (0x06: `in_dim u32, out_dim
-//! u32, max_batch u32, backend string` — the `Hello` answer),
+//! u32`, `count × f32` pixels, then — since minor 2 — an optional
+//! trailing model id naming the tenant; absent means the default
+//! model, so a default-model request is byte-identical with v0.1.
+//! `id` is client-assigned and echoed on the reply). Server → client:
+//! `Info` (0x06: `in_dim u32, out_dim u32, max_batch u32, backend
+//! string`, then — minor 2 — `count u32` + that many model-id strings,
+//! the sorted non-default tenant list — the `Hello` answer),
 //! `Response` (0x02: `id u64, label u32, latency_us u64`, then the
 //! schedule-cost fields `energy_fj f64, latency_ps u64, programs u64,
 //! stationary_hits u64`, then `count u32, count × f32` logits),
 //! `Rejected` (0x03: `id u64, retry_after_us u64, reason string` — the
 //! 429: admission control turned the request away; retry after the
-//! hint) and `Error` (0x04: `id u64, reason string`). Strings are
-//! `len u32` + UTF-8, at most 1024 bytes. Replies arrive in
-//! *completion* order, not send order — clients match on `id`.
+//! hint; `retry_after_us = 0` means "retryable, no backoff will help
+//! here" — a retiring model) and `Error` (0x04: `id u64, reason
+//! string`). The minor-2 admin pair (see `## Multi-tenant serving`):
+//! `LoadModel` (0x07: model id + `dir` string), `RetireModel` (0x08:
+//! model id), each acknowledged by `AdminOk` (0x09: model id) or
+//! answered by `Error`. Strings are `len u32` + UTF-8, at most 1024
+//! bytes; a wire model id is one length byte (≤ 63) + UTF-8. Replies
+//! arrive in *completion* order, not send order — clients match on
+//! `id`.
 //!
-//! **Versioning rules.** The version byte bumps on ANY layout change —
-//! field order, widths, semantics, new frame types included. There is
-//! no negotiation: a server reads only its own version and answers
-//! anything else with an `Error` frame naming the supported version,
-//! then closes. Unknown frame types *within* a known version are a
-//! protocol error (close), not an extension point; extensions get a
-//! version bump. A corrupt or truncated frame closes the connection —
-//! a length-prefixed stream has no safe resynchronization point — but
-//! never affects other connections or the coordinator itself
-//! (`rust/tests/net_serving.rs` pins this).
+//! **Versioning rules.** The version byte splits into nibbles: the
+//! **major** bumps on any incompatible layout change (field order,
+//! widths, semantics) and the **minor** bumps when a frame gains
+//! trailing fields or new frame types appear — v0.2 added the
+//! `Request` model id, the `Info` model list and the admin frames. A
+//! reader accepts its own major at any minor ≥ 1, no negotiation: a
+//! frame with a foreign major gets an `Error` naming the supported
+//! version, then close. Same-or-lower minors decode *strictly*
+//! (trailing payload bytes are a protocol error); **higher** minors
+//! decode the fields this build knows and tolerate trailing unknown
+//! bytes — that is what lets an old server ignore a new client's
+//! extras and lets old clients talk to new servers unchanged (pinned
+//! by the compatibility battery in [`net::protocol`]). Unknown frame
+//! types *within* an accepted version are a protocol error (close),
+//! not an extension point; extensions get a minor bump. A corrupt or
+//! truncated frame closes the connection — a length-prefixed stream
+//! has no safe resynchronization point — but never affects other
+//! connections or the coordinator itself (`rust/tests/net_serving.rs`
+//! pins this).
 //!
 //! **Admission control.** `batcher.queue_depth` bounds the server's
 //! total outstanding requests (pending + in-flight). Past it, `submit`
@@ -272,7 +340,8 @@
 //!
 //! **Health / drain state machine.** Per backend: *connected* ⇄
 //! *quarantined*. A connect + `Hello`/`Info` handshake (agreeing with
-//! the fleet's model dimensions) promotes a probe connection to the
+//! the fleet's model dimensions *and* tenant list — see the fleet rule
+//! under `## Multi-tenant serving`) promotes a probe connection to the
 //! live multiplexed link; any link failure — read error, EOF, write
 //! failure, a connection-scoped `Error` frame — quarantines the
 //! backend: the link closes and **every request parked on it resolves

@@ -290,8 +290,12 @@ const STRONG_ORDERINGS: [&str; 4] =
 
 /// Is this path inside the hot-path module set the alloc/mpsc rules
 /// police? (`label` uses `/` separators — normalized by [`lint_tree`].)
+/// `engine/plan_cache.rs` is included by name: its hit path sits on the
+/// per-request serving path even though the rest of `engine/` is
+/// offline compilation code.
 fn is_hot_path(label: &str) -> bool {
     ["src/net/", "src/coordinator/", "src/util/"].iter().any(|m| label.contains(m))
+        || label.ends_with("src/engine/plan_cache.rs")
 }
 
 fn is_pool_module(label: &str) -> bool {
@@ -564,6 +568,14 @@ mod tests {
         assert!(lint_source("src/analysis/free.rs", src).is_empty(), "cold modules are free");
         assert_eq!(lint_source("src/net/hot.rs", src).len(), 2, "hot modules are policed");
         assert!(lint_source("src/util/pool.rs", src).is_empty(), "the pool is the allocator");
+        // engine/ is offline compilation code EXCEPT the plan cache,
+        // whose hit path serves every request
+        assert!(lint_source("src/engine/compile.rs", src).is_empty(), "engine is cold");
+        assert_eq!(
+            lint_source("src/engine/plan_cache.rs", src).len(),
+            2,
+            "the plan cache hit path is policed like the serving modules"
+        );
     }
 
     #[test]

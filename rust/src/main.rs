@@ -19,9 +19,9 @@
 
 use luna_cim::cells::tsmc65_library;
 use luna_cim::config::{BackendKind, Config, DispatchPolicy, RouterConfig, ShardAffinity};
-use luna_cim::coordinator::CoordinatorServer;
+use luna_cim::coordinator::{CoordinatorServer, ServerHandle};
 use luna_cim::multiplier::{MultiplierKind, MultiplierModel};
-use luna_cim::net::{loadgen, NetServer, RouterServer, Scenario};
+use luna_cim::net::{loadgen, ModelId, NetServer, RouterServer, Scenario};
 use luna_cim::report;
 use luna_cim::runtime::ArtifactStore;
 use luna_cim::Result;
@@ -34,9 +34,9 @@ USAGE:
   repro figures  [--id N] [--csv]
   repro mul <W> <Y>
   repro simulate [--multiplier SLUG] [--weight W] [--inputs a,b,c]
-  repro serve    [--config FILE] [--requests N] [--clients N] [--multiplier SLUG] [--backend native|calibrated|pjrt] [--time-scale X] [--gemm-threads N] [--shards N] [--affinity request|connection] [--listen ADDR]
+  repro serve    [--config FILE] [--requests N] [--clients N] [--multiplier SLUG] [--backend native|calibrated|pjrt] [--time-scale X] [--gemm-threads N] [--shards N] [--affinity request|connection] [--listen ADDR] [--model ID=DIR]..
   repro route    --backends A1,A2,.. [--config FILE] [--listen ADDR] [--policy hash|least-outstanding] [--vnodes N] [--max-connections N] [--probe-ms MS] [--max-backoff-ms MS]
-  repro loadgen  [--addr A1[,A2,..] | --synthetic] [--config FILE] [--scenario closed|poisson|bursty|all] [--loads R1,R2,..] [--connections N] [--requests N] [--burst N] [--retry] [--shards N] [--affinity request|connection] [--via-router N] [--router-scale P1,P2,..] [--backend SLUG] [--time-scale X] [--seed N] [--quick] [--save-json [PATH]]
+  repro loadgen  [--addr A1[,A2,..] | --synthetic] [--config FILE] [--scenario closed|poisson|bursty|all] [--loads R1,R2,..] [--connections N] [--requests N] [--burst N] [--retry] [--shards N] [--affinity request|connection] [--models N] [--mix zipf|uniform] [--via-router N] [--router-scale P1,P2,..] [--backend SLUG] [--time-scale X] [--seed N] [--quick] [--save-json [PATH]]
   repro eval     [--artifacts DIR]
   repro ablation [--artifacts DIR]
   repro export   [--out DIR]
@@ -55,6 +55,11 @@ Backends: native (in-process batched LUT-GEMM, default),
           request id, default) or connection (one connection pins one lane)
 --listen: expose the coordinator over TCP (wire protocol) instead of running
           the in-process synthetic load; serves until killed
+--model:  host an extra model (repeatable, or comma-separated id=dir pairs)
+          beside the default artifacts; requests name their tenant with the
+          wire `model` field, compiled plans share one byte-budgeted LRU
+          cache (plan_cache.max_bytes), and models hot-swap at runtime via
+          the LoadModel/RetireModel admin frames
 route:    front tier speaking the same wire protocol on both sides: probes
           each backend (Hello/Info), dispatches by consistent hash on the
           connection id (--policy hash, cache affinity) or least-outstanding,
@@ -77,7 +82,11 @@ loadgen:  drives a wire endpoint with closed-loop, open-loop poisson and bursty
           in-process N-backend fleet with the router tier; --router-scale
           sweeps backend-process counts through the router and lands the
           goodput/p99 scaling curve (plus the request-vs-connection affinity
-          stationary-hit-rate comparison) in the JSON
+          stationary-hit-rate comparison) in the JSON; --models N spawns a
+          multi-tenant server (default model + N-1 synthesized tenants) and
+          spreads requests across tenants (--mix zipf, the default, skews
+          toward hot tenants; uniform is even), landing per-tenant goodput,
+          plan-cache hit rate and compile-stall p99 in the JSON
 ";
 
 /// Minimal flag parser: `--key value` pairs plus positional args.
@@ -97,7 +106,15 @@ impl Args {
                     Some(v) if !v.starts_with("--") => it.next().unwrap().clone(),
                     _ => "true".to_string(), // boolean flag
                 };
-                flags.insert(key.to_string(), value);
+                // repeated flags accumulate comma-separated, so
+                // `--model a=x --model b=y` == `--model a=x,b=y`
+                flags
+                    .entry(key.to_string())
+                    .and_modify(|prev: &mut String| {
+                        prev.push(',');
+                        prev.push_str(&value);
+                    })
+                    .or_insert(value);
             } else {
                 positional.push(arg.clone());
             }
@@ -258,6 +275,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(listen) = args.flag("listen") {
         cfg.net.listen = listen.to_string();
     }
+    if let Some(list) = args.flag("model") {
+        for pair in list.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let Some((id, dir)) = pair.split_once('=') else {
+                anyhow::bail!("--model expects id=dir, got `{pair}`");
+            };
+            cfg.serving.models.push((id.trim().to_string(), dir.trim().to_string()));
+        }
+    }
     cfg.validate()?;
     if !cfg.net.listen.is_empty() {
         return serve_listen(cfg);
@@ -281,6 +306,15 @@ fn serve_listen(cfg: Config) -> Result<()> {
         cfg.batcher.shards,
         cfg.net.max_connections
     );
+    if !cfg.serving.models.is_empty() {
+        let ids: Vec<&str> = cfg.serving.models.iter().map(|(id, _)| id.as_str()).collect();
+        println!(
+            "hosting {} extra model(s) [{}] | plan cache budget {} bytes",
+            cfg.serving.models.len(),
+            ids.join(", "),
+            cfg.plan_cache.max_bytes
+        );
+    }
     println!("serving until killed (drive it with `repro loadgen --addr {}`)", net.local_addr());
     let metrics = server.metrics();
     let mut seen = 0u64;
@@ -417,20 +451,24 @@ struct Fleet {
     router: RouterServer,
     nets: Vec<NetServer>,
     servers: Vec<CoordinatorServer>,
+    /// Coordinator handles, kept for post-sweep model-stat harvesting.
+    handles: Vec<ServerHandle>,
 }
 
 impl Fleet {
     fn spawn(cfg: &Config, processes: usize) -> Result<Fleet> {
         let mut nets = Vec::new();
         let mut servers = Vec::new();
+        let mut handles = Vec::new();
         let mut backends = Vec::new();
         let slots = cfg.net.max_connections.max(cfg.loadgen.connections.saturating_mul(2));
         for _ in 0..processes {
             let (server, handle) = CoordinatorServer::start(cfg.clone())?;
-            let net = NetServer::bind(handle, "127.0.0.1:0", slots)?;
+            let net = NetServer::bind(handle.clone(), "127.0.0.1:0", slots)?;
             backends.push(net.local_addr().to_string());
             nets.push(net);
             servers.push(server);
+            handles.push(handle);
         }
         let rcfg = RouterConfig {
             listen: String::new(),
@@ -442,7 +480,7 @@ impl Fleet {
             max_backoff_ms: cfg.router.max_backoff_ms,
         };
         let router = RouterServer::bind(&rcfg)?;
-        Ok(Fleet { router, nets, servers })
+        Ok(Fleet { router, nets, servers, handles })
     }
 
     fn addr(&self) -> String {
@@ -452,7 +490,7 @@ impl Fleet {
     /// Shutdown order matters: router first (its backend links close
     /// gracefully), then the wire front-ends, then the coordinators.
     fn shutdown(self) {
-        let Fleet { router, nets, servers } = self;
+        let Fleet { router, nets, servers, handles: _ } = self;
         router.shutdown();
         for n in nets {
             n.shutdown();
@@ -532,6 +570,13 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     if let Some(a) = args.flag("affinity") {
         cfg.batcher.affinity = ShardAffinity::from_arg(a)?;
     }
+    let models_n: usize = args.flag_parse("models", 1)?;
+    anyhow::ensure!((1..=8).contains(&models_n), "--models must be in 1..=8");
+    anyhow::ensure!(
+        models_n == 1 || args.flag("addr").is_none(),
+        "--models spawns its own multi-tenant server; drop --addr"
+    );
+    let mix = loadgen::ModelMix::from_arg(args.flag("mix").unwrap_or("zipf"))?;
     let via_router: usize = args.flag_parse("via-router", 0)?;
     let router_scale: Vec<usize> = match args.flag("router-scale") {
         Some(list) => list
@@ -552,6 +597,17 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     // validate in BOTH modes — an invalid knob must not silently
     // produce a degenerate all-zero bench against an external endpoint
     cfg.validate()?;
+    // synthesize the extra tenants (tenant 0 is the default model) and
+    // host them on the spawned server(s)
+    let mut tenant_models: Vec<ModelId> = Vec::new();
+    if models_n > 1 {
+        tenant_models.push(ModelId::DEFAULT);
+        for k in 1..models_n {
+            tenant_models.push(ModelId::new(&format!("m{k}"))?);
+            let dir = synth_model_dir(k, cfg.batcher.max_batch)?;
+            cfg.serving.models.push((format!("m{k}"), dir));
+        }
+    }
     let scenarios = Scenario::parse_arg(args.flag("scenario").unwrap_or("all"))?;
     let opts = loadgen::LoadgenOptions {
         scenarios,
@@ -561,6 +617,8 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         burst: cfg.loadgen.burst,
         seed: args.flag_parse("seed", 17u64)?,
         retry: cfg.loadgen.retry,
+        models: tenant_models,
+        mix,
     };
     // `--save-json` without a value parses as boolean "true"
     let save_json: Option<String> = match args.flag("save-json") {
@@ -569,10 +627,10 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         None => None,
     };
 
-    let (results, backend) = match args.flag("addr") {
+    let (results, backend, plan) = match args.flag("addr") {
         Some(addr) => {
             println!("driving external endpoint {addr}");
-            (loadgen::run(addr, &opts)?, "external".to_string())
+            (loadgen::run(addr, &opts)?, "external".to_string(), None)
         }
         None if via_router > 0 => {
             if args.flag("synthetic").is_some() {
@@ -589,8 +647,9 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
             );
             let results = loadgen::run(&addr, &opts)?;
             println!("router metrics:\n{}", fleet.router.metrics().snapshot().render());
+            let plan = harvest_plan_cache(&fleet.servers, &fleet.handles);
             fleet.shutdown();
-            (results, backend)
+            (results, backend, Some(plan))
         }
         None => {
             if args.flag("synthetic").is_some() {
@@ -602,7 +661,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
             // generator's own connections (2x: one case's clients may
             // linger server-side while the next case connects)
             let slots = cfg.net.max_connections.max(cfg.loadgen.connections.saturating_mul(2));
-            let net = NetServer::bind(handle, "127.0.0.1:0", slots)?;
+            let net = NetServer::bind(handle.clone(), "127.0.0.1:0", slots)?;
             let addr = net.local_addr().to_string();
             println!(
                 "spawned loopback server on {addr} (backend {backend}, {} workers, batch {}, \
@@ -615,8 +674,10 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
             let results = loadgen::run(&addr, &opts)?;
             net.shutdown();
             println!("server-side metrics:\n{}", server.metrics().snapshot().render());
+            let plan =
+                harvest_plan_cache(std::slice::from_ref(&server), std::slice::from_ref(&handle));
             server.shutdown();
-            (results, backend)
+            (results, backend, Some(plan))
         }
     };
     print!("{}", loadgen::render_table(&results));
@@ -647,11 +708,54 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         Some(measure_affinity_hit_rates(&cfg, &opts)?)
     };
     if let Some(path) = save_json {
-        let json = loadgen::render_json_full(&results, &backend, &scaling, affinity.as_ref());
+        let json = loadgen::render_json_full(
+            &results,
+            &backend,
+            &scaling,
+            affinity.as_ref(),
+            plan.as_ref(),
+        );
         std::fs::write(&path, json)?;
         println!("wrote {} cases to {path}", results.len());
     }
     Ok(())
+}
+
+/// Harvest the server-side plan-cache and per-model weight-stationary
+/// columns from the spawned coordinator(s): counters sum fleet-wide,
+/// the p99s take the worst backend.
+fn harvest_plan_cache(
+    servers: &[CoordinatorServer],
+    handles: &[ServerHandle],
+) -> loadgen::PlanCacheReport {
+    let mut report = loadgen::PlanCacheReport::default();
+    for s in servers {
+        let snap = s.metrics().snapshot();
+        report.hits += snap.plan_hits;
+        report.misses += snap.plan_misses;
+        report.evictions += snap.plan_evictions;
+        report.compiles += snap.plan_compiles;
+        report.compile_p99_us = report.compile_p99_us.max(snap.plan_compile_p99_us);
+        report.stall_p99_us = report.stall_p99_us.max(snap.plan_stall_p99_us);
+    }
+    let mut names = vec![String::new()]; // the default model first
+    if let Some(h) = handles.first() {
+        names.extend(h.models());
+    }
+    for name in names {
+        let Ok(id) = ModelId::new(&name) else { continue };
+        let (mut programs, mut hits) = (0u64, 0u64);
+        for h in handles {
+            if let Some(st) = h.model_stats(id) {
+                programs += st.programs;
+                hits += st.stationary_hits;
+            }
+        }
+        let total = programs + hits;
+        let rate = if total == 0 { 0.0 } else { hits as f64 / total as f64 };
+        report.model_stationary.push((loadgen::tenant_name(id), rate));
+    }
+    report
 }
 
 /// Write a self-contained synthesized artifact directory (random
@@ -663,6 +767,18 @@ fn synth_artifacts_dir(batch: usize) -> Result<String> {
     let dir = luna_cim::util::test_dir("loadgen-synth");
     let store = ArtifactStore::new(&dir);
     store.write_synthetic(&QuantMlp::random_digits(5), &DigitsDataset::generate(4, 99), batch)?;
+    Ok(dir.display().to_string())
+}
+
+/// Synthesize one extra tenant's artifact directory (digits-shaped like
+/// the default synthetic model, distinct weights per tenant seed) and
+/// return its path.
+fn synth_model_dir(tenant: usize, batch: usize) -> Result<String> {
+    use luna_cim::nn::{DigitsDataset, QuantMlp};
+    let dir = luna_cim::util::test_dir(&format!("loadgen-tenant-m{tenant}"));
+    let store = ArtifactStore::new(&dir);
+    let mlp = QuantMlp::random_digits(23 + tenant as u64);
+    store.write_synthetic(&mlp, &DigitsDataset::generate(4, 99), batch)?;
     Ok(dir.display().to_string())
 }
 

@@ -5,12 +5,18 @@
 //! and receive halves onto two owned stream clones so an open-loop
 //! generator can keep sending on schedule while another thread drains
 //! replies (replies arrive in *completion* order, matched by `id`).
+//!
+//! [`handshake`] is the one `Hello` → `Info` implementation in the
+//! crate: the client connect path and the router's backend health probe
+//! both call it, so version negotiation has a single source of truth
+//! (the protocol module's versioning rules are exercised through
+//! exactly one code path).
 
-use super::protocol::{read_frame_with, write_frame_with, Frame};
+use super::protocol::{read_frame, read_frame_with, write_frame, write_frame_with, Frame, ModelId};
 use crate::util::PooledVec;
 use crate::Result;
 use anyhow::{bail, Context};
-use std::io::{BufReader, BufWriter, Write as _};
+use std::io::{BufReader, BufWriter, Read, Write};
 use std::net::{TcpStream, ToSocketAddrs};
 
 /// Model/serving parameters the server reports in its `Info` frame.
@@ -20,6 +26,35 @@ pub struct ServerInfo {
     pub out_dim: usize,
     pub max_batch: usize,
     pub backend: String,
+    /// Sorted non-default model ids the server can serve (minor 2; an
+    /// older server reports none). The default model is implicit.
+    pub models: Vec<String>,
+}
+
+/// The client side of the version handshake, over any frame transport:
+/// send `Hello`, read the server's `Info`. Fails on version mismatch
+/// (the server answers with an `Error` frame naming its version), on a
+/// `Rejected` turn-away, or if the peer is not a LUNA server.
+///
+/// This is the **only** handshake implementation — [`NetClient::connect`]
+/// and the router's health probe ([`crate::net::router`]) both defer
+/// here rather than re-implement the `Hello`→`Info` exchange.
+pub fn handshake<R: Read, W: Write>(r: &mut R, w: &mut W) -> Result<ServerInfo> {
+    write_frame(w, &Frame::Hello)?;
+    w.flush().context("flushing Hello")?;
+    match read_frame(r)? {
+        Some(Frame::Info { in_dim, out_dim, max_batch, backend, models }) => Ok(ServerInfo {
+            in_dim: in_dim as usize,
+            out_dim: out_dim as usize,
+            max_batch: max_batch as usize,
+            backend,
+            models,
+        }),
+        Some(Frame::Error { reason, .. }) => bail!("server refused handshake: {reason}"),
+        Some(Frame::Rejected { reason, .. }) => bail!("server rejected connection: {reason}"),
+        Some(other) => bail!("unexpected handshake reply {other:?}"),
+        None => bail!("server closed the connection during handshake"),
+    }
 }
 
 /// Sending half: owns a buffered stream clone, the id counter and a
@@ -47,27 +82,15 @@ pub struct NetClient {
 }
 
 impl NetClient {
-    /// Connect and handshake: sends `Hello`, reads the server `Info`.
-    /// Fails on version mismatch (the server answers with an `Error`
-    /// frame naming its version) or if the peer is not a LUNA server.
+    /// Connect and handshake ([`handshake`]): sends `Hello`, reads the
+    /// server `Info`.
     pub fn connect(addr: impl ToSocketAddrs) -> Result<NetClient> {
         let stream = TcpStream::connect(addr).context("connecting to serving endpoint")?;
         let _ = stream.set_nodelay(true);
         let read_half = stream.try_clone().context("cloning stream for receive half")?;
         let mut tx = NetSender { w: BufWriter::new(stream), next_id: 0, scratch: Vec::new() };
         let mut rx = NetReceiver { r: BufReader::new(read_half), scratch: Vec::new() };
-        tx.send_frame(&Frame::Hello)?;
-        let info = match rx.recv()? {
-            Frame::Info { in_dim, out_dim, max_batch, backend } => ServerInfo {
-                in_dim: in_dim as usize,
-                out_dim: out_dim as usize,
-                max_batch: max_batch as usize,
-                backend,
-            },
-            Frame::Error { reason, .. } => bail!("server refused handshake: {reason}"),
-            Frame::Rejected { reason, .. } => bail!("server rejected connection: {reason}"),
-            other => bail!("unexpected handshake reply {other:?}"),
-        };
+        let info = handshake(&mut rx.r, &mut tx.w)?;
         Ok(NetClient { tx, rx, info })
     }
 
@@ -76,9 +99,15 @@ impl NetClient {
         &self.info
     }
 
-    /// Pipelined send: returns the wire id the reply will carry.
+    /// Pipelined send to the default model: returns the wire id the
+    /// reply will carry.
     pub fn send(&mut self, pixels: &[f32]) -> Result<u64> {
         self.tx.send(pixels)
+    }
+
+    /// Pipelined send against a named model.
+    pub fn send_model(&mut self, model: ModelId, pixels: &[f32]) -> Result<u64> {
+        self.tx.send_model(model, pixels)
     }
 
     /// Block for the next reply frame (any pending id).
@@ -90,7 +119,12 @@ impl NetClient {
     /// (Only correct with no other requests in flight on this client —
     /// use [`NetClient::split`] for pipelined traffic.)
     pub fn infer(&mut self, pixels: &[f32]) -> Result<Frame> {
-        let id = self.send(pixels)?;
+        self.infer_model(ModelId::DEFAULT, pixels)
+    }
+
+    /// [`infer`](Self::infer) against a named model.
+    pub fn infer_model(&mut self, model: ModelId, pixels: &[f32]) -> Result<Frame> {
+        let id = self.send_model(model, pixels)?;
         let reply = self.recv()?;
         match reply {
             Frame::Response { id: got, .. }
@@ -101,6 +135,31 @@ impl NetClient {
                 bail!("reply id {got} for request {id} — interleaved use of infer()?")
             }
             _ => Ok(reply),
+        }
+    }
+
+    /// Admin round-trip: hot-load the artifacts at `dir` as `model`.
+    /// Call with no requests in flight on this client (the ack is
+    /// matched by arrival order, not id).
+    pub fn load_model(&mut self, model: ModelId, dir: &str) -> Result<()> {
+        self.tx.send_frame(&Frame::LoadModel { model, dir: dir.to_string() })?;
+        self.recv_admin_ok(model, "load")
+    }
+
+    /// Admin round-trip: retire `model`. The server acks only after the
+    /// model's in-flight requests have drained, so a returned `Ok` means
+    /// the swap window is open. Call with no requests in flight on this
+    /// client.
+    pub fn retire_model(&mut self, model: ModelId) -> Result<()> {
+        self.tx.send_frame(&Frame::RetireModel { model })?;
+        self.recv_admin_ok(model, "retire")
+    }
+
+    fn recv_admin_ok(&mut self, model: ModelId, what: &str) -> Result<()> {
+        match self.recv()? {
+            Frame::AdminOk { model: got } if got == model => Ok(()),
+            Frame::Error { reason, .. } => bail!("{what} of model {model} failed: {reason}"),
+            other => bail!("unexpected {what} reply {other:?}"),
         }
     }
 
@@ -119,13 +178,20 @@ impl NetSender {
         self.next_id
     }
 
-    /// Send one request frame; returns its wire id. The pixel slice
-    /// copies into a pooled buffer and the frame encodes through the
-    /// sender's scratch — zero allocations once warm.
+    /// Send one default-model request frame; returns its wire id. The
+    /// pixel slice copies into a pooled buffer and the frame encodes
+    /// through the sender's scratch — zero allocations once warm.
     pub fn send(&mut self, pixels: &[f32]) -> Result<u64> {
+        self.send_model(ModelId::DEFAULT, pixels)
+    }
+
+    /// [`send`](Self::send) against a named model. The id is a stack
+    /// copy ([`ModelId`] stores its bytes inline), so tagged sends stay
+    /// allocation-free too.
+    pub fn send_model(&mut self, model: ModelId, pixels: &[f32]) -> Result<u64> {
         let id = self.next_id;
         self.next_id += 1;
-        self.send_frame(&Frame::Request { id, pixels: PooledVec::from_slice(pixels) })?;
+        self.send_frame(&Frame::Request { id, pixels: PooledVec::from_slice(pixels), model })?;
         Ok(id)
     }
 

@@ -40,12 +40,21 @@
 //! [`super::router::RouterServer`] and land the shard-per-process
 //! scaling curve in the JSON's `scaling` array ([`ScalePoint`]).
 //!
+//! **Multi-tenant mixing** (`--models N --mix zipf|uniform`): when
+//! `LoadgenOptions::models` lists more than one tenant, every request
+//! picks its model from the seeded mix distribution (zipf skews toward
+//! the head tenants with p(k) ∝ 1/(k+1); uniform is even) and each case
+//! reports per-tenant sent/ok/goodput ([`TenantCase`]). The CLI pairs
+//! this with a server-side harvest ([`PlanCacheReport`]): plan-cache
+//! hit rate, compile-stall p99 and per-model weight-stationary hit
+//! rates land next to the cases in `BENCH_serve.json`.
+//!
 //! lint: allow-file(alloc): the generator is the measuring *client*;
 //! its allocations land on loadgen threads, never on the server's
 //! serving hot path (which `tests/hot_path_allocs.rs` pins at zero).
 
 use super::client::NetClient;
-use super::protocol::Frame;
+use super::protocol::{Frame, ModelId};
 use crate::util::Rng;
 use crate::Result;
 use anyhow::Context;
@@ -96,6 +105,54 @@ impl Scenario {
     }
 }
 
+/// How requests spread across the tenant models.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelMix {
+    /// p(k) ∝ 1/(k+1): tenant 0 is hot, the tail is cold — the shape
+    /// that exercises plan-cache eviction and recompile stalls.
+    Zipf,
+    /// Every tenant equally likely.
+    Uniform,
+}
+
+impl ModelMix {
+    pub fn slug(self) -> &'static str {
+        match self {
+            ModelMix::Zipf => "zipf",
+            ModelMix::Uniform => "uniform",
+        }
+    }
+
+    pub fn from_arg(s: &str) -> Result<ModelMix> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "zipf" => Ok(ModelMix::Zipf),
+            "uniform" => Ok(ModelMix::Uniform),
+            other => anyhow::bail!("unknown mix `{other}` (zipf|uniform)"),
+        }
+    }
+
+    /// Unnormalized tenant weights for `n` tenants.
+    fn weights(self, n: usize) -> Vec<f64> {
+        match self {
+            ModelMix::Zipf => (0..n).map(|k| 1.0 / (k + 1) as f64).collect(),
+            ModelMix::Uniform => vec![1.0; n],
+        }
+    }
+}
+
+/// Draw one tenant index from the (unnormalized) weight vector.
+fn pick_tenant(rng: &mut Rng, weights: &[f64]) -> usize {
+    let total: f64 = weights.iter().sum();
+    let mut u = rng.gen_f64() * total;
+    for (i, w) in weights.iter().enumerate() {
+        u -= w;
+        if u <= 0.0 {
+            return i;
+        }
+    }
+    weights.len().saturating_sub(1)
+}
+
 /// Loadgen knobs (defaults come from [`crate::config::LoadgenConfig`]).
 #[derive(Debug, Clone)]
 pub struct LoadgenOptions {
@@ -107,10 +164,17 @@ pub struct LoadgenOptions {
     pub requests_per_level: usize,
     /// Burst size for the bursty scenario.
     pub burst: usize,
-    /// Workload RNG seed (pixel noise + arrival gaps).
+    /// Workload RNG seed (pixel noise + arrival gaps + tenant picks).
     pub seed: u64,
     /// Honor `retry_after_us` hints with client-side re-sends.
     pub retry: bool,
+    /// Tenant models to spread requests over. Empty or one entry =
+    /// single-tenant (every request goes to that model, or the default);
+    /// tenant 0 should be [`ModelId::DEFAULT`] when the server's default
+    /// model is part of the mix.
+    pub models: Vec<ModelId>,
+    /// Mix distribution over `models` (ignored with < 2 tenants).
+    pub mix: ModelMix,
 }
 
 /// One measured (scenario, offered-load) case.
@@ -146,6 +210,58 @@ pub struct CaseResult {
     pub sim_p99_ns: u64,
     /// Mean retry hint carried on `Rejected` frames (µs; 0 if none).
     pub mean_retry_after_us: f64,
+    /// Per-tenant breakdown (empty when the case ran single-tenant).
+    pub tenants: Vec<TenantCase>,
+}
+
+/// One tenant's share of a multi-tenant case.
+#[derive(Debug, Clone)]
+pub struct TenantCase {
+    /// Model id (`default` for the default model).
+    pub model: String,
+    /// Logical requests that terminated against this tenant.
+    pub sent: usize,
+    pub ok: usize,
+    /// This tenant's served rate over the case wall time.
+    pub goodput_rps: f64,
+}
+
+/// Server-side multi-tenant columns harvested after a sweep (the CLI
+/// fills this from the coordinator's metrics when it spawned the server
+/// itself; an external endpoint's internals are not observable).
+#[derive(Debug, Clone, Default)]
+pub struct PlanCacheReport {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub compiles: u64,
+    pub compile_p99_us: u64,
+    /// p99 time a request stalled behind another request's in-flight
+    /// compile of the same model (the single-flight queueing cost).
+    pub stall_p99_us: u64,
+    /// Per-model weight-stationary hit rate (`default` names the
+    /// default model; meaningful on the calibrated backend).
+    pub model_stationary: Vec<(String, f64)>,
+}
+
+impl PlanCacheReport {
+    pub fn hit_rate(&self) -> f64 {
+        let lookups = self.hits + self.misses;
+        if lookups == 0 {
+            0.0
+        } else {
+            self.hits as f64 / lookups as f64
+        }
+    }
+}
+
+/// JSON/report name for a tenant model id.
+pub fn tenant_name(model: ModelId) -> String {
+    if model.is_default() {
+        "default".to_string()
+    } else {
+        model.as_str().to_string()
+    }
 }
 
 impl CaseResult {
@@ -198,15 +314,31 @@ struct ConnTally {
     errors: usize,
     retries: usize,
     retry_hint_sum_us: u64,
+    /// Per-tenant terminal/ok counts, indexed like `LoadgenOptions::models`.
+    tenant_sent: Vec<usize>,
+    tenant_ok: Vec<usize>,
 }
 
 impl ConnTally {
-    /// Record a terminal reply. `Rejected` handling (terminal vs retry)
-    /// lives at the call sites, which own the retry policy.
-    fn absorb(&mut self, frame: &Frame, sent_at: Option<Instant>) {
+    /// A tally with per-tenant slots for `tenants` models.
+    fn sized(tenants: usize) -> ConnTally {
+        ConnTally {
+            tenant_sent: vec![0; tenants.max(1)],
+            tenant_ok: vec![0; tenants.max(1)],
+            ..ConnTally::default()
+        }
+    }
+
+    /// Record a terminal reply against tenant index `tenant`. `Rejected`
+    /// handling (terminal vs retry) lives at the call sites, which own
+    /// the retry policy.
+    fn absorb(&mut self, frame: &Frame, sent_at: Option<Instant>, tenant: usize) {
+        let tenant = tenant.min(self.tenant_sent.len().saturating_sub(1));
+        self.tenant_sent[tenant] += 1;
         match frame {
             Frame::Response { cost, .. } => {
                 self.ok += 1;
+                self.tenant_ok[tenant] += 1;
                 if let Some(t) = sent_at {
                     self.wall_us.push(t.elapsed().as_micros() as u64);
                 }
@@ -233,17 +365,19 @@ fn resend(
     tx: &mut super::client::NetSender,
     rng: &mut Rng,
     in_dim: usize,
+    models: &[ModelId],
     pending: &Mutex<HashMap<u64, Pending>>,
     order: RetryOrder,
 ) -> Result<()> {
     sleep_until(order.due);
     let pixels: Vec<f32> = (0..in_dim).map(|_| rng.gen_range_f32(0.0, 1.0)).collect();
     let id = tx.next_id();
-    pending
-        .lock()
-        .unwrap()
-        .insert(id, Pending { first_sent: order.first_sent, attempt: order.attempt });
-    tx.send(&pixels)?;
+    let model = models.get(order.tenant).copied().unwrap_or(ModelId::DEFAULT);
+    pending.lock().unwrap().insert(
+        id,
+        Pending { first_sent: order.first_sent, attempt: order.attempt, tenant: order.tenant },
+    );
+    tx.send_model(model, &pixels)?;
     Ok(())
 }
 
@@ -253,6 +387,8 @@ struct Pending {
     /// latency from here, so retry queueing shows in the percentiles.
     first_sent: Instant,
     attempt: u32,
+    /// Tenant index the request was sent against (retries stick to it).
+    tenant: usize,
 }
 
 /// A receiver-decided re-send, executed by the sender thread once due.
@@ -260,6 +396,7 @@ struct RetryOrder {
     due: Instant,
     attempt: u32,
     first_sent: Instant,
+    tenant: usize,
 }
 
 /// Run every requested case against `addr` and return the results in
@@ -297,16 +434,20 @@ fn run_closed(addr: &str, opts: &LoadgenOptions) -> Result<CaseResult> {
     let mut threads = Vec::new();
     for (c, mut client) in clients.into_iter().enumerate() {
         let seed = opts.seed ^ (c as u64).wrapping_mul(0x9E37_79B9);
+        let models = opts.models.clone();
+        let weights = opts.mix.weights(models.len().max(1));
         threads.push(std::thread::spawn(move || -> Result<ConnTally> {
             let mut rng = Rng::seed_from_u64(seed);
             let in_dim = client.info().in_dim;
-            let mut tally = ConnTally::default();
+            let mut tally = ConnTally::sized(models.len());
             for _ in 0..quota {
+                let tenant = pick_tenant(&mut rng, &weights);
+                let model = models.get(tenant).copied().unwrap_or(ModelId::DEFAULT);
                 let pixels: Vec<f32> = (0..in_dim).map(|_| rng.gen_range_f32(0.0, 1.0)).collect();
                 let sent_at = Instant::now();
                 let mut attempt = 0u32;
                 loop {
-                    let reply = client.infer(&pixels)?;
+                    let reply = client.infer_model(model, &pixels)?;
                     match &reply {
                         Frame::Rejected { retry_after_us, .. }
                             if retry && attempt < RETRY_ATTEMPTS && *retry_after_us >= 1 =>
@@ -316,7 +457,7 @@ fn run_closed(addr: &str, opts: &LoadgenOptions) -> Result<CaseResult> {
                             backoff(*retry_after_us);
                         }
                         _ => {
-                            tally.absorb(&reply, Some(sent_at));
+                            tally.absorb(&reply, Some(sent_at), tenant);
                             break;
                         }
                     }
@@ -326,7 +467,7 @@ fn run_closed(addr: &str, opts: &LoadgenOptions) -> Result<CaseResult> {
         }));
     }
     let tallies = join_tallies(threads)?;
-    Ok(aggregate("closed", 0, opts.connections, quota * opts.connections, t0, tallies))
+    Ok(aggregate("closed", 0, opts, quota * opts.connections, t0, tallies))
 }
 
 fn run_open(
@@ -349,6 +490,9 @@ fn run_open(
         let seed = opts.seed ^ (c as u64).wrapping_mul(0x517C_C1B7);
         let burst = opts.burst.max(1);
         let retry = opts.retry;
+        let models = opts.models.clone();
+        let weights = opts.mix.weights(models.len().max(1));
+        let tenants = models.len();
         let (mut tx, mut rx, info) = client.split();
         // send-time map shared between the two halves: replies arrive
         // in completion order, so latency is matched by wire id.
@@ -393,11 +537,13 @@ fn run_open(
                 while i < parked.len() {
                     if parked[i].due <= now {
                         let o = parked.swap_remove(i);
-                        resend(&mut tx, &mut rng, info.in_dim, &sender_pending, o)?;
+                        resend(&mut tx, &mut rng, info.in_dim, &models, &sender_pending, o)?;
                     } else {
                         i += 1;
                     }
                 }
+                let tenant = pick_tenant(&mut rng, &weights);
+                let model = models.get(tenant).copied().unwrap_or(ModelId::DEFAULT);
                 let pixels: Vec<f32> =
                     (0..info.in_dim).map(|_| rng.gen_range_f32(0.0, 1.0)).collect();
                 // record the send time before the frame can be answered
@@ -405,8 +551,8 @@ fn run_open(
                 sender_pending
                     .lock()
                     .unwrap()
-                    .insert(id, Pending { first_sent: Instant::now(), attempt: 0 });
-                tx.send(&pixels)?;
+                    .insert(id, Pending { first_sent: Instant::now(), attempt: 0, tenant });
+                tx.send_model(model, &pixels)?;
             }
             // drain: keep servicing re-send orders until the receiver
             // has its full quota of terminal replies and hangs up
@@ -427,19 +573,20 @@ fn run_open(
                         .map(|(i, _)| i)
                         .unwrap();
                     let o = parked.swap_remove(next);
-                    resend(&mut tx, &mut rng, info.in_dim, &sender_pending, o)?;
+                    resend(&mut tx, &mut rng, info.in_dim, &models, &sender_pending, o)?;
                 }
             }
             Ok(())
         });
         threads.push(std::thread::spawn(move || -> Result<ConnTally> {
-            let mut tally = ConnTally::default();
+            let mut tally = ConnTally::sized(tenants);
             let mut terminals = 0usize;
             while terminals < quota {
                 let reply = rx.recv().context("reply stream ended early")?;
                 let pend = reply_id(&reply).and_then(|id| pending.lock().unwrap().remove(&id));
                 let first_sent = pend.as_ref().map(|p| p.first_sent);
                 let attempt = pend.as_ref().map(|p| p.attempt).unwrap_or(0);
+                let tenant = pend.as_ref().map(|p| p.tenant).unwrap_or(0);
                 if let Frame::Rejected { retry_after_us, .. } = &reply {
                     if retry && attempt < RETRY_ATTEMPTS && *retry_after_us >= 1 {
                         let order = RetryOrder {
@@ -447,6 +594,7 @@ fn run_open(
                                 + Duration::from_micros(*retry_after_us).min(MAX_RETRY_BACKOFF),
                             attempt: attempt + 1,
                             first_sent: first_sent.unwrap_or_else(Instant::now),
+                            tenant,
                         };
                         if retry_tx.send(order).is_ok() {
                             tally.retries += 1;
@@ -454,7 +602,7 @@ fn run_open(
                         }
                     }
                 }
-                tally.absorb(&reply, first_sent);
+                tally.absorb(&reply, first_sent, tenant);
                 terminals += 1;
             }
             drop(retry_tx); // ends the sender's drain loop
@@ -466,14 +614,7 @@ fn run_open(
         }));
     }
     let tallies = join_tallies(threads)?;
-    Ok(aggregate(
-        scenario.slug(),
-        rate_rps,
-        opts.connections,
-        quota * opts.connections,
-        t0,
-        tallies,
-    ))
+    Ok(aggregate(scenario.slug(), rate_rps, opts, quota * opts.connections, t0, tallies))
 }
 
 fn reply_id(frame: &Frame) -> Option<u64> {
@@ -501,7 +642,7 @@ fn join_tallies(
 fn aggregate(
     scenario: &'static str,
     offered_rps: u64,
-    connections: usize,
+    opts: &LoadgenOptions,
     sent: usize,
     t0: Instant,
     tallies: Vec<ConnTally>,
@@ -511,6 +652,8 @@ fn aggregate(
     let mut sim_ns = Vec::new();
     let (mut ok, mut rejected, mut errors) = (0usize, 0usize, 0usize);
     let (mut retries, mut hint_sum) = (0usize, 0u64);
+    let mut tenant_sent = vec![0usize; opts.models.len()];
+    let mut tenant_ok = vec![0usize; opts.models.len()];
     for t in tallies {
         wall_us.extend(t.wall_us);
         sim_ns.extend(t.sim_ns);
@@ -519,14 +662,35 @@ fn aggregate(
         errors += t.errors;
         retries += t.retries;
         hint_sum += t.retry_hint_sum_us;
+        for (i, n) in t.tenant_sent.iter().enumerate().take(tenant_sent.len()) {
+            tenant_sent[i] += n;
+        }
+        for (i, n) in t.tenant_ok.iter().enumerate().take(tenant_ok.len()) {
+            tenant_ok[i] += n;
+        }
     }
     wall_us.sort_unstable();
     sim_ns.sort_unstable();
     let served_rps = if wall_s > 0.0 { ok as f64 / wall_s } else { 0.0 };
+    // a single-tenant case carries no per-tenant breakdown
+    let tenants = if opts.models.len() > 1 {
+        opts.models
+            .iter()
+            .zip(tenant_sent.iter().zip(&tenant_ok))
+            .map(|(m, (&sent, &ok))| TenantCase {
+                model: tenant_name(*m),
+                sent,
+                ok,
+                goodput_rps: if wall_s > 0.0 { ok as f64 / wall_s } else { 0.0 },
+            })
+            .collect()
+    } else {
+        Vec::new()
+    };
     CaseResult {
         scenario,
         offered_rps,
-        connections,
+        connections: opts.connections,
         sent,
         ok,
         rejected,
@@ -540,6 +704,7 @@ fn aggregate(
         sim_p50_ns: percentile(&sim_ns, 0.50),
         sim_p99_ns: percentile(&sim_ns, 0.99),
         mean_retry_after_us: if rejected > 0 { hint_sum as f64 / rejected as f64 } else { 0.0 },
+        tenants,
     }
 }
 
@@ -611,29 +776,43 @@ pub fn render_table(results: &[CaseResult]) -> String {
 /// Hand-rolled JSON (no serde in this offline image): the
 /// `BENCH_serve.json` artifact CI uploads next to `BENCH_lut_gemm.json`.
 pub fn render_json(results: &[CaseResult], backend: &str) -> String {
-    render_json_full(results, backend, &[], None)
+    render_json_full(results, backend, &[], None, None)
 }
 
-/// [`render_json`] plus the router-tier columns: the `scaling` array
-/// (goodput + wall/sim p99 per backend-process count, routed through
-/// `repro route`) and the affinity hit-rate comparison when measured.
+/// [`render_json`] plus the router-tier and multi-tenant columns: the
+/// `scaling` array (goodput + wall/sim p99 per backend-process count,
+/// routed through `repro route`), the affinity hit-rate comparison and
+/// the server-side plan-cache harvest, when measured.
 pub fn render_json_full(
     results: &[CaseResult],
     backend: &str,
     scaling: &[ScalePoint],
     affinity: Option<&AffinityComparison>,
+    plan: Option<&PlanCacheReport>,
 ) -> String {
     let mut out = String::from("{\n  \"bench\": \"serve\",\n");
     let _ = writeln!(out, "  \"backend\": \"{backend}\",");
     out.push_str("  \"cases\": [\n");
     for (i, r) in results.iter().enumerate() {
+        let mut tenants = String::new();
+        for (j, t) in r.tenants.iter().enumerate() {
+            let _ = write!(
+                tenants,
+                "{{\"model\": \"{}\", \"sent\": {}, \"ok\": {}, \"goodput_rps\": {:.1}}}",
+                t.model, t.sent, t.ok, t.goodput_rps,
+            );
+            if j + 1 < r.tenants.len() {
+                tenants.push_str(", ");
+            }
+        }
         let _ = write!(
             out,
             "    {{\"scenario\": \"{}\", \"offered_rps\": {}, \"connections\": {}, \
              \"sent\": {}, \"ok\": {}, \"rejected\": {}, \"errors\": {}, \"retries\": {}, \
              \"reject_rate\": {:.4}, \"throughput_rps\": {:.1}, \"goodput_rps\": {:.1}, \
              \"wall_s\": {:.3}, \"wall_p50_us\": {}, \"wall_p99_us\": {}, \
-             \"sim_p50_ns\": {}, \"sim_p99_ns\": {}, \"mean_retry_after_us\": {:.1}}}",
+             \"sim_p50_ns\": {}, \"sim_p99_ns\": {}, \"mean_retry_after_us\": {:.1}, \
+             \"tenants\": [{}]}}",
             r.scenario,
             r.offered_rps,
             r.connections,
@@ -651,6 +830,7 @@ pub fn render_json_full(
             r.sim_p50_ns,
             r.sim_p99_ns,
             r.mean_retry_after_us,
+            tenants,
         );
         out.push_str(if i + 1 < results.len() { ",\n" } else { "\n" });
     }
@@ -664,19 +844,41 @@ pub fn render_json_full(
         );
         out.push_str(if i + 1 < scaling.len() { ",\n" } else { "\n" });
     }
-    match affinity {
-        Some(a) => {
-            out.push_str("  ],\n");
-            let _ = writeln!(
-                out,
-                "  \"affinity_stationary_hit_rate\": {{\"request\": {:.4}, \
-                 \"connection\": {:.4}}}",
-                a.request_hit_rate, a.connection_hit_rate
-            );
-            out.push_str("}\n");
-        }
-        None => out.push_str("  ]\n}\n"),
+    out.push_str("  ]");
+    if let Some(a) = affinity {
+        out.push_str(",\n");
+        let _ = write!(
+            out,
+            "  \"affinity_stationary_hit_rate\": {{\"request\": {:.4}, \
+             \"connection\": {:.4}}}",
+            a.request_hit_rate, a.connection_hit_rate
+        );
     }
+    if let Some(p) = plan {
+        out.push_str(",\n");
+        let _ = write!(
+            out,
+            "  \"plan_cache\": {{\"hits\": {}, \"misses\": {}, \"hit_rate\": {:.4}, \
+             \"evictions\": {}, \"compiles\": {}, \"compile_p99_us\": {}, \
+             \"stall_p99_us\": {}}},\n",
+            p.hits,
+            p.misses,
+            p.hit_rate(),
+            p.evictions,
+            p.compiles,
+            p.compile_p99_us,
+            p.stall_p99_us,
+        );
+        out.push_str("  \"model_stationary_hit_rate\": {");
+        for (j, (model, rate)) in p.model_stationary.iter().enumerate() {
+            let _ = write!(out, "\"{model}\": {rate:.4}");
+            if j + 1 < p.model_stationary.len() {
+                out.push_str(", ");
+            }
+        }
+        out.push('}');
+    }
+    out.push_str("\n}\n");
     out
 }
 
@@ -732,6 +934,7 @@ mod tests {
             sim_p50_ns: 500,
             sim_p99_ns: 900,
             mean_retry_after_us: 450.0,
+            tenants: Vec::new(),
         };
         let json = render_json(&[r.clone(), r], "native");
         for key in [
@@ -761,7 +964,7 @@ mod tests {
             ScalePoint { processes: 4, goodput_rps: 3100.0, wall_p99_us: 1700, sim_p99_ns: 820 },
         ];
         let aff = AffinityComparison { request_hit_rate: 0.91, connection_hit_rate: 0.88 };
-        let json = render_json_full(&[], "native", &scaling, Some(&aff));
+        let json = render_json_full(&[], "native", &scaling, Some(&aff), None);
         for key in [
             "\"scaling\": [",
             "\"processes\": 1",
@@ -773,6 +976,91 @@ mod tests {
         ] {
             assert!(json.contains(key), "missing {key} in {json}");
         }
+    }
+
+    #[test]
+    fn mix_slugs_roundtrip_and_weights_shape() {
+        for m in [ModelMix::Zipf, ModelMix::Uniform] {
+            assert_eq!(ModelMix::from_arg(m.slug()).unwrap(), m);
+        }
+        assert!(ModelMix::from_arg("pareto").is_err());
+        let z = ModelMix::Zipf.weights(3);
+        assert!(z[0] > z[1] && z[1] > z[2], "zipf skews to the head: {z:?}");
+        assert!((z[0] - 1.0).abs() < 1e-12 && (z[1] - 0.5).abs() < 1e-12);
+        assert!(ModelMix::Uniform.weights(4).iter().all(|&w| w == 1.0));
+    }
+
+    #[test]
+    fn pick_tenant_follows_the_weights() {
+        let mut rng = Rng::seed_from_u64(11);
+        let weights = ModelMix::Zipf.weights(3);
+        let mut counts = [0usize; 3];
+        for _ in 0..30_000 {
+            counts[pick_tenant(&mut rng, &weights)] += 1;
+        }
+        assert!(counts[0] > counts[1] && counts[1] > counts[2], "{counts:?}");
+        // zipf over 3 tenants: p0 = 6/11 ≈ 0.545
+        let p0 = counts[0] as f64 / 30_000.0;
+        assert!((p0 - 6.0 / 11.0).abs() < 0.02, "p0 {p0}");
+        // uniform stays uniform
+        let uw = ModelMix::Uniform.weights(3);
+        let mut uc = [0usize; 3];
+        for _ in 0..30_000 {
+            uc[pick_tenant(&mut rng, &uw)] += 1;
+        }
+        for c in uc {
+            assert!((c as f64 / 30_000.0 - 1.0 / 3.0).abs() < 0.02, "{uc:?}");
+        }
+    }
+
+    #[test]
+    fn json_tenant_and_plan_cache_columns_render() {
+        let r = CaseResult {
+            scenario: "closed",
+            offered_rps: 0,
+            connections: 2,
+            sent: 100,
+            ok: 100,
+            rejected: 0,
+            errors: 0,
+            retries: 0,
+            wall_s: 1.0,
+            throughput_rps: 100.0,
+            goodput_rps: 100.0,
+            wall_p50_us: 500,
+            wall_p99_us: 900,
+            sim_p50_ns: 0,
+            sim_p99_ns: 0,
+            mean_retry_after_us: 0.0,
+            tenants: vec![
+                TenantCase { model: "default".into(), sent: 67, ok: 67, goodput_rps: 67.0 },
+                TenantCase { model: "m1".into(), sent: 33, ok: 33, goodput_rps: 33.0 },
+            ],
+        };
+        let plan = PlanCacheReport {
+            hits: 30,
+            misses: 10,
+            evictions: 4,
+            compiles: 6,
+            compile_p99_us: 2048,
+            stall_p99_us: 512,
+            model_stationary: vec![("default".into(), 0.9), ("m1".into(), 0.75)],
+        };
+        assert!((plan.hit_rate() - 0.75).abs() < 1e-12);
+        assert_eq!(PlanCacheReport::default().hit_rate(), 0.0);
+        let json = render_json_full(&[r], "calibrated", &[], None, Some(&plan));
+        for key in [
+            "\"tenants\": [{\"model\": \"default\", \"sent\": 67, \"ok\": 67, \
+             \"goodput_rps\": 67.0}, {\"model\": \"m1\", \"sent\": 33, \"ok\": 33, \
+             \"goodput_rps\": 33.0}]",
+            "\"plan_cache\": {\"hits\": 30, \"misses\": 10, \"hit_rate\": 0.7500, \
+             \"evictions\": 4, \"compiles\": 6, \"compile_p99_us\": 2048, \"stall_p99_us\": 512}",
+            "\"model_stationary_hit_rate\": {\"default\": 0.9000, \"m1\": 0.7500}",
+        ] {
+            assert!(json.contains(key), "missing {key} in {json}");
+        }
+        assert_eq!(tenant_name(ModelId::DEFAULT), "default");
+        assert_eq!(tenant_name(ModelId::new("m1").unwrap()), "m1");
     }
 
     #[test]

@@ -29,8 +29,11 @@ pub mod protocol;
 pub mod router;
 pub mod server;
 
-pub use client::{NetClient, NetReceiver, NetSender, ServerInfo};
-pub use loadgen::{AffinityComparison, CaseResult, LoadgenOptions, ScalePoint, Scenario};
-pub use protocol::{Frame, WireCost};
+pub use client::{handshake, NetClient, NetReceiver, NetSender, ServerInfo};
+pub use loadgen::{
+    AffinityComparison, CaseResult, LoadgenOptions, ModelMix, PlanCacheReport, ScalePoint,
+    Scenario, TenantCase,
+};
+pub use protocol::{Frame, ModelId, WireCost, MAX_MODEL_ID};
 pub use router::{mix64, pick_least_outstanding, HashRing, RouterServer};
 pub use server::NetServer;

@@ -8,32 +8,73 @@
 //! ```text
 //! offset  size  field
 //! 0       2     magic  "LC" (0x4C 0x43)
-//! 2       1     version (currently 1)
+//! 2       1     version: (major << 4) | minor (currently 0x02)
 //! 3       1     frame type
 //! 4       4     payload length, u32 LE (<= MAX_PAYLOAD)
 //! 8       n     payload (type-specific, all integers LE)
 //! ```
 //!
-//! Decoding is strict: bad magic, unknown version, unknown frame type,
-//! oversized or short payloads, and trailing payload bytes are all hard
-//! errors — the transport layer closes the connection rather than
+//! The version byte is split into a 4-bit **major** (incompatible
+//! layout changes) and a 4-bit **minor** (append-only field additions).
+//! A reader accepts any frame whose major nibble matches its own:
+//! same-or-lower minors decode strictly (trailing payload bytes are a
+//! hard error), while *higher* minors decode the fields this build
+//! knows and tolerate trailing unknown bytes — that is what lets an
+//! old server keep serving a newer client. Minor additions must be
+//! append-only: a new field goes after every existing one, and once a
+//! later field exists every earlier optional field must be encoded.
+//!
+//! Everything else stays strict: bad magic, major-version mismatch,
+//! unknown frame type, oversized or short payloads are all hard errors
+//! — the transport layer closes the connection rather than
 //! resynchronize (a length-prefixed stream has no safe resync point).
+//!
+//! This module is the **single source of truth** for version handling:
+//! the server front-end, the client, and the router's health probe all
+//! move frames exclusively through [`read_frame_with`] /
+//! [`write_frame_with`] (the probe shares the client's `Hello`→`Info`
+//! helper, [`crate::net::client::handshake`]), so no other module
+//! inspects or re-encodes version bytes.
 
 use crate::util::PooledVec;
 use crate::Result;
 use anyhow::{bail, ensure, Context};
+use std::fmt;
 use std::io::{Read, Write};
 
 /// Frame magic: ASCII "LC".
 pub const MAGIC: [u8; 2] = *b"LC";
-/// Current protocol version. Bump on ANY layout change (see the
-/// versioning rules in the crate docs).
-pub const VERSION: u8 = 1;
+/// Protocol major version (high nibble of the wire version byte). Bump
+/// only on incompatible layout changes; readers reject any other major.
+pub const MAJOR: u8 = 0;
+/// Protocol minor version (low nibble). Bump on append-only field
+/// additions; readers accept every minor ≥ 1 of their own major
+/// (higher minors decode leniently — see the module docs). Minor 2
+/// added the optional `Request` model id, the `Info` model list and
+/// the `LoadModel`/`RetireModel`/`AdminOk` admin frames.
+pub const MINOR: u8 = 2;
+/// The version byte this build writes: `(MAJOR << 4) | MINOR`.
+pub const VERSION: u8 = (MAJOR << 4) | MINOR;
 /// Upper bound on a frame payload (1 MiB) — caps per-connection memory
 /// and rejects garbage lengths before allocating.
 pub const MAX_PAYLOAD: u32 = 1 << 20;
 /// Upper bound on a reason string carried in `Rejected`/`Error` frames.
 pub const MAX_REASON: usize = 1024;
+/// Upper bound on a model id's byte length. Ids ride on every request
+/// and key the plan cache through a fixed-size `Copy` buffer
+/// ([`ModelId`]), which is what keeps the tagged hot path
+/// allocation-free.
+pub const MAX_MODEL_ID: usize = 63;
+
+/// Major nibble of a wire version byte.
+pub fn version_major(v: u8) -> u8 {
+    v >> 4
+}
+
+/// Minor nibble of a wire version byte.
+pub fn version_minor(v: u8) -> u8 {
+    v & 0x0f
+}
 
 const TYPE_REQUEST: u8 = 0x01;
 const TYPE_RESPONSE: u8 = 0x02;
@@ -41,6 +82,69 @@ const TYPE_REJECTED: u8 = 0x03;
 const TYPE_ERROR: u8 = 0x04;
 const TYPE_HELLO: u8 = 0x05;
 const TYPE_INFO: u8 = 0x06;
+const TYPE_LOAD_MODEL: u8 = 0x07;
+const TYPE_RETIRE_MODEL: u8 = 0x08;
+const TYPE_ADMIN_OK: u8 = 0x09;
+
+/// A model identifier: at most [`MAX_MODEL_ID`] bytes of UTF-8 stored
+/// inline (no heap), so tagging a request, keying the plan cache and
+/// carrying an id through the router's routing state are all
+/// allocation-free copies. The empty id names the server's **default
+/// model** (the one `artifacts_dir` points at) — a v0.1 `Request`,
+/// which has no model field at all, decodes to exactly this.
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ModelId {
+    len: u8,
+    buf: [u8; MAX_MODEL_ID],
+}
+
+impl ModelId {
+    /// The default-model id (the empty id).
+    pub const DEFAULT: ModelId = ModelId { len: 0, buf: [0; MAX_MODEL_ID] };
+
+    /// Construct from a string; errors if it exceeds [`MAX_MODEL_ID`]
+    /// bytes. The empty string is the default-model id.
+    pub fn new(s: &str) -> Result<ModelId> {
+        ensure!(s.len() <= MAX_MODEL_ID, "model id `{s}` exceeds {MAX_MODEL_ID} bytes");
+        let mut buf = [0u8; MAX_MODEL_ID];
+        buf[..s.len()].copy_from_slice(s.as_bytes());
+        Ok(ModelId { len: s.len() as u8, buf })
+    }
+
+    /// Does this id name the default model (empty id)?
+    pub fn is_default(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The id as a string slice (`""` for the default model).
+    pub fn as_str(&self) -> &str {
+        // constructors only copy whole `&str`s in (trailing bytes stay
+        // zeroed, keeping derived Eq/Hash sound), so this never fails
+        std::str::from_utf8(&self.buf[..self.len as usize]).unwrap_or("")
+    }
+}
+
+impl Default for ModelId {
+    fn default() -> Self {
+        Self::DEFAULT
+    }
+}
+
+impl fmt::Display for ModelId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.is_default() {
+            f.write_str("<default>")
+        } else {
+            f.write_str(self.as_str())
+        }
+    }
+}
+
+impl fmt::Debug for ModelId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "ModelId({self})")
+    }
+}
 
 /// Simulated CiM cost fields riding on every response — the wire form
 /// of [`crate::coordinator::ScheduleCost`] (energy is the per-request
@@ -56,6 +160,8 @@ pub struct WireCost {
 /// One protocol frame. Clients send `Hello` then `Request`s; servers
 /// answer `Info`, then one `Response`, `Rejected` or `Error` per
 /// request (matched by `id`, in completion order — not send order).
+/// `LoadModel`/`RetireModel` are the admin pair for hot model swap,
+/// each acknowledged by `AdminOk` (or answered by `Error`).
 ///
 /// The float payloads (`Request` pixels, `Response` logits) live in
 /// pooled buffers ([`PooledVec`]; plain `Vec<f32>` converts in with
@@ -65,8 +171,11 @@ pub struct WireCost {
 #[derive(Debug, Clone, PartialEq)]
 pub enum Frame {
     /// Client → server: classify one image. `id` is client-assigned and
-    /// echoed verbatim on the matching reply.
-    Request { id: u64, pixels: PooledVec<f32> },
+    /// echoed verbatim on the matching reply. `model` picks which of
+    /// the server's resident artifacts serves it; it is the minor-2
+    /// trailing field, absent on the wire for the default model (so
+    /// default traffic keeps the v0.1 byte layout).
+    Request { id: u64, pixels: PooledVec<f32>, model: ModelId },
     /// Server → client: the served answer plus the cost model fields.
     Response {
         id: u64,
@@ -78,16 +187,29 @@ pub enum Frame {
     },
     /// Server → client: 429-style admission rejection. `retry_after_us`
     /// is the structured backoff hint (`0` = unspecified, e.g. a
-    /// connection-limit turn-away with no queue state to derive one).
+    /// connection-limit turn-away with no queue state to derive one, or
+    /// a retiring model — where no backoff will help).
     Rejected { id: u64, retry_after_us: u64, reason: String },
     /// Server → client: the request was admitted but failed (worker
-    /// error) or was itself malformed (wrong pixel count).
+    /// error) or was itself malformed (wrong pixel count, unknown
+    /// model).
     Error { id: u64, reason: String },
     /// Client → server: first frame on a connection; the version in the
     /// header doubles as version negotiation.
     Hello,
     /// Server → client: model/serving parameters, answering `Hello`.
-    Info { in_dim: u32, out_dim: u32, max_batch: u32, backend: String },
+    /// `models` (minor 2) is the sorted list of non-default model ids
+    /// currently servable — the router's fleet check compares these.
+    Info { in_dim: u32, out_dim: u32, max_batch: u32, backend: String, models: Vec<String> },
+    /// Admin → server: install the artifact at `dir` under `model`
+    /// without dropping connections (dims must match resident models).
+    LoadModel { model: ModelId, dir: String },
+    /// Admin → server: retire `model`. In-flight requests drain (the
+    /// ack arrives after the drain); new requests get `Rejected`.
+    RetireModel { model: ModelId },
+    /// Server → admin: the `LoadModel`/`RetireModel` for `model` took
+    /// effect.
+    AdminOk { model: ModelId },
 }
 
 impl Frame {
@@ -99,17 +221,25 @@ impl Frame {
             Frame::Error { .. } => TYPE_ERROR,
             Frame::Hello => TYPE_HELLO,
             Frame::Info { .. } => TYPE_INFO,
+            Frame::LoadModel { .. } => TYPE_LOAD_MODEL,
+            Frame::RetireModel { .. } => TYPE_RETIRE_MODEL,
+            Frame::AdminOk { .. } => TYPE_ADMIN_OK,
         }
     }
 
     fn encode_payload_into(&self, p: &mut Vec<u8>) {
         p.clear();
         match self {
-            Frame::Request { id, pixels } => {
+            Frame::Request { id, pixels, model } => {
                 put_u64(p, *id);
                 put_u32(p, pixels.len() as u32);
                 for &x in pixels.iter() {
                     put_f32(p, x);
+                }
+                // minor-2 trailing field, omitted for the default model
+                // so untagged traffic keeps the v0.1 byte layout
+                if !model.is_default() {
+                    put_model(p, model);
                 }
             }
             Frame::Response { id, label, latency_us, cost, logits } => {
@@ -135,27 +265,56 @@ impl Frame {
                 put_str(p, reason);
             }
             Frame::Hello => {}
-            Frame::Info { in_dim, out_dim, max_batch, backend } => {
+            Frame::Info { in_dim, out_dim, max_batch, backend, models } => {
                 put_u32(p, *in_dim);
                 put_u32(p, *out_dim);
                 put_u32(p, *max_batch);
                 put_str(p, backend);
+                // minor-2 trailing field: always encoded, even when
+                // empty (append-only rule — later minors may add
+                // fields after it)
+                put_u32(p, models.len() as u32);
+                for m in models {
+                    put_str(p, m);
+                }
+            }
+            Frame::LoadModel { model, dir } => {
+                put_model(p, model);
+                put_str(p, dir);
+            }
+            Frame::RetireModel { model } => {
+                put_model(p, model);
+            }
+            Frame::AdminOk { model } => {
+                put_model(p, model);
             }
         }
     }
 
-    fn decode_payload(frame_type: u8, payload: &[u8]) -> Result<Frame> {
+    fn decode_payload(frame_type: u8, version: u8, payload: &[u8]) -> Result<Frame> {
+        let minor = version_minor(version);
         let mut c = Cursor { buf: payload, pos: 0 };
         let frame = match frame_type {
             TYPE_REQUEST => {
                 let id = c.u64()?;
                 let n = c.u32()? as usize;
-                ensure!(n * 4 == c.remaining(), "request pixel count disagrees with payload");
+                ensure!(n * 4 <= c.remaining(), "request pixel count disagrees with payload");
                 let mut pixels = PooledVec::with_capacity(n);
                 for _ in 0..n {
                     pixels.push(c.f32()?);
                 }
-                Frame::Request { id, pixels }
+                // the optional minor-2 model id: absent = default model
+                // (which is also what every v0.1 request decodes to)
+                let model = if minor >= 2 && c.remaining() > 0 {
+                    c.model()?
+                } else {
+                    ensure!(
+                        minor >= 2 || c.remaining() == 0,
+                        "request pixel count disagrees with payload"
+                    );
+                    ModelId::DEFAULT
+                };
+                Frame::Request { id, pixels, model }
             }
             TYPE_RESPONSE => {
                 let id = c.u64()?;
@@ -168,7 +327,7 @@ impl Frame {
                     stationary_hits: c.u64()?,
                 };
                 let n = c.u32()? as usize;
-                ensure!(n * 4 == c.remaining(), "logit count disagrees with payload");
+                ensure!(n * 4 <= c.remaining(), "logit count disagrees with payload");
                 let mut logits = PooledVec::with_capacity(n);
                 for _ in 0..n {
                     logits.push(c.f32()?);
@@ -192,11 +351,32 @@ impl Frame {
                 let out_dim = c.u32()?;
                 let max_batch = c.u32()?;
                 let backend = c.str()?;
-                Frame::Info { in_dim, out_dim, max_batch, backend }
+                // minor-2 trailing field; a v0.1 Info simply has none
+                let mut models = Vec::new();
+                if minor >= 2 && c.remaining() > 0 {
+                    let n = c.u32()? as usize;
+                    ensure!(n <= 4096, "model list length {n} is implausible");
+                    models.reserve(n);
+                    for _ in 0..n {
+                        models.push(c.str()?);
+                    }
+                }
+                Frame::Info { in_dim, out_dim, max_batch, backend, models }
             }
+            TYPE_LOAD_MODEL => {
+                let model = c.model()?;
+                let dir = c.str()?;
+                Frame::LoadModel { model, dir }
+            }
+            TYPE_RETIRE_MODEL => Frame::RetireModel { model: c.model()? },
+            TYPE_ADMIN_OK => Frame::AdminOk { model: c.model()? },
             other => bail!("unknown frame type 0x{other:02x}"),
         };
-        ensure!(c.remaining() == 0, "{} trailing payload bytes", c.remaining());
+        // strict for our own minor and below; a *newer* minor may carry
+        // append-only fields this build does not know — tolerate them
+        if minor <= MINOR {
+            ensure!(c.remaining() == 0, "{} trailing payload bytes", c.remaining());
+        }
         Ok(frame)
     }
 }
@@ -233,10 +413,12 @@ pub fn write_frame_with<W: Write>(w: &mut W, frame: &Frame, scratch: &mut Vec<u8
 
 /// Read one frame. `Ok(None)` is a clean end-of-stream (the peer closed
 /// at a frame boundary); any malformed, truncated, oversized or
-/// version-mismatched input is an `Err` — the caller must close the
-/// connection, since a corrupt length prefix poisons everything after it.
-/// Allocates a fresh payload buffer per call; long-lived readers use
-/// [`read_frame_with`] with a reusable scratch instead.
+/// major-version-mismatched input is an `Err` — the caller must close
+/// the connection, since a corrupt length prefix poisons everything
+/// after it. Same-major frames of a *higher* minor decode leniently
+/// (see the module docs). Allocates a fresh payload buffer per call;
+/// long-lived readers use [`read_frame_with`] with a reusable scratch
+/// instead.
 pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Frame>> {
     let mut scratch = Vec::new();
     read_frame_with(r, &mut scratch)
@@ -253,10 +435,11 @@ pub fn read_frame_with<R: Read>(r: &mut R, scratch: &mut Vec<u8>) -> Result<Opti
         ReadOutcome::Filled => {}
     }
     ensure!(header[0..2] == MAGIC, "bad frame magic {:02x}{:02x}", header[0], header[1]);
+    let version = header[2];
     ensure!(
-        header[2] == VERSION,
-        "protocol version {} unsupported (this build speaks {VERSION})",
-        header[2]
+        version_major(version) == MAJOR && version_minor(version) >= 1,
+        "protocol version {version:#04x} unsupported (this build speaks major {MAJOR} \
+         minor {MINOR}, plus every other minor of that major)"
     );
     let frame_type = header[3];
     let len = u32::from_le_bytes(header[4..8].try_into().unwrap());
@@ -270,7 +453,7 @@ pub fn read_frame_with<R: Read>(r: &mut R, scratch: &mut Vec<u8>) -> Result<Opti
     }
     let payload = &mut scratch[..len];
     r.read_exact(payload).context("reading frame payload (truncated frame?)")?;
-    Frame::decode_payload(frame_type, payload)
+    Frame::decode_payload(frame_type, version, payload)
 }
 
 enum ReadOutcome {
@@ -321,6 +504,14 @@ fn put_str(p: &mut Vec<u8>, s: &str) {
     p.extend_from_slice(&s.as_bytes()[..end]);
 }
 
+/// A model id on the wire: one length byte (≤ [`MAX_MODEL_ID`]) + that
+/// many bytes of UTF-8. Compact because it rides on every request.
+fn put_model(p: &mut Vec<u8>, m: &ModelId) {
+    let s = m.as_str();
+    p.push(s.len() as u8);
+    p.extend_from_slice(s.as_bytes());
+}
+
 /// Bounds-checked little-endian payload reader.
 struct Cursor<'a> {
     buf: &'a [u8],
@@ -362,6 +553,13 @@ impl<'a> Cursor<'a> {
         let bytes = self.take(n)?;
         Ok(std::str::from_utf8(bytes).context("reason is not UTF-8")?.to_string())
     }
+
+    fn model(&mut self) -> Result<ModelId> {
+        let n = self.take(1)?[0] as usize;
+        ensure!(n <= MAX_MODEL_ID, "model id length {n} exceeds {MAX_MODEL_ID}");
+        let bytes = self.take(n)?;
+        ModelId::new(std::str::from_utf8(bytes).context("model id is not UTF-8")?)
+    }
 }
 
 #[cfg(test)]
@@ -377,12 +575,21 @@ mod tests {
         back
     }
 
+    fn mid(s: &str) -> ModelId {
+        ModelId::new(s).unwrap()
+    }
+
     #[test]
     fn every_frame_kind_roundtrips_bit_exactly() {
         let frames = vec![
             Frame::Hello,
-            Frame::Request { id: 7, pixels: vec![0.0, 0.25, -1.5, f32::MIN_POSITIVE].into() },
-            Frame::Request { id: u64::MAX, pixels: vec![].into() },
+            Frame::Request {
+                id: 7,
+                pixels: vec![0.0, 0.25, -1.5, f32::MIN_POSITIVE].into(),
+                model: ModelId::DEFAULT,
+            },
+            Frame::Request { id: u64::MAX, pixels: vec![].into(), model: ModelId::DEFAULT },
+            Frame::Request { id: 3, pixels: vec![0.5; 8].into(), model: mid("tenant-a") },
             Frame::Response {
                 id: 9,
                 label: 3,
@@ -398,7 +605,23 @@ mod tests {
             Frame::Rejected { id: 11, retry_after_us: 500, reason: "server at capacity".into() },
             Frame::Rejected { id: 0, retry_after_us: 0, reason: String::new() },
             Frame::Error { id: 13, reason: "worker died".into() },
-            Frame::Info { in_dim: 64, out_dim: 10, max_batch: 8, backend: "calibrated".into() },
+            Frame::Info {
+                in_dim: 64,
+                out_dim: 10,
+                max_batch: 8,
+                backend: "calibrated".into(),
+                models: vec![],
+            },
+            Frame::Info {
+                in_dim: 64,
+                out_dim: 10,
+                max_batch: 8,
+                backend: "native".into(),
+                models: vec!["tenant-a".into(), "tenant-b".into()],
+            },
+            Frame::LoadModel { model: mid("m1"), dir: "/tmp/artifacts-m1".into() },
+            Frame::RetireModel { model: mid("m1") },
+            Frame::AdminOk { model: mid("m1") },
         ];
         for f in frames {
             assert_eq!(roundtrip(f.clone()), f);
@@ -409,11 +632,15 @@ mod tests {
     fn frames_concatenate_on_one_stream() {
         let mut buf = Vec::new();
         write_frame(&mut buf, &Frame::Hello).unwrap();
-        write_frame(&mut buf, &Frame::Request { id: 1, pixels: vec![0.5; 64].into() }).unwrap();
+        let req = Frame::Request { id: 1, pixels: vec![0.5; 64].into(), model: ModelId::DEFAULT };
+        write_frame(&mut buf, &req).unwrap();
         let mut r = &buf[..];
         assert_eq!(read_frame(&mut r).unwrap(), Some(Frame::Hello));
         match read_frame(&mut r).unwrap() {
-            Some(Frame::Request { id: 1, pixels }) => assert_eq!(pixels.len(), 64),
+            Some(Frame::Request { id: 1, pixels, model }) => {
+                assert_eq!(pixels.len(), 64);
+                assert!(model.is_default());
+            }
             other => panic!("unexpected {other:?}"),
         }
         assert_eq!(read_frame(&mut r).unwrap(), None, "clean EOF after last frame");
@@ -428,7 +655,8 @@ mod tests {
         assert!(read_frame(&mut short).is_err());
         // a full header promising more payload than the stream holds
         let mut buf = Vec::new();
-        write_frame(&mut buf, &Frame::Request { id: 1, pixels: vec![0.5; 16].into() }).unwrap();
+        let req = Frame::Request { id: 1, pixels: vec![0.5; 16].into(), model: ModelId::DEFAULT };
+        write_frame(&mut buf, &req).unwrap();
         buf.truncate(buf.len() - 3);
         let mut r = &buf[..];
         assert!(read_frame(&mut r).is_err());
@@ -443,10 +671,15 @@ mod tests {
         bad_magic[0] = b'X';
         assert!(read_frame(&mut &bad_magic[..]).is_err());
 
-        let mut bad_version = ok.clone();
-        bad_version[2] = VERSION + 1;
-        let err = read_frame(&mut &bad_version[..]).unwrap_err();
+        // a different *major* nibble is a hard error...
+        let mut bad_major = ok.clone();
+        bad_major[2] = ((MAJOR + 1) << 4) | MINOR;
+        let err = read_frame(&mut &bad_major[..]).unwrap_err();
         assert!(format!("{err:#}").contains("version"), "{err:#}");
+        // ...as is minor 0 (no such protocol was ever spoken)
+        let mut bad_minor = ok.clone();
+        bad_minor[2] = MAJOR << 4;
+        assert!(read_frame(&mut &bad_minor[..]).is_err());
 
         let mut bad_type = ok.clone();
         bad_type[3] = 0x7f;
@@ -458,10 +691,72 @@ mod tests {
     }
 
     #[test]
+    fn v01_requests_decode_to_the_default_model_and_stay_strict() {
+        // a minor-1 request carries no model field and decodes to the
+        // default model — backward compatibility for old clients
+        let mut buf = Vec::new();
+        let req = Frame::Request { id: 5, pixels: vec![1.0, 2.0].into(), model: ModelId::DEFAULT };
+        write_frame(&mut buf, &req).unwrap();
+        buf[2] = (MAJOR << 4) | 1; // relabel as a v0.1 frame (same bytes)
+        match read_frame(&mut &buf[..]).unwrap() {
+            Some(Frame::Request { id: 5, pixels, model }) => {
+                assert_eq!(pixels.len(), 2);
+                assert!(model.is_default());
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // ...but a v0.1 frame is still decoded strictly: trailing bytes
+        // (here: what would be a minor-2 model field) are an error
+        let mut tagged = Vec::new();
+        let req = Frame::Request { id: 5, pixels: vec![1.0, 2.0].into(), model: mid("a") };
+        write_frame(&mut tagged, &req).unwrap();
+        tagged[2] = (MAJOR << 4) | 1;
+        assert!(read_frame(&mut &tagged[..]).is_err());
+    }
+
+    #[test]
+    fn higher_minor_frames_with_trailing_unknown_bytes_are_accepted() {
+        // the forward-compat rule from the crate docs' `## Wire
+        // protocol`: a v-next *minor* may append fields we don't know;
+        // decode the fields we do know and tolerate the rest
+        let next = (MAJOR << 4) | (MINOR + 1);
+
+        let mut hello = Vec::new();
+        write_frame(&mut hello, &Frame::Hello).unwrap();
+        hello[2] = next;
+        hello[4] = 3; // claim 3 payload bytes of future fields
+        hello.extend_from_slice(&[0xde, 0xad, 0xbf]);
+        assert_eq!(read_frame(&mut &hello[..]).unwrap(), Some(Frame::Hello));
+
+        let mut info = Vec::new();
+        let f = Frame::Info {
+            in_dim: 64,
+            out_dim: 10,
+            max_batch: 8,
+            backend: "native".into(),
+            models: vec!["tenant-a".into()],
+        };
+        write_frame(&mut info, &f).unwrap();
+        info[2] = next;
+        let len = u32::from_le_bytes(info[4..8].try_into().unwrap()) + 5;
+        info[4..8].copy_from_slice(&len.to_le_bytes());
+        info.extend_from_slice(&[1, 2, 3, 4, 5]);
+        assert_eq!(read_frame(&mut &info[..]).unwrap(), Some(f));
+
+        // same-minor frames stay strict
+        let mut strict = Vec::new();
+        write_frame(&mut strict, &Frame::Hello).unwrap();
+        strict[4] = 2;
+        strict.extend_from_slice(&[0, 0]);
+        assert!(read_frame(&mut &strict[..]).is_err());
+    }
+
+    #[test]
     fn inconsistent_counts_and_trailing_bytes_are_rejected() {
         // request whose pixel count disagrees with the payload length
         let mut buf = Vec::new();
-        write_frame(&mut buf, &Frame::Request { id: 1, pixels: vec![1.0, 2.0].into() }).unwrap();
+        let req = Frame::Request { id: 1, pixels: vec![1.0, 2.0].into(), model: ModelId::DEFAULT };
+        write_frame(&mut buf, &req).unwrap();
         // corrupt the count (first payload field after the 8-byte id)
         buf[8 + 8] = 9;
         assert!(read_frame(&mut &buf[..]).is_err());
@@ -472,6 +767,23 @@ mod tests {
         hello[4] = 2; // claim 2 payload bytes
         hello.extend_from_slice(&[0, 0]);
         assert!(read_frame(&mut &hello[..]).is_err());
+    }
+
+    #[test]
+    fn model_ids_are_bounded_and_inline() {
+        assert!(ModelId::new(&"x".repeat(MAX_MODEL_ID)).is_ok());
+        assert!(ModelId::new(&"x".repeat(MAX_MODEL_ID + 1)).is_err());
+        assert!(ModelId::new("").unwrap().is_default());
+        assert_eq!(mid("tenant-a").as_str(), "tenant-a");
+        assert_eq!(mid("tenant-a"), mid("tenant-a"));
+        assert_ne!(mid("tenant-a"), mid("tenant-b"));
+        // a wire model id longer than the cap is rejected at decode
+        let mut buf = Vec::new();
+        let req = Frame::Request { id: 1, pixels: vec![].into(), model: mid("a") };
+        write_frame(&mut buf, &req).unwrap();
+        let model_len_at = 8 + 8 + 4; // header + id + pixel count
+        buf[model_len_at] = (MAX_MODEL_ID + 1) as u8;
+        assert!(read_frame(&mut &buf[..]).is_err());
     }
 
     #[test]

@@ -28,9 +28,19 @@
 //! [`FAILOVER_RETRY_US`] ≥ 1 — hint-honoring clients like `repro
 //! loadgen --retry` re-send; nothing ever hangs). A prober thread then
 //! re-connects with exponential backoff (`router.probe_ms` doubling up
-//! to `router.max_backoff_ms`); a successful Hello/Info handshake —
-//! which must agree with the fleet's model dimensions — promotes the
-//! fresh connection to the live link and clears the quarantine.
+//! to `router.max_backoff_ms`); a successful Hello/Info handshake
+//! (through [`crate::net::client::handshake`], the one implementation
+//! in the crate) — which must agree with the fleet's model dimensions
+//! *and model set* — promotes the fresh connection to the live link and
+//! clears the quarantine.
+//!
+//! **Multi-tenant routing.** Requests carry their model id through
+//! unchanged (re-encoded on every forward and failover hop); the probe's
+//! model-set agreement check is what makes that sound — a tagged
+//! request is servable wherever the policy lands it. `LoadModel`/
+//! `RetireModel` admin frames are *not* routable (they would apply to an
+//! arbitrary subset of the fleet); the router answers them with an
+//! `Error` — administer each backend directly.
 //!
 //! **Fleet-wide admission rule.** A backend answering `Rejected` does
 //! not end the request: the router remembers the smallest
@@ -47,8 +57,8 @@
 //! hop). Links are published via `Mutex<Option<Arc<Link>>>`, never
 //! through an atomic.
 
-use super::client::ServerInfo;
-use super::protocol::{read_frame_with, write_frame, write_frame_with, Frame};
+use super::client::{handshake, ServerInfo};
+use super::protocol::{read_frame_with, write_frame, write_frame_with, Frame, ModelId};
 use super::server::WRITE_TIMEOUT;
 use crate::config::{DispatchPolicy, RouterConfig};
 use crate::coordinator::RouterMetrics;
@@ -171,6 +181,9 @@ struct Route {
     conn_key: u64,
     /// Retained so a `Rejected` backend can be failed over to the next.
     pixels: PooledVec<f32>,
+    /// Which model the request addressed (re-encoded on every forward;
+    /// inline `Copy`, so failover never allocates for it).
+    model: ModelId,
     /// Bitmask of backends already tried for this request.
     tried: u64,
     /// Smallest `retry_after_us` seen from a rejecting backend.
@@ -442,34 +455,37 @@ fn probe_backend(shared: &Arc<RouterShared>, idx: usize) -> Result<()> {
     let read_half = stream.try_clone().context("cloning backend stream")?;
     let write_half = stream.try_clone().context("cloning backend stream")?;
     let mut w = BufWriter::new(write_half);
-    write_frame(&mut w, &Frame::Hello)?;
-    w.flush().context("flushing Hello")?;
     let mut r = BufReader::new(read_half);
-    let mut scratch = Vec::new();
-    let info = match read_frame_with(&mut r, &mut scratch)? {
-        Some(Frame::Info { in_dim, out_dim, max_batch, backend }) => ServerInfo {
-            in_dim: in_dim as usize,
-            out_dim: out_dim as usize,
-            max_batch: max_batch as usize,
-            backend,
-        },
-        Some(Frame::Error { reason, .. }) => bail!("backend refused handshake: {reason}"),
-        Some(Frame::Rejected { reason, .. }) => bail!("backend rejected connection: {reason}"),
-        Some(other) => bail!("unexpected handshake reply {other:?}"),
-        None => bail!("backend closed during handshake"),
-    };
+    // single source of truth for the Hello→Info exchange — the probe
+    // speaks the handshake through the same helper the client does, so
+    // version negotiation has exactly one implementation
+    let info = handshake(&mut r, &mut w)
+        .with_context(|| format!("handshaking backend {}", backend.addr))?;
     {
         let mut agg = shared.info.lock().unwrap();
         match agg.as_ref() {
-            Some(have) => ensure!(
-                have.in_dim == info.in_dim && have.out_dim == info.out_dim,
-                "backend {} serves a {}→{} model, fleet serves {}→{}",
-                backend.addr,
-                info.in_dim,
-                info.out_dim,
-                have.in_dim,
-                have.out_dim
-            ),
+            Some(have) => {
+                ensure!(
+                    have.in_dim == info.in_dim && have.out_dim == info.out_dim,
+                    "backend {} serves a {}→{} model, fleet serves {}→{}",
+                    backend.addr,
+                    info.in_dim,
+                    info.out_dim,
+                    have.in_dim,
+                    have.out_dim
+                );
+                // fleet model-set check: a model-tagged request must be
+                // servable wherever the policy lands it, so every
+                // backend has to agree on the model list. Apply hot
+                // swaps fleet-wide before a backend reconnects.
+                ensure!(
+                    have.models == info.models,
+                    "backend {} serves models {:?}, fleet serves {:?}",
+                    backend.addr,
+                    info.models,
+                    have.models
+                );
+            }
             None => *agg = Some(info),
         }
     }
@@ -695,6 +711,7 @@ fn dispatch(shared: &Arc<RouterShared>, mut route: Route) {
         let Some(link) = link else { continue };
         let bid;
         let pixels;
+        let model = route.model;
         {
             let mut inf = link.inflight.lock().unwrap();
             if inf.closed {
@@ -708,7 +725,7 @@ fn dispatch(shared: &Arc<RouterShared>, mut route: Route) {
         let wrote = {
             let mut guard = link.writer.lock().unwrap();
             let lw = &mut *guard;
-            let frame = Frame::Request { id: bid, pixels };
+            let frame = Frame::Request { id: bid, pixels, model };
             let sent = write_frame_with(&mut lw.w, &frame, &mut lw.scratch);
             sent.is_ok() && lw.w.flush().is_ok()
         };
@@ -843,6 +860,7 @@ fn conn_reader(
                             out_dim: info.out_dim as u32,
                             max_batch: info.max_batch as u32,
                             backend: info.backend,
+                            models: info.models,
                         };
                         if tx.send(frame).is_err() {
                             return;
@@ -857,16 +875,27 @@ fn conn_reader(
                     }
                 }
             }
-            Ok(Some(Frame::Request { id, pixels })) => {
+            Ok(Some(Frame::Request { id, pixels, model })) => {
                 let route = Route {
                     client_tx: tx.clone(),
                     client_id: id,
                     conn_key,
                     pixels,
+                    model,
                     tried: 0,
                     min_hint: u64::MAX,
                 };
                 dispatch(&shared, route);
+            }
+            Ok(Some(Frame::LoadModel { .. })) | Ok(Some(Frame::RetireModel { .. })) => {
+                // Admin frames address one backend's registry; routed,
+                // they would apply to an arbitrary subset of the fleet
+                // and silently break the model-set agreement the probe
+                // enforces. Administer each backend directly.
+                let reason =
+                    "admin frames are not routable — administer backends directly".to_string();
+                let _ = tx.send(Frame::Error { id: 0, reason });
+                return;
             }
             Ok(Some(other)) => {
                 let reason = format!("unexpected client frame {other:?}");

@@ -17,6 +17,16 @@
 //! requests), so a pipelined client never suffers head-of-line blocking
 //! behind a slower batch.
 //!
+//! Multi-tenant requests ride the `Request` frame's optional model id
+//! (absent = default model) and land on
+//! [`ServerHandle::submit_model_from`]; a retiring model's requests come
+//! back as retryable `Rejected` frames, an unknown model's as terminal
+//! `Error`s. The `LoadModel`/`RetireModel` admin frames map onto
+//! [`ServerHandle::load_model`]/[`ServerHandle::retire_model`] — the
+//! retire ack is sent only after the drain completes, so an admin client
+//! can treat `AdminOk` as "the swap window is open". No connection is
+//! ever dropped by a swap.
+//!
 //! Failure containment: a malformed or truncated frame closes that one
 //! connection (best-effort `Error` frame first) — the coordinator and
 //! every other connection are untouched, because the reader owns
@@ -36,7 +46,7 @@
 //! and the writer closes that connection.
 
 use super::protocol::{read_frame_with, write_frame, write_frame_with, Frame};
-use crate::coordinator::{Backpressure, Completion, ServerHandle};
+use crate::coordinator::{Backpressure, Completion, ModelUnavailable, ServerHandle};
 use crate::util::queue;
 use crate::Result;
 use anyhow::Context;
@@ -312,28 +322,60 @@ fn reader_main(stream: TcpStream, tx: queue::Sender<Frame>, handle: ServerHandle
                     out_dim: handle.output_dim() as u32,
                     max_batch: handle.max_batch() as u32,
                     backend: handle.backend_slug().to_string(),
+                    models: handle.models(),
                 };
                 if tx.send(info).is_err() {
                     return;
                 }
             }
-            Ok(Some(Frame::Request { id, pixels })) => {
+            Ok(Some(Frame::Request { id, pixels, model })) => {
                 // the coordinator builds the Response/Error frame itself
                 // (pooled logits) and pushes it onto this connection's
                 // writer queue — no boxed closure, no allocation
                 let done = Completion::Frame { tx: tx.clone(), wire_id: id };
-                if let Err(e) = handle.submit_from(conn_id, pixels, done) {
-                    let frame = match e.downcast_ref::<Backpressure>() {
-                        Some(bp) => Frame::Rejected {
+                if let Err(e) = handle.submit_model_from(conn_id, model, pixels, done) {
+                    let frame = if let Some(bp) = e.downcast_ref::<Backpressure>() {
+                        Frame::Rejected {
                             id,
                             retry_after_us: bp.retry_after_us,
                             reason: e.to_string(),
-                        },
-                        None => Frame::Error { id, reason: format!("{e:#}") },
+                        }
+                    } else if e.downcast_ref::<ModelUnavailable>().is_some_and(|m| m.retiring) {
+                        // transient by design: the model may come back
+                        // after the swap, so this is a retryable
+                        // Rejected (hint 0 — no queue-derived backoff),
+                        // not a terminal Error
+                        Frame::Rejected { id, retry_after_us: 0, reason: e.to_string() }
+                    } else {
+                        // unknown model, wrong pixel count, compile
+                        // failure: terminal for this request
+                        Frame::Error { id, reason: format!("{e:#}") }
                     };
                     if tx.send(frame).is_err() {
                         return;
                     }
+                }
+            }
+            Ok(Some(Frame::LoadModel { model, dir })) => {
+                let reply = match handle.load_model(model, &dir) {
+                    Ok(()) => Frame::AdminOk { model },
+                    Err(e) => Frame::Error { id: 0, reason: format!("{e:#}") },
+                };
+                if tx.send(reply).is_err() {
+                    return;
+                }
+            }
+            Ok(Some(Frame::RetireModel { model })) => {
+                // retire_model drains the model's in-flight requests
+                // before returning, so this ack doubles as the "swap
+                // window open" signal. Blocking this reader is fine —
+                // other connections have their own.
+                let reply = match handle.retire_model(model) {
+                    Ok(()) => Frame::AdminOk { model },
+                    Err(e) => Frame::Error { id: 0, reason: format!("{e:#}") },
+                };
+                if tx.send(reply).is_err() {
+                    return;
                 }
             }
             Ok(Some(other)) => {

@@ -145,6 +145,15 @@ impl LayerPlan {
         self.use_strip
     }
 
+    /// Approximate heap footprint of the compiled buffers — what keeping
+    /// this layer's plan resident actually costs a cache.
+    pub fn heap_bytes(&self) -> usize {
+        self.cols.len() * std::mem::size_of::<u16>()
+            + self.offs.len() * std::mem::size_of::<u32>()
+            + self.wq.len()
+            + self.bias.len() * std::mem::size_of::<f32>()
+    }
+
     pub fn in_dim(&self) -> usize {
         self.in_dim
     }
@@ -369,6 +378,12 @@ impl MlpPlan {
     /// Resolved GEMM thread cap (≥ 1).
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// Approximate heap footprint of the compiled plan (all layers) —
+    /// the unit of account for the serving plan cache's byte budget.
+    pub fn heap_bytes(&self) -> usize {
+        self.layers.iter().map(LayerPlan::heap_bytes).sum()
     }
 
     pub fn input_dim(&self) -> usize {

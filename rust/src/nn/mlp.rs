@@ -46,6 +46,16 @@ impl QuantMlp {
         self.layers.iter().map(|l| l.macs()).sum()
     }
 
+    /// Approximate heap footprint of the model's owned buffers (weight
+    /// codes + biases) — one input to the serving plan cache's byte
+    /// budget (see `crate::engine::PlanCache`).
+    pub fn heap_bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| l.wq.len() + l.bias.len() * std::mem::size_of::<f32>())
+            .sum()
+    }
+
     /// Compile the planned LUT-GEMM kernel for this model: code-sorted
     /// weight plans per layer plus batch tiling across up to `threads`
     /// GEMM threads (`0` = one per available core). The execution

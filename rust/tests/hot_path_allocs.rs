@@ -12,6 +12,12 @@
 //! fresh batch buffer, a per-send channel node, a per-batch schedule
 //! vector — shows up as a precise nonzero delta.
 //!
+//! The same pin covers warm **two-tenant** traffic: alternating
+//! model-tagged requests between the default model and a hot-loaded
+//! second tenant must also allocate nothing — a plan-cache hit is one
+//! lock, one map lookup and an `Arc` clone, and the model-tagged frame
+//! encodes through the same reused scratch.
+//!
 //! This file intentionally holds a single `#[test]`: the counter is
 //! process-global, so a concurrently running second test would pollute
 //! the measured window.
@@ -27,7 +33,7 @@ mod common;
 use common::synth_artifacts;
 use luna_cim::config::{BackendKind, Config};
 use luna_cim::coordinator::CoordinatorServer;
-use luna_cim::net::{Frame, NetClient, NetServer};
+use luna_cim::net::{Frame, ModelId, NetClient, NetServer};
 use luna_cim::nn::QuantMlp;
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -119,6 +125,63 @@ fn pin_zero_allocs(backend: BackendKind, shards: usize, tag: &str) {
     server.shutdown();
 }
 
+/// Drive `n` requests alternating the default model and `m1`; the
+/// two-tenant steady state must be as allocation-free as the
+/// single-tenant one.
+fn drive_two_models(client: &mut NetClient, m1: ModelId, pixels: &[f32], n: usize) {
+    for i in 0..n {
+        let model = if i % 2 == 0 { ModelId::DEFAULT } else { m1 };
+        match client.infer_model(model, pixels) {
+            Ok(Frame::Response { label, .. }) => assert!((label as usize) < 10),
+            Ok(other) => panic!("unexpected reply {other:?}"),
+            Err(e) => panic!("infer failed: {e:#}"),
+        }
+    }
+}
+
+/// Two resident tenants, alternating traffic: every measured request is
+/// a plan-cache hit on one model or the other, and the window must not
+/// allocate.
+fn pin_zero_allocs_two_models(tag: &str) {
+    let mlp_a = QuantMlp::random_digits(97);
+    let mlp_b = QuantMlp::random_digits(98);
+    let (store, testset) = synth_artifacts(tag, &mlp_a, 8);
+    let (store_b, _testset_b) = synth_artifacts("hot-path-tenant-b", &mlp_b, 8);
+    let mut cfg = Config::default();
+    cfg.artifacts_dir = store.root().display().to_string();
+    cfg.batcher.shards = 2;
+    cfg.batcher.max_wait_us = 200;
+    cfg.serving.models = vec![("m1".to_string(), store_b.root().display().to_string())];
+    let (server, handle) = CoordinatorServer::start(cfg).unwrap();
+    let net = NetServer::bind(handle.clone(), "127.0.0.1:0", 4).unwrap();
+    let mut client = NetClient::connect(net.local_addr()).unwrap();
+    let m1 = ModelId::new("m1").unwrap();
+    let pixels = testset.samples[0].pixels.clone();
+
+    // warmup: both tenants' plans compiled and resident, every worker's
+    // per-model executor built, maps and pools at steady capacity
+    drive_two_models(&mut client, m1, &pixels, 128);
+    drive_two_models(&mut client, m1, &pixels, 64);
+
+    let before = ALLOC_EVENTS.load(Ordering::Relaxed);
+    drive_two_models(&mut client, m1, &pixels, 256);
+    let delta = ALLOC_EVENTS.load(Ordering::Relaxed) - before;
+    if std::env::var_os("LUNA_TSAN").is_none() {
+        assert_eq!(
+            delta, 0,
+            "warm two-tenant wire path allocated {delta} times across 256 requests \
+             ({tag}) — the plan-cache hit path must be allocation-free"
+        );
+    }
+    let snap = handle.metrics().snapshot();
+    assert_eq!(snap.accepted, 448, "{tag} admission count");
+    assert_eq!(snap.rejected, 0);
+    assert!(snap.plan_hits > 0, "two-tenant traffic must hit the plan cache");
+    assert_eq!(snap.plan_evictions, 0, "the default budget holds both tenants");
+    net.shutdown();
+    server.shutdown();
+}
+
 #[test]
 fn warm_wire_requests_allocate_nothing() {
     for shards in [1usize, 2] {
@@ -127,4 +190,6 @@ fn warm_wire_requests_allocate_nothing() {
     // calibrated adds the per-batch tiler replay; the schedule-buffer
     // arena (Tiler::schedule_cost) keeps it allocation-free too
     pin_zero_allocs(BackendKind::Calibrated, 2, "hot-path-calibrated");
+    // and the multi-tenant hit path adds nothing on top
+    pin_zero_allocs_two_models("hot-path-two-models");
 }

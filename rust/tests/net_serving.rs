@@ -13,15 +13,21 @@
 //! * the router front tier is transparent and never hangs a request:
 //!   killing a backend mid-load resolves every in-flight request with a
 //!   retryable frame, quarantines the endpoint, and recovers it when a
-//!   health probe succeeds again.
+//!   health probe succeeds again;
+//! * multi-tenant serving is invisible in the replies: model-tagged
+//!   requests are bit-identical across shard counts, plan-thread
+//!   counts, cache evictions and the router, and a hot swap
+//!   (`LoadModel` + `RetireModel` under live load) drops no connection
+//!   and resolves every in-flight request.
 
 mod common;
 
 use common::synth_artifacts;
 use luna_cim::config::{BackendKind, Config, DispatchPolicy, RouterConfig, ShardAffinity};
 use luna_cim::coordinator::{Backpressure, CoordinatorServer, ServerHandle};
+use luna_cim::engine::ModelEntry;
 use luna_cim::multiplier::{MultiplierKind, MultiplierModel};
-use luna_cim::net::protocol::{read_frame, write_frame, Frame, MAGIC, VERSION};
+use luna_cim::net::protocol::{read_frame, write_frame, Frame, ModelId, MAGIC, VERSION};
 use luna_cim::net::{loadgen, NetClient, NetServer, RouterServer, Scenario};
 use luna_cim::nn::QuantMlp;
 use std::io::Write as _;
@@ -162,7 +168,8 @@ fn malformed_frames_close_connection_without_poisoning_coordinator() {
     // 2) truncated frame: valid header, missing payload bytes
     let mut s = TcpStream::connect(net.local_addr()).unwrap();
     let mut buf = Vec::new();
-    write_frame(&mut buf, &Frame::Request { id: 0, pixels: vec![0.5; 64].into() }).unwrap();
+    let req = Frame::Request { id: 0, pixels: vec![0.5; 64].into(), model: ModelId::DEFAULT };
+    write_frame(&mut buf, &req).unwrap();
     s.write_all(&buf[..buf.len() - 7]).unwrap();
     s.shutdown(std::net::Shutdown::Write).unwrap();
     match read_frame(&mut s).unwrap() {
@@ -171,9 +178,11 @@ fn malformed_frames_close_connection_without_poisoning_coordinator() {
     }
     assert!(read_frame(&mut s).unwrap().is_none());
 
-    // 3) wrong protocol version: rejected by name
+    // 3) wrong protocol *major* version: rejected by name. (A higher
+    // minor of the same major is forward-compatible and accepted — see
+    // the protocol tests — so the mismatch here flips the major nibble.)
     let mut s = TcpStream::connect(net.local_addr()).unwrap();
-    let header = [MAGIC[0], MAGIC[1], VERSION + 1, 0x05, 0, 0, 0, 0];
+    let header = [MAGIC[0], MAGIC[1], VERSION + 0x10, 0x05, 0, 0, 0, 0];
     s.write_all(&header).unwrap();
     match read_frame(&mut s).unwrap() {
         Some(Frame::Error { reason, .. }) => assert!(reason.contains("version"), "{reason}"),
@@ -454,6 +463,8 @@ fn router_failover_resolves_every_in_flight_request() {
         burst: 4,
         seed: 7,
         retry: true,
+        models: vec![],
+        mix: loadgen::ModelMix::Zipf,
     };
     let cases = loadgen::run(&router.local_addr().to_string(), &opts).unwrap();
     assert_eq!(cases.len(), 1);
@@ -582,4 +593,287 @@ fn connection_affinity_is_bit_identical_across_shard_counts() {
         net.shutdown();
         server.shutdown();
     }
+}
+
+#[test]
+fn multi_tenant_replies_bit_identical_across_shards_and_plan_threads() {
+    // Model-tagged serving must be invisible everywhere the plan can
+    // vary: for shards {1, 2} × gemm threads {1, 2} the same two-tenant
+    // request stream produces byte-identical logits — cold compile on
+    // the first tenant touch, plan-cache hits after — both on the wire
+    // and through the in-process submit path.
+    let mlp_a = QuantMlp::random_digits(111);
+    let mlp_b = QuantMlp::random_digits(112);
+    let model = MultiplierModel::new(MultiplierKind::DncOpt);
+    let m1 = ModelId::new("m1").unwrap();
+    let (store_b, _testset) = synth_artifacts("net-mt-b", &mlp_b, 8);
+    let dir_b = store_b.root().display().to_string();
+    let mut baseline: Option<Vec<Vec<f32>>> = None;
+    for shards in [1usize, 2] {
+        for threads in [1usize, 2] {
+            let (server, handle, net, pixels) = start_stack("net-mt-a", &mlp_a, |cfg| {
+                cfg.batcher.shards = shards;
+                cfg.batcher.max_wait_us = 1_000;
+                cfg.gemm.threads = threads;
+                cfg.serving.models = vec![("m1".to_string(), dir_b.clone())];
+            });
+            let mut client = NetClient::connect(net.local_addr()).unwrap();
+            assert_eq!(client.info().models, vec!["m1".to_string()]);
+            let mut all = Vec::new();
+            for (i, px) in pixels.iter().take(6).enumerate() {
+                let wire_b = match client.infer_model(m1, px).unwrap() {
+                    Frame::Response { logits, .. } => logits.take(),
+                    other => panic!("tenant request {i}: {other:?}"),
+                };
+                assert_eq!(wire_b, mlp_b.forward(px, &model), "m1 diverged (request {i})");
+                let wire_a = match client.infer(px).unwrap() {
+                    Frame::Response { logits, .. } => logits.take(),
+                    other => panic!("default request {i}: {other:?}"),
+                };
+                assert_eq!(wire_a, mlp_a.forward(px, &model), "default diverged (request {i})");
+                let direct = handle.submit_model(m1, px.clone()).unwrap();
+                assert_eq!(direct.logits, wire_b, "in-process m1 diverged from the wire");
+                all.push(wire_a);
+                all.push(wire_b);
+            }
+            let snap = handle.metrics().snapshot();
+            assert!(snap.plan_hits > 0, "warm tenant requests must hit the plan cache");
+            assert_eq!(snap.plan_evictions, 0, "the default budget fits both tenants");
+            assert!(handle.model_stats(m1).unwrap().requests >= 1, "per-model stats exist");
+            match &baseline {
+                None => baseline = Some(all),
+                Some(base) => {
+                    assert_eq!(&all, base, "shards {shards} threads {threads} diverged");
+                }
+            }
+            net.shutdown();
+            server.shutdown();
+        }
+    }
+}
+
+#[test]
+fn plan_eviction_and_recompile_stay_bit_identical() {
+    // A one-entry plan-cache budget makes the two tenants evict each
+    // other on every alternation; each recompile must reproduce the
+    // evicted plan's replies bit for bit.
+    let mlp_a = QuantMlp::random_digits(115);
+    let mlp_b = QuantMlp::random_digits(116);
+    let model = MultiplierModel::new(MultiplierKind::DncOpt);
+    let m1 = ModelId::new("m1").unwrap();
+    let (store_b, _testset) = synth_artifacts("net-evict-b", &mlp_b, 8);
+    let dir_b = store_b.root().display().to_string();
+    let one = ModelEntry::compile(ModelId::DEFAULT, mlp_a.clone(), 1)
+        .bytes
+        .max(ModelEntry::compile(ModelId::DEFAULT, mlp_b.clone(), 1).bytes);
+    let (server, handle, net, pixels) = start_stack("net-evict-a", &mlp_a, |cfg| {
+        cfg.batcher.max_wait_us = 1_000;
+        cfg.serving.models = vec![("m1".to_string(), dir_b.clone())];
+        cfg.plan_cache.max_bytes = one + one / 2; // room for one tenant
+    });
+    let mut client = NetClient::connect(net.local_addr()).unwrap();
+    let px = &pixels[0];
+    let mut first: Option<(Vec<f32>, Vec<f32>)> = None;
+    for round in 0..3 {
+        let a = match client.infer(px).unwrap() {
+            Frame::Response { logits, .. } => logits.take(),
+            other => panic!("round {round} default: {other:?}"),
+        };
+        let b = match client.infer_model(m1, px).unwrap() {
+            Frame::Response { logits, .. } => logits.take(),
+            other => panic!("round {round} m1: {other:?}"),
+        };
+        assert_eq!(a, mlp_a.forward(px, &model), "round {round}: default diverged");
+        assert_eq!(b, mlp_b.forward(px, &model), "round {round}: m1 diverged");
+        match &first {
+            None => first = Some((a, b)),
+            Some((fa, fb)) => {
+                assert_eq!(&a, fa, "round {round}: recompiled default diverged");
+                assert_eq!(&b, fb, "round {round}: recompiled m1 diverged");
+            }
+        }
+    }
+    let snap = handle.metrics().snapshot();
+    assert!(snap.plan_evictions >= 2, "tenants must evict each other under a one-entry budget");
+    assert!(snap.plan_compiles >= 4, "every eviction forces a later recompile");
+    assert_eq!(snap.plan_resident, 1, "exactly one tenant fits");
+    assert!(snap.plan_resident_bytes <= (one + one / 2) as u64, "budget invariant on the gauge");
+    net.shutdown();
+    server.shutdown();
+}
+
+#[test]
+fn router_serves_model_tagged_requests_bit_identically() {
+    // The fleet model-set agreement makes model-tagged requests safe
+    // wherever the hash policy lands them: every connection through the
+    // router gets bit-exact replies for both tenants, and the fleet
+    // `Info` advertises the agreed model list.
+    let mlp_a = QuantMlp::random_digits(113);
+    let mlp_b = QuantMlp::random_digits(114);
+    let model = MultiplierModel::new(MultiplierKind::DncOpt);
+    let m1 = ModelId::new("m1").unwrap();
+    let (store_b, _testset) = synth_artifacts("net-mt-router-b", &mlp_b, 8);
+    let dir_b = store_b.root().display().to_string();
+    let mut servers = Vec::new();
+    let mut nets = Vec::new();
+    let mut addrs = Vec::new();
+    let mut pixels = Vec::new();
+    for tag in ["net-mt-router-0", "net-mt-router-1"] {
+        let (server, _handle, net, px) = start_stack(tag, &mlp_a, |cfg| {
+            cfg.batcher.max_wait_us = 1_000;
+            cfg.serving.models = vec![("m1".to_string(), dir_b.clone())];
+        });
+        addrs.push(net.local_addr().to_string());
+        servers.push(server);
+        nets.push(net);
+        pixels = px;
+    }
+    let router = RouterServer::bind(&router_cfg(addrs, 20)).unwrap();
+    assert!(router.backend_connected(0) && router.backend_connected(1));
+    for i in 0..6 {
+        let mut client = NetClient::connect(router.local_addr()).unwrap();
+        assert_eq!(client.info().models, vec!["m1".to_string()], "fleet-agreed model set");
+        let px = &pixels[i % pixels.len()];
+        match client.infer_model(m1, px).unwrap() {
+            Frame::Response { logits, .. } => {
+                assert_eq!(logits.take(), mlp_b.forward(px, &model), "conn {i} m1 diverged")
+            }
+            other => panic!("conn {i} m1: {other:?}"),
+        }
+        match client.infer(px).unwrap() {
+            Frame::Response { logits, .. } => {
+                assert_eq!(logits.take(), mlp_a.forward(px, &model), "conn {i} default diverged")
+            }
+            other => panic!("conn {i} default: {other:?}"),
+        }
+    }
+    assert_eq!(router.metrics().snapshot().routed_total(), 12);
+    router.shutdown();
+    for net in nets {
+        net.shutdown();
+    }
+    for server in servers {
+        server.shutdown();
+    }
+}
+
+#[test]
+fn hot_swap_under_live_load_drops_no_connection_and_drains_in_flight() {
+    // The acceptance bar for hot swap: `LoadModel` then `RetireModel`
+    // while requests are genuinely in flight drops no connection and
+    // resolves every in-flight request; the retire ack arrives only
+    // after the drain; a retiring model's new requests come back as
+    // retryable `Rejected`; and reloading the id serves the *new*
+    // weights (the retired plan really left the cache).
+    let mlp_a = QuantMlp::random_digits(121);
+    let mlp_b = QuantMlp::random_digits(122);
+    let mlp_c = QuantMlp::random_digits(123);
+    let model = MultiplierModel::new(MultiplierKind::DncOpt);
+    let hot = ModelId::new("hot").unwrap();
+    let (store_b, _ts_b) = synth_artifacts("net-swap-b", &mlp_b, 8);
+    let (store_c, _ts_c) = synth_artifacts("net-swap-c", &mlp_c, 8);
+    let dir_b = store_b.root().display().to_string();
+    let dir_c = store_c.root().display().to_string();
+    let (server, handle, net, pixels) = start_stack("net-swap-a", &mlp_a, |cfg| {
+        // in-flight requests park in the batcher until the deadline
+        // flush — live load genuinely spans the swap window
+        cfg.batcher.max_wait_us = 150_000;
+    });
+
+    // live default-model traffic, parked in the batcher
+    let live = NetClient::connect(net.local_addr()).unwrap();
+    let (mut live_tx, mut live_rx, info) = live.split();
+    assert!(info.models.is_empty(), "no extra models before the load");
+    for px in pixels.iter().take(3) {
+        live_tx.send(px).unwrap();
+    }
+    wait_accepted(&handle, 3);
+
+    // hot-load the second tenant while those are in flight
+    let mut admin = NetClient::connect(net.local_addr()).unwrap();
+    admin.load_model(hot, &dir_b).unwrap();
+    let mut probe = NetClient::connect(net.local_addr()).unwrap();
+    assert_eq!(probe.info().models, vec!["hot".to_string()], "fresh handshakes see the load");
+    match probe.infer_model(hot, &pixels[0]).unwrap() {
+        Frame::Response { logits, .. } => {
+            assert_eq!(logits.take(), mlp_b.forward(&pixels[0], &model), "cold compile serves")
+        }
+        other => panic!("hot model after load: {other:?}"),
+    }
+
+    // park in-flight requests on the model about to retire
+    let park = NetClient::connect(net.local_addr()).unwrap();
+    let (mut park_tx, mut park_rx, _info) = park.split();
+    for px in pixels.iter().take(3) {
+        park_tx.send_model(hot, px).unwrap();
+    }
+    wait_accepted(&handle, 7);
+
+    // retire on its own admin connection: the ack blocks on the drain
+    let retirer = std::thread::spawn({
+        let addr = net.local_addr();
+        move || {
+            let mut admin2 = NetClient::connect(addr).unwrap();
+            admin2.retire_model(hot).unwrap();
+        }
+    });
+    // while the drain is pending, new requests for the retiring model
+    // come back as retryable Rejected — not dropped, not an Error
+    std::thread::sleep(Duration::from_millis(30));
+    match probe.infer_model(hot, &pixels[1]).unwrap() {
+        Frame::Rejected { reason, .. } => assert!(reason.contains("retiring"), "{reason}"),
+        other => panic!("request during retire drain: {other:?}"),
+    }
+    retirer.join().unwrap();
+
+    // every parked request on the retired model resolved with its reply
+    let mut got: Vec<Option<Vec<f32>>> = vec![None; 3];
+    for _ in 0..3 {
+        match park_rx.recv().unwrap() {
+            Frame::Response { id, logits, .. } => got[id as usize] = Some(logits.take()),
+            other => panic!("in-flight request lost in the swap: {other:?}"),
+        }
+    }
+    for (i, g) in got.into_iter().enumerate() {
+        let want = mlp_b.forward(&pixels[i], &model);
+        assert_eq!(g.expect("every in-flight request resolves"), want, "parked request {i}");
+    }
+    // ... and the live default-model connection never noticed the swap
+    let mut got: Vec<Option<Vec<f32>>> = vec![None; 3];
+    for _ in 0..3 {
+        match live_rx.recv().unwrap() {
+            Frame::Response { id, logits, .. } => got[id as usize] = Some(logits.take()),
+            other => panic!("live default request lost in the swap: {other:?}"),
+        }
+    }
+    for (i, g) in got.into_iter().enumerate() {
+        let want = mlp_a.forward(&pixels[i], &model);
+        assert_eq!(g.expect("live request resolves"), want, "live request {i}");
+    }
+    live_tx.send(&pixels[3]).unwrap();
+    match live_rx.recv().unwrap() {
+        Frame::Response { id, logits, .. } => {
+            assert_eq!(id, 3);
+            assert_eq!(logits.take(), mlp_a.forward(&pixels[3], &model), "post-swap traffic");
+        }
+        other => panic!("live connection broken after the swap: {other:?}"),
+    }
+
+    // the retired id is gone (terminal Error), and reloading it serves
+    // the *new* artifacts — the old plan really left the cache
+    match probe.infer_model(hot, &pixels[0]).unwrap() {
+        Frame::Error { reason, .. } => assert!(reason.contains("not being served"), "{reason}"),
+        other => panic!("retired model request: {other:?}"),
+    }
+    admin.load_model(hot, &dir_c).unwrap();
+    match probe.infer_model(hot, &pixels[0]).unwrap() {
+        Frame::Response { logits, .. } => {
+            let got = logits.take();
+            assert_eq!(got, mlp_c.forward(&pixels[0], &model), "swapped-in weights serve");
+            assert_ne!(got, mlp_b.forward(&pixels[0], &model), "the old weights are gone");
+        }
+        other => panic!("hot model after swap: {other:?}"),
+    }
+    net.shutdown();
+    server.shutdown();
 }
