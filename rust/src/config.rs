@@ -78,6 +78,7 @@ pub struct Config {
     pub router: RouterConfig,
     pub serving: ServingConfig,
     pub plan_cache: PlanCacheConfig,
+    pub trace: TraceConfig,
 }
 
 /// Multi-tenant serving: which model artifacts one server hosts beside
@@ -107,6 +108,25 @@ pub struct PlanCacheConfig {
 impl Default for PlanCacheConfig {
     fn default() -> Self {
         PlanCacheConfig { max_bytes: 64 << 20 }
+    }
+}
+
+/// Per-process flight-recorder sizing (see [`crate::util::trace`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceConfig {
+    /// Span-ring capacity (entries). The ring is pre-allocated at
+    /// startup and overwrites oldest-first, so this bounds both memory
+    /// (~48 B/entry) and the `DumpTrace` payload.
+    pub ring_capacity: usize,
+    /// Sample 1-in-N requests at ingress (`0` disables tracing; `1`
+    /// traces everything). Only the sampling decision is per-request —
+    /// recording a span for a sampled request is a few Relaxed atomics.
+    pub sample_every: u64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig { ring_capacity: 1024, sample_every: 8 }
     }
 }
 
@@ -342,6 +362,7 @@ impl Default for Config {
             router: RouterConfig::default(),
             serving: ServingConfig::default(),
             plan_cache: PlanCacheConfig::default(),
+            trace: TraceConfig::default(),
         }
     }
 }
@@ -425,6 +446,8 @@ const KNOWN_KEYS: &[&str] = &[
     "router.max_backoff_ms",
     "serving.models",
     "plan_cache.max_bytes",
+    "trace.ring_capacity",
+    "trace.sample_every",
 ];
 
 impl Config {
@@ -538,6 +561,12 @@ impl Config {
         if m.get_opt("plan_cache.max_bytes").is_some() {
             cfg.plan_cache.max_bytes = m.get_usize("plan_cache.max_bytes")?;
         }
+        if m.get_opt("trace.ring_capacity").is_some() {
+            cfg.trace.ring_capacity = m.get_usize("trace.ring_capacity")?;
+        }
+        if m.get_opt("trace.sample_every").is_some() {
+            cfg.trace.sample_every = m.get_u64("trace.sample_every")?;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -596,6 +625,8 @@ impl Config {
             m.set("serving.models", pairs.join(","));
         }
         m.set("plan_cache.max_bytes", self.plan_cache.max_bytes);
+        m.set("trace.ring_capacity", self.trace.ring_capacity);
+        m.set("trace.sample_every", self.trace.sample_every);
         m.render()
     }
 
@@ -664,6 +695,11 @@ impl Config {
             anyhow::ensure!(!dir.is_empty(), "serving.models dir for `{id}` must be non-empty");
         }
         anyhow::ensure!(self.plan_cache.max_bytes >= 1, "plan_cache.max_bytes must be >= 1");
+        anyhow::ensure!(
+            (64..=4096).contains(&self.trace.ring_capacity),
+            "trace.ring_capacity must be in 64..=4096"
+        );
+        // trace.sample_every needs no bound: 0 disables, 1 traces all
         Ok(())
     }
 }
@@ -682,6 +718,19 @@ mod tests {
         let cfg = Config::default();
         let back = Config::from_text(&cfg.to_text()).unwrap();
         assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn trace_keys_parse_roundtrip_and_validate() {
+        let cfg = Config::from_text("trace.ring_capacity 256\ntrace.sample_every 1\n").unwrap();
+        assert_eq!(cfg.trace.ring_capacity, 256);
+        assert_eq!(cfg.trace.sample_every, 1);
+        let back = Config::from_text(&cfg.to_text()).unwrap();
+        assert_eq!(cfg, back);
+        // 0 disables sampling but is valid; a tiny or huge ring is not
+        assert!(Config::from_text("trace.sample_every 0\n").is_ok());
+        assert!(Config::from_text("trace.ring_capacity 8\n").is_err());
+        assert!(Config::from_text("trace.ring_capacity 1048576\n").is_err());
     }
 
     #[test]

@@ -219,7 +219,12 @@ mod tests {
         let max_wait = Duration::from_millis(10);
         let mut b = Batcher::new(4, max_wait, 8);
         let t0 = Instant::now();
-        b.queue.push_back(InferenceRequest { id: 0, pixels: vec![0.0; 4].into(), enqueued_at: t0 });
+        b.queue.push_back(InferenceRequest {
+            id: 0,
+            pixels: vec![0.0; 4].into(),
+            enqueued_at: t0,
+            trace: 0,
+        });
         // one pending request: the hint is the remaining deadline budget
         let hint = b.retry_after_us(t0, 1);
         assert!(hint >= 9_000 && hint <= 10_000, "hint {hint}");
@@ -249,9 +254,14 @@ mod tests {
         let mut b = Batcher::new(2, max_wait, 16);
         let t0 = Instant::now();
         // three requests enqueued at t0; max_batch 2 leaves one behind
-        b.queue.push_back(InferenceRequest { id: 0, pixels: vec![0.0; 4].into(), enqueued_at: t0 });
-        b.queue.push_back(InferenceRequest { id: 1, pixels: vec![0.0; 4].into(), enqueued_at: t0 });
-        b.queue.push_back(InferenceRequest { id: 2, pixels: vec![0.0; 4].into(), enqueued_at: t0 });
+        for id in 0..3 {
+            b.queue.push_back(InferenceRequest {
+                id,
+                pixels: vec![0.0; 4].into(),
+                enqueued_at: t0,
+                trace: 0,
+            });
+        }
         let first = b.flush_due(t0 + max_wait).expect("deadline fired");
         assert_eq!(first.requests.len(), 2);
         assert_eq!(b.pending(), 1);
@@ -273,7 +283,8 @@ mod tests {
         let Some(t0) = Instant::now().checked_sub(Duration::from_millis(60)) else {
             return; // clock too close to boot to backdate
         };
-        b.push(InferenceRequest { id: 0, pixels: vec![0.0; 4].into(), enqueued_at: t0 }).unwrap();
+        b.push(InferenceRequest { id: 0, pixels: vec![0.0; 4].into(), enqueued_at: t0, trace: 0 })
+            .unwrap();
         // 60ms of the budget already burned before push
         let left = b.next_deadline_in(Instant::now()).unwrap();
         assert!(left <= Duration::from_millis(40), "deadline ignored enqueue time: {left:?}");

@@ -1,72 +1,30 @@
-//! Serving metrics: latency histogram, throughput and energy counters.
+//! Serving metrics: latency histograms, throughput and energy counters.
 //!
-//! Lock-free on the hot path (atomics only); the histogram uses
-//! fixed log-spaced buckets so recording is a couple of atomic adds.
+//! Lock-free on the hot path (atomics only); every duration metric
+//! records into the shared fixed-bucket log₂ histogram
+//! ([`crate::util::hist::LatencyHistogram`]), so recording is a couple
+//! of atomic adds. Snapshots render three ways: human text
+//! ([`MetricsSnapshot::render`]), JSON ([`MetricsSnapshot::render_json`])
+//! and Prometheus text exposition ([`MetricsSnapshot::render_prom`]) —
+//! the latter two back the `GetStats` wire scrape (`repro stats`).
 //!
 //! Ordering audit: every atomic access here is Relaxed by design. These
 //! are monotonic monitoring counters — a snapshot tolerates tearing
 //! across counters (it is a statistical view, not a consistent cut),
-//! and nothing is published through them.
+//! and nothing is published through them. The same tearing caveat
+//! applies to a wire-scraped snapshot versus an in-process one taken
+//! concurrently: individual counters are exact, cross-counter sums may
+//! disagree transiently.
 
 use super::tiler::ScheduleCost;
+use crate::net::ModelId;
+use crate::util::trace::{Stage, N_STAGES};
+use std::fmt::Write as _;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-/// Log-spaced latency histogram (µs), 1 µs .. ~16 s.
-#[derive(Debug, Default)]
-pub struct LatencyHistogram {
-    /// bucket i counts latencies in [2^i, 2^{i+1}) µs.
-    buckets: [AtomicU64; 24],
-    count: AtomicU64,
-    sum_us: AtomicU64,
-    max_us: AtomicU64,
-}
-
-impl LatencyHistogram {
-    pub fn record_us(&self, us: u64) {
-        let idx = (64 - us.max(1).leading_zeros() as usize - 1).min(23);
-        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
-        self.count.fetch_add(1, Ordering::Relaxed);
-        self.sum_us.fetch_add(us, Ordering::Relaxed);
-        self.max_us.fetch_max(us, Ordering::Relaxed);
-    }
-
-    pub fn count(&self) -> u64 {
-        self.count.load(Ordering::Relaxed)
-    }
-
-    pub fn mean_us(&self) -> f64 {
-        let n = self.count();
-        if n == 0 {
-            0.0
-        } else {
-            self.sum_us.load(Ordering::Relaxed) as f64 / n as f64
-        }
-    }
-
-    pub fn max_us(&self) -> u64 {
-        self.max_us.load(Ordering::Relaxed)
-    }
-
-    /// Approximate quantile from the bucket histogram (upper bound of the
-    /// containing bucket).
-    pub fn quantile_us(&self, q: f64) -> u64 {
-        let n = self.count();
-        if n == 0 {
-            return 0;
-        }
-        let target = (q.clamp(0.0, 1.0) * n as f64).ceil() as u64;
-        let mut seen = 0u64;
-        for (i, b) in self.buckets.iter().enumerate() {
-            seen += b.load(Ordering::Relaxed);
-            if seen >= target {
-                return 1u64 << (i + 1);
-            }
-        }
-        self.max_us()
-    }
-}
+pub use crate::util::hist::LatencyHistogram;
 
 /// Compiled-plan cache counters, shared between the engine-level
 /// [`crate::engine::PlanCache`] (which records) and the serving metrics
@@ -141,6 +99,18 @@ impl PlanCacheCounters {
     }
 }
 
+/// Per-tenant latency breakdown: end-to-end request latency plus the
+/// queue-wait component, one pair of histograms per resident model.
+/// Registered once per model (cold path) and cached as an `Arc` on the
+/// model slot, so hot-path recording stays lock-free.
+#[derive(Debug, Default)]
+pub struct TenantLat {
+    /// End-to-end enqueue→completion latency (µs).
+    pub latency: LatencyHistogram,
+    /// Time-in-queue component (enqueue→batch formation, µs).
+    pub queue: LatencyHistogram,
+}
+
 /// Aggregate serving metrics.
 #[derive(Debug, Default)]
 pub struct Metrics {
@@ -154,6 +124,11 @@ pub struct Metrics {
     /// counterpart of `sim_latency` — one report shows host speed next
     /// to CiM speed.
     pub host_gemm: LatencyHistogram,
+    /// Per-stage time-in-stage histograms (µs), indexed by
+    /// [`Stage`] — the latency *breakdown* next to the end-to-end
+    /// histogram above. Recorded for every request (spans additionally
+    /// go to the flight recorder for sampled ones).
+    pub stages: [LatencyHistogram; N_STAGES],
     requests: AtomicU64,
     batches: AtomicU64,
     padded_slots: AtomicU64,
@@ -176,6 +151,9 @@ pub struct Metrics {
     /// Compiled-plan cache counters, shared with the engine's
     /// `PlanCache` (the coordinator hands it a clone of this `Arc`).
     pub plan_cache: Arc<PlanCacheCounters>,
+    /// Per-tenant histogram registry (cold path: mutated only at model
+    /// registration; the hot path records through cached `Arc`s).
+    tenants: Mutex<Vec<(ModelId, Arc<TenantLat>)>>,
     started: Option<Instant>,
 }
 
@@ -223,6 +201,25 @@ impl Metrics {
         self.host_gemm.record_us(us.max(1));
     }
 
+    /// Record time spent in one pipeline stage (µs, clamped to the
+    /// histogram's 1 µs floor). Lock-free, allocation-free.
+    pub fn record_stage_us(&self, stage: Stage, us: u64) {
+        self.stages[stage as usize].record_us(us.max(1));
+    }
+
+    /// Fetch (registering on first use) the per-tenant histograms for
+    /// `model`. Takes the registry lock — cold path only; callers cache
+    /// the returned `Arc` (the coordinator stores it on the model slot).
+    pub fn tenant(&self, model: ModelId) -> Arc<TenantLat> {
+        let mut reg = self.tenants.lock().expect("tenant registry lock");
+        if let Some((_, lat)) = reg.iter().find(|(m, _)| *m == model) {
+            return lat.clone();
+        }
+        let lat = Arc::new(TenantLat::default());
+        reg.push((model, lat.clone()));
+        lat
+    }
+
     /// Record one served batch's simulated CiM cost (energy, modelled
     /// latency, programming events, weight-stationary hits).
     pub fn record_sim_cost(&self, cost: &ScheduleCost) {
@@ -238,6 +235,29 @@ impl Metrics {
         let requests = self.requests.load(Ordering::Relaxed);
         let elapsed = self.started.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);
         let pool = crate::util::pool::stats();
+        let mut stage_count = [0u64; N_STAGES];
+        let mut stage_p50_us = [0u64; N_STAGES];
+        let mut stage_p99_us = [0u64; N_STAGES];
+        for (i, h) in self.stages.iter().enumerate() {
+            stage_count[i] = h.count();
+            stage_p50_us[i] = h.quantile_us(0.50);
+            stage_p99_us[i] = h.quantile_us(0.99);
+        }
+        let mut tenants: Vec<TenantStats> = self
+            .tenants
+            .lock()
+            .expect("tenant registry lock")
+            .iter()
+            .map(|(model, lat)| TenantStats {
+                name: tenant_label(model),
+                requests: lat.latency.count(),
+                p50_latency_us: lat.latency.quantile_us(0.50),
+                p99_latency_us: lat.latency.quantile_us(0.99),
+                p50_queue_us: lat.queue.quantile_us(0.50),
+                p99_queue_us: lat.queue.quantile_us(0.99),
+            })
+            .collect();
+        tenants.sort_by(|a, b| a.name.cmp(&b.name));
         MetricsSnapshot {
             pool,
             requests,
@@ -269,12 +289,39 @@ impl Metrics {
             plan_resident_bytes: self.plan_cache.resident_bytes.load(Ordering::Relaxed),
             plan_compile_p99_us: self.plan_cache.compile.quantile_us(0.99),
             plan_stall_p99_us: self.plan_cache.stall.quantile_us(0.99),
+            stage_count,
+            stage_p50_us,
+            stage_p99_us,
+            tenants,
         }
     }
 }
 
+/// The render/scrape label for a model id (`"default"` for the default
+/// model — the empty id has to name itself somehow in a report).
+fn tenant_label(model: &ModelId) -> String {
+    if model.is_default() {
+        "default".to_string()
+    } else {
+        model.as_str().to_string()
+    }
+}
+
+/// Point-in-time per-tenant latency view (one per resident model).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TenantStats {
+    /// Model id, or `"default"` for the default model.
+    pub name: String,
+    /// Requests served for this tenant (latency histogram count).
+    pub requests: u64,
+    pub p50_latency_us: u64,
+    pub p99_latency_us: u64,
+    pub p50_queue_us: u64,
+    pub p99_queue_us: u64,
+}
+
 /// Point-in-time view of the metrics.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct MetricsSnapshot {
     pub requests: u64,
     pub batches: u64,
@@ -319,6 +366,13 @@ pub struct MetricsSnapshot {
     pub plan_compile_p99_us: u64,
     /// p99 time a request spent stalled behind another thread's compile.
     pub plan_stall_p99_us: u64,
+    /// Per-stage time-in-stage sample counts, indexed by
+    /// [`Stage`] pipeline order.
+    pub stage_count: [u64; N_STAGES],
+    pub stage_p50_us: [u64; N_STAGES],
+    pub stage_p99_us: [u64; N_STAGES],
+    /// Per-tenant latency breakdown, sorted by tenant name.
+    pub tenants: Vec<TenantStats>,
     /// Buffer-pool counters at snapshot time (process-wide — the pool
     /// is shared by every server in the process; see
     /// [`crate::util::pool`]). A healthy steady state shows the hit
@@ -383,7 +437,7 @@ impl MetricsSnapshot {
 
     /// Multi-line human-readable report (the serve CLI prints this).
     pub fn render(&self) -> String {
-        format!(
+        let mut out = format!(
             "requests {} | batches {} (occupancy {:.2}) | \
              failed batches {} ({} requests)\n\
              admission accepted {} rejected {} (hints {}) | reject rate {:.3}\n\
@@ -433,7 +487,205 @@ impl MetricsSnapshot {
             self.sim_programs,
             self.sim_stationary_hits,
             self.stationary_hit_rate(),
-        )
+        );
+        out.push_str("stage p99 us:");
+        for (i, s) in Stage::ALL.iter().enumerate() {
+            let _ = write!(out, " {} {}", s.name(), self.stage_p99_us[i]);
+        }
+        out.push('\n');
+        for t in &self.tenants {
+            let _ = writeln!(
+                out,
+                "tenant {} requests {} latency p50 {} us p99 {} us | \
+                 queue p50 {} us p99 {} us",
+                t.name,
+                t.requests,
+                t.p50_latency_us,
+                t.p99_latency_us,
+                t.p50_queue_us,
+                t.p99_queue_us,
+            );
+        }
+        out
+    }
+
+    /// JSON object form of the snapshot (hand-rolled — no serde in this
+    /// offline image). Field names are stable; additions are
+    /// append-only like the wire codec's.
+    pub fn render_json(&self) -> String {
+        let mut out = String::new();
+        out.push('{');
+        let _ = write!(
+            out,
+            "\"requests\":{},\"batches\":{},\"padded_slots\":{},\"accepted\":{},\
+             \"rejected\":{},\"retry_hints\":{},\"failed_batches\":{},\"failed_requests\":{},\
+             \"mean_latency_us\":{:.1},\"p50_latency_us\":{},\"p99_latency_us\":{},\
+             \"max_latency_us\":{},\"throughput_rps\":{:.1},\"sim_energy_fj\":{:.1},\
+             \"sim_p50_latency_ns\":{},\"sim_p99_latency_ns\":{},\"sim_programs\":{},\
+             \"sim_stationary_hits\":{},\"host_gemm_mean_us\":{:.1},\"host_gemm_p50_us\":{},\
+             \"host_gemm_p99_us\":{},\"plan_hits\":{},\"plan_misses\":{},\"plan_evictions\":{},\
+             \"plan_compiles\":{},\"plan_resident\":{},\"plan_resident_bytes\":{},\
+             \"plan_compile_p99_us\":{},\"plan_stall_p99_us\":{},\
+             \"pool_hits\":{},\"pool_misses\":{},\"pool_recycled\":{}",
+            self.requests,
+            self.batches,
+            self.padded_slots,
+            self.accepted,
+            self.rejected,
+            self.retry_hints,
+            self.failed_batches,
+            self.failed_requests,
+            self.mean_latency_us,
+            self.p50_latency_us,
+            self.p99_latency_us,
+            self.max_latency_us,
+            self.throughput_rps,
+            self.sim_energy_fj,
+            self.sim_p50_latency_ns,
+            self.sim_p99_latency_ns,
+            self.sim_programs,
+            self.sim_stationary_hits,
+            self.host_gemm_mean_us,
+            self.host_gemm_p50_us,
+            self.host_gemm_p99_us,
+            self.plan_hits,
+            self.plan_misses,
+            self.plan_evictions,
+            self.plan_compiles,
+            self.plan_resident,
+            self.plan_resident_bytes,
+            self.plan_compile_p99_us,
+            self.plan_stall_p99_us,
+            self.pool.hits,
+            self.pool.misses,
+            self.pool.recycled,
+        );
+        out.push_str(",\"stages\":{");
+        for (i, s) in Stage::ALL.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let _ = write!(
+                out,
+                "\"{}\":{{\"count\":{},\"p50_us\":{},\"p99_us\":{}}}",
+                s.name(),
+                self.stage_count[i],
+                self.stage_p50_us[i],
+                self.stage_p99_us[i],
+            );
+        }
+        out.push_str("},\"tenants\":[");
+        for (i, t) in self.tenants.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let _ = write!(
+                out,
+                "{{\"name\":\"{}\",\"requests\":{},\"p50_latency_us\":{},\
+                 \"p99_latency_us\":{},\"p50_queue_us\":{},\"p99_queue_us\":{}}}",
+                t.name,
+                t.requests,
+                t.p50_latency_us,
+                t.p99_latency_us,
+                t.p50_queue_us,
+                t.p99_queue_us,
+            );
+        }
+        out.push_str("]}");
+        out
+    }
+
+    /// Prometheus text exposition, all metrics prefixed `luna_`.
+    pub fn render_prom(&self) -> String {
+        let mut out = String::new();
+        self.render_prom_into(&mut out, "", true);
+        out
+    }
+
+    /// [`Self::render_prom`] into a caller buffer. `labels` (e.g.
+    /// `backend="127.0.0.1:7071"`) is folded into every sample's label
+    /// set; `headers` controls the `# TYPE` lines (emit them once when
+    /// rendering several backends' snapshots into one document — note
+    /// that multi-backend documents interleave metric groups, which
+    /// scrapers accept but `promtool check metrics` flags as a style
+    /// warning).
+    pub fn render_prom_into(&self, out: &mut String, labels: &str, headers: bool) {
+        let sample = |out: &mut String, name: &str, extra: &str, v: &str| {
+            out.push_str(name);
+            match (labels.is_empty(), extra.is_empty()) {
+                (true, true) => {}
+                (false, true) => {
+                    let _ = write!(out, "{{{labels}}}");
+                }
+                (true, false) => {
+                    let _ = write!(out, "{{{extra}}}");
+                }
+                (false, false) => {
+                    let _ = write!(out, "{{{labels},{extra}}}");
+                }
+            }
+            let _ = writeln!(out, " {v}");
+        };
+        let counter = |out: &mut String, name: &str, v: u64| {
+            if headers {
+                let _ = writeln!(out, "# TYPE {name} counter");
+            }
+            sample(out, name, "", &v.to_string());
+        };
+        let gauge = |out: &mut String, name: &str, v: f64| {
+            if headers {
+                let _ = writeln!(out, "# TYPE {name} gauge");
+            }
+            sample(out, name, "", &format!("{v:.1}"));
+        };
+        counter(out, "luna_requests_total", self.requests);
+        counter(out, "luna_batches_total", self.batches);
+        counter(out, "luna_accepted_total", self.accepted);
+        counter(out, "luna_rejected_total", self.rejected);
+        counter(out, "luna_retry_hints_total", self.retry_hints);
+        counter(out, "luna_failed_batches_total", self.failed_batches);
+        counter(out, "luna_failed_requests_total", self.failed_requests);
+        gauge(out, "luna_latency_mean_us", self.mean_latency_us);
+        if headers {
+            let _ = writeln!(out, "# TYPE luna_latency_us gauge");
+        }
+        sample(out, "luna_latency_us", "quantile=\"0.5\"", &self.p50_latency_us.to_string());
+        sample(out, "luna_latency_us", "quantile=\"0.99\"", &self.p99_latency_us.to_string());
+        gauge(out, "luna_throughput_rps", self.throughput_rps);
+        counter(out, "luna_sim_energy_fj_total", self.sim_energy_fj as u64);
+        counter(out, "luna_sim_programs_total", self.sim_programs);
+        counter(out, "luna_sim_stationary_hits_total", self.sim_stationary_hits);
+        gauge(out, "luna_host_gemm_p99_us", self.host_gemm_p99_us as f64);
+        counter(out, "luna_plan_cache_hits_total", self.plan_hits);
+        counter(out, "luna_plan_cache_misses_total", self.plan_misses);
+        counter(out, "luna_plan_cache_evictions_total", self.plan_evictions);
+        counter(out, "luna_plan_cache_compiles_total", self.plan_compiles);
+        gauge(out, "luna_plan_cache_resident", self.plan_resident as f64);
+        gauge(out, "luna_plan_cache_resident_bytes", self.plan_resident_bytes as f64);
+        counter(out, "luna_pool_hits_total", self.pool.hits);
+        counter(out, "luna_pool_misses_total", self.pool.misses);
+        if headers {
+            let _ = writeln!(out, "# TYPE luna_stage_count_total counter");
+            let _ = writeln!(out, "# TYPE luna_stage_p50_us gauge");
+            let _ = writeln!(out, "# TYPE luna_stage_p99_us gauge");
+        }
+        for (i, s) in Stage::ALL.iter().enumerate() {
+            let label = format!("stage=\"{}\"", s.name());
+            sample(out, "luna_stage_count_total", &label, &self.stage_count[i].to_string());
+            sample(out, "luna_stage_p50_us", &label, &self.stage_p50_us[i].to_string());
+            sample(out, "luna_stage_p99_us", &label, &self.stage_p99_us[i].to_string());
+        }
+        if headers && !self.tenants.is_empty() {
+            let _ = writeln!(out, "# TYPE luna_tenant_requests_total counter");
+            let _ = writeln!(out, "# TYPE luna_tenant_p99_latency_us gauge");
+            let _ = writeln!(out, "# TYPE luna_tenant_p99_queue_us gauge");
+        }
+        for t in &self.tenants {
+            let label = format!("tenant=\"{}\"", t.name);
+            sample(out, "luna_tenant_requests_total", &label, &t.requests.to_string());
+            sample(out, "luna_tenant_p99_latency_us", &label, &t.p99_latency_us.to_string());
+            sample(out, "luna_tenant_p99_queue_us", &label, &t.p99_queue_us.to_string());
+        }
     }
 }
 
@@ -530,7 +782,7 @@ impl RouterMetrics {
 }
 
 /// Point-in-time view of one backend's router counters.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct BackendStats {
     pub addr: String,
     pub routed: u64,
@@ -541,7 +793,7 @@ pub struct BackendStats {
 }
 
 /// Point-in-time view of [`RouterMetrics`].
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct RouterSnapshot {
     pub backends: Vec<BackendStats>,
     pub terminal_rejections: u64,
@@ -579,6 +831,148 @@ impl RouterSnapshot {
         }
         out
     }
+
+    /// JSON object form (stable field names, hand-rolled).
+    pub fn render_json(&self) -> String {
+        let mut out = String::new();
+        let _ = write!(
+            out,
+            "{{\"terminal_rejections\":{},\"backends\":[",
+            self.terminal_rejections
+        );
+        for (i, b) in self.backends.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let _ = write!(
+                out,
+                "{{\"addr\":\"{}\",\"routed\":{},\"rejected\":{},\"failed_over\":{},\
+                 \"quarantines\":{},\"recoveries\":{}}}",
+                b.addr, b.routed, b.rejected, b.failed_over, b.quarantines, b.recoveries,
+            );
+        }
+        out.push_str("]}");
+        out
+    }
+
+    /// Prometheus text exposition for the router tier (`luna_router_`
+    /// prefix, one labelled sample per backend).
+    pub fn render_prom(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "# TYPE luna_router_terminal_rejections_total counter");
+        let _ = writeln!(
+            out,
+            "luna_router_terminal_rejections_total {}",
+            self.terminal_rejections
+        );
+        for (name, get) in [
+            ("routed", 0usize),
+            ("rejected", 1),
+            ("failed_over", 2),
+            ("quarantines", 3),
+            ("recoveries", 4),
+        ] {
+            let _ = writeln!(out, "# TYPE luna_router_{name}_total counter");
+            for b in &self.backends {
+                let v = match get {
+                    0 => b.routed,
+                    1 => b.rejected,
+                    2 => b.failed_over,
+                    3 => b.quarantines,
+                    _ => b.recoveries,
+                };
+                let _ = writeln!(out, "luna_router_{name}_total{{backend=\"{}\"}} {v}", b.addr);
+            }
+        }
+        out
+    }
+}
+
+/// A fully populated snapshot with fixed values — the golden-render
+/// fixture, also reused by the wire-codec roundtrip tests in
+/// `net::protocol`.
+#[cfg(test)]
+pub(crate) fn sample_snapshot() -> MetricsSnapshot {
+    MetricsSnapshot {
+        requests: 14,
+        batches: 2,
+        padded_slots: 2,
+        accepted: 16,
+        rejected: 2,
+        retry_hints: 1,
+        failed_batches: 1,
+        failed_requests: 2,
+        mean_latency_us: 250.0,
+        p50_latency_us: 256,
+        p99_latency_us: 1024,
+        max_latency_us: 900,
+        throughput_rps: 140.0,
+        sim_energy_fj: 1500.0,
+        sim_p50_latency_ns: 512,
+        sim_p99_latency_ns: 2048,
+        sim_programs: 90,
+        sim_stationary_hits: 110,
+        host_gemm_mean_us: 33.0,
+        host_gemm_p50_us: 32,
+        host_gemm_p99_us: 64,
+        plan_hits: 3,
+        plan_misses: 1,
+        plan_evictions: 1,
+        plan_compiles: 1,
+        plan_resident: 2,
+        plan_resident_bytes: 64 * 1024,
+        plan_compile_p99_us: 2048,
+        plan_stall_p99_us: 256,
+        stage_count: [14, 14, 14, 2, 2, 2, 14],
+        stage_p50_us: [2, 2, 64, 4, 16, 8, 2],
+        stage_p99_us: [4, 4, 256, 8, 64, 16, 4],
+        tenants: vec![
+            TenantStats {
+                name: "default".into(),
+                requests: 10,
+                p50_latency_us: 256,
+                p99_latency_us: 1024,
+                p50_queue_us: 64,
+                p99_queue_us: 256,
+            },
+            TenantStats {
+                name: "m1".into(),
+                requests: 4,
+                p50_latency_us: 128,
+                p99_latency_us: 512,
+                p50_queue_us: 32,
+                p99_queue_us: 128,
+            },
+        ],
+        pool: crate::util::PoolStats { hits: 100, misses: 5, recycled: 99 },
+    }
+}
+
+/// A two-backend router fixture for the router golden tests and the
+/// wire-codec roundtrip tests.
+#[cfg(test)]
+pub(crate) fn sample_router_snapshot() -> RouterSnapshot {
+    RouterSnapshot {
+        backends: vec![
+            BackendStats {
+                addr: "127.0.0.1:7071".into(),
+                routed: 2,
+                rejected: 0,
+                failed_over: 0,
+                quarantines: 0,
+                recoveries: 0,
+            },
+            BackendStats {
+                addr: "127.0.0.1:7072".into(),
+                routed: 1,
+                rejected: 1,
+                failed_over: 1,
+                quarantines: 1,
+                recoveries: 1,
+            },
+        ],
+        terminal_rejections: 1,
+    }
 }
 
 #[cfg(test)]
@@ -586,15 +980,116 @@ mod tests {
     use super::*;
 
     #[test]
-    fn histogram_quantiles_are_ordered() {
-        let h = LatencyHistogram::default();
-        for us in [10u64, 20, 40, 80, 160, 320, 1000, 5000] {
-            h.record_us(us);
-        }
-        assert_eq!(h.count(), 8);
-        assert!(h.quantile_us(0.5) <= h.quantile_us(0.99));
-        assert!(h.mean_us() > 0.0);
-        assert_eq!(h.max_us(), 5000);
+    fn golden_render_is_byte_stable() {
+        let got = sample_snapshot().render();
+        let want = "\
+requests 14 | batches 2 (occupancy 0.88) | failed batches 1 (2 requests)
+admission accepted 16 rejected 2 (hints 1) | reject rate 0.111
+latency mean 250 us p50 256 us p99 1024 us max 900 us | throughput 140 req/s
+host gemm mean 33 us p50 32 us p99 64 us
+pool hits 100 misses 5 recycled 99 (hit rate 0.952)
+plan cache hits 3 misses 1 (hit rate 0.750) evictions 1 compiles 1 | \
+resident 2 (64 KiB) | compile p99 2048 us stall p99 256 us
+sim energy 0.00 nJ (107.1 fJ/req) | sim latency p50 512 ns p99 2048 ns | \
+programs 90 stationary hits 110 (hit-rate 0.55)
+stage p99 us: ingress 4 admission 4 queue_wait 256 batch_form 8 gemm 64 \
+calibrated_gate 16 write_back 4
+tenant default requests 10 latency p50 256 us p99 1024 us | queue p50 64 us p99 256 us
+tenant m1 requests 4 latency p50 128 us p99 512 us | queue p50 32 us p99 128 us
+";
+        assert_eq!(got, want, "---got---\n{got}\n---want---\n{want}");
+    }
+
+    #[test]
+    fn golden_router_render_is_byte_stable() {
+        let got = sample_router_snapshot().render();
+        let want = "\
+router routed 3 failed-over 1 quarantines 1 terminal rejections 1
+backend 0 127.0.0.1:7071 routed 2 rejected 0 failed-over 0 quarantined 0 recovered 0
+backend 1 127.0.0.1:7072 routed 1 rejected 1 failed-over 1 quarantined 1 recovered 1
+";
+        assert_eq!(got, want, "---got---\n{got}\n---want---\n{want}");
+    }
+
+    #[test]
+    fn json_render_carries_stages_and_tenants() {
+        let json = sample_snapshot().render_json();
+        assert!(json.starts_with('{') && json.ends_with('}'), "{json}");
+        assert!(json.contains("\"requests\":14"), "{json}");
+        assert!(
+            json.contains("\"queue_wait\":{\"count\":14,\"p50_us\":64,\"p99_us\":256}"),
+            "{json}"
+        );
+        assert!(json.contains("\"name\":\"m1\",\"requests\":4"), "{json}");
+        let router = sample_router_snapshot().render_json();
+        assert!(router.contains("\"terminal_rejections\":1"), "{router}");
+        assert!(router.contains("\"addr\":\"127.0.0.1:7072\",\"routed\":1"), "{router}");
+    }
+
+    #[test]
+    fn prom_render_is_labelled_exposition() {
+        let prom = sample_snapshot().render_prom();
+        assert!(
+            prom.contains("# TYPE luna_requests_total counter\nluna_requests_total 14\n"),
+            "{prom}"
+        );
+        assert!(prom.contains("luna_latency_us{quantile=\"0.99\"} 1024\n"), "{prom}");
+        assert!(prom.contains("luna_stage_p99_us{stage=\"gemm\"} 64\n"), "{prom}");
+        assert!(prom.contains("luna_tenant_requests_total{tenant=\"m1\"} 4\n"), "{prom}");
+        // base labels fold into every sample, headers suppressible
+        let mut labelled = String::new();
+        sample_snapshot().render_prom_into(&mut labelled, "backend=\"b0\"", false);
+        assert!(!labelled.contains("# TYPE"), "{labelled}");
+        assert!(labelled.contains("luna_requests_total{backend=\"b0\"} 14\n"), "{labelled}");
+        assert!(
+            labelled.contains("luna_stage_p99_us{backend=\"b0\",stage=\"gemm\"} 64\n"),
+            "{labelled}"
+        );
+        let rprom = sample_router_snapshot().render_prom();
+        assert!(
+            rprom.contains("luna_router_routed_total{backend=\"127.0.0.1:7071\"} 2\n"),
+            "{rprom}"
+        );
+        assert!(rprom.contains("luna_router_terminal_rejections_total 1\n"), "{rprom}");
+    }
+
+    #[test]
+    fn stage_histograms_aggregate_into_the_snapshot() {
+        let m = Metrics::new();
+        m.record_stage_us(Stage::QueueWait, 100);
+        m.record_stage_us(Stage::QueueWait, 200);
+        m.record_stage_us(Stage::Gemm, 0); // clamps to the 1 µs floor
+        let snap = m.snapshot();
+        assert_eq!(snap.stage_count[Stage::QueueWait as usize], 2);
+        assert_eq!(snap.stage_count[Stage::Gemm as usize], 1);
+        assert_eq!(snap.stage_count[Stage::Ingress as usize], 0);
+        assert!(snap.stage_p99_us[Stage::QueueWait as usize] >= 200);
+        assert!(
+            snap.stage_p50_us[Stage::QueueWait as usize]
+                <= snap.stage_p99_us[Stage::QueueWait as usize]
+        );
+        let report = snap.render();
+        assert!(report.contains("stage p99 us: ingress 0"), "{report}");
+    }
+
+    #[test]
+    fn tenant_histograms_register_once_and_render_sorted() {
+        let m = Metrics::new();
+        let t1 = m.tenant(ModelId::new("m1").unwrap());
+        let td = m.tenant(ModelId::DEFAULT);
+        let t1_again = m.tenant(ModelId::new("m1").unwrap());
+        assert!(Arc::ptr_eq(&t1, &t1_again), "one registry entry per model");
+        t1.latency.record_us(100);
+        t1.queue.record_us(10);
+        td.latency.record_us(400);
+        let snap = m.snapshot();
+        assert_eq!(snap.tenants.len(), 2);
+        assert_eq!(snap.tenants[0].name, "default", "sorted by name");
+        assert_eq!(snap.tenants[1].name, "m1");
+        assert_eq!(snap.tenants[1].requests, 1);
+        assert!(snap.tenants[1].p99_queue_us >= 10);
+        let report = snap.render();
+        assert!(report.contains("tenant m1 requests 1"), "{report}");
     }
 
     #[test]
@@ -720,14 +1215,7 @@ mod tests {
         m.record_recovery(1);
         m.record_terminal_rejection();
         let snap = m.snapshot();
-        assert_eq!(snap.backends.len(), 2);
-        assert_eq!(snap.backends[0].routed, 2);
-        assert_eq!(snap.backends[0].failed_over, 0);
-        assert_eq!(snap.backends[1].routed, 1);
-        assert_eq!(snap.backends[1].rejected, 1);
-        assert_eq!(snap.backends[1].failed_over, 1);
-        assert_eq!(snap.backends[1].quarantines, 1);
-        assert_eq!(snap.backends[1].recoveries, 1);
+        assert_eq!(snap, sample_router_snapshot(), "fixture mirrors the live counters");
         assert_eq!(snap.routed_total(), 3);
         assert_eq!(snap.failed_over_total(), 1);
         assert_eq!(snap.quarantines_total(), 1);

@@ -48,6 +48,7 @@ pub use admission::AdmissionGate;
 pub use batcher::{Batch, Batcher};
 pub use metrics::{
     BackendStats, LatencyHistogram, Metrics, MetricsSnapshot, RouterMetrics, RouterSnapshot,
+    TenantLat, TenantStats,
 };
 pub use request::{InferenceRequest, InferenceResponse, RequestId};
 pub use router::Router;

@@ -20,11 +20,15 @@ pub struct InferenceRequest {
     pub id: RequestId,
     pub pixels: PooledVec<f32>,
     pub enqueued_at: Instant,
+    /// Flight-recorder trace id (`0` = untraced). Assigned at ingress —
+    /// sampled locally or carried in on the wire — and threaded through
+    /// the batch so completion can record per-stage spans under it.
+    pub trace: u64,
 }
 
 impl InferenceRequest {
     pub fn new(id: RequestId, pixels: impl Into<PooledVec<f32>>) -> Self {
-        InferenceRequest { id, pixels: pixels.into(), enqueued_at: Instant::now() }
+        InferenceRequest { id, pixels: pixels.into(), enqueued_at: Instant::now(), trace: 0 }
     }
 }
 

@@ -59,16 +59,17 @@
 
 use super::admission::AdmissionGate;
 use super::batcher::{Batch, Batcher};
-use super::metrics::Metrics;
+use super::metrics::{Metrics, TenantLat};
 use super::request::{InferenceRequest, InferenceResponse, RequestId};
 use super::router::{InFlightGuard, Router};
 use super::tiler::{ScheduleCost, Tiler, UnitCosts};
 use super::worker::{BatchJob, ReplyTicket, ReplyTo, WorkerPool, WorkerReply};
 use crate::config::{BackendKind, BatcherConfig, Config, ShardAffinity};
-use crate::engine::{BackendSpec, BatchOutput, ModelEntry, PlanCache};
+use crate::engine::{BackendSpec, ModelEntry, PlanCache};
 use crate::net::protocol::{Frame, ModelId, WireCost};
 use crate::nn::QuantMlp;
 use crate::runtime::ArtifactStore;
+use crate::util::trace::{FlightRecorder, Stage};
 use crate::util::{oneshot, queue, PooledVec};
 use crate::Result;
 use anyhow::{anyhow, ensure, Context};
@@ -79,7 +80,7 @@ use std::collections::HashMap;
 // role. The model-checked admission bound lives in [`AdmissionGate`].
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// 429-style admission rejection with a structured retry hint.
 ///
@@ -295,6 +296,14 @@ struct BatchCtx {
     sched_cost: Option<ScheduleCost>,
     /// The tenant the batch belongs to (per-model stats + drain count).
     slot: Arc<ModelSlot>,
+    /// The tenant's latency/queue histograms, resolved once per batch
+    /// at dispatch (a lock + `Arc` clone; see [`Metrics::tenant`]).
+    tenant: Arc<TenantLat>,
+    /// When [`dispatch_batch`] started forming the batch — the end of
+    /// every member request's queue-wait span.
+    formed_at: Instant,
+    /// When the batch was handed to a worker (batch-form span end).
+    dispatched_at: Instant,
 }
 
 /// The coordinator-side pricing tiler plus which model last ran on its
@@ -328,6 +337,11 @@ struct Shared {
     sched_cache: Mutex<HashMap<(ModelId, usize), ScheduleCost>>,
     router: Router,
     metrics: Arc<Metrics>,
+    /// Per-process span flight recorder ([`crate::util::trace`]): stage
+    /// spans land here under each traced request's id, and the wire
+    /// front-end serves `DumpTrace` from it. Pre-allocated at startup,
+    /// so recording stays off the allocator.
+    recorder: Arc<FlightRecorder>,
     /// Model id → registered tenant. Read-locked on every submit (the
     /// hot path takes no write lock); write-locked only by
     /// load/retire admin operations.
@@ -491,6 +505,8 @@ impl CoordinatorServer {
             ensure!(registry.insert(model, slot).is_none(), "duplicate model id {id}");
         }
         let metrics = Arc::new(Metrics::new());
+        let recorder =
+            FlightRecorder::new("server", cfg.trace.ring_capacity, cfg.trace.sample_every);
         let plan_cache =
             Arc::new(PlanCache::new(cfg.plan_cache.max_bytes, metrics.plan_cache.clone()));
         // Compile the default model once, through the cache, and seed
@@ -525,6 +541,7 @@ impl CoordinatorServer {
             sched_cache: Mutex::new(HashMap::new()),
             router: Router::new(pool),
             metrics,
+            recorder,
             registry: RwLock::new(registry),
             plan_cache,
             batcher_cfg: cfg.batcher.clone(),
@@ -566,7 +583,7 @@ impl CoordinatorServer {
                                 shard.pending.lock().unwrap().remove(&reply.batch_id)
                             };
                             if let Some(ctx) = ctx {
-                                complete_batch(&shared, shard_idx, ctx, reply.result, &mut scratch);
+                                complete_batch(&shared, shard_idx, ctx, reply, &mut scratch);
                             }
                         }
                     })
@@ -675,6 +692,7 @@ impl ServerHandle {
             None,
             model,
             pixels.into(),
+            0,
             Completion::callback(move |result| {
                 let _ = tx.send(result);
             }),
@@ -699,7 +717,7 @@ impl ServerHandle {
     /// across batcher shards. Pixels arrive in a pooled buffer (plain
     /// `Vec<f32>` converts in), keeping the wire path allocation-free.
     pub fn submit_with(&self, pixels: impl Into<PooledVec<f32>>, done: Completion) -> Result<()> {
-        self.submit_inner(None, ModelId::DEFAULT, pixels.into(), done)
+        self.submit_inner(None, ModelId::DEFAULT, pixels.into(), 0, done)
     }
 
     /// [`submit_with`](Self::submit_with), identifying the submitting
@@ -714,7 +732,7 @@ impl ServerHandle {
         pixels: impl Into<PooledVec<f32>>,
         done: Completion,
     ) -> Result<()> {
-        self.submit_inner(Some(conn), ModelId::DEFAULT, pixels.into(), done)
+        self.submit_inner(Some(conn), ModelId::DEFAULT, pixels.into(), 0, done)
     }
 
     /// [`submit_from`](Self::submit_from) against a named model — the
@@ -726,7 +744,22 @@ impl ServerHandle {
         pixels: impl Into<PooledVec<f32>>,
         done: Completion,
     ) -> Result<()> {
-        self.submit_inner(Some(conn), model, pixels.into(), done)
+        self.submit_inner(Some(conn), model, pixels.into(), 0, done)
+    }
+
+    /// [`submit_model_from`](Self::submit_model_from) with an
+    /// ingress-assigned trace id. A nonzero `trace` (carried in on the
+    /// wire) is honored as-is so a routed request keeps one id across
+    /// processes; `0` lets this server's recorder sample locally.
+    pub fn submit_traced(
+        &self,
+        conn: u64,
+        model: ModelId,
+        pixels: impl Into<PooledVec<f32>>,
+        trace: u64,
+        done: Completion,
+    ) -> Result<()> {
+        self.submit_inner(Some(conn), model, pixels.into(), trace, done)
     }
 
     fn submit_inner(
@@ -734,8 +767,14 @@ impl ServerHandle {
         conn: Option<u64>,
         model: ModelId,
         pixels: PooledVec<f32>,
+        trace: u64,
         done: Completion,
     ) -> Result<()> {
+        let t0 = Instant::now();
+        // Sample locally only when no id came in on the wire: a nonzero
+        // wire trace is never reassigned, so a routed request keeps one
+        // id end to end and its spans stitch into a single timeline.
+        let trace = if trace == 0 { self.shared.recorder.sample() } else { trace };
         ensure!(pixels.len() == self.shared.in_dim, "expected {} pixels", self.shared.in_dim);
         let slot = {
             let registry = self.shared.registry.read().unwrap();
@@ -779,7 +818,9 @@ impl ServerHandle {
         let maybe_batch = {
             let mut lanes = shard.lanes.lock().unwrap();
             let lane = lane_for(&mut lanes, model, &entry, &slot, &self.shared.batcher_cfg);
-            match lane.batcher.push(InferenceRequest::new(id, pixels)) {
+            let mut request = InferenceRequest::new(id, pixels);
+            request.trace = trace;
+            match lane.batcher.push(request) {
                 Ok(b) => b,
                 // Unreachable by invariant (every lane's pending queue
                 // is a subset of the outstanding set the gate above
@@ -801,6 +842,10 @@ impl ServerHandle {
         // fail paths decrement the per-model in-flight count
         token.disarm();
         self.shared.metrics.record_admission();
+        let admitted = Instant::now();
+        let admit_us = admitted.duration_since(t0).as_micros() as u64;
+        self.shared.metrics.record_stage_us(Stage::Admission, admit_us);
+        self.shared.recorder.record(trace, Stage::Admission, t0, admitted);
         if let Some(batch) = maybe_batch {
             dispatch_batch(&self.shared, shard_idx, model, &entry, &slot, batch);
         }
@@ -923,6 +968,12 @@ impl ServerHandle {
     pub fn metrics(&self) -> Arc<Metrics> {
         self.shared.metrics.clone()
     }
+
+    /// This process's span flight recorder: the wire front-end records
+    /// ingress spans into it and serves `DumpTrace` dumps from it.
+    pub fn recorder(&self) -> Arc<FlightRecorder> {
+        Arc::clone(&self.shared.recorder)
+    }
 }
 
 /// This shard's lane for `model`, created on first touch (cold path;
@@ -989,6 +1040,7 @@ fn dispatch_batch(
     if n == 0 {
         return;
     }
+    let formed_at = Instant::now();
     // CiM cost model: schedule this batch on the coordinator's fabric —
     // skipped for `backend calibrated`, whose workers replay the schedule
     // on their own weight-stationary fabrics and return the cost.
@@ -1018,7 +1070,16 @@ fn dispatch_batch(
     // reply back to this shard's pending map
     let seq = shared.batch_seq.fetch_add(1, Ordering::Relaxed);
     let batch_id = seq * shared.shards.len() as u64 + shard_idx as u64;
-    let ctx = BatchCtx { batch, guard, sched_cost, slot: Arc::clone(slot) };
+    let tenant = shared.metrics.tenant(model);
+    let ctx = BatchCtx {
+        batch,
+        guard,
+        sched_cost,
+        slot: Arc::clone(slot),
+        tenant,
+        formed_at,
+        dispatched_at: Instant::now(),
+    };
     shard.pending.lock().unwrap().insert(batch_id, ctx);
     let job = BatchJob {
         inputs,
@@ -1045,13 +1106,14 @@ fn complete_batch(
     shared: &Arc<Shared>,
     shard_idx: usize,
     ctx: BatchCtx,
-    result: Result<BatchOutput>,
+    reply: WorkerReply,
     scratch: &mut Vec<Option<Completion>>,
 ) {
-    let BatchCtx { batch, guard, sched_cost, slot } = ctx;
+    let BatchCtx { batch, guard, sched_cost, slot, tenant, formed_at, dispatched_at } = ctx;
     let _guard = guard;
-    match result {
+    match reply.result {
         Ok(output) => {
+            let done_at = Instant::now();
             let n = batch.requests.len();
             // The backend's own pricing (calibrated) wins over the
             // coordinator-side schedule; exactly one of the two exists.
@@ -1061,6 +1123,22 @@ fn complete_batch(
             shared.metrics.record_batch(n, batch.padded_to);
             shared.metrics.record_sim_cost(&cost);
             shared.metrics.record_host_gemm_us(output.host_gemm_us);
+            // Stage accounting. Batch formation and the worker's wall
+            // time — split into host GEMM plus the calibrated-gate
+            // replay remainder — are batch-granular; queue-wait and
+            // write-back land per request in the fan-out loop below.
+            let form_us = dispatched_at.duration_since(formed_at).as_micros() as u64;
+            shared.metrics.record_stage_us(Stage::BatchForm, form_us);
+            let gemm_us = output.host_gemm_us.min(reply.wall_us);
+            let gate_us = reply.wall_us - gemm_us;
+            shared.metrics.record_stage_us(Stage::Gemm, gemm_us);
+            if gate_us > 0 {
+                shared.metrics.record_stage_us(Stage::CalibratedGate, gate_us);
+            }
+            // Worker-side spans are reconstructed from the reply's wall
+            // time, anchored to end when the reply landed here.
+            let done_us = shared.recorder.wall_us(done_at);
+            let gemm_start = done_us.saturating_sub(reply.wall_us);
             // per-tenant accounting: requests served and how weight-
             // stationary this model's scheduled work was
             slot.requests.fetch_add(n as u64, Ordering::Relaxed);
@@ -1086,6 +1164,20 @@ fn complete_batch(
                 let label = crate::nn::argmax(logits);
                 let latency_us = req.enqueued_at.elapsed().as_micros() as u64;
                 shared.metrics.latency.record_us(latency_us);
+                let queue_us = formed_at.duration_since(req.enqueued_at).as_micros() as u64;
+                shared.metrics.record_stage_us(Stage::QueueWait, queue_us);
+                tenant.latency.record_us(latency_us);
+                tenant.queue.record_us(queue_us);
+                if req.trace != 0 {
+                    let rec = &shared.recorder;
+                    rec.record(req.trace, Stage::QueueWait, req.enqueued_at, formed_at);
+                    rec.record(req.trace, Stage::BatchForm, formed_at, dispatched_at);
+                    rec.record_at(req.trace, Stage::Gemm, gemm_start, gemm_us);
+                    if gate_us > 0 {
+                        let gate_start = gemm_start + gemm_us;
+                        rec.record_at(req.trace, Stage::CalibratedGate, gate_start, gate_us);
+                    }
+                }
                 match waiter {
                     Some(Completion::Callback(done)) => done(Ok(InferenceResponse {
                         id: req.id,
@@ -1111,10 +1203,15 @@ fn complete_batch(
                                 stationary_hits: cost.stationary_hits,
                             },
                             logits: PooledVec::from_slice(logits),
+                            trace: req.trace,
                         });
                     }
                     None => {}
                 }
+                let resolved = Instant::now();
+                let wb_us = resolved.duration_since(done_at).as_micros() as u64;
+                shared.metrics.record_stage_us(Stage::WriteBack, wb_us);
+                shared.recorder.record(req.trace, Stage::WriteBack, done_at, resolved);
             }
         }
         Err(e) => fail_batch(shared, shard_idx, &batch, &slot, &format!("{e:#}")),

@@ -91,6 +91,11 @@ pub struct WorkerReply {
     /// pending-batch context; the shard index rides in the low bits).
     pub batch_id: u64,
     pub result: Result<BatchOutput>,
+    /// Wall time the worker spent executing the batch (µs) — dispatch
+    /// to done, measured worker-side so the coordinator can split the
+    /// GEMM and calibrated-gate trace spans out of it. `0` when the
+    /// reply came from the drop guard (no batch ran).
+    pub wall_us: u64,
 }
 
 /// One-shot completion-queue reply handle. [`ReplyTicket::send`]
@@ -111,9 +116,10 @@ impl ReplyTicket {
     }
 
     /// Deliver the result (consumes the ticket; the drop guard disarms).
-    pub fn send(mut self, result: Result<BatchOutput>) {
+    /// `wall_us` is the worker-measured batch execution time.
+    pub fn send(mut self, result: Result<BatchOutput>, wall_us: u64) {
         if let Some(tx) = self.tx.take() {
-            let _ = tx.send(WorkerReply { batch_id: self.batch_id, result });
+            let _ = tx.send(WorkerReply { batch_id: self.batch_id, result, wall_us });
         }
     }
 }
@@ -124,6 +130,7 @@ impl Drop for ReplyTicket {
             let reply = WorkerReply {
                 batch_id: self.batch_id,
                 result: Err(anyhow!("worker dropped reply")),
+                wall_us: 0,
             };
             let _ = tx.send(reply);
         }
@@ -268,15 +275,17 @@ fn worker_main(
             }
         };
         let BatchJob { inputs, batch, dim, model, entry, reply } = job;
+        let started = std::time::Instant::now();
         let res = backend_for(&spec, &mut backend, &mut extras, model, entry.as_ref())
             .and_then(|b| b.run_batch(&inputs, batch, dim));
+        let wall_us = started.elapsed().as_micros() as u64;
         // recycle the flat input buffer before waking the reply path
         drop(inputs);
         match reply {
             ReplyTo::Oneshot(tx) => {
                 let _ = tx.send(res);
             }
-            ReplyTo::Queue(ticket) => ticket.send(res),
+            ReplyTo::Queue(ticket) => ticket.send(res, wall_us),
         }
     }
 }
@@ -350,8 +359,10 @@ mod tests {
 
         // and a consumed ticket's guard is disarmed: exactly one reply
         let (ctx, crx) = queue::channel::<WorkerReply>();
-        ReplyTicket::new(ctx, 8).send(Ok(BatchOutput::plain(vec![1.0f32])));
-        assert_eq!(crx.recv().unwrap().batch_id, 8);
+        ReplyTicket::new(ctx, 8).send(Ok(BatchOutput::plain(vec![1.0f32])), 12);
+        let reply = crx.recv().unwrap();
+        assert_eq!(reply.batch_id, 8);
+        assert_eq!(reply.wall_us, 12);
         assert!(crx.try_recv().is_none(), "no double delivery");
     }
 

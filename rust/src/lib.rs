@@ -39,7 +39,11 @@
 //!   front-end with 429-style admission rejections, the matching
 //!   client, the `repro route` front-tier router (multi-process
 //!   shard-out — see `## Router tier`) and the `repro loadgen` traffic
-//!   generator — see [`net`] and the `## Wire protocol` section below;
+//!   generator, plus the observability surface: per-request trace ids
+//!   carried on the wire, a lock-free flight recorder per process, and
+//!   the `repro stats` / `repro trace` scrape commands (see
+//!   `## Observability`) — see [`net`] and the `## Wire protocol`
+//!   section below;
 //! * [`report`] — text/CSV regenerators for every table and figure.
 //!
 //! Python (JAX + Pallas) runs only at build time (`make artifacts`); the
@@ -260,7 +264,7 @@
 //! ```text
 //! offset  size  field
 //! 0       2     magic "LC" (0x4C 0x43)
-//! 2       1     version: (major << 4) | minor — currently 0x02 (v0.2)
+//! 2       1     version: (major << 4) | minor — currently 0x03 (v0.3)
 //! 3       1     frame type
 //! 4       4     payload length, u32 LE (<= 1 MiB)
 //! 8       n     payload
@@ -271,8 +275,12 @@
 //! header carries the version) and `Request` (0x01: `id u64`, `count
 //! u32`, `count × f32` pixels, then — since minor 2 — an optional
 //! trailing model id naming the tenant; absent means the default
-//! model, so a default-model request is byte-identical with v0.1.
-//! `id` is client-assigned and echoed on the reply). Server → client:
+//! model, so a default-model request is byte-identical with v0.1, and
+//! — since minor 3 — an optional trailing `trace u64` naming the
+//! request's distributed trace (see `## Observability`; a traced
+//! default-model request encodes the model field too, keeping the
+//! trailing-field order fixed). `id` is client-assigned and echoed on
+//! the reply). Server → client:
 //! `Info` (0x06: `in_dim u32, out_dim u32, max_batch u32, backend
 //! string`, then — minor 2 — `count u32` + that many model-id strings,
 //! the sorted non-default tenant list — the `Hello` answer),
@@ -286,7 +294,15 @@
 //! string`). The minor-2 admin pair (see `## Multi-tenant serving`):
 //! `LoadModel` (0x07: model id + `dir` string), `RetireModel` (0x08:
 //! model id), each acknowledged by `AdminOk` (0x09: model id) or
-//! answered by `Error`. Strings are `len u32` + UTF-8, at most 1024
+//! answered by `Error`. The minor-3 observability pair (see
+//! `## Observability`): `GetStats` (0x0a, empty) answered by `Stats`
+//! (0x0b: the responder's serialized [`coordinator::MetricsSnapshot`]
+//! and/or [`coordinator::RouterSnapshot`] — a router also fans the
+//! scrape out and appends one snapshot per reachable backend), and
+//! `DumpTrace` (0x0c, empty) answered by `Trace` (0x0d: the flight
+//! recorder's Chrome trace-event JSON as one string). A `Response`
+//! likewise gains — minor 3 — an optional trailing `trace u64`
+//! echoing the request's trace id. Strings are `len u32` + UTF-8, at most 1024
 //! bytes; a wire model id is one length byte (≤ 63) + UTF-8. Replies
 //! arrive in *completion* order, not send order — clients match on
 //! `id`.
@@ -294,9 +310,19 @@
 //! **Versioning rules.** The version byte splits into nibbles: the
 //! **major** bumps on any incompatible layout change (field order,
 //! widths, semantics) and the **minor** bumps when a frame gains
-//! trailing fields or new frame types appear — v0.2 added the
-//! `Request` model id, the `Info` model list and the admin frames. A
-//! reader accepts its own major at any minor ≥ 1, no negotiation: a
+//! trailing fields or new frame types appear:
+//!
+//! ```text
+//! version  additions over the previous minor
+//! v0.1     base protocol: Hello/Info, Request/Response,
+//!          Rejected, Error
+//! v0.2     Request trailing model id, Info tenant list,
+//!          LoadModel/RetireModel/AdminOk admin frames
+//! v0.3     Request/Response trailing trace id,
+//!          GetStats/Stats and DumpTrace/Trace frames
+//! ```
+//!
+//! A reader accepts its own major at any minor ≥ 1, no negotiation: a
 //! frame with a foreign major gets an `Error` naming the supported
 //! version, then close. Same-or-lower minors decode *strictly*
 //! (trailing payload bytes are a protocol error); **higher** minors
@@ -367,6 +393,59 @@
 //! `batcher.affinity connection` would pin an entire router's traffic
 //! to one lane on that backend; connection affinity is for
 //! directly-serving stacks, which is why `request` stays the default.
+//!
+//! ## Observability
+//!
+//! The serving stack answers "where did this request's time go" with
+//! three wire-scrapeable surfaces; none of them allocates on the
+//! steady-state request path (still pinned by
+//! `tests/hot_path_allocs.rs` with tracing on).
+//!
+//! **Per-request tracing.** A trace id is a nonzero `u64` assigned at
+//! the *ingress* tier and carried on the wire as the v0.3 trailing
+//! field, so one routed request is one trace across processes. The
+//! sampling rules compose: a router samples untraced client requests
+//! at its front door (1-in-`trace.sample_every`, `--trace-sample` on
+//! `repro route`; `0` disables, `1` traces everything); a server
+//! assigns ids only to *untraced* submissions (direct clients, local
+//! loadgen); a nonzero wire trace id is honored as-is and never
+//! reassigned — that invariant is what lets the router's spans and
+//! the backend's spans stitch into one timeline by id. Each traced
+//! request records **stage spans** — `ingress`, `admission`,
+//! `queue_wait`, `batch_form`, `gemm`, `calibrated_gate` (suppressed
+//! when the calibrated backend isn't gating), `write_back` — into a
+//! per-process **flight recorder** ([`util::trace::FlightRecorder`]):
+//! a fixed-capacity ring of atomic slots (`trace.ring_capacity`,
+//! `--trace-ring`), written lock-free and allocation-free; when the
+//! ring wraps, the oldest spans are overwritten — it is a flight
+//! recorder, not a log. `DumpTrace` (or `repro trace --addr
+//! A1[,A2,..] [--out PATH]`) renders the ring as Chrome trace-event
+//! JSON (`chrome://tracing` / Perfetto); dumps from several processes
+//! merge by re-basing each process's epoch
+//! ([`util::trace::merge_trace_dumps`]), so a routed request shows as
+//! router-ingress → backend stages → router-write-back on one
+//! timeline.
+//!
+//! **Wire-scrapeable metrics.** `GetStats` returns the responder's
+//! counters as a `Stats` frame: a server sends its
+//! [`coordinator::MetricsSnapshot`], a router sends its
+//! [`coordinator::RouterSnapshot`] *and* fans the scrape out to every
+//! connected backend, appending one `MetricsSnapshot` per backend —
+//! one scrape sees the whole fleet. `repro stats --addr ADDR
+//! [--json | --prom]` renders human text, JSON, or a
+//! Prometheus-exposition page (`luna_*` metrics; backend snapshots
+//! get a `backend="addr"` label). Snapshots are built from relaxed
+//! counters, so one snapshot may *tear* across fields (a request
+//! counted in `requests` but not yet in a stage histogram); each
+//! counter is individually exact, and a quiesced server's wire
+//! snapshot equals its in-process one.
+//!
+//! **Latency breakdowns.** [`coordinator::Metrics`] keeps per-stage
+//! and per-tenant time-in-stage histograms (the shared log₂
+//! [`util::hist::LatencyHistogram`]), surfaced in every render format
+//! and — via `repro loadgen --stats`, which pairs a `GetStats` scrape
+//! before and after the sweep — as the `server_stats` delta block in
+//! `BENCH_serve.json`, next to the client-measured numbers.
 //!
 //! ## Concurrency model
 //!

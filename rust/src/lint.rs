@@ -518,6 +518,19 @@ pub fn self_test() -> Result<()> {
     let in_test = format!("#[cfg(test)]\nmod t {{\n    let v: Vec<u8> = {vwc}(8);\n}}\n");
     expect("test-code-exempt", "no-bare-alloc", &in_test, 0);
 
+    // seeded: the flight recorder (`src/util/trace.rs`) is policed like
+    // the rest of the hot-path set — a bare allocation on its record
+    // path must be caught, so tracing can never re-introduce steady-state
+    // allocation unnoticed
+    let bad_trace = format!("fn record() {{ let spans: Vec<u8> = {vwc}(64); }}\n");
+    let got = lint_source("src/util/trace.rs", &bad_trace)
+        .iter()
+        .filter(|v| v.rule == "no-bare-alloc")
+        .count();
+    if got != 1 {
+        failures.push(format!("trace-module-policed: expected 1 `no-bare-alloc`, got {got}"));
+    }
+
     if failures.is_empty() {
         println!("lint self-test: every rule rejects its seeded violation");
         Ok(())

@@ -14,6 +14,10 @@
 //!   protocol across N `repro serve --listen` backends;
 //! * `loadgen [...]`            — drive a wire-protocol endpoint with
 //!   closed/poisson/bursty traffic and emit `BENCH_serve.json`;
+//! * `stats [...]`              — wire-scrape a server's or router's
+//!   structured metrics (`GetStats`) as text, JSON or Prometheus;
+//! * `trace [...]`              — dump flight recorders (`DumpTrace`) as
+//!   merged Chrome trace-event JSON;
 //! * `eval [...]`               — offline accuracy/energy of every variant;
 //! * `lint [...]`               — repo-invariant source checker (CI gate).
 
@@ -21,7 +25,7 @@ use luna_cim::cells::tsmc65_library;
 use luna_cim::config::{BackendKind, Config, DispatchPolicy, RouterConfig, ShardAffinity};
 use luna_cim::coordinator::{CoordinatorServer, ServerHandle};
 use luna_cim::multiplier::{MultiplierKind, MultiplierModel};
-use luna_cim::net::{loadgen, ModelId, NetServer, RouterServer, Scenario};
+use luna_cim::net::{loadgen, ModelId, NetClient, NetServer, RouterServer, Scenario, StatsPayload};
 use luna_cim::report;
 use luna_cim::runtime::ArtifactStore;
 use luna_cim::Result;
@@ -34,9 +38,11 @@ USAGE:
   repro figures  [--id N] [--csv]
   repro mul <W> <Y>
   repro simulate [--multiplier SLUG] [--weight W] [--inputs a,b,c]
-  repro serve    [--config FILE] [--requests N] [--clients N] [--multiplier SLUG] [--backend native|calibrated|pjrt] [--time-scale X] [--gemm-threads N] [--shards N] [--affinity request|connection] [--listen ADDR] [--model ID=DIR]..
-  repro route    --backends A1,A2,.. [--config FILE] [--listen ADDR] [--policy hash|least-outstanding] [--vnodes N] [--max-connections N] [--probe-ms MS] [--max-backoff-ms MS]
-  repro loadgen  [--addr A1[,A2,..] | --synthetic] [--config FILE] [--scenario closed|poisson|bursty|all] [--loads R1,R2,..] [--connections N] [--requests N] [--burst N] [--retry] [--shards N] [--affinity request|connection] [--models N] [--mix zipf|uniform] [--via-router N] [--router-scale P1,P2,..] [--backend SLUG] [--time-scale X] [--seed N] [--quick] [--save-json [PATH]]
+  repro serve    [--config FILE] [--synthetic] [--requests N] [--clients N] [--multiplier SLUG] [--backend native|calibrated|pjrt] [--time-scale X] [--gemm-threads N] [--shards N] [--affinity request|connection] [--listen ADDR] [--model ID=DIR].. [--trace-sample N] [--trace-ring N]
+  repro route    --backends A1,A2,.. [--config FILE] [--listen ADDR] [--policy hash|least-outstanding] [--vnodes N] [--max-connections N] [--probe-ms MS] [--max-backoff-ms MS] [--trace-sample N] [--trace-ring N]
+  repro loadgen  [--addr A1[,A2,..] | --synthetic] [--config FILE] [--scenario closed|poisson|bursty|all] [--loads R1,R2,..] [--connections N] [--requests N] [--burst N] [--retry] [--shards N] [--affinity request|connection] [--models N] [--mix zipf|uniform] [--via-router N] [--router-scale P1,P2,..] [--backend SLUG] [--time-scale X] [--seed N] [--quick] [--stats] [--save-json [PATH]]
+  repro stats    --addr ADDR [--json | --prom]
+  repro trace    --addr A1[,A2,..] [--out PATH]
   repro eval     [--artifacts DIR]
   repro ablation [--artifacts DIR]
   repro export   [--out DIR]
@@ -54,7 +60,8 @@ Backends: native (in-process batched LUT-GEMM, default),
 --affinity: how requests map onto batcher lanes — request (round-robin by
           request id, default) or connection (one connection pins one lane)
 --listen: expose the coordinator over TCP (wire protocol) instead of running
-          the in-process synthetic load; serves until killed
+          the in-process synthetic load; serves until killed; --synthetic
+          serves synthesized artifacts (as in loadgen, no `make artifacts`)
 --model:  host an extra model (repeatable, or comma-separated id=dir pairs)
           beside the default artifacts; requests name their tenant with the
           wire `model` field, compiled plans share one byte-budgeted LRU
@@ -86,7 +93,22 @@ loadgen:  drives a wire endpoint with closed-loop, open-loop poisson and bursty
           multi-tenant server (default model + N-1 synthesized tenants) and
           spreads requests across tenants (--mix zipf, the default, skews
           toward hot tenants; uniform is even), landing per-tenant goodput,
-          plan-cache hit rate and compile-stall p99 in the JSON
+          plan-cache hit rate and compile-stall p99 in the JSON; --stats
+          wire-scrapes GetStats before and after the sweep and lands the
+          server-side delta (per-stage counts, admission counters,
+          per-tenant latency) next to the client-measured numbers
+stats:    wire-scrape structured metrics (GetStats) from a server or a
+          router: human text by default, --json for one JSON object,
+          --prom for Prometheus exposition; a router reply carries its
+          routing counters plus one server snapshot per reachable backend
+trace:    dump per-process flight recorders (DumpTrace) as Chrome
+          trace-event JSON (open in chrome://tracing or Perfetto);
+          --addr takes a comma-separated list and the dumps merge into
+          one document — a routed request's spans from the router and
+          the backend stitch into one timeline by trace id
+--trace-sample / --trace-ring (serve, route): sample 1-in-N untraced
+          requests into the flight recorder (0 = only propagated trace
+          ids) and size its fixed per-process span ring
 ";
 
 /// Minimal flag parser: `--key value` pairs plus positional args.
@@ -167,6 +189,8 @@ fn run(argv: &[String]) -> Result<()> {
         "serve" => cmd_serve(&args),
         "route" => cmd_route(&args),
         "loadgen" => cmd_loadgen(&args),
+        "stats" => cmd_stats(&args),
+        "trace" => cmd_trace(&args),
         "eval" => cmd_eval(&args),
         "ablation" => cmd_ablation(&args),
         "export" => cmd_export(&args),
@@ -275,6 +299,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(listen) = args.flag("listen") {
         cfg.net.listen = listen.to_string();
     }
+    cfg.trace.sample_every = args.flag_parse("trace-sample", cfg.trace.sample_every)?;
+    cfg.trace.ring_capacity = args.flag_parse("trace-ring", cfg.trace.ring_capacity)?;
     if let Some(list) = args.flag("model") {
         for pair in list.split(',').map(str::trim).filter(|s| !s.is_empty()) {
             let Some((id, dir)) = pair.split_once('=') else {
@@ -282,6 +308,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
             };
             cfg.serving.models.push((id.trim().to_string(), dir.trim().to_string()));
         }
+    }
+    if args.flag("synthetic").is_some() {
+        cfg.artifacts_dir = synth_artifacts_dir(cfg.batcher.max_batch)?;
     }
     cfg.validate()?;
     if !cfg.net.listen.is_empty() {
@@ -410,12 +439,14 @@ fn cmd_route(args: &Args) -> Result<()> {
     cfg.router.max_connections = args.flag_parse("max-connections", cfg.router.max_connections)?;
     cfg.router.probe_ms = args.flag_parse("probe-ms", cfg.router.probe_ms)?;
     cfg.router.max_backoff_ms = args.flag_parse("max-backoff-ms", cfg.router.max_backoff_ms)?;
+    cfg.trace.sample_every = args.flag_parse("trace-sample", cfg.trace.sample_every)?;
+    cfg.trace.ring_capacity = args.flag_parse("trace-ring", cfg.trace.ring_capacity)?;
     anyhow::ensure!(
         !cfg.router.backends.is_empty(),
         "route needs --backends a,b,c (or router.backends in the config)"
     );
     cfg.validate()?;
-    let router = RouterServer::bind(&cfg.router)?;
+    let router = RouterServer::bind_traced(&cfg.router, &cfg.trace)?;
     println!(
         "routing on {} -> {} backend(s) [{}] (policy {})",
         router.local_addr(),
@@ -479,7 +510,7 @@ impl Fleet {
             probe_ms: cfg.router.probe_ms.min(50),
             max_backoff_ms: cfg.router.max_backoff_ms,
         };
-        let router = RouterServer::bind(&rcfg)?;
+        let router = RouterServer::bind_traced(&rcfg, &cfg.trace)?;
         Ok(Fleet { router, nets, servers, handles })
     }
 
@@ -627,10 +658,12 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         None => None,
     };
 
-    let (results, backend, plan) = match args.flag("addr") {
+    let want_stats = args.flag("stats").is_some();
+    let (results, backend, plan, stats) = match args.flag("addr") {
         Some(addr) => {
             println!("driving external endpoint {addr}");
-            (loadgen::run(addr, &opts)?, "external".to_string(), None)
+            let (results, stats) = run_with_stats(addr, &opts, want_stats)?;
+            (results, "external".to_string(), None, stats)
         }
         None if via_router > 0 => {
             if args.flag("synthetic").is_some() {
@@ -645,11 +678,11 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
                  policy {}{retry_note})",
                 cfg.router.policy.slug()
             );
-            let results = loadgen::run(&addr, &opts)?;
+            let (results, stats) = run_with_stats(&addr, &opts, want_stats)?;
             println!("router metrics:\n{}", fleet.router.metrics().snapshot().render());
             let plan = harvest_plan_cache(&fleet.servers, &fleet.handles);
             fleet.shutdown();
-            (results, backend, Some(plan))
+            (results, backend, Some(plan), stats)
         }
         None => {
             if args.flag("synthetic").is_some() {
@@ -671,13 +704,13 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
                 cfg.batcher.shards,
                 if cfg.loadgen.retry { ", client retry on" } else { "" }
             );
-            let results = loadgen::run(&addr, &opts)?;
+            let (results, stats) = run_with_stats(&addr, &opts, want_stats)?;
             net.shutdown();
             println!("server-side metrics:\n{}", server.metrics().snapshot().render());
             let plan =
                 harvest_plan_cache(std::slice::from_ref(&server), std::slice::from_ref(&handle));
             server.shutdown();
-            (results, backend, Some(plan))
+            (results, backend, Some(plan), stats)
         }
     };
     print!("{}", loadgen::render_table(&results));
@@ -714,9 +747,138 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
             &scaling,
             affinity.as_ref(),
             plan.as_ref(),
+            stats.as_ref(),
         );
         std::fs::write(&path, json)?;
         println!("wrote {} cases to {path}", results.len());
+    }
+    Ok(())
+}
+
+/// Run the sweep, optionally bracketed by wire `GetStats` scrapes
+/// (`--stats`): the before/after delta isolates the sweep's own traffic
+/// in the server-side report. Scraping through a router fans out to one
+/// entry per reachable backend.
+fn run_with_stats(
+    addr: &str,
+    opts: &loadgen::LoadgenOptions,
+    stats: bool,
+) -> Result<(Vec<loadgen::CaseResult>, Option<loadgen::ServerStatsReport>)> {
+    if !stats {
+        return Ok((loadgen::run(addr, opts)?, None));
+    }
+    let before = loadgen::ServerStatsReport::scrape(addr)?;
+    let results = loadgen::run(addr, opts)?;
+    let after = loadgen::ServerStatsReport::scrape(addr)?;
+    let report = loadgen::ServerStatsReport::from_scrapes(before, after);
+    let served: u64 = report.endpoints.iter().map(|e| e.requests_delta()).sum();
+    println!(
+        "server-side scrape: {} endpoint(s), {} request(s) served in window",
+        report.endpoints.len(),
+        served
+    );
+    Ok((results, Some(report)))
+}
+
+/// Wire-scrape a peer's structured stats (`GetStats`) and print them.
+fn cmd_stats(args: &Args) -> Result<()> {
+    let addr = args.flag("addr").ok_or_else(|| anyhow::anyhow!("stats needs --addr ADDR"))?;
+    let json = args.flag("json").is_some();
+    let prom = args.flag("prom").is_some();
+    anyhow::ensure!(!(json && prom), "pick one of --json / --prom");
+    let mut client = NetClient::connect(addr)?;
+    let payload = client.get_stats()?;
+    if json {
+        print!("{}", render_stats_json(&payload));
+    } else if prom {
+        print!("{}", render_stats_prom(&payload));
+    } else {
+        if let Some(s) = &payload.server {
+            print!("{}", s.render());
+        }
+        if let Some(r) = &payload.router {
+            print!("{}", r.render());
+        }
+        for (baddr, snap) in &payload.backends {
+            println!("-- backend {baddr} --");
+            print!("{}", snap.render());
+        }
+    }
+    Ok(())
+}
+
+/// One JSON object combining whatever the scrape returned (server
+/// snapshot, router snapshot, per-backend server snapshots).
+fn render_stats_json(p: &StatsPayload) -> String {
+    let mut out = String::from("{");
+    let mut first = true;
+    if let Some(s) = &p.server {
+        out.push_str("\"server\":");
+        out.push_str(&s.render_json());
+        first = false;
+    }
+    if let Some(r) = &p.router {
+        if !first {
+            out.push(',');
+        }
+        out.push_str("\"router\":");
+        out.push_str(&r.render_json());
+        first = false;
+    }
+    if !p.backends.is_empty() {
+        if !first {
+            out.push(',');
+        }
+        out.push_str("\"backends\":{");
+        for (i, (addr, snap)) in p.backends.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("\"{addr}\":"));
+            out.push_str(&snap.render_json());
+        }
+        out.push('}');
+    }
+    out.push_str("}\n");
+    out
+}
+
+/// Prometheus exposition combining whatever the scrape returned: a
+/// router's backend snapshots are labelled `backend="addr"` with the
+/// `# TYPE` headers emitted once.
+fn render_stats_prom(p: &StatsPayload) -> String {
+    let mut out = String::new();
+    if let Some(s) = &p.server {
+        out.push_str(&s.render_prom());
+    }
+    if let Some(r) = &p.router {
+        out.push_str(&r.render_prom());
+    }
+    for (i, (addr, snap)) in p.backends.iter().enumerate() {
+        snap.render_prom_into(&mut out, &format!("backend=\"{addr}\""), i == 0);
+    }
+    out
+}
+
+/// Dump one or more endpoints' flight recorders (`DumpTrace`) and merge
+/// them into a single Chrome trace-event JSON document — a routed
+/// request's spans across processes stitch into one timeline by
+/// trace id.
+fn cmd_trace(args: &Args) -> Result<()> {
+    let addr =
+        args.flag("addr").ok_or_else(|| anyhow::anyhow!("trace needs --addr A1[,A2,..]"))?;
+    let mut dumps = Vec::new();
+    for ep in loadgen::endpoints(addr) {
+        let mut client = NetClient::connect(ep)?;
+        dumps.push(client.dump_trace()?);
+    }
+    let merged = luna_cim::util::trace::merge_trace_dumps(&dumps);
+    match args.flag("out") {
+        Some(path) => {
+            std::fs::write(path, &merged)?;
+            println!("wrote merged trace from {} endpoint(s) to {path}", dumps.len());
+        }
+        None => print!("{merged}"),
     }
     Ok(())
 }

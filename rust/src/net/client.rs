@@ -12,7 +12,9 @@
 //! (the protocol module's versioning rules are exercised through
 //! exactly one code path).
 
-use super::protocol::{read_frame, read_frame_with, write_frame, write_frame_with, Frame, ModelId};
+use super::protocol::{
+    read_frame, read_frame_with, write_frame, write_frame_with, Frame, ModelId, StatsPayload,
+};
 use crate::util::PooledVec;
 use crate::Result;
 use anyhow::{bail, Context};
@@ -155,6 +157,32 @@ impl NetClient {
         self.recv_admin_ok(model, "retire")
     }
 
+    /// Admin round-trip: scrape the peer's structured stats
+    /// ([`StatsPayload`]). A server answers with its own
+    /// `MetricsSnapshot`; a router answers with its routing snapshot
+    /// plus one server snapshot per connected backend. Call with no
+    /// requests in flight on this client (matched by arrival order).
+    pub fn get_stats(&mut self) -> Result<StatsPayload> {
+        self.tx.send_frame(&Frame::GetStats)?;
+        match self.recv()? {
+            Frame::Stats(payload) => Ok(*payload),
+            Frame::Error { reason, .. } => bail!("stats scrape failed: {reason}"),
+            other => bail!("unexpected stats reply {other:?}"),
+        }
+    }
+
+    /// Admin round-trip: dump the peer's flight recorder as
+    /// Chrome-trace JSON. Call with no requests in flight on this
+    /// client.
+    pub fn dump_trace(&mut self) -> Result<String> {
+        self.tx.send_frame(&Frame::DumpTrace)?;
+        match self.recv()? {
+            Frame::Trace { json } => Ok(json),
+            Frame::Error { reason, .. } => bail!("trace dump failed: {reason}"),
+            other => bail!("unexpected trace reply {other:?}"),
+        }
+    }
+
     fn recv_admin_ok(&mut self, model: ModelId, what: &str) -> Result<()> {
         match self.recv()? {
             Frame::AdminOk { model: got } if got == model => Ok(()),
@@ -189,9 +217,17 @@ impl NetSender {
     /// copy ([`ModelId`] stores its bytes inline), so tagged sends stay
     /// allocation-free too.
     pub fn send_model(&mut self, model: ModelId, pixels: &[f32]) -> Result<u64> {
+        self.send_traced(model, pixels, 0)
+    }
+
+    /// [`send_model`](Self::send_model) carrying an explicit trace id
+    /// (`0` = untraced — the server may still sample one locally; a
+    /// nonzero id rides the v0.3 trailing field and is honored as-is).
+    pub fn send_traced(&mut self, model: ModelId, pixels: &[f32], trace: u64) -> Result<u64> {
         let id = self.next_id;
         self.next_id += 1;
-        self.send_frame(&Frame::Request { id, pixels: PooledVec::from_slice(pixels), model })?;
+        let pixels = PooledVec::from_slice(pixels);
+        self.send_frame(&Frame::Request { id, pixels, model, trace })?;
         Ok(id)
     }
 

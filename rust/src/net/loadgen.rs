@@ -49,12 +49,21 @@
 //! hit rate, compile-stall p99 and per-model weight-stationary hit
 //! rates land next to the cases in `BENCH_serve.json`.
 //!
+//! **Server-side scrape** (`--stats`): the CLI pairs a wire `GetStats`
+//! scrape before and after the sweep ([`ServerStatsReport`]) so
+//! `BENCH_serve.json` carries the fleet's own view of the same window —
+//! per-stage time-in-stage counts, admission counters and per-tenant
+//! latency — next to the client-measured numbers. Scraping through a
+//! router fans out to one entry per reachable backend.
+//!
 //! lint: allow-file(alloc): the generator is the measuring *client*;
 //! its allocations land on loadgen threads, never on the server's
 //! serving hot path (which `tests/hot_path_allocs.rs` pins at zero).
 
 use super::client::NetClient;
 use super::protocol::{Frame, ModelId};
+use crate::coordinator::MetricsSnapshot;
+use crate::util::trace::Stage;
 use crate::util::Rng;
 use crate::Result;
 use anyhow::Context;
@@ -252,6 +261,88 @@ impl PlanCacheReport {
         } else {
             self.hits as f64 / lookups as f64
         }
+    }
+}
+
+/// One scraped endpoint's before/after server snapshots (`--stats`).
+/// Counter deltas isolate the sweep's own traffic; percentile fields
+/// are the *after*-side since-boot view (histograms do not subtract).
+#[derive(Debug, Clone)]
+pub struct EndpointStats {
+    pub addr: String,
+    pub before: MetricsSnapshot,
+    pub after: MetricsSnapshot,
+}
+
+fn delta(after: u64, before: u64) -> u64 {
+    after.saturating_sub(before)
+}
+
+impl EndpointStats {
+    /// Requests the endpoint served during the sweep window.
+    pub fn requests_delta(&self) -> u64 {
+        delta(self.after.requests, self.before.requests)
+    }
+
+    pub fn accepted_delta(&self) -> u64 {
+        delta(self.after.accepted, self.before.accepted)
+    }
+
+    pub fn rejected_delta(&self) -> u64 {
+        delta(self.after.rejected, self.before.rejected)
+    }
+
+    pub fn failed_requests_delta(&self) -> u64 {
+        delta(self.after.failed_requests, self.before.failed_requests)
+    }
+
+    /// Samples stage `i` (in [`Stage`] pipeline order) absorbed during
+    /// the sweep window.
+    pub fn stage_count_delta(&self, i: usize) -> u64 {
+        delta(self.after.stage_count[i], self.before.stage_count[i])
+    }
+}
+
+/// Server-side observability harvest for `BENCH_serve.json`
+/// (`repro loadgen --stats`): a wire `GetStats` scrape taken before and
+/// one taken after the sweep, paired per endpoint.
+#[derive(Debug, Clone, Default)]
+pub struct ServerStatsReport {
+    pub endpoints: Vec<EndpointStats>,
+}
+
+impl ServerStatsReport {
+    /// Scrape every endpoint behind the (comma-separated) `addr` list.
+    /// A server answers with its own snapshot; a router answers with one
+    /// snapshot per connected backend (keyed by backend address).
+    pub fn scrape(addr: &str) -> Result<Vec<(String, MetricsSnapshot)>> {
+        let mut out = Vec::new();
+        for ep in endpoints(addr) {
+            let mut client = NetClient::connect(ep)
+                .with_context(|| format!("connecting stats scrape to {ep}"))?;
+            let payload = client.get_stats()?;
+            if let Some(server) = payload.server {
+                out.push((ep.to_string(), server));
+            }
+            out.extend(payload.backends);
+        }
+        Ok(out)
+    }
+
+    /// Pair a before and an after scrape by endpoint address. An
+    /// endpoint present on only one side is dropped — a backend that
+    /// joined or died mid-sweep has no meaningful delta.
+    pub fn from_scrapes(
+        before: Vec<(String, MetricsSnapshot)>,
+        after: Vec<(String, MetricsSnapshot)>,
+    ) -> ServerStatsReport {
+        let mut eps = Vec::new();
+        for (addr, after_snap) in after {
+            if let Some((_, before_snap)) = before.iter().find(|(a, _)| *a == addr) {
+                eps.push(EndpointStats { addr, before: before_snap.clone(), after: after_snap });
+            }
+        }
+        ServerStatsReport { endpoints: eps }
     }
 }
 
@@ -776,19 +867,21 @@ pub fn render_table(results: &[CaseResult]) -> String {
 /// Hand-rolled JSON (no serde in this offline image): the
 /// `BENCH_serve.json` artifact CI uploads next to `BENCH_lut_gemm.json`.
 pub fn render_json(results: &[CaseResult], backend: &str) -> String {
-    render_json_full(results, backend, &[], None, None)
+    render_json_full(results, backend, &[], None, None, None)
 }
 
 /// [`render_json`] plus the router-tier and multi-tenant columns: the
 /// `scaling` array (goodput + wall/sim p99 per backend-process count,
-/// routed through `repro route`), the affinity hit-rate comparison and
-/// the server-side plan-cache harvest, when measured.
+/// routed through `repro route`), the affinity hit-rate comparison, the
+/// server-side plan-cache harvest and the wire-scraped before/after
+/// stats delta (`--stats`), when measured.
 pub fn render_json_full(
     results: &[CaseResult],
     backend: &str,
     scaling: &[ScalePoint],
     affinity: Option<&AffinityComparison>,
     plan: Option<&PlanCacheReport>,
+    stats: Option<&ServerStatsReport>,
 ) -> String {
     let mut out = String::from("{\n  \"bench\": \"serve\",\n");
     let _ = writeln!(out, "  \"backend\": \"{backend}\",");
@@ -878,6 +971,51 @@ pub fn render_json_full(
         }
         out.push('}');
     }
+    if let Some(s) = stats {
+        out.push_str(",\n  \"server_stats\": [\n");
+        for (i, e) in s.endpoints.iter().enumerate() {
+            let _ = write!(
+                out,
+                "    {{\"addr\": \"{}\", \"requests\": {}, \"accepted\": {}, \
+                 \"rejected\": {}, \"failed_requests\": {}, \"p99_latency_us\": {}, \
+                 \"stages\": {{",
+                e.addr,
+                e.requests_delta(),
+                e.accepted_delta(),
+                e.rejected_delta(),
+                e.failed_requests_delta(),
+                e.after.p99_latency_us,
+            );
+            for (j, stage) in Stage::ALL.iter().enumerate() {
+                if j > 0 {
+                    out.push_str(", ");
+                }
+                let _ = write!(
+                    out,
+                    "\"{}\": {{\"count\": {}, \"p50_us\": {}, \"p99_us\": {}}}",
+                    stage.name(),
+                    e.stage_count_delta(j),
+                    e.after.stage_p50_us[j],
+                    e.after.stage_p99_us[j],
+                );
+            }
+            out.push_str("}, \"tenants\": [");
+            for (j, t) in e.after.tenants.iter().enumerate() {
+                if j > 0 {
+                    out.push_str(", ");
+                }
+                let _ = write!(
+                    out,
+                    "{{\"name\": \"{}\", \"requests\": {}, \"p99_latency_us\": {}, \
+                     \"p99_queue_us\": {}}}",
+                    t.name, t.requests, t.p99_latency_us, t.p99_queue_us,
+                );
+            }
+            out.push_str("]}");
+            out.push_str(if i + 1 < s.endpoints.len() { ",\n" } else { "\n" });
+        }
+        out.push_str("  ]");
+    }
     out.push_str("\n}\n");
     out
 }
@@ -964,7 +1102,7 @@ mod tests {
             ScalePoint { processes: 4, goodput_rps: 3100.0, wall_p99_us: 1700, sim_p99_ns: 820 },
         ];
         let aff = AffinityComparison { request_hit_rate: 0.91, connection_hit_rate: 0.88 };
-        let json = render_json_full(&[], "native", &scaling, Some(&aff), None);
+        let json = render_json_full(&[], "native", &scaling, Some(&aff), None, None);
         for key in [
             "\"scaling\": [",
             "\"processes\": 1",
@@ -1048,7 +1186,7 @@ mod tests {
         };
         assert!((plan.hit_rate() - 0.75).abs() < 1e-12);
         assert_eq!(PlanCacheReport::default().hit_rate(), 0.0);
-        let json = render_json_full(&[r], "calibrated", &[], None, Some(&plan));
+        let json = render_json_full(&[r], "calibrated", &[], None, Some(&plan), None);
         for key in [
             "\"tenants\": [{\"model\": \"default\", \"sent\": 67, \"ok\": 67, \
              \"goodput_rps\": 67.0}, {\"model\": \"m1\", \"sent\": 33, \"ok\": 33, \
@@ -1061,6 +1199,51 @@ mod tests {
         }
         assert_eq!(tenant_name(ModelId::DEFAULT), "default");
         assert_eq!(tenant_name(ModelId::new("m1").unwrap()), "m1");
+    }
+
+    #[test]
+    fn json_server_stats_delta_renders() {
+        use crate::coordinator::metrics::sample_snapshot;
+        let before = sample_snapshot();
+        let mut after = sample_snapshot();
+        after.requests += 100;
+        after.accepted += 110;
+        after.rejected += 10;
+        after.stage_count[0] += 100;
+        let report = ServerStatsReport::from_scrapes(
+            vec![("127.0.0.1:7071".into(), before.clone())],
+            vec![
+                ("127.0.0.1:7071".into(), after),
+                // present only after the sweep: no pair, dropped
+                ("127.0.0.1:9999".into(), before),
+            ],
+        );
+        assert_eq!(report.endpoints.len(), 1);
+        let e = &report.endpoints[0];
+        assert_eq!(e.requests_delta(), 100);
+        assert_eq!(e.accepted_delta(), 110);
+        assert_eq!(e.rejected_delta(), 10);
+        assert_eq!(e.failed_requests_delta(), 0);
+        assert_eq!(e.stage_count_delta(0), 100);
+        let json = render_json_full(&[], "native", &[], None, None, Some(&report));
+        for key in [
+            "\"server_stats\": [",
+            "\"addr\": \"127.0.0.1:7071\"",
+            "\"requests\": 100, \"accepted\": 110, \"rejected\": 10",
+            "\"ingress\": {\"count\": 100, \"p50_us\": 2, \"p99_us\": 4}",
+            "\"queue_wait\": {\"count\": 0, \"p50_us\": 64, \"p99_us\": 256}",
+            "\"tenants\": [{\"name\": \"default\", \"requests\": 10, \
+             \"p99_latency_us\": 1024, \"p99_queue_us\": 256}",
+        ] {
+            assert!(json.contains(key), "missing {key} in {json}");
+        }
+        // delta saturates instead of wrapping when a counter resets
+        let shrunk = EndpointStats {
+            addr: "x".into(),
+            before: sample_snapshot(),
+            after: MetricsSnapshot { requests: 0, ..sample_snapshot() },
+        };
+        assert_eq!(shrunk.requests_delta(), 0);
     }
 
     #[test]

@@ -31,9 +31,9 @@ pub mod server;
 
 pub use client::{handshake, NetClient, NetReceiver, NetSender, ServerInfo};
 pub use loadgen::{
-    AffinityComparison, CaseResult, LoadgenOptions, ModelMix, PlanCacheReport, ScalePoint,
-    Scenario, TenantCase,
+    AffinityComparison, CaseResult, EndpointStats, LoadgenOptions, ModelMix, PlanCacheReport,
+    ScalePoint, Scenario, ServerStatsReport, TenantCase,
 };
-pub use protocol::{Frame, ModelId, WireCost, MAX_MODEL_ID};
+pub use protocol::{Frame, ModelId, StatsPayload, WireCost, MAX_MODEL_ID};
 pub use router::{mix64, pick_least_outstanding, HashRing, RouterServer};
 pub use server::NetServer;

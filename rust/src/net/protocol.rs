@@ -8,7 +8,7 @@
 //! ```text
 //! offset  size  field
 //! 0       2     magic  "LC" (0x4C 0x43)
-//! 2       1     version: (major << 4) | minor (currently 0x02)
+//! 2       1     version: (major << 4) | minor (currently 0x03)
 //! 3       1     frame type
 //! 4       4     payload length, u32 LE (<= MAX_PAYLOAD)
 //! 8       n     payload (type-specific, all integers LE)
@@ -36,7 +36,9 @@
 //! helper, [`crate::net::client::handshake`]), so no other module
 //! inspects or re-encodes version bytes.
 
-use crate::util::PooledVec;
+use crate::coordinator::metrics::{BackendStats, MetricsSnapshot, RouterSnapshot, TenantStats};
+use crate::util::trace::N_STAGES;
+use crate::util::{PoolStats, PooledVec};
 use crate::Result;
 use anyhow::{bail, ensure, Context};
 use std::fmt;
@@ -51,8 +53,10 @@ pub const MAJOR: u8 = 0;
 /// additions; readers accept every minor ≥ 1 of their own major
 /// (higher minors decode leniently — see the module docs). Minor 2
 /// added the optional `Request` model id, the `Info` model list and
-/// the `LoadModel`/`RetireModel`/`AdminOk` admin frames.
-pub const MINOR: u8 = 2;
+/// the `LoadModel`/`RetireModel`/`AdminOk` admin frames. Minor 3 added
+/// the optional trailing trace id on `Request`/`Response` and the
+/// `GetStats`/`Stats` + `DumpTrace`/`Trace` observability frames.
+pub const MINOR: u8 = 3;
 /// The version byte this build writes: `(MAJOR << 4) | MINOR`.
 pub const VERSION: u8 = (MAJOR << 4) | MINOR;
 /// Upper bound on a frame payload (1 MiB) — caps per-connection memory
@@ -85,6 +89,10 @@ const TYPE_INFO: u8 = 0x06;
 const TYPE_LOAD_MODEL: u8 = 0x07;
 const TYPE_RETIRE_MODEL: u8 = 0x08;
 const TYPE_ADMIN_OK: u8 = 0x09;
+const TYPE_GET_STATS: u8 = 0x0a;
+const TYPE_STATS: u8 = 0x0b;
+const TYPE_DUMP_TRACE: u8 = 0x0c;
+const TYPE_TRACE: u8 = 0x0d;
 
 /// A model identifier: at most [`MAX_MODEL_ID`] bytes of UTF-8 stored
 /// inline (no heap), so tagging a request, keying the plan cache and
@@ -174,9 +182,15 @@ pub enum Frame {
     /// echoed verbatim on the matching reply. `model` picks which of
     /// the server's resident artifacts serves it; it is the minor-2
     /// trailing field, absent on the wire for the default model (so
-    /// default traffic keeps the v0.1 byte layout).
-    Request { id: u64, pixels: PooledVec<f32>, model: ModelId },
+    /// default traffic keeps the v0.1 byte layout). `trace` is the
+    /// minor-3 trailing trace id (`0` = untraced, absent on the wire);
+    /// when a router assigned one, the backend records its spans under
+    /// it instead of sampling its own — that is what stitches one
+    /// request's timeline across processes.
+    Request { id: u64, pixels: PooledVec<f32>, model: ModelId, trace: u64 },
     /// Server → client: the served answer plus the cost model fields.
+    /// `trace` is the minor-3 trailing trace id echoed from the request
+    /// (`0` = untraced, absent on the wire).
     Response {
         id: u64,
         label: u32,
@@ -184,6 +198,7 @@ pub enum Frame {
         latency_us: u64,
         cost: WireCost,
         logits: PooledVec<f32>,
+        trace: u64,
     },
     /// Server → client: 429-style admission rejection. `retry_after_us`
     /// is the structured backoff hint (`0` = unspecified, e.g. a
@@ -210,6 +225,36 @@ pub enum Frame {
     /// Server → admin: the `LoadModel`/`RetireModel` for `model` took
     /// effect.
     AdminOk { model: ModelId },
+    /// Admin → server or router (minor 3): scrape the live metrics.
+    GetStats,
+    /// Server/router → admin: the structured stats reply. A server
+    /// fills `server`; a router fills `router` and fans the scrape out
+    /// to its healthy backends, aggregating their snapshots into
+    /// `backends` (addr → snapshot). Boxed to keep `Frame` small.
+    Stats(Box<StatsPayload>),
+    /// Admin → server or router (minor 3): dump the process's flight
+    /// recorder ([`crate::util::trace::FlightRecorder`]).
+    DumpTrace,
+    /// Server/router → admin: the Chrome trace-event JSON dump of this
+    /// process's recorder. Dumps from several processes merge
+    /// client-side ([`crate::util::trace::merge_trace_dumps`]) and
+    /// stitch by trace id.
+    Trace { json: String },
+}
+
+/// The `Stats` frame body: whichever tier answered fills its own
+/// snapshot, and a router adds one scraped snapshot per healthy
+/// backend. All fields ride the wire as fixed-order scalars (see
+/// `encode_metrics`); additions follow the same append-only minor rules
+/// as frames.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct StatsPayload {
+    /// The answering server's own metrics (servers fill this).
+    pub server: Option<MetricsSnapshot>,
+    /// The answering router's fleet counters (routers fill this).
+    pub router: Option<RouterSnapshot>,
+    /// Router only: per-backend scrapes, `(addr, snapshot)`.
+    pub backends: Vec<(String, MetricsSnapshot)>,
 }
 
 impl Frame {
@@ -224,25 +269,35 @@ impl Frame {
             Frame::LoadModel { .. } => TYPE_LOAD_MODEL,
             Frame::RetireModel { .. } => TYPE_RETIRE_MODEL,
             Frame::AdminOk { .. } => TYPE_ADMIN_OK,
+            Frame::GetStats => TYPE_GET_STATS,
+            Frame::Stats(_) => TYPE_STATS,
+            Frame::DumpTrace => TYPE_DUMP_TRACE,
+            Frame::Trace { .. } => TYPE_TRACE,
         }
     }
 
     fn encode_payload_into(&self, p: &mut Vec<u8>) {
         p.clear();
         match self {
-            Frame::Request { id, pixels, model } => {
+            Frame::Request { id, pixels, model, trace } => {
                 put_u64(p, *id);
                 put_u32(p, pixels.len() as u32);
                 for &x in pixels.iter() {
                     put_f32(p, x);
                 }
                 // minor-2 trailing field, omitted for the default model
-                // so untagged traffic keeps the v0.1 byte layout
-                if !model.is_default() {
+                // so untagged traffic keeps the v0.1 byte layout — but
+                // the append-only rule forces it back in whenever the
+                // later minor-3 trace field is present
+                if !model.is_default() || *trace != 0 {
                     put_model(p, model);
                 }
+                // minor-3 trailing field, omitted when untraced
+                if *trace != 0 {
+                    put_u64(p, *trace);
+                }
             }
-            Frame::Response { id, label, latency_us, cost, logits } => {
+            Frame::Response { id, label, latency_us, cost, logits, trace } => {
                 put_u64(p, *id);
                 put_u32(p, *label);
                 put_u64(p, *latency_us);
@@ -253,6 +308,10 @@ impl Frame {
                 put_u32(p, logits.len() as u32);
                 for &x in logits.iter() {
                     put_f32(p, x);
+                }
+                // minor-3 trailing field, omitted when untraced
+                if *trace != 0 {
+                    put_u64(p, *trace);
                 }
             }
             Frame::Rejected { id, retry_after_us, reason } => {
@@ -288,6 +347,31 @@ impl Frame {
             Frame::AdminOk { model } => {
                 put_model(p, model);
             }
+            Frame::GetStats | Frame::DumpTrace => {}
+            Frame::Stats(stats) => {
+                let mut flags = 0u8;
+                if stats.server.is_some() {
+                    flags |= 1;
+                }
+                if stats.router.is_some() {
+                    flags |= 2;
+                }
+                p.push(flags);
+                if let Some(s) = &stats.server {
+                    encode_metrics(p, s);
+                }
+                if let Some(r) = &stats.router {
+                    encode_router(p, r);
+                }
+                put_u32(p, stats.backends.len() as u32);
+                for (addr, snap) in &stats.backends {
+                    put_str(p, addr);
+                    encode_metrics(p, snap);
+                }
+            }
+            Frame::Trace { json } => {
+                put_blob(p, json.as_bytes());
+            }
         }
     }
 
@@ -314,7 +398,9 @@ impl Frame {
                     );
                     ModelId::DEFAULT
                 };
-                Frame::Request { id, pixels, model }
+                // the optional minor-3 trace id: absent = untraced
+                let trace = if minor >= 3 && c.remaining() > 0 { c.u64()? } else { 0 };
+                Frame::Request { id, pixels, model, trace }
             }
             TYPE_RESPONSE => {
                 let id = c.u64()?;
@@ -332,7 +418,9 @@ impl Frame {
                 for _ in 0..n {
                     logits.push(c.f32()?);
                 }
-                Frame::Response { id, label, latency_us, cost, logits }
+                // the optional minor-3 trace id: absent = untraced
+                let trace = if minor >= 3 && c.remaining() > 0 { c.u64()? } else { 0 };
+                Frame::Response { id, label, latency_us, cost, logits, trace }
             }
             TYPE_REJECTED => {
                 let id = c.u64()?;
@@ -370,6 +458,28 @@ impl Frame {
             }
             TYPE_RETIRE_MODEL => Frame::RetireModel { model: c.model()? },
             TYPE_ADMIN_OK => Frame::AdminOk { model: c.model()? },
+            TYPE_GET_STATS => Frame::GetStats,
+            TYPE_STATS => {
+                let flags = c.take(1)?[0];
+                let server = if flags & 1 != 0 { Some(decode_metrics(&mut c)?) } else { None };
+                let router = if flags & 2 != 0 { Some(decode_router(&mut c)?) } else { None };
+                let n = c.u32()? as usize;
+                ensure!(n <= 4096, "stats backend count {n} is implausible");
+                let mut backends = Vec::with_capacity(n); // lint: allow(alloc): cold admin path
+                for _ in 0..n {
+                    let addr = c.str()?;
+                    backends.push((addr, decode_metrics(&mut c)?));
+                }
+                Frame::Stats(Box::new(StatsPayload { server, router, backends }))
+            }
+            TYPE_DUMP_TRACE => Frame::DumpTrace,
+            TYPE_TRACE => {
+                let bytes = c.blob()?;
+                let json = std::str::from_utf8(bytes)
+                    .context("trace dump is not UTF-8")?
+                    .to_string();
+                Frame::Trace { json }
+            }
             other => bail!("unknown frame type 0x{other:02x}"),
         };
         // strict for our own minor and below; a *newer* minor may carry
@@ -512,6 +622,200 @@ fn put_model(p: &mut Vec<u8>, m: &ModelId) {
     p.extend_from_slice(s.as_bytes());
 }
 
+/// Length-prefixed bytes for payloads too big for [`put_str`]'s
+/// [`MAX_REASON`] cap (trace dumps). Bounded only by [`MAX_PAYLOAD`],
+/// which [`write_frame_with`] enforces on the whole frame.
+fn put_blob(p: &mut Vec<u8>, bytes: &[u8]) {
+    put_u32(p, bytes.len() as u32);
+    p.extend_from_slice(bytes);
+}
+
+/// A [`MetricsSnapshot`] on the wire: every scalar in declaration
+/// order, then the three per-stage arrays, the tenant list and the
+/// pool counters. Fixed order — additions go at the end under the
+/// append-only minor rules.
+fn encode_metrics(p: &mut Vec<u8>, s: &MetricsSnapshot) {
+    put_u64(p, s.requests);
+    put_u64(p, s.batches);
+    put_u64(p, s.padded_slots);
+    put_u64(p, s.accepted);
+    put_u64(p, s.rejected);
+    put_u64(p, s.retry_hints);
+    put_u64(p, s.failed_batches);
+    put_u64(p, s.failed_requests);
+    put_f64(p, s.mean_latency_us);
+    put_u64(p, s.p50_latency_us);
+    put_u64(p, s.p99_latency_us);
+    put_u64(p, s.max_latency_us);
+    put_f64(p, s.throughput_rps);
+    put_f64(p, s.sim_energy_fj);
+    put_u64(p, s.sim_p50_latency_ns);
+    put_u64(p, s.sim_p99_latency_ns);
+    put_u64(p, s.sim_programs);
+    put_u64(p, s.sim_stationary_hits);
+    put_f64(p, s.host_gemm_mean_us);
+    put_u64(p, s.host_gemm_p50_us);
+    put_u64(p, s.host_gemm_p99_us);
+    put_u64(p, s.plan_hits);
+    put_u64(p, s.plan_misses);
+    put_u64(p, s.plan_evictions);
+    put_u64(p, s.plan_compiles);
+    put_u64(p, s.plan_resident);
+    put_u64(p, s.plan_resident_bytes);
+    put_u64(p, s.plan_compile_p99_us);
+    put_u64(p, s.plan_stall_p99_us);
+    for i in 0..N_STAGES {
+        put_u64(p, s.stage_count[i]);
+    }
+    for i in 0..N_STAGES {
+        put_u64(p, s.stage_p50_us[i]);
+    }
+    for i in 0..N_STAGES {
+        put_u64(p, s.stage_p99_us[i]);
+    }
+    put_u32(p, s.tenants.len() as u32);
+    for t in &s.tenants {
+        put_str(p, &t.name);
+        put_u64(p, t.requests);
+        put_u64(p, t.p50_latency_us);
+        put_u64(p, t.p99_latency_us);
+        put_u64(p, t.p50_queue_us);
+        put_u64(p, t.p99_queue_us);
+    }
+    put_u64(p, s.pool.hits);
+    put_u64(p, s.pool.misses);
+    put_u64(p, s.pool.recycled);
+}
+
+fn decode_metrics(c: &mut Cursor<'_>) -> Result<MetricsSnapshot> {
+    let requests = c.u64()?;
+    let batches = c.u64()?;
+    let padded_slots = c.u64()?;
+    let accepted = c.u64()?;
+    let rejected = c.u64()?;
+    let retry_hints = c.u64()?;
+    let failed_batches = c.u64()?;
+    let failed_requests = c.u64()?;
+    let mean_latency_us = c.f64()?;
+    let p50_latency_us = c.u64()?;
+    let p99_latency_us = c.u64()?;
+    let max_latency_us = c.u64()?;
+    let throughput_rps = c.f64()?;
+    let sim_energy_fj = c.f64()?;
+    let sim_p50_latency_ns = c.u64()?;
+    let sim_p99_latency_ns = c.u64()?;
+    let sim_programs = c.u64()?;
+    let sim_stationary_hits = c.u64()?;
+    let host_gemm_mean_us = c.f64()?;
+    let host_gemm_p50_us = c.u64()?;
+    let host_gemm_p99_us = c.u64()?;
+    let plan_hits = c.u64()?;
+    let plan_misses = c.u64()?;
+    let plan_evictions = c.u64()?;
+    let plan_compiles = c.u64()?;
+    let plan_resident = c.u64()?;
+    let plan_resident_bytes = c.u64()?;
+    let plan_compile_p99_us = c.u64()?;
+    let plan_stall_p99_us = c.u64()?;
+    let mut stage_count = [0u64; N_STAGES];
+    for s in stage_count.iter_mut() {
+        *s = c.u64()?;
+    }
+    let mut stage_p50_us = [0u64; N_STAGES];
+    for s in stage_p50_us.iter_mut() {
+        *s = c.u64()?;
+    }
+    let mut stage_p99_us = [0u64; N_STAGES];
+    for s in stage_p99_us.iter_mut() {
+        *s = c.u64()?;
+    }
+    let n = c.u32()? as usize;
+    ensure!(n <= 4096, "tenant count {n} is implausible");
+    let mut tenants = Vec::new();
+    tenants.reserve(n);
+    for _ in 0..n {
+        tenants.push(TenantStats {
+            name: c.str()?,
+            requests: c.u64()?,
+            p50_latency_us: c.u64()?,
+            p99_latency_us: c.u64()?,
+            p50_queue_us: c.u64()?,
+            p99_queue_us: c.u64()?,
+        });
+    }
+    let pool = PoolStats { hits: c.u64()?, misses: c.u64()?, recycled: c.u64()? };
+    Ok(MetricsSnapshot {
+        requests,
+        batches,
+        padded_slots,
+        accepted,
+        rejected,
+        retry_hints,
+        failed_batches,
+        failed_requests,
+        mean_latency_us,
+        p50_latency_us,
+        p99_latency_us,
+        max_latency_us,
+        throughput_rps,
+        sim_energy_fj,
+        sim_p50_latency_ns,
+        sim_p99_latency_ns,
+        sim_programs,
+        sim_stationary_hits,
+        host_gemm_mean_us,
+        host_gemm_p50_us,
+        host_gemm_p99_us,
+        plan_hits,
+        plan_misses,
+        plan_evictions,
+        plan_compiles,
+        plan_resident,
+        plan_resident_bytes,
+        plan_compile_p99_us,
+        plan_stall_p99_us,
+        stage_count,
+        stage_p50_us,
+        stage_p99_us,
+        tenants,
+        pool,
+    })
+}
+
+/// A [`RouterSnapshot`] on the wire: fleet counters then one block per
+/// backend, same fixed-order rules as `encode_metrics`.
+fn encode_router(p: &mut Vec<u8>, r: &RouterSnapshot) {
+    put_u64(p, r.terminal_rejections);
+    put_u32(p, r.backends.len() as u32);
+    for b in &r.backends {
+        put_str(p, &b.addr);
+        put_u64(p, b.routed);
+        put_u64(p, b.rejected);
+        put_u64(p, b.failed_over);
+        put_u64(p, b.quarantines);
+        put_u64(p, b.recoveries);
+    }
+}
+
+fn decode_router(c: &mut Cursor<'_>) -> Result<RouterSnapshot> {
+    let terminal_rejections = c.u64()?;
+    let n = c.u32()? as usize;
+    ensure!(n <= 4096, "router backend count {n} is implausible");
+    let mut backends = Vec::new();
+    backends.reserve(n);
+    for _ in 0..n {
+        backends.push(BackendStats {
+            addr: c.str()?,
+            routed: c.u64()?,
+            rejected: c.u64()?,
+            failed_over: c.u64()?,
+            quarantines: c.u64()?,
+            recoveries: c.u64()?,
+        });
+    }
+    Ok(RouterSnapshot { backends, terminal_rejections })
+}
+
 /// Bounds-checked little-endian payload reader.
 struct Cursor<'a> {
     buf: &'a [u8],
@@ -560,6 +864,14 @@ impl<'a> Cursor<'a> {
         let bytes = self.take(n)?;
         ModelId::new(std::str::from_utf8(bytes).context("model id is not UTF-8")?)
     }
+
+    /// Length-prefixed bytes written by [`put_blob`] (bounded by
+    /// [`MAX_PAYLOAD`] rather than [`MAX_REASON`]).
+    fn blob(&mut self) -> Result<&'a [u8]> {
+        let n = self.u32()?;
+        ensure!(n <= MAX_PAYLOAD, "blob length {n} exceeds MAX_PAYLOAD");
+        self.take(n as usize)
+    }
 }
 
 #[cfg(test)]
@@ -587,9 +899,24 @@ mod tests {
                 id: 7,
                 pixels: vec![0.0, 0.25, -1.5, f32::MIN_POSITIVE].into(),
                 model: ModelId::DEFAULT,
+                trace: 0,
             },
-            Frame::Request { id: u64::MAX, pixels: vec![].into(), model: ModelId::DEFAULT },
-            Frame::Request { id: 3, pixels: vec![0.5; 8].into(), model: mid("tenant-a") },
+            Frame::Request {
+                id: u64::MAX,
+                pixels: vec![].into(),
+                model: ModelId::DEFAULT,
+                trace: 0,
+            },
+            Frame::Request { id: 3, pixels: vec![0.5; 8].into(), model: mid("tenant-a"), trace: 0 },
+            Frame::Request {
+                id: 4,
+                pixels: vec![0.5; 8].into(),
+                model: mid("tenant-a"),
+                trace: 0xdead_beef_cafe_f00d,
+            },
+            // a traced request for the *default* model still encodes the
+            // model field (append-only: trace comes after it)
+            Frame::Request { id: 5, pixels: vec![].into(), model: ModelId::DEFAULT, trace: 17 },
             Frame::Response {
                 id: 9,
                 label: 3,
@@ -601,6 +928,20 @@ mod tests {
                     stationary_hits: 2326,
                 },
                 logits: vec![-0.5, 0.5, 1e-7].into(),
+                trace: 0,
+            },
+            Frame::Response {
+                id: 10,
+                label: 1,
+                latency_us: 77,
+                cost: WireCost {
+                    energy_fj: 2.0,
+                    latency_ps: 1,
+                    programs: 0,
+                    stationary_hits: 0,
+                },
+                logits: vec![].into(),
+                trace: 0xdead_beef_cafe_f00d,
             },
             Frame::Rejected { id: 11, retry_after_us: 500, reason: "server at capacity".into() },
             Frame::Rejected { id: 0, retry_after_us: 0, reason: String::new() },
@@ -622,6 +963,24 @@ mod tests {
             Frame::LoadModel { model: mid("m1"), dir: "/tmp/artifacts-m1".into() },
             Frame::RetireModel { model: mid("m1") },
             Frame::AdminOk { model: mid("m1") },
+            Frame::GetStats,
+            Frame::Stats(Box::default()),
+            Frame::Stats(Box::new(StatsPayload {
+                server: Some(crate::coordinator::metrics::sample_snapshot()),
+                router: None,
+                backends: vec![],
+            })),
+            Frame::Stats(Box::new(StatsPayload {
+                server: None,
+                router: Some(crate::coordinator::metrics::sample_router_snapshot()),
+                backends: vec![
+                    ("127.0.0.1:7071".into(), crate::coordinator::metrics::sample_snapshot()),
+                    ("127.0.0.1:7072".into(), crate::coordinator::metrics::sample_snapshot()),
+                ],
+            })),
+            Frame::DumpTrace,
+            Frame::Trace { json: String::new() },
+            Frame::Trace { json: "{\"traceEvents\":[]}".repeat(200) },
         ];
         for f in frames {
             assert_eq!(roundtrip(f.clone()), f);
@@ -632,12 +991,17 @@ mod tests {
     fn frames_concatenate_on_one_stream() {
         let mut buf = Vec::new();
         write_frame(&mut buf, &Frame::Hello).unwrap();
-        let req = Frame::Request { id: 1, pixels: vec![0.5; 64].into(), model: ModelId::DEFAULT };
+        let req = Frame::Request {
+            id: 1,
+            pixels: vec![0.5; 64].into(),
+            model: ModelId::DEFAULT,
+            trace: 0,
+        };
         write_frame(&mut buf, &req).unwrap();
         let mut r = &buf[..];
         assert_eq!(read_frame(&mut r).unwrap(), Some(Frame::Hello));
         match read_frame(&mut r).unwrap() {
-            Some(Frame::Request { id: 1, pixels, model }) => {
+            Some(Frame::Request { id: 1, pixels, model, trace: 0 }) => {
                 assert_eq!(pixels.len(), 64);
                 assert!(model.is_default());
             }
@@ -655,7 +1019,12 @@ mod tests {
         assert!(read_frame(&mut short).is_err());
         // a full header promising more payload than the stream holds
         let mut buf = Vec::new();
-        let req = Frame::Request { id: 1, pixels: vec![0.5; 16].into(), model: ModelId::DEFAULT };
+        let req = Frame::Request {
+            id: 1,
+            pixels: vec![0.5; 16].into(),
+            model: ModelId::DEFAULT,
+            trace: 0,
+        };
         write_frame(&mut buf, &req).unwrap();
         buf.truncate(buf.len() - 3);
         let mut r = &buf[..];
@@ -695,11 +1064,16 @@ mod tests {
         // a minor-1 request carries no model field and decodes to the
         // default model — backward compatibility for old clients
         let mut buf = Vec::new();
-        let req = Frame::Request { id: 5, pixels: vec![1.0, 2.0].into(), model: ModelId::DEFAULT };
+        let req = Frame::Request {
+            id: 5,
+            pixels: vec![1.0, 2.0].into(),
+            model: ModelId::DEFAULT,
+            trace: 0,
+        };
         write_frame(&mut buf, &req).unwrap();
         buf[2] = (MAJOR << 4) | 1; // relabel as a v0.1 frame (same bytes)
         match read_frame(&mut &buf[..]).unwrap() {
-            Some(Frame::Request { id: 5, pixels, model }) => {
+            Some(Frame::Request { id: 5, pixels, model, trace: 0 }) => {
                 assert_eq!(pixels.len(), 2);
                 assert!(model.is_default());
             }
@@ -708,10 +1082,87 @@ mod tests {
         // ...but a v0.1 frame is still decoded strictly: trailing bytes
         // (here: what would be a minor-2 model field) are an error
         let mut tagged = Vec::new();
-        let req = Frame::Request { id: 5, pixels: vec![1.0, 2.0].into(), model: mid("a") };
+        let req =
+            Frame::Request { id: 5, pixels: vec![1.0, 2.0].into(), model: mid("a"), trace: 0 };
         write_frame(&mut tagged, &req).unwrap();
         tagged[2] = (MAJOR << 4) | 1;
         assert!(read_frame(&mut &tagged[..]).is_err());
+    }
+
+    #[test]
+    fn v02_frames_decode_traceless_and_stay_strict() {
+        // an untraced v0.3 request is byte-identical to a v0.2 one, so a
+        // relabeled frame decodes cleanly with trace 0 — v0.2 clients
+        // keep working unchanged
+        let mut buf = Vec::new();
+        let req =
+            Frame::Request { id: 6, pixels: vec![1.0].into(), model: mid("tenant-a"), trace: 0 };
+        write_frame(&mut buf, &req).unwrap();
+        buf[2] = (MAJOR << 4) | 2;
+        match read_frame(&mut &buf[..]).unwrap() {
+            Some(Frame::Request { id: 6, pixels, model, trace: 0 }) => {
+                assert_eq!(pixels.len(), 1);
+                assert_eq!(model, mid("tenant-a"));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // ...but a frame *claiming* v0.2 while carrying the minor-3
+        // trace bytes is rejected strictly (same rule minor 2 applied
+        // to minor-1 frames with model bytes)
+        let mut traced = Vec::new();
+        let req =
+            Frame::Request { id: 6, pixels: vec![1.0].into(), model: mid("tenant-a"), trace: 9 };
+        write_frame(&mut traced, &req).unwrap();
+        traced[2] = (MAJOR << 4) | 2;
+        assert!(read_frame(&mut &traced[..]).is_err());
+
+        // the same pair for responses
+        let resp = Frame::Response {
+            id: 8,
+            label: 0,
+            latency_us: 10,
+            cost: WireCost { energy_fj: 0.0, latency_ps: 0, programs: 0, stationary_hits: 0 },
+            logits: vec![0.25].into(),
+            trace: 0,
+        };
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &resp).unwrap();
+        buf[2] = (MAJOR << 4) | 2;
+        match read_frame(&mut &buf[..]).unwrap() {
+            Some(Frame::Response { id: 8, trace: 0, .. }) => {}
+            other => panic!("unexpected {other:?}"),
+        }
+        let traced_resp = Frame::Response {
+            id: 8,
+            label: 0,
+            latency_us: 10,
+            cost: WireCost { energy_fj: 0.0, latency_ps: 0, programs: 0, stationary_hits: 0 },
+            logits: vec![0.25].into(),
+            trace: 9,
+        };
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &traced_resp).unwrap();
+        buf[2] = (MAJOR << 4) | 2;
+        assert!(read_frame(&mut &buf[..]).is_err());
+    }
+
+    #[test]
+    fn traced_default_model_requests_keep_the_append_only_layout() {
+        // trace != 0 forces the earlier optional model field onto the
+        // wire even for the default model: header + id + count + model
+        // length byte + 8 trace bytes
+        let f = Frame::Request { id: 1, pixels: vec![].into(), model: ModelId::DEFAULT, trace: 5 };
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &f).unwrap();
+        assert_eq!(buf.len(), 8 + 8 + 4 + 1 + 8);
+        assert_eq!(roundtrip(f.clone()), f);
+        // while an untraced default-model request keeps the bare v0.1
+        // layout with no optional fields at all
+        let bare =
+            Frame::Request { id: 1, pixels: vec![].into(), model: ModelId::DEFAULT, trace: 0 };
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &bare).unwrap();
+        assert_eq!(buf.len(), 8 + 8 + 4);
     }
 
     #[test]
@@ -755,7 +1206,12 @@ mod tests {
     fn inconsistent_counts_and_trailing_bytes_are_rejected() {
         // request whose pixel count disagrees with the payload length
         let mut buf = Vec::new();
-        let req = Frame::Request { id: 1, pixels: vec![1.0, 2.0].into(), model: ModelId::DEFAULT };
+        let req = Frame::Request {
+            id: 1,
+            pixels: vec![1.0, 2.0].into(),
+            model: ModelId::DEFAULT,
+            trace: 0,
+        };
         write_frame(&mut buf, &req).unwrap();
         // corrupt the count (first payload field after the 8-byte id)
         buf[8 + 8] = 9;
@@ -779,7 +1235,7 @@ mod tests {
         assert_ne!(mid("tenant-a"), mid("tenant-b"));
         // a wire model id longer than the cap is rejected at decode
         let mut buf = Vec::new();
-        let req = Frame::Request { id: 1, pixels: vec![].into(), model: mid("a") };
+        let req = Frame::Request { id: 1, pixels: vec![].into(), model: mid("a"), trace: 0 };
         write_frame(&mut buf, &req).unwrap();
         let model_len_at = 8 + 8 + 4; // header + id + pixel count
         buf[model_len_at] = (MAX_MODEL_ID + 1) as u8;

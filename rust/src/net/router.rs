@@ -50,6 +50,16 @@
 //! minimum hint, so fleet-wide backpressure stays exactly as meaningful
 //! as single-process backpressure.
 //!
+//! **Observability.** A client's `GetStats` fans out: the router
+//! scrapes every connected backend over a short-lived admin connection
+//! and answers with its own routing snapshot plus one
+//! [`crate::coordinator::MetricsSnapshot`] per backend. `DumpTrace`
+//! answers with this process's local flight-recorder dump only —
+//! `repro trace` merges router and backend dumps client-side. Requests
+//! arriving untraced are sampled *here*, at the fleet's front door;
+//! the id rides the protocol's v0.3 trailing field to the backend, so
+//! both processes' spans stitch into one timeline by trace id.
+//!
 //! Ordering audit: every atomic here is Relaxed by design — connection
 //! counters, monitoring counters, and cooperative flags (`stopping`,
 //! `connected`) whose consumers tolerate staleness by construction
@@ -57,11 +67,14 @@
 //! hop). Links are published via `Mutex<Option<Arc<Link>>>`, never
 //! through an atomic.
 
-use super::client::{handshake, ServerInfo};
-use super::protocol::{read_frame_with, write_frame, write_frame_with, Frame, ModelId};
+use super::client::{handshake, NetClient, ServerInfo};
+use super::protocol::{
+    read_frame_with, write_frame, write_frame_with, Frame, ModelId, StatsPayload,
+};
 use super::server::WRITE_TIMEOUT;
-use crate::config::{DispatchPolicy, RouterConfig};
+use crate::config::{DispatchPolicy, RouterConfig, TraceConfig};
 use crate::coordinator::RouterMetrics;
+use crate::util::trace::{FlightRecorder, Stage};
 use crate::util::{queue, PooledVec};
 use crate::Result;
 use anyhow::{bail, ensure, Context};
@@ -188,6 +201,9 @@ struct Route {
     tried: u64,
     /// Smallest `retry_after_us` seen from a rejecting backend.
     min_hint: u64,
+    /// Trace id the request entered the fleet with (`0` = untraced);
+    /// re-encoded on every forward and failover hop, like the model.
+    trace: u64,
 }
 
 struct LinkWriter {
@@ -252,6 +268,9 @@ struct RouterShared {
     info: Mutex<Option<ServerInfo>>,
     backends: Vec<Backend>,
     metrics: Arc<RouterMetrics>,
+    /// Front-door flight recorder: ingress sampling plus this process's
+    /// spans for routed requests ([`crate::util::trace`]).
+    recorder: Arc<FlightRecorder>,
     stopping: AtomicBool,
     live: AtomicUsize,
     next_conn: AtomicU64,
@@ -279,7 +298,15 @@ impl RouterServer {
     /// Bind the front tier and probe every backend once synchronously
     /// (unreachable backends start quarantined on the prober's backoff
     /// schedule — the router comes up even with the whole fleet down).
+    /// Uses default flight-recorder settings; `repro route` passes the
+    /// config's `trace.*` keys through [`bind_traced`](Self::bind_traced).
     pub fn bind(cfg: &RouterConfig) -> Result<RouterServer> {
+        RouterServer::bind_traced(cfg, &TraceConfig::default())
+    }
+
+    /// [`bind`](Self::bind) with explicit flight-recorder settings
+    /// (ring capacity and ingress sampling rate).
+    pub fn bind_traced(cfg: &RouterConfig, trace: &TraceConfig) -> Result<RouterServer> {
         ensure!(!cfg.backends.is_empty(), "router needs at least one backend");
         ensure!(cfg.backends.len() <= 64, "router supports at most 64 backends");
         ensure!(cfg.vnodes >= 1, "router.vnodes must be >= 1");
@@ -312,6 +339,7 @@ impl RouterServer {
             info: Mutex::new(None),
             backends,
             metrics: Arc::new(RouterMetrics::new(&cfg.backends)),
+            recorder: FlightRecorder::new("router", trace.ring_capacity, trace.sample_every),
             stopping: AtomicBool::new(false),
             live: AtomicUsize::new(0),
             next_conn: AtomicU64::new(0),
@@ -621,16 +649,21 @@ fn demux_main(shared: Arc<RouterShared>, idx: usize, link: Arc<Link>, mut r: Buf
             Err(e) => return fail_link(&shared, idx, link.gen, &format!("{e:#}")),
         };
         match frame {
-            Frame::Response { id, label, latency_us, cost, logits } => {
+            Frame::Response { id, label, latency_us, cost, logits, trace } => {
                 if let Some(route) = take_route(&link, id) {
                     shared.backends[idx].outstanding.fetch_sub(1, Ordering::Relaxed);
+                    let t0 = Instant::now();
                     let _ = route.client_tx.send(Frame::Response {
                         id: route.client_id,
                         label,
                         latency_us,
                         cost,
                         logits,
+                        trace,
                     });
+                    // the router's own write-back: reply forwarded onto
+                    // the client connection's writer queue
+                    shared.recorder.record(trace, Stage::WriteBack, t0, Instant::now());
                 }
             }
             Frame::Rejected { id, retry_after_us, .. } => {
@@ -712,6 +745,7 @@ fn dispatch(shared: &Arc<RouterShared>, mut route: Route) {
         let bid;
         let pixels;
         let model = route.model;
+        let trace = route.trace;
         {
             let mut inf = link.inflight.lock().unwrap();
             if inf.closed {
@@ -725,7 +759,7 @@ fn dispatch(shared: &Arc<RouterShared>, mut route: Route) {
         let wrote = {
             let mut guard = link.writer.lock().unwrap();
             let lw = &mut *guard;
-            let frame = Frame::Request { id: bid, pixels, model };
+            let frame = Frame::Request { id: bid, pixels, model, trace };
             let sent = write_frame_with(&mut lw.w, &frame, &mut lw.scratch);
             sent.is_ok() && lw.w.flush().is_ok()
         };
@@ -875,7 +909,13 @@ fn conn_reader(
                     }
                 }
             }
-            Ok(Some(Frame::Request { id, pixels, model })) => {
+            Ok(Some(Frame::Request { id, pixels, model, trace })) => {
+                let t0 = Instant::now();
+                // Untraced requests are sampled here, at the fleet's
+                // front door; the id rides the wire to the backend so
+                // both processes' spans share it. A nonzero incoming id
+                // is honored as-is, never reassigned.
+                let trace = if trace == 0 { shared.recorder.sample() } else { trace };
                 let route = Route {
                     client_tx: tx.clone(),
                     client_id: id,
@@ -884,8 +924,44 @@ fn conn_reader(
                     model,
                     tried: 0,
                     min_hint: u64::MAX,
+                    trace,
                 };
                 dispatch(&shared, route);
+                shared.recorder.record(trace, Stage::Ingress, t0, Instant::now());
+            }
+            Ok(Some(Frame::GetStats)) => {
+                // Cold admin path: fan a fresh scrape out to every
+                // connected backend over a short-lived admin connection
+                // (the multiplexed data links only demux request
+                // replies), then aggregate under the router snapshot.
+                let mut backends = Vec::new(); // lint: allow(alloc): cold admin path
+                for b in &shared.backends {
+                    if !b.connected.load(Ordering::Relaxed) {
+                        continue;
+                    }
+                    let scraped = NetClient::connect(&b.addr).and_then(|mut c| c.get_stats());
+                    if let Ok(stats) = scraped {
+                        if let Some(server) = stats.server {
+                            backends.push((b.addr.clone(), server));
+                        }
+                    }
+                }
+                let stats = StatsPayload {
+                    server: None,
+                    router: Some(shared.metrics.snapshot()),
+                    backends,
+                };
+                if tx.send(Frame::Stats(Box::new(stats))).is_err() {
+                    return;
+                }
+            }
+            Ok(Some(Frame::DumpTrace)) => {
+                // local spans only — `repro trace` merges the router's
+                // and the backends' dumps client-side
+                let json = shared.recorder.dump_json();
+                if tx.send(Frame::Trace { json }).is_err() {
+                    return;
+                }
             }
             Ok(Some(Frame::LoadModel { .. })) | Ok(Some(Frame::RetireModel { .. })) => {
                 // Admin frames address one backend's registry; routed,

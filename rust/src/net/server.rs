@@ -27,6 +27,14 @@
 //! can treat `AdminOk` as "the swap window is open". No connection is
 //! ever dropped by a swap.
 //!
+//! Observability: `GetStats` answers with this server's full
+//! [`crate::coordinator::MetricsSnapshot`] on a `Stats` frame, and
+//! `DumpTrace` answers with the process flight recorder's Chrome-trace
+//! JSON on a `Trace` frame. A `Request` carrying a nonzero trace id
+//! (protocol v0.3) gets its ingress span recorded here and keeps that
+//! id through the coordinator, so the spans a router and a backend
+//! record for one routed request stitch into a single timeline.
+//!
 //! Failure containment: a malformed or truncated frame closes that one
 //! connection (best-effort `Error` frame first) — the coordinator and
 //! every other connection are untouched, because the reader owns
@@ -45,9 +53,10 @@
 //! carries a [`WRITE_TIMEOUT`], after which the stalled write fails
 //! and the writer closes that connection.
 
-use super::protocol::{read_frame_with, write_frame, write_frame_with, Frame};
+use super::protocol::{read_frame_with, write_frame, write_frame_with, Frame, StatsPayload};
 use crate::coordinator::{Backpressure, Completion, ModelUnavailable, ServerHandle};
 use crate::util::queue;
+use crate::util::trace::Stage;
 use crate::Result;
 use anyhow::Context;
 use std::io::{BufReader, BufWriter, Write as _};
@@ -55,7 +64,7 @@ use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, Shutdown, SocketAddr, TcpListener, Tc
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Per-connection socket write timeout. Reply frames are small, so any
 /// write that stalls this long means the peer stopped draining its
@@ -311,6 +320,8 @@ fn spawn_connection(
 
 fn reader_main(stream: TcpStream, tx: queue::Sender<Frame>, handle: ServerHandle, conn_id: u64) {
     let mut r = BufReader::new(&stream);
+    let recorder = handle.recorder();
+    let metrics = handle.metrics();
     // reused payload scratch: a warm connection decodes every frame
     // through this buffer and pooled pixel vecs — no allocation per read
     let mut scratch = Vec::new();
@@ -328,12 +339,13 @@ fn reader_main(stream: TcpStream, tx: queue::Sender<Frame>, handle: ServerHandle
                     return;
                 }
             }
-            Ok(Some(Frame::Request { id, pixels, model })) => {
+            Ok(Some(Frame::Request { id, pixels, model, trace })) => {
+                let t0 = Instant::now();
                 // the coordinator builds the Response/Error frame itself
                 // (pooled logits) and pushes it onto this connection's
                 // writer queue — no boxed closure, no allocation
                 let done = Completion::Frame { tx: tx.clone(), wire_id: id };
-                if let Err(e) = handle.submit_model_from(conn_id, model, pixels, done) {
+                if let Err(e) = handle.submit_traced(conn_id, model, pixels, trace, done) {
                     let frame = if let Some(bp) = e.downcast_ref::<Backpressure>() {
                         Frame::Rejected {
                             id,
@@ -355,6 +367,14 @@ fn reader_main(stream: TcpStream, tx: queue::Sender<Frame>, handle: ServerHandle
                         return;
                     }
                 }
+                // Ingress covers decoded-to-submitted. The span lands
+                // only for a trace id assigned upstream (router or
+                // client); locally sampled requests start their
+                // timeline at admission inside the coordinator.
+                let now = Instant::now();
+                let ingress_us = now.duration_since(t0).as_micros() as u64;
+                metrics.record_stage_us(Stage::Ingress, ingress_us);
+                recorder.record(trace, Stage::Ingress, t0, now);
             }
             Ok(Some(Frame::LoadModel { model, dir })) => {
                 let reply = match handle.load_model(model, &dir) {
@@ -375,6 +395,19 @@ fn reader_main(stream: TcpStream, tx: queue::Sender<Frame>, handle: ServerHandle
                     Err(e) => Frame::Error { id: 0, reason: format!("{e:#}") },
                 };
                 if tx.send(reply).is_err() {
+                    return;
+                }
+            }
+            Ok(Some(Frame::GetStats)) => {
+                // cold admin path: snapshot and reply allocate freely
+                let snap = metrics.snapshot();
+                let stats = StatsPayload { server: Some(snap), ..Default::default() };
+                if tx.send(Frame::Stats(Box::new(stats))).is_err() {
+                    return;
+                }
+            }
+            Ok(Some(Frame::DumpTrace)) => {
+                if tx.send(Frame::Trace { json: recorder.dump_json() }).is_err() {
                     return;
                 }
             }

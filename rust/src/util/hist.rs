@@ -1,0 +1,148 @@
+//! Shared fixed-bucket log₂ latency histogram.
+//!
+//! Extracted from `coordinator::metrics` so every duration-shaped
+//! metric in the crate (request latency, simulated CiM latency,
+//! host-GEMM wall time, plan-cache compile/stall, per-stage and
+//! per-tenant breakdowns) records into the same lock-free structure.
+//!
+//! Ordering audit: every atomic access here is Relaxed by design — the
+//! histogram is monotonic monitoring state; a reader tolerates tearing
+//! across buckets (a quantile is a statistical view, not a consistent
+//! cut), and nothing is published through these atomics.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Log-spaced latency histogram (µs), 1 µs .. ~16 s.
+///
+/// The unit is nominal: the bucket math is unit-agnostic and callers
+/// record nanoseconds into it too (see `Metrics::sim_latency`).
+#[derive(Debug, Default)]
+pub struct LatencyHistogram {
+    /// bucket i counts latencies in [2^i, 2^{i+1}) µs.
+    buckets: [AtomicU64; 24],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl LatencyHistogram {
+    pub fn record_us(&self, us: u64) {
+        let idx = (64 - us.max(1).leading_zeros() as usize - 1).min(23);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum_us.load(Ordering::Relaxed) as f64 / n as f64
+        }
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.max_us.load(Ordering::Relaxed)
+    }
+
+    /// Approximate quantile from the bucket histogram (upper bound of the
+    /// containing bucket).
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let target = (q.clamp(0.0, 1.0) * n as f64).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return 1u64 << (i + 1);
+            }
+        }
+        self.max_us()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::check::check;
+
+    #[test]
+    fn quantiles_are_ordered_and_mean_positive() {
+        let h = LatencyHistogram::default();
+        for us in [10u64, 20, 40, 80, 160, 320, 1000, 5000] {
+            h.record_us(us);
+        }
+        assert_eq!(h.count(), 8);
+        assert!(h.quantile_us(0.5) <= h.quantile_us(0.99));
+        assert!(h.mean_us() > 0.0);
+        assert_eq!(h.max_us(), 5000);
+    }
+
+    #[test]
+    fn zero_clamps_to_the_resolution_floor() {
+        let h = LatencyHistogram::default();
+        h.record_us(0);
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.quantile_us(0.5), 2, "0 lands in the [1, 2) bucket");
+    }
+
+    /// Exact percentile of raw samples under the same ceil-rank rule the
+    /// histogram walk uses.
+    fn exact_percentile(sorted: &[u64], q: f64) -> u64 {
+        let n = sorted.len();
+        let rank = ((q * n as f64).ceil() as usize).max(1).min(n);
+        sorted[rank - 1]
+    }
+
+    /// Property: against exact percentiles computed from the raw
+    /// samples, every histogram quantile is an upper bound that is tight
+    /// to within one log₂ bucket — `exact <= hist < 2 * max(exact, 1) + 1`
+    /// (the containing bucket's upper bound is at most one doubling
+    /// above the exact sample).
+    #[test]
+    fn quantiles_bound_exact_percentiles_within_one_bucket() {
+        check("hist quantile vs exact percentile", 50, |rng| {
+            let n = 1 + rng.gen_below(400) as usize;
+            let h = LatencyHistogram::default();
+            let mut raw = Vec::new();
+            for _ in 0..n {
+                // span the full bucket range: mix tiny and huge samples
+                let bits = rng.gen_below(23);
+                let us = rng.gen_below(1u64 << (bits + 1)).max(1);
+                h.record_us(us);
+                raw.push(us);
+            }
+            raw.sort_unstable();
+            for q in [0.01, 0.25, 0.50, 0.90, 0.99, 1.0] {
+                let exact = exact_percentile(&raw, q);
+                let est = h.quantile_us(q);
+                prop_assert!(
+                    est >= exact,
+                    "q={q}: histogram {est} below exact {exact} (n={n})"
+                );
+                prop_assert!(
+                    est <= 2 * exact.max(1),
+                    "q={q}: histogram {est} above one-bucket bound of exact {exact} (n={n})"
+                );
+            }
+            let mean = h.mean_us();
+            let exact_mean = raw.iter().sum::<u64>() as f64 / n as f64;
+            prop_assert!(
+                (mean - exact_mean).abs() < 1e-6,
+                "mean {mean} != exact {exact_mean}"
+            );
+            prop_assert!(h.max_us() == *raw.last().unwrap(), "max is exact");
+            Ok(())
+        });
+    }
+}

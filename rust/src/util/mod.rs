@@ -22,15 +22,22 @@
 //! * [`sync`] — the std/loom synchronization shim every concurrent
 //!   module imports its primitives through, so `--cfg loom` swaps the
 //!   whole crate onto loom's model-checked versions.
+//! * [`hist`] — the shared lock-free log₂ latency histogram behind every
+//!   duration metric (replaces per-module p50/p99 bookkeeping).
+//! * [`trace`] — the per-process flight recorder: fixed-capacity
+//!   lock-free span ring + Chrome trace-event JSON dumps (replaces any
+//!   tracing/perfetto crate; see the crate docs' `## Observability`).
 
 pub mod bench;
 pub mod check;
+pub mod hist;
 pub mod kv;
 pub mod oneshot;
 pub mod pool;
 pub mod queue;
 pub mod rng;
 pub mod sync;
+pub mod trace;
 
 pub use pool::{ClassPool, PoolItem, PoolStats, PooledVec};
 pub use rng::Rng;

@@ -1,0 +1,452 @@
+//! Per-request tracing: a fixed-capacity lock-free ring-buffer flight
+//! recorder per process.
+//!
+//! A trace id is assigned at the outermost tier a request enters — the
+//! router's connection reader for routed traffic, the coordinator's
+//! admission path for direct traffic — by counter-based 1-in-N sampling
+//! (`trace.sample_every`; 0 disables). A nonzero id received on the
+//! wire is never reassigned, which is what lets one routed request's
+//! spans from two processes stitch into one timeline.
+//!
+//! Each stage span is four Relaxed atomic stores into a pre-allocated
+//! ring cell, so recording is allocation-free and lock-free on the
+//! serving hot path (`tests/hot_path_allocs.rs` pins this with tracing
+//! on). The ring overwrites oldest-first; a reader that races a writer
+//! on the wraparound cell may observe a torn span (fields from two
+//! different spans) — benign for a monitoring dump, and bounded to at
+//! most one cell per concurrent writer. Dumps render as Chrome
+//! trace-event JSON (`chrome://tracing` / Perfetto "X" complete
+//! events): `ts` is wall-clock µs from a per-recorder epoch captured at
+//! construction, so independently dumped processes share a clock to
+//! within SystemTime skew.
+//!
+//! Ordering audit: every atomic access here is Relaxed by design. The
+//! ring is monitoring state — a dump is a statistical view, not a
+//! consistent cut, and no other memory is published through these
+//! atomics.
+
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Instant, SystemTime};
+
+/// Pipeline stages a request passes through, ingress → write-back.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Stage {
+    /// Wire read → handed to dispatch/admission (router or server).
+    Ingress = 0,
+    /// Admission-gate decision (plan lookup + try_admit).
+    Admission = 1,
+    /// Enqueued in a batcher lane → batch formed.
+    QueueWait = 2,
+    /// Batch assembly: flatten + worker hand-off.
+    BatchForm = 3,
+    /// Host-side planned LUT-GEMM compute.
+    Gemm = 4,
+    /// Calibrated-backend reply gate (simulated-CiM latency wait).
+    CalibratedGate = 5,
+    /// Reply fan-out: logits copied and written to the client queue.
+    WriteBack = 6,
+}
+
+/// Number of [`Stage`] variants (per-stage histogram array length).
+pub const N_STAGES: usize = 7;
+
+impl Stage {
+    /// Every stage, in pipeline order.
+    pub const ALL: [Stage; N_STAGES] = [
+        Stage::Ingress,
+        Stage::Admission,
+        Stage::QueueWait,
+        Stage::BatchForm,
+        Stage::Gemm,
+        Stage::CalibratedGate,
+        Stage::WriteBack,
+    ];
+
+    /// Stable wire/JSON name (also the Prometheus `stage` label).
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Ingress => "ingress",
+            Stage::Admission => "admission",
+            Stage::QueueWait => "queue_wait",
+            Stage::BatchForm => "batch_form",
+            Stage::Gemm => "gemm",
+            Stage::CalibratedGate => "calibrated_gate",
+            Stage::WriteBack => "write_back",
+        }
+    }
+
+    fn from_u64(v: u64) -> Option<Stage> {
+        Stage::ALL.get(v as usize).copied()
+    }
+}
+
+/// One pre-allocated ring cell. `trace == 0` marks an empty cell; a
+/// wraparound race can tear fields across two spans (module docs).
+#[derive(Default)]
+struct SpanCell {
+    trace: AtomicU64,
+    stage: AtomicU64,
+    start_us: AtomicU64,
+    dur_us: AtomicU64,
+}
+
+/// One recorded span, read back out of the ring.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpanEvent {
+    pub trace: u64,
+    pub stage: Stage,
+    /// Wall-clock µs since the Unix epoch (shared across processes).
+    pub start_us: u64,
+    pub dur_us: u64,
+}
+
+/// SplitMix64 finalizer: bijective avalanche mix for trace-id spreading.
+fn mix(mut x: u64) -> u64 {
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// Fixed-capacity lock-free flight recorder (module docs).
+pub struct FlightRecorder {
+    /// Tier label rendered into every event (`"server"` / `"router"`).
+    role: &'static str,
+    cells: Box<[SpanCell]>,
+    cursor: AtomicU64,
+    /// 1-in-N ingress sampling period; 0 disables sampling entirely.
+    sample_every: u64,
+    seq: AtomicU64,
+    /// Per-process entropy folded into sampled trace ids so two
+    /// processes sampling the same sequence numbers don't collide.
+    base: u64,
+    /// `SystemTime` µs at construction — the wall anchor for `ts`.
+    epoch_wall_us: u64,
+    epoch: Instant,
+    /// Chrome `tid`: distinguishes recorders sharing one OS pid (the
+    /// in-process fleet tests run router + backends in one process).
+    tid: u64,
+}
+
+impl std::fmt::Debug for FlightRecorder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FlightRecorder")
+            .field("role", &self.role)
+            .field("capacity", &self.cells.len())
+            .field("sample_every", &self.sample_every)
+            .field("tid", &self.tid)
+            .finish()
+    }
+}
+
+impl FlightRecorder {
+    /// Pre-allocate a recorder. `capacity` is clamped to ≥ 1; config
+    /// validation bounds it to 64..=4096 so a JSON dump always fits one
+    /// wire frame.
+    pub fn new(role: &'static str, capacity: usize, sample_every: u64) -> Arc<FlightRecorder> {
+        static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+        let tid = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+        let wall = SystemTime::now()
+            .duration_since(SystemTime::UNIX_EPOCH)
+            .unwrap_or_default();
+        let epoch_wall_us = wall.as_micros() as u64;
+        let base = mix(epoch_wall_us ^ (std::process::id() as u64) ^ (tid << 48));
+        let cells: Vec<SpanCell> =
+            (0..capacity.max(1)).map(|_| SpanCell::default()).collect();
+        Arc::new(FlightRecorder {
+            role,
+            cells: cells.into_boxed_slice(),
+            cursor: AtomicU64::new(0),
+            sample_every,
+            seq: AtomicU64::new(0),
+            base,
+            epoch_wall_us,
+            epoch: Instant::now(),
+            tid,
+        })
+    }
+
+    /// Counter-based 1-in-N sampling decision at ingress: every
+    /// `sample_every`-th call returns a fresh nonzero trace id, the
+    /// rest return 0 (untraced). 0 never collides with a real id.
+    pub fn sample(&self) -> u64 {
+        if self.sample_every == 0 {
+            return 0;
+        }
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        if seq % self.sample_every != 0 {
+            return 0;
+        }
+        let id = mix(self.base.wrapping_add(seq));
+        if id == 0 {
+            1
+        } else {
+            id
+        }
+    }
+
+    /// Wall-clock µs for an `Instant` taken after construction.
+    pub fn wall_us(&self, t: Instant) -> u64 {
+        let since = t.checked_duration_since(self.epoch).unwrap_or_default();
+        self.epoch_wall_us + since.as_micros() as u64
+    }
+
+    /// Record one stage span. No-op for untraced requests (`trace == 0`)
+    /// — the hot path pays one branch. Allocation-free.
+    pub fn record(&self, trace: u64, stage: Stage, start: Instant, end: Instant) {
+        if trace == 0 {
+            return;
+        }
+        let start_us = self.wall_us(start);
+        let dur_us = end.checked_duration_since(start).unwrap_or_default().as_micros() as u64;
+        self.record_at(trace, stage, start_us, dur_us);
+    }
+
+    /// Record a span from precomputed wall coordinates (used where a
+    /// stage's position is derived arithmetically, e.g. splitting a
+    /// worker's batch wall time into GEMM + calibrated gate).
+    pub fn record_at(&self, trace: u64, stage: Stage, start_us: u64, dur_us: u64) {
+        if trace == 0 {
+            return;
+        }
+        let idx = (self.cursor.fetch_add(1, Ordering::Relaxed) % self.cells.len() as u64) as usize;
+        let cell = &self.cells[idx];
+        cell.trace.store(trace, Ordering::Relaxed);
+        cell.stage.store(stage as u64, Ordering::Relaxed);
+        cell.start_us.store(start_us, Ordering::Relaxed);
+        // Chrome renders dur 0 as invisible; clamp to the 1 µs floor.
+        cell.dur_us.store(dur_us.max(1), Ordering::Relaxed);
+    }
+
+    /// Read every recorded span, oldest-state included, sorted by start
+    /// time. Allocates — admin/dump path only.
+    pub fn events(&self) -> Vec<SpanEvent> {
+        let mut out: Vec<SpanEvent> = self
+            .cells
+            .iter()
+            .filter_map(|c| {
+                let trace = c.trace.load(Ordering::Relaxed);
+                if trace == 0 {
+                    return None;
+                }
+                // A torn wraparound cell can hold an out-of-range stage
+                // word mid-store only if Stage grows past u8 — it can't
+                // today, but skip defensively rather than panic.
+                let stage = Stage::from_u64(c.stage.load(Ordering::Relaxed))?;
+                Some(SpanEvent {
+                    trace,
+                    stage,
+                    start_us: c.start_us.load(Ordering::Relaxed),
+                    dur_us: c.dur_us.load(Ordering::Relaxed),
+                })
+            })
+            .collect();
+        out.sort_by_key(|e| (e.start_us, e.stage as u8));
+        out
+    }
+
+    /// Render the ring as Chrome trace-event JSON (`{"traceEvents":
+    /// [...]}` — "X" complete events; load in `chrome://tracing` or
+    /// Perfetto). `pid` is the OS process id, `tid` the per-process
+    /// recorder index, so a merged multi-process dump keeps tiers on
+    /// separate tracks. Admin path: allocates freely.
+    pub fn dump_json(&self) -> String {
+        let mut out = String::new();
+        out.push_str("{\"traceEvents\":[");
+        for (i, e) in self.events().iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let _ = write!(
+                out,
+                "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\
+                 \"pid\":{},\"tid\":{},\"args\":{{\"trace\":\"{:#018x}\",\"role\":\"{}\"}}}}",
+                e.stage.name(),
+                self.role,
+                e.start_us,
+                e.dur_us,
+                std::process::id(),
+                self.tid,
+                e.trace,
+                self.role,
+            );
+        }
+        out.push_str("]}");
+        out
+    }
+}
+
+/// Merge several `dump_json` outputs (one per process/tier) into one
+/// Chrome trace document. String-level: each part's `traceEvents` array
+/// body is spliced into a single array — valid because this crate
+/// controls the emitted shape exactly.
+pub fn merge_trace_dumps(parts: &[String]) -> String {
+    let mut out = String::new();
+    out.push_str("{\"traceEvents\":[");
+    let mut first = true;
+    for part in parts {
+        let Some(open) = part.find('[') else { continue };
+        let Some(close) = part.rfind(']') else { continue };
+        let body = part[open + 1..close].trim();
+        if body.is_empty() {
+            continue;
+        }
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        out.push_str(body);
+    }
+    out.push_str("]}");
+    out
+}
+
+/// One event pulled back out of a trace dump (test/tooling helper).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParsedEvent {
+    pub name: String,
+    pub ts: u64,
+    pub dur: u64,
+    pub pid: u64,
+    pub tid: u64,
+    /// The `args.trace` hex string, e.g. `"0x00000000deadbeef"`.
+    pub trace: String,
+}
+
+/// Parse a dump produced by [`FlightRecorder::dump_json`] /
+/// [`merge_trace_dumps`] back into events. Not a general JSON parser —
+/// it walks exactly the shape this module emits (tests use it to assert
+/// cross-process stitching over the wire-dumped artifact).
+pub fn parse_trace_json(json: &str) -> Vec<ParsedEvent> {
+    fn grab_str(chunk: &str, key: &str) -> Option<String> {
+        let pat = format!("\"{key}\":\"");
+        let at = chunk.find(&pat)? + pat.len();
+        let end = chunk[at..].find('"')? + at;
+        Some(chunk[at..end].to_string())
+    }
+    fn grab_u64(chunk: &str, key: &str) -> Option<u64> {
+        let pat = format!("\"{key}\":");
+        let at = chunk.find(&pat)? + pat.len();
+        let digits: String = chunk[at..].chars().take_while(|c| c.is_ascii_digit()).collect();
+        digits.parse().ok()
+    }
+    json.split("{\"name\":\"")
+        .skip(1)
+        .filter_map(|chunk| {
+            let end = chunk.find('"')?;
+            Some(ParsedEvent {
+                name: chunk[..end].to_string(),
+                ts: grab_u64(chunk, "ts")?,
+                dur: grab_u64(chunk, "dur")?,
+                pid: grab_u64(chunk, "pid")?,
+                tid: grab_u64(chunk, "tid")?,
+                trace: grab_str(chunk, "trace")?,
+            })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn sampling_is_one_in_n_and_ids_are_unique_nonzero() {
+        let r = FlightRecorder::new("server", 64, 4);
+        let ids: Vec<u64> = (0..16).map(|_| r.sample()).collect();
+        let sampled: Vec<u64> = ids.iter().copied().filter(|&id| id != 0).collect();
+        assert_eq!(sampled.len(), 4, "1-in-4 of 16 calls: {ids:?}");
+        let mut uniq = sampled.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), sampled.len(), "ids are distinct");
+    }
+
+    #[test]
+    fn sample_every_zero_disables_tracing() {
+        let r = FlightRecorder::new("server", 64, 0);
+        assert!((0..32).all(|_| r.sample() == 0));
+    }
+
+    #[test]
+    fn untraced_records_are_no_ops() {
+        let r = FlightRecorder::new("server", 8, 1);
+        let t = Instant::now();
+        r.record(0, Stage::Gemm, t, t);
+        assert!(r.events().is_empty());
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_at_capacity() {
+        let r = FlightRecorder::new("server", 4, 1);
+        for i in 0..10u64 {
+            r.record_at(100 + i, Stage::Ingress, 1000 + i, 5);
+        }
+        let ev = r.events();
+        assert_eq!(ev.len(), 4, "capacity bounds retained spans");
+        let traces: Vec<u64> = ev.iter().map(|e| e.trace).collect();
+        assert_eq!(traces, [106, 107, 108, 109], "oldest spans were overwritten");
+    }
+
+    #[test]
+    fn events_are_sorted_and_wall_anchored() {
+        let r = FlightRecorder::new("server", 16, 1);
+        let t0 = Instant::now();
+        let t1 = t0 + Duration::from_micros(300);
+        let t2 = t0 + Duration::from_micros(100);
+        r.record(7, Stage::Gemm, t1, t1 + Duration::from_micros(50));
+        r.record(7, Stage::Ingress, t2, t2 + Duration::from_micros(20));
+        let ev = r.events();
+        assert_eq!(ev.len(), 2);
+        assert_eq!(ev[0].stage, Stage::Ingress, "sorted by start time");
+        assert!(ev[0].start_us >= r.epoch_wall_us, "ts is wall-anchored");
+        assert_eq!(ev[1].start_us - ev[0].start_us, 200);
+    }
+
+    #[test]
+    fn dump_parses_back_bit_exactly() {
+        let r = FlightRecorder::new("router", 16, 1);
+        r.record_at(0xDEAD_BEEF, Stage::QueueWait, 12345, 67);
+        r.record_at(0xDEAD_BEEF, Stage::WriteBack, 20000, 3);
+        let parsed = parse_trace_json(&r.dump_json());
+        assert_eq!(parsed.len(), 2);
+        assert_eq!(parsed[0].name, "queue_wait");
+        assert_eq!(parsed[0].ts, 12345);
+        assert_eq!(parsed[0].dur, 67);
+        assert_eq!(parsed[0].pid, std::process::id() as u64);
+        assert_eq!(parsed[0].trace, format!("{:#018x}", 0xDEAD_BEEFu64));
+        assert_eq!(parsed[1].name, "write_back");
+    }
+
+    #[test]
+    fn merged_dumps_stitch_by_trace_across_recorders() {
+        let router = FlightRecorder::new("router", 8, 1);
+        let server = FlightRecorder::new("server", 8, 1);
+        assert_ne!(router.tid, server.tid, "recorders get distinct tids");
+        router.record_at(42, Stage::Ingress, 100, 10);
+        server.record_at(42, Stage::Gemm, 120, 30);
+        let merged =
+            merge_trace_dumps(&[router.dump_json(), server.dump_json(), String::new()]);
+        let parsed = parse_trace_json(&merged);
+        assert_eq!(parsed.len(), 2);
+        assert_eq!(parsed[0].trace, parsed[1].trace, "one timeline by trace id");
+        assert_ne!(parsed[0].tid, parsed[1].tid, "tracks stay separate");
+        // merging an empty dump with empties is still a valid document
+        assert_eq!(
+            merge_trace_dumps(&[String::from("{\"traceEvents\":[]}")]),
+            "{\"traceEvents\":[]}"
+        );
+    }
+
+    #[test]
+    fn stage_names_are_stable_and_roundtrip() {
+        for (i, s) in Stage::ALL.iter().enumerate() {
+            assert_eq!(Stage::from_u64(i as u64), Some(*s));
+            assert!(!s.name().is_empty());
+        }
+        assert_eq!(Stage::from_u64(N_STAGES as u64), None);
+    }
+}

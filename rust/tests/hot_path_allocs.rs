@@ -18,6 +18,13 @@
 //! lock, one map lookup and an `Arc` clone, and the model-tagged frame
 //! encodes through the same reused scratch.
 //!
+//! The pin runs with **tracing on**: the default config keeps 1-in-8
+//! flight-recorder sampling live, so the zero-delta window proves the
+//! recorder's span path (ring cells + Relaxed atomics) and the
+//! per-stage histograms allocate nothing — and the test asserts the
+//! sampled spans actually landed, so the pin can't be satisfied by a
+//! recorder that silently no-ops.
+//!
 //! This file intentionally holds a single `#[test]`: the counter is
 //! process-global, so a concurrently running second test would pollute
 //! the measured window.
@@ -121,6 +128,18 @@ fn pin_zero_allocs(backend: BackendKind, shards: usize, tag: &str) {
     assert_eq!(snap.accepted, 448, "{tag} admission count");
     assert_eq!(snap.rejected, 0);
     assert!(snap.pool.hits > 0, "pooled buffers must be recycling");
+    // tracing was live the whole time at the default 1-in-8 sampling
+    // and the window still allocated nothing — and the sampled spans
+    // really landed in the ring (the recorder is not a silent no-op)
+    let spans = handle.recorder().events();
+    assert!(!spans.is_empty(), "{tag}: default sampling captured no spans");
+    assert!(spans.iter().all(|s| s.trace != 0 && s.dur_us >= 1), "{tag}: malformed span");
+    // per-stage histograms: request-granular stages sample once per
+    // request, batch-granular ones once per batch (write-back lands
+    // moments after the last reply, so it is not pinned here)
+    assert_eq!(snap.stage_count[0], 448, "{tag} ingress histogram");
+    assert_eq!(snap.stage_count[2], 448, "{tag} queue-wait histogram");
+    assert_eq!(snap.stage_count[4], snap.batches, "{tag} gemm histogram");
     net.shutdown();
     server.shutdown();
 }

@@ -50,7 +50,7 @@ fn sent_ticket_disarms_its_drop_guard() {
     loom::model(|| {
         let (ctx, crx) = queue::channel::<WorkerReply>();
         let t = loom::thread::spawn(move || {
-            ReplyTicket::new(ctx, 8).send(Ok(BatchOutput::plain(vec![1.0f32])));
+            ReplyTicket::new(ctx, 8).send(Ok(BatchOutput::plain(vec![1.0f32])), 0);
         });
         let reply = crx.recv().expect("explicit reply delivered");
         assert_eq!(reply.batch_id, 8);

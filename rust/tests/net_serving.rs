@@ -18,18 +18,28 @@
 //!   requests are bit-identical across shard counts, plan-thread
 //!   counts, cache evictions and the router, and a hot swap
 //!   (`LoadModel` + `RetireModel` under live load) drops no connection
-//!   and resolves every in-flight request.
+//!   and resolves every in-flight request;
+//! * observability is wire-true: a routed request's spans from the
+//!   router and the backend stitch into one ordered Chrome timeline by
+//!   trace id, a `GetStats` scrape equals the in-process snapshot on a
+//!   quiesced server (and fans out through the router), and
+//!   hand-rolled v0.2 frames still serve unchanged against the v0.3
+//!   protocol.
 
 mod common;
 
 use common::synth_artifacts;
-use luna_cim::config::{BackendKind, Config, DispatchPolicy, RouterConfig, ShardAffinity};
-use luna_cim::coordinator::{Backpressure, CoordinatorServer, ServerHandle};
+use luna_cim::config::{
+    BackendKind, Config, DispatchPolicy, RouterConfig, ShardAffinity, TraceConfig,
+};
+use luna_cim::coordinator::{Backpressure, CoordinatorServer, MetricsSnapshot, ServerHandle};
 use luna_cim::engine::ModelEntry;
 use luna_cim::multiplier::{MultiplierKind, MultiplierModel};
 use luna_cim::net::protocol::{read_frame, write_frame, Frame, ModelId, MAGIC, VERSION};
 use luna_cim::net::{loadgen, NetClient, NetServer, RouterServer, Scenario};
 use luna_cim::nn::QuantMlp;
+use luna_cim::util::trace::{merge_trace_dumps, parse_trace_json};
+use luna_cim::util::PoolStats;
 use std::io::Write as _;
 use std::net::TcpStream;
 use std::sync::{Arc, Mutex};
@@ -873,6 +883,201 @@ fn hot_swap_under_live_load_drops_no_connection_and_drains_in_flight() {
             assert_ne!(got, mlp_b.forward(&pixels[0], &model), "the old weights are gone");
         }
         other => panic!("hot model after swap: {other:?}"),
+    }
+    net.shutdown();
+    server.shutdown();
+}
+
+#[test]
+fn routed_trace_stitches_router_and_backend_spans_into_one_timeline() {
+    // The tracing acceptance bar: one explicitly traced request through
+    // the router leaves spans in two flight recorders — the router's
+    // (ingress, write_back) and the backend's (ingress → write_back) —
+    // and the two wire-dumped Chrome traces merge into one timeline
+    // keyed by the single wire-carried trace id, in pipeline order.
+    // Router sampling is *off*, so the spans also pin "a nonzero wire
+    // id is honored as-is, never reassigned".
+    let mlp = QuantMlp::random_digits(131);
+    let model = MultiplierModel::new(MultiplierKind::DncOpt);
+    let (server, _handle, net, pixels) = start_stack("net-trace", &mlp, |cfg| {
+        cfg.batcher.max_wait_us = 1_000;
+    });
+    let trace_cfg = TraceConfig { sample_every: 0, ..TraceConfig::default() };
+    let rcfg = router_cfg(vec![net.local_addr().to_string()], 20);
+    let router = RouterServer::bind_traced(&rcfg, &trace_cfg).unwrap();
+    assert!(router.backend_connected(0));
+
+    let client = NetClient::connect(router.local_addr()).unwrap();
+    let (mut tx, mut rx, _info) = client.split();
+    let trace_id: u64 = 0x00C0_FFEE;
+    tx.send_traced(ModelId::DEFAULT, &pixels[0], trace_id).unwrap();
+    match rx.recv().unwrap() {
+        Frame::Response { logits, trace, .. } => {
+            assert_eq!(logits.take(), mlp.forward(&pixels[0], &model));
+            assert_eq!(trace, trace_id, "the reply echoes the wire trace id");
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+
+    // both write_back spans land moments after the reply is forwarded —
+    // poll the wire dumps (`DumpTrace` on each tier) until they show
+    let want = format!("{trace_id:#018x}");
+    let t0 = Instant::now();
+    let spans = loop {
+        let rd = NetClient::connect(router.local_addr()).unwrap().dump_trace().unwrap();
+        let bd = NetClient::connect(net.local_addr()).unwrap().dump_trace().unwrap();
+        let merged = merge_trace_dumps(&[rd, bd]);
+        let mut spans: Vec<_> =
+            parse_trace_json(&merged).into_iter().filter(|e| e.trace == want).collect();
+        spans.sort_by_key(|e| e.ts);
+        if spans.iter().filter(|e| e.name == "write_back").count() == 2 {
+            break spans;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(5), "spans never landed: {spans:?}");
+        std::thread::sleep(Duration::from_millis(5));
+    };
+
+    // two recorders contributed to the one trace id (the in-process
+    // fleet shares a pid; Chrome tids keep the tiers apart)
+    let mut tids: Vec<u64> = spans.iter().map(|e| e.tid).collect();
+    tids.sort_unstable();
+    tids.dedup();
+    assert_eq!(tids.len(), 2, "router and backend recorders both contributed");
+    let backend_tid = spans.iter().find(|e| e.name == "gemm").expect("gemm span").tid;
+    let router_tid = *tids.iter().find(|t| **t != backend_tid).unwrap();
+
+    let ts_of = |tid: u64, name: &str| {
+        spans.iter().find(|e| e.tid == tid && e.name == name).map(|e| e.ts)
+    };
+    // the backend recorded the full pipeline, in order
+    let order = ["ingress", "admission", "queue_wait", "batch_form", "gemm", "write_back"];
+    let mut prev = 0u64;
+    for name in order {
+        let ts = ts_of(backend_tid, name)
+            .unwrap_or_else(|| panic!("backend span {name} missing: {spans:?}"));
+        assert!(ts >= prev, "backend {name} out of pipeline order");
+        prev = ts;
+    }
+    // the router's ingress opens the timeline and its write_back closes
+    // it, bracketing the backend's stages (coarse cross-recorder bounds:
+    // the 1 ms batching deadline dwarfs any wall-clock anchor skew)
+    let r_in = ts_of(router_tid, "ingress").expect("router ingress span");
+    let r_wb = ts_of(router_tid, "write_back").expect("router write_back span");
+    assert!(r_in <= ts_of(backend_tid, "gemm").unwrap(), "router ingress opens the timeline");
+    assert!(r_wb >= ts_of(backend_tid, "queue_wait").unwrap(), "router write_back closes it");
+
+    router.shutdown();
+    net.shutdown();
+    server.shutdown();
+}
+
+/// Normalize the two documented scrape-vs-snapshot divergences away:
+/// `throughput_rps` depends on the wall clock at snapshot time, and the
+/// buffer pool is process-wide (every other test in this binary churns
+/// it). Everything else must match exactly on a quiesced server.
+fn normalized(mut s: MetricsSnapshot) -> MetricsSnapshot {
+    s.throughput_rps = 0.0;
+    s.pool = PoolStats { hits: 0, misses: 0, recycled: 0 };
+    s
+}
+
+/// Poll until two consecutive normalized snapshots agree — the last
+/// write-back counters land moments after the last reply is received.
+fn quiesced_snapshot(handle: &ServerHandle) -> MetricsSnapshot {
+    let t0 = Instant::now();
+    loop {
+        let a = normalized(handle.metrics().snapshot());
+        std::thread::sleep(Duration::from_millis(2));
+        let b = normalized(handle.metrics().snapshot());
+        if a == b {
+            return b;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(5), "metrics never quiesced");
+    }
+}
+
+#[test]
+fn wire_stats_scrape_matches_in_process_snapshot_and_fans_out_via_router() {
+    // `GetStats` must return the same numbers the in-process snapshot
+    // shows once the server is quiesced (modulo the documented
+    // divergences `normalized` strips), and scraping a *router* must
+    // return its RouterSnapshot plus one fanned-out backend snapshot
+    // per reachable backend.
+    let mlp = QuantMlp::random_digits(137);
+    let (server, handle, net, pixels) = start_stack("net-scrape", &mlp, |cfg| {
+        cfg.batcher.max_wait_us = 1_000;
+    });
+    let mut client = NetClient::connect(net.local_addr()).unwrap();
+    for px in pixels.iter().take(5) {
+        assert!(matches!(client.infer(px).unwrap(), Frame::Response { .. }));
+    }
+    let local = quiesced_snapshot(&handle);
+    let payload = client.get_stats().unwrap();
+    assert!(payload.router.is_none(), "a plain server has no router tier");
+    assert!(payload.backends.is_empty(), "a plain server fans out to nobody");
+    let wire = normalized(payload.server.expect("server snapshot on the wire"));
+    assert_eq!(wire, local, "wire scrape equals the in-process snapshot");
+    assert_eq!(wire.requests, 5);
+    assert_eq!(wire.stage_count[0], 5, "ingress histogram: one sample per wire request");
+    assert!(wire.stage_p99_us[2] >= wire.stage_p50_us[2], "queue-wait percentiles ordered");
+
+    // the same scrape through a router: RouterSnapshot + backend fan-out
+    let router = RouterServer::bind(&router_cfg(vec![net.local_addr().to_string()], 20)).unwrap();
+    assert!(router.backend_connected(0));
+    let mut rclient = NetClient::connect(router.local_addr()).unwrap();
+    for px in pixels.iter().take(2) {
+        assert!(matches!(rclient.infer(px).unwrap(), Frame::Response { .. }));
+    }
+    let local = quiesced_snapshot(&handle);
+    let payload = rclient.get_stats().unwrap();
+    assert!(payload.server.is_none(), "a router has no server-side snapshot");
+    let rsnap = payload.router.expect("router snapshot on the wire");
+    assert_eq!(rsnap.routed_total(), 2);
+    assert_eq!(payload.backends.len(), 1, "fan-out reaches the one backend");
+    let (baddr, bsnap) = &payload.backends[0];
+    assert_eq!(baddr, &net.local_addr().to_string());
+    assert_eq!(normalized(bsnap.clone()), local, "fanned-out backend snapshot matches");
+    assert_eq!(bsnap.requests, 7, "5 direct + 2 routed requests");
+
+    router.shutdown();
+    net.shutdown();
+    server.shutdown();
+}
+
+#[test]
+fn v02_client_frames_are_served_unchanged_by_a_v03_server() {
+    // The minor bumped to 3 (trailing trace ids, stats/trace frames); a
+    // v0.2 client — strict decode, no trace field anywhere — must keep
+    // working against a new server completely unchanged.
+    let mlp = QuantMlp::random_digits(139);
+    let model = MultiplierModel::new(MultiplierKind::DncOpt);
+    let (server, _handle, net, pixels) = start_stack("net-v02", &mlp, |cfg| {
+        cfg.batcher.max_wait_us = 1_000;
+    });
+    let mut s = TcpStream::connect(net.local_addr()).unwrap();
+    // hand-rolled v0.2 Hello: the handshake predates the trace fields
+    s.write_all(&[MAGIC[0], MAGIC[1], 0x02, 0x05, 0, 0, 0, 0]).unwrap();
+    match read_frame(&mut s).unwrap() {
+        Some(Frame::Info { .. }) => {}
+        other => panic!("v0.2 Hello answered with {other:?}"),
+    }
+    // hand-rolled v0.2 Request: id + count + pixels — no model, no trace
+    let mut payload = Vec::new();
+    payload.extend_from_slice(&7u64.to_le_bytes());
+    payload.extend_from_slice(&(pixels[0].len() as u32).to_le_bytes());
+    for px in &pixels[0] {
+        payload.extend_from_slice(&px.to_le_bytes());
+    }
+    let mut frame = vec![MAGIC[0], MAGIC[1], 0x02, 0x01];
+    frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    frame.extend_from_slice(&payload);
+    s.write_all(&frame).unwrap();
+    match read_frame(&mut s).unwrap() {
+        Some(Frame::Response { id, logits, .. }) => {
+            assert_eq!(id, 7, "the v0.2-assigned id is echoed");
+            assert_eq!(logits.take(), mlp.forward(&pixels[0], &model), "bit-exact for v0.2");
+        }
+        other => panic!("v0.2 Request answered with {other:?}"),
     }
     net.shutdown();
     server.shutdown();
