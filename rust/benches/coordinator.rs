@@ -12,7 +12,7 @@ use luna_cim::coordinator::CoordinatorServer;
 use luna_cim::engine::{BackendSpec, ExecBackend};
 use luna_cim::multiplier::MultiplierKind;
 use luna_cim::net::{loadgen, NetServer, Scenario};
-use luna_cim::nn::{DigitsDataset, QuantMlp};
+use luna_cim::nn::{DigitsDataset, GemmOptions, QuantMlp};
 use luna_cim::runtime::ArtifactStore;
 use luna_cim::util::bench::{black_box, Bencher};
 use std::time::Duration;
@@ -45,10 +45,9 @@ fn main() {
     //    report-only gate adds nothing else)
     let mlp_d = QuantMlp::random_digits(2);
     let xs: Vec<f32> = (0..8 * 64).map(|i| (i % 16) as f32 / 16.0).collect();
-    let mut native =
-        BackendSpec::Native { mlp: mlp_d.clone(), kind: MultiplierKind::DncOpt, threads: 1 }
-            .build()
-            .expect("native backend");
+    let gemm = GemmOptions::default();
+    let spec = BackendSpec::Native { mlp: mlp_d.clone(), kind: MultiplierKind::DncOpt, gemm };
+    let mut native = spec.build().expect("native backend");
     b.run("schedule_replay native run_batch 64-32-10 b=8", 8.0, || {
         black_box(native.run_batch(&xs, 8, 64).unwrap().logits.len());
     });
@@ -59,7 +58,7 @@ fn main() {
         banks: 592,
         units_per_bank: 4,
         time_scale: 0.0,
-        threads: 1,
+        gemm: GemmOptions::default(),
     }
     .build()
     .expect("calibrated backend");

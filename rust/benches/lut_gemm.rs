@@ -1,23 +1,33 @@
 //! LUT-GEMM kernel shoot-out: per-sample scalar forward vs the batched
 //! flat-gather kernel vs the planned kernel (code-sorted weight plans +
-//! per-row LUT-strip expansion + scoped-thread batch tiling) — the
-//! speedups the native execution backend buys the serving stack
-//! (EXPERIMENTS.md §Perf; acceptance bars: batched ≥ 2× scalar at batch
-//! 8, planned beats flat-gather at batch ≥ 8 on the digits model).
+//! per-row LUT-strip expansion + a runtime-dispatched strip accumulator
+//! + persistent-pool batch tiling) — the speedups the native execution
+//! backend buys the serving stack (EXPERIMENTS.md §Perf; acceptance
+//! bars: batched ≥ 2× scalar at batch 8, planned beats flat-gather at
+//! batch ≥ 8 on the digits model, dispatched SIMD ≥ SWAR per layer).
 //!
 //! The flat-gather path pays a 2D table index `(w << 4) | x` and a
 //! random 256-entry gather per MAC; the planned path compiles weights
 //! once into 16-bucket column plans and expands the product table into
 //! an L1-resident strip once per input row, so each MAC is a sequential
-//! column read plus a strip add.
+//! column read plus a strip add — summed by whichever `StripKernel` the
+//! host's dispatch guards picked (AVX2 / NEON / SWAR / scalar, all
+//! bit-identical). Multi-thread cases cover both tiling modes: batch
+//! `rows` (throughput) and per-layer output spans (`outputs` — the
+//! batch-1 latency path).
 //!
 //! Flags (after `--`): `--quick` shrinks the measurement budget for CI
-//! smoke runs; `--save-json [PATH]` writes per-kernel MACs/s records to
-//! `BENCH_lut_gemm.json` (default) so the perf trajectory has data
-//! points — CI uploads it as a workflow artifact.
+//! smoke runs; `--save-json [PATH]` writes per-kernel MACs/s and
+//! µs/inference records to `BENCH_lut_gemm.json` (default), stamped
+//! with the dispatched SIMD variant and the host CPU-feature string, so
+//! the perf trajectory has data points — CI uploads it as a workflow
+//! artifact and asserts the dispatch landed on a non-scalar kernel.
 
 use luna_cim::multiplier::{MultiplierKind, MultiplierModel};
-use luna_cim::nn::{BatchScratch, LayerPlan, PlanScratch, QuantLinear, QuantMlp};
+use luna_cim::nn::{
+    host_cpu_features, BatchScratch, GemmOptions, GemmPartition, GemmSimd, LayerPlan, PlanScratch,
+    QuantLinear, QuantMlp, StripKernel, StripScratch,
+};
 use luna_cim::util::bench::{black_box, Bencher};
 use luna_cim::util::Rng;
 use std::fmt::Write as _;
@@ -29,6 +39,9 @@ struct Record {
     kernel: String,
     macs_per_s: f64,
     mean_ns: f64,
+    /// `mean_ns / batch / 1000` — at batch 1 this is the interactive
+    /// per-inference latency column the tiling modes compete on.
+    us_per_inf: f64,
 }
 
 /// Run every kernel on one model at one batch size; returns the
@@ -54,6 +67,7 @@ fn run_case(
             kernel,
             macs_per_s: r.throughput_per_sec(),
             mean_ns: r.mean_ns,
+            us_per_inf: r.mean_ns / batch.max(1) as f64 / 1000.0,
         });
     };
 
@@ -73,65 +87,97 @@ fn run_case(
     push("flat".to_string(), &flat);
 
     let mut planned_t1_ns = f64::MAX;
-    // Record by *effective* thread count (the kernel clamps to the batch
-    // row count; 0 resolves to the core count), and skip duplicates so
-    // the JSON never reports a fake multi-thread data point at batch 1.
-    let mut seen = Vec::new();
+    // One record per distinct (effective threads, tiling) pair: `rows`
+    // tiling clamps to the batch row count (0 resolves to the core
+    // count), and a single worker runs the full span under either mode,
+    // so duplicates are skipped — the JSON never reports a fake
+    // multi-thread data point.
+    let mut seen: Vec<String> = Vec::new();
     for &threads in gemm_threads {
-        let plan = mlp.plan(threads);
-        let effective = plan.threads().min(batch.max(1));
-        if seen.contains(&effective) {
-            continue;
+        for partition in [GemmPartition::Rows, GemmPartition::Outputs] {
+            let plan = mlp.plan_with(GemmOptions { threads, simd: GemmSimd::Auto, partition });
+            let effective = match partition {
+                GemmPartition::Rows => plan.threads().min(batch.max(1)),
+                _ => plan.threads(),
+            };
+            let kernel = if effective == 1 {
+                "planned-t1".to_string()
+            } else {
+                format!("planned-t{effective}-{}", partition.slug())
+            };
+            if seen.contains(&kernel) {
+                continue;
+            }
+            seen.push(kernel.clone());
+            let mut pscratch = PlanScratch::default();
+            let r = b.run(&format!("{model_name} {kernel} GEMM x{batch}"), macs, || {
+                black_box(plan.forward_batch_with(&xs, batch, &model, &mut pscratch));
+            });
+            if effective == 1 {
+                planned_t1_ns = r.mean_ns;
+            }
+            push(kernel, &r);
         }
-        seen.push(effective);
-        let mut pscratch = PlanScratch::default();
-        let r = b.run(&format!("{model_name} planned GEMM x{batch} t{effective}"), macs, || {
-            black_box(plan.forward_batch_with(&xs, batch, &model, &mut pscratch));
-        });
-        if effective == 1 {
-            planned_t1_ns = r.mean_ns;
-        }
-        push(format!("planned-t{effective}"), &r);
     }
     flat.mean_ns / planned_t1_ns.max(1e-9)
 }
 
-/// Race the SWAR strip accumulator against the retained scalar path on
-/// one layer (the per-layer view of the packed-lane win; both are
-/// bit-identical — `tests/gemm_plan.rs` pins that).
-fn run_swar_case(
+/// Race the strip accumulators on one layer: the retained scalar
+/// reference vs the portable SWAR kernel vs the host's dispatched SIMD
+/// kernel (when the dispatch resolves past SWAR). All are bit-identical
+/// — `tests/gemm_plan.rs` pins that; this quantifies the win per layer.
+/// Returns the SWAR-vs-scalar speedup plus the SIMD-vs-SWAR speedup if
+/// a SIMD kernel dispatched.
+fn run_strip_case(
     b: &Bencher,
     model_name: &'static str,
     layer: &QuantLinear,
     rows: usize,
     rng: &mut Rng,
     records: &mut Vec<Record>,
-) -> f64 {
+) -> (f64, Option<f64>) {
     let model = MultiplierModel::new(MultiplierKind::DncOpt);
     let plan = LayerPlan::compile(layer);
-    assert!(plan.uses_strip(), "SWAR case needs a strip-path layer");
+    assert!(plan.uses_strip(), "strip race needs a strip-path layer");
     let in_dim = layer.in_dim;
     let macs = (layer.macs() * rows as u64) as f64;
     let xq: Vec<u8> = (0..rows * in_dim).map(|_| rng.gen_range_u64(0, 16) as u8).collect();
-    let (mut strip, mut out) = (Vec::new(), Vec::new());
+    let mut scratch = StripScratch::default();
+    let mut out = Vec::new();
     let swar = b.run(&format!("{model_name} strip SWAR x{rows}"), macs, || {
-        plan.gemm_rows_into(&xq, rows, &model, &mut strip, &mut out);
+        plan.gemm_rows_into(&xq, rows, &model, &mut scratch, &mut out);
         black_box(out.len());
     });
     let scalar = b.run(&format!("{model_name} strip scalar x{rows}"), macs, || {
-        plan.gemm_rows_into_scalar(&xq, rows, &model, &mut strip, &mut out);
+        plan.gemm_rows_into_scalar(&xq, rows, &model, &mut scratch, &mut out);
         black_box(out.len());
     });
-    for (kernel, r) in [("strip-swar", &swar), ("strip-scalar", &scalar)] {
+    let dispatched = GemmSimd::Auto.resolve();
+    let simd = (dispatched != StripKernel::Swar).then(|| {
+        b.run(&format!("{model_name} strip {} x{rows}", dispatched.slug()), macs, || {
+            plan.gemm_rows_into_kernel(&xq, rows, &model, &mut scratch, &mut out, dispatched);
+            black_box(out.len());
+        })
+    });
+    let mut push = |kernel: String, r: &luna_cim::util::bench::BenchResult| {
         records.push(Record {
             model: model_name,
             batch: rows,
-            kernel: kernel.to_string(),
+            kernel,
             macs_per_s: r.throughput_per_sec(),
             mean_ns: r.mean_ns,
+            us_per_inf: r.mean_ns / rows.max(1) as f64 / 1000.0,
         });
+    };
+    push("strip-swar".to_string(), &swar);
+    push("strip-scalar".to_string(), &scalar);
+    if let Some(r) = &simd {
+        push(format!("strip-{}", dispatched.slug()), r);
     }
-    scalar.mean_ns / swar.mean_ns.max(1e-9)
+    (
+        scalar.mean_ns / swar.mean_ns.max(1e-9),
+        simd.as_ref().map(|r| swar.mean_ns / r.mean_ns.max(1e-9)),
+    )
 }
 
 fn main() {
@@ -146,6 +192,9 @@ fn main() {
     let b = if quick { Bencher::quick() } else { Bencher::default() };
     let mut rng = Rng::seed_from_u64(12);
     let mut records = Vec::new();
+    let dispatched = GemmSimd::Auto.resolve();
+    let cpu = host_cpu_features();
+    println!("strip kernel dispatch: {} (host: {cpu})", dispatched.slug());
 
     // The serving-shaped digits classifier (64 → 32 → 10).
     let digits = QuantMlp::random_digits(5);
@@ -168,21 +217,30 @@ fn main() {
         let bias: Vec<f32> = (0..256).map(|_| rng.gen_range_f32(-0.1, 0.1)).collect();
         QuantMlp::new(vec![QuantLinear::from_float(&w, bias, 1.0, false)])
     };
-    for batch in [8usize, 64] {
+    // Batch 1 included on purpose: `rows` tiling degenerates to t1 there
+    // while `outputs` spans still fan out — the latency-shape contrast
+    // the `gemm.partition` knob exists for.
+    for batch in [1usize, 8, 64] {
         let s =
             run_case(&b, "wide-256x256", &wide, batch, false, &mut rng, &mut records, &[1, 2, 0]);
         println!("  -> wide batch {batch}: planned t1 is {s:.2}x the flat-gather kernel");
     }
 
-    // Per-layer SWAR vs scalar strip accumulate (the packed 4×i16 lanes
-    // inside the planned kernel): the two strip-path layer shapes of the
-    // suite, at a serving row count.
+    // Per-layer strip-accumulator race (scalar reference vs packed SWAR
+    // lanes vs the dispatched SIMD kernel): the two strip-path layer
+    // shapes of the suite, at a serving row count.
     let digits_hidden = &digits.layers[0]; // 64 → 32, strip path
-    let s = run_swar_case(&b, "layer-64x32", digits_hidden, 8, &mut rng, &mut records);
+    let (s, simd) = run_strip_case(&b, "layer-64x32", digits_hidden, 8, &mut rng, &mut records);
     println!("  -> layer 64x32: SWAR strip accumulate is {s:.2}x the scalar strip");
+    if let Some(s) = simd {
+        println!("  -> layer 64x32: {} strip is {s:.2}x the SWAR strip", dispatched.slug());
+    }
     let wide_layer = &wide.layers[0]; // 256 → 256
-    let s = run_swar_case(&b, "layer-256x256", wide_layer, 8, &mut rng, &mut records);
+    let (s, simd) = run_strip_case(&b, "layer-256x256", wide_layer, 8, &mut rng, &mut records);
     println!("  -> layer 256x256: SWAR strip accumulate is {s:.2}x the scalar strip");
+    if let Some(s) = simd {
+        println!("  -> layer 256x256: {} strip is {s:.2}x the SWAR strip", dispatched.slug());
+    }
 
     println!(
         "planned/flat speedup at digits batch 8: {planned_speedup_at_8:.2}x \
@@ -190,22 +248,27 @@ fn main() {
     );
 
     if let Some(path) = save_json {
-        let json = render_json(&records);
+        let json = render_json(&records, dispatched.slug(), &cpu);
         std::fs::write(&path, json).expect("write bench json");
         println!("wrote {} records to {path}", records.len());
     }
 }
 
-/// Hand-rolled JSON (no serde in this offline image): one record per
-/// (model, batch, kernel) with MACs/s and mean ns/iter.
-fn render_json(records: &[Record]) -> String {
-    let mut out = String::from("{\n  \"bench\": \"lut_gemm\",\n  \"cases\": [\n");
+/// Hand-rolled JSON (no serde in this offline image): a header naming
+/// the dispatched SIMD variant and the host CPU-feature string, then
+/// one record per (model, batch, kernel) with MACs/s, mean ns/iter and
+/// µs per inference.
+fn render_json(records: &[Record], simd: &str, cpu: &str) -> String {
+    let mut out = String::from("{\n  \"bench\": \"lut_gemm\",\n");
+    let _ = writeln!(out, "  \"simd\": \"{simd}\",");
+    let _ = writeln!(out, "  \"cpu\": \"{cpu}\",");
+    out.push_str("  \"cases\": [\n");
     for (i, r) in records.iter().enumerate() {
         let _ = write!(
             out,
             "    {{\"model\": \"{}\", \"batch\": {}, \"kernel\": \"{}\", \
-             \"macs_per_s\": {:.1}, \"mean_ns\": {:.1}}}",
-            r.model, r.batch, r.kernel, r.macs_per_s, r.mean_ns
+             \"macs_per_s\": {:.1}, \"mean_ns\": {:.1}, \"us_per_inf\": {:.3}}}",
+            r.model, r.batch, r.kernel, r.macs_per_s, r.mean_ns, r.us_per_inf
         );
         out.push_str(if i + 1 < records.len() { ",\n" } else { "\n" });
     }

@@ -6,6 +6,7 @@
 //! are rejected to catch typos.
 
 use crate::multiplier::MultiplierKind;
+use crate::nn::{GemmOptions, GemmPartition, GemmSimd};
 use crate::util::kv::KvMap;
 use crate::Result;
 use anyhow::{bail, Context};
@@ -292,13 +293,32 @@ pub struct BankConfig {
 /// Planned LUT-GEMM kernel knobs (`backend native` / `calibrated`).
 #[derive(Debug, Clone, PartialEq)]
 pub struct GemmConfig {
-    /// In-batch GEMM threads **per worker**: batch rows are tiled across
-    /// this many scoped threads inside each worker's planned kernel.
-    /// `0` = one per available core; `1` (default) keeps the kernel
-    /// single-threaded — worker threads already scale across batches, so
-    /// widen this only for large batches / wide layers (or when
-    /// `workers.count` is small). Ignored by `backend pjrt`.
+    /// In-batch GEMM threads **per worker**: each worker's planned
+    /// kernel fans a batch out across this many persistent pool threads
+    /// (spawned once, parked between batches). `0` = one per available
+    /// core; `1` (default) keeps the kernel single-threaded — worker
+    /// threads already scale across batches, so widen this only for
+    /// large batches / wide layers (or when `workers.count` is small).
+    /// Ignored by `backend pjrt`.
     pub threads: usize,
+    /// Strip-kernel choice (`auto` | `avx2` | `neon` | `swar` |
+    /// `scalar`), resolved against the host's runtime dispatch guards
+    /// at plan-compile time. Every choice is bit-identical; forcing an
+    /// unavailable SIMD kernel falls back to `swar`. Default `auto`.
+    pub simd: GemmSimd,
+    /// How a multi-threaded plan splits a batch (`auto` | `rows` |
+    /// `outputs`): contiguous batch rows for throughput shapes, per-
+    /// layer output spans for small-batch latency. `auto` (default)
+    /// picks rows when `batch >= gemm.threads`, outputs otherwise.
+    pub partition: GemmPartition,
+}
+
+impl GemmConfig {
+    /// Bundle the `gemm.*` knobs into what [`crate::nn::MlpPlan`]
+    /// compiles against.
+    pub fn options(&self) -> GemmOptions {
+        GemmOptions { threads: self.threads, simd: self.simd, partition: self.partition }
+    }
 }
 
 /// Wire-protocol front-end knobs (see [`crate::net`]).
@@ -387,7 +407,7 @@ impl Default for LoadgenConfig {
 
 impl Default for GemmConfig {
     fn default() -> Self {
-        GemmConfig { threads: 1 }
+        GemmConfig { threads: 1, simd: GemmSimd::Auto, partition: GemmPartition::Auto }
     }
 }
 
@@ -430,6 +450,8 @@ const KNOWN_KEYS: &[&str] = &[
     "banks.units_per_bank",
     "timing.time_scale",
     "gemm.threads",
+    "gemm.simd",
+    "gemm.partition",
     "net.listen",
     "net.max_connections",
     "loadgen.connections",
@@ -500,6 +522,12 @@ impl Config {
         }
         if m.get_opt("gemm.threads").is_some() {
             cfg.gemm.threads = m.get_usize("gemm.threads")?;
+        }
+        if let Some(v) = m.get_opt("gemm.simd") {
+            cfg.gemm.simd = GemmSimd::from_arg(v)?;
+        }
+        if let Some(v) = m.get_opt("gemm.partition") {
+            cfg.gemm.partition = GemmPartition::from_arg(v)?;
         }
         if let Some(v) = m.get_opt("net.listen") {
             cfg.net.listen = v.to_string();
@@ -594,6 +622,8 @@ impl Config {
         m.set("banks.units_per_bank", self.banks.units_per_bank);
         m.set("timing.time_scale", self.timing.time_scale);
         m.set("gemm.threads", self.gemm.threads);
+        m.set("gemm.simd", self.gemm.simd.slug());
+        m.set("gemm.partition", self.gemm.partition.slug());
         // the kv format has no empty values; empty listen = disabled,
         // so the key is simply absent (the parser defaults it back)
         if !self.net.listen.is_empty() {
@@ -794,6 +824,26 @@ mod tests {
         assert_eq!(Config::default().gemm.threads, 1);
         assert!(Config::from_text("gemm.threads 100000\n").is_err());
         assert!(Config::from_text("gemm.threads nope\n").is_err());
+    }
+
+    #[test]
+    fn gemm_simd_and_partition_parse_roundtrip_and_validate() {
+        let cfg = Config::from_text("gemm.simd swar\ngemm.partition outputs\n").unwrap();
+        assert_eq!(cfg.gemm.simd, GemmSimd::Swar);
+        assert_eq!(cfg.gemm.partition, GemmPartition::Outputs);
+        let back = Config::from_text(&cfg.to_text()).unwrap();
+        assert_eq!(back, cfg);
+        // slugs are case-insensitive, defaults are auto/auto
+        assert_eq!(Config::from_text("gemm.simd AVX2\n").unwrap().gemm.simd, GemmSimd::Avx2);
+        assert_eq!(Config::default().gemm.simd, GemmSimd::Auto);
+        assert_eq!(Config::default().gemm.partition, GemmPartition::Auto);
+        assert!(Config::from_text("gemm.simd sse9\n").is_err());
+        assert!(Config::from_text("gemm.partition cols\n").is_err());
+        // the bundled options mirror the section
+        let opts = cfg.gemm.options();
+        assert_eq!(opts.threads, cfg.gemm.threads);
+        assert_eq!(opts.simd, GemmSimd::Swar);
+        assert_eq!(opts.partition, GemmPartition::Outputs);
     }
 
     #[test]

@@ -120,14 +120,14 @@ mod tests {
     use super::*;
     use crate::engine::BackendSpec;
     use crate::multiplier::{MultiplierKind, MultiplierModel};
-    use crate::nn::QuantMlp;
+    use crate::nn::{GemmOptions, QuantMlp};
 
     #[test]
     fn round_robin_spreads_work() {
         let mlp = QuantMlp::random_for_study(13);
         let model = MultiplierModel::new(MultiplierKind::Ideal);
-        let spec =
-            BackendSpec::Native { mlp: mlp.clone(), kind: MultiplierKind::Ideal, threads: 1 };
+        let gemm = GemmOptions::default();
+        let spec = BackendSpec::Native { mlp: mlp.clone(), kind: MultiplierKind::Ideal, gemm };
         let router = Router::new(WorkerPool::spawn(2, spec).unwrap());
         let mut hit = [false; 2];
         for i in 0..6 {

@@ -67,7 +67,7 @@ use super::worker::{BatchJob, ReplyTicket, ReplyTo, WorkerPool, WorkerReply};
 use crate::config::{BackendKind, BatcherConfig, Config, ShardAffinity};
 use crate::engine::{BackendSpec, ModelEntry, PlanCache};
 use crate::net::protocol::{Frame, ModelId, WireCost};
-use crate::nn::QuantMlp;
+use crate::nn::{GemmOptions, QuantMlp};
 use crate::runtime::ArtifactStore;
 use crate::util::trace::{FlightRecorder, Stage};
 use crate::util::{oneshot, queue, PooledVec};
@@ -351,8 +351,8 @@ struct Shared {
     plan_cache: Arc<PlanCache>,
     /// Lane construction recipe (new model lanes appear at runtime).
     batcher_cfg: BatcherConfig,
-    /// `gemm.threads`, forwarded into every lazy plan compile.
-    gemm_threads: usize,
+    /// The `gemm.*` knob set, forwarded into every lazy plan compile.
+    gemm: GemmOptions,
     /// Shard-selection rule (`batcher.affinity`; see the module docs).
     affinity: ShardAffinity,
     in_dim: usize,
@@ -403,7 +403,7 @@ impl Shared {
             self.out_dim
         );
         let mlp = store.load_mlp().with_context(|| format!("model {model}: loading weights"))?;
-        Ok(ModelEntry::compile(model, mlp, self.gemm_threads))
+        Ok(ModelEntry::compile(model, mlp, self.gemm))
     }
 }
 
@@ -462,7 +462,7 @@ impl CoordinatorServer {
             BackendKind::Native => BackendSpec::Native {
                 mlp: mlp.clone(),
                 kind: cfg.multiplier,
-                threads: cfg.gemm.threads,
+                gemm: cfg.gemm.options(),
             },
             BackendKind::Calibrated => BackendSpec::Calibrated {
                 mlp: mlp.clone(),
@@ -471,7 +471,7 @@ impl CoordinatorServer {
                 banks: cfg.banks.count,
                 units_per_bank: cfg.banks.units_per_bank,
                 time_scale: cfg.timing.time_scale,
-                threads: cfg.gemm.threads,
+                gemm: cfg.gemm.options(),
             },
             BackendKind::Pjrt => BackendSpec::Pjrt { hlo: store.mlp_hlo(cfg.multiplier) },
         };
@@ -514,7 +514,7 @@ impl CoordinatorServer {
         // compile N private copies. (PJRT owns its executable; its
         // workers build from the spec.)
         let default_entry = plan_cache.get_or_compile(ModelId::DEFAULT, || {
-            Ok(ModelEntry::compile(ModelId::DEFAULT, mlp, cfg.gemm.threads))
+            Ok(ModelEntry::compile(ModelId::DEFAULT, mlp, cfg.gemm.options()))
         })?;
         let seed = match cfg.backend {
             BackendKind::Pjrt => None,
@@ -545,7 +545,7 @@ impl CoordinatorServer {
             registry: RwLock::new(registry),
             plan_cache,
             batcher_cfg: cfg.batcher.clone(),
-            gemm_threads: cfg.gemm.threads,
+            gemm: cfg.gemm.options(),
             affinity: cfg.batcher.affinity,
             in_dim,
             out_dim,

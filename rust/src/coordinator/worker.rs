@@ -296,7 +296,7 @@ fn worker_main(
 mod tests {
     use super::*;
     use crate::multiplier::{MultiplierKind, MultiplierModel};
-    use crate::nn::QuantMlp;
+    use crate::nn::{GemmOptions, QuantMlp};
 
     fn job(
         inputs: Vec<f32>,
@@ -309,7 +309,8 @@ mod tests {
 
     fn native_spec() -> (BackendSpec, QuantMlp) {
         let mlp = QuantMlp::random_for_study(11);
-        (BackendSpec::Native { mlp: mlp.clone(), kind: MultiplierKind::DncOpt, threads: 1 }, mlp)
+        let gemm = GemmOptions::default();
+        (BackendSpec::Native { mlp: mlp.clone(), kind: MultiplierKind::DncOpt, gemm }, mlp)
     }
 
     #[test]
@@ -381,7 +382,7 @@ mod tests {
             banks: 288,
             units_per_bank: 1,
             time_scale: 0.0,
-            threads: 1,
+            gemm: GemmOptions::default(),
         };
         let pool = WorkerPool::spawn(1, spec).unwrap();
         let mut costs = Vec::new();
@@ -403,7 +404,7 @@ mod tests {
         let entry = Arc::new(ModelEntry::compile(
             ModelId::new("other").unwrap(),
             other_mlp.clone(),
-            1,
+            GemmOptions::default(),
         ));
         let model = MultiplierModel::new(MultiplierKind::DncOpt);
         let pool = WorkerPool::spawn(1, spec).unwrap();

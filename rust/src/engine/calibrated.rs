@@ -25,7 +25,7 @@
 use super::{BatchOutput, ExecBackend, NativeBackend};
 use crate::coordinator::tiler::{ScheduleCost, Tiler};
 use crate::multiplier::MultiplierKind;
-use crate::nn::QuantMlp;
+use crate::nn::{GemmOptions, QuantMlp};
 use crate::Result;
 use std::time::Duration;
 
@@ -42,17 +42,17 @@ impl CalibratedBackend {
     /// `tiler` carries the (process-shared) [`crate::coordinator::tiler::UnitCosts`]
     /// calibration and this worker's fabric state; `kind` is the *numeric*
     /// multiplier the GEMM computes with (pricing uses the tiler's costs,
-    /// which may substitute — see [`Tiler::pricing_kind`]); `threads` is
-    /// the planned-GEMM thread cap forwarded to the wrapped
-    /// [`NativeBackend`] (`0` = one per available core).
+    /// which may substitute — see [`Tiler::pricing_kind`]); `gemm` is the
+    /// planned-GEMM knob set (thread cap, strip kernel, tiling mode)
+    /// forwarded to the wrapped [`NativeBackend`].
     pub fn new(
         mlp: QuantMlp,
         kind: MultiplierKind,
         tiler: Tiler,
         time_scale: f64,
-        threads: usize,
+        gemm: GemmOptions,
     ) -> Self {
-        Self::from_inner(NativeBackend::with_threads(mlp, kind, threads), tiler, time_scale)
+        Self::from_inner(NativeBackend::with_options(mlp, kind, gemm), tiler, time_scale)
     }
 
     /// [`CalibratedBackend::new`] over an already-compiled shared plan —
@@ -124,8 +124,13 @@ mod tests {
     #[test]
     fn report_only_is_bit_exact_and_priced() {
         let mlp = QuantMlp::random_for_study(41);
-        let mut cal =
-            CalibratedBackend::new(mlp.clone(), MultiplierKind::Approx, study_tiler(32), 0.0, 2);
+        let mut cal = CalibratedBackend::new(
+            mlp.clone(),
+            MultiplierKind::Approx,
+            study_tiler(32),
+            0.0,
+            GemmOptions::with_threads(2),
+        );
         let mut native = NativeBackend::new(mlp.clone(), MultiplierKind::Approx);
         let xs = vec![0.4f32; 3 * 16];
         let got = cal.run_batch(&xs, 3, 16).unwrap();
@@ -139,8 +144,13 @@ mod tests {
     #[test]
     fn fabric_state_persists_across_batches() {
         let mlp = QuantMlp::random_for_study(42);
-        let mut cal =
-            CalibratedBackend::new(mlp, MultiplierKind::DncOpt, study_tiler(STUDY_ELEMS), 0.0, 1);
+        let mut cal = CalibratedBackend::new(
+            mlp,
+            MultiplierKind::DncOpt,
+            study_tiler(STUDY_ELEMS),
+            0.0,
+            GemmOptions::default(),
+        );
         let xs = vec![0.2f32; 2 * 16];
         let first = cal.run_batch(&xs, 2, 16).unwrap().cost.unwrap();
         let second = cal.run_batch(&xs, 2, 16).unwrap().cost.unwrap();
@@ -158,8 +168,13 @@ mod tests {
         assert!(probe_ps > 0);
         // pick the scale so the gate sleeps ~2 ms wall-clock
         let scale = 2_000_000.0 * 1000.0 / probe_ps as f64;
-        let mut cal =
-            CalibratedBackend::new(mlp, MultiplierKind::DncOpt, study_tiler(64), scale, 1);
+        let mut cal = CalibratedBackend::new(
+            mlp,
+            MultiplierKind::DncOpt,
+            study_tiler(64),
+            scale,
+            GemmOptions::default(),
+        );
         let xs = vec![0.3f32; 2 * 16];
         let t0 = Instant::now();
         let out = cal.run_batch(&xs, 2, 16).unwrap();
@@ -176,7 +191,13 @@ mod tests {
     #[test]
     fn report_only_gate_is_zero() {
         let mlp = QuantMlp::random_for_study(44);
-        let cal = CalibratedBackend::new(mlp, MultiplierKind::DncOpt, study_tiler(16), 0.0, 1);
+        let cal = CalibratedBackend::new(
+            mlp,
+            MultiplierKind::DncOpt,
+            study_tiler(16),
+            0.0,
+            GemmOptions::default(),
+        );
         let cost = ScheduleCost { latency_ps: u64::MAX, ..Default::default() };
         assert_eq!(cal.gate_duration(&cost), Duration::ZERO);
     }

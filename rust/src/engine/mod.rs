@@ -6,8 +6,9 @@
 //!
 //! * [`NativeBackend`] — the in-process **planned** LUT-GEMM over the
 //!   quantized functional model (weights compiled once into code-sorted
-//!   column buckets, one LUT-strip expansion per input row, optional
-//!   in-batch threading via `gemm.threads` — see [`crate::nn::MlpPlan`]).
+//!   column buckets, one LUT-strip expansion per input row summed by a
+//!   runtime-dispatched kernel, optional in-batch tiling via the
+//!   `gemm.*` knobs — see [`crate::nn::MlpPlan`]).
 //!   Zero external dependencies: the whole request path is pure Rust, so
 //!   `backend native` (the default) serves traffic without
 //!   `make artifacts`' HLO outputs or the `xla` crate.
@@ -42,7 +43,7 @@ pub use pjrt::PjrtBackend;
 
 use crate::coordinator::tiler::{ScheduleCost, Tiler, UnitCosts};
 use crate::multiplier::MultiplierKind;
-use crate::nn::{MlpPlan, QuantMlp};
+use crate::nn::{GemmOptions, MlpPlan, QuantMlp};
 use crate::util::PooledVec;
 use crate::Result;
 use std::path::PathBuf;
@@ -89,14 +90,15 @@ pub trait ExecBackend {
 
 /// Cloneable recipe a worker thread uses to build its own backend.
 ///
-/// `threads` on the native/calibrated variants is the per-worker planned
-/// LUT-GEMM thread cap (`gemm.threads` in config: `0` = one per
-/// available core, `1` = the default single-threaded kernel — worker
-/// threads already scale across batches, so in-batch fan-out is opt-in).
+/// `gemm` on the native/calibrated variants is the per-worker planned
+/// LUT-GEMM knob set (the `gemm.*` config section): thread cap
+/// (`0` = one per available core, `1` = the default single-threaded
+/// kernel — worker threads already scale across batches, so in-batch
+/// fan-out is opt-in), strip-kernel choice and batch-tiling mode.
 #[derive(Debug, Clone)]
 pub enum BackendSpec {
     /// In-process planned LUT-GEMM over the quantized model.
-    Native { mlp: QuantMlp, kind: MultiplierKind, threads: usize },
+    Native { mlp: QuantMlp, kind: MultiplierKind, gemm: GemmOptions },
     /// Native execution + per-worker `Tiler` schedule replay. `costs` is
     /// the process-shared calibration (measure once, clone everywhere);
     /// `time_scale` maps simulated picoseconds to wall-clock (0 =
@@ -108,7 +110,7 @@ pub enum BackendSpec {
         banks: usize,
         units_per_bank: usize,
         time_scale: f64,
-        threads: usize,
+        gemm: GemmOptions,
     },
     /// PJRT execution of the HLO-text artifact at `hlo` (feature `pjrt`).
     Pjrt { hlo: PathBuf },
@@ -118,8 +120,8 @@ impl BackendSpec {
     /// Construct the backend on the calling thread.
     pub fn build(&self) -> Result<Box<dyn ExecBackend>> {
         match self {
-            BackendSpec::Native { mlp, kind, threads } => {
-                Ok(Box::new(NativeBackend::with_threads(mlp.clone(), *kind, *threads)))
+            BackendSpec::Native { mlp, kind, gemm } => {
+                Ok(Box::new(NativeBackend::with_options(mlp.clone(), *kind, *gemm)))
             }
             BackendSpec::Calibrated {
                 mlp,
@@ -128,16 +130,10 @@ impl BackendSpec {
                 banks,
                 units_per_bank,
                 time_scale,
-                threads,
+                gemm,
             } => {
                 let tiler = Tiler::new(*banks, *units_per_bank, *costs);
-                Ok(Box::new(CalibratedBackend::new(
-                    mlp.clone(),
-                    *kind,
-                    tiler,
-                    *time_scale,
-                    *threads,
-                )))
+                Ok(Box::new(CalibratedBackend::new(mlp.clone(), *kind, tiler, *time_scale, *gemm)))
             }
             #[cfg(feature = "pjrt")]
             BackendSpec::Pjrt { hlo } => Ok(Box::new(PjrtBackend::load(hlo)?)),
@@ -191,8 +187,8 @@ mod tests {
     fn native_spec_builds_and_matches_functional_model() {
         let mlp = QuantMlp::random_for_study(21);
         for threads in [1usize, 2, 0] {
-            let spec =
-                BackendSpec::Native { mlp: mlp.clone(), kind: MultiplierKind::DncOpt, threads };
+            let gemm = GemmOptions::with_threads(threads);
+            let spec = BackendSpec::Native { mlp: mlp.clone(), kind: MultiplierKind::DncOpt, gemm };
             let mut backend = spec.build().unwrap();
             assert_eq!(backend.name(), "native");
             let xs = vec![0.25f32; 2 * 16];
@@ -216,7 +212,7 @@ mod tests {
             banks: 16,
             units_per_bank: 4,
             time_scale: 0.0,
-            threads: 2,
+            gemm: GemmOptions::with_threads(2),
         };
         let mut backend = spec.build().unwrap();
         assert_eq!(backend.name(), "calibrated");
@@ -225,7 +221,8 @@ mod tests {
         let cost = out.cost.expect("calibrated backend prices every batch");
         assert!(cost.programs > 0 && cost.energy_fj > 0.0 && cost.latency_ps > 0);
         // bit-exact with the plain native backend, threaded or not
-        let mut nb = BackendSpec::Native { mlp, kind: MultiplierKind::DncOpt, threads: 1 }
+        let gemm = GemmOptions::default();
+        let mut nb = BackendSpec::Native { mlp, kind: MultiplierKind::DncOpt, gemm }
             .build()
             .unwrap();
         let native = nb.run_batch(&xs, 2, 16).unwrap();

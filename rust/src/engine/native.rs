@@ -6,14 +6,16 @@
 //! 16-bucket column plans; at run time each input row expands the
 //! 256-entry product table into an L1-resident per-code LUT strip
 //! **once**, so the hot loop is sequential column reads and strip adds —
-//! no per-MAC `(w << 4) | x` index arithmetic. Batch rows optionally tile
-//! across scoped threads (`gemm.threads`). Bit-exact with the per-sample
-//! forward for every [`MultiplierKind`] and every thread count
-//! (`tests/gemm_plan.rs`).
+//! no per-MAC `(w << 4) | x` index arithmetic. Strips are summed by a
+//! runtime-dispatched kernel (`gemm.simd`: AVX2/NEON/SWAR/scalar) and
+//! batches optionally tile across a persistent worker pool by rows or
+//! output spans (`gemm.threads` / `gemm.partition`). Bit-exact with the
+//! per-sample forward for every [`MultiplierKind`], kernel, tiling mode
+//! and thread count (`tests/gemm_plan.rs`).
 
 use super::{BatchOutput, ExecBackend};
 use crate::multiplier::{MultiplierKind, MultiplierModel};
-use crate::nn::{MlpPlan, PlanScratch, QuantMlp};
+use crate::nn::{GemmOptions, MlpPlan, PlanScratch, QuantMlp};
 use crate::util::PooledVec;
 use crate::Result;
 use anyhow::ensure;
@@ -43,10 +45,17 @@ impl NativeBackend {
     }
 
     /// Planned kernel with up to `threads` GEMM threads per batch
-    /// (`0` = one per available core). Compiles the plan on the calling
-    /// thread; cached-plan callers use [`NativeBackend::from_shared`].
+    /// (`0` = one per available core), kernel and tiling on `auto`.
     pub fn with_threads(mlp: QuantMlp, kind: MultiplierKind, threads: usize) -> Self {
-        let plan = Arc::new(mlp.plan(threads));
+        Self::with_options(mlp, kind, GemmOptions::with_threads(threads))
+    }
+
+    /// Planned kernel with the full `gemm.*` knob set (thread cap,
+    /// forced strip kernel, tiling mode). Compiles the plan on the
+    /// calling thread; cached-plan callers use
+    /// [`NativeBackend::from_shared`].
+    pub fn with_options(mlp: QuantMlp, kind: MultiplierKind, opts: GemmOptions) -> Self {
+        let plan = Arc::new(mlp.plan_with(opts));
         Self::from_shared(Arc::new(mlp), plan, kind)
     }
 
@@ -161,6 +170,24 @@ mod tests {
                     &want[..],
                     "round {round} row {b}"
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn forced_kernel_and_tiling_stay_bit_exact() {
+        use crate::nn::{GemmPartition, GemmSimd};
+        let mlp = QuantMlp::random_digits(4);
+        let model = MultiplierModel::new(MultiplierKind::DncOpt);
+        let xs = vec![0.3f32; 64];
+        let want = mlp.forward(&xs, &model);
+        for simd in GemmSimd::ALL {
+            for partition in GemmPartition::ALL {
+                let opts = GemmOptions { threads: 2, simd, partition };
+                let mut backend =
+                    NativeBackend::with_options(mlp.clone(), MultiplierKind::DncOpt, opts);
+                let out = backend.run_batch(&xs, 1, 64).unwrap();
+                assert_eq!(&out.logits[..], &want[..], "{simd:?} {partition:?}");
             }
         }
     }

@@ -34,7 +34,7 @@
 
 use crate::coordinator::metrics::PlanCacheCounters;
 use crate::net::protocol::ModelId;
-use crate::nn::{MlpPlan, QuantMlp};
+use crate::nn::{GemmOptions, MlpPlan, QuantMlp};
 use crate::Result;
 use std::collections::HashMap;
 use std::sync::{Arc, Condvar, Mutex};
@@ -55,10 +55,11 @@ pub struct ModelEntry {
 
 impl ModelEntry {
     /// Compile `mlp` into an entry (this is the expensive call the
-    /// cache exists to amortize). `threads` follows the `gemm.threads`
-    /// convention.
-    pub fn compile(model: ModelId, mlp: QuantMlp, threads: usize) -> Self {
-        let plan = mlp.plan(threads);
+    /// cache exists to amortize). `gemm` is the full `gemm.*` knob set
+    /// (thread cap, strip kernel, tiling mode) the plan compiles
+    /// against.
+    pub fn compile(model: ModelId, mlp: QuantMlp, gemm: GemmOptions) -> Self {
+        let plan = mlp.plan_with(gemm);
         let bytes = mlp.heap_bytes() + plan.heap_bytes();
         ModelEntry { model, mlp: Arc::new(mlp), plan: Arc::new(plan), bytes }
     }
@@ -288,7 +289,7 @@ mod tests {
     }
 
     fn entry(name: &str, seed: u64) -> ModelEntry {
-        ModelEntry::compile(mid(name), QuantMlp::random_digits(seed), 1)
+        ModelEntry::compile(mid(name), QuantMlp::random_digits(seed), GemmOptions::default())
     }
 
     #[test]

@@ -78,31 +78,56 @@
 //!      Narrow heads (`out_dim < 16`) can't amortize 16 strip rows and
 //!      fall back to the flat gather per layer, decided at compile
 //!      time — bit-identical arithmetic on both paths.
-//!    * *SWAR strip accumulate*: within each bucket segment, four
-//!      gathered strip products pack into one `u64` as 4×16-bit lanes,
-//!      collapsing four adds into one 64-bit add. Strip products are
+//!    * *SWAR strip accumulate* (the portable baseline, `gemm.simd
+//!      swar`): within each bucket segment, four gathered strip
+//!      products pack into one `u64` as 4×16-bit lanes, collapsing
+//!      four adds into one 64-bit add. Strip products are
 //!      multiplier-table bytes (`u8`, so ≤ 255 even for approximate
 //!      tables) and lanes flush into a wide sum every 256 packed adds
 //!      (256 · 255 < 2¹⁶), so no lane can carry into its neighbour —
 //!      integer addition being associative, the result is bit-identical
 //!      to the retained scalar path (the tail for short segments, and
-//!      the reference `LayerPlan::gemm_rows_into_scalar` the benches
-//!      race against).
-//!    * *Batch tiling* (`gemm.threads` config, `--gemm-threads` on
-//!      `repro serve`, `0` = one per core): batch rows split into
-//!      contiguous chunks across `std::thread::scope` threads, each
-//!      chunk running the whole layer stack on its own scratch. Every
-//!      output element is accumulated by exactly one thread in the
-//!      existing order, and integer accumulation is exact, so results
-//!      are bit-identical for every thread count (pinned by
-//!      `tests/gemm_plan.rs`). The default is `1`: worker threads
-//!      already scale across batches, so in-batch fan-out is opt-in for
-//!      big-batch / wide-layer deployments.
+//!      the reference kernel the benches race against).
+//!    * *Runtime-dispatched SIMD strips* ([`nn::GemmSimd`], `gemm.simd`
+//!      config, `--gemm-simd` on `repro serve`): plan compilation
+//!      resolves `auto` to the best [`nn::StripKernel`] the host
+//!      actually has — AVX2 (`_mm256_i32gather_epi32` over an `i32`
+//!      strip copy, eight lanes per step) behind
+//!      `is_x86_feature_detected!`, NEON (`vpadalq_s16` pairwise
+//!      widening) on aarch64, else the SWAR baseline, else scalar.
+//!      Integer segment sums are exact in any order, so every kernel is
+//!      bit-identical; forcing a kernel the host lacks falls back to
+//!      SWAR instead of faulting. All `unsafe` is confined to the
+//!      `simd` module of `src/nn/gemm.rs`, every block commented with
+//!      the runtime-dispatch guard that makes it sound — a confinement
+//!      `repro lint` enforces (rule `simd-confined`).
+//!    * *Persistent worker pool + shape-adaptive tiling*
+//!      (`gemm.threads` and `gemm.partition` config, `--gemm-threads` /
+//!      `--gemm-partition` on `repro serve`, threads `0` = one per
+//!      core): the plan owns long-lived workers parked on condvars,
+//!      spawned once at backend construction and woken per batch with
+//!      zero steady-state allocation (pinned by
+//!      `tests/hot_path_allocs.rs`) — replacing the per-call
+//!      `std::thread::scope` fan-out of kernel v2. `partition rows`
+//!      splits batch rows into contiguous chunks (the throughput
+//!      shape); `outputs` splits each layer's output rows into
+//!      per-thread spans so even a batch of one fans out (the latency
+//!      shape); `auto` picks rows when the batch can feed every thread
+//!      and outputs otherwise. Every output element is accumulated by
+//!      exactly one thread in the fixed integer order, so results are
+//!      bit-identical for every kernel × tiling × thread count (the
+//!      full matrix is pinned by `tests/gemm_plan.rs`). The default
+//!      stays `threads 1`: worker threads already scale across
+//!      batches, so in-batch fan-out is opt-in for big-batch or
+//!      latency-critical deployments.
 //!
-//! `benches/lut_gemm.rs` races all three kernels at serving shapes and
-//! (`--save-json`) records MACs/s per kernel to `BENCH_lut_gemm.json`;
-//! CI runs it on every push and uploads the JSON as a workflow
-//! artifact, so the perf trajectory accumulates data points. The
+//! `benches/lut_gemm.rs` races the kernel generations at serving
+//! shapes and (`--save-json`) records MACs/s per kernel, the
+//! dispatched SIMD variant plus host CPU features
+//! ([`nn::host_cpu_features`]), and a batch-1 µs/inference column to
+//! `BENCH_lut_gemm.json`; CI runs it on every push, asserts the
+//! dispatch landed on a non-scalar kernel, and uploads the JSON as a
+//! workflow artifact, so the perf trajectory accumulates data points. The
 //! serving metrics report the host-side per-batch GEMM wall time next
 //! to the simulated CiM latency (`host gemm` line in
 //! [`coordinator::MetricsSnapshot::render`]), so host speed and fabric

@@ -19,6 +19,12 @@
 //!    memory-ordering contract (crate docs, `## Concurrency model`)
 //!    makes `Relaxed` the default and anything stronger a documented
 //!    exception.
+//! 5. **`simd-confined`** — architecture-specific intrinsic paths
+//!    (`std::arch` / `core::arch`) appear only inside the `simd`
+//!    module of `src/nn/gemm.rs` (the runtime-dispatch layer), and
+//!    every `unsafe` block in that module carries a SAFETY comment
+//!    naming the dispatch guard that makes it sound (the word
+//!    `dispatch` must appear in the comment run).
 //!
 //! Deliberate exceptions are waived in the source with a reasoned
 //! directive comment: `lint: allow(mpsc): <reason>` or
@@ -288,6 +294,10 @@ fn directive_with_reason(comment: &str, directive: &str) -> bool {
 const STRONG_ORDERINGS: [&str; 4] =
     ["Ordering::Acquire", "Ordering::Release", "Ordering::AcqRel", "Ordering::SeqCst"];
 
+/// Architecture-specific intrinsic paths the `simd-confined` rule
+/// restricts to the dispatch layer.
+const ARCH_TOKENS: [&str; 2] = ["std::arch", "core::arch"];
+
 /// Is this path inside the hot-path module set the alloc/mpsc rules
 /// police? (`label` uses `/` separators — normalized by [`lint_tree`].)
 /// `engine/plan_cache.rs` is included by name: its hit path sits on the
@@ -308,6 +318,7 @@ pub fn lint_source(label: &str, text: &str) -> Vec<Violation> {
     let mut out = Vec::new();
     let hot = is_hot_path(label);
     let pool = is_pool_module(label);
+    let simd_home = label.ends_with("src/nn/gemm.rs");
     let file_waives_mpsc = has_file_waiver(text, "mpsc");
     let file_waives_alloc = has_file_waiver(text, "alloc");
 
@@ -318,6 +329,8 @@ pub fn lint_source(label: &str, text: &str) -> Vec<Violation> {
     // #[cfg(test)] module skipping for the mpsc/alloc rules
     let mut test_attr_pending = false;
     let mut test_skip_above: Option<i64> = None;
+    // `mod simd` brace tracking for the simd-confined rule
+    let mut simd_mod_above: Option<i64> = None;
 
     for (idx, raw) in text.lines().enumerate() {
         let line_no = idx + 1;
@@ -325,6 +338,7 @@ pub fn lint_source(label: &str, text: &str) -> Vec<Violation> {
         lex = next_lex;
         let code_trim = code.trim();
         let in_test_block = test_skip_above.is_some();
+        let in_simd_mod = simd_mod_above.is_some();
 
         if code_trim.is_empty() {
             if comment.is_empty() {
@@ -369,6 +383,37 @@ pub fn lint_source(label: &str, text: &str) -> Vec<Violation> {
             }
         }
 
+        for pat in ARCH_TOKENS {
+            if contains_bare(code_trim, pat) && !(simd_home && in_simd_mod) {
+                out.push(Violation {
+                    file: label.to_string(),
+                    line: line_no,
+                    rule: "simd-confined",
+                    msg: format!(
+                        "`{pat}` outside the `simd` module of src/nn/gemm.rs — \
+                         arch-specific intrinsics live behind the dispatch layer \
+                         (force paths via GemmSimd, read features via host_cpu_features)"
+                    ),
+                });
+            }
+        }
+
+        if simd_home
+            && in_simd_mod
+            && has_unsafe_block(code_trim)
+            && !run.contains("dispatch")
+            && !comment.contains("dispatch")
+        {
+            out.push(Violation {
+                file: label.to_string(),
+                line: line_no,
+                rule: "simd-confined",
+                msg: "`unsafe` in the simd module whose SAFETY comment does not name the \
+                      runtime-dispatch guard (the word `dispatch`)"
+                    .to_string(),
+            });
+        }
+
         if hot && !in_test_block {
             if contains_bare(code_trim, "mpsc") && !file_waives_mpsc && !waived("mpsc") {
                 out.push(Violation {
@@ -408,11 +453,23 @@ pub fn lint_source(label: &str, text: &str) -> Vec<Violation> {
         if code_trim.contains("#[cfg(test)") || code_trim.contains("#[cfg(all(test") {
             test_attr_pending = true;
         }
+        if simd_home
+            && simd_mod_above.is_none()
+            && contains_word(code_trim, "mod")
+            && contains_word(code_trim, "simd")
+        {
+            simd_mod_above = Some(depth);
+        }
         depth += code.matches('{').count() as i64;
         depth -= code.matches('}').count() as i64;
         if let Some(above) = test_skip_above {
             if depth <= above {
                 test_skip_above = None;
+            }
+        }
+        if let Some(above) = simd_mod_above {
+            if depth <= above {
+                simd_mod_above = None;
             }
         }
         run.clear();
@@ -509,6 +566,12 @@ pub fn self_test() -> Result<()> {
     let waived = format!("// lint: allow({mp}): off the hot loop\nuse std::sync::{mp};\n");
     expect("waived-mpsc", "no-mpsc", &waived, 0);
 
+    // seeded: arch intrinsics outside the gemm simd module (the
+    // simd-confined rule's canonical violation)
+    let arch = String::from("std::ar") + "ch";
+    let bad_arch = format!("fn f() {{ {arch}::x86_64::_mm_pause(); }}\n");
+    expect("arch-outside-simd", "simd-confined", &bad_arch, 1);
+
     // seeded: bare allocation in a hot-path module
     let vwc = String::from("Vec::with_cap") + "acity";
     let bad_alloc = format!("fn f() {{ let v: Vec<u8> = {vwc}(8); }}\n");
@@ -529,6 +592,38 @@ pub fn self_test() -> Result<()> {
         .count();
     if got != 1 {
         failures.push(format!("trace-module-policed: expected 1 `no-bare-alloc`, got {got}"));
+    }
+
+    // seeded: the rest of the simd-confined matrix needs the gemm.rs
+    // label — arch tokens are legal inside its `mod simd`, and unsafe
+    // there must name the dispatch guard in its SAFETY comment
+    let count = |label: &str, src: &str| {
+        lint_source(label, src).iter().filter(|v| v.rule == "simd-confined").count()
+    };
+    let core_arch = String::from("core::ar") + "ch";
+    let in_simd = format!("mod simd {{\n    fn f() {{ {core_arch}::x86_64::noop(); }}\n}}\n");
+    let got = count("src/nn/gemm.rs", &in_simd);
+    if got != 0 {
+        failures.push(format!("simd-module-allowed: expected 0 `simd-confined`, got {got}"));
+    }
+    let got = count("src/nn/other.rs", &in_simd);
+    if got != 1 {
+        failures.push(format!("simd-module-elsewhere: expected 1 `simd-confined`, got {got}"));
+    }
+    let undispatched = format!(
+        "mod simd {{\n    fn f() {{\n        // SAFETY: aligned\n        {uns} {{ g() }}\n    }}\n}}\n"
+    );
+    let got = count("src/nn/gemm.rs", &undispatched);
+    if got != 1 {
+        failures.push(format!("undispatched-unsafe: expected 1 `simd-confined`, got {got}"));
+    }
+    let dispatched = format!(
+        "mod simd {{\n    fn f() {{\n        // SAFETY: behind the avx2 runtime dispatch \
+         guard\n        {uns} {{ g() }}\n    }}\n}}\n"
+    );
+    let got = count("src/nn/gemm.rs", &dispatched);
+    if got != 0 {
+        failures.push(format!("dispatched-unsafe: expected 0 `simd-confined`, got {got}"));
     }
 
     if failures.is_empty() {
@@ -597,6 +692,18 @@ mod tests {
         assert_eq!(lint_source("src/util/x.rs", bare).len(), 1, "reasonless waiver is void");
         let reasoned = "// lint: allow(alloc): startup scratch\nlet v = Vec::with_capacity(8);\n";
         assert!(lint_source("src/util/x.rs", reasoned).is_empty());
+    }
+
+    #[test]
+    fn simd_rule_confines_arch_tokens_to_the_gemm_dispatch_module() {
+        let stray = "fn f() { std::arch::x86_64::noop(); }\n";
+        assert_eq!(lint_source("src/coordinator/x.rs", stray).len(), 1, "stray intrinsic path");
+        let confined = "mod simd {\n    fn f() { std::arch::x86_64::noop(); }\n}\n";
+        assert!(lint_source("src/nn/gemm.rs", confined).is_empty(), "the dispatch layer is home");
+        assert_eq!(lint_source("src/nn/other.rs", confined).len(), 1, "only gemm.rs hosts it");
+        // after the module's closing brace the allowance ends
+        let after = "mod simd {\n    fn f() {}\n}\nfn g() { core::arch::x86_64::noop(); }\n";
+        assert_eq!(lint_source("src/nn/gemm.rs", after).len(), 1, "allowance ends at the brace");
     }
 
     #[test]

@@ -26,6 +26,7 @@ use luna_cim::config::{BackendKind, Config, DispatchPolicy, RouterConfig, ShardA
 use luna_cim::coordinator::{CoordinatorServer, ServerHandle};
 use luna_cim::multiplier::{MultiplierKind, MultiplierModel};
 use luna_cim::net::{loadgen, ModelId, NetClient, NetServer, RouterServer, Scenario, StatsPayload};
+use luna_cim::nn::{GemmPartition, GemmSimd};
 use luna_cim::report;
 use luna_cim::runtime::ArtifactStore;
 use luna_cim::Result;
@@ -38,7 +39,7 @@ USAGE:
   repro figures  [--id N] [--csv]
   repro mul <W> <Y>
   repro simulate [--multiplier SLUG] [--weight W] [--inputs a,b,c]
-  repro serve    [--config FILE] [--synthetic] [--requests N] [--clients N] [--multiplier SLUG] [--backend native|calibrated|pjrt] [--time-scale X] [--gemm-threads N] [--shards N] [--affinity request|connection] [--listen ADDR] [--model ID=DIR].. [--trace-sample N] [--trace-ring N]
+  repro serve    [--config FILE] [--synthetic] [--requests N] [--clients N] [--multiplier SLUG] [--backend native|calibrated|pjrt] [--time-scale X] [--gemm-threads N] [--gemm-simd SLUG] [--gemm-partition SLUG] [--shards N] [--affinity request|connection] [--listen ADDR] [--model ID=DIR].. [--trace-sample N] [--trace-ring N]
   repro route    --backends A1,A2,.. [--config FILE] [--listen ADDR] [--policy hash|least-outstanding] [--vnodes N] [--max-connections N] [--probe-ms MS] [--max-backoff-ms MS] [--trace-sample N] [--trace-ring N]
   repro loadgen  [--addr A1[,A2,..] | --synthetic] [--config FILE] [--scenario closed|poisson|bursty|all] [--loads R1,R2,..] [--connections N] [--requests N] [--burst N] [--retry] [--shards N] [--affinity request|connection] [--models N] [--mix zipf|uniform] [--via-router N] [--router-scale P1,P2,..] [--backend SLUG] [--time-scale X] [--seed N] [--quick] [--stats] [--save-json [PATH]]
   repro stats    --addr ADDR [--json | --prom]
@@ -55,6 +56,12 @@ Backends: native (in-process batched LUT-GEMM, default),
           pjrt (AOT HLO; needs the `pjrt` build feature)
 --gemm-threads: in-batch planned-GEMM threads per worker (native/calibrated;
                 0 = one per core, default 1 — workers already scale across batches)
+--gemm-simd: force the planned-GEMM strip kernel: auto|avx2|neon|swar|scalar
+                (auto = best available; forcing an unavailable SIMD kernel
+                falls back to swar; every kernel is bit-identical)
+--gemm-partition: multi-threaded batch tiling: auto|rows|outputs (auto = batch
+                rows when the batch can feed every thread, per-layer output
+                spans otherwise — the batch-1 latency path)
 --shards: independent batcher lanes (admission stays one global bound,
           replies are bit-identical for any count)
 --affinity: how requests map onto batcher lanes — request (round-robin by
@@ -76,7 +83,8 @@ route:    front tier speaking the same wire protocol on both sides: probes
           fleet (terminal Reject only when ALL backends reject)
 lint:     repo-invariant source checker (SAFETY comments on unsafe blocks,
           no mpsc / bare allocation in hot-path modules, justified memory
-          orderings); --self-test proves each rule rejects a seeded
+          orderings, arch intrinsics confined to the gemm simd dispatch
+          module); --self-test proves each rule rejects a seeded
           violation; --root points at the crate dir (default: auto)
 loadgen:  drives a wire endpoint with closed-loop, open-loop poisson and bursty
           arrivals, sweeping --loads (req/s) and reporting throughput, wall
@@ -292,6 +300,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     cfg.timing.time_scale = args.flag_parse("time-scale", cfg.timing.time_scale)?;
     cfg.gemm.threads = args.flag_parse("gemm-threads", cfg.gemm.threads)?;
+    if let Some(v) = args.flag("gemm-simd") {
+        cfg.gemm.simd = GemmSimd::from_arg(v)?;
+    }
+    if let Some(v) = args.flag("gemm-partition") {
+        cfg.gemm.partition = GemmPartition::from_arg(v)?;
+    }
     cfg.batcher.shards = args.flag_parse("shards", cfg.batcher.shards)?;
     if let Some(a) = args.flag("affinity") {
         cfg.batcher.affinity = ShardAffinity::from_arg(a)?;
@@ -344,6 +358,14 @@ fn serve_listen(cfg: Config) -> Result<()> {
             cfg.plan_cache.max_bytes
         );
     }
+    if cfg.backend != BackendKind::Pjrt {
+        println!(
+            "planned gemm: {} thread(s), {} kernel, {} tiling",
+            luna_cim::nn::resolve_threads(cfg.gemm.threads),
+            cfg.gemm.simd.resolve().slug(),
+            cfg.gemm.partition.slug()
+        );
+    }
     println!("serving until killed (drive it with `repro loadgen --addr {}`)", net.local_addr());
     let metrics = server.metrics();
     let mut seen = 0u64;
@@ -375,6 +397,14 @@ fn serve_load(cfg: Config, requests: usize, clients: usize) -> Result<()> {
             cfg.gemm.threads.to_string()
         }
     );
+    if cfg.backend != BackendKind::Pjrt {
+        println!(
+            "planned gemm: {} kernel (requested {}), {} tiling",
+            cfg.gemm.simd.resolve().slug(),
+            cfg.gemm.simd.slug(),
+            cfg.gemm.partition.slug()
+        );
+    }
     if cfg.backend == BackendKind::Calibrated {
         println!(
             "calibrated timing: time_scale {} ({})",

@@ -1,5 +1,6 @@
 //! Planned LUT-GEMM: code-sorted weight plans, per-row LUT-strip
-//! expansion, and multi-threaded batch tiling.
+//! expansion, runtime-dispatched SIMD accumulators, and a persistent
+//! worker pool with shape-adaptive tiling.
 //!
 //! The flat-gather kernel ([`QuantLinear::gemm_batch_into`]) still pays a
 //! 2D table index `(w << 4) | x` and a random 256-entry gather for every
@@ -15,8 +16,8 @@
 //!
 //! 2. **LUT-strip expansion** (once per *input row*, not per MAC). The
 //!    256-entry product table is expanded into a `16 × in_dim` strip
-//!    `g[w][j] = table[(w << 4) | x_j]` of `i16` products (≤ 4 KiB for
-//!    the digits model — L1-resident). Every MAC of every output row then
+//!    `g[w][j] = table[(w << 4) | x_j]` of products (≤ 4 KiB for the
+//!    digits model — L1-resident). Every MAC of every output row then
 //!    reads this strip; the amortized per-MAC cost is one sequential
 //!    `u16` column load plus one L1 strip load and an add — zero index
 //!    arithmetic. Layers too narrow to amortize the 16-row expansion
@@ -24,25 +25,47 @@
 //!    gather per layer at compile time; the arithmetic is identical
 //!    either way, only the instruction mix differs.
 //!
-//!    Bucket segments accumulate via **SWAR**: four gathered strip
-//!    products pack into one `u64` as 4×16-bit lanes, so four adds
-//!    collapse into one 64-bit add (see [`swar_segment_sum`]; lane-
-//!    overflow analysis and the bit-identity argument are there). The
-//!    scalar path is retained — as the tail for segment lengths not
-//!    divisible by four, and whole ([`LayerPlan::gemm_rows_into_scalar`])
-//!    as the reference the SWAR kernel is pinned against.
+//!    Bucket segments accumulate through one of four interchangeable
+//!    kernels ([`StripKernel`]), chosen **once at plan-compile time** by
+//!    [`GemmSimd::resolve`]: portable scalar, portable SWAR (4×16-bit
+//!    lanes in one `u64`, see `swar_segment_sum`), AVX2 (8×`i32` lanes
+//!    with hardware gather; x86_64 behind `is_x86_feature_detected!`)
+//!    and NEON (widening pairwise accumulate; baseline on aarch64). The
+//!    architecture-specific code — `std::arch` intrinsics and the
+//!    `unsafe` that invokes them — is confined to the `simd` submodule
+//!    (enforced by `repro lint`'s `simd-confined` rule). A segment sum
+//!    is an exact integer sum, and integer addition is associative, so
+//!    every kernel returns the identical `i32` — all four are
+//!    bit-identical by construction, pinned against each other and the
+//!    per-sample reference by `tests/gemm_plan.rs`.
 //!
-//! 3. **Batch tiling** ([`MlpPlan::forward_batch_with`]). Batch rows are
-//!    split into contiguous chunks, one per thread
-//!    (`std::thread::scope`); each chunk runs the whole layer stack
-//!    independently, so every output element is still accumulated by
-//!    exactly one thread in the existing order — bit-exactness with
-//!    [`QuantMlp::forward`] holds for every thread count and every
-//!    [`MultiplierKind`](crate::multiplier::MultiplierKind) (pinned by
-//!    `tests/gemm_plan.rs`).
+//! 3. **Persistent worker pool**. Multi-threaded plans hand work to a
+//!    lazily-spawned pool of parked workers instead of paying the
+//!    tens-of-µs `std::thread::scope` spawn per batch. The handoff is an
+//!    owned-scratch state machine (`ChunkCell`) built on the
+//!    [`crate::util::sync`] shim: the main thread moves a job (input
+//!    pre-staged in the chunk's own scratch) into the cell, the parked
+//!    worker wakes, runs it, and moves the scratch back. No borrows
+//!    cross threads, no `unsafe`, and loom model-checks the protocol
+//!    (`loom_models` below). Steady state allocates nothing: scratch
+//!    buffers grow once during warmup and then shuttle by move.
+//!
+//! 4. **Shape-adaptive tiling** ([`MlpPlan::forward_batch_with`]).
+//!    Throughput shapes (`batch ≥ threads`) partition across batch
+//!    *rows*: each chunk runs the whole layer stack independently.
+//!    Small-batch/wide shapes (`batch < threads`, the interactive case)
+//!    partition each layer across *output-row spans* instead, so a
+//!    batch-1 request finally scales with cores. Either way every
+//!    output element is accumulated by exactly one thread in the same
+//!    per-element order, so bit-exactness with [`QuantMlp::forward`]
+//!    holds at every thread count, kernel and tiling mode
+//!    ([`GemmPartition`], pinned by `tests/gemm_plan.rs`).
 
 use super::{QuantLinear, QuantMlp, Quantizer};
 use crate::multiplier::MultiplierModel;
+use crate::util::sync::{Arc, Condvar, Mutex};
+
+pub use simd::host_cpu_features;
 
 /// Resolve a `gemm.threads` knob: `0` means one thread per available
 /// core ([`std::thread::available_parallelism`]), anything else is taken
@@ -52,6 +75,329 @@ pub fn resolve_threads(threads: usize) -> usize {
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
     } else {
         threads
+    }
+}
+
+/// The `gemm.simd` knob: which strip accumulator a plan should compile
+/// for. `Auto` (the default) picks the fastest kernel whose runtime
+/// dispatch guard holds on this host; forcing an unavailable SIMD
+/// kernel falls back to SWAR (the resolved choice is visible via
+/// [`MlpPlan::kernel`]). Every choice is bit-identical — this knob
+/// trades speed only, never accuracy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GemmSimd {
+    /// Best available: AVX2, else NEON, else SWAR.
+    Auto,
+    /// Force the AVX2 kernel (x86_64 with AVX2; falls back to SWAR).
+    Avx2,
+    /// Force the NEON kernel (aarch64 only; falls back to SWAR).
+    Neon,
+    /// Force the portable SWAR kernel.
+    Swar,
+    /// Force the portable scalar kernel (the reference).
+    Scalar,
+}
+
+impl GemmSimd {
+    /// Every knob value (property tests sweep this).
+    pub const ALL: [GemmSimd; 5] =
+        [GemmSimd::Auto, GemmSimd::Avx2, GemmSimd::Neon, GemmSimd::Swar, GemmSimd::Scalar];
+
+    /// Stable kebab-case identifier (config files, CLI).
+    pub fn slug(self) -> &'static str {
+        match self {
+            GemmSimd::Auto => "auto",
+            GemmSimd::Avx2 => "avx2",
+            GemmSimd::Neon => "neon",
+            GemmSimd::Swar => "swar",
+            GemmSimd::Scalar => "scalar",
+        }
+    }
+
+    /// Parse a slug (case-insensitive).
+    pub fn parse_slug(s: &str) -> Option<GemmSimd> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "auto" => Some(GemmSimd::Auto),
+            "avx2" => Some(GemmSimd::Avx2),
+            "neon" => Some(GemmSimd::Neon),
+            "swar" => Some(GemmSimd::Swar),
+            "scalar" => Some(GemmSimd::Scalar),
+            _ => None,
+        }
+    }
+
+    /// Parse with the canonical error message.
+    pub fn from_arg(s: &str) -> anyhow::Result<GemmSimd> {
+        Self::parse_slug(s).ok_or_else(|| {
+            anyhow::anyhow!("unknown gemm.simd `{s}` (known: auto, avx2, neon, swar, scalar)")
+        })
+    }
+
+    /// Resolve the knob against this host's runtime dispatch guards.
+    /// This is the **only** place a SIMD kernel can be selected, and it
+    /// only returns one when the matching guard holds — the safety
+    /// contract the `simd` module's wrappers rely on.
+    pub fn resolve(self) -> StripKernel {
+        match self {
+            GemmSimd::Scalar => StripKernel::Scalar,
+            GemmSimd::Swar => StripKernel::Swar,
+            GemmSimd::Avx2 => {
+                if simd::avx2_available() {
+                    StripKernel::Avx2
+                } else {
+                    StripKernel::Swar
+                }
+            }
+            GemmSimd::Neon => {
+                if simd::neon_available() {
+                    StripKernel::Neon
+                } else {
+                    StripKernel::Swar
+                }
+            }
+            GemmSimd::Auto => {
+                if simd::avx2_available() {
+                    StripKernel::Avx2
+                } else if simd::neon_available() {
+                    StripKernel::Neon
+                } else {
+                    StripKernel::Swar
+                }
+            }
+        }
+    }
+}
+
+/// The `gemm.partition` knob: how a multi-threaded plan splits a batch
+/// across its workers. All modes are bit-identical — each output
+/// element is always accumulated by exactly one thread in the same
+/// order — so, like [`GemmSimd`], this trades latency/throughput only.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GemmPartition {
+    /// Rows when the batch can feed every thread (`batch ≥ threads`),
+    /// output spans otherwise (the default).
+    Auto,
+    /// Always partition across batch rows (throughput shapes).
+    Rows,
+    /// Always partition each layer across output-row spans (interactive
+    /// small-batch shapes — batch-1 latency scales with cores).
+    Outputs,
+}
+
+impl GemmPartition {
+    /// Every knob value (property tests sweep this).
+    pub const ALL: [GemmPartition; 3] =
+        [GemmPartition::Auto, GemmPartition::Rows, GemmPartition::Outputs];
+
+    /// Stable kebab-case identifier (config files, CLI).
+    pub fn slug(self) -> &'static str {
+        match self {
+            GemmPartition::Auto => "auto",
+            GemmPartition::Rows => "rows",
+            GemmPartition::Outputs => "outputs",
+        }
+    }
+
+    /// Parse a slug (case-insensitive).
+    pub fn parse_slug(s: &str) -> Option<GemmPartition> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "auto" => Some(GemmPartition::Auto),
+            "rows" => Some(GemmPartition::Rows),
+            "outputs" => Some(GemmPartition::Outputs),
+            _ => None,
+        }
+    }
+
+    /// Parse with the canonical error message.
+    pub fn from_arg(s: &str) -> anyhow::Result<GemmPartition> {
+        Self::parse_slug(s).ok_or_else(|| {
+            anyhow::anyhow!("unknown gemm.partition `{s}` (known: auto, rows, outputs)")
+        })
+    }
+}
+
+/// Everything [`MlpPlan::compile_with`] needs from the `gemm.*` config
+/// section: thread cap, kernel choice and tiling mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GemmOptions {
+    /// `gemm.threads` convention: `0` = one per available core.
+    pub threads: usize,
+    /// Strip-kernel choice, resolved at compile time.
+    pub simd: GemmSimd,
+    /// Batch tiling mode for multi-threaded plans.
+    pub partition: GemmPartition,
+}
+
+impl Default for GemmOptions {
+    fn default() -> Self {
+        GemmOptions { threads: 1, simd: GemmSimd::Auto, partition: GemmPartition::Auto }
+    }
+}
+
+impl GemmOptions {
+    /// The historical single-knob constructor: given threads, keep the
+    /// kernel and tiling on `auto`.
+    pub fn with_threads(threads: usize) -> Self {
+        GemmOptions { threads, ..Self::default() }
+    }
+}
+
+/// A resolved strip accumulator — what [`GemmSimd::resolve`] turned the
+/// knob into on this host. Plans carry this, never the raw knob, so a
+/// plan's execution path is fixed (and reportable) at compile time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StripKernel {
+    /// Portable scalar reference.
+    Scalar,
+    /// Portable 4×16-bit SWAR lanes in a `u64`.
+    Swar,
+    /// 8×`i32` AVX2 lanes with hardware gather (x86_64).
+    Avx2,
+    /// Widening pairwise NEON accumulate (aarch64).
+    Neon,
+}
+
+impl StripKernel {
+    /// Stable identifier for bench JSON and the serve banner.
+    pub fn slug(self) -> &'static str {
+        match self {
+            StripKernel::Scalar => "scalar",
+            StripKernel::Swar => "swar",
+            StripKernel::Avx2 => "avx2",
+            StripKernel::Neon => "neon",
+        }
+    }
+}
+
+/// Runtime-dispatched SIMD strip accumulators.
+///
+/// Every architecture-specific token in the crate — `std::arch`
+/// intrinsics and the `unsafe` blocks that invoke them — lives inside
+/// this module and nowhere else; `repro lint`'s `simd-confined` rule
+/// enforces the boundary, and requires each `unsafe` block's SAFETY
+/// comment to name the runtime-dispatch guard it relies on. The public
+/// functions are safe wrappers: plans can only select a SIMD kernel
+/// through `GemmSimd::resolve`, which checks the matching guard
+/// (`is_x86_feature_detected!("avx2")` on x86_64, the baseline-NEON
+/// compile target on aarch64) before handing the kernel out.
+mod simd {
+    /// Whether the AVX2 kernel's runtime dispatch guard holds.
+    pub fn avx2_available() -> bool {
+        #[cfg(target_arch = "x86_64")]
+        {
+            std::arch::is_x86_feature_detected!("avx2")
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            false
+        }
+    }
+
+    /// Whether the NEON kernel may run. NEON is baseline on aarch64, so
+    /// the guard is a compile-target fact, not a CPUID probe.
+    pub fn neon_available() -> bool {
+        cfg!(target_arch = "aarch64")
+    }
+
+    /// Host arch plus the SIMD features the dispatcher detected, e.g.
+    /// `x86_64+avx2` — recorded in `BENCH_lut_gemm.json` so a perf data
+    /// point names the hardware path it measured.
+    pub fn host_cpu_features() -> String {
+        let mut s = String::from(std::env::consts::ARCH);
+        if avx2_available() {
+            s.push_str("+avx2");
+        }
+        if neon_available() {
+            s.push_str("+neon");
+        }
+        s
+    }
+
+    /// AVX2 bucket-segment sum over the widened `i32` strip: eight
+    /// `u16` column indices load as one vector, widen to `i32×8`, one
+    /// hardware gather fetches eight strip products, and eight `i32`
+    /// lanes accumulate. Products are `u8`-range (≤ 255) and a segment
+    /// holds at most `in_dim ≤ 65 536` columns, so a lane sum stays
+    /// below `65 536 · 255 < 2³¹` — no overflow — and integer addition
+    /// is associative, so the horizontal fold equals the scalar sum
+    /// bit-for-bit. The `seg.len() % 8` tail is summed scalar.
+    #[cfg(target_arch = "x86_64")]
+    pub fn avx2_segment_sum(seg: &[u16], srow: &[i32]) -> i32 {
+        debug_assert!(seg.iter().all(|&c| (c as usize) < srow.len()));
+        // SAFETY: calling the AVX2-featured function is sound because
+        // the runtime dispatch guard holds — `GemmSimd::resolve` only
+        // selects `StripKernel::Avx2` after `avx2_available()`
+        // (`is_x86_feature_detected!("avx2")`) returned true on this
+        // host, and plans never call this wrapper with any other kernel
+        // resolved.
+        unsafe { avx2_segment_sum_impl(seg, srow) }
+    }
+
+    /// The AVX2 body. Safe to call only where the `avx2` target feature
+    /// is known enabled (see the dispatch guard in `avx2_segment_sum`).
+    #[cfg(target_arch = "x86_64")]
+    #[target_feature(enable = "avx2")]
+    fn avx2_segment_sum_impl(seg: &[u16], srow: &[i32]) -> i32 {
+        use std::arch::x86_64::*;
+        let base = srow.as_ptr();
+        let mut acc = _mm256_setzero_si256();
+        let mut chunks = seg.chunks_exact(8);
+        for c in chunks.by_ref() {
+            // SAFETY: the runtime dispatch guard (see `avx2_segment_sum`)
+            // guarantees AVX2; the unaligned load reads exactly the
+            // eight `u16` indices of `c`, and each gathered lane reads
+            // `srow[c[i]]` with `c[i] < in_dim ≤ srow.len()` — column
+            // indices are bounds-asserted at plan compile (and
+            // debug-asserted in the wrapper).
+            unsafe {
+                let idx16 = _mm_loadu_si128(c.as_ptr() as *const __m128i);
+                let idx32 = _mm256_cvtepu16_epi32(idx16);
+                acc = _mm256_add_epi32(acc, _mm256_i32gather_epi32::<4>(base, idx32));
+            }
+        }
+        // horizontal fold: 8 lanes -> 4 -> 2 -> 1 (pure lane shuffles
+        // and adds — exact integer sums in any order)
+        let quad = _mm_add_epi32(_mm256_castsi256_si128(acc), _mm256_extracti128_si256::<1>(acc));
+        let pair = _mm_add_epi32(quad, _mm_shuffle_epi32::<0x0E>(quad));
+        let mut sum = _mm_cvtsi128_si32(_mm_add_epi32(pair, _mm_shuffle_epi32::<0x01>(pair)));
+        for &c in chunks.remainder() {
+            sum += srow[c as usize];
+        }
+        sum
+    }
+
+    /// NEON bucket-segment sum: NEON has no gather, so eight strip
+    /// products are staged into a stack buffer scalar-wise, then one
+    /// widening pairwise-accumulate (`vpadalq_s16`) folds them into
+    /// four `i32` lanes. Per chunk a lane gains two ≤ 255 products, so
+    /// a lane sum stays below `(65 536 / 8) · 2 · 255 < 2³¹`; the
+    /// horizontal `vaddvq_s32` fold and the scalar tail make the result
+    /// equal the scalar sum bit-for-bit (exact integer arithmetic).
+    #[cfg(target_arch = "aarch64")]
+    pub fn neon_segment_sum(seg: &[u16], srow: &[i16]) -> i32 {
+        use std::arch::aarch64::{vaddvq_s32, vdupq_n_s32, vld1q_s16, vpadalq_s16};
+        debug_assert!(seg.iter().all(|&c| (c as usize) < srow.len()));
+        let mut acc = vdupq_n_s32(0);
+        let mut buf = [0i16; 8];
+        let mut chunks = seg.chunks_exact(8);
+        for c in chunks.by_ref() {
+            for (d, &ci) in buf.iter_mut().zip(c) {
+                *d = srow[ci as usize];
+            }
+            // SAFETY: the dispatch guard for NEON is the
+            // `target_arch = "aarch64"` gate on this function itself
+            // (NEON is architecturally baseline there, which is exactly
+            // what `neon_available` reports to `GemmSimd::resolve`);
+            // the load reads the eight `i16`s of the stack buffer
+            // filled just above.
+            let v = unsafe { vld1q_s16(buf.as_ptr()) };
+            acc = vpadalq_s16(acc, v);
+        }
+        let mut sum = vaddvq_s32(acc);
+        for &c in chunks.remainder() {
+            sum += srow[c as usize] as i32;
+        }
+        sum
     }
 }
 
@@ -162,9 +508,9 @@ impl LayerPlan {
         self.out_dim
     }
 
-    /// Planned GEMM over `rows` pre-quantized input rows: expands the
-    /// LUT strip once per input row, then sums each output row's buckets
-    /// with sequential column reads and the SWAR accumulator. Writes
+    /// Planned GEMM over `rows` pre-quantized input rows with the SWAR
+    /// kernel: expands the LUT strip once per input row, then sums each
+    /// output row's buckets with sequential column reads. Writes
     /// `rows × out_dim` dequantized (bias + ReLU applied) activations
     /// into `out`, clearing it first. Bit-exact with
     /// [`QuantLinear::gemm_batch_into`].
@@ -173,15 +519,15 @@ impl LayerPlan {
         xq: &[u8],
         rows: usize,
         model: &MultiplierModel,
-        strip: &mut Vec<i16>,
+        scratch: &mut StripScratch,
         out: &mut Vec<f32>,
     ) {
-        self.gemm_rows_impl(xq, rows, model, strip, out, true);
+        self.gemm_rows_span(xq, rows, model, scratch, out, StripKernel::Swar, 0..self.out_dim);
     }
 
     /// The reference kernel: identical to [`LayerPlan::gemm_rows_into`]
-    /// but with the scalar strip accumulator — the fallback the SWAR
-    /// path is pinned against (`benches/lut_gemm.rs` races the two to
+    /// but with the scalar strip accumulator — the baseline every other
+    /// kernel is pinned against (`benches/lut_gemm.rs` races them to
     /// quantify the win per layer; `tests/gemm_plan.rs` asserts
     /// bit-identity).
     pub fn gemm_rows_into_scalar(
@@ -189,35 +535,59 @@ impl LayerPlan {
         xq: &[u8],
         rows: usize,
         model: &MultiplierModel,
-        strip: &mut Vec<i16>,
+        scratch: &mut StripScratch,
         out: &mut Vec<f32>,
     ) {
-        self.gemm_rows_impl(xq, rows, model, strip, out, false);
+        self.gemm_rows_span(xq, rows, model, scratch, out, StripKernel::Scalar, 0..self.out_dim);
     }
 
-    fn gemm_rows_impl(
+    /// [`LayerPlan::gemm_rows_into`] with an explicit resolved kernel —
+    /// what plans and the kernel-race bench call. The caller owns the
+    /// dispatch contract: a SIMD kernel must come from
+    /// [`GemmSimd::resolve`] on this host.
+    pub fn gemm_rows_into_kernel(
         &self,
         xq: &[u8],
         rows: usize,
         model: &MultiplierModel,
-        strip: &mut Vec<i16>,
+        scratch: &mut StripScratch,
         out: &mut Vec<f32>,
-        swar: bool,
+        kernel: StripKernel,
+    ) {
+        self.gemm_rows_span(xq, rows, model, scratch, out, kernel, 0..self.out_dim);
+    }
+
+    /// The planned-GEMM core: run `rows` input rows through the output
+    /// rows `span` only, writing a dense `rows × span.len()` block into
+    /// `out` (cleared first). Output-span tiling calls this with
+    /// disjoint spans from different threads; every output element is
+    /// produced by exactly one call in the same per-element operation
+    /// order, so stitching spans is bit-identical to one full-span call.
+    pub fn gemm_rows_span(
+        &self,
+        xq: &[u8],
+        rows: usize,
+        model: &MultiplierModel,
+        scratch: &mut StripScratch,
+        out: &mut Vec<f32>,
+        kernel: StripKernel,
+        span: std::ops::Range<usize>,
     ) {
         assert_eq!(xq.len(), rows * self.in_dim, "bad batch input shape");
+        assert!(span.start <= span.end && span.end <= self.out_dim, "bad output span");
         let table = model.table();
         let zp = self.w_quant.zero_point as i32;
         out.clear();
-        out.reserve(rows * self.out_dim);
+        out.reserve(rows * (span.end - span.start));
         for b in 0..rows {
             let xrow = &xq[b * self.in_dim..(b + 1) * self.in_dim];
             let corr = zp * xrow.iter().map(|&x| x as i32).sum::<i32>();
             if self.use_strip {
-                expand_strip(table, xrow, strip);
+                scratch.expand(table, xrow, kernel);
             }
-            for r in 0..self.out_dim {
+            for r in span.clone() {
                 let acc = if self.use_strip {
-                    self.accumulate_strip(r, strip, swar)
+                    self.accumulate_strip(r, scratch, kernel)
                 } else {
                     self.accumulate_flat(r, xrow, table)
                 };
@@ -231,10 +601,10 @@ impl LayerPlan {
         }
     }
 
-    /// Strip inner loop: sequential column reads, pre-gathered products,
-    /// accumulated four lanes at a time (`swar`) or one by one.
+    /// Strip inner loop: sequential column reads over pre-gathered
+    /// products, each bucket segment summed by the resolved kernel.
     #[inline]
-    fn accumulate_strip(&self, r: usize, strip: &[i16], swar: bool) -> i32 {
+    fn accumulate_strip(&self, r: usize, scratch: &StripScratch, kernel: StripKernel) -> i32 {
         let ro = &self.offs[r * 17..r * 17 + 17];
         let mut acc = 0i32;
         for w in 0..16 {
@@ -242,10 +612,50 @@ impl LayerPlan {
             if seg.is_empty() {
                 continue;
             }
-            let srow = &strip[w * self.in_dim..(w + 1) * self.in_dim];
-            acc += if swar { swar_segment_sum(seg, srow) } else { scalar_segment_sum(seg, srow) };
+            acc += match kernel {
+                StripKernel::Scalar => scalar_segment_sum(seg, self.srow16(scratch, w)),
+                StripKernel::Swar => swar_segment_sum(seg, self.srow16(scratch, w)),
+                StripKernel::Avx2 => self.avx2_segment(seg, w, scratch),
+                StripKernel::Neon => self.neon_segment(seg, w, scratch),
+            };
         }
         acc
+    }
+
+    /// Code `w`'s row of the `i16` strip.
+    #[inline]
+    fn srow16<'a>(&self, scratch: &'a StripScratch, w: usize) -> &'a [i16] {
+        &scratch.strip[w * self.in_dim..(w + 1) * self.in_dim]
+    }
+
+    /// AVX2 segment sum over the widened strip; structurally unreachable
+    /// off x86_64 ([`GemmSimd::resolve`] never hands the kernel out
+    /// there).
+    #[inline]
+    fn avx2_segment(&self, seg: &[u16], w: usize, scratch: &StripScratch) -> i32 {
+        #[cfg(target_arch = "x86_64")]
+        {
+            simd::avx2_segment_sum(seg, &scratch.strip32[w * self.in_dim..(w + 1) * self.in_dim])
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            let _ = (seg, w, scratch);
+            unreachable!("AVX2 kernel resolved off x86_64")
+        }
+    }
+
+    /// NEON segment sum; structurally unreachable off aarch64.
+    #[inline]
+    fn neon_segment(&self, seg: &[u16], w: usize, scratch: &StripScratch) -> i32 {
+        #[cfg(target_arch = "aarch64")]
+        {
+            simd::neon_segment_sum(seg, self.srow16(scratch, w))
+        }
+        #[cfg(not(target_arch = "aarch64"))]
+        {
+            let _ = (seg, w, scratch);
+            unreachable!("NEON kernel resolved off aarch64")
+        }
     }
 
     /// Flat-gather inner loop (same arithmetic as
@@ -314,7 +724,7 @@ fn flush_lanes(packed: u64) -> u64 {
     (packed & 0xffff) + ((packed >> 16) & 0xffff) + ((packed >> 32) & 0xffff) + (packed >> 48)
 }
 
-/// The scalar strip accumulator (the SWAR tail and reference path).
+/// The scalar strip accumulator (the SWAR/SIMD tail and reference path).
 #[inline]
 fn scalar_segment_sum(seg: &[u16], srow: &[i16]) -> i32 {
     let mut sum = 0i32;
@@ -338,46 +748,335 @@ fn expand_strip(table: &[u8; 256], xrow: &[u8], strip: &mut Vec<i16>) {
     }
 }
 
+/// [`expand_strip`] widened to `i32` for the AVX2 kernel, whose hardware
+/// gather reads exactly one 4-byte element per lane. Same values, wider
+/// cells — the segment sums are identical integers either way.
+fn expand_strip32(table: &[u8; 256], xrow: &[u8], strip: &mut Vec<i32>) {
+    strip.clear();
+    strip.reserve(16 * xrow.len());
+    for w in 0..16usize {
+        let base = w << 4;
+        let trow = &table[base..base + 16];
+        strip.extend(xrow.iter().map(|&x| trow[(x & 0xf) as usize] as i32));
+    }
+}
+
+/// Reusable LUT-strip buffers for one GEMM thread. The `i16` strip
+/// feeds the scalar/SWAR/NEON kernels; the `i32` strip is expanded only
+/// when the AVX2 kernel runs (its gather wants 4-byte elements). Grows
+/// once, then reused for every input row.
+#[derive(Debug, Default)]
+pub struct StripScratch {
+    strip: Vec<i16>,
+    strip32: Vec<i32>,
+}
+
+impl StripScratch {
+    /// Expand the strip the given kernel reads for one input row.
+    fn expand(&mut self, table: &[u8; 256], xrow: &[u8], kernel: StripKernel) {
+        match kernel {
+            StripKernel::Avx2 => expand_strip32(table, xrow, &mut self.strip32),
+            _ => expand_strip(table, xrow, &mut self.strip),
+        }
+    }
+}
+
 /// Per-chunk scratch: quantized codes, ping-pong activation buffers and
-/// the LUT strip. One per GEMM thread, reused across batches.
+/// the LUT strips. Owned by exactly one thread at a time — the pool
+/// handoff moves it into a job and back — and reused across batches.
 #[derive(Debug, Default)]
 struct ChunkScratch {
     xq: Vec<u8>,
     cur: Vec<f32>,
     next: Vec<f32>,
-    strip: Vec<i16>,
+    strips: StripScratch,
 }
 
-/// Reusable scratch for [`MlpPlan::forward_batch_with`] — grows one
-/// [`ChunkScratch`] slot per GEMM thread on first use, so steady-state
-/// planned inference allocates nothing but the returned logits.
+/// What the main thread hands a pool worker: the shared layer stack, the
+/// resolved kernel, the multiplier table (Copy), and the chunk's own
+/// scratch with the input pre-staged. Everything is owned or
+/// refcounted, so the handoff needs no lifetimes and no `unsafe`.
+#[derive(Debug)]
+struct ChunkJob {
+    layers: std::sync::Arc<Vec<LayerPlan>>,
+    kernel: StripKernel,
+    model: MultiplierModel,
+    rows: usize,
+    task: JobTask,
+    scratch: ChunkScratch,
+}
+
+/// The two tiling shapes a job can carry (see [`GemmPartition`]).
+#[derive(Debug)]
+enum JobTask {
+    /// Run the whole layer stack over this chunk's batch rows: input in
+    /// `scratch.cur`, logits left in `scratch.cur`.
+    Stack,
+    /// Run one layer's output span `r0..r1`: quantized input in
+    /// `scratch.xq`, the dense `rows × (r1-r0)` block left in
+    /// `scratch.next`.
+    Span { layer: usize, r0: usize, r1: usize },
+}
+
+/// The handoff state machine between the main thread and one parked
+/// pool worker. A cell is always in exactly one state, and scratch
+/// ownership follows the state: `Ready`/`Done` hold it, `Idle`/
+/// `Running` mean the other side does. Protocol (loom-modeled in
+/// `loom_models`):
+///
+/// ```text
+/// main: submit(job)  Idle -> Ready      worker: next_job()  Ready -> Running
+/// worker: complete() Running -> Done    main: await_done()  Done -> Idle
+/// drop: stop()       * -> Stopped       worker: next_job() -> None, exits
+/// ```
+///
+/// A worker that panics never reaches `complete`, so `await_done` would
+/// block; jobs contain no user input and every kernel is panic-free on
+/// plan-validated shapes (the same contract `std::thread::scope`
+/// relied on).
+struct ChunkCell {
+    state: Mutex<CellState>,
+    cv: Condvar,
+}
+
+enum CellState {
+    Idle,
+    Ready(ChunkJob),
+    Running,
+    Done(ChunkScratch),
+    Stopped,
+}
+
+impl ChunkCell {
+    fn new() -> Self {
+        ChunkCell { state: Mutex::new(CellState::Idle), cv: Condvar::new() }
+    }
+
+    /// Main side: hand a job to the worker. The cell must be idle — the
+    /// plan always reclaims a worker's previous job before resubmitting.
+    fn submit(&self, job: ChunkJob) {
+        let mut st = self.state.lock().unwrap();
+        debug_assert!(matches!(*st, CellState::Idle), "submit to a non-idle pool worker");
+        *st = CellState::Ready(job);
+        self.cv.notify_all();
+    }
+
+    /// Worker side: park until a job arrives; `None` means stop.
+    fn next_job(&self) -> Option<ChunkJob> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            match std::mem::replace(&mut *st, CellState::Running) {
+                CellState::Ready(job) => return Some(job),
+                CellState::Stopped => {
+                    *st = CellState::Stopped;
+                    return None;
+                }
+                other => {
+                    *st = other;
+                    st = self.cv.wait(st).unwrap();
+                }
+            }
+        }
+    }
+
+    /// Worker side: publish the finished job's scratch back to the main
+    /// thread.
+    fn complete(&self, scratch: ChunkScratch) {
+        let mut st = self.state.lock().unwrap();
+        *st = CellState::Done(scratch);
+        self.cv.notify_all();
+    }
+
+    /// Main side: block until the worker publishes, reclaim the scratch.
+    fn await_done(&self) -> ChunkScratch {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            match std::mem::replace(&mut *st, CellState::Idle) {
+                CellState::Done(scratch) => return scratch,
+                other => {
+                    *st = other;
+                    st = self.cv.wait(st).unwrap();
+                }
+            }
+        }
+    }
+
+    /// Ask the worker to exit (wakes it if parked).
+    fn stop(&self) {
+        let mut st = self.state.lock().unwrap();
+        *st = CellState::Stopped;
+        self.cv.notify_all();
+    }
+}
+
+/// A pool worker's park-run loop: take a job, run it, hand the scratch
+/// back, park again. Shared between the spawned threads and the loom
+/// model.
+fn worker_loop(cell: &ChunkCell) {
+    while let Some(mut job) = cell.next_job() {
+        run_job(&mut job);
+        cell.complete(job.scratch);
+    }
+}
+
+/// Execute one pool job in its own scratch.
+fn run_job(job: &mut ChunkJob) {
+    match job.task {
+        JobTask::Stack => {
+            run_chunk_in_place(&job.layers, job.kernel, job.rows, &job.model, &mut job.scratch);
+        }
+        JobTask::Span { layer, r0, r1 } => {
+            let ChunkScratch { xq, next, strips, .. } = &mut job.scratch;
+            let (kernel, rows) = (job.kernel, job.rows);
+            job.layers[layer].gemm_rows_span(xq, rows, &job.model, strips, next, kernel, r0..r1);
+        }
+    }
+}
+
+/// Run `rows` batch rows (staged in `slot.cur`) through every layer,
+/// leaving the logits in `slot.cur`.
+fn run_chunk_in_place(
+    layers: &[LayerPlan],
+    kernel: StripKernel,
+    rows: usize,
+    model: &MultiplierModel,
+    slot: &mut ChunkScratch,
+) {
+    let ChunkScratch { xq, cur, next, strips } = slot;
+    for layer in layers {
+        xq.clear();
+        xq.extend(cur.iter().map(|&x| layer.x_quant.quantize(x)));
+        layer.gemm_rows_span(xq, rows, model, strips, next, kernel, 0..layer.out_dim);
+        std::mem::swap(cur, next);
+    }
+}
+
+/// One parked pool thread and the scratch the main thread stages its
+/// jobs in (`None` while a job is in flight).
+struct PoolWorker {
+    cell: Arc<ChunkCell>,
+    scratch: Option<ChunkScratch>,
+    #[cfg(not(loom))]
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+/// The lazily-grown persistent worker pool. Threads spawn on the first
+/// batch that fans out (warmup) and then park on their cells between
+/// batches — the steady-state handoff is two mutex/condvar exchanges
+/// per worker and zero allocations. Dropping the pool stops and joins
+/// every worker.
+#[derive(Default)]
+struct WorkerPool {
+    workers: Vec<PoolWorker>,
+}
+
+impl std::fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WorkerPool").field("workers", &self.workers.len()).finish()
+    }
+}
+
+impl WorkerPool {
+    /// Grow the pool to at least `n` parked workers (no-op once warm).
+    #[cfg(not(loom))]
+    fn ensure(&mut self, n: usize) {
+        while self.workers.len() < n {
+            let cell = Arc::new(ChunkCell::new());
+            let worker_cell = Arc::clone(&cell);
+            let handle = std::thread::Builder::new()
+                .name(format!("luna-gemm-{}", self.workers.len()))
+                .spawn(move || worker_loop(&worker_cell))
+                .expect("spawn GEMM pool worker");
+            self.workers.push(PoolWorker {
+                cell,
+                scratch: Some(ChunkScratch::default()),
+                handle: Some(handle),
+            });
+        }
+    }
+
+    /// Under loom, plan execution is forced single-threaded (the
+    /// handoff protocol is modeled directly in `loom_models`), so the
+    /// pool never grows.
+    #[cfg(loom)]
+    fn ensure(&mut self, _n: usize) {
+        unreachable!("the GEMM pool never grows under loom");
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        for w in &self.workers {
+            w.cell.stop();
+        }
+        #[cfg(not(loom))]
+        for w in &mut self.workers {
+            if let Some(handle) = w.handle.take() {
+                let _ = handle.join();
+            }
+        }
+    }
+}
+
+/// Reusable execution state for [`MlpPlan::forward_batch_with`]: the
+/// main thread's chunk scratch, a dense span staging buffer (output
+/// tiling), and the persistent worker pool. Everything grows during
+/// warmup and is reused — steady-state planned inference allocates
+/// nothing but the returned logits.
 #[derive(Debug, Default)]
 pub struct PlanScratch {
-    slots: Vec<ChunkScratch>,
+    main: ChunkScratch,
+    span_out: Vec<f32>,
+    pool: WorkerPool,
 }
 
 /// A [`QuantMlp`] compiled for planned execution: one [`LayerPlan`] per
-/// layer plus the resolved GEMM thread count.
+/// layer (refcounted so pool jobs can share it without lifetimes), the
+/// resolved GEMM thread cap, the resolved strip kernel and the tiling
+/// mode.
 #[derive(Debug, Clone)]
 pub struct MlpPlan {
-    layers: Vec<LayerPlan>,
+    layers: std::sync::Arc<Vec<LayerPlan>>,
     threads: usize,
+    kernel: StripKernel,
+    partition: GemmPartition,
 }
 
 impl MlpPlan {
-    /// Compile every layer. `threads` follows the `gemm.threads`
-    /// convention (`0` = one per available core); the resolved count is
-    /// an upper bound — a batch never fans out wider than its row count.
+    /// Compile every layer with the default kernel/tiling knobs
+    /// (`auto`). `threads` follows the `gemm.threads` convention (`0` =
+    /// one per available core); the resolved count is an upper bound —
+    /// a batch never fans out wider than its work supports.
     pub fn compile(mlp: &QuantMlp, threads: usize) -> Self {
+        Self::compile_with(mlp, GemmOptions::with_threads(threads))
+    }
+
+    /// Compile every layer, resolving the full `gemm.*` knob set: the
+    /// thread cap, the strip kernel (runtime dispatch happens **here**,
+    /// once) and the tiling mode.
+    pub fn compile_with(mlp: &QuantMlp, opts: GemmOptions) -> Self {
         MlpPlan {
-            layers: mlp.layers.iter().map(QuantLinear::plan).collect(),
-            threads: resolve_threads(threads),
+            layers: std::sync::Arc::new(mlp.layers.iter().map(QuantLinear::plan).collect()),
+            threads: resolve_threads(opts.threads),
+            kernel: opts.simd.resolve(),
+            partition: opts.partition,
         }
     }
 
     /// Resolved GEMM thread cap (≥ 1).
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// The strip kernel this plan dispatched to at compile time.
+    pub fn kernel(&self) -> StripKernel {
+        self.kernel
+    }
+
+    /// The tiling mode this plan was compiled with (`Auto` resolves per
+    /// batch: rows when `batch ≥ threads`, output spans otherwise).
+    pub fn partition(&self) -> GemmPartition {
+        self.partition
     }
 
     /// Approximate heap footprint of the compiled plan (all layers) —
@@ -403,16 +1102,17 @@ impl MlpPlan {
 
     /// Planned batched forward pass: `xs` is row-major
     /// `batch × input_dim`, returns row-major `batch × output_dim`
-    /// logits. Batch rows are tiled into contiguous chunks across up to
-    /// [`MlpPlan::threads`] scoped threads; each chunk runs the whole
-    /// layer stack on its own scratch and writes a disjoint slice of the
-    /// output, so results are bit-exact with [`QuantMlp::forward`] per
-    /// row regardless of the thread count.
+    /// logits. Work fans out across up to [`MlpPlan::threads`] threads
+    /// under the compiled [`GemmPartition`]; every output element is
+    /// accumulated by exactly one thread in the same order, so results
+    /// are bit-exact with [`QuantMlp::forward`] per row regardless of
+    /// thread count, kernel or tiling mode.
     ///
-    /// Threads are spawned per call (`std::thread::scope`), which costs
-    /// tens of µs — that only amortizes when a batch carries real work
-    /// (big batches / wide layers). The serving default (`gemm.threads
-    /// 1`, see [`crate::config::GemmConfig`]) never spawns.
+    /// Worker threads come from the persistent pool inside `scratch`:
+    /// they spawn once, on the first batch that fans out, and park
+    /// between batches — the per-batch cost is a condvar wake per
+    /// worker, not a thread spawn. The serving default (`gemm.threads
+    /// 1`, see [`crate::config::GemmConfig`]) never wakes the pool.
     pub fn forward_batch_with(
         &self,
         xs: &[f32],
@@ -445,51 +1145,178 @@ impl MlpPlan {
         if batch == 0 {
             return;
         }
-        let threads = self.threads.min(batch);
-        if scratch.slots.len() < threads {
-            scratch.slots.resize_with(threads, ChunkScratch::default);
-        }
+        // Loom builds never fan out: the pool handoff protocol is
+        // modeled directly (see `loom_models`), and loom threads cannot
+        // outlive a model iteration the way pool workers outlive a call.
+        let threads = if cfg!(loom) { 1 } else { self.threads };
         if threads == 1 {
-            self.run_chunk(xs, batch, model, &mut scratch.slots[0], out);
-        } else {
-            let chunk = batch.div_ceil(threads);
-            std::thread::scope(|s| {
-                let mut out_rest = &mut out[..];
-                let mut row0 = 0usize;
-                for slot in scratch.slots[..threads].iter_mut() {
-                    let rows = chunk.min(batch - row0);
-                    if rows == 0 {
-                        break;
-                    }
-                    let xa = &xs[row0 * in_dim..(row0 + rows) * in_dim];
-                    let (oa, rest) = out_rest.split_at_mut(rows * out_dim);
-                    out_rest = rest;
-                    row0 += rows;
-                    s.spawn(move || self.run_chunk(xa, rows, model, slot, oa));
-                }
-            });
+            let main = &mut scratch.main;
+            main.cur.clear();
+            main.cur.extend_from_slice(xs);
+            run_chunk_in_place(&self.layers, self.kernel, batch, model, main);
+            out.copy_from_slice(&main.cur);
+            return;
+        }
+        let partition = match self.partition {
+            GemmPartition::Auto if batch >= threads => GemmPartition::Rows,
+            GemmPartition::Auto => GemmPartition::Outputs,
+            forced => forced,
+        };
+        match partition {
+            GemmPartition::Rows => self.forward_rows(xs, batch, model, scratch, out, threads),
+            _ => self.forward_outputs(xs, batch, model, scratch, out, threads),
         }
     }
 
-    /// Run `rows` batch rows through every layer on one thread's scratch.
-    fn run_chunk(
+    /// Row tiling: contiguous batch-row chunks, one per thread; each
+    /// chunk runs the whole layer stack independently (exactly the old
+    /// `std::thread::scope` shape, minus the spawns). The main thread
+    /// takes chunk 0 and overlaps with the pool.
+    fn forward_rows(
         &self,
         xs: &[f32],
-        rows: usize,
+        batch: usize,
         model: &MultiplierModel,
-        slot: &mut ChunkScratch,
+        scratch: &mut PlanScratch,
         out: &mut [f32],
+        threads: usize,
     ) {
-        let ChunkScratch { xq, cur, next, strip } = slot;
-        cur.clear();
-        cur.extend_from_slice(xs);
-        for layer in &self.layers {
-            xq.clear();
-            xq.extend(cur.iter().map(|&x| layer.x_quant.quantize(x)));
-            layer.gemm_rows_into(xq, rows, model, strip, next);
-            std::mem::swap(cur, next);
+        let in_dim = self.input_dim();
+        let out_dim = self.output_dim();
+        let t = threads.min(batch);
+        let chunk = batch.div_ceil(t);
+        let PlanScratch { main, pool, .. } = scratch;
+        pool.ensure(t - 1);
+        // submit the workers' chunks first so they run while the main
+        // thread computes its own
+        let mut row0 = chunk;
+        let mut used = 0usize;
+        for worker in pool.workers[..t - 1].iter_mut() {
+            let rows = chunk.min(batch - row0);
+            if rows == 0 {
+                break;
+            }
+            let mut cs = worker.scratch.take().expect("pool worker scratch in flight");
+            cs.cur.clear();
+            cs.cur.extend_from_slice(&xs[row0 * in_dim..(row0 + rows) * in_dim]);
+            worker.cell.submit(ChunkJob {
+                layers: std::sync::Arc::clone(&self.layers),
+                kernel: self.kernel,
+                model: *model,
+                rows,
+                task: JobTask::Stack,
+                scratch: cs,
+            });
+            row0 += rows;
+            used += 1;
         }
-        out.copy_from_slice(cur);
+        let rows0 = chunk.min(batch);
+        main.cur.clear();
+        main.cur.extend_from_slice(&xs[..rows0 * in_dim]);
+        run_chunk_in_place(&self.layers, self.kernel, rows0, model, main);
+        out[..rows0 * out_dim].copy_from_slice(&main.cur);
+        // reclaim in submission order (chunk boundaries recompute
+        // deterministically)
+        let mut row0 = rows0;
+        for worker in pool.workers[..used].iter_mut() {
+            let rows = chunk.min(batch - row0);
+            let cs = worker.cell.await_done();
+            out[row0 * out_dim..(row0 + rows) * out_dim].copy_from_slice(&cs.cur);
+            worker.scratch = Some(cs);
+            row0 += rows;
+        }
+    }
+
+    /// Output-span tiling: per layer, the main thread quantizes the full
+    /// activation once, every thread computes a disjoint span of output
+    /// rows over the whole batch, and the dense span blocks are stitched
+    /// into the layer output. Batch-1 latency scales with cores; each
+    /// output element is still produced by exactly one thread.
+    fn forward_outputs(
+        &self,
+        xs: &[f32],
+        batch: usize,
+        model: &MultiplierModel,
+        scratch: &mut PlanScratch,
+        out: &mut [f32],
+        threads: usize,
+    ) {
+        let PlanScratch { main, span_out, pool } = scratch;
+        main.cur.clear();
+        main.cur.extend_from_slice(xs);
+        for (li, layer) in self.layers.iter().enumerate() {
+            let od = layer.out_dim;
+            let t = threads.min(od);
+            main.xq.clear();
+            main.xq.extend(main.cur.iter().map(|&x| layer.x_quant.quantize(x)));
+            if t == 1 {
+                let span = 0..od;
+                layer.gemm_rows_span(
+                    &main.xq,
+                    batch,
+                    model,
+                    &mut main.strips,
+                    &mut main.next,
+                    self.kernel,
+                    span,
+                );
+                std::mem::swap(&mut main.cur, &mut main.next);
+                continue;
+            }
+            pool.ensure(t - 1);
+            let span = od.div_ceil(t);
+            let mut r0 = span;
+            let mut used = 0usize;
+            for worker in pool.workers[..t - 1].iter_mut() {
+                let len = span.min(od - r0);
+                if len == 0 {
+                    break;
+                }
+                let mut cs = worker.scratch.take().expect("pool worker scratch in flight");
+                cs.xq.clear();
+                cs.xq.extend_from_slice(&main.xq);
+                worker.cell.submit(ChunkJob {
+                    layers: std::sync::Arc::clone(&self.layers),
+                    kernel: self.kernel,
+                    model: *model,
+                    rows: batch,
+                    task: JobTask::Span { layer: li, r0, r1: r0 + len },
+                    scratch: cs,
+                });
+                r0 += len;
+                used += 1;
+            }
+            // main thread computes span 0 while the workers run
+            let len0 = span.min(od);
+            layer.gemm_rows_span(
+                &main.xq,
+                batch,
+                model,
+                &mut main.strips,
+                span_out,
+                self.kernel,
+                0..len0,
+            );
+            main.next.clear();
+            main.next.resize(batch * od, 0.0);
+            for b in 0..batch {
+                main.next[b * od..b * od + len0]
+                    .copy_from_slice(&span_out[b * len0..(b + 1) * len0]);
+            }
+            let mut r0 = len0;
+            for worker in pool.workers[..used].iter_mut() {
+                let len = span.min(od - r0);
+                let cs = worker.cell.await_done();
+                for b in 0..batch {
+                    main.next[b * od + r0..b * od + r0 + len]
+                        .copy_from_slice(&cs.next[b * len..(b + 1) * len]);
+                }
+                worker.scratch = Some(cs);
+                r0 += len;
+            }
+            std::mem::swap(&mut main.cur, &mut main.next);
+        }
+        out.copy_from_slice(&main.cur);
     }
 }
 
@@ -542,6 +1369,10 @@ mod tests {
                 assert_eq!(strip[w as usize * xrow.len() + j], model.mul(w, x) as i16);
             }
         }
+        let mut strip32 = Vec::new();
+        expand_strip32(model.table(), &xrow, &mut strip32);
+        let widened: Vec<i32> = strip.iter().map(|&v| v as i32).collect();
+        assert_eq!(strip32, widened, "the i32 strip must mirror the i16 strip");
     }
 
     #[test]
@@ -557,9 +1388,10 @@ mod tests {
             let xq: Vec<u8> = (0..rows * in_dim).map(|_| rng.gen_range_u64(0, 16) as u8).collect();
             for kind in MultiplierKind::ALL {
                 let model = MultiplierModel::new(kind);
-                let (mut flat, mut planned, mut strip) = (Vec::new(), Vec::new(), Vec::new());
+                let (mut flat, mut planned) = (Vec::new(), Vec::new());
+                let mut scratch = StripScratch::default();
                 layer.gemm_batch_into(&xq, rows, &model, &mut flat);
-                plan.gemm_rows_into(&xq, rows, &model, &mut strip, &mut planned);
+                plan.gemm_rows_into(&xq, rows, &model, &mut scratch, &mut planned);
                 assert_eq!(planned, flat, "{kind} {in_dim}x{out_dim}");
             }
         }
@@ -597,6 +1429,58 @@ mod tests {
     }
 
     #[test]
+    fn dispatched_simd_segment_sum_matches_scalar_on_random_segments() {
+        // On an AVX2 x86_64 host this pins the AVX2 gather kernel; on
+        // aarch64 the NEON kernel; elsewhere it degenerates to SWAR
+        // (already pinned above) — the property holds everywhere.
+        let kernel = GemmSimd::Auto.resolve();
+        let mut rng = Rng::seed_from_u64(37);
+        for len in [0usize, 1, 5, 7, 8, 9, 15, 16, 17, 63, 64, 255, 256, 1000] {
+            let srow16: Vec<i16> = (0..1024).map(|_| rng.gen_range_u64(0, 256) as i16).collect();
+            let seg: Vec<u16> = (0..len).map(|_| rng.gen_range_u64(0, 1024) as u16).collect();
+            let want = scalar_segment_sum(&seg, &srow16);
+            let got = match kernel {
+                StripKernel::Scalar => scalar_segment_sum(&seg, &srow16),
+                StripKernel::Swar => swar_segment_sum(&seg, &srow16),
+                #[cfg(target_arch = "x86_64")]
+                StripKernel::Avx2 => {
+                    let srow32: Vec<i32> = srow16.iter().map(|&v| v as i32).collect();
+                    simd::avx2_segment_sum(&seg, &srow32)
+                }
+                #[cfg(target_arch = "aarch64")]
+                StripKernel::Neon => simd::neon_segment_sum(&seg, &srow16),
+                #[allow(unreachable_patterns)]
+                other => unreachable!("{other:?} cannot resolve on this host"),
+            };
+            assert_eq!(got, want, "{} len {len}", kernel.slug());
+        }
+    }
+
+    #[test]
+    fn forced_kernels_are_bit_identical_through_a_layer_plan() {
+        let mut rng = Rng::seed_from_u64(59);
+        for (in_dim, out_dim) in [(17usize, 19usize), (64, 32), (130, 16)] {
+            let layer = random_layer(&mut rng, in_dim, out_dim, true);
+            let plan = LayerPlan::compile(&layer);
+            assert!(plan.uses_strip());
+            let rows = 3;
+            let xq: Vec<u8> = (0..rows * in_dim).map(|_| rng.gen_range_u64(0, 16) as u8).collect();
+            for kind in MultiplierKind::ALL {
+                let model = MultiplierModel::new(kind);
+                let mut scratch = StripScratch::default();
+                let mut reference = Vec::new();
+                plan.gemm_rows_into_scalar(&xq, rows, &model, &mut scratch, &mut reference);
+                for simd in GemmSimd::ALL {
+                    let kernel = simd.resolve();
+                    let mut got = Vec::new();
+                    plan.gemm_rows_into_kernel(&xq, rows, &model, &mut scratch, &mut got, kernel);
+                    assert_eq!(got, reference, "{kind} {in_dim}x{out_dim} {}", kernel.slug());
+                }
+            }
+        }
+    }
+
+    #[test]
     fn swar_lanes_never_overflow_at_worst_case_products() {
         // 4096 columns of the worst legal table value 255 (approximate
         // multiplier tables are arbitrary u8s — exact ones cap at 225)
@@ -611,20 +1495,65 @@ mod tests {
     }
 
     #[test]
-    fn swar_plan_is_bit_identical_with_scalar_plan() {
-        let mut rng = Rng::seed_from_u64(59);
-        for (in_dim, out_dim) in [(17usize, 19usize), (64, 32), (130, 16)] {
-            let layer = random_layer(&mut rng, in_dim, out_dim, true);
-            let plan = LayerPlan::compile(&layer);
-            assert!(plan.uses_strip());
-            let rows = 3;
-            let xq: Vec<u8> = (0..rows * in_dim).map(|_| rng.gen_range_u64(0, 16) as u8).collect();
-            for kind in MultiplierKind::ALL {
-                let model = MultiplierModel::new(kind);
-                let (mut strip, mut swar, mut scalar) = (Vec::new(), Vec::new(), Vec::new());
-                plan.gemm_rows_into(&xq, rows, &model, &mut strip, &mut swar);
-                plan.gemm_rows_into_scalar(&xq, rows, &model, &mut strip, &mut scalar);
-                assert_eq!(swar, scalar, "{kind} {in_dim}x{out_dim}");
+    fn simd_resolve_honors_forcing_and_falls_back() {
+        assert_eq!(GemmSimd::Scalar.resolve(), StripKernel::Scalar);
+        assert_eq!(GemmSimd::Swar.resolve(), StripKernel::Swar);
+        // forcing an unavailable SIMD kernel falls back to SWAR rather
+        // than dispatching an illegal instruction
+        if !cfg!(target_arch = "x86_64") {
+            assert_eq!(GemmSimd::Avx2.resolve(), StripKernel::Swar);
+        }
+        if !cfg!(target_arch = "aarch64") {
+            assert_eq!(GemmSimd::Neon.resolve(), StripKernel::Swar);
+        }
+        // auto never picks a kernel whose guard does not hold here
+        let auto = GemmSimd::Auto.resolve();
+        match auto {
+            StripKernel::Avx2 => assert!(cfg!(target_arch = "x86_64")),
+            StripKernel::Neon => assert!(cfg!(target_arch = "aarch64")),
+            StripKernel::Swar | StripKernel::Scalar => {}
+        }
+        assert!(!host_cpu_features().is_empty());
+    }
+
+    #[test]
+    fn simd_and_partition_slugs_roundtrip() {
+        for simd in GemmSimd::ALL {
+            assert_eq!(GemmSimd::parse_slug(simd.slug()), Some(simd));
+            assert_eq!(GemmSimd::from_arg(&simd.slug().to_uppercase()).unwrap(), simd);
+        }
+        assert!(GemmSimd::parse_slug("sse9").is_none());
+        assert!(GemmSimd::from_arg("sse9").is_err());
+        for part in GemmPartition::ALL {
+            assert_eq!(GemmPartition::parse_slug(part.slug()), Some(part));
+            assert_eq!(GemmPartition::from_arg(&part.slug().to_uppercase()).unwrap(), part);
+        }
+        assert!(GemmPartition::parse_slug("cols").is_none());
+        assert!(GemmPartition::from_arg("cols").is_err());
+    }
+
+    #[test]
+    fn output_span_tiling_is_bit_exact_with_per_sample_forward() {
+        let mlp = QuantMlp::random_for_study(9);
+        let model = MultiplierModel::new(MultiplierKind::Dnc);
+        let mut rng = Rng::seed_from_u64(77);
+        for threads in [2usize, 3, 5] {
+            let plan = MlpPlan::compile_with(
+                &mlp,
+                GemmOptions { threads, simd: GemmSimd::Auto, partition: GemmPartition::Outputs },
+            );
+            let mut scratch = PlanScratch::default();
+            for batch in [1usize, 2, 4] {
+                let xs: Vec<f32> = (0..batch * 16).map(|_| rng.gen_range_f32(0.0, 1.0)).collect();
+                let got = plan.forward_batch_with(&xs, batch, &model, &mut scratch);
+                for b in 0..batch {
+                    let want = mlp.forward(&xs[b * 16..(b + 1) * 16], &model);
+                    assert_eq!(
+                        &got[b * 8..(b + 1) * 8],
+                        &want[..],
+                        "threads {threads} batch {batch} row {b}"
+                    );
+                }
             }
         }
     }
@@ -666,17 +1595,97 @@ mod tests {
     #[test]
     fn scratch_reuse_across_batches_and_thread_counts_stays_exact() {
         let mlp = QuantMlp::random_for_study(13);
-        let plan = MlpPlan::compile(&mlp, 2);
         let model = MultiplierModel::new(MultiplierKind::Dnc);
-        let mut scratch = PlanScratch::default();
-        for round in 0..3 {
-            let batch = 1 + round * 2; // exercises chunking 1, 3, 5
-            let xs: Vec<f32> = (0..batch * 16).map(|i| (i % 10) as f32 / 10.0).collect();
-            let got = plan.forward_batch_with(&xs, batch, &model, &mut scratch);
-            for b in 0..batch {
-                let want = mlp.forward(&xs[b * 16..(b + 1) * 16], &model);
-                assert_eq!(&got[b * 8..(b + 1) * 8], &want[..], "round {round} row {b}");
+        for partition in GemmPartition::ALL {
+            let plan = MlpPlan::compile_with(
+                &mlp,
+                GemmOptions { threads: 2, simd: GemmSimd::Auto, partition },
+            );
+            let mut scratch = PlanScratch::default();
+            for round in 0..3 {
+                let batch = 1 + round * 2; // exercises fan-out 1, 3, 5
+                let xs: Vec<f32> = (0..batch * 16).map(|i| (i % 10) as f32 / 10.0).collect();
+                let got = plan.forward_batch_with(&xs, batch, &model, &mut scratch);
+                for b in 0..batch {
+                    let want = mlp.forward(&xs[b * 16..(b + 1) * 16], &model);
+                    assert_eq!(
+                        &got[b * 8..(b + 1) * 8],
+                        &want[..],
+                        "{} round {round} row {b}",
+                        partition.slug()
+                    );
+                }
             }
         }
+    }
+
+    #[test]
+    fn pool_workers_persist_across_batches() {
+        // the pool spawns on the first fan-out and is reused afterwards:
+        // worker count never exceeds threads-1 no matter how many
+        // batches run
+        let mlp = QuantMlp::random_for_study(4);
+        let model = MultiplierModel::new(MultiplierKind::Ideal);
+        let plan = MlpPlan::compile(&mlp, 3);
+        let mut scratch = PlanScratch::default();
+        for _ in 0..4 {
+            let xs: Vec<f32> = (0..6 * 16).map(|i| (i % 7) as f32 / 7.0).collect();
+            let _ = plan.forward_batch_with(&xs, 6, &model, &mut scratch);
+            assert!(scratch.pool.workers.len() <= 2, "pool must not grow past threads-1");
+            assert!(
+                scratch.pool.workers.iter().all(|w| w.scratch.is_some()),
+                "every job's scratch must be reclaimed after the batch"
+            );
+        }
+    }
+}
+
+/// Loom models of the pool handoff protocol (`ChunkCell`): the
+/// submit → run → reclaim cycle and the stop-while-parked race, explored
+/// over every interleaving. Run via the `loom` CI job
+/// (`RUSTFLAGS="--cfg loom" cargo test --release --lib loom_models`).
+#[cfg(all(test, loom))]
+mod loom_models {
+    use super::*;
+    use crate::multiplier::{MultiplierKind, MultiplierModel};
+    use crate::util::sync::Arc;
+
+    /// A full handoff: the job (an empty layer stack, so pure protocol)
+    /// must come back exactly once with its scratch intact, and stop
+    /// must terminate the worker.
+    #[test]
+    fn pool_handoff_delivers_job_and_reclaims_scratch() {
+        loom::model(|| {
+            let cell = Arc::new(ChunkCell::new());
+            let worker_cell = Arc::clone(&cell);
+            let t = loom::thread::spawn(move || worker_loop(&worker_cell));
+            let mut scratch = ChunkScratch::default();
+            scratch.cur.extend_from_slice(&[1.0, 2.0]);
+            cell.submit(ChunkJob {
+                layers: std::sync::Arc::new(Vec::new()),
+                kernel: StripKernel::Swar,
+                model: MultiplierModel::new(MultiplierKind::Ideal),
+                rows: 2,
+                task: JobTask::Stack,
+                scratch,
+            });
+            let back = cell.await_done();
+            assert_eq!(back.cur, vec![1.0, 2.0]);
+            cell.stop();
+            t.join().unwrap();
+        });
+    }
+
+    /// Stop racing a parked (or not-yet-parked) worker: the worker must
+    /// observe `Stopped` and exit, never hang.
+    #[test]
+    fn pool_stop_always_wakes_the_worker() {
+        loom::model(|| {
+            let cell = Arc::new(ChunkCell::new());
+            let worker_cell = Arc::clone(&cell);
+            let t = loom::thread::spawn(move || worker_loop(&worker_cell));
+            cell.stop();
+            t.join().unwrap();
+        });
     }
 }

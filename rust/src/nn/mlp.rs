@@ -66,6 +66,14 @@ impl QuantMlp {
         super::MlpPlan::compile(self, threads)
     }
 
+    /// [`QuantMlp::plan`] with the full `gemm.*` knob set: thread cap,
+    /// strip-kernel choice (`gemm.simd`, dispatched against this host at
+    /// compile time) and tiling mode (`gemm.partition`). Every
+    /// combination is bit-exact with [`QuantMlp::forward`].
+    pub fn plan_with(&self, opts: super::GemmOptions) -> super::MlpPlan {
+        super::MlpPlan::compile_with(self, opts)
+    }
+
     /// Forward pass under the given multiplier configuration.
     pub fn forward(&self, x: &[f32], model: &MultiplierModel) -> Vec<f32> {
         let mut h = x.to_vec();

@@ -14,8 +14,11 @@
 //! * [`LayerPlan`] / [`MlpPlan`] — the *planned* LUT-GEMM kernel the
 //!   execution backends run: weights compiled once into code-sorted
 //!   column buckets, the product table expanded into a per-input-row LUT
-//!   strip, and batch rows tiled across scoped threads — bit-exact with
-//!   the paths above for every thread count;
+//!   strip summed by a runtime-dispatched kernel ([`GemmSimd`]:
+//!   scalar/SWAR/AVX2/NEON), and batches tiled across a persistent
+//!   worker pool by rows or output spans ([`GemmPartition`]) — bit-exact
+//!   with the paths above for every kernel, tiling mode and thread
+//!   count;
 //! * [`DigitsDataset`] — the synthetic 8×8 digits workload used by the
 //!   examples and the end-to-end serving driver.
 //!
@@ -28,7 +31,10 @@ mod mlp;
 mod quant;
 
 pub use dataset::{DigitsDataset, Sample};
-pub use gemm::{resolve_threads, LayerPlan, MlpPlan, PlanScratch};
+pub use gemm::{
+    host_cpu_features, resolve_threads, GemmOptions, GemmPartition, GemmSimd, LayerPlan, MlpPlan,
+    PlanScratch, StripKernel, StripScratch,
+};
 pub use linear::QuantLinear;
 pub use mlp::{BatchScratch, QuantMlp};
 pub use quant::Quantizer;

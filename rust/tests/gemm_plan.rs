@@ -1,15 +1,18 @@
 //! Seeded property suite for the planned LUT-GEMM kernel.
 //!
 //! The planned kernel (code-sorted weight plans + per-row LUT-strip
-//! expansion + scoped-thread batch tiling, `src/nn/gemm.rs`) must be
-//! **bit-exact** with both the per-sample `QuantMlp::forward` and the
-//! old flat-gather batched path, for every `MultiplierKind`, every
-//! tested thread count, and arbitrary shapes — including degenerate
-//! `1×N` / `N×1` layers and empty/odd/large batches.
+//! expansion + a runtime-dispatched strip accumulator + persistent-pool
+//! batch tiling, `src/nn/gemm.rs`) must be **bit-exact** with both the
+//! per-sample `QuantMlp::forward` and the old flat-gather batched path,
+//! for every `MultiplierKind`, every strip kernel × tiling mode ×
+//! thread count combination, and arbitrary shapes — including
+//! degenerate `1×N` / `N×1` layers and empty/odd/large batches.
 
 use luna_cim::engine::{BackendSpec, ExecBackend};
 use luna_cim::multiplier::{MultiplierKind, MultiplierModel};
-use luna_cim::nn::{BatchScratch, PlanScratch, QuantLinear, QuantMlp};
+use luna_cim::nn::{
+    BatchScratch, GemmOptions, GemmPartition, GemmSimd, PlanScratch, QuantLinear, QuantMlp,
+};
 use luna_cim::util::Rng;
 
 /// Random MLP with the given layer dims; ReLU everywhere but the last.
@@ -107,7 +110,8 @@ fn native_backend_is_bit_exact_for_all_thread_counts() {
     for kind in [MultiplierKind::Ideal, MultiplierKind::Approx, MultiplierKind::DncOpt] {
         let model = MultiplierModel::new(kind);
         for threads in THREADS {
-            let spec = BackendSpec::Native { mlp: mlp.clone(), kind, threads };
+            let gemm = GemmOptions::with_threads(threads);
+            let spec = BackendSpec::Native { mlp: mlp.clone(), kind, gemm };
             let mut backend = spec.build().unwrap();
             let out = backend.run_batch(&xs, batch, 16).unwrap();
             for b in 0..batch {
@@ -117,6 +121,48 @@ fn native_backend_is_bit_exact_for_all_thread_counts() {
                     &want[..],
                     "{kind} threads {threads} row {b}"
                 );
+            }
+        }
+    }
+}
+
+/// The full execution matrix: every strip-kernel knob × tiling mode ×
+/// thread count must be bit-identical to the per-sample forward — and
+/// therefore to each other. `Auto` resolves to the host's dispatched
+/// SIMD kernel when one exists (AVX2 on x86_64, NEON on aarch64) and to
+/// SWAR elsewhere, so the sweep exercises the SIMD path wherever the
+/// hardware has one while staying portable.
+#[test]
+fn kernel_tiling_thread_matrix_is_bit_identical() {
+    let mut rng = Rng::seed_from_u64(0x51D);
+    for dims in [&[64usize, 32, 10][..], &[5, 4, 3], &[33, 17]] {
+        let mlp = random_mlp(&mut rng, dims);
+        let in_dim = mlp.input_dim();
+        for &batch in &[0usize, 1, 7] {
+            let xs: Vec<f32> =
+                (0..batch * in_dim).map(|_| rng.gen_range_f32(0.0, 1.0)).collect();
+            for kind in [MultiplierKind::Ideal, MultiplierKind::DncOpt, MultiplierKind::Approx] {
+                let model = MultiplierModel::new(kind);
+                let want: Vec<f32> = (0..batch)
+                    .flat_map(|b| mlp.forward(&xs[b * in_dim..(b + 1) * in_dim], &model))
+                    .collect();
+                for simd in [GemmSimd::Scalar, GemmSimd::Swar, GemmSimd::Auto] {
+                    for partition in GemmPartition::ALL {
+                        for threads in THREADS {
+                            let opts = GemmOptions { threads, simd, partition };
+                            let plan = mlp.plan_with(opts);
+                            let mut scratch = PlanScratch::default();
+                            let got = plan.forward_batch_with(&xs, batch, &model, &mut scratch);
+                            assert_eq!(
+                                got,
+                                want,
+                                "dims {dims:?} batch {batch} {kind} {}/{}/t{threads}",
+                                simd.slug(),
+                                partition.slug()
+                            );
+                        }
+                    }
+                }
             }
         }
     }

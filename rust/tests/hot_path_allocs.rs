@@ -18,6 +18,12 @@
 //! lock, one map lookup and an `Arc` clone, and the model-tagged frame
 //! encodes through the same reused scratch.
 //!
+//! The pin also covers the **persistent GEMM worker pool**
+//! (`gemm.threads 2`): pool workers are spawned once at plan compile
+//! and parked on condvars between batches, so closed-loop batch-1
+//! traffic — which the `auto` partition tiles across per-layer output
+//! spans — must wake, accumulate and park without a single allocation.
+//!
 //! The pin runs with **tracing on**: the default config keeps 1-in-8
 //! flight-recorder sampling live, so the zero-delta window proves the
 //! recorder's span path (ring cells + Relaxed atomics) and the
@@ -89,14 +95,16 @@ fn drive(client: &mut NetClient, pixels: &[f32], n: usize) {
 }
 
 /// Stand up one server configuration, warm it, and assert zero
-/// allocations across the measured window.
-fn pin_zero_allocs(backend: BackendKind, shards: usize, tag: &str) {
+/// allocations across the measured window. `gemm_threads > 1` routes
+/// every batch through the persistent worker pool.
+fn pin_zero_allocs(backend: BackendKind, shards: usize, gemm_threads: usize, tag: &str) {
     let mlp = QuantMlp::random_digits(97);
     let (store, testset) = synth_artifacts(tag, &mlp, 8);
     let mut cfg = Config::default();
     cfg.artifacts_dir = store.root().display().to_string();
     cfg.backend = backend;
     cfg.batcher.shards = shards;
+    cfg.gemm.threads = gemm_threads;
     // short deadline so the closed loop turns around quickly
     cfg.batcher.max_wait_us = 200;
     let (server, handle) = CoordinatorServer::start(cfg).unwrap();
@@ -204,11 +212,16 @@ fn pin_zero_allocs_two_models(tag: &str) {
 #[test]
 fn warm_wire_requests_allocate_nothing() {
     for shards in [1usize, 2] {
-        pin_zero_allocs(BackendKind::Native, shards, "hot-path-native");
+        pin_zero_allocs(BackendKind::Native, shards, 1, "hot-path-native");
     }
+    // the persistent GEMM pool: workers spawned once at plan compile,
+    // parked between batches — the closed loop's small batches land on
+    // the output-span tiling (`partition auto`), so the wake/accumulate/
+    // park cycle itself is inside the measured zero-alloc window
+    pin_zero_allocs(BackendKind::Native, 2, 2, "hot-path-native-pool");
     // calibrated adds the per-batch tiler replay; the schedule-buffer
     // arena (Tiler::schedule_cost) keeps it allocation-free too
-    pin_zero_allocs(BackendKind::Calibrated, 2, "hot-path-calibrated");
+    pin_zero_allocs(BackendKind::Calibrated, 2, 1, "hot-path-calibrated");
     // and the multi-tenant hit path adds nothing on top
     pin_zero_allocs_two_models("hot-path-two-models");
 }

@@ -14,7 +14,7 @@ use luna_cim::config::{BackendKind, Config};
 use luna_cim::coordinator::CoordinatorServer;
 use luna_cim::engine::{BackendSpec, ExecBackend};
 use luna_cim::multiplier::{MultiplierKind, MultiplierModel};
-use luna_cim::nn::QuantMlp;
+use luna_cim::nn::{GemmOptions, QuantMlp};
 use luna_cim::util::Rng;
 
 #[test]
@@ -43,7 +43,8 @@ fn batched_native_gemm_is_bit_exact_for_every_kind() {
 #[test]
 fn native_backend_through_spec_matches_forward_batch() {
     let mlp = QuantMlp::random_digits(31);
-    let spec = BackendSpec::Native { mlp: mlp.clone(), kind: MultiplierKind::Approx, threads: 2 };
+    let gemm = GemmOptions::with_threads(2);
+    let spec = BackendSpec::Native { mlp: mlp.clone(), kind: MultiplierKind::Approx, gemm };
     let mut backend = spec.build().unwrap();
     let model = MultiplierModel::new(MultiplierKind::Approx);
     let xs = vec![0.5f32; 3 * 64];

@@ -37,7 +37,7 @@ use luna_cim::engine::ModelEntry;
 use luna_cim::multiplier::{MultiplierKind, MultiplierModel};
 use luna_cim::net::protocol::{read_frame, write_frame, Frame, ModelId, MAGIC, VERSION};
 use luna_cim::net::{loadgen, NetClient, NetServer, RouterServer, Scenario};
-use luna_cim::nn::QuantMlp;
+use luna_cim::nn::{GemmOptions, QuantMlp};
 use luna_cim::util::trace::{merge_trace_dumps, parse_trace_json};
 use luna_cim::util::PoolStats;
 use std::io::Write as _;
@@ -673,9 +673,10 @@ fn plan_eviction_and_recompile_stay_bit_identical() {
     let m1 = ModelId::new("m1").unwrap();
     let (store_b, _testset) = synth_artifacts("net-evict-b", &mlp_b, 8);
     let dir_b = store_b.root().display().to_string();
-    let one = ModelEntry::compile(ModelId::DEFAULT, mlp_a.clone(), 1)
+    let gemm = GemmOptions::default();
+    let one = ModelEntry::compile(ModelId::DEFAULT, mlp_a.clone(), gemm)
         .bytes
-        .max(ModelEntry::compile(ModelId::DEFAULT, mlp_b.clone(), 1).bytes);
+        .max(ModelEntry::compile(ModelId::DEFAULT, mlp_b.clone(), gemm).bytes);
     let (server, handle, net, pixels) = start_stack("net-evict-a", &mlp_a, |cfg| {
         cfg.batcher.max_wait_us = 1_000;
         cfg.serving.models = vec![("m1".to_string(), dir_b.clone())];

@@ -17,7 +17,7 @@
 use luna_cim::engine::{ModelEntry, PlanCache};
 use luna_cim::multiplier::{MultiplierKind, MultiplierModel};
 use luna_cim::net::ModelId;
-use luna_cim::nn::QuantMlp;
+use luna_cim::nn::{GemmOptions, QuantMlp};
 use luna_cim::util::Rng;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -30,7 +30,8 @@ fn mid(s: &str) -> ModelId {
 /// so recompiles of the same tenant are bit-identical by construction.
 fn tenant_entry(k: usize) -> ModelEntry {
     let name = format!("m{k}");
-    ModelEntry::compile(mid(&name), QuantMlp::random_digits(1000 + k as u64), 1)
+    let gemm = GemmOptions::default();
+    ModelEntry::compile(mid(&name), QuantMlp::random_digits(1000 + k as u64), gemm)
 }
 
 #[test]
@@ -137,14 +138,16 @@ fn cached_and_recompiled_plans_are_bit_identical_for_every_multiplier() {
     let xs: Vec<f32> = (0..batch * in_dim).map(|_| rng.gen_range_f32(0.0, 1.0)).collect();
     let cache = PlanCache::standalone(64 << 20);
     let id = mid("study");
+    let one = GemmOptions::default();
+    let two = GemmOptions::with_threads(2);
     let cached = cache
-        .get_or_compile(id, || Ok(ModelEntry::compile(id, mlp.clone(), 1)))
+        .get_or_compile(id, || Ok(ModelEntry::compile(id, mlp.clone(), one)))
         .unwrap();
     // force the recompile path: retire, then miss again with a
     // different thread plan — results must not depend on either
     assert!(cache.retire(id));
     let recompiled = cache
-        .get_or_compile(id, || Ok(ModelEntry::compile(id, mlp.clone(), 2)))
+        .get_or_compile(id, || Ok(ModelEntry::compile(id, mlp.clone(), two)))
         .unwrap();
     assert!(!Arc::ptr_eq(&cached, &recompiled), "retire forces a genuine recompile");
     assert_eq!(cache.counters().compiles(), 2);
